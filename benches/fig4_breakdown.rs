@@ -1,0 +1,112 @@
+//! Fig. 4: per-component energy breakdown of uniformly quantized
+//! MobileNetV1 on Eyeriss, for x-bit settings x in {16, 8, 6, 5, 4, 3, 2}
+//! (qa = qw = qo = x, best mapping per layer from random search).
+//!
+//! Paper shape to reproduce:
+//!   * memory energy falls monotonically with x,
+//!   * MAC energy stays constant (only the memory path is quantized),
+//!   * 4-bit vs 8-bit: total energy down >~30%, memory energy down ~50%,
+//!   * for x >= 6, bit-packing gives no benefit at word size 16
+//!     (floor(16/x) stays 2), so 6b/8b memory energies coincide.
+//!
+//! Run: `cargo bench --bench fig4_breakdown`.
+
+use qmap::coordinator::experiments::fig4_breakdown;
+use qmap::coordinator::RunConfig;
+use qmap::report;
+use std::time::Instant;
+
+fn main() {
+    let rc = RunConfig::from_env();
+    println!("=== Fig. 4: energy breakdown, uniform x-bit MobileNetV1 on Eyeriss ===");
+    let t0 = Instant::now();
+    let rows = fig4_breakdown(&rc);
+    let dt = t0.elapsed();
+
+    let fmt: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mem = r.components_pj[0] + r.components_pj[1] + r.components_pj[2];
+            vec![
+                format!("{}b", r.bits),
+                format!("{:.3e}", r.components_pj[0]),
+                format!("{:.3e}", r.components_pj[1]),
+                format!("{:.3e}", r.components_pj[2]),
+                format!("{:.3e}", r.components_pj[3]),
+                format!("{:.3e}", mem),
+                format!("{:.3e}", r.total_pj),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(
+            &["setting", "spads [pJ]", "buffers [pJ]", "DRAM [pJ]", "MAC [pJ]", "memory [pJ]", "total [pJ]"],
+            &fmt
+        )
+    );
+
+    // stacked ASCII bars (normalized to the 16-bit total)
+    let max_total = rows.iter().map(|r| r.total_pj).fold(0.0, f64::max);
+    println!("\nnormalized stacked bars (s=spads, b=buffers, D=DRAM, M=MAC):");
+    for r in &rows {
+        let bar_len = 64.0;
+        let seg = |e: f64| ((e / max_total) * bar_len).round() as usize;
+        let bar = format!(
+            "{}{}{}{}",
+            "s".repeat(seg(r.components_pj[0])),
+            "b".repeat(seg(r.components_pj[1])),
+            "D".repeat(seg(r.components_pj[2])),
+            "M".repeat(seg(r.components_pj[3])),
+        );
+        println!("{:>3}b |{}", r.bits, bar);
+    }
+
+    // paper-shape checks
+    let mem = |r: &qmap::coordinator::experiments::Fig4Row| {
+        r.components_pj[0] + r.components_pj[1] + r.components_pj[2]
+    };
+    let get = |bits: u8| rows.iter().find(|r| r.bits == bits).unwrap();
+    let (e8, e6, e4) = (get(8), get(6), get(4));
+    let total_drop_4v8 = 1.0 - e4.total_pj / e8.total_pj;
+    let mem_drop_4v8 = 1.0 - mem(e4) / mem(e8);
+    let plateau = (mem(e8) - mem(e6)).abs() / mem(e8) < 1e-9;
+    let monotone = rows.windows(2).all(|w| mem(&w[1]) <= mem(&w[0]) + 1e-9);
+    println!("\n4b vs 8b: total energy -{:.1}% (paper: >32.5%)", total_drop_4v8 * 100.0);
+    println!("4b vs 8b: memory energy -{:.1}% (paper: ~54.5%)", mem_drop_4v8 * 100.0);
+    println!("6b == 8b memory energy (packing plateau at word 16): {plateau}");
+    println!(
+        "paper shape: {}",
+        if monotone && plateau && total_drop_4v8 > 0.15 && mem_drop_4v8 > 0.3 {
+            "REPRODUCED"
+        } else {
+            "MISMATCH"
+        }
+    );
+
+    let csv_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.bits.to_string(),
+                format!("{:.6e}", r.components_pj[0]),
+                format!("{:.6e}", r.components_pj[1]),
+                format!("{:.6e}", r.components_pj[2]),
+                format!("{:.6e}", r.components_pj[3]),
+                format!("{:.6e}", r.total_pj),
+            ]
+        })
+        .collect();
+    let path = report::write_results(
+        "fig4_breakdown.csv",
+        &report::csv(&["bits", "spads_pj", "buffers_pj", "dram_pj", "mac_pj", "total_pj"], &csv_rows),
+    );
+    let svg = report::svg::stacked_bars(
+        "Fig 4: energy breakdown, uniform x-bit MobileNetV1 on Eyeriss",
+        &rows.iter().map(|r| format!("{}b", r.bits)).collect::<Vec<_>>(),
+        &["spads", "buffers", "DRAM", "MAC"],
+        &rows.iter().map(|r| r.components_pj.to_vec()).collect::<Vec<_>>(),
+    );
+    report::write_results("fig4.svg", &svg);
+    println!("[{dt:.2?}] wrote {} (+ fig4.svg)", path.display());
+}

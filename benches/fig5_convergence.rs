@@ -1,0 +1,145 @@
+//! Fig. 5: Pareto fronts of the proposed NSGA-II search across
+//! generations, MobileNetV1 on Eyeriss (paper: e=10, |Q|=16; most of the
+//! improvement lands before generation ~11).
+//!
+//! Run: `cargo bench --bench fig5_convergence`.
+
+use qmap::coordinator::experiments::fig5_convergence;
+use qmap::coordinator::RunConfig;
+use qmap::report;
+use qmap::util::stats;
+use std::time::Instant;
+
+/// 2-D hypervolume (to a reference point) of a front of (edp, error)
+/// minimization points — a scalar measure of front quality.
+fn hypervolume(front: &[Vec<f64>], ref_pt: (f64, f64)) -> f64 {
+    let mut pts: Vec<(f64, f64)> = front
+        .iter()
+        .filter(|p| p[0] <= ref_pt.0 && p[1] <= ref_pt.1)
+        .map(|p| (p[0], p[1]))
+        .collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut hv = 0.0;
+    let mut prev_y = ref_pt.1;
+    for (x, y) in pts {
+        if y < prev_y {
+            hv += (ref_pt.0 - x) * (prev_y - y);
+            prev_y = y;
+        }
+    }
+    hv
+}
+
+fn main() {
+    let mut rc = RunConfig::from_env();
+    if std::env::var("QMAP_PROFILE").is_err() {
+        rc.nsga.offspring = 16; // the paper's |Q|=16 run
+        rc.nsga.generations = 20;
+    }
+    let snaps: Vec<usize> = (0..=rc.nsga.generations).collect();
+
+    println!(
+        "=== Fig. 5: NSGA-II convergence (|P|={}, |Q|={}, {} gens) ===",
+        rc.nsga.population, rc.nsga.offspring, rc.nsga.generations
+    );
+    let t0 = Instant::now();
+    let r = fig5_convergence(&rc, &snaps);
+    let dt = t0.elapsed();
+
+    // reference point for hypervolume: worst corner over all snapshots
+    let (mut rx, mut ry) = (0.0f64, 0.0f64);
+    for (_, front) in &r.fronts {
+        for p in front {
+            rx = rx.max(p[0] * 1.01);
+            ry = ry.max(p[1] * 1.01 + 1e-9);
+        }
+    }
+
+    let mut hv_series = Vec::new();
+    let mut rows = Vec::new();
+    for (gen, front) in &r.fronts {
+        let hv = hypervolume(front, (rx, ry));
+        hv_series.push(hv);
+        rows.push(vec![
+            gen.to_string(),
+            front.len().to_string(),
+            format!("{:.4e}", front.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min)),
+            format!("{:.4}", 1.0 - front.iter().map(|p| p[1]).fold(f64::INFINITY, f64::min)),
+            format!("{:.4e}", hv),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["gen", "front size", "best EDP", "best top-1", "hypervolume"],
+            &rows
+        )
+    );
+
+    // scatter of first/mid/last snapshot fronts
+    let mut pts = Vec::new();
+    if let Some((_, f0)) = r.fronts.first() {
+        pts.extend(f0.iter().map(|p| (p[0], 1.0 - p[1], '0')));
+    }
+    if r.fronts.len() > 2 {
+        let (_, fm) = &r.fronts[r.fronts.len() / 2];
+        pts.extend(fm.iter().map(|p| (p[0], 1.0 - p[1], 'm')));
+    }
+    if let Some((_, fl)) = r.fronts.last() {
+        pts.extend(fl.iter().map(|p| (p[0], 1.0 - p[1], 'F')));
+    }
+    println!("\nfronts: '0' = first gen, 'm' = midpoint, 'F' = final:");
+    print!("{}", report::ascii_scatter(&pts, 72, 20, "EDP", "top-1 accuracy"));
+
+    // paper shape: hypervolume grows, most progress in the first half
+    let n = hv_series.len();
+    let grew = n >= 2 && hv_series[n - 1] >= hv_series[0];
+    let first_half_gain = if n >= 3 {
+        let total = hv_series[n - 1] - hv_series[0];
+        let half = hv_series[n / 2] - hv_series[0];
+        if total > 0.0 { half / total } else { 1.0 }
+    } else {
+        1.0
+    };
+    println!(
+        "\nhypervolume grew: {grew}; share of gain in first half: {:.0}% (paper: most changes before gen 11/20)",
+        first_half_gain * 100.0
+    );
+    println!(
+        "paper shape: {}",
+        if grew && first_half_gain > 0.5 { "REPRODUCED" } else { "MISMATCH" }
+    );
+    println!("hv trend (Spearman vs gen): {:+.3}", {
+        let gens: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        stats::spearman(&gens, &hv_series)
+    });
+
+    let csv_rows: Vec<Vec<String>> = r
+        .fronts
+        .iter()
+        .flat_map(|(gen, front)| {
+            front
+                .iter()
+                .map(|p| vec![gen.to_string(), format!("{:.6e}", p[0]), format!("{:.6}", p[1])])
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let path = report::write_results(
+        "fig5_fronts.csv",
+        &report::csv(&["generation", "edp", "error"], &csv_rows),
+    );
+    let mut plot = report::svg::Plot::new(
+        "Fig 5: Pareto front per generation (MobileNetV1, Eyeriss)",
+        "EDP [J*cycles]",
+        "top-1 accuracy",
+    );
+    let picks = [0usize, r.fronts.len() / 4, r.fronts.len() / 2, r.fronts.len().saturating_sub(1)];
+    for &pi in &picks {
+        if let Some((gen, front)) = r.fronts.get(pi) {
+            let pts: Vec<(f64, f64)> = front.iter().map(|p| (p[0], 1.0 - p[1])).collect();
+            plot.line(&format!("gen {gen}"), &pts);
+        }
+    }
+    report::write_results("fig5.svg", &plot.render());
+    println!("[{dt:.2?}] wrote {} (+ fig5.svg)", path.display());
+}

@@ -1,0 +1,132 @@
+//! Fig. 6: accuracy vs EDP trade-off on Eyeriss running MobileNetV1,
+//! all axes relative to the uniform 8-bit implementation. Four arms:
+//!
+//!   * Proposed       — NSGA-II against Eyeriss (hardware-aware),
+//!   * Uniform        — uniform 2..8-bit sweep,
+//!   * Naïve          — NSGA-II against model size only (HW-unaware),
+//!   * Proposed-Simba — NSGA-II against Simba, re-priced on Eyeriss
+//!                      (the paper's "unseen accelerator" arm).
+//!
+//! Paper shape to reproduce: Proposed dominates Naïve and Uniform;
+//! optimizing for the wrong accelerator is measurably worse than native.
+//!
+//! Run: `cargo bench --bench fig6_tradeoff`.
+
+use qmap::coordinator::experiments::fig6_tradeoff;
+use qmap::coordinator::RunConfig;
+use qmap::report;
+use std::time::Instant;
+
+fn main() {
+    let rc = RunConfig::from_env();
+    println!("=== Fig. 6: strategy comparison (MobileNetV1, Eyeriss, rel. uniform-8) ===");
+    let t0 = Instant::now();
+    let r = fig6_tradeoff(&rc);
+    let dt = t0.elapsed();
+    let (ref_edp, _ref_mem, ref_acc) = r.reference;
+
+    let arms = [
+        ("Proposed", 'P', &r.proposed),
+        ("Uniform", 'u', &r.uniform),
+        ("Naive", 'n', &r.naive),
+        ("Proposed-for-Simba", 's', &r.cross),
+    ];
+    let mut pts = Vec::new();
+    for (label, m, cands) in &arms {
+        println!("{label}: {} candidates", cands.len());
+        pts.extend(
+            cands
+                .iter()
+                .map(|c| (c.hw.edp / ref_edp, c.accuracy - ref_acc, *m)),
+        );
+    }
+    println!("\nP=proposed u=uniform n=naive s=proposed-for-simba:");
+    print!(
+        "{}",
+        report::ascii_scatter(&pts, 76, 22, "EDP rel. uniform-8", "Δ top-1 vs uniform-8")
+    );
+
+    println!("\n{}", report::pareto_table(&r.proposed, r.reference.0, r.reference.1, r.reference.2));
+
+    // dominance checks: for each baseline point, does some proposed
+    // point have <= EDP and >= accuracy (strictly better in one)?
+    let dominated_frac = |cands: &[qmap::baselines::Candidate]| {
+        if cands.is_empty() {
+            return 0.0;
+        }
+        let d = cands
+            .iter()
+            .filter(|b| {
+                r.proposed.iter().any(|p| {
+                    p.hw.edp <= b.hw.edp
+                        && p.accuracy >= b.accuracy
+                        && (p.hw.edp < b.hw.edp || p.accuracy > b.accuracy)
+                })
+            })
+            .count();
+        d as f64 / cands.len() as f64
+    };
+    let du = dominated_frac(&r.uniform);
+    let dn = dominated_frac(&r.naive);
+    let dc = dominated_frac(&r.cross);
+    println!("proposed dominates {:.0}% of uniform points", du * 100.0);
+    println!("proposed dominates {:.0}% of naive points", dn * 100.0);
+    println!("proposed dominates {:.0}% of cross-accelerator points", dc * 100.0);
+
+    // headline: best EDP saving with "no accuracy drop" — the paper's
+    // Table II cells sit within +-0.5% of the reference, so we accept
+    // candidates within 0.2% (proxy evaluation noise included)
+    let best_saving = r
+        .proposed
+        .iter()
+        .filter(|c| c.accuracy >= ref_acc - 0.002)
+        .map(|c| 1.0 - c.hw.edp / ref_edp)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nheadline: best EDP saving at no accuracy drop = {:.1}% (paper: energy savings up to 37%)",
+        best_saving * 100.0
+    );
+    println!(
+        "paper shape: {}",
+        if du >= 0.5 && dn >= 0.3 && best_saving > 0.10 {
+            "REPRODUCED"
+        } else {
+            "MISMATCH"
+        }
+    );
+
+    let mut rows = Vec::new();
+    for (label, _, cands) in &arms {
+        for c in cands.iter() {
+            rows.push(vec![
+                label.to_string(),
+                format!("{:.6}", c.accuracy),
+                format!("{:.6e}", c.hw.edp),
+                format!("{:.6e}", c.hw.memory_energy_pj),
+                format!("{:.6}", c.hw.edp / ref_edp),
+                format!("{:.6}", c.accuracy - ref_acc),
+            ]);
+        }
+    }
+    let path = report::write_results(
+        "fig6_tradeoff.csv",
+        &report::csv(
+            &["strategy", "accuracy", "edp", "mem_energy_pj", "edp_rel_u8", "dacc_vs_u8"],
+            &rows,
+        ),
+    );
+    let mut plot = report::svg::Plot::new(
+        "Fig 6: accuracy vs EDP (rel. uniform-8), MobileNetV1 on Eyeriss",
+        "EDP rel. uniform-8",
+        "delta top-1 vs uniform-8",
+    );
+    for (label, _, cands) in &arms {
+        let pts: Vec<(f64, f64)> = cands
+            .iter()
+            .map(|c| (c.hw.edp / ref_edp, c.accuracy - ref_acc))
+            .collect();
+        plot.scatter(label, &pts);
+    }
+    report::write_results("fig6.svg", &plot.render());
+    println!("[{dt:.2?}] wrote {} (+ fig6.svg)", path.display());
+}

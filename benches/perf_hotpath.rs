@@ -1,0 +1,131 @@
+//! §Perf: micro/meso benchmarks of the L3 hot paths. Not a paper
+//! artifact — this is the before/after harness for the performance pass
+//! recorded in EXPERIMENTS.md §Perf.
+//!
+//!   * mapper throughput: candidate mappings evaluated per second
+//!     (draw + validity + nest analysis + energy model),
+//!   * full-network characterization latency (28 workloads × target
+//!     valid mappings), cold and warm cache,
+//!   * cache hit latency,
+//!   * NSGA-II generation step cost (proxy accuracy),
+//!   * parallel scaling of network evaluation.
+//!
+//! Run: `cargo bench --bench perf_hotpath`.
+
+use qmap::arch::presets;
+use qmap::coordinator::experiments::parallel_map;
+use qmap::eval::evaluate_network;
+use qmap::mapper::cache::MapperCache;
+use qmap::mapper::MapperConfig;
+use qmap::mapping::mapspace::MapSpace;
+use qmap::quant::{LayerQuant, QuantConfig};
+use qmap::util::rng::Rng;
+use qmap::workload::models;
+use std::time::Instant;
+
+fn time<R>(label: &str, f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{label:<58} {:>10.3} ms", dt * 1e3);
+    (r, dt)
+}
+
+fn main() {
+    println!("=== §Perf: L3 hot-path benchmarks ===\n");
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cfg = MapperConfig {
+        valid_target: 2_000, // the paper's budget
+        max_draws: 2_000_000,
+        seed: 42,
+    };
+
+    // 1. raw mapper throughput on the paper's dw-conv layer
+    let layer = &layers[1];
+    let q = LayerQuant { qa: 8, qw: 8, qo: 8 };
+    let space = MapSpace::of(&arch);
+    let mut evaluated = 0u64;
+    let (st, dt) = time("mapper: enumerate+price dw-conv2 (capped 100k valid)", || {
+        space.enumerate_valid(&arch, layer, &q, 100_000, |m| {
+            let nest = qmap::nest::analyze(&arch, layer, m);
+            let est = qmap::energy::estimate(&arch, layer, &q, &nest);
+            std::hint::black_box(est.edp());
+            evaluated += 1;
+        })
+    });
+    println!(
+        "  -> {} valid mappings priced, {:.0} mappings/s/core",
+        st.valid,
+        evaluated as f64 / dt
+    );
+
+    // 2. random-search characterization of one layer (2000 valid)
+    let cache = MapperCache::new();
+    let (_, dt2) = time("mapper: random search, 1 layer, 2000 valid", || {
+        cache.evaluate(&arch, layer, &q, &cfg)
+    });
+    println!("  -> {:.0} layer-characterizations/s possible", 1.0 / dt2);
+
+    // 3. full MobileNetV1 characterization, cold vs warm cache
+    let cache2 = MapperCache::new();
+    let qc = QuantConfig::uniform(layers.len(), 8);
+    let (r_cold, dt_cold) = time("network: MobileNetV1 cold-cache characterization", || {
+        evaluate_network(&arch, &layers, &qc, &cache2, &cfg)
+    });
+    assert!(r_cold.is_some());
+    let (_, dt_warm) = time("network: MobileNetV1 warm-cache (identical genome)", || {
+        evaluate_network(&arch, &layers, &qc, &cache2, &cfg)
+    });
+    println!(
+        "  -> warm/cold speedup {:.0}x; warm per-genome {:.1} µs",
+        dt_cold / dt_warm.max(1e-12),
+        dt_warm * 1e6
+    );
+
+    // 4. cache hit latency (single layer)
+    let (_, dth) = time("cache: single-workload hit x 100k", || {
+        for _ in 0..100_000 {
+            std::hint::black_box(cache2.evaluate(&arch, layer, &q, &cfg));
+        }
+    });
+    println!("  -> {:.0} ns per hit", dth * 1e9 / 1e5);
+
+    // 5. parallel scaling: 64 random genomes on 1 vs N threads
+    let mut rng = Rng::new(7);
+    let genomes: Vec<QuantConfig> = (0..64)
+        .map(|_| {
+            let mut g = QuantConfig::uniform(layers.len(), 8);
+            for l in g.layers.iter_mut() {
+                l.0 = 2 + rng.below(7) as u8;
+                l.1 = 2 + rng.below(7) as u8;
+            }
+            g
+        })
+        .collect();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let fresh = MapperCache::new();
+    let (_, dt1) = time("population: 64 genomes, 1 thread, shared cold cache", || {
+        for g in &genomes {
+            std::hint::black_box(evaluate_network(&arch, &layers, g, &fresh, &cfg));
+        }
+    });
+    let fresh2 = MapperCache::new();
+    let (_, dtn) = time(
+        &format!("population: 64 genomes, {threads} threads, shared cold cache"),
+        || {
+            parallel_map(&genomes, threads, |g| {
+                evaluate_network(&arch, &layers, g, &fresh2, &cfg).map(|e| e.edp)
+            })
+        },
+    );
+    println!("  -> parallel speedup {:.1}x on {threads} threads", dt1 / dtn.max(1e-12));
+
+    // summary line for EXPERIMENTS.md §Perf
+    println!("\nsummary:");
+    println!("  mappings_per_sec_core = {:.0}", evaluated as f64 / dt);
+    println!("  network_cold_ms       = {:.1}", dt_cold * 1e3);
+    println!("  network_warm_us       = {:.1}", dt_warm * 1e6);
+    println!("  cache_hit_ns          = {:.0}", dth * 1e9 / 1e5);
+    println!("  pop64_speedup_x       = {:.1}", dt1 / dtn.max(1e-12));
+}

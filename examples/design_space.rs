@@ -1,0 +1,158 @@
+//! Accelerator design-space exploration — the use-case from the paper's
+//! conclusion: "Our method can also help in designing new hardware
+//! accelerators for CNN because it can cheaply estimate the impact of
+//! complex quantization schemes on the resulting performance ... without
+//! the need to implement the accelerator."
+//!
+//! We sweep Eyeriss-like variants (global-buffer size, PE-array size,
+//! DRAM cost, bit-packing on/off), and for each variant report the best
+//! mixed-precision configuration found by a short hardware-aware search.
+//! The interesting output is how the *preferred bit-width profile* shifts
+//! with the memory subsystem.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
+use qmap::arch::{presets, Arch, Capacity};
+use qmap::baselines::proposed_search;
+use qmap::coordinator::RunConfig;
+use qmap::mapper::cache::MapperCache;
+use qmap::quant::QuantConfig;
+use qmap::report;
+use qmap::workload::models;
+
+/// One architecture variant to explore.
+struct Variant {
+    label: &'static str,
+    arch: Arch,
+}
+
+fn variants() -> Vec<Variant> {
+    let base = presets::eyeriss();
+
+    let mut small_glb = base.clone();
+    small_glb.name = "eyeriss-glb/4".into();
+    if let Capacity::Shared(w) = small_glb.levels[1].capacity {
+        small_glb.levels[1].capacity = Capacity::Shared(w / 4);
+    }
+
+    let mut big_array = base.clone();
+    big_array.name = "eyeriss-336pe".into();
+    big_array.levels[1].fanout = 336;
+
+    let mut pricey_dram = base.clone();
+    pricey_dram.name = "eyeriss-2xDRAM-cost".into();
+    for e in pricey_dram.levels.last_mut().unwrap().access_energy_pj.iter_mut() {
+        *e *= 2.0;
+    }
+
+    let mut no_packing = base.clone();
+    no_packing.name = "eyeriss-no-packing".into();
+    no_packing.bit_packing = false;
+
+    vec![
+        Variant { label: "baseline Eyeriss", arch: base },
+        Variant { label: "1/4 global buffer", arch: small_glb },
+        Variant { label: "2x PE array", arch: big_array },
+        Variant { label: "2x DRAM energy", arch: pricey_dram },
+        Variant { label: "vanilla Timeloop (no packing)", arch: no_packing },
+    ]
+}
+
+fn main() {
+    let layers = models::mobilenet_v1();
+    let mut rc = RunConfig::fast();
+    rc.nsga.generations = 8;
+
+    println!("=== design-space exploration: Eyeriss variants x mixed-precision search ===\n");
+    let mut rows = Vec::new();
+    for v in variants() {
+        v.arch.validate().expect("variant must be a legal arch");
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+
+        let reference = qmap::eval::evaluate_network(
+            &arch_ref(&v),
+            &layers,
+            &QuantConfig::uniform(layers.len(), 8),
+            &cache,
+            &rc.mapper,
+        )
+        .expect("uniform-8 must map on every variant");
+
+        let front = proposed_search(
+            &v.arch, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga, |_, _| {},
+        );
+
+        // best candidate with <= 1% accuracy drop vs uniform-8
+        let ref_acc = acc.accuracy(&QuantConfig::uniform(layers.len(), 8));
+        let best = front
+            .iter()
+            .filter(|c| c.accuracy >= ref_acc - 0.01)
+            .min_by(|a, b| a.hw.edp.partial_cmp(&b.hw.edp).unwrap());
+
+        if let Some(b) = best {
+            let mean_bits = b
+                .genome
+                .layers
+                .iter()
+                .map(|&(a, w)| (a + w) as f64 / 2.0)
+                .sum::<f64>()
+                / b.genome.layers.len() as f64;
+            rows.push(vec![
+                v.label.to_string(),
+                v.arch.name.clone(),
+                format!("{:+.1}%", (b.hw.edp / reference.edp - 1.0) * 100.0),
+                format!(
+                    "{:+.1}%",
+                    (b.hw.memory_energy_pj / reference.memory_energy_pj - 1.0) * 100.0
+                ),
+                format!("{mean_bits:.1}"),
+                profile(&b.genome),
+            ]);
+        } else {
+            rows.push(vec![
+                v.label.to_string(),
+                v.arch.name.clone(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "(no candidate within 1% accuracy)".into(),
+            ]);
+        }
+    }
+
+    print!(
+        "{}",
+        report::table(
+            &["variant", "arch", "ΔEDP vs u8", "Δmem-E vs u8", "mean bits", "bit profile (qa/qw per layer-group)"],
+            &rows
+        )
+    );
+    println!(
+        "\nreading: smaller buffers / pricier DRAM push the search to lower bit-widths;\n\
+         disabling bit-packing removes most of the incentive (the paper's extension\n\
+         is what turns lower precision into fewer memory words)."
+    );
+}
+
+fn arch_ref(v: &Variant) -> Arch {
+    v.arch.clone()
+}
+
+/// Summarize the 28-layer bit profile as 4 layer-group means "a/w".
+fn profile(qc: &QuantConfig) -> String {
+    let n = qc.layers.len();
+    let g = 4;
+    (0..g)
+        .map(|i| {
+            let lo = i * n / g;
+            let hi = ((i + 1) * n / g).max(lo + 1);
+            let sl = &qc.layers[lo..hi.min(n)];
+            let ma = sl.iter().map(|&(a, _)| a as f64).sum::<f64>() / sl.len() as f64;
+            let mw = sl.iter().map(|&(_, w)| w as f64).sum::<f64>() / sl.len() as f64;
+            format!("{ma:.0}/{mw:.0}")
+        })
+        .collect::<Vec<_>>()
+        .join("  ")
+}

@@ -1,0 +1,177 @@
+//! End-to-end driver: all three layers composing on a real small
+//! workload (DESIGN.md §6).
+//!
+//!   L1/L2 (build time): `make artifacts` lowered the JAX QAT
+//!     MobileNetV1-0.25 (Pallas fake-quant matmul inside) to HLO text.
+//!   Runtime: Rust loads the artifacts via PJRT — Python is NOT running.
+//!   L3: (1) QAT-8 pre-training with a logged loss curve,
+//!       (2) NSGA-II search with REAL QAT fine-tuning in the loop
+//!           (accuracy) and the mapping engine (EDP on Eyeriss),
+//!       (3) final Pareto front, recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_search`
+//! Env: QMAP_PRETRAIN_STEPS (default 300), QMAP_GENS (default 6),
+//!      QMAP_FINETUNE_STEPS (default 40).
+
+use qmap::arch::presets;
+use qmap::baselines::proposed_search;
+use qmap::coordinator::RunConfig;
+use qmap::data::SyntheticDataset;
+use qmap::mapper::cache::MapperCache;
+use qmap::report;
+use qmap::runtime::qat::{QatAccuracy, QatBudget};
+use qmap::runtime::{default_artifact_dir, Runtime};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    println!("=== E2E: QAT-in-the-loop quantization + mapping search ===\n");
+
+    // ---- load AOT artifacts (fails with a hint if `make artifacts` wasn't run)
+    let rt = Runtime::load(default_artifact_dir())?;
+    println!(
+        "[runtime] PJRT platform: {}; model {} ({} layers, {} params, batch {})",
+        rt.platform(),
+        rt.meta.model,
+        rt.meta.num_layers,
+        rt.meta.param_size,
+        rt.meta.batch
+    );
+
+    // ---- phase 1: QAT-8 pre-training (the paper's "QAT-8 initial model")
+    let data = SyntheticDataset::new(0xDA7A);
+    let steps = env_u64("QMAP_PRETRAIN_STEPS", 300);
+    println!("\n[pretrain] QAT-8 for {steps} steps (loss curve below)");
+    let mut curve: Vec<(u64, f32)> = Vec::new();
+    let params = QatAccuracy::pretrain(&rt, &data, 8, steps, 0.05, |step, loss| {
+        if step % 20 == 0 || step + 1 == steps {
+            println!("  step {step:>5}  loss {loss:.4}");
+        }
+        curve.push((step, loss));
+    })?;
+    let first_avg: f32 =
+        curve.iter().take(10).map(|&(_, l)| l).sum::<f32>() / 10.0_f32.min(curve.len() as f32);
+    let last_avg: f32 = curve.iter().rev().take(10).map(|&(_, l)| l).sum::<f32>()
+        / 10.0_f32.min(curve.len() as f32);
+    println!("[pretrain] loss {first_avg:.4} -> {last_avg:.4} (must fall for the stack to be learning)");
+    assert!(
+        last_avg < first_avg,
+        "loss did not decrease — training path broken"
+    );
+
+    // baseline accuracy of the QAT-8 checkpoint
+    let mut qat = QatAccuracy::new(
+        &rt,
+        SyntheticDataset::new(0xDA7A),
+        params,
+        QatBudget {
+            finetune_steps: env_u64("QMAP_FINETUNE_STEPS", 40),
+            eval_batches: 6,
+            lr: 0.02,
+        },
+    );
+    let u8_acc = qat.evaluate(&qmap::quant::QuantConfig::uniform(rt.meta.num_layers, 8))?;
+    println!("[pretrain] QAT-8 top-1 on held-out batches: {:.3}", u8_acc);
+
+    // ---- phase 2: NSGA-II with real QAT in the loop, EDP on Eyeriss
+    // The hardware side prices the *full-size* MobileNetV1 layer table —
+    // the trained model is the width-scaled proxy (DESIGN.md §3).
+    let arch = presets::eyeriss();
+    let layers = qmap::workload::models::mobilenet_v1();
+    assert_eq!(layers.len(), rt.meta.num_layers, "genome length mismatch");
+    let cache = MapperCache::new();
+    let mut rc = RunConfig::fast();
+    rc.nsga.population = 16;
+    rc.nsga.offspring = 8;
+    rc.nsga.generations = env_u64("QMAP_GENS", 6) as usize;
+
+    println!(
+        "\n[search] NSGA-II: |P|={}, |Q|={}, {} generations, real QAT fine-tune per candidate",
+        rc.nsga.population, rc.nsga.offspring, rc.nsga.generations
+    );
+    let t_search = Instant::now();
+    let front = proposed_search(
+        &arch,
+        &layers,
+        &mut qat,
+        &cache,
+        &rc.mapper,
+        &rc.nsga,
+        |generation, pop| {
+            let best_acc = pop
+                .iter()
+                .map(|i| 1.0 - i.objectives[1])
+                .fold(f64::NEG_INFINITY, f64::max);
+            let best_edp = pop
+                .iter()
+                .map(|i| i.objectives[0])
+                .fold(f64::INFINITY, f64::min);
+            println!(
+                "  gen {generation:>3}: best top-1 {best_acc:.3}, best EDP {best_edp:.3e} ({} mapper workloads cached)",
+                cache.len()
+            );
+        },
+    );
+    println!("[search] done in {:.1?}", t_search.elapsed());
+
+    // ---- phase 3: report the final front
+    let reference = qmap::eval::evaluate_network(
+        &arch,
+        &layers,
+        &qmap::quant::QuantConfig::uniform(layers.len(), 8),
+        &cache,
+        &rc.mapper,
+    )
+    .expect("uniform-8 maps");
+
+    println!("\nfinal Pareto candidates (relative to uniform 8-bit):");
+    print!(
+        "{}",
+        report::pareto_table(&front, reference.edp, reference.memory_energy_pj, u8_acc)
+    );
+
+    let best_saving = front
+        .iter()
+        .filter(|c| c.accuracy >= u8_acc - 0.005)
+        .map(|c| 1.0 - c.hw.memory_energy_pj / reference.memory_energy_pj)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "best memory-energy saving at <=0.5% accuracy drop: {:.1}%",
+        best_saving * 100.0
+    );
+
+    // persist the loss curve + front for EXPERIMENTS.md
+    let mut csv = String::from("step,loss\n");
+    for (s, l) in &curve {
+        let _ = writeln!(csv, "{s},{l}");
+    }
+    report::write_results("e2e_loss_curve.csv", &csv);
+    let rows: Vec<Vec<String>> = front
+        .iter()
+        .map(|c| {
+            vec![
+                format!("{:.4}", c.accuracy),
+                format!("{:.4e}", c.hw.edp),
+                format!("{:.4e}", c.hw.memory_energy_pj),
+                c.genome
+                    .layers
+                    .iter()
+                    .map(|&(a, w)| format!("{a}/{w}"))
+                    .collect::<Vec<_>>()
+                    .join(" "),
+            ]
+        })
+        .collect();
+    let path = report::write_results(
+        "e2e_front.csv",
+        &report::csv(&["top1", "edp", "mem_energy_pj", "genome"], &rows),
+    );
+    println!("\nwrote {}", path.display());
+    println!("total {:.1?}; python was never on the request path.", t0.elapsed());
+    Ok(())
+}

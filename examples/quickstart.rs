@@ -1,0 +1,118 @@
+//! Quickstart: evaluate a quantized MobileNetV1 on the Eyeriss model.
+//!
+//! Demonstrates the core public API in ~5 minutes of reading:
+//!   1. pick an accelerator preset (or parse your own text spec),
+//!   2. pick a network layer table,
+//!   3. describe a mixed-precision quantization (the paper's genome),
+//!   4. run the mapping engine per layer and aggregate,
+//!   5. inspect the best mapping Timeloop-style.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use qmap::arch::presets;
+use qmap::eval::evaluate_network;
+use qmap::mapper::{self, MapperConfig};
+use qmap::mapper::cache::MapperCache;
+use qmap::quant::{LayerQuant, QuantConfig};
+use qmap::workload::models;
+
+fn main() {
+    // 1. the accelerator: Eyeriss-like, 168 PEs, 16-bit words,
+    //    bit-packing enabled (the paper's Timeloop extension)
+    let arch = presets::eyeriss();
+    println!(
+        "accelerator: {} ({} PEs, {}-bit words, bit-packing {})",
+        arch.name,
+        arch.total_pes(),
+        arch.word_bits,
+        if arch.bit_packing { "on" } else { "off" }
+    );
+
+    // 2. the workload: full-size MobileNetV1 layer table (28 layers)
+    let layers = models::mobilenet_v1();
+    println!("network: MobileNetV1, {} quantizable layers", layers.len());
+
+    // 3. two quantizations: uniform 8-bit, and a mixed-precision genome
+    //    that spends bits where the early layers need them
+    let uniform8 = QuantConfig::uniform(layers.len(), 8);
+    let mut mixed = QuantConfig::uniform(layers.len(), 8);
+    for (i, l) in mixed.layers.iter_mut().enumerate() {
+        // keep first/last at 8/8; taper the middle to 4-6 bits
+        *l = match i {
+            0 => (8, 8),
+            i if i + 1 == layers.len() => (8, 8),
+            i if i < 6 => (8, 6),
+            i if i < 14 => (6, 4),
+            _ => (4, 4),
+        };
+    }
+
+    // 4. characterize both through the mapping engine (cached, so shared
+    //    workloads across genomes are only mapped once)
+    let cache = MapperCache::new();
+    let cfg = MapperConfig::default(); // 2000 valid mappings per workload
+    let e8 = evaluate_network(&arch, &layers, &uniform8, &cache, &cfg)
+        .expect("uniform-8 must map");
+    let em = evaluate_network(&arch, &layers, &mixed, &cache, &cfg)
+        .expect("mixed genome must map");
+
+    println!("\n                       uniform 8-bit    mixed-precision");
+    println!(
+        "total energy   [uJ]    {:>12.2}    {:>12.2}  ({:+.1}%)",
+        e8.energy_pj / 1e6,
+        em.energy_pj / 1e6,
+        (em.energy_pj / e8.energy_pj - 1.0) * 100.0
+    );
+    println!(
+        "memory energy  [uJ]    {:>12.2}    {:>12.2}  ({:+.1}%)",
+        e8.memory_energy_pj / 1e6,
+        em.memory_energy_pj / 1e6,
+        (em.memory_energy_pj / e8.memory_energy_pj - 1.0) * 100.0
+    );
+    println!(
+        "latency     [cycles]   {:>12.0}    {:>12.0}  ({:+.1}%)",
+        e8.cycles,
+        em.cycles,
+        (em.cycles / e8.cycles - 1.0) * 100.0
+    );
+    println!(
+        "EDP        [J*cycles]  {:>12.3e}    {:>12.3e}  ({:+.1}%)",
+        e8.edp,
+        em.edp,
+        (em.edp / e8.edp - 1.0) * 100.0
+    );
+    println!(
+        "weight words           {:>12}    {:>12}  ({:+.1}%)",
+        e8.weight_words,
+        em.weight_words,
+        (em.weight_words as f64 / e8.weight_words as f64 - 1.0) * 100.0
+    );
+
+    // 5. look at one layer's best mapping in detail (Timeloop-style nest)
+    let layer = &layers[1]; // the paper's "conv layer #2" (depthwise)
+    let q = LayerQuant { qa: 4, qw: 4, qo: 4 };
+    let r = mapper::search(&arch, layer, &q, &cfg);
+    println!(
+        "\nbest mapping for '{}' at (qa,qw,qo)=(4,4,4): {} valid of {} draws",
+        layer.name, r.valid, r.draws
+    );
+    if let (Some(est), Some(m)) = (r.best, r.best_mapping) {
+        print!("{}", m.render(&arch));
+        println!(
+            "energy {:.1} nJ, {:.0} cycles, EDP {:.3e}, PEs used {}/{}",
+            est.energy_pj / 1e3,
+            est.cycles,
+            est.edp(),
+            m.pes_used(),
+            arch.total_pes()
+        );
+    }
+
+    println!(
+        "\ncache: {} workloads characterized, {} hits / {} misses",
+        cache.len(),
+        cache.hits(),
+        cache.misses()
+    );
+    println!("\nnext: cargo run --release --example e2e_search   (full QAT-in-the-loop search)");
+}

@@ -1,0 +1,156 @@
+"""L1 Pallas kernel: fused fake-quant depthwise convolution.
+
+MobileNet's second compute hot-spot (after the pointwise matmul) is the
+3x3 depthwise conv. On TPU a depthwise conv cannot use the MXU (no
+channel reduction), so the right mapping is the VPU: per-channel
+shift-multiply-accumulate over the RxS window, vectorized along the
+channel (lane) axis.
+
+Kernel structure (structural TPU mapping; executed under
+``interpret=True`` on CPU PJRT — see DESIGN.md §Hardware-Adaptation):
+
+* grid over channel blocks of ``BLOCK_C`` lanes; each step holds one
+  ``[B, H+R-1, W+S-1, BLOCK_C]`` padded-input tile, the ``[R, S,
+  BLOCK_C]`` filter sliver and the ``[B, HO, WO, BLOCK_C]`` out tile in
+  VMEM (channel-last keeps the lane axis contiguous);
+* quantize(x) and quantize(w) are fused in front of the accumulation so
+  the quantized operands never round-trip to HBM (the paper's
+  fewer-memory-transfers insight);
+* the RxS loop is unrolled at trace time (R, S static); accumulation is
+  f32.
+
+Gradients: ``custom_vjp`` with straight-through estimation, mirroring
+``qmatmul``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quantize import qparams, quant_dequant
+
+# Channel-block default: one TPU lane register row is 128 lanes wide.
+BLOCK_C = 128
+
+
+def _qdw_kernel(x_ref, w_ref, qp_ref, mask_ref, o_ref, *, r, s, stride, ho, wo):
+    """One grid step: o[..., c-block] = fq(x) (*) fq(w) over the window.
+
+    ``mask`` zeroes the SAME-padding ring *after* quantization: QAT
+    semantics quantize the activations first and pad with true zeros, and
+    fq(0) != 0 under asymmetric quantization.
+    """
+    qp = qp_ref[...]
+    x_min, x_scale, w_min, w_scale = qp[0], qp[1], qp[2], qp[3]
+    x = x_ref[...]  # [B, HP, WP, BC], already zero-padded in HBM
+    w = w_ref[...]  # [R, S, BC]
+    mask = mask_ref[...]  # [HP, WP] 1.0 inside, 0.0 on the pad ring
+    xq = jnp.round((x - x_min) / x_scale) * x_scale + x_min
+    xq = xq * mask[None, :, :, None]
+    wq = jnp.round((w - w_min) / w_scale) * w_scale + w_min
+
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for ri in range(r):
+        for si in range(s):
+            # strided window starting at (ri, si): [B, HO, WO, BC]
+            win = jax.lax.slice(
+                xq,
+                (0, ri, si, 0),
+                (xq.shape[0], ri + (ho - 1) * stride + 1, si + (wo - 1) * stride + 1, xq.shape[3]),
+                (1, stride, stride, 1),
+            )
+            acc = acc + win * wq[ri, si, :]
+    o_ref[...] = acc
+
+
+def _qdwconv_impl(x, w, qa_bits, qw_bits, *, stride=1, block_c=BLOCK_C, interpret=True):
+    """x: [B, H, W, C] f32; w: [R, S, C] f32; 'SAME'-style padding so that
+    HO = ceil(H / stride)."""
+    b, h, ww_, c = x.shape
+    r, s, cw = w.shape
+    assert c == cw, f"channel mismatch: {x.shape} vs {w.shape}"
+
+    ho = -(-h // stride)
+    wo = -(-ww_ // stride)
+    # SAME padding totals
+    pad_h = max((ho - 1) * stride + r - h, 0)
+    pad_w = max((wo - 1) * stride + s - ww_, 0)
+    xp = jnp.pad(
+        x,
+        ((0, 0), (pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2), (0, 0)),
+    )
+    hp, wp = xp.shape[1], xp.shape[2]
+
+    x_min, x_scale = qparams(x, qa_bits)
+    w_min, w_scale = qparams(w, qw_bits)
+    qp = jnp.stack([x_min, x_scale, w_min, w_scale]).astype(jnp.float32)
+
+    bc = min(block_c, c)
+    pad_c = (-c) % bc
+    if pad_c:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad_c)))
+    cp = c + pad_c
+
+    # 1.0 on real pixels, 0.0 on the padding ring (see kernel docstring)
+    mask = jnp.pad(
+        jnp.ones((h, ww_), jnp.float32),
+        ((pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2)),
+    )
+
+    kernel = functools.partial(_qdw_kernel, r=r, s=s, stride=stride, ho=ho, wo=wo)
+    out = pl.pallas_call(
+        kernel,
+        grid=(cp // bc,),
+        in_specs=[
+            pl.BlockSpec((b, hp, wp, bc), lambda i: (0, 0, 0, i)),  # input tile
+            pl.BlockSpec((r, s, bc), lambda i: (0, 0, i)),  # filter sliver
+            pl.BlockSpec((4,), lambda i: (0,)),  # quant scalars
+            pl.BlockSpec((hp, wp), lambda i: (0, 0)),  # padding mask
+        ],
+        out_specs=pl.BlockSpec((b, ho, wo, bc), lambda i: (0, 0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cp), jnp.float32),
+        interpret=interpret,
+    )(xp, w, qp, mask)
+    return out[..., :c] if pad_c else out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def qdwconv(x, w, qa_bits, qw_bits, stride=1):
+    """Fake-quant depthwise conv, 'SAME' padding, STE gradients.
+
+    x: [B, H, W, C]; w: [R, S, C]; qa_bits/qw_bits: traced f32 scalars.
+    """
+    return _qdwconv_impl(x, w, qa_bits, qw_bits, stride=stride)
+
+
+def _ref_dw(x, w, stride):
+    """Plain depthwise conv via conv_general_dilated (no quantization)."""
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x,
+        w[:, :, None, :],  # [R, S, 1, C]
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def _fwd(x, w, qa_bits, qw_bits, stride):
+    return _qdwconv_impl(x, w, qa_bits, qw_bits, stride=stride), (x, w, qa_bits, qw_bits)
+
+
+def _bwd(stride, res, g):
+    x, w, qa_bits, qw_bits = res
+    xq = quant_dequant(x, qa_bits)
+    wq = quant_dequant(w, qw_bits)
+    # STE: differentiate the dequantized conv wrt its operands
+    _, vjp = jax.vjp(lambda xx, ww: _ref_dw(xx, ww, stride), xq, wq)
+    gx, gw = vjp(g)
+    return gx, gw, jnp.zeros_like(qa_bits), jnp.zeros_like(qw_bits)
+
+
+qdwconv.defvjp(_fwd, _bwd)

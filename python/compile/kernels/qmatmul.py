@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: fused fake-quant matmul.
+
+The compute hot-spot of MobileNet under QAT is the pointwise-conv /
+fully-connected matmul with quantize-dequantize on both operands. This
+kernel fuses quantize(x) -> quantize(w) -> MXU matmul -> f32 accumulate
+in one VMEM-resident pass, so quantized operands never round-trip to HBM
+— the TPU analogue of the paper's bit-packing insight (fewer memory
+transfers at lower precision). See DESIGN.md §Hardware-Adaptation.
+
+TPU mapping (structural; executed under ``interpret=True`` on CPU PJRT —
+the Mosaic path is compile-only in this environment):
+
+* grid over M in ``BLOCK_M``-row stripes; each grid step holds an
+  ``[BLOCK_M, K]`` x-tile, the full ``[K, N]`` w-panel and an
+  ``[BLOCK_M, N]`` out-tile in VMEM;
+* quantizer parameters (min/scale per tensor) are scalars computed once
+  outside and broadcast into the kernel (SMEM-class operands);
+* the multiply targets the MXU via ``jnp.dot`` with
+  ``preferred_element_type=f32``.
+
+Gradients: ``custom_vjp`` with straight-through estimation — the
+backward pass uses the *dequantized* operands (plain jnp matmuls), and
+bit-widths receive zero gradient.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quantize import qparams
+
+# Default M-stripe. 128 matches the MXU systolic dimension; K and N panels
+# are kept whole (the scaled MobileNet's K, N <= 256 fit VMEM comfortably:
+# worst tile = (128*256 + 256*256 + 128*256) * 4 B ~ 0.5 MB << 16 MB VMEM).
+BLOCK_M = 128
+
+
+def _qmm_kernel(x_ref, w_ref, qp_ref, o_ref):
+    """One grid step: o = fq(x_block) @ fq(w)."""
+    qp = qp_ref[...]  # [4]: x_min, x_scale, w_min, w_scale
+    x_min, x_scale, w_min, w_scale = qp[0], qp[1], qp[2], qp[3]
+    x = x_ref[...]
+    w = w_ref[...]
+    xq = jnp.round((x - x_min) / x_scale) * x_scale + x_min
+    wq = jnp.round((w - w_min) / w_scale) * w_scale + w_min
+    o_ref[...] = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def _qmatmul_impl(x, w, qa_bits, qw_bits, *, block_m=BLOCK_M, interpret=True):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+
+    x_min, x_scale = qparams(x, qa_bits)
+    w_min, w_scale = qparams(w, qw_bits)
+    qp = jnp.stack([x_min, x_scale, w_min, w_scale]).astype(jnp.float32)
+
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    mp = m + pad
+
+    out = pl.pallas_call(
+        _qmm_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),  # x stripe: HBM->VMEM
+            pl.BlockSpec((k, n), lambda i: (0, 0)),  # w panel: resident
+            pl.BlockSpec((4,), lambda i: (0,)),  # quant scalars
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=interpret,
+    )(xp, w, qp)
+    return out[:m] if pad else out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def qmatmul(x, w, qa_bits, qw_bits):
+    """Fake-quant matmul: ``fq(x, qa) @ fq(w, qw)``, STE gradients.
+
+    x: [M, K] f32; w: [K, N] f32; qa_bits/qw_bits: f32 scalars (traced —
+    runtime inputs in the AOT artifact).
+    """
+    return _qmatmul_impl(x, w, qa_bits, qw_bits)
+
+
+def _fwd(x, w, qa_bits, qw_bits):
+    out = _qmatmul_impl(x, w, qa_bits, qw_bits)
+    return out, (x, w, qa_bits, qw_bits)
+
+
+def _bwd(res, g):
+    x, w, qa_bits, qw_bits = res
+    # STE: d/dx [fq(x) @ fq(w)] ~= g @ fq(w)^T, d/dw ~= fq(x)^T @ g
+    from ..quantize import quant_dequant
+
+    xq = quant_dequant(x, qa_bits)
+    wq = quant_dequant(w, qw_bits)
+    gx = jnp.matmul(g, wq.T, preferred_element_type=jnp.float32)
+    gw = jnp.matmul(xq.T, g, preferred_element_type=jnp.float32)
+    return gx, gw, jnp.zeros_like(qa_bits), jnp.zeros_like(qw_bits)
+
+
+qmatmul.defvjp(_fwd, _bwd)

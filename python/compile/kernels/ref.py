@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the Pallas fake-quant matmul kernel.
+
+This is the CORE correctness reference: ``python/tests/test_kernel.py``
+sweeps shapes and bit-widths (hypothesis) asserting the Pallas kernel
+matches this implementation to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..quantize import quant_dequant
+
+
+def ref_qdwconv(
+    x: jax.Array, w: jax.Array, qa_bits: jax.Array, qw_bits: jax.Array, stride: int = 1
+) -> jax.Array:
+    """Reference fake-quant depthwise conv ('SAME' padding).
+
+    x: [B, H, W, C]; w: [R, S, C]; quantized per-tensor asymmetric.
+    """
+    xq = quant_dequant(x, qa_bits)
+    wq = quant_dequant(w, qw_bits)
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        xq,
+        wq[:, :, None, :],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def ref_qmatmul(
+    x: jax.Array, w: jax.Array, qa_bits: jax.Array, qw_bits: jax.Array
+) -> jax.Array:
+    """Reference: ``fq(x) @ fq(w)`` with per-tensor asymmetric fake quant.
+
+    x: [M, K] activations, quantized to ``qa_bits``.
+    w: [K, N] weights, quantized to ``qw_bits``.
+    Accumulation in f32.
+    """
+    xq = quant_dequant(x, qa_bits)
+    wq = quant_dequant(w, qw_bits)
+    return jnp.matmul(xq, wq, preferred_element_type=jnp.float32)

@@ -1,0 +1,250 @@
+"""L2: quantization-aware MobileNetV1 (width 0.25, 32x32 input) in JAX.
+
+This is the *trainable* twin of the full-size layer table in
+``rust/src/workload/models.rs::scaled_mobilenet_v1`` — 28 quantizable
+layers, aligned 1:1 so a bit-width genome indexes both consistently
+(DESIGN.md §3). Pointwise convolutions and the classifier run through
+the L1 Pallas kernel (``kernels.qmatmul``); stem and depthwise
+convolutions use ``lax.conv_general_dilated`` with fake-quantized
+operands (their MAC share is small).
+
+Everything the Rust coordinator varies at runtime is a *tensor input*:
+
+* ``params`` — one flat f32 vector (see ``PARAM_SPEC``),
+* ``qa``/``qw`` — per-layer bit-width vectors (f32, length 28),
+* ``lr`` — SGD learning rate scalar.
+
+so a single AOT-compiled train/eval executable serves every genome.
+"""
+
+import os
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.qmatmul import qmatmul
+from .kernels.ref import ref_qmatmul
+from .quantize import fake_quant
+
+# --- architecture table (must mirror rust scaled_mobilenet_v1) ----------
+
+NUM_CLASSES = 10
+IMG = 32
+IN_CH = 3
+
+
+def _w(ch: int) -> int:
+    """Width multiplier 0.25 with floor 8 (same rule as the Rust table)."""
+    return max(ch // 4, 8)
+
+
+# (kind, cin, cout, stride); kind in {"conv", "dw", "pw", "fc"}
+def arch_table() -> List[Tuple[str, int, int, int]]:
+    layers: List[Tuple[str, int, int, int]] = [("conv", IN_CH, _w(32), 1)]
+    blocks = [
+        (32, 64, 1),
+        (64, 128, 2),
+        (128, 128, 1),
+        (128, 256, 2),
+        (256, 256, 1),
+        (256, 512, 2),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 1024, 2),
+        (1024, 1024, 1),
+    ]
+    for cin, cout, s in blocks:
+        layers.append(("dw", _w(cin), _w(cin), s))
+        layers.append(("pw", _w(cin), _w(cout), 1))
+    layers.append(("fc", _w(1024), NUM_CLASSES, 1))
+    return layers
+
+
+ARCH = arch_table()
+NUM_LAYERS = len(ARCH)  # 28; genome = 56 integers, as in the paper
+
+# Use the Pallas kernel unless explicitly disabled (ablation/debugging).
+USE_PALLAS = os.environ.get("QMAP_USE_PALLAS", "1") != "0"
+
+
+def _mm(x, w, qa, qw):
+    fn = qmatmul if USE_PALLAS else ref_qmatmul
+    return fn(x, w, qa, qw)
+
+
+# --- flat parameter vector ----------------------------------------------
+
+
+def param_spec() -> List[Tuple[str, Tuple[int, ...], int]]:
+    """[(name, shape, offset)] for the flat parameter vector."""
+    spec = []
+    off = 0
+
+    def add(name, shape):
+        nonlocal off
+        spec.append((name, shape, off))
+        off += int(jnp.prod(jnp.array(shape)))
+
+    for i, (kind, cin, cout, _s) in enumerate(ARCH):
+        if kind == "conv":
+            add(f"l{i}.w", (3, 3, cin, cout))
+        elif kind == "dw":
+            # HWIO with feature_group_count=cin: I=1, O=cin
+            add(f"l{i}.w", (3, 3, 1, cin))
+        elif kind in ("pw", "fc"):
+            add(f"l{i}.w", (cin, cout))
+        add(f"l{i}.b", (cout,))
+    return spec
+
+
+PARAM_SPEC = param_spec()
+PARAM_SIZE = PARAM_SPEC[-1][2] + int(
+    jnp.prod(jnp.array(PARAM_SPEC[-1][1]))
+)
+
+
+def unflatten(params: jax.Array):
+    """Flat vector -> dict of named tensors."""
+    out = {}
+    for name, shape, off in PARAM_SPEC:
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = params[off : off + size].reshape(shape)
+    return out
+
+
+def init_params(seed: int = 0) -> jax.Array:
+    """He-init all weights into one flat vector (deterministic)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape, _off in PARAM_SPEC:
+        key, sub = jax.random.split(key)
+        if name.endswith(".b"):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            fan_in = 1
+            for s in shape[:-1]:
+                fan_in *= s
+            std = (2.0 / fan_in) ** 0.5
+            chunks.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).ravel()
+            )
+    return jnp.concatenate(chunks)
+
+
+# --- forward pass --------------------------------------------------------
+
+
+def _dw_conv(h: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+    """3x3 depthwise conv as 9 shift-multiply-adds ('SAME' padding).
+
+    Equivalent to ``conv_general_dilated(..., feature_group_count=C)``
+    but ~20x faster on XLA CPU, whose grouped-conv path is a naive loop
+    (§Perf: 144 ms -> 7 ms full forward). Also mirrors the VPU mapping
+    the L1 Pallas dw kernel uses on TPU (DESIGN.md §Hardware-Adaptation).
+
+    h: [B, H, W, C]; w: [3, 3, 1, C] (HWIO, groups=C).
+    """
+    b_, hh, ww_, c = h.shape
+    ho = -(-hh // stride)
+    wo = -(-ww_ // stride)
+    ph = max((ho - 1) * stride + 3 - hh, 0)
+    pw = max((wo - 1) * stride + 3 - ww_, 0)
+    hp = jnp.pad(h, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)))
+    acc = jnp.zeros((b_, ho, wo, c), jnp.float32)
+    for r in range(3):
+        for s in range(3):
+            win = jax.lax.slice(
+                hp,
+                (0, r, s, 0),
+                (b_, r + (ho - 1) * stride + 1, s + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            acc = acc + win * w[r, s, 0, :]
+    return acc
+
+
+def forward_dict(p, x: jax.Array, qa: jax.Array, qw: jax.Array):
+    """Quantized forward pass over the *named-tensor* parameter dict.
+
+    Differentiating w.r.t. the dict instead of the flat vector avoids 56
+    pad-into-212906-floats ops in the backward pass (§Perf: the flat-
+    param plumbing alone cost ~200 ms/step on one core; grads are
+    re-flattened with a single concatenate in `train_step`).
+    """
+    h = x
+    for i, (kind, cin, cout, stride) in enumerate(ARCH):
+        w = fake_quant(p[f"l{i}.w"], qw[i])
+        b = p[f"l{i}.b"]
+        h = fake_quant(h, qa[i])  # layer-input activations (paper's q_a)
+        if kind == "conv":
+            h = jax.lax.conv_general_dilated(
+                h, w, (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        elif kind == "dw":
+            h = _dw_conv(h, w, stride)
+        elif kind == "pw":
+            bsz, hh, ww_, _c = h.shape
+            flat = h.reshape(bsz * hh * ww_, cin)
+            # the Pallas hot-spot: fused fake-quant matmul. Activations
+            # were already fake-quantized above; the kernel re-quantizes
+            # (idempotent on already-quantized grids) and handles weights.
+            flat = _mm(flat, p[f"l{i}.w"], qa[i], qw[i])
+            h = flat.reshape(bsz, hh, ww_, cout)
+        elif kind == "fc":
+            h = jnp.mean(h, axis=(1, 2))  # global average pool
+            h = _mm(h, p[f"l{i}.w"], qa[i], qw[i])
+        if kind != "fc":
+            h = jnp.clip(h + b, 0.0, 6.0)  # ReLU6, MobileNet's activation
+        else:
+            h = h + b
+    return h
+
+
+def forward(params: jax.Array, x: jax.Array, qa: jax.Array, qw: jax.Array):
+    """Quantized forward pass from the flat parameter vector.
+
+    params: [PARAM_SIZE] f32; x: [B, 32, 32, 3] f32 in [0,1];
+    qa, qw: [NUM_LAYERS] f32 bit-widths. Returns logits [B, 10].
+    """
+    return forward_dict(unflatten(params), x, qa, qw)
+
+
+def _loss_dict(p, x, y, qa, qw):
+    logits = forward_dict(p, x, qa, qw)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, x, y, qa, qw):
+    """Mean softmax cross-entropy; y: [B] int32 labels."""
+    return _loss_dict(unflatten(params), x, y, qa, qw)
+
+
+def train_step(params, x, y, qa, qw, lr):
+    """One SGD step. Returns (new_params, loss).
+
+    Gradients are taken w.r.t. the unflattened dict (cheap backward) and
+    re-flattened with one concatenate — see `forward_dict`.
+    """
+    p = unflatten(params)
+    loss, gdict = jax.value_and_grad(_loss_dict)(p, x, y, qa, qw)
+    gflat = jnp.concatenate([gdict[name].ravel() for name, _, _ in PARAM_SPEC])
+    return params - lr * gflat, loss
+
+
+def eval_step(params, x, y, qa, qw):
+    """Returns (correct_count f32, mean loss f32)."""
+    logits = forward(params, x, qa, qw)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.float32))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return correct, jnp.mean(nll)

@@ -1,0 +1,50 @@
+"""Fake-quantization primitives (L2 building blocks).
+
+Per-tensor *asymmetric* quantization with dynamic (min/max observer)
+range, matching the paper's training engine ("the quantization is based
+on a per-tensor asymmetric approach"). Bit-widths are **traced values**
+(f32 scalars), so one AOT-compiled executable serves every genome the
+Rust search engine proposes — bit-widths arrive as runtime tensors, not
+compile-time constants.
+
+Gradients use the straight-through estimator (STE): the
+quantize-dequantize round-trip is identity in the backward pass.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Values below this span are treated as constant tensors (no quantization
+# noise can be represented anyway; avoids 0-division in scale).
+_EPS = 1e-8
+
+
+def qparams(t: jax.Array, bits: jax.Array):
+    """Asymmetric per-tensor quantizer parameters (min, scale).
+
+    ``bits`` is a traced f32 scalar; ``levels = 2^bits - 1``.
+    Returns ``(tmin, scale)`` such that ``q = round((t - tmin)/scale)``
+    lies in ``[0, levels]``.
+    """
+    levels = jnp.exp2(bits) - 1.0
+    tmin = jnp.min(t)
+    tmax = jnp.max(t)
+    scale = jnp.maximum(tmax - tmin, _EPS) / levels
+    return tmin, scale
+
+
+def quant_dequant(t: jax.Array, bits: jax.Array) -> jax.Array:
+    """Quantize-dequantize round trip (no STE; raw forward math)."""
+    tmin, scale = qparams(t, bits)
+    q = jnp.round((t - tmin) / scale)
+    return q * scale + tmin
+
+
+def fake_quant(t: jax.Array, bits: jax.Array) -> jax.Array:
+    """Quantize-dequantize with straight-through gradient.
+
+    Forward: ``quant_dequant(t, bits)``. Backward: identity w.r.t. ``t``
+    (and no gradient into ``bits``).
+    """
+    dq = quant_dequant(t, jax.lax.stop_gradient(bits))
+    return t + jax.lax.stop_gradient(dq - t)

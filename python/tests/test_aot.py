@@ -1,0 +1,73 @@
+"""AOT artifact tests: HLO text lowering and manifest integrity."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_lowering_produces_hlo_text():
+    hlos = aot.lower_all(batch=4)
+    assert set(hlos) == {"train_step", "eval_step"}
+    for name, text in hlos.items():
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # parameters are declared in the entry computation
+        assert "parameter(0)" in text, name
+
+
+def test_manifest_consistent_with_model():
+    m = aot.manifest(batch=4)
+    assert m["num_layers"] == model.NUM_LAYERS
+    assert m["param_size"] == model.PARAM_SIZE
+    assert len(m["params"]) == len(model.PARAM_SPEC)
+    # round-trips through json
+    m2 = json.loads(json.dumps(m))
+    assert m2 == m
+    # offsets contiguous
+    off = 0
+    for p in m["params"]:
+        assert p["offset"] == off
+        off += int(np.prod(p["shape"]))
+    assert off == m["param_size"]
+
+
+def test_end_to_end_artifact_write(tmp_path):
+    import subprocess
+    import sys
+
+    out = tmp_path / "artifacts"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--batch", "4"],
+        capture_output=True,
+        text=True,
+        cwd=str(aot.__file__).rsplit("/compile/", 1)[0],
+    )
+    assert r.returncode == 0, r.stderr
+    assert (out / "train_step.hlo.txt").exists()
+    assert (out / "eval_step.hlo.txt").exists()
+    meta = json.loads((out / "model_meta.json").read_text())
+    raw = (out / "params_init.bin").read_bytes()
+    assert len(raw) == meta["param_size"] * 4
+    params = np.frombuffer(raw, dtype="<f4")
+    assert np.isfinite(params).all()
+    # init params loaded from disk match in-process init
+    np.testing.assert_array_equal(params, np.asarray(model.init_params(0)))
+
+
+def test_lowered_train_step_runs():
+    """Compile the lowered train step and take one step (smoke)."""
+    import jax
+
+    batch = 4
+    p = model.init_params(0)
+    x = jnp.zeros((batch, model.IMG, model.IMG, model.IN_CH), jnp.float32)
+    y = jnp.zeros((batch,), jnp.int32)
+    q = jnp.full((model.NUM_LAYERS,), 8.0, jnp.float32)
+    lowered = jax.jit(model.train_step).lower(p, x, y, q, q, jnp.float32(0.01))
+    compiled = lowered.compile()
+    new_p, loss = compiled(p, x, y, q, q, jnp.float32(0.01))
+    assert new_p.shape == p.shape
+    assert np.isfinite(float(loss))

@@ -1,0 +1,93 @@
+"""Pallas depthwise fake-quant conv vs the pure-jnp oracle.
+
+Same contract as test_kernel.py: hypothesis sweeps over shapes, strides
+and bit-widths; directed edge cases around channel-block boundaries and
+degenerate tensors.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qdwconv import _qdwconv_impl, qdwconv
+from compile.kernels.ref import ref_qdwconv
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, lo=-3.0, hi=3.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+def assert_matches_ref(x, w, qa, qw, stride=1, **kw):
+    got = _qdwconv_impl(x, w, jnp.float32(qa), jnp.float32(qw), stride=stride, **kw)
+    want = ref_qdwconv(x, w, jnp.float32(qa), jnp.float32(qw), stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(3, 12),
+    c=st.integers(1, 20),
+    r=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    qa=st.integers(2, 8),
+    qw=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_stride_bit_sweep(b, h, c, r, stride, qa, qw, seed):
+    x = _rand(seed, (b, h, h, c))
+    w = _rand(seed + 1, (r, r, c))
+    assert_matches_ref(x, w, qa, qw, stride=stride, block_c=8)
+
+
+@pytest.mark.parametrize("c", [1, 7, 8, 9, 128, 130])
+def test_channel_block_boundaries(c):
+    """Padding/slicing around the BLOCK_C lane edge must be exact."""
+    x = _rand(11, (2, 6, 6, c))
+    w = _rand(12, (3, 3, c))
+    assert_matches_ref(x, w, 4, 4, block_c=8)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_odd_spatial_with_stride(stride):
+    """SAME padding on odd H/W (the 112->56 MobileNet transitions)."""
+    x = _rand(13, (1, 7, 9, 4))
+    w = _rand(14, (3, 3, 4))
+    assert_matches_ref(x, w, 6, 3, stride=stride)
+
+
+def test_constant_tensor_no_nan():
+    x = jnp.ones((1, 5, 5, 3), jnp.float32)
+    w = jnp.zeros((3, 3, 3), jnp.float32)
+    out = _qdwconv_impl(x, w, jnp.float32(2), jnp.float32(2))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_ste_gradients_flow_and_bits_get_none():
+    x = _rand(21, (1, 6, 6, 4))
+    w = _rand(22, (3, 3, 4))
+
+    def loss(xx, ww, qa, qw):
+        return jnp.sum(qdwconv(xx, ww, qa, qw, 1) ** 2)
+
+    gx, gw, gqa, gqw = jax.grad(loss, argnums=(0, 1, 2, 3))(
+        x, w, jnp.float32(4), jnp.float32(4)
+    )
+    assert np.abs(np.asarray(gx)).sum() > 0, "no gradient reached x"
+    assert np.abs(np.asarray(gw)).sum() > 0, "no gradient reached w"
+    np.testing.assert_allclose(np.asarray(gqa), 0.0)
+    np.testing.assert_allclose(np.asarray(gqw), 0.0)
+
+
+def test_quantization_coarsens_output():
+    """2-bit weights must change the output vs 8-bit (sanity that the
+    quantizer is actually in the compute path)."""
+    x = _rand(31, (1, 8, 8, 8))
+    w = _rand(32, (3, 3, 8))
+    o8 = _qdwconv_impl(x, w, jnp.float32(8), jnp.float32(8))
+    o2 = _qdwconv_impl(x, w, jnp.float32(8), jnp.float32(2))
+    assert float(jnp.abs(o8 - o2).max()) > 1e-3

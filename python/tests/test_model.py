@@ -1,0 +1,121 @@
+"""L2 model tests: shapes, genome alignment, trainability, quant effect."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 8
+
+
+def _batch(seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (B, model.IMG, model.IMG, model.IN_CH), jnp.float32)
+    y = jax.random.randint(ky, (B,), 0, model.NUM_CLASSES, jnp.int32)
+    return x, y
+
+
+def _q(bits):
+    return jnp.full((model.NUM_LAYERS,), float(bits), jnp.float32)
+
+
+def test_arch_matches_paper_genome():
+    assert model.NUM_LAYERS == 28
+    assert 2 * model.NUM_LAYERS == 56  # paper: 56-integer string
+    kinds = [k for k, *_ in model.ARCH]
+    assert kinds[0] == "conv"
+    assert kinds[-1] == "fc"
+    assert kinds[1:-1:2] == ["dw"] * 13
+    assert kinds[2:-1:2] == ["pw"] * 13
+
+
+def test_param_vector_layout():
+    spec = model.PARAM_SPEC
+    # offsets are contiguous and ordered
+    off = 0
+    for name, shape, o in spec:
+        assert o == off, name
+        size = int(np.prod(shape))
+        off += size
+    assert off == model.PARAM_SIZE
+    assert model.PARAM_SIZE < 600_000  # CPU-trainable (DESIGN.md §3)
+
+
+def test_forward_shapes_and_finiteness():
+    p = model.init_params(0)
+    x, _ = _batch()
+    logits = model.forward(p, x, _q(8), _q(8))
+    assert logits.shape == (B, model.NUM_CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_loss_decreases_when_overfitting_one_batch():
+    p = model.init_params(0)
+    x, y = _batch(1)
+    qa, qw = _q(8), _q(8)
+    step = jax.jit(model.train_step)
+    first = None
+    loss = None
+    for i in range(30):
+        p, loss = step(p, x, y, qa, qw, jnp.float32(0.05))
+        if i == 0:
+            first = float(loss)
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_eval_step_counts():
+    p = model.init_params(0)
+    x, y = _batch(2)
+    correct, loss = model.eval_step(p, x, y, _q(8), _q(8))
+    assert 0.0 <= float(correct) <= B
+    assert float(correct) == int(float(correct))
+    assert np.isfinite(float(loss))
+
+
+def test_low_bitwidth_hurts_loss():
+    """2-bit everywhere must be substantially worse than 8-bit on a
+    trained-ish model (train briefly at 8 bit, compare eval losses)."""
+    p = model.init_params(0)
+    x, y = _batch(3)
+    step = jax.jit(model.train_step)
+    for _ in range(15):
+        p, _ = step(p, x, y, _q(8), _q(8), jnp.float32(0.05))
+    _, l8 = model.eval_step(p, x, y, _q(8), _q(8))
+    _, l2 = model.eval_step(p, x, y, _q(2), _q(2))
+    assert float(l2) > float(l8), (float(l2), float(l8))
+
+
+def test_per_layer_bitwidths_are_independent():
+    """Changing one layer's q changes the output; others' stay same."""
+    p = model.init_params(1)
+    x, _ = _batch(4)
+    base = model.forward(p, x, _q(8), _q(8))
+    qa = np.full(model.NUM_LAYERS, 8.0, np.float32)
+    qa[5] = 2.0
+    out = model.forward(p, x, jnp.asarray(qa), _q(8))
+    assert not np.allclose(np.asarray(base), np.asarray(out))
+
+
+def test_pallas_and_ref_paths_agree(monkeypatch):
+    """The USE_PALLAS=0 ablation path computes the same function."""
+    p = model.init_params(2)
+    x, _ = _batch(5)
+    qa, qw = _q(5), _q(3)
+    out_pallas = model.forward(p, x, qa, qw)
+
+    monkeypatch.setattr(model, "USE_PALLAS", False)
+    out_ref = model.forward(p, x, qa, qw)
+    np.testing.assert_allclose(
+        np.asarray(out_pallas), np.asarray(out_ref), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_init_deterministic(seed):
+    a = model.init_params(seed)
+    b = model.init_params(seed)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,77 @@
+"""Properties of the fake-quantization primitive."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import fake_quant, qparams, quant_dequant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(seed, shape, lo=-4.0, hi=4.0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32, lo, hi)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_levels_bound(bits, seed):
+    """quant_dequant output takes at most 2^bits distinct values."""
+    t = _rand(seed, (64,))
+    dq = np.asarray(quant_dequant(t, jnp.float32(bits)))
+    distinct = len(np.unique(np.round(dq, 5)))
+    assert distinct <= 2**bits
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 12), seed=st.integers(0, 1000))
+def test_error_bounded_by_half_step(bits, seed):
+    t = _rand(seed, (128,))
+    tmin, scale = qparams(t, jnp.float32(bits))
+    dq = quant_dequant(t, jnp.float32(bits))
+    err = np.abs(np.asarray(dq - t))
+    assert err.max() <= float(scale) / 2 + 1e-6
+    assert float(tmin) <= float(t.min()) + 1e-6
+
+
+def test_range_endpoints_exact():
+    """min and max of the tensor are representable exactly."""
+    t = jnp.array([-1.5, 0.0, 2.5], jnp.float32)
+    dq = np.asarray(quant_dequant(t, jnp.float32(2)))
+    assert dq[0] == -1.5
+    assert dq[2] == 2.5
+
+
+def test_monotone_in_bits():
+    t = _rand(42, (256,))
+    errs = []
+    for b in range(2, 9):
+        dq = quant_dequant(t, jnp.float32(b))
+        errs.append(float(jnp.mean((dq - t) ** 2)))
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a + 1e-9, errs
+
+
+def test_ste_gradient_is_identity():
+    t = _rand(1, (32,))
+
+    def f(t):
+        return jnp.sum(fake_quant(t, jnp.float32(3)) * 2.0)
+
+    g = np.asarray(jax.grad(f)(t))
+    np.testing.assert_allclose(g, 2.0 * np.ones(32), rtol=1e-6)
+
+
+def test_constant_tensor_stable():
+    t = jnp.full((16,), 3.25, jnp.float32)
+    dq = np.asarray(quant_dequant(t, jnp.float32(4)))
+    np.testing.assert_allclose(dq, 3.25, atol=1e-5)
+
+
+def test_idempotent():
+    """Quantizing an already-quantized tensor is (near) identity."""
+    t = _rand(7, (64,))
+    once = quant_dequant(t, jnp.float32(4))
+    twice = quant_dequant(once, jnp.float32(4))
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-5)

@@ -1,0 +1,180 @@
+//! Accelerator architecture model (the "text specification" consumed by
+//! the mapping engine, mirroring Timeloop's arch YAML + Accelergy energy
+//! tables).
+//!
+//! An architecture is a linear hierarchy of storage levels, innermost
+//! (closest to the MACs) first, DRAM last. Each level may fan out
+//! spatially to the level below it (e.g. Eyeriss' global buffer fans out
+//! to the 168-PE array), may keep or bypass each of the three data
+//! spaces, and carries Accelergy-style per-access energies.
+
+pub mod parser;
+pub mod presets;
+
+use crate::workload::{Dim, Tensor, DIMS};
+
+/// Buffer capacity: one shared pool or per-tensor partitions
+/// (Eyeriss PEs have separate weight/ifmap/psum scratchpads).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Capacity {
+    /// Unbounded (off-chip DRAM).
+    Unbounded,
+    /// One shared pool of `words` memory words for all kept tensors.
+    Shared(u64),
+    /// Separate word budgets per tensor `[Weights, Inputs, Outputs]`.
+    PerTensor([u64; 3]),
+}
+
+/// One storage level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Level {
+    pub name: String,
+    pub capacity: Capacity,
+    /// Per-access energy in pJ for `[Weights, Inputs, Outputs]` accesses
+    /// (word-granular; reads and writes priced identically, as in the
+    /// Accelergy tables the paper uses at 45 nm).
+    pub access_energy_pj: [f64; 3],
+    /// Words per cycle this level can source/sink (per instance).
+    pub bandwidth_words: f64,
+    /// Spatial fanout *below* this level (number of child instances fed
+    /// by one instance of this level). 1 = no fanout.
+    pub fanout: u64,
+    /// Dims allowed in the spatial mapping at this level. Encodes the
+    /// dataflow style constraint (e.g. Eyeriss row stationary restricts
+    /// the array dims). Ignored when `fanout == 1`.
+    pub spatial_dims: Vec<Dim>,
+    /// Whether the network below this level can multicast one read to
+    /// several children (and reduce partial sums on the way up).
+    pub multicast: bool,
+    /// Which tensors this level stores (`false` = bypass).
+    pub keeps: [bool; 3],
+}
+
+impl Level {
+    pub fn keeps_tensor(&self, t: Tensor) -> bool {
+        self.keeps[t.index()]
+    }
+    pub fn capacity_for(&self, t: Tensor) -> Option<u64> {
+        match &self.capacity {
+            Capacity::Unbounded => None,
+            Capacity::Shared(w) => Some(*w),
+            Capacity::PerTensor(ws) => Some(ws[t.index()]),
+        }
+    }
+}
+
+/// A full accelerator specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    pub name: String,
+    /// Memory word size in bits (paper: 16 for both accelerators).
+    pub word_bits: u32,
+    /// Energy of one MAC operation in pJ (kept constant across
+    /// bit-widths: the paper leaves compute units untouched).
+    pub mac_energy_pj: f64,
+    /// Storage hierarchy, innermost first, DRAM last.
+    pub levels: Vec<Level>,
+    /// Whether the mapping engine applies bit-packing (the paper's
+    /// Timeloop extension; `false` reproduces vanilla Timeloop).
+    pub bit_packing: bool,
+}
+
+impl Arch {
+    /// Total PE (MAC-lane) count = product of all fanouts.
+    pub fn total_pes(&self) -> u64 {
+        self.levels.iter().map(|l| l.fanout).product()
+    }
+
+    /// Index of the innermost level at/above `from` that keeps `t`
+    /// (DRAM keeps everything, so this always resolves).
+    pub fn next_keeper(&self, from: usize, t: Tensor) -> usize {
+        for (i, l) in self.levels.iter().enumerate().skip(from) {
+            if l.keeps_tensor(t) {
+                return i;
+            }
+        }
+        self.levels.len() - 1
+    }
+
+    /// Validate structural invariants of a spec.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.levels.len() < 2 {
+            return Err("need at least one on-chip level plus DRAM".into());
+        }
+        let top = self.levels.last().unwrap();
+        if top.capacity != Capacity::Unbounded {
+            return Err("top level (DRAM) must be unbounded".into());
+        }
+        if !top.keeps.iter().all(|&k| k) {
+            return Err("top level must keep all tensors".into());
+        }
+        if self.word_bits == 0 || self.word_bits > 64 {
+            return Err(format!("bad word_bits {}", self.word_bits));
+        }
+        for l in &self.levels {
+            if l.fanout == 0 {
+                return Err(format!("level {} has zero fanout", l.name));
+            }
+            if l.fanout > 1 && l.spatial_dims.is_empty() {
+                return Err(format!("level {} fans out but allows no spatial dims", l.name));
+            }
+            for d in &l.spatial_dims {
+                if !DIMS.contains(d) {
+                    return Err("bad spatial dim".into());
+                }
+            }
+        }
+        if !self.levels.iter().any(|l| l.keeps[Tensor::Weights.index()]) {
+            return Err("no level keeps weights".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets::{eyeriss, simba};
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        eyeriss().validate().unwrap();
+        simba().validate().unwrap();
+    }
+
+    #[test]
+    fn pe_counts_match_paper() {
+        // paper: "Eyeriss consists of 168 16-bit PEs, Simba employs 256"
+        assert_eq!(eyeriss().total_pes(), 168);
+        assert_eq!(simba().total_pes(), 256);
+        assert_eq!(eyeriss().word_bits, 16);
+        assert_eq!(simba().word_bits, 16);
+    }
+
+    #[test]
+    fn next_keeper_resolves_bypass() {
+        let e = eyeriss();
+        // Eyeriss GLB bypasses weights: keeper above PE spad is DRAM
+        let pe = 0;
+        let glb = 1;
+        assert!(e.levels[pe].keeps_tensor(Tensor::Weights));
+        assert!(!e.levels[glb].keeps_tensor(Tensor::Weights));
+        assert_eq!(e.next_keeper(glb, Tensor::Weights), e.levels.len() - 1);
+        assert_eq!(e.next_keeper(glb, Tensor::Inputs), glb);
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut a = eyeriss();
+        a.levels.last_mut().unwrap().capacity = Capacity::Shared(10);
+        assert!(a.validate().is_err());
+
+        let mut b = simba();
+        b.levels[0].fanout = 0;
+        assert!(b.validate().is_err());
+
+        let mut c = eyeriss();
+        c.word_bits = 0;
+        assert!(c.validate().is_err());
+    }
+}

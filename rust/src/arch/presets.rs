@@ -1,0 +1,203 @@
+//! Built-in accelerator presets: Eyeriss and Simba, mirroring the
+//! Timeloop/Accelergy 45 nm characterizations the paper evaluates on.
+//!
+//! Geometry follows the published designs (Eyeriss ISSCC'17: 168-PE
+//! 14x12 array, 108 KB global buffer, per-PE weight/ifmap/psum
+//! scratchpads, row-stationary dataflow with weights bypassing the GLB;
+//! Simba MICRO'19: 16 PEs x 16 distributed MAC lanes, shared global
+//! buffer, per-PE weight/input/accumulation buffers). Energy-per-access
+//! values are 45 nm Accelergy-style orders of magnitude; absolute pJ are
+//! not the authors' tables, ratios across levels are (DESIGN.md §3).
+
+use super::{Arch, Capacity, Level};
+use crate::workload::Dim;
+
+/// Eyeriss-like: DRAM -> 108 KB global buffer (ifmaps + psums only,
+/// weights bypass) -> 168 PEs, each with separate weight (224 w),
+/// ifmap (12 w), psum (24 w) scratchpads.
+///
+/// The row-stationary dataflow is encoded as the array's spatial-dim
+/// constraint {R, P, C, K}: filter rows and output rows spread across
+/// the physical array (plus channel folding), never the full loop nest —
+/// this is why Eyeriss gains fewer extra mappings than Simba in Table I.
+pub fn eyeriss() -> Arch {
+    Arch {
+        name: "eyeriss".into(),
+        word_bits: 16,
+        mac_energy_pj: 2.2,
+        bit_packing: true,
+        levels: vec![
+            Level {
+                name: "pe_spad".into(),
+                capacity: Capacity::PerTensor([224, 12, 24]),
+                access_energy_pj: [0.96, 0.48, 0.72],
+                bandwidth_words: 2.0,
+                fanout: 1,
+                spatial_dims: vec![],
+                multicast: false,
+                keeps: [true, true, true],
+            },
+            Level {
+                name: "shared_glb".into(),
+                // 108 KB @ 16-bit words = 55,296 words, shared by
+                // ifmaps + psums (weights bypass to DRAM).
+                capacity: Capacity::Shared(55_296),
+                access_energy_pj: [6.0, 6.0, 6.0],
+                bandwidth_words: 16.0,
+                fanout: 168,
+                spatial_dims: vec![Dim::R, Dim::P, Dim::C, Dim::K],
+                multicast: true,
+                keeps: [false, true, true],
+            },
+            Level {
+                name: "dram".into(),
+                capacity: Capacity::Unbounded,
+                access_energy_pj: [200.0, 200.0, 200.0],
+                bandwidth_words: 4.0,
+                fanout: 1,
+                spatial_dims: vec![],
+                multicast: false,
+                keeps: [true, true, true],
+            },
+        ],
+    }
+}
+
+/// Simba-like: DRAM -> 64 KB global buffer -> 16 PEs (each with weight /
+/// input / accumulation buffers) -> 16 distributed MAC lanes per PE
+/// (weight-stationary-ish, much freer spatial mapping than Eyeriss).
+pub fn simba() -> Arch {
+    Arch {
+        name: "simba".into(),
+        word_bits: 16,
+        mac_energy_pj: 1.8,
+        bit_packing: true,
+        levels: vec![
+            Level {
+                // per-lane operand registers
+                name: "lane_reg".into(),
+                capacity: Capacity::PerTensor([8, 8, 8]),
+                access_energy_pj: [0.12, 0.12, 0.12],
+                bandwidth_words: 2.0,
+                fanout: 1,
+                spatial_dims: vec![],
+                multicast: false,
+                keeps: [true, true, true],
+            },
+            Level {
+                // per-PE buffers: weights 4 KB, inputs 2 KB, psums 1 KB
+                name: "pe_buf".into(),
+                capacity: Capacity::PerTensor([2048, 1024, 512]),
+                access_energy_pj: [1.2, 0.9, 1.1],
+                bandwidth_words: 4.0,
+                fanout: 16, // 16 MAC lanes below each PE
+                spatial_dims: vec![Dim::K, Dim::C],
+                multicast: true,
+                keeps: [true, true, true],
+            },
+            Level {
+                // 64 KB global buffer @ 16-bit words; weights bypass (they
+                // stream DRAM -> PE weight buffers, as in Simba).
+                name: "global_buf".into(),
+                capacity: Capacity::Shared(32_768),
+                access_energy_pj: [4.0, 4.0, 4.0],
+                bandwidth_words: 16.0,
+                fanout: 16, // 16 PEs
+                spatial_dims: vec![Dim::K, Dim::C, Dim::P, Dim::Q, Dim::R, Dim::S, Dim::N],
+                multicast: true,
+                keeps: [false, true, true],
+            },
+            Level {
+                name: "dram".into(),
+                capacity: Capacity::Unbounded,
+                access_energy_pj: [200.0, 200.0, 200.0],
+                bandwidth_words: 4.0,
+                fanout: 1,
+                spatial_dims: vec![],
+                multicast: false,
+                keeps: [true, true, true],
+            },
+        ],
+    }
+}
+
+/// A deliberately tiny architecture for unit tests and exhaustive-search
+/// sanity checks: DRAM -> 256-word buffer -> 4 PEs with 16-word spads.
+pub fn toy() -> Arch {
+    Arch {
+        name: "toy".into(),
+        word_bits: 16,
+        mac_energy_pj: 1.0,
+        bit_packing: true,
+        levels: vec![
+            Level {
+                name: "spad".into(),
+                capacity: Capacity::Shared(16),
+                access_energy_pj: [0.5, 0.5, 0.5],
+                bandwidth_words: 2.0,
+                fanout: 1,
+                spatial_dims: vec![],
+                multicast: false,
+                keeps: [true, true, true],
+            },
+            Level {
+                name: "buf".into(),
+                capacity: Capacity::Shared(256),
+                access_energy_pj: [5.0, 5.0, 5.0],
+                bandwidth_words: 4.0,
+                fanout: 4,
+                spatial_dims: vec![Dim::K, Dim::C, Dim::P],
+                multicast: true,
+                keeps: [true, true, true],
+            },
+            Level {
+                name: "dram".into(),
+                capacity: Capacity::Unbounded,
+                access_energy_pj: [100.0, 100.0, 100.0],
+                bandwidth_words: 2.0,
+                fanout: 1,
+                spatial_dims: vec![],
+                multicast: false,
+                keeps: [true, true, true],
+            },
+        ],
+    }
+}
+
+/// Look up a preset by name.
+pub fn by_name(name: &str) -> Option<Arch> {
+    match name {
+        "eyeriss" => Some(eyeriss()),
+        "simba" => Some(simba()),
+        "toy" => Some(toy()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("eyeriss").unwrap().name, "eyeriss");
+        assert_eq!(by_name("simba").unwrap().name, "simba");
+        assert!(by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn toy_validates() {
+        toy().validate().unwrap();
+        assert_eq!(toy().total_pes(), 4);
+    }
+
+    #[test]
+    fn energy_hierarchy_is_monotone() {
+        // sanity: accessing DRAM must dominate on-chip accesses
+        for a in [eyeriss(), simba()] {
+            let inner = a.levels[0].access_energy_pj[0];
+            let outer = a.levels.last().unwrap().access_energy_pj[0];
+            assert!(outer > 20.0 * inner, "{}", a.name);
+        }
+    }
+}

@@ -1,0 +1,601 @@
+//! One driver per paper artifact (DESIGN.md §5 experiment index).
+//!
+//! | fn                  | paper artifact                      |
+//! |---------------------|-------------------------------------|
+//! | `fig1_correlation`  | Fig. 1(a,b) size vs words / EDP     |
+//! | `table1_mappings`   | Table I mapping counts + min EDP    |
+//! | `fig3_ablations`    | Fig. 3(a,b,c) NSGA-II ablations     |
+//! | `fig4_breakdown`    | Fig. 4 energy breakdown             |
+//! | `fig5_convergence`  | Fig. 5 Pareto front per generation  |
+//! | `fig6_tradeoff`     | Fig. 6 strategy comparison          |
+//! | `table2_summary`    | Table II Δ memory-energy / Δ acc    |
+
+use super::RunConfig;
+use crate::accuracy::{AccuracyModel, InitModel, ProxyAccuracy, ProxyParams};
+use crate::arch::presets;
+use crate::arch::Arch;
+use crate::baselines::{naive_search, proposed_search, proposed_search3, uniform_sweep, Candidate};
+use crate::eval::{evaluate_network, NetworkEval};
+use crate::mapper::cache::MapperCache;
+use crate::mapping::mapspace::MapSpace;
+use crate::nsga::{pareto_front, NsgaConfig};
+use crate::quant::{LayerQuant, QuantConfig, QMAX, QMIN};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workload::models;
+
+// ---------------------------------------------------------------- fig 1
+
+/// One random quantization configuration's three Fig. 1 metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig1Point {
+    pub model_size_bits: u64,
+    pub weight_words: u64,
+    pub edp: f64,
+}
+
+pub struct Fig1Result {
+    pub points: Vec<Fig1Point>,
+    pub uniform8: Fig1Point,
+    /// Pearson r: size vs words, size vs EDP.
+    pub r_size_words: f64,
+    pub r_size_edp: f64,
+}
+
+/// Fig. 1: `n` random mixed configurations of MobileNetV1 on Eyeriss;
+/// correlation of naïve model size against packed word count and EDP.
+pub fn fig1_correlation(n: usize, rc: &RunConfig) -> Fig1Result {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    let mut rng = Rng::new(rc.seed ^ 0xF161);
+
+    let mut genomes: Vec<QuantConfig> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut qc = QuantConfig::uniform(layers.len(), 8);
+        for l in qc.layers.iter_mut() {
+            l.0 = QMIN + rng.below((QMAX - QMIN + 1) as u64) as u8;
+            l.1 = QMIN + rng.below((QMAX - QMIN + 1) as u64) as u8;
+        }
+        genomes.push(qc);
+    }
+
+    let evals = parallel_map(&genomes, rc.threads, |qc| {
+        evaluate_network(&arch, &layers, qc, &cache, &rc.mapper)
+    });
+    let points: Vec<Fig1Point> = evals
+        .into_iter()
+        .flatten()
+        .map(|e| Fig1Point {
+            model_size_bits: e.model_size_bits,
+            weight_words: e.weight_words,
+            edp: e.edp,
+        })
+        .collect();
+
+    let u8e = evaluate_network(
+        &arch,
+        &layers,
+        &QuantConfig::uniform(layers.len(), 8),
+        &cache,
+        &rc.mapper,
+    )
+    .expect("uniform-8 must map");
+
+    let size: Vec<f64> = points.iter().map(|p| p.model_size_bits as f64).collect();
+    let words: Vec<f64> = points.iter().map(|p| p.weight_words as f64).collect();
+    let edp: Vec<f64> = points.iter().map(|p| p.edp).collect();
+    Fig1Result {
+        r_size_words: stats::pearson(&size, &words),
+        r_size_edp: stats::pearson(&size, &edp),
+        points,
+        uniform8: Fig1Point {
+            model_size_bits: u8e.model_size_bits,
+            weight_words: u8e.weight_words,
+            edp: u8e.edp,
+        },
+    }
+}
+
+// --------------------------------------------------------------- table 1
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub setting: (u8, u8, u8), // (qa, qw, qo)
+    pub arch: String,
+    pub valid_mappings: u64,
+    pub truncated: bool,
+    pub min_edp: f64,
+}
+
+/// Table I: exhaustively enumerate valid mappings of MobileNet conv
+/// layer #2 (the 3x3 depthwise over 112x112) for the paper's six
+/// bit-width settings on both accelerators; report count + min EDP.
+pub fn table1_mappings(limit: u64) -> Vec<Table1Row> {
+    let layer = &models::mobilenet_v1()[1]; // dw1: the paper's "conv layer #2"
+    let settings: [(u8, u8, u8); 6] = [
+        (16, 16, 16),
+        (8, 8, 8),
+        (8, 4, 8),
+        (8, 2, 8),
+        (4, 4, 4),
+        (2, 2, 2),
+    ];
+    let mut rows = Vec::new();
+    for arch in [presets::eyeriss(), presets::simba()] {
+        let space = MapSpace::of(&arch);
+        for &(qa, qw, qo) in &settings {
+            let q = LayerQuant { qa, qw, qo };
+            let mut min_edp = f64::INFINITY;
+            let st = space.enumerate_valid(&arch, layer, &q, limit, |m| {
+                let nest = crate::nest::analyze(&arch, layer, m);
+                let est = crate::energy::estimate(&arch, layer, &q, &nest);
+                if est.edp() < min_edp {
+                    min_edp = est.edp();
+                }
+            });
+            rows.push(Table1Row {
+                setting: (qa, qw, qo),
+                arch: arch.name.clone(),
+                valid_mappings: st.valid,
+                truncated: st.truncated,
+                min_edp,
+            });
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------- fig 4
+
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub bits: u8,
+    /// `[spads, buffers, dram, mac]` energy in pJ.
+    pub components_pj: [f64; 4],
+    pub total_pj: f64,
+}
+
+/// Fig. 4: energy breakdown of uniformly quantized MobileNetV1 on
+/// Eyeriss for x in {16, 8, 6, 5, 4, 3, 2}.
+pub fn fig4_breakdown(rc: &RunConfig) -> Vec<Fig4Row> {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    [16u8, 8, 6, 5, 4, 3, 2]
+        .iter()
+        .filter_map(|&bits| {
+            let qc = QuantConfig::uniform(layers.len(), bits);
+            let e = evaluate_network(&arch, &layers, &qc, &cache, &rc.mapper)?;
+            Some(Fig4Row {
+                bits,
+                components_pj: [
+                    e.energy_breakdown_pj[0],
+                    e.energy_breakdown_pj[1],
+                    e.energy_breakdown_pj[2],
+                    e.mac_energy_pj,
+                ],
+                total_pj: e.energy_pj,
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- fig 5
+
+pub struct Fig5Result {
+    /// (generation, pareto front of (EDP, error)) snapshots.
+    pub fronts: Vec<(usize, Vec<Vec<f64>>)>,
+    pub initial_uniform: Vec<Vec<f64>>,
+}
+
+/// Fig. 5: Pareto-front advance of the proposed NSGA-II search across
+/// generations (MobileNetV1 on Eyeriss, e=10, |Q|=16 in the paper).
+pub fn fig5_convergence(rc: &RunConfig, snapshot_gens: &[usize]) -> Fig5Result {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+
+    let mut fronts = Vec::new();
+    let mut initial = Vec::new();
+    {
+        let snapshot_gens = snapshot_gens.to_vec();
+        let fronts_ref = &mut fronts;
+        let initial_ref = &mut initial;
+        proposed_search(
+            &arch,
+            &layers,
+            &mut acc,
+            &cache,
+            &rc.mapper,
+            &rc.nsga,
+            |gen, pop| {
+                let pts: Vec<Vec<f64>> =
+                    pop.iter().map(|i| i.objectives.clone()).collect();
+                if gen == 0 {
+                    *initial_ref = pareto_front(&pts);
+                }
+                if snapshot_gens.contains(&gen) {
+                    fronts_ref.push((gen, pareto_front(&pts)));
+                }
+            },
+        );
+    }
+    Fig5Result {
+        fronts,
+        initial_uniform: initial,
+    }
+}
+
+// ---------------------------------------------------------------- fig 3
+
+pub struct Fig3Result {
+    /// (label, front of (EDP, error)) per ablation arm.
+    pub arms: Vec<(String, Vec<Vec<f64>>)>,
+}
+
+/// Fig. 3a: FP32-init (e=10) vs QAT-8-init (e=5) fine-tuning.
+pub fn fig3a_init_model(rc: &RunConfig) -> Fig3Result {
+    let arms = [
+        ("FP32 init, e=10", InitModel::Fp32, 10u32),
+        ("QAT-8 init, e=5", InitModel::Qat8, 5u32),
+    ];
+    ablation_arms(rc, arms.iter().map(|&(label, init, epochs)| {
+        (
+            label.to_string(),
+            ProxyParams {
+                init,
+                epochs,
+                ..ProxyParams::default()
+            },
+            rc.nsga,
+        )
+    }))
+}
+
+/// Fig. 3b: offspring size |Q| in {8, 16, 32} at a fixed evaluation
+/// budget (|Q| x generations = const).
+pub fn fig3b_offspring(rc: &RunConfig) -> Fig3Result {
+    let budget = rc.nsga.offspring * rc.nsga.generations;
+    let arms = [8usize, 16, 32].iter().map(|&q| {
+        let mut cfg = rc.nsga;
+        cfg.offspring = q;
+        cfg.generations = (budget / q).max(1);
+        (
+            format!("|Q|={q} ({} gens)", cfg.generations),
+            ProxyParams::default(),
+            cfg,
+        )
+    });
+    ablation_arms(rc, arms)
+}
+
+/// Fig. 3c: epochs e in {10, 20}; higher e costs generations
+/// (paper: 28 gens at e=10 vs 14 at e=20) but recovers accuracy better.
+pub fn fig3c_epochs(rc: &RunConfig) -> Fig3Result {
+    let arms = [(10u32, 1.0f64), (20, 0.5)].iter().map(|&(e, gen_scale)| {
+        let mut cfg = rc.nsga;
+        cfg.generations = ((cfg.generations as f64 * gen_scale) as usize).max(1);
+        (
+            format!("e={e} ({} gens)", cfg.generations),
+            ProxyParams {
+                epochs: e,
+                ..ProxyParams::default()
+            },
+            cfg,
+        )
+    });
+    ablation_arms(rc, arms)
+}
+
+fn ablation_arms(
+    rc: &RunConfig,
+    arms: impl Iterator<Item = (String, ProxyParams, NsgaConfig)>,
+) -> Fig3Result {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    let mut out = Vec::new();
+    for (label, params, nsga_cfg) in arms {
+        let mut acc = ProxyAccuracy::new(&layers, params);
+        let cands = proposed_search(
+            &arch,
+            &layers,
+            &mut acc,
+            &cache,
+            &rc.mapper,
+            &nsga_cfg,
+            |_, _| {},
+        );
+        let pts: Vec<Vec<f64>> = cands
+            .iter()
+            .map(|c| vec![c.hw.edp, 1.0 - c.accuracy])
+            .collect();
+        out.push((label, pareto_front(&pts)));
+    }
+    Fig3Result { arms: out }
+}
+
+// ---------------------------------------------------------------- fig 6
+
+pub struct Fig6Result {
+    pub uniform: Vec<Candidate>,
+    pub naive: Vec<Candidate>,
+    pub proposed: Vec<Candidate>,
+    /// "Proposed for Simba": optimized against Simba, evaluated on the
+    /// target (Eyeriss) — the paper's unseen-accelerator arm.
+    pub cross: Vec<Candidate>,
+    /// uniform-8 reference for relative axes.
+    pub reference: (f64, f64, f64), // (edp, mem_energy, accuracy)
+}
+
+/// Fig. 6: accuracy-vs-EDP trade-off on Eyeriss running MobileNetV1,
+/// comparing Proposed / Uniform / Naïve / Proposed-for-Simba.
+pub fn fig6_tradeoff(rc: &RunConfig) -> Fig6Result {
+    let target = presets::eyeriss();
+    let other = presets::simba();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    let cache_other = MapperCache::new();
+
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+    let uniform = uniform_sweep(&target, &layers, &mut acc, &cache, &rc.mapper, false);
+    let naive = naive_search(&target, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga);
+    let proposed = proposed_search(
+        &target,
+        &layers,
+        &mut acc,
+        &cache,
+        &rc.mapper,
+        &rc.nsga,
+        |_, _| {},
+    );
+    // search against Simba, then re-price winners on Eyeriss
+    let cross_on_simba = proposed_search(
+        &other,
+        &layers,
+        &mut acc,
+        &cache_other,
+        &rc.mapper,
+        &rc.nsga,
+        |_, _| {},
+    );
+    let cross: Vec<Candidate> = cross_on_simba
+        .into_iter()
+        .filter_map(|c| {
+            let hw = evaluate_network(&target, &layers, &c.genome, &cache, &rc.mapper)?;
+            Some(Candidate {
+                accuracy: c.accuracy,
+                genome: c.genome,
+                hw,
+                strategy: "proposed-for-simba",
+            })
+        })
+        .collect();
+
+    let u8c = uniform
+        .iter()
+        .find(|c| c.genome.layers[0] == (8, 8))
+        .expect("uniform sweep includes 8-bit");
+    Fig6Result {
+        reference: (u8c.hw.edp, u8c.hw.memory_energy_pj, u8c.accuracy),
+        uniform,
+        naive,
+        proposed,
+        cross,
+    }
+}
+
+// --------------------------------------------------------------- table 2
+
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub arch: String,
+    pub network: String,
+    pub strategy: &'static str,
+    /// Δ memory energy vs uniform-8 (negative = saving), fraction.
+    pub delta_mem: f64,
+    /// Δ accuracy vs uniform-8 (positive = better), fraction.
+    pub delta_acc: f64,
+}
+
+/// Table II: memory-energy reduction and accuracy delta of Uniform /
+/// Naïve / Proposed for both CNNs on both accelerators, relative to the
+/// uniform 8-bit implementation. Reports up to `per_cell` Pareto points
+/// per (arch, net, strategy) cell, as the paper does.
+pub fn table2_summary(rc: &RunConfig, per_cell: usize) -> Vec<Table2Row> {
+    let mut rows = Vec::new();
+    for arch in [presets::eyeriss(), presets::simba()] {
+        for (net_name, layers) in [
+            ("MobileNetV1", models::mobilenet_v1()),
+            ("MobileNetV2", models::mobilenet_v2()),
+        ] {
+            let cache = MapperCache::new();
+            let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+            let reference = evaluate_network(
+                &arch,
+                &layers,
+                &QuantConfig::uniform(layers.len(), 8),
+                &cache,
+                &rc.mapper,
+            )
+            .expect("uniform-8 must map");
+            let ref_acc = acc.accuracy(&QuantConfig::uniform(layers.len(), 8));
+
+            let uniform = uniform_sweep(&arch, &layers, &mut acc, &cache, &rc.mapper, false);
+            let naive = naive_search(&arch, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga);
+            // Table II reports the memory-energy axis, so use the
+            // paper's full 3-objective search (memory, energy, error)
+            let proposed =
+                proposed_search3(&arch, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga);
+            for cands in [uniform, naive, proposed] {
+                rows.extend(best_cells(
+                    &cands, &arch, net_name, &reference, ref_acc, per_cell,
+                ));
+            }
+        }
+    }
+    rows
+}
+
+fn best_cells(
+    cands: &[Candidate],
+    arch: &Arch,
+    net: &str,
+    reference: &NetworkEval,
+    ref_acc: f64,
+    per_cell: usize,
+) -> Vec<Table2Row> {
+    // keep the Pareto subset by (mem energy, -accuracy), then the
+    // `per_cell` with the largest savings at acceptable accuracy
+    let pts: Vec<Vec<f64>> = cands
+        .iter()
+        .map(|c| vec![c.hw.memory_energy_pj, 1.0 - c.accuracy])
+        .collect();
+    let front = pareto_front(&pts);
+    let pareto: Vec<Table2Row> = cands
+        .iter()
+        .filter(|c| {
+            front.contains(&vec![c.hw.memory_energy_pj, 1.0 - c.accuracy])
+        })
+        .map(|c| Table2Row {
+            arch: arch.name.clone(),
+            network: net.to_string(),
+            strategy: c.strategy,
+            delta_mem: c.hw.memory_energy_pj / reference.memory_energy_pj - 1.0,
+            delta_acc: c.accuracy - ref_acc,
+        })
+        .collect();
+    // the paper prints a handful of representative trade-offs per cell,
+    // spanning "no accuracy drop" to "deep saving at visible drop": for
+    // each accuracy-drop bin, keep the deepest memory saving available
+    let bins = [0.0, -0.005, -0.01, -0.03, -0.09];
+    let mut rows: Vec<Table2Row> = Vec::new();
+    for &floor in bins.iter().take(per_cell.max(1)) {
+        let best = pareto
+            .iter()
+            .filter(|r| r.delta_acc >= floor)
+            .min_by(|a, b| a.delta_mem.partial_cmp(&b.delta_mem).unwrap());
+        if let Some(b) = best {
+            if !rows
+                .iter()
+                .any(|r| (r.delta_mem - b.delta_mem).abs() < 1e-12)
+            {
+                rows.push(b.clone());
+            }
+        }
+    }
+    rows.sort_by(|a, b| b.delta_acc.partial_cmp(&a.delta_acc).unwrap());
+    rows
+}
+
+// ------------------------------------------------------------- helpers
+
+/// Order-preserving parallel map over a slice using scoped std threads.
+pub fn parallel_map<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let out_mutex = std::sync::Mutex::new(&mut out);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.max(1).min(n.max(1)) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                out_mutex.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rc() -> RunConfig {
+        RunConfig::fast()
+    }
+
+    #[test]
+    fn fig1_shapes_and_correlations() {
+        let r = fig1_correlation(40, &rc());
+        assert_eq!(r.points.len(), 40);
+        // strong size<->words, weaker size<->EDP (the paper's core claim)
+        assert!(r.r_size_words > 0.85, "r_sw={}", r.r_size_words);
+        assert!(
+            r.r_size_edp < r.r_size_words,
+            "edp correlation should be weaker: {} vs {}",
+            r.r_size_edp,
+            r.r_size_words
+        );
+    }
+
+    #[test]
+    fn table1_counts_grow_with_lower_bits() {
+        // bounded enumeration keeps the test fast; relative order of the
+        // *unbounded* counts is asserted in the bench
+        let rows = table1_mappings(3_000);
+        assert_eq!(rows.len(), 12);
+        for r in &rows {
+            assert!(r.valid_mappings > 0, "{r:?}");
+            assert!(r.min_edp.is_finite());
+        }
+        // per-arch: 2-bit setting admits >= mappings than 16-bit
+        for arch in ["eyeriss", "simba"] {
+            let get = |s: (u8, u8, u8)| {
+                rows.iter()
+                    .find(|r| r.arch == arch && r.setting == s)
+                    .unwrap()
+            };
+            let m16 = get((16, 16, 16));
+            let m2 = get((2, 2, 2));
+            assert!(
+                m2.valid_mappings >= m16.valid_mappings,
+                "{arch}: {} vs {}",
+                m2.valid_mappings,
+                m16.valid_mappings
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_memory_energy_monotone() {
+        let rows = fig4_breakdown(&rc());
+        assert_eq!(rows.len(), 7);
+        // memory components shrink as bits shrink; MAC constant
+        let mem = |r: &Fig4Row| r.components_pj[0] + r.components_pj[1] + r.components_pj[2];
+        assert!(mem(&rows[1]) <= mem(&rows[0])); // 8 <= 16
+        assert!(mem(&rows[6]) < mem(&rows[1])); // 2 < 8
+        for w in rows.windows(2) {
+            assert_eq!(w[0].components_pj[3], w[1].components_pj[3]); // MAC
+        }
+        // packing plateau: 6-bit == 8-bit memory energy at word 16
+        assert!((mem(&rows[1]) - mem(&rows[2])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fig5_front_advances() {
+        let mut c = rc();
+        c.nsga.generations = 5;
+        let r = fig5_convergence(&c, &[0, 5]);
+        assert_eq!(r.fronts.len(), 2);
+        assert!(!r.initial_uniform.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = parallel_map(&xs, 8, |&x| x * 2);
+        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

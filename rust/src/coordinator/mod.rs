@@ -1,0 +1,90 @@
+//! L3 coordinator: experiment drivers shared by the CLI (`qmap <cmd>`)
+//! and the `benches/` harnesses that regenerate every paper table and
+//! figure. Each function returns structured rows; formatting lives in
+//! `crate::report` and the callers.
+
+pub mod experiments;
+
+use crate::mapper::MapperConfig;
+use crate::nsga::NsgaConfig;
+
+/// Global experiment knobs with paper-faithful defaults, scaled for a
+/// laptop-class run (DESIGN.md §3: budget substitution).
+#[derive(Debug, Clone, Copy)]
+pub struct RunConfig {
+    pub mapper: MapperConfig,
+    pub nsga: NsgaConfig,
+    /// Worker threads for parallel candidate evaluation.
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            mapper: MapperConfig::default(),
+            nsga: NsgaConfig::default(),
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            seed: 0x9A9E12,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Profile selection for the bench harnesses: `QMAP_PROFILE` =
+    /// `fast` (CI smoke) | `default` | `full` (paper-faithful budgets),
+    /// with `QMAP_THREADS` / `QMAP_SEED` overrides.
+    pub fn from_env() -> Self {
+        let mut rc = match std::env::var("QMAP_PROFILE").as_deref() {
+            Ok("fast") => RunConfig::fast(),
+            Ok("full") => RunConfig::full(),
+            _ => RunConfig::default(),
+        };
+        if let Ok(t) = std::env::var("QMAP_THREADS") {
+            if let Ok(t) = t.parse() {
+                rc.threads = t;
+            }
+        }
+        if let Ok(s) = std::env::var("QMAP_SEED") {
+            if let Ok(s) = s.parse() {
+                rc.seed = s;
+            }
+        }
+        rc
+    }
+
+    /// Paper-faithful budgets (2000 valid mappings per workload,
+    /// |P|=32, |Q|=16, 20 generations) — minutes-scale on a laptop.
+    pub fn full() -> Self {
+        RunConfig {
+            mapper: MapperConfig {
+                valid_target: 2_000,
+                max_draws: 2_000_000,
+                seed: 7,
+            },
+            nsga: NsgaConfig::default(),
+            ..RunConfig::default()
+        }
+    }
+
+    /// A fast profile for tests and smoke runs.
+    pub fn fast() -> Self {
+        RunConfig {
+            mapper: MapperConfig {
+                valid_target: 60,
+                max_draws: 60_000,
+                seed: 1,
+            },
+            nsga: NsgaConfig {
+                population: 12,
+                offspring: 8,
+                generations: 6,
+                ..NsgaConfig::default()
+            },
+            threads: 4,
+            seed: 1,
+        }
+    }
+}

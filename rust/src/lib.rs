@@ -1,0 +1,33 @@
+//! # qmap — Quantization x Mapping synergy for DNN accelerators
+//!
+//! A from-scratch reproduction of *"Exploring Quantization and Mapping
+//! Synergy in Hardware-Aware Deep Neural Network Accelerators"*
+//! (Klhufek et al., DDECS 2024): a Timeloop-style analytical mapping
+//! engine extended with mixed-precision quantization and bit-packing, a
+//! QAT training engine (JAX/Pallas, AOT-compiled, executed from Rust via
+//! PJRT), and an NSGA-II search engine coupling the two.
+//!
+//! Layering (DESIGN.md §4):
+//! * L3 (this crate): mapping engine, NSGA-II, caching, CLI, runtime.
+//! * L2 (`python/compile/model.py`): JAX QAT model, AOT-lowered to HLO.
+//! * L1 (`python/compile/kernels/`): Pallas fake-quant matmul kernel.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod accuracy;
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod eval;
+pub mod mapper;
+pub mod mapping;
+pub mod nest;
+pub mod nsga;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,447 @@
+//! `qmap` — CLI for the quantization x mapping synergy explorer.
+//!
+//! Subcommands mirror the library's workflow: inspect architectures and
+//! workloads, characterize quantized networks through the mapping
+//! engine, run the NSGA-II search (proxy or real-QAT accuracy), and
+//! regenerate every paper artifact from the terminal.
+
+use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
+use qmap::arch::{presets, Arch};
+use qmap::baselines::{naive_search, proposed_search, uniform_sweep};
+use qmap::coordinator::{experiments, RunConfig};
+use qmap::eval::evaluate_network;
+use qmap::mapper::cache::MapperCache;
+use qmap::mapper::{self, MapperConfig};
+use qmap::mapping::mapspace::MapSpace;
+use qmap::quant::{LayerQuant, QuantConfig};
+use qmap::report;
+use qmap::util::cli::Args;
+use qmap::workload::{models, ConvLayer};
+
+const USAGE: &str = "\
+qmap — quantization x mapping synergy for DNN accelerators
+  (reproduction of Klhufek et al., DDECS 2024)
+
+USAGE: qmap <command> [options]
+
+inspect:
+  arch      [--arch eyeriss|simba|toy | --spec file.qarch]   print + validate an accelerator
+  layers    [--net v1|v2]                                    print a network's layer table
+  map       [--arch A] [--net N] --layer I [--qa 8 --qw 8 --qo 8]
+                                                             best mapping for one layer
+  enumerate [--arch A] [--net N] --layer I [--qa ... ] [--limit 1e6]
+                                                             exhaustive valid-mapping count
+
+characterize:
+  eval      [--arch A] [--net N] (--bits 8 | --genome 8/8,6/4,...)
+                                                             full-network metrics
+  search    [--arch A] [--net N] [--strategy proposed|naive|uniform]
+            [--gens 20] [--pop 32] [--offspring 16]          NSGA-II / baseline search
+
+paper artifacts (same engines as `cargo bench`):
+  fig1 [--n 250] | table1 | fig3 | fig4 | fig5 | fig6 | table2
+
+runtime (needs `make artifacts`):
+  train     [--steps 200] [--bits 8] [--lr 0.05]             PJRT QAT pre-training + loss curve
+
+global: --threads N, --seed S, --profile fast|default|full (or QMAP_PROFILE)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = match Args::parse(&argv[1..], &["help", "csv", "no-packing", "emit"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") {
+        print!("{USAGE}");
+        return;
+    }
+    if let Some(p) = args.get("profile") {
+        std::env::set_var("QMAP_PROFILE", p);
+    }
+    let mut rc = RunConfig::from_env();
+    rc.threads = args.usize_or("threads", rc.threads);
+    rc.seed = args.u64_or("seed", rc.seed);
+
+    let code = match cmd.as_str() {
+        "arch" => cmd_arch(&args),
+        "layers" => cmd_layers(&args),
+        "map" => cmd_map(&args),
+        "enumerate" => cmd_enumerate(&args),
+        "eval" => cmd_eval(&args, &rc),
+        "search" => cmd_search(&args, &rc),
+        "fig1" => {
+            let r = experiments::fig1_correlation(args.usize_or("n", 250), &rc);
+            println!("pearson r size<->words {:+.4}, size<->EDP {:+.4}", r.r_size_words, r.r_size_edp);
+            0
+        }
+        "table1" => {
+            let rows = experiments::table1_mappings(args.u64_or("limit", 2_000_000));
+            for r in rows {
+                println!(
+                    "{:7} ({:>2},{:>2},{:>2})  {:>9} mappings{}  min EDP {:.3e}",
+                    r.arch, r.setting.0, r.setting.1, r.setting.2,
+                    r.valid_mappings, if r.truncated { "+" } else { " " }, r.min_edp
+                );
+            }
+            0
+        }
+        "fig3" => {
+            for (name, r) in [
+                ("a", experiments::fig3a_init_model(&rc)),
+                ("b", experiments::fig3b_offspring(&rc)),
+                ("c", experiments::fig3c_epochs(&rc)),
+            ] {
+                println!("fig3{name}:");
+                for (label, front) in &r.arms {
+                    println!("  {label}: {} front points", front.len());
+                }
+            }
+            0
+        }
+        "fig4" => {
+            for r in experiments::fig4_breakdown(&rc) {
+                println!(
+                    "{:>2}b  spads {:.3e}  buffers {:.3e}  dram {:.3e}  mac {:.3e}  total {:.3e}",
+                    r.bits, r.components_pj[0], r.components_pj[1], r.components_pj[2],
+                    r.components_pj[3], r.total_pj
+                );
+            }
+            0
+        }
+        "fig5" => {
+            let snaps: Vec<usize> = (0..=rc.nsga.generations).collect();
+            let r = experiments::fig5_convergence(&rc, &snaps);
+            for (g, front) in &r.fronts {
+                println!("gen {g:>3}: {} pareto points", front.len());
+            }
+            0
+        }
+        "fig6" => {
+            let r = experiments::fig6_tradeoff(&rc);
+            print!("{}", report::pareto_table(&r.proposed, r.reference.0, r.reference.1, r.reference.2));
+            0
+        }
+        "table2" => {
+            for r in experiments::table2_summary(&rc, 4) {
+                println!(
+                    "{:8} {:12} {:9}  d_em {:+6.1}%  d_acc {:+5.1}%",
+                    r.arch, r.network, r.strategy, r.delta_mem * 100.0, r.delta_acc * 100.0
+                );
+            }
+            0
+        }
+        "train" => cmd_train(&args),
+        _ => {
+            eprintln!("unknown command '{cmd}'\n");
+            print!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+// ------------------------------------------------------------- helpers
+
+fn load_arch(args: &Args) -> Result<Arch, String> {
+    let mut arch = if let Some(path) = args.get("spec") {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        qmap::arch::parser::parse_arch(&src)?
+    } else {
+        let name = args.str_or("arch", "eyeriss");
+        presets::by_name(&name).ok_or(format!("unknown arch '{name}' (try eyeriss|simba|toy)"))?
+    };
+    if args.flag("no-packing") {
+        arch.bit_packing = false;
+    }
+    arch.validate()?;
+    Ok(arch)
+}
+
+fn load_net(args: &Args) -> Result<Vec<ConvLayer>, String> {
+    let spec = args.str_or("net", "v1");
+    match spec.as_str() {
+        "v1" | "mobilenetv1" => Ok(models::mobilenet_v1()),
+        "v2" | "mobilenetv2" => Ok(models::mobilenet_v2()),
+        // anything else is a `.qnet` layer-table file
+        path => qmap::workload::parser::load_net(path)
+            .map_err(|e| format!("{e} (or pass v1|v2 for the built-in tables)")),
+    }
+}
+
+fn parse_genome(s: &str, n: usize) -> Result<QuantConfig, String> {
+    let mut qc = QuantConfig::uniform(n, 8);
+    let parts: Vec<&str> = s.split(',').collect();
+    if parts.len() != n {
+        return Err(format!("genome has {} entries, net has {n} layers", parts.len()));
+    }
+    for (i, p) in parts.iter().enumerate() {
+        let (a, w) = p
+            .split_once('/')
+            .ok_or(format!("bad genome entry '{p}' (want qa/qw)"))?;
+        qc.layers[i] = (
+            a.trim().parse().map_err(|_| format!("bad qa '{a}'"))?,
+            w.trim().parse().map_err(|_| format!("bad qw '{w}'"))?,
+        );
+    }
+    Ok(qc)
+}
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {e}");
+    1
+}
+
+// ------------------------------------------------------------ commands
+
+fn cmd_arch(args: &Args) -> i32 {
+    let arch = match load_arch(args) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if args.flag("emit") {
+        // print the round-trippable text specification (see specs/)
+        print!("{}", qmap::arch::parser::render_arch(&arch));
+        return 0;
+    }
+    println!(
+        "{}: {} PEs, word {} bits, MAC {:.2} pJ, bit-packing {}",
+        arch.name,
+        arch.total_pes(),
+        arch.word_bits,
+        arch.mac_energy_pj,
+        arch.bit_packing
+    );
+    let rows: Vec<Vec<String>> = arch
+        .levels
+        .iter()
+        .map(|l| {
+            vec![
+                l.name.clone(),
+                format!("{:?}", l.capacity),
+                format!("{:?}", l.access_energy_pj),
+                l.fanout.to_string(),
+                l.spatial_dims.iter().map(|d| d.name()).collect::<String>(),
+                format!("{:?}", l.keeps),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(
+            &["level", "capacity [words]", "energy [pJ] W/I/O", "fanout", "spatial dims", "keeps W/I/O"],
+            &rows
+        )
+    );
+    0
+}
+
+fn cmd_layers(args: &Args) -> i32 {
+    let layers = match load_net(args) {
+        Ok(l) => l,
+        Err(e) => return fail(e),
+    };
+    let rows: Vec<Vec<String>> = layers
+        .iter()
+        .map(|l| {
+            vec![
+                l.name.clone(),
+                format!("{:?}", l.kind),
+                format!("{:?}", l.dims),
+                format!("{}x{}", l.stride.0, l.stride.1),
+                l.macs().to_string(),
+                l.tensor_elements(qmap::workload::Tensor::Weights).to_string(),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(&["layer", "kind", "[N,K,C,R,S,P,Q]", "stride", "MACs", "weights"], &rows)
+    );
+    println!(
+        "total: {} MACs, {} weights",
+        layers.iter().map(|l| l.macs()).sum::<u64>(),
+        layers
+            .iter()
+            .map(|l| l.tensor_elements(qmap::workload::Tensor::Weights))
+            .sum::<u64>()
+    );
+    0
+}
+
+fn cmd_map(args: &Args) -> i32 {
+    let (arch, layers) = match (load_arch(args), load_net(args)) {
+        (Ok(a), Ok(l)) => (a, l),
+        (Err(e), _) | (_, Err(e)) => return fail(e),
+    };
+    let i = args.usize_or("layer", 1);
+    if i >= layers.len() {
+        return fail(format!("layer {i} out of range (net has {})", layers.len()));
+    }
+    let q = LayerQuant {
+        qa: args.usize_or("qa", 8) as u8,
+        qw: args.usize_or("qw", 8) as u8,
+        qo: args.usize_or("qo", 8) as u8,
+    };
+    let cfg = MapperConfig::default();
+    let r = mapper::search(&arch, &layers[i], &q, &cfg);
+    println!(
+        "layer '{}' on {} at (qa,qw,qo)=({},{},{}): {} valid / {} draws",
+        layers[i].name, arch.name, q.qa, q.qw, q.qo, r.valid, r.draws
+    );
+    match (r.best, r.best_mapping) {
+        (Some(est), Some(m)) => {
+            print!("{}", m.render(&arch));
+            println!(
+                "energy {:.3e} pJ (memory {:.3e}), {:.0} cycles, EDP {:.3e}, PEs {}/{}",
+                est.energy_pj,
+                est.memory_energy_pj(),
+                est.cycles,
+                est.edp(),
+                m.pes_used(),
+                arch.total_pes()
+            );
+            0
+        }
+        _ => fail("no valid mapping found"),
+    }
+}
+
+fn cmd_enumerate(args: &Args) -> i32 {
+    let (arch, layers) = match (load_arch(args), load_net(args)) {
+        (Ok(a), Ok(l)) => (a, l),
+        (Err(e), _) | (_, Err(e)) => return fail(e),
+    };
+    let i = args.usize_or("layer", 1);
+    let q = LayerQuant {
+        qa: args.usize_or("qa", 8) as u8,
+        qw: args.usize_or("qw", 8) as u8,
+        qo: args.usize_or("qo", 8) as u8,
+    };
+    let limit = args.u64_or("limit", 2_000_000);
+    let space = MapSpace::of(&arch);
+    let mut min_edp = f64::INFINITY;
+    let st = space.enumerate_valid(&arch, &layers[i], &q, limit, |m| {
+        let nest = qmap::nest::analyze(&arch, &layers[i], m);
+        let est = qmap::energy::estimate(&arch, &layers[i], &q, &nest);
+        min_edp = min_edp.min(est.edp());
+    });
+    println!(
+        "{} valid mappings{} ({} examined), min EDP {:.3e}",
+        st.valid,
+        if st.truncated { "+ (capped)" } else { "" },
+        st.examined,
+        min_edp
+    );
+    0
+}
+
+fn cmd_eval(args: &Args, rc: &RunConfig) -> i32 {
+    let (arch, layers) = match (load_arch(args), load_net(args)) {
+        (Ok(a), Ok(l)) => (a, l),
+        (Err(e), _) | (_, Err(e)) => return fail(e),
+    };
+    let qc = if let Some(g) = args.get("genome") {
+        match parse_genome(g, layers.len()) {
+            Ok(q) => q,
+            Err(e) => return fail(e),
+        }
+    } else {
+        QuantConfig::uniform(layers.len(), args.usize_or("bits", 8) as u8)
+    };
+    let cache = MapperCache::new();
+    match evaluate_network(&arch, &layers, &qc, &cache, &rc.mapper) {
+        Some(e) => {
+            println!("network on {}:", arch.name);
+            println!("  energy        {:.4e} pJ (memory {:.4e}, MAC {:.4e})", e.energy_pj, e.memory_energy_pj, e.mac_energy_pj);
+            println!("  breakdown     spads {:.3e} / buffers {:.3e} / dram {:.3e} pJ", e.energy_breakdown_pj[0], e.energy_breakdown_pj[1], e.energy_breakdown_pj[2]);
+            println!("  latency       {:.4e} cycles", e.cycles);
+            println!("  EDP           {:.4e} J*cycles", e.edp);
+            println!("  weight words  {} (packed), model size {} bits", e.weight_words, e.model_size_bits);
+            0
+        }
+        None => fail("some layer failed to map within the draw budget"),
+    }
+}
+
+fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
+    let (arch, layers) = match (load_arch(args), load_net(args)) {
+        (Ok(a), Ok(l)) => (a, l),
+        (Err(e), _) | (_, Err(e)) => return fail(e),
+    };
+    let mut nsga = rc.nsga;
+    nsga.generations = args.usize_or("gens", nsga.generations);
+    nsga.population = args.usize_or("pop", nsga.population);
+    nsga.offspring = args.usize_or("offspring", nsga.offspring);
+
+    let cache = MapperCache::new();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+    let strategy = args.str_or("strategy", "proposed");
+    let cands = match strategy.as_str() {
+        "proposed" => proposed_search(&arch, &layers, &mut acc, &cache, &rc.mapper, &nsga, |g, pop| {
+            let best = pop.iter().map(|i| i.objectives[0]).fold(f64::INFINITY, f64::min);
+            eprintln!("gen {g:>3}: best EDP {best:.3e}");
+        }),
+        "naive" => naive_search(&arch, &layers, &mut acc, &cache, &rc.mapper, &nsga),
+        "uniform" => uniform_sweep(&arch, &layers, &mut acc, &cache, &rc.mapper, true),
+        other => return fail(format!("unknown strategy '{other}'")),
+    };
+    let reference = evaluate_network(
+        &arch,
+        &layers,
+        &QuantConfig::uniform(layers.len(), 8),
+        &cache,
+        &rc.mapper,
+    )
+    .expect("uniform-8 maps");
+    let ref_acc = acc.accuracy(&QuantConfig::uniform(layers.len(), 8));
+    print!(
+        "{}",
+        report::pareto_table(&cands, reference.edp, reference.memory_energy_pj, ref_acc)
+    );
+    if args.flag("csv") {
+        let rows: Vec<Vec<String>> = cands
+            .iter()
+            .map(|c| {
+                vec![
+                    format!("{:.5}", c.accuracy),
+                    format!("{:.5e}", c.hw.edp),
+                    c.genome.layers.iter().map(|&(a, w)| format!("{a}/{w}")).collect::<Vec<_>>().join(","),
+                ]
+            })
+            .collect();
+        print!("{}", report::csv(&["accuracy", "edp", "genome"], &rows));
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    use qmap::data::SyntheticDataset;
+    use qmap::runtime::{default_artifact_dir, Runtime};
+    let rt = match Runtime::load(default_artifact_dir()) {
+        Ok(r) => r,
+        Err(e) => return fail(format!("{e:#}")),
+    };
+    println!("platform {}, model {}", rt.platform(), rt.meta.model);
+    let data = SyntheticDataset::new(args.u64_or("seed", 0xDA7A));
+    let steps = args.u64_or("steps", 200);
+    let bits = args.usize_or("bits", 8) as u8;
+    let lr = args.f64_or("lr", 0.05) as f32;
+    let r = qmap::runtime::qat::QatAccuracy::pretrain(&rt, &data, bits, steps, lr, |s, l| {
+        if s % 10 == 0 || s + 1 == steps {
+            println!("step {s:>5}  loss {l:.4}");
+        }
+    });
+    match r {
+        Ok(_) => 0,
+        Err(e) => fail(format!("{e:#}")),
+    }
+}

@@ -1,0 +1,265 @@
+//! Workload-result cache (the paper's §III-A caching mechanism).
+//!
+//! "Once a layer workload has been evaluated, the results are stored in
+//! a cache. Subsequently, the cached results can be read and reused when
+//! trying to find the best plan for the same workload." NSGA-II genomes
+//! share most of their layers, so hit rates are high after the first
+//! generation.
+//!
+//! The cache is keyed by `workload_hash(layer, quant)` (shape + strides
+//! + kind + bit-widths) and the architecture name, is thread-safe, and
+//! can persist to a JSON file across runs.
+
+use super::{search, workload_hash, MapperConfig};
+use crate::arch::Arch;
+use crate::quant::LayerQuant;
+use crate::util::json::{parse, Json};
+use crate::workload::ConvLayer;
+use rustc_hash::FxHashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// The cached summary of one workload evaluation (everything the search
+/// engine needs; the winning mapping itself is not persisted).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CachedEval {
+    pub energy_pj: f64,
+    pub memory_energy_pj: f64,
+    pub cycles: f64,
+    pub edp: f64,
+    pub valid_mappings: u64,
+    /// Per-level memory energy is folded to the three coarse components
+    /// reported in Fig. 4: innermost (spads/regs), middle (GLB/PE bufs),
+    /// DRAM.
+    pub energy_breakdown_pj: [f64; 3],
+    pub mac_energy_pj: f64,
+}
+
+/// Thread-safe mapper cache.
+pub struct MapperCache {
+    map: RwLock<FxHashMap<u64, CachedEval>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for MapperCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MapperCache {
+    pub fn new() -> Self {
+        MapperCache {
+            map: RwLock::new(FxHashMap::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn key(arch: &Arch, layer: &ConvLayer, q: &LayerQuant) -> u64 {
+        // packing-equivalent settings share one entry (see mapper::search)
+        let q = &q.canonical(arch.word_bits, arch.bit_packing);
+        let mut h = workload_hash(layer, q);
+        for b in arch.name.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^= (arch.bit_packing as u64) << 7;
+        h
+    }
+
+    /// Evaluate a workload through the cache, running the mapper on miss.
+    pub fn evaluate(
+        &self,
+        arch: &Arch,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        cfg: &MapperConfig,
+    ) -> Option<CachedEval> {
+        let key = Self::key(arch, layer, q);
+        if let Some(hit) = self.map.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(*hit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let r = search(arch, layer, q, cfg);
+        let est = r.best?;
+        let nl = est.level_energy_pj.len();
+        let mut breakdown = [0.0f64; 3];
+        for (i, &e) in est.level_energy_pj.iter().enumerate() {
+            let slot = if i == nl - 1 {
+                2 // DRAM
+            } else if i == 0 {
+                0 // innermost spads/regs
+            } else {
+                1 // middle buffers
+            };
+            breakdown[slot] += e;
+        }
+        let cached = CachedEval {
+            energy_pj: est.energy_pj,
+            memory_energy_pj: est.memory_energy_pj(),
+            cycles: est.cycles,
+            edp: est.edp(),
+            valid_mappings: r.valid,
+            energy_breakdown_pj: breakdown,
+            mac_energy_pj: est.mac_energy_pj,
+        };
+        self.map.write().unwrap().insert(key, cached);
+        Some(cached)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialize to JSON (for cross-run persistence).
+    pub fn to_json(&self) -> String {
+        let map = self.map.read().unwrap();
+        let mut entries = Vec::with_capacity(map.len());
+        for (k, v) in map.iter() {
+            entries.push(Json::obj(vec![
+                ("key", Json::Str(format!("{k:016x}"))),
+                ("energy_pj", Json::Num(v.energy_pj)),
+                ("memory_energy_pj", Json::Num(v.memory_energy_pj)),
+                ("cycles", Json::Num(v.cycles)),
+                ("edp", Json::Num(v.edp)),
+                ("valid_mappings", Json::Num(v.valid_mappings as f64)),
+                ("breakdown", Json::arr_f64(&v.energy_breakdown_pj)),
+                ("mac_energy_pj", Json::Num(v.mac_energy_pj)),
+            ]));
+        }
+        Json::obj(vec![("entries", Json::Arr(entries))]).to_string()
+    }
+
+    /// Load entries from a JSON dump produced by `to_json`.
+    pub fn load_json(&self, src: &str) -> Result<usize, String> {
+        let v = parse(src)?;
+        let entries = v.get("entries").as_arr().ok_or("missing entries")?;
+        let mut map = self.map.write().unwrap();
+        let mut n = 0;
+        for e in entries {
+            let key = u64::from_str_radix(e.get("key").as_str().ok_or("key")?, 16)
+                .map_err(|_| "bad key")?;
+            let bd = e.get("breakdown").as_arr().ok_or("breakdown")?;
+            if bd.len() != 3 {
+                return Err("breakdown len".into());
+            }
+            map.insert(
+                key,
+                CachedEval {
+                    energy_pj: e.get("energy_pj").as_f64().ok_or("energy")?,
+                    memory_energy_pj: e.get("memory_energy_pj").as_f64().ok_or("mem")?,
+                    cycles: e.get("cycles").as_f64().ok_or("cycles")?,
+                    edp: e.get("edp").as_f64().ok_or("edp")?,
+                    valid_mappings: e.get("valid_mappings").as_f64().ok_or("valid")? as u64,
+                    energy_breakdown_pj: [
+                        bd[0].as_f64().ok_or("bd0")?,
+                        bd[1].as_f64().ok_or("bd1")?,
+                        bd[2].as_f64().ok_or("bd2")?,
+                    ],
+                    mac_energy_pj: e.get("mac_energy_pj").as_f64().ok_or("mac")?,
+                },
+            );
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Persist to a file (best-effort convenience).
+    pub fn save_file(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Load from a file if it exists; returns entries loaded.
+    pub fn load_file(&self, path: &str) -> usize {
+        match std::fs::read_to_string(path) {
+            Ok(src) => self.load_json(&src).unwrap_or(0),
+            Err(_) => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::toy;
+
+    fn cfg() -> MapperConfig {
+        MapperConfig {
+            valid_target: 100,
+            max_draws: 50_000,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let cache = MapperCache::new();
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(8);
+        let r1 = cache.evaluate(&a, &l, &q, &cfg()).unwrap();
+        assert_eq!(cache.misses(), 1);
+        let r2 = cache.evaluate(&a, &l, &q, &cfg()).unwrap();
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn different_quant_misses() {
+        let cache = MapperCache::new();
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        cache.evaluate(&a, &l, &LayerQuant::uniform(8), &cfg()).unwrap();
+        cache.evaluate(&a, &l, &LayerQuant::uniform(4), &cfg()).unwrap();
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cache = MapperCache::new();
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(8);
+        let r1 = cache.evaluate(&a, &l, &q, &cfg()).unwrap();
+
+        let dump = cache.to_json();
+        let cache2 = MapperCache::new();
+        assert_eq!(cache2.load_json(&dump).unwrap(), 1);
+        // the restored entry is served as a hit
+        let r2 = cache2.evaluate(&a, &l, &q, &cfg()).unwrap();
+        assert_eq!(cache2.hits(), 1);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn breakdown_sums_to_memory_energy() {
+        let cache = MapperCache::new();
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let r = cache
+            .evaluate(&a, &l, &LayerQuant::uniform(8), &cfg())
+            .unwrap();
+        let s: f64 = r.energy_breakdown_pj.iter().sum();
+        assert!((s - r.memory_energy_pj).abs() < 1e-6);
+    }
+
+    #[test]
+    fn corrupt_json_rejected() {
+        let cache = MapperCache::new();
+        assert!(cache.load_json("{\"entries\": [{\"key\": \"zz\"}]}").is_err());
+        assert!(cache.load_json("not json").is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! The mapper: searches the mapspace of one workload for the best
+//! mapping under a quantization setting.
+//!
+//! Mirrors the paper's Timeloop configuration: "random search with
+//! termination condition set to finding 2000 valid mappings per
+//! workload", the best mapping selected by minimum EDP. A per-workload
+//! result cache (the paper's §III-A caching mechanism) makes repeated
+//! NSGA-II evaluations of similar genomes cheap.
+
+pub mod cache;
+pub mod gamma;
+
+use crate::arch::Arch;
+use crate::energy::{estimate, Estimate};
+use crate::mapping::mapspace::MapSpace;
+use crate::mapping::{check, Mapping};
+use crate::nest::analyze;
+use crate::quant::LayerQuant;
+use crate::util::rng::Rng;
+use crate::workload::ConvLayer;
+
+/// Mapper configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MapperConfig {
+    /// Stop after this many *valid* mappings have been evaluated
+    /// (paper: 2000).
+    pub valid_target: u64,
+    /// Hard cap on candidate draws (valid or not), to bound pathological
+    /// workloads where validity is rare.
+    pub max_draws: u64,
+    /// RNG seed (combined with a workload hash for determinism).
+    pub seed: u64,
+}
+
+impl Default for MapperConfig {
+    fn default() -> Self {
+        MapperConfig {
+            valid_target: 2000,
+            max_draws: 400_000,
+            seed: 0x51AB5EED,
+        }
+    }
+}
+
+/// Outcome of a mapper search on one workload.
+#[derive(Debug, Clone)]
+pub struct MapperResult {
+    /// Best (minimum-EDP) estimate found; `None` if no valid mapping.
+    pub best: Option<Estimate>,
+    /// The mapping achieving `best`.
+    pub best_mapping: Option<Mapping>,
+    /// Number of valid mappings encountered.
+    pub valid: u64,
+    /// Number of candidates drawn.
+    pub draws: u64,
+}
+
+/// Random-search the mapspace of `(layer, q)` on `arch`.
+///
+/// Bit-widths are canonicalized to their packing-equivalence class first
+/// (see [`LayerQuant::canonical`]): the engine's capacity and energy
+/// models depend on `q` only through the pack factor, so equivalent
+/// settings must explore identical mapspaces (and share cache entries).
+pub fn search(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, cfg: &MapperConfig) -> MapperResult {
+    let q = &q.canonical(arch.word_bits, arch.bit_packing);
+    let space = MapSpace::of(arch);
+    let mut rng = Rng::new(cfg.seed ^ workload_hash(layer, q));
+    let mut best: Option<(f64, Estimate, Mapping)> = None;
+    let mut valid = 0u64;
+    let mut draws = 0u64;
+
+    while valid < cfg.valid_target && draws < cfg.max_draws {
+        draws += 1;
+        let m = space.random_mapping(layer, &mut rng);
+        if check(arch, layer, q, &m).is_err() {
+            continue;
+        }
+        valid += 1;
+        let nest = analyze(arch, layer, &m);
+        let est = estimate(arch, layer, q, &nest);
+        let edp = est.edp();
+        if best.as_ref().map_or(true, |(b, _, _)| edp < *b) {
+            best = Some((edp, est, m));
+        }
+    }
+
+    match best {
+        Some((_, est, m)) => MapperResult {
+            best: Some(est),
+            best_mapping: Some(m),
+            valid,
+            draws,
+        },
+        None => MapperResult {
+            best: None,
+            best_mapping: None,
+            valid,
+            draws,
+        },
+    }
+}
+
+/// Stable 64-bit hash of a workload + quantization (cache key and seed
+/// derivation). FNV-1a over the canonical fields.
+pub fn workload_hash(layer: &ConvLayer, q: &LayerQuant) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut feed = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for &d in &layer.dims {
+        feed(d);
+    }
+    feed(layer.stride.0);
+    feed(layer.stride.1);
+    feed(layer.kind as u64);
+    feed(q.qa as u64);
+    feed(q.qw as u64);
+    feed(q.qo as u64);
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{eyeriss, toy};
+    use crate::workload::ConvLayer;
+
+    #[test]
+    fn finds_valid_mappings_on_toy() {
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let cfg = MapperConfig {
+            valid_target: 200,
+            max_draws: 100_000,
+            seed: 1,
+        };
+        let r = search(&a, &l, &LayerQuant::uniform(8), &cfg);
+        assert!(r.valid >= 200);
+        assert!(r.best.is_some());
+        assert!(r.best.unwrap().edp() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let cfg = MapperConfig {
+            valid_target: 100,
+            max_draws: 50_000,
+            seed: 7,
+        };
+        let q = LayerQuant::uniform(4);
+        let r1 = search(&a, &l, &q, &cfg);
+        let r2 = search(&a, &l, &q, &cfg);
+        assert_eq!(r1.best.map(|e| e.edp()), r2.best.map(|e| e.edp()));
+        assert_eq!(r1.valid, r2.valid);
+    }
+
+    #[test]
+    fn lower_bits_find_lower_edp_on_eyeriss() {
+        // the synergy effect end-to-end through the mapper
+        let a = eyeriss();
+        let l = ConvLayer::dw("dw2", 32, 3, 112, 1);
+        let cfg = MapperConfig {
+            valid_target: 300,
+            max_draws: 300_000,
+            seed: 3,
+        };
+        let e16 = search(&a, &l, &LayerQuant::uniform(16), &cfg);
+        let e4 = search(&a, &l, &LayerQuant::uniform(4), &cfg);
+        let b16 = e16.best.expect("16b should map").edp();
+        let b4 = e4.best.expect("4b should map").edp();
+        assert!(b4 < b16, "edp4={b4} edp16={b16}");
+    }
+
+    #[test]
+    fn hash_distinguishes_quant_and_shape() {
+        let l1 = ConvLayer::conv("a", 4, 8, 3, 8, 1);
+        let l2 = ConvLayer::conv("b", 8, 8, 3, 8, 1);
+        let q8 = LayerQuant::uniform(8);
+        let q4 = LayerQuant::uniform(4);
+        assert_ne!(workload_hash(&l1, &q8), workload_hash(&l1, &q4));
+        assert_ne!(workload_hash(&l1, &q8), workload_hash(&l2, &q8));
+        // name does NOT affect the key: same shape+q hits the same cache
+        let l1b = ConvLayer::conv("other_name", 4, 8, 3, 8, 1);
+        assert_eq!(workload_hash(&l1, &q8), workload_hash(&l1b, &q8));
+    }
+
+    #[test]
+    fn impossible_workload_returns_none() {
+        // single PE spad of 16 words can't hold even one weight at 16b if
+        // we also forbid DRAM-resident loops? Actually DRAM-heavy always
+        // works; make a level-0 mandatory overflow by using a huge R so
+        // that any unit tile... unit tiles always fit. So instead: check
+        // that max_draws bounds the search on a workload with rare
+        // validity rather than hanging.
+        let a = toy();
+        let l = ConvLayer::conv("t", 97, 89, 1, 13, 1); // awkward primes
+        let cfg = MapperConfig {
+            valid_target: u64::MAX,
+            max_draws: 2_000,
+            seed: 5,
+        };
+        let r = search(&a, &l, &LayerQuant::uniform(8), &cfg);
+        assert_eq!(r.draws, 2_000);
+    }
+}

@@ -1,0 +1,204 @@
+//! Timeloop-style mapspace constraints.
+//!
+//! Timeloop never enumerates the raw cross product of all ordered
+//! factorizations: every shipped architecture config carries a
+//! *constraints* file that pins which problem dims each storage level
+//! may iterate temporally (and which may be mapped spatially — that part
+//! lives in [`crate::arch::Level::spatial_dims`]). The paper's Table I
+//! counts ("11,778 valid mappings on Eyeriss at 16 bit") are counts of
+//! such a *constrained* mapspace; without constraints the raw space for
+//! the same layer is ~10^8 and the reported numbers would be
+//! meaningless.
+//!
+//! A [`MapConstraints`] is one entry per storage level, each listing the
+//! dims permitted to carry a temporal factor > 1 at that level (`None`
+//! = unconstrained). [`MapSpace::enumerate_valid_with`] consumes it to
+//! prune factorization choices *before* recursion, which is also what
+//! makes exhaustive enumeration tractable.
+
+use crate::arch::Arch;
+use crate::workload::{Dim, DIMS};
+
+/// Per-level temporal-dim whitelist.
+#[derive(Debug, Clone, Default)]
+pub struct LevelConstraint {
+    /// Dims allowed a temporal factor > 1 at this level.
+    /// `None` = all dims allowed.
+    pub temporal_dims: Option<Vec<Dim>>,
+}
+
+impl LevelConstraint {
+    pub fn any() -> Self {
+        LevelConstraint { temporal_dims: None }
+    }
+    pub fn only(dims: &[Dim]) -> Self {
+        LevelConstraint {
+            temporal_dims: Some(dims.to_vec()),
+        }
+    }
+    pub fn allows(&self, d: Dim) -> bool {
+        match &self.temporal_dims {
+            None => true,
+            Some(ds) => ds.contains(&d),
+        }
+    }
+}
+
+/// A full constraint set: one [`LevelConstraint`] per storage level
+/// (innermost first, same order as [`Arch::levels`]).
+#[derive(Debug, Clone)]
+pub struct MapConstraints {
+    pub levels: Vec<LevelConstraint>,
+}
+
+impl MapConstraints {
+    /// No constraints (the raw mapspace).
+    pub fn none(num_levels: usize) -> Self {
+        MapConstraints {
+            levels: vec![LevelConstraint::any(); num_levels],
+        }
+    }
+
+    /// Eyeriss row-stationary discipline (mirrors the `eyeriss_like`
+    /// constraints of the Timeloop exercises): the PE scratchpad runs
+    /// the MAC-feeding loops over the filter window and a channel
+    /// sliver; the global buffer iterates output tiles; DRAM carries
+    /// whatever remains (unconstrained).
+    pub fn eyeriss() -> Self {
+        MapConstraints {
+            levels: vec![
+                // pe_spad: filter window + output-column reuse
+                LevelConstraint::only(&[Dim::R, Dim::S, Dim::Q]),
+                // shared_glb: output tiles + channel blocking
+                LevelConstraint::only(&[Dim::P, Dim::Q, Dim::C, Dim::K, Dim::N]),
+                // dram: free
+                LevelConstraint::any(),
+            ],
+        }
+    }
+
+    /// Simba weight-stationary-ish discipline: lane registers hold a
+    /// weight sliver (no temporal loops beyond the window), PE buffers
+    /// block channels/outputs, the global buffer tiles outputs and
+    /// batches, DRAM is free.
+    pub fn simba() -> Self {
+        MapConstraints {
+            levels: vec![
+                // lane_reg: innermost reuse over the filter window only
+                LevelConstraint::only(&[Dim::R, Dim::S]),
+                // pe_buf: channel/filter blocking
+                LevelConstraint::only(&[Dim::C, Dim::K]),
+                // global_buf: output/batch tiling
+                LevelConstraint::only(&[Dim::P, Dim::Q, Dim::N]),
+                // dram: free
+                LevelConstraint::any(),
+            ],
+        }
+    }
+
+    /// The constraint set an architecture ships with (by preset name),
+    /// falling back to the unconstrained space.
+    pub fn for_arch(arch: &Arch) -> Self {
+        match arch.name.as_str() {
+            "eyeriss" => Self::eyeriss(),
+            "simba" => Self::simba(),
+            _ => Self::none(arch.levels.len()),
+        }
+    }
+
+    /// Is `factor` at temporal slot `level` for dim `d` permitted?
+    pub fn allows_temporal(&self, level: usize, d: Dim, factor: u64) -> bool {
+        factor == 1 || self.levels.get(level).map_or(true, |lc| lc.allows(d))
+    }
+
+    /// Filter an ordered factorization `fs` (layout: `num_levels`
+    /// temporal slots then spatial slots) for dim `d`.
+    pub fn allows_factorization(&self, num_levels: usize, d: Dim, fs: &[u64]) -> bool {
+        (0..num_levels).all(|lv| self.allows_temporal(lv, d, fs[lv]))
+    }
+
+    /// Sanity-check against an architecture.
+    pub fn validate(&self, arch: &Arch) -> Result<(), String> {
+        if self.levels.len() != arch.levels.len() {
+            return Err(format!(
+                "constraints cover {} levels, arch has {}",
+                self.levels.len(),
+                arch.levels.len()
+            ));
+        }
+        // the top level must be able to absorb every dim, or some layer
+        // sizes become unmappable
+        if let Some(ds) = &self.levels.last().unwrap().temporal_dims {
+            for d in DIMS {
+                if !ds.contains(&d) {
+                    return Err(format!("top level must allow dim {d:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn presets_validate_against_archs() {
+        MapConstraints::eyeriss().validate(&presets::eyeriss()).unwrap();
+        MapConstraints::simba().validate(&presets::simba()).unwrap();
+        MapConstraints::none(3).validate(&presets::eyeriss()).unwrap();
+    }
+
+    #[test]
+    fn factor_one_always_allowed() {
+        let c = MapConstraints::eyeriss();
+        for d in DIMS {
+            for lv in 0..3 {
+                assert!(c.allows_temporal(lv, d, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn eyeriss_spad_rejects_channel_loops() {
+        let c = MapConstraints::eyeriss();
+        assert!(!c.allows_temporal(0, Dim::C, 2));
+        assert!(!c.allows_temporal(0, Dim::K, 4));
+        assert!(c.allows_temporal(0, Dim::R, 3));
+        assert!(c.allows_temporal(2, Dim::C, 64)); // DRAM free
+    }
+
+    #[test]
+    fn factorization_filter() {
+        let c = MapConstraints::eyeriss();
+        // 3 temporal slots + 1 spatial slot; C may only tile at GLB/DRAM
+        assert!(c.allows_factorization(3, Dim::C, &[1, 2, 4, 4]));
+        assert!(!c.allows_factorization(3, Dim::C, &[2, 1, 1, 16]));
+        // spatial slot content is not this struct's concern
+        assert!(c.allows_factorization(3, Dim::C, &[1, 1, 1, 32]));
+    }
+
+    #[test]
+    fn for_arch_lookup() {
+        assert!(MapConstraints::for_arch(&presets::eyeriss()).levels[0]
+            .temporal_dims
+            .is_some());
+        let mut a = presets::eyeriss();
+        a.name = "custom".into();
+        assert!(MapConstraints::for_arch(&a).levels[0].temporal_dims.is_none());
+    }
+
+    #[test]
+    fn mismatched_level_count_rejected() {
+        assert!(MapConstraints::none(2).validate(&presets::simba()).is_err());
+    }
+
+    #[test]
+    fn top_level_must_be_free() {
+        let mut c = MapConstraints::eyeriss();
+        c.levels[2] = LevelConstraint::only(&[Dim::P]);
+        assert!(c.validate(&presets::eyeriss()).is_err());
+    }
+}

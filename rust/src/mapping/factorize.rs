@@ -1,0 +1,182 @@
+//! Integer factorization utilities for tiling-factor enumeration.
+//!
+//! A mapping distributes each problem dimension `D` across `L` hierarchy
+//! slots as an ordered factorization `D = f_1 * f_2 * ... * f_L`. The
+//! mapspace enumerates (or samples) these ordered factorizations.
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: u64) -> Vec<u64> {
+    assert!(n > 0);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Prime factorization as (prime, exponent) pairs.
+pub fn prime_factors(mut n: u64) -> Vec<(u64, u32)> {
+    assert!(n > 0);
+    let mut out = Vec::new();
+    let mut p = 2;
+    while p * p <= n {
+        if n % p == 0 {
+            let mut e = 0;
+            while n % p == 0 {
+                n /= p;
+                e += 1;
+            }
+            out.push((p, e));
+        }
+        p += if p == 2 { 1 } else { 2 };
+    }
+    if n > 1 {
+        out.push((n, 1));
+    }
+    out
+}
+
+/// Number of ordered factorizations of `n` into exactly `slots` factors
+/// (factors of 1 allowed): product over primes of C(e + slots - 1, slots - 1).
+pub fn count_ordered_factorizations(n: u64, slots: usize) -> u64 {
+    if slots == 0 {
+        return u64::from(n == 1);
+    }
+    prime_factors(n)
+        .iter()
+        .map(|&(_, e)| binomial(e as u64 + slots as u64 - 1, slots as u64 - 1))
+        .product()
+}
+
+fn binomial(n: u64, k: u64) -> u64 {
+    let k = k.min(n - k);
+    let mut r: u128 = 1;
+    for i in 0..k {
+        r = r * (n - i) as u128 / (i + 1) as u128;
+    }
+    r as u64
+}
+
+/// Enumerate all ordered factorizations of `n` into exactly `slots`
+/// factors, invoking `f` with each (factors of 1 allowed).
+pub fn for_each_ordered_factorization(n: u64, slots: usize, mut f: impl FnMut(&[u64])) {
+    let mut buf = vec![1u64; slots];
+    rec(n, 0, slots, &mut buf, &mut f);
+
+    fn rec(rem: u64, i: usize, slots: usize, buf: &mut [u64], f: &mut impl FnMut(&[u64])) {
+        if i == slots - 1 {
+            buf[i] = rem;
+            f(buf);
+            return;
+        }
+        for d in divisors(rem) {
+            buf[i] = d;
+            rec(rem / d, i + 1, slots, buf, f);
+        }
+    }
+}
+
+/// Sample one ordered factorization of `n` into `slots` factors uniformly
+/// at random (per-prime stars-and-bars draw).
+pub fn random_ordered_factorization(
+    n: u64,
+    slots: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Vec<u64> {
+    let mut out = vec![1u64; slots.max(1)];
+    if slots == 0 {
+        return out;
+    }
+    for (p, e) in prime_factors(n) {
+        // distribute e identical prime factors into `slots` distinguishable
+        // bins uniformly over compositions (stars and bars sampling)
+        let mut remaining = e;
+        let mut bins = vec![0u32; slots];
+        // uniform composition: draw positions of bars among stars+bars
+        // simpler: repeated uniform assignment is NOT uniform over
+        // compositions, but over *assignments*; Timeloop's random mapper
+        // does per-factor uniform assignment too, which is what we mirror.
+        for _ in 0..e {
+            let b = rng.below(slots as u64) as usize;
+            bins[b] += 1;
+            remaining -= 1;
+        }
+        debug_assert_eq!(remaining, 0);
+        for (i, &b) in bins.iter().enumerate() {
+            out[i] *= p.pow(b);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(7), vec![1, 7]);
+        assert_eq!(divisors(112), vec![1, 2, 4, 7, 8, 14, 16, 28, 56, 112]);
+    }
+
+    #[test]
+    fn prime_factors_basic() {
+        assert_eq!(prime_factors(112), vec![(2, 4), (7, 1)]);
+        assert_eq!(prime_factors(97), vec![(97, 1)]);
+        assert_eq!(prime_factors(1), vec![]);
+    }
+
+    #[test]
+    fn count_matches_enumeration() {
+        for n in [1u64, 2, 12, 36, 112, 97] {
+            for slots in 1..=4 {
+                let mut cnt = 0u64;
+                for_each_ordered_factorization(n, slots, |fs| {
+                    assert_eq!(fs.iter().product::<u64>(), n);
+                    cnt += 1;
+                });
+                assert_eq!(
+                    cnt,
+                    count_ordered_factorizations(n, slots),
+                    "n={n} slots={slots}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn count_known_values() {
+        // 12 = 2^2*3 into 2 slots: C(3,1)*C(2,1) = 6: (1,12),(2,6),(3,4),(4,3),(6,2),(12,1)
+        assert_eq!(count_ordered_factorizations(12, 2), 6);
+        assert_eq!(count_ordered_factorizations(1, 3), 1);
+        // 112 = 2^4 * 7 into 3 slots: C(6,2) * C(3,2) = 15 * 3 = 45
+        assert_eq!(count_ordered_factorizations(112, 3), 45);
+    }
+
+    #[test]
+    fn random_factorization_valid() {
+        let mut r = Rng::new(5);
+        for n in [112u64, 36, 97, 1] {
+            for slots in 1..=4 {
+                for _ in 0..50 {
+                    let fs = random_ordered_factorization(n, slots, &mut r);
+                    assert_eq!(fs.len(), slots.max(1));
+                    assert_eq!(fs.iter().product::<u64>(), n);
+                }
+            }
+        }
+    }
+}

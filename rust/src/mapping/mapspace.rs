@@ -1,0 +1,345 @@
+//! Mapspace construction: random sampling and exhaustive enumeration of
+//! candidate mappings.
+//!
+//! The mapspace for a (layer, architecture) pair is the cross product of
+//! * ordered factorizations of each problem dim across the hierarchy
+//!   slots (one temporal slot per level, one spatial slot per fanout
+//!   level), and
+//! * temporal loop permutations per level.
+//!
+//! Exhaustive enumeration (Table I) iterates factorizations x spatial
+//! splits with the architecture's canonical dataflow permutation fixed,
+//! mirroring how Timeloop's counts are reported per mapspace constraint
+//! set; random sampling (the production mapper) additionally randomizes
+//! permutations.
+
+use super::constraints::MapConstraints;
+use super::factorize::{
+    count_ordered_factorizations, for_each_ordered_factorization, random_ordered_factorization,
+};
+use super::{check, Mapping};
+use crate::arch::Arch;
+use crate::quant::LayerQuant;
+use crate::util::rng::Rng;
+use crate::workload::{ConvLayer, Dim, DIMS};
+
+/// Hierarchy slots: temporal slots = one per level; spatial slots = the
+/// subset of levels with fanout > 1 (per dim, a factorization entry).
+#[derive(Debug, Clone)]
+pub struct MapSpace {
+    pub num_levels: usize,
+    /// Levels with fanout > 1, in level order.
+    pub spatial_levels: Vec<usize>,
+}
+
+impl MapSpace {
+    pub fn of(arch: &Arch) -> Self {
+        MapSpace {
+            num_levels: arch.levels.len(),
+            spatial_levels: arch
+                .levels
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.fanout > 1)
+                .map(|(i, _)| i)
+                .collect(),
+        }
+    }
+
+    /// Total slots a dim's size factorizes across.
+    pub fn slots(&self) -> usize {
+        self.num_levels + self.spatial_levels.len()
+    }
+
+    /// Upper bound on factorization-space size (ignoring permutations and
+    /// validity): product over dims of ordered-factorization counts.
+    pub fn factorization_space_size(&self, layer: &ConvLayer) -> f64 {
+        DIMS.iter()
+            .map(|&d| count_ordered_factorizations(layer.size(d), self.slots()) as f64)
+            .product()
+    }
+
+    /// Draw a uniformly random (not necessarily valid) mapping.
+    pub fn random_mapping(&self, layer: &ConvLayer, rng: &mut Rng) -> Mapping {
+        let mut m = Mapping::unit(self.num_levels);
+        for d in DIMS {
+            let fs = random_ordered_factorization(layer.size(d), self.slots(), rng);
+            // first `num_levels` entries -> temporal, rest -> spatial
+            for lv in 0..self.num_levels {
+                m.levels[lv].temporal[d.index()] = fs[lv];
+            }
+            for (si, &lv) in self.spatial_levels.iter().enumerate() {
+                m.levels[lv].spatial[d.index()] = fs[self.num_levels + si];
+            }
+        }
+        for lv in 0..self.num_levels {
+            let mut perm = DIMS;
+            rng.shuffle(&mut perm);
+            m.levels[lv].perm = perm;
+        }
+        m
+    }
+
+    /// Count (and optionally visit) every valid mapping in the reduced
+    /// exhaustive space: all factorizations x spatial splits, canonical
+    /// permutations. Intended for single layers (Table I); the visitor
+    /// runs under a hard `limit` to bound runtime.
+    ///
+    /// This enumerates the architecture's *constrained* mapspace
+    /// ([`MapConstraints::for_arch`]), matching how Timeloop counts are
+    /// reported. Use [`MapSpace::enumerate_valid_with`] to supply a
+    /// custom constraint set (or `MapConstraints::none` for the raw
+    /// space).
+    pub fn enumerate_valid(
+        &self,
+        arch: &Arch,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        limit: u64,
+        visit: impl FnMut(&Mapping),
+    ) -> EnumStats {
+        self.enumerate_valid_with(arch, layer, q, &MapConstraints::for_arch(arch), limit, visit)
+    }
+
+    /// [`MapSpace::enumerate_valid`] with an explicit constraint set.
+    pub fn enumerate_valid_with(
+        &self,
+        arch: &Arch,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        constraints: &MapConstraints,
+        limit: u64,
+        mut visit: impl FnMut(&Mapping),
+    ) -> EnumStats {
+        let slots = self.slots();
+        let dims: Vec<Dim> = DIMS.to_vec();
+        let mut factorizations: Vec<Vec<Vec<u64>>> = Vec::with_capacity(7);
+        for &d in &dims {
+            let mut fs = Vec::new();
+            for_each_ordered_factorization(layer.size(d), slots, |f| {
+                // constraint pre-filter: temporal slots must respect the
+                // per-level dim whitelist; spatial slots must respect
+                // the arch's spatial_dims (redundant with the checker
+                // but prunes the recursion enormously)
+                if !constraints.allows_factorization(self.num_levels, d, f) {
+                    return;
+                }
+                for (si, &lv) in self.spatial_levels.iter().enumerate() {
+                    if f[self.num_levels + si] > 1
+                        && !arch.levels[lv].spatial_dims.contains(&d)
+                    {
+                        return;
+                    }
+                }
+                fs.push(f.to_vec());
+            });
+            factorizations.push(fs);
+        }
+
+        let mut stats = EnumStats::default();
+        let mut m = Mapping::unit(self.num_levels);
+        // canonical permutation per level: the arch's natural dataflow
+        // order (keep DIMS order; the checker is permutation-insensitive,
+        // permutations only affect access counts, not validity).
+        self.rec_enumerate(arch, layer, q, &factorizations, 0, &mut m, limit, &mut stats, &mut visit);
+        stats
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rec_enumerate(
+        &self,
+        arch: &Arch,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        factorizations: &[Vec<Vec<u64>>],
+        di: usize,
+        m: &mut Mapping,
+        limit: u64,
+        stats: &mut EnumStats,
+        visit: &mut impl FnMut(&Mapping),
+    ) {
+        if stats.valid >= limit {
+            stats.truncated = true;
+            return;
+        }
+        if di == 7 {
+            stats.examined += 1;
+            if check(arch, layer, q, m).is_ok() {
+                stats.valid += 1;
+                visit(m);
+            }
+            return;
+        }
+        let d = DIMS[di];
+        for fs in &factorizations[di] {
+            // place factors
+            for lv in 0..self.num_levels {
+                m.levels[lv].temporal[d.index()] = fs[lv];
+            }
+            for (si, &lv) in self.spatial_levels.iter().enumerate() {
+                m.levels[lv].spatial[d.index()] = fs[self.num_levels + si];
+            }
+            // early prune 1: spatial product so far must not exceed fanout
+            let mut prune = false;
+            for &lv in &self.spatial_levels {
+                if m.levels[lv].spatial_product() > arch.levels[lv].fanout {
+                    prune = true;
+                    break;
+                }
+            }
+            // early prune 2: tile footprints only grow as more dims are
+            // placed, so a partial capacity overflow is final
+            if !prune && !partial_capacity_ok(arch, layer, q, m) {
+                prune = true;
+            }
+            if !prune {
+                self.rec_enumerate(arch, layer, q, factorizations, di + 1, m, limit, stats, visit);
+            }
+            if stats.truncated {
+                break;
+            }
+        }
+        // reset dim to 1s
+        for lv in 0..self.num_levels {
+            m.levels[lv].temporal[d.index()] = 1;
+        }
+        for &lv in &self.spatial_levels {
+            m.levels[lv].spatial[d.index()] = 1;
+        }
+    }
+}
+
+/// Monotone partial capacity check used for enumeration pruning: with
+/// unplaced dims at extent 1, current kept-tile word footprints are a
+/// lower bound on the final ones.
+fn partial_capacity_ok(
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    m: &Mapping,
+) -> bool {
+    use crate::mapping::tile_words;
+    use crate::workload::TENSORS;
+    for lv in 0..arch.levels.len() - 1 {
+        let al = &arch.levels[lv];
+        let mut shared = 0u64;
+        for t in TENSORS {
+            if !al.keeps_tensor(t) {
+                continue;
+            }
+            let words = tile_words(arch, layer, m, lv, t, q);
+            match &al.capacity {
+                crate::arch::Capacity::Unbounded => {}
+                crate::arch::Capacity::Shared(_) => shared += words,
+                crate::arch::Capacity::PerTensor(ws) => {
+                    if words > ws[t.index()] {
+                        return false;
+                    }
+                }
+            }
+        }
+        if let crate::arch::Capacity::Shared(avail) = al.capacity {
+            if shared > avail {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Outcome of an exhaustive enumeration.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EnumStats {
+    pub examined: u64,
+    pub valid: u64,
+    pub truncated: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::toy;
+    use crate::quant::LayerQuant;
+    use crate::workload::ConvLayer;
+
+    #[test]
+    fn random_mapping_products_match_dims() {
+        let a = toy();
+        let space = MapSpace::of(&a);
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 2);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let m = space.random_mapping(&l, &mut rng);
+            let totals = m.total_extents();
+            for d in DIMS {
+                assert_eq!(totals[d.index()], l.size(d), "{d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn some_random_mappings_are_valid() {
+        let a = toy();
+        let space = MapSpace::of(&a);
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let mut rng = Rng::new(2);
+        let q = LayerQuant::uniform(8);
+        let valid = (0..2000)
+            .filter(|_| check(&a, &l, &q, &space.random_mapping(&l, &mut rng)).is_ok())
+            .count();
+        assert!(valid > 0, "no valid mappings sampled");
+    }
+
+    #[test]
+    fn enumeration_counts_grow_with_lower_bitwidth() {
+        // the Table I effect on the toy arch
+        let a = toy();
+        let space = MapSpace::of(&a);
+        let l = ConvLayer::dw("dw", 8, 3, 8, 1);
+        let n16 = space
+            .enumerate_valid(&a, &l, &LayerQuant::uniform(16), u64::MAX, |_| {})
+            .valid;
+        let n8 = space
+            .enumerate_valid(&a, &l, &LayerQuant::uniform(8), u64::MAX, |_| {})
+            .valid;
+        let n2 = space
+            .enumerate_valid(&a, &l, &LayerQuant::uniform(2), u64::MAX, |_| {})
+            .valid;
+        assert!(n8 >= n16, "n8={n8} n16={n16}");
+        assert!(n2 > n8, "n2={n2} n8={n8}");
+        assert!(n16 > 0);
+    }
+
+    #[test]
+    fn enumeration_respects_limit() {
+        let a = toy();
+        let space = MapSpace::of(&a);
+        let l = ConvLayer::conv("t", 8, 16, 3, 16, 1);
+        let st = space.enumerate_valid(&a, &l, &LayerQuant::uniform(4), 50, |_| {});
+        assert!(st.truncated);
+        assert_eq!(st.valid, 50);
+    }
+
+    #[test]
+    fn visitor_sees_only_valid() {
+        let a = toy();
+        let space = MapSpace::of(&a);
+        let l = ConvLayer::dw("dw", 8, 3, 8, 1);
+        let q = LayerQuant::uniform(4);
+        let mut n = 0;
+        space.enumerate_valid(&a, &l, &q, u64::MAX, |m| {
+            check(&a, &l, &q, m).unwrap();
+            n += 1;
+        });
+        assert!(n > 0);
+    }
+
+    #[test]
+    fn mapspace_slots() {
+        let a = toy();
+        let s = MapSpace::of(&a);
+        assert_eq!(s.num_levels, 3);
+        assert_eq!(s.spatial_levels, vec![1]);
+        assert_eq!(s.slots(), 4);
+    }
+}

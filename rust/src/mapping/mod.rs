@@ -1,0 +1,406 @@
+//! Mapping representation and validity checking.
+//!
+//! A mapping assigns, for every storage level of the hierarchy:
+//! * temporal tiling factors per problem dim,
+//! * spatial tiling factors per dim (only at levels with fanout > 1),
+//! * a temporal loop permutation (innermost-first).
+//!
+//! Validity = (1) factor products reproduce the workload dims,
+//! (2) spatial factors fit the fanout and allowed-dim constraints,
+//! (3) every kept tile fits its buffer **in memory words after
+//! bit-packing** — the paper's extension: lower bit-widths shrink word
+//! footprints, admitting mappings that are invalid at 16 bits. This is
+//! exactly why Table I's mapping counts grow as precision drops.
+
+pub mod constraints;
+pub mod factorize;
+pub mod mapspace;
+
+use crate::arch::Arch;
+use crate::quant::{packed_words, unpacked_words, LayerQuant};
+use crate::workload::{ConvLayer, Dim, Tensor, DIMS, TENSORS};
+
+/// Per-level portion of a mapping.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LevelMapping {
+    /// Temporal tiling factors, indexed by `Dim::index()`.
+    pub temporal: [u64; 7],
+    /// Spatial factors (fanout below this level), indexed by dim.
+    pub spatial: [u64; 7],
+    /// Temporal loop order at this level, innermost first.
+    pub perm: [Dim; 7],
+}
+
+impl LevelMapping {
+    pub fn unit() -> Self {
+        LevelMapping {
+            temporal: [1; 7],
+            spatial: [1; 7],
+            perm: DIMS,
+        }
+    }
+
+    pub fn temporal_product(&self) -> u64 {
+        self.temporal.iter().product()
+    }
+
+    pub fn spatial_product(&self) -> u64 {
+        self.spatial.iter().product()
+    }
+}
+
+/// A complete mapping of one layer onto one architecture
+/// (`levels.len() == arch.levels.len()`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Mapping {
+    pub levels: Vec<LevelMapping>,
+}
+
+impl Mapping {
+    pub fn unit(num_levels: usize) -> Self {
+        Mapping {
+            levels: vec![LevelMapping::unit(); num_levels],
+        }
+    }
+
+    /// Cumulative tile extents at level `lv`: for each dim, the product
+    /// of all temporal and spatial factors at levels `<= lv`. This is the
+    /// per-instance data footprint boundary of level `lv`.
+    pub fn tile_extents(&self, lv: usize) -> [u64; 7] {
+        let mut t = [1u64; 7];
+        for l in &self.levels[..=lv] {
+            for d in 0..7 {
+                t[d] *= l.temporal[d] * l.spatial[d];
+            }
+        }
+        t
+    }
+
+    /// Per-dim product across all levels (must equal the workload dims).
+    pub fn total_extents(&self) -> [u64; 7] {
+        self.tile_extents(self.levels.len() - 1)
+    }
+
+    /// Number of parallel instances of level `lv` in the machine
+    /// (product of spatial factors at strictly higher levels).
+    pub fn instances(&self, lv: usize) -> u64 {
+        self.levels[lv + 1..]
+            .iter()
+            .map(|l| l.spatial_product())
+            .product()
+    }
+
+    /// Total MAC lanes used = product of all spatial factors.
+    pub fn pes_used(&self) -> u64 {
+        self.levels.iter().map(|l| l.spatial_product()).product()
+    }
+
+    /// Compact human-readable rendering (for logs / debugging).
+    pub fn render(&self, arch: &Arch) -> String {
+        let mut s = String::new();
+        for (i, (lm, al)) in self.levels.iter().zip(&arch.levels).enumerate().rev() {
+            s.push_str(&format!("L{i} {:<12}", al.name));
+            s.push_str(" T[");
+            for d in DIMS {
+                if lm.temporal[d.index()] > 1 {
+                    s.push_str(&format!("{}{} ", d.name(), lm.temporal[d.index()]));
+                }
+            }
+            s.push(']');
+            if lm.spatial_product() > 1 {
+                s.push_str(" S[");
+                for d in DIMS {
+                    if lm.spatial[d.index()] > 1 {
+                        s.push_str(&format!("{}{} ", d.name(), lm.spatial[d.index()]));
+                    }
+                }
+                s.push(']');
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Why a mapping is invalid (used by tests and the mapper's rejection
+/// statistics; mirrors the paper's "checker which checks for mapping
+/// violations").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    /// Factor product along `dim` does not reproduce the workload size.
+    FactorProduct(Dim),
+    /// Spatial factors exceed the level fanout.
+    FanoutExceeded { level: usize },
+    /// Spatial factor on a dim the level's dataflow does not allow.
+    SpatialDimNotAllowed { level: usize, dim: Dim },
+    /// A kept tile does not fit its buffer (in words, after packing).
+    CapacityExceeded {
+        level: usize,
+        tensor: Tensor,
+        needed_words: u64,
+        available_words: u64,
+    },
+    /// Spatial factors at a level with no fanout.
+    SpatialAtLeafLevel { level: usize },
+}
+
+/// Words occupied at `level` by tensor `t`'s tile, given quantization.
+pub fn tile_words(
+    arch: &Arch,
+    layer: &ConvLayer,
+    mapping: &Mapping,
+    lv: usize,
+    t: Tensor,
+    q: &LayerQuant,
+) -> u64 {
+    let tile = mapping.tile_extents(lv);
+    let elems = layer.tile_elements(t, &clamp_tile(layer, &tile));
+    let bits = q.of(t);
+    let wb = arch.word_bits;
+    if arch.bit_packing {
+        packed_words(elems, wb, bits)
+    } else {
+        unpacked_words(elems, wb, bits)
+    }
+}
+
+/// Clamp cumulative tile extents to the workload dims (products can only
+/// equal the dim when valid; during partial construction they may not).
+fn clamp_tile(layer: &ConvLayer, tile: &[u64; 7]) -> [u64; 7] {
+    let mut out = *tile;
+    for d in 0..7 {
+        out[d] = out[d].min(layer.dims[d]);
+    }
+    out
+}
+
+/// Full validity check. Returns the first violation found, or `Ok`.
+pub fn check(
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    mapping: &Mapping,
+) -> Result<(), Violation> {
+    assert_eq!(mapping.levels.len(), arch.levels.len());
+
+    // (1) factor products
+    let totals = mapping.total_extents();
+    for d in DIMS {
+        if totals[d.index()] != layer.size(d) {
+            return Err(Violation::FactorProduct(d));
+        }
+    }
+
+    // (2) spatial constraints
+    for (lv, (lm, al)) in mapping.levels.iter().zip(&arch.levels).enumerate() {
+        let sp = lm.spatial_product();
+        if al.fanout == 1 {
+            if sp != 1 {
+                return Err(Violation::SpatialAtLeafLevel { level: lv });
+            }
+            continue;
+        }
+        if sp > al.fanout {
+            return Err(Violation::FanoutExceeded { level: lv });
+        }
+        for d in DIMS {
+            if lm.spatial[d.index()] > 1 && !al.spatial_dims.contains(&d) {
+                return Err(Violation::SpatialDimNotAllowed { level: lv, dim: d });
+            }
+        }
+    }
+
+    // (3) capacity with bit-packing; DRAM (last level) is unbounded
+    for lv in 0..arch.levels.len() - 1 {
+        let al = &arch.levels[lv];
+        let mut shared_needed = 0u64;
+        for t in TENSORS {
+            if !al.keeps_tensor(t) {
+                continue;
+            }
+            let words = tile_words(arch, layer, mapping, lv, t, q);
+            match &al.capacity {
+                crate::arch::Capacity::Unbounded => {}
+                crate::arch::Capacity::Shared(_) => shared_needed += words,
+                crate::arch::Capacity::PerTensor(ws) => {
+                    let avail = ws[t.index()];
+                    if words > avail {
+                        return Err(Violation::CapacityExceeded {
+                            level: lv,
+                            tensor: t,
+                            needed_words: words,
+                            available_words: avail,
+                        });
+                    }
+                }
+            }
+        }
+        if let crate::arch::Capacity::Shared(avail) = al.capacity {
+            if shared_needed > avail {
+                return Err(Violation::CapacityExceeded {
+                    level: lv,
+                    tensor: Tensor::Inputs, // aggregate (shared pool)
+                    needed_words: shared_needed,
+                    available_words: avail,
+                });
+            }
+        }
+    }
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{eyeriss, toy};
+    use crate::quant::LayerQuant;
+    use crate::workload::ConvLayer;
+
+    fn small_layer() -> ConvLayer {
+        ConvLayer::conv("t", 4, 8, 3, 8, 1)
+    }
+
+    /// A hand-built valid mapping for `small_layer` on `toy`:
+    /// everything at DRAM except a tiny inner tile.
+    fn dram_heavy_mapping(arch_levels: usize, layer: &ConvLayer) -> Mapping {
+        let mut m = Mapping::unit(arch_levels);
+        // put all factors at the top level temporally
+        let top = arch_levels - 1;
+        for d in 0..7 {
+            m.levels[top].temporal[d] = layer.dims[d];
+        }
+        m
+    }
+
+    #[test]
+    fn unit_tile_fits_everywhere() {
+        let a = toy();
+        let l = small_layer();
+        let m = dram_heavy_mapping(a.levels.len(), &l);
+        check(&a, &l, &LayerQuant::uniform(8), &m).unwrap();
+    }
+
+    #[test]
+    fn factor_product_violation() {
+        let a = toy();
+        let l = small_layer();
+        let m = Mapping::unit(a.levels.len()); // products are all 1 != dims
+        assert!(matches!(
+            check(&a, &l, &LayerQuant::uniform(8), &m),
+            Err(Violation::FactorProduct(_))
+        ));
+    }
+
+    #[test]
+    fn capacity_depends_on_bitwidth() {
+        // toy spad = 16 shared words. A 3x3x4-input-channel weight tile =
+        // 36 elems: needs 18 words @8b packed (invalid), 9 words @4b ...
+        // wait: 36/2=18 > 16 invalid at 8b; 36/4=9 + inputs/outputs.
+        let mut a = toy();
+        a.levels[0].capacity = crate::arch::Capacity::PerTensor([16, 64, 64]);
+        let l = small_layer();
+        let mut m = dram_heavy_mapping(a.levels.len(), &l);
+        // pull a K=1,C=4,R=3,S=3 weight tile into the spad
+        m.levels[0].temporal[Dim::C.index()] = 4;
+        m.levels[0].temporal[Dim::R.index()] = 3;
+        m.levels[0].temporal[Dim::S.index()] = 3;
+        m.levels[2].temporal[Dim::C.index()] = 1;
+        m.levels[2].temporal[Dim::R.index()] = 1;
+        m.levels[2].temporal[Dim::S.index()] = 1;
+
+        let q8 = LayerQuant::uniform(8); // 36 elems / 2 per word = 18 > 16
+        assert!(matches!(
+            check(&a, &l, &q8, &m),
+            Err(Violation::CapacityExceeded { tensor: Tensor::Weights, .. })
+        ));
+        let q4 = LayerQuant::uniform(4); // 36 / 4 = 9 <= 16
+        check(&a, &l, &q4, &m).unwrap();
+
+        // without bit-packing even 4-bit stays invalid (1 elem/word)
+        a.bit_packing = false;
+        assert!(check(&a, &l, &q4, &m).is_err());
+    }
+
+    #[test]
+    fn spatial_constraints() {
+        let a = toy(); // buf level: fanout 4, dims {K, C, P}
+        let l = small_layer();
+        let mut m = dram_heavy_mapping(a.levels.len(), &l);
+
+        // spatial on a forbidden dim (R not allowed)
+        m.levels[1].spatial[Dim::R.index()] = 3;
+        m.levels[2].temporal[Dim::R.index()] = 1;
+        assert!(matches!(
+            check(&a, &l, &LayerQuant::uniform(8), &m),
+            Err(Violation::SpatialDimNotAllowed { dim: Dim::R, .. })
+        ));
+
+        // fanout exceeded: K=8 spatial > 4
+        let mut m2 = dram_heavy_mapping(a.levels.len(), &l);
+        m2.levels[1].spatial[Dim::K.index()] = 8;
+        m2.levels[2].temporal[Dim::K.index()] = 1;
+        assert!(matches!(
+            check(&a, &l, &LayerQuant::uniform(8), &m2),
+            Err(Violation::FanoutExceeded { level: 1 })
+        ));
+
+        // valid spatial K=4
+        let mut m3 = dram_heavy_mapping(a.levels.len(), &l);
+        m3.levels[1].spatial[Dim::K.index()] = 4;
+        m3.levels[2].temporal[Dim::K.index()] = 2;
+        check(&a, &l, &LayerQuant::uniform(8), &m3).unwrap();
+        assert_eq!(m3.pes_used(), 4);
+    }
+
+    #[test]
+    fn spatial_at_leaf_rejected() {
+        let a = toy();
+        let l = small_layer();
+        let mut m = dram_heavy_mapping(a.levels.len(), &l);
+        m.levels[0].spatial[Dim::K.index()] = 2;
+        m.levels[2].temporal[Dim::K.index()] = 4;
+        assert!(matches!(
+            check(&a, &l, &LayerQuant::uniform(8), &m),
+            Err(Violation::SpatialAtLeafLevel { level: 0 })
+        ));
+    }
+
+    #[test]
+    fn eyeriss_shared_glb_pool() {
+        // GLB keeps inputs+outputs in one shared pool: a tile that fits
+        // each alone but not together must be rejected.
+        let a = eyeriss();
+        let l = ConvLayer::pw("pw", 256, 256, 28);
+        let mut m = dram_heavy_mapping(a.levels.len(), &l);
+        // full ifmap + ofmap at GLB: 256*28*28 = 200k elems each @8b ->
+        // 100k words each > 55k shared
+        for d in [Dim::C, Dim::K, Dim::P, Dim::Q] {
+            m.levels[1].temporal[d.index()] = l.size(d);
+            m.levels[2].temporal[d.index()] = 1;
+        }
+        assert!(matches!(
+            check(&a, &l, &LayerQuant::uniform(8), &m),
+            Err(Violation::CapacityExceeded { level: 1, .. })
+        ));
+        // at 2 bits it fits: 200k/8 = 25k words each, 50k total < 55k
+        check(&a, &l, &LayerQuant::uniform(2), &m).unwrap();
+    }
+
+    #[test]
+    fn tile_extents_compose() {
+        let l = small_layer();
+        let a = toy();
+        let mut m = Mapping::unit(a.levels.len());
+        m.levels[0].temporal[Dim::K.index()] = 2;
+        m.levels[1].spatial[Dim::K.index()] = 2;
+        m.levels[1].temporal[Dim::K.index()] = 1;
+        m.levels[2].temporal[Dim::K.index()] = 2;
+        assert_eq!(m.tile_extents(0)[Dim::K.index()], 2);
+        assert_eq!(m.tile_extents(1)[Dim::K.index()], 4);
+        assert_eq!(m.total_extents()[Dim::K.index()], 8);
+        assert_eq!(m.instances(0), 2);
+        assert_eq!(m.instances(1), 1);
+        let _ = l;
+    }
+}

@@ -1,0 +1,351 @@
+//! Analytical loop-nest analysis: per-level, per-tensor access counting.
+//!
+//! This is the Timeloop-style model (tile footprints + temporal-reuse
+//! discounting + spatial multicast/reduction) that turns a mapping into
+//! memory traffic, from which energy and latency follow.
+//!
+//! Model summary, per tensor `t`:
+//! * The *keeper chain* is the subsequence of levels that store `t`
+//!   (bypassed levels pass traffic through); DRAM is always a keeper.
+//! * A keeper `k`'s tile is refetched from its parent keeper every time a
+//!   loop above `k` changes an index relevant to `t`. Iterations of the
+//!   innermost contiguous block of `t`-irrelevant temporal loops above
+//!   `k` reuse the resident tile (this is where the loop permutation
+//!   matters); once any relevant loop with factor > 1 intervenes, all
+//!   outer loops force refetches.
+//! * Spatial fanout replicates read tiles to children; a multicast
+//!   network delivers one parent read to all children sharing the tile
+//!   (discount = product of spatial factors over `t`-irrelevant dims).
+//!   For outputs the same factor models the spatial reduction tree.
+//! * The innermost keeper additionally serves one operand access per MAC
+//!   (read for weights/inputs; read+write for the accumulated output).
+//!
+//! All traffic is kept in *elements* here; the energy layer converts to
+//! memory words using the bit-packing factors (see `crate::energy`).
+
+use crate::arch::Arch;
+use crate::mapping::Mapping;
+use crate::workload::{ConvLayer, Tensor, TENSORS};
+
+/// Element-granular access counts for one (level, tensor) slot.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct Accesses {
+    /// Elements read out of this level (serving children / drains up).
+    pub reads: f64,
+    /// Elements written into this level (fills from parent / partial-sum
+    /// updates from below).
+    pub writes: f64,
+}
+
+impl Accesses {
+    pub fn total(&self) -> f64 {
+        self.reads + self.writes
+    }
+}
+
+/// Full nest-analysis result.
+#[derive(Debug, Clone)]
+pub struct NestAnalysis {
+    /// `[level][tensor]` element traffic.
+    pub accesses: Vec<[Accesses; 3]>,
+    /// Total multiply-accumulates.
+    pub macs: u64,
+    /// MAC lanes actually used (product of spatial factors).
+    pub pes_used: u64,
+}
+
+/// Number of times the tile of `t` held at level `k` is (re)loaded,
+/// walking every temporal loop above `k` from innermost to outermost.
+fn reloads(layer: &ConvLayer, mapping: &Mapping, k: usize, t: Tensor) -> f64 {
+    let mut reload = 1.0;
+    let mut contiguous = true; // still in the innermost irrelevant block
+    for lv in (k + 1)..mapping.levels.len() {
+        let lm = &mapping.levels[lv];
+        for &d in &lm.perm {
+            let f = lm.temporal[d.index()];
+            if f == 1 {
+                continue;
+            }
+            if contiguous && !layer.is_relevant(t, d) {
+                continue; // temporal reuse: resident tile survives
+            }
+            contiguous = false;
+            reload *= f as f64;
+        }
+    }
+    reload
+}
+
+/// Multicast (for reads) / spatial-reduction (for outputs) discount on
+/// the networks between child keeper `k` and parent keeper `pk`:
+/// product of spatial factors over `t`-irrelevant dims on levels whose
+/// network supports multicast.
+fn multicast_discount(
+    arch: &Arch,
+    layer: &ConvLayer,
+    mapping: &Mapping,
+    k: usize,
+    pk: usize,
+    t: Tensor,
+) -> f64 {
+    let mut mc = 1.0;
+    for lv in (k + 1)..=pk {
+        if !arch.levels[lv].multicast {
+            continue;
+        }
+        for d in crate::workload::DIMS {
+            let s = mapping.levels[lv].spatial[d.index()];
+            if s > 1 && !layer.is_relevant(t, d) {
+                mc *= s as f64;
+            }
+        }
+    }
+    mc
+}
+
+/// Per-instance tile footprint of `t` at level `lv`, in elements.
+fn tile_elems(layer: &ConvLayer, mapping: &Mapping, lv: usize, t: Tensor) -> f64 {
+    let mut tile = mapping.tile_extents(lv);
+    for d in 0..7 {
+        tile[d] = tile[d].min(layer.dims[d]);
+    }
+    layer.tile_elements(t, &tile) as f64
+}
+
+/// Run the analysis for a valid mapping.
+pub fn analyze(arch: &Arch, layer: &ConvLayer, mapping: &Mapping) -> NestAnalysis {
+    let nl = arch.levels.len();
+    let mut acc = vec![[Accesses::default(); 3]; nl];
+    let macs = layer.macs();
+
+    for t in TENSORS {
+        // keeper chain (innermost first; DRAM guaranteed last)
+        let keepers: Vec<usize> = (0..nl).filter(|&i| arch.levels[i].keeps_tensor(t)).collect();
+        debug_assert!(!keepers.is_empty());
+
+        // compute-level operand service at the innermost keeper
+        let k0 = keepers[0];
+        match t {
+            Tensor::Outputs => {
+                acc[k0][t.index()].reads += macs as f64;
+                acc[k0][t.index()].writes += macs as f64;
+            }
+            _ => acc[k0][t.index()].reads += macs as f64,
+        }
+
+        // inter-level traffic along the keeper chain
+        for w in keepers.windows(2) {
+            let (k, pk) = (w[0], w[1]);
+            let tile = tile_elems(layer, mapping, k, t);
+            let inst = mapping.instances(k) as f64;
+            let rl = reloads(layer, mapping, k, t);
+            let fills = tile * inst * rl;
+            let mc = multicast_discount(arch, layer, mapping, k, pk, t);
+            let full = layer.tensor_elements(t) as f64;
+
+            match t {
+                Tensor::Outputs => {
+                    // partial sums drain upward; spatial reduction merges
+                    // contributions from sibling children
+                    let up = fills / mc;
+                    acc[pk][t.index()].writes += up;
+                    // revisited output tiles are re-read from the parent
+                    // (all but the compulsory first visit)
+                    acc[pk][t.index()].reads += (up - full).max(0.0);
+                    // the child reads each drained tile out of its buffer
+                    acc[k][t.index()].reads += fills;
+                }
+                _ => {
+                    acc[pk][t.index()].reads += fills / mc;
+                    acc[k][t.index()].writes += fills;
+                }
+            }
+        }
+    }
+
+    NestAnalysis {
+        accesses: acc,
+        macs,
+        pes_used: mapping.pes_used(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::toy;
+    use crate::mapping::{check, Mapping};
+    use crate::quant::LayerQuant;
+    use crate::workload::{ConvLayer, Dim};
+
+    fn layer() -> ConvLayer {
+        ConvLayer::conv("t", 4, 8, 3, 8, 1)
+    }
+
+    /// all loops at DRAM (worst case: no on-chip reuse via tiling)
+    fn dram_heavy(l: &ConvLayer, nl: usize) -> Mapping {
+        let mut m = Mapping::unit(nl);
+        for d in 0..7 {
+            m.levels[nl - 1].temporal[d] = l.dims[d];
+        }
+        m
+    }
+
+    #[test]
+    fn conservation_lower_bounds() {
+        // every tensor must cross DRAM at least once: DRAM reads >= tensor
+        // footprint for W/I; DRAM writes >= footprint for O.
+        let a = toy();
+        let l = layer();
+        let m = dram_heavy(&l, a.levels.len());
+        check(&a, &l, &LayerQuant::uniform(8), &m).unwrap();
+        let r = analyze(&a, &l, &m);
+        let dram = a.levels.len() - 1;
+        assert!(r.accesses[dram][0].reads >= l.tensor_elements(Tensor::Weights) as f64);
+        assert!(r.accesses[dram][1].reads >= l.tensor_elements(Tensor::Inputs) as f64);
+        assert!(r.accesses[dram][2].writes >= l.tensor_elements(Tensor::Outputs) as f64);
+    }
+
+    #[test]
+    fn compute_level_serves_macs() {
+        let a = toy();
+        let l = layer();
+        let m = dram_heavy(&l, a.levels.len());
+        let r = analyze(&a, &l, &m);
+        // innermost level keeps all three tensors in `toy`
+        assert!(r.accesses[0][0].reads >= l.macs() as f64);
+        assert!(r.accesses[0][2].writes >= l.macs() as f64);
+        assert_eq!(r.macs, l.macs());
+    }
+
+    #[test]
+    fn weight_stationary_reduces_dram_weight_reads() {
+        // Two mappings: (a) weight-relevant loop innermost at DRAM above a
+        // weight tile, (b) weight-irrelevant loop (P) innermost. In (b)
+        // the weight tile is reused across P iterations -> fewer refetches.
+        let a = toy();
+        let l = layer();
+        let nl = a.levels.len();
+
+        // tile: full weights at spad? too big; keep K,C,R,S inner at buf.
+        let mut m = Mapping::unit(nl);
+        // inner level: one output pixel, full filter for one (k)
+        m.levels[0].temporal[Dim::C.index()] = 4;
+        m.levels[0].temporal[Dim::R.index()] = 3;
+        m.levels[0].temporal[Dim::S.index()] = 3;
+        // buf level: K at temporal
+        m.levels[1].temporal[Dim::K.index()] = 8;
+        // DRAM: P, Q loops
+        m.levels[2].temporal[Dim::P.index()] = 8;
+        m.levels[2].temporal[Dim::Q.index()] = 8;
+
+        let q = LayerQuant::uniform(2); // small so capacity passes
+        // (a) P,Q outermost but no irrelevant-inner discount change at
+        //     DRAM for weights: perm with P first (irrelevant to W inner)
+        let mut ma = m.clone();
+        ma.levels[2].perm = [Dim::P, Dim::Q, Dim::N, Dim::K, Dim::C, Dim::R, Dim::S];
+        check(&a, &l, &q, &ma).unwrap();
+        let ra = analyze(&a, &l, &ma);
+
+        // (b) same loops, but a relevant dummy? there are no relevant
+        // loops at DRAM; both P and Q are irrelevant to weights, so the
+        // whole DRAM level is one contiguous irrelevant block -> weights
+        // fetched exactly once.
+        let w_fp = l.tensor_elements(Tensor::Weights) as f64;
+        assert_eq!(ra.accesses[2][0].reads, w_fp);
+
+        // now force refetch: move K to DRAM, ordered outside P
+        let mut mb = Mapping::unit(nl);
+        mb.levels[0].temporal[Dim::C.index()] = 4;
+        mb.levels[0].temporal[Dim::R.index()] = 3;
+        mb.levels[0].temporal[Dim::S.index()] = 3;
+        mb.levels[2].temporal[Dim::K.index()] = 8;
+        mb.levels[2].temporal[Dim::P.index()] = 8;
+        mb.levels[2].temporal[Dim::Q.index()] = 8;
+        // innermost at DRAM: K (relevant) then P,Q outside -> P,Q re-runs
+        // K sequence -> weights refetched P*Q times
+        mb.levels[2].perm = [Dim::K, Dim::P, Dim::Q, Dim::N, Dim::C, Dim::R, Dim::S];
+        check(&a, &l, &q, &mb).unwrap();
+        let rb = analyze(&a, &l, &mb);
+        assert!(rb.accesses[2][0].reads >= 64.0 * w_fp * 0.99,
+            "expected ~{} got {}", 64.0 * w_fp, rb.accesses[2][0].reads);
+
+        // permutation with P,Q innermost (irrelevant block) then K:
+        // weights fetched only K-times total (once per k tile) = footprint
+        let mut mc = mb.clone();
+        mc.levels[2].perm = [Dim::P, Dim::Q, Dim::K, Dim::N, Dim::C, Dim::R, Dim::S];
+        let rc = analyze(&a, &l, &mc);
+        assert!(rc.accesses[2][0].reads < rb.accesses[2][0].reads / 10.0);
+    }
+
+    #[test]
+    fn multicast_discounts_parent_reads() {
+        // spatial K at buf level: input tiles are identical across K
+        // children -> multicast serves them with one GLB read each.
+        let a = toy(); // buf: fanout 4, multicast, dims {K,C,P}
+        let l = layer();
+        let nl = a.levels.len();
+        let mut m = dram_heavy(&l, nl);
+        m.levels[1].spatial[Dim::K.index()] = 4;
+        m.levels[2].temporal[Dim::K.index()] = 2;
+        let q = LayerQuant::uniform(4);
+        check(&a, &l, &q, &m).unwrap();
+        let with_spatial = analyze(&a, &l, &m);
+
+        let m_nospatial = dram_heavy(&l, nl);
+        let base = analyze(&a, &l, &m_nospatial);
+        // input reads at buf level (serving spads) should not exceed the
+        // non-spatial case by the fanout factor; with multicast the
+        // parent-read side stays equal while 4 children are fed.
+        assert!(with_spatial.accesses[1][1].reads <= base.accesses[1][1].reads * 1.01);
+        assert_eq!(with_spatial.pes_used, 4);
+    }
+
+    #[test]
+    fn outputs_write_up_once_when_reduction_inner() {
+        let a = toy();
+        let l = layer();
+        let m = dram_heavy(&l, a.levels.len());
+        let r = analyze(&a, &l, &m);
+        let dram = a.levels.len() - 1;
+        let o_fp = l.tensor_elements(Tensor::Outputs) as f64;
+        // canonical perm [N,K,C,R,S,P,Q]: C,R,S (reduction) are NOT the
+        // innermost block... N=1,K relevant. With K innermost (factor 8),
+        // contiguous breaks immediately -> drains = K*C*R*S*P*Q... the
+        // precise value depends on perm; we only assert the lower bound
+        // and that re-reads = writes - footprint.
+        assert!(r.accesses[dram][2].writes >= o_fp);
+        assert!(
+            (r.accesses[dram][2].reads - (r.accesses[dram][2].writes - o_fp)).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn reuse_invariance_dram_traffic_at_least_footprint() {
+        // property-ish: for random valid mappings, DRAM traffic never
+        // drops below compulsory traffic
+        use crate::mapping::mapspace::MapSpace;
+        use crate::util::rng::Rng;
+        let a = toy();
+        let l = layer();
+        let space = MapSpace::of(&a);
+        let mut rng = Rng::new(42);
+        let q = LayerQuant::uniform(8);
+        let mut tested = 0;
+        for _ in 0..500 {
+            let m = space.random_mapping(&l, &mut rng);
+            if check(&a, &l, &q, &m).is_err() {
+                continue;
+            }
+            tested += 1;
+            let r = analyze(&a, &l, &m);
+            let dram = a.levels.len() - 1;
+            assert!(r.accesses[dram][0].reads + 1e-9 >= l.tensor_elements(Tensor::Weights) as f64);
+            assert!(r.accesses[dram][1].reads + 1e-9 >= l.tensor_elements(Tensor::Inputs) as f64);
+            assert!(r.accesses[dram][2].writes + 1e-9 >= l.tensor_elements(Tensor::Outputs) as f64);
+            // and macs served at innermost keepers
+            assert!(r.accesses[0][0].reads + 1e-9 >= l.macs() as f64);
+        }
+        assert!(tested > 5, "too few valid samples: {tested}");
+    }
+}

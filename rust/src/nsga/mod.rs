@@ -1,0 +1,424 @@
+//! NSGA-II multi-objective genetic algorithm (Deb et al., 2002),
+//! specialized for quantization genomes but generic over the evaluator.
+//!
+//! The paper's configuration (§III-C, §IV):
+//! * genome: per-layer `(q_a, q_w)` integer tuples, 2..=8 bits;
+//! * initial population: uniformly quantized configurations;
+//! * uniform crossover: each integer from either parent with p=1/2;
+//! * mutation: with `p_mutAcc` reset one random layer to 8/8; with
+//!   `p_mut` replace one random integer with a random valid value;
+//! * objectives: minimize CNN error and EDP (both minimized);
+//! * selection: fast non-dominated sort + crowding distance.
+
+use crate::quant::{QuantConfig, QMAX, QMIN};
+use crate::util::rng::Rng;
+
+/// One evaluated individual.
+#[derive(Debug, Clone)]
+pub struct Individual {
+    pub genome: QuantConfig,
+    /// Objective values, all minimized.
+    pub objectives: Vec<f64>,
+}
+
+/// NSGA-II hyper-parameters (paper defaults from §IV).
+#[derive(Debug, Clone, Copy)]
+pub struct NsgaConfig {
+    /// Parent population size |P| (paper: 32).
+    pub population: usize,
+    /// Offspring per generation |Q| (paper: {8, 16, 32}).
+    pub offspring: usize,
+    /// Per-individual probability of the random-gene mutation (10%).
+    pub p_mut: f64,
+    /// Per-individual probability of the reset-layer-to-8/8 mutation (5%).
+    pub p_mut_acc: f64,
+    pub generations: usize,
+    pub seed: u64,
+}
+
+impl Default for NsgaConfig {
+    fn default() -> Self {
+        NsgaConfig {
+            population: 32,
+            offspring: 16,
+            p_mut: 0.10,
+            p_mut_acc: 0.05,
+            generations: 20,
+            seed: 0xDEB2002,
+        }
+    }
+}
+
+/// `a` Pareto-dominates `b` (all objectives <=, at least one <).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Fast non-dominated sort; returns fronts of indices (front 0 = Pareto).
+pub fn non_dominated_sort(pop: &[Individual]) -> Vec<Vec<usize>> {
+    let n = pop.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut dom_count = vec![0usize; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            if dominates(&pop[i].objectives, &pop[j].objectives) {
+                dominated_by[i].push(j);
+            } else if dominates(&pop[j].objectives, &pop[i].objectives) {
+                dom_count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance within one front (NSGA-II diversity measure).
+pub fn crowding_distance(pop: &[Individual], front: &[usize]) -> Vec<f64> {
+    let m = pop[front[0]].objectives.len();
+    let n = front.len();
+    let mut dist = vec![0.0f64; n];
+    for k in 0..m {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            pop[front[a]].objectives[k]
+                .partial_cmp(&pop[front[b]].objectives[k])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        dist[order[0]] = f64::INFINITY;
+        dist[order[n - 1]] = f64::INFINITY;
+        let lo = pop[front[order[0]]].objectives[k];
+        let hi = pop[front[order[n - 1]]].objectives[k];
+        if hi <= lo {
+            continue;
+        }
+        for w in 1..n - 1 {
+            let prev = pop[front[order[w - 1]]].objectives[k];
+            let next = pop[front[order[w + 1]]].objectives[k];
+            dist[order[w]] += (next - prev) / (hi - lo);
+        }
+    }
+    dist
+}
+
+/// Environmental selection (rank + crowding): keep the best `size`.
+pub fn environmental_select(pop: Vec<Individual>, size: usize) -> Vec<Individual> {
+    if pop.len() <= size {
+        return pop;
+    }
+    let fronts = non_dominated_sort(&pop);
+    let mut chosen: Vec<usize> = Vec::with_capacity(size);
+    for front in &fronts {
+        if chosen.len() + front.len() <= size {
+            chosen.extend_from_slice(front);
+        } else {
+            let dist = crowding_distance(&pop, front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| {
+                dist[b].partial_cmp(&dist[a]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            chosen.extend(order.iter().take(size - chosen.len()).map(|&w| front[w]));
+            break;
+        }
+    }
+    chosen.into_iter().map(|i| pop[i].clone()).collect()
+}
+
+/// Paper's uniform crossover: each gene from either parent, p=1/2.
+pub fn uniform_crossover(a: &QuantConfig, b: &QuantConfig, rng: &mut Rng) -> QuantConfig {
+    debug_assert_eq!(a.len(), b.len());
+    let layers = a
+        .layers
+        .iter()
+        .zip(&b.layers)
+        .map(|(&(aa, aw), &(ba, bw))| {
+            (
+                if rng.chance(0.5) { aa } else { ba },
+                if rng.chance(0.5) { aw } else { bw },
+            )
+        })
+        .collect();
+    QuantConfig {
+        layers,
+        last_qo: a.last_qo,
+    }
+}
+
+/// Paper's mutations: `p_mut_acc` -> reset one random layer to 8/8;
+/// `p_mut` -> replace one random gene with a random valid bit-width.
+pub fn mutate(qc: &mut QuantConfig, p_mut: f64, p_mut_acc: f64, rng: &mut Rng) {
+    if rng.chance(p_mut_acc) {
+        let i = rng.below(qc.len() as u64) as usize;
+        qc.layers[i] = (8, 8);
+    }
+    if rng.chance(p_mut) {
+        let i = rng.below(qc.len() as u64) as usize;
+        let q = QMIN + rng.below((QMAX - QMIN + 1) as u64) as u8;
+        if rng.chance(0.5) {
+            qc.layers[i].0 = q;
+        } else {
+            qc.layers[i].1 = q;
+        }
+    }
+}
+
+/// One NSGA-II run over a user-supplied evaluator.
+///
+/// `evaluate(genomes)` is called with the genomes needing objectives
+/// (initial population, then each generation's offspring — parents carry
+/// their values, matching the paper's note that |P| has minimal cost).
+/// `on_generation(gen, population)` observes the parent population after
+/// each environmental selection (Fig. 5 snapshots). Returns the final
+/// non-dominated front.
+pub fn run<E, O>(
+    num_layers: usize,
+    cfg: &NsgaConfig,
+    mut evaluate: E,
+    mut on_generation: O,
+) -> Vec<Individual>
+where
+    E: FnMut(&[QuantConfig]) -> Vec<Vec<f64>>,
+    O: FnMut(usize, &[Individual]),
+{
+    let mut rng = Rng::new(cfg.seed);
+
+    // initial population: uniformly quantized configurations (paper)
+    let genomes: Vec<QuantConfig> = (0..cfg.population)
+        .map(|i| {
+            let q = QMIN + (i as u8 % (QMAX - QMIN + 1));
+            QuantConfig::uniform(num_layers, q)
+        })
+        .collect();
+    let objs = evaluate(&genomes);
+    assert_eq!(objs.len(), genomes.len(), "evaluator arity");
+    let mut pop: Vec<Individual> = genomes
+        .into_iter()
+        .zip(objs)
+        .map(|(genome, objectives)| Individual { genome, objectives })
+        .collect();
+    pop = environmental_select(pop, cfg.population);
+    on_generation(0, &pop);
+
+    for gen in 1..=cfg.generations {
+        let mut offspring: Vec<QuantConfig> = Vec::with_capacity(cfg.offspring);
+        for _ in 0..cfg.offspring {
+            let pa = &pop[rng.below(pop.len() as u64) as usize].genome;
+            let pb = &pop[rng.below(pop.len() as u64) as usize].genome;
+            let mut child = uniform_crossover(pa, pb, &mut rng);
+            mutate(&mut child, cfg.p_mut, cfg.p_mut_acc, &mut rng);
+            offspring.push(child);
+        }
+        let objs = evaluate(&offspring);
+        assert_eq!(objs.len(), offspring.len(), "evaluator arity");
+        for (genome, objectives) in offspring.into_iter().zip(objs) {
+            pop.push(Individual { genome, objectives });
+        }
+        pop = environmental_select(pop, cfg.population);
+        on_generation(gen, &pop);
+    }
+
+    // final answer: the non-dominated front (paper filters dominated)
+    let fronts = non_dominated_sort(&pop);
+    fronts[0].iter().map(|&i| pop[i].clone()).collect()
+}
+
+/// Extract the Pareto front (objective vectors) from a set of points,
+/// sorted by the first objective. Utility for reports/benches.
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let mut front: Vec<Vec<f64>> = Vec::new();
+    for p in points {
+        if points.iter().any(|q| dominates(q, p)) {
+            continue;
+        }
+        if !front.contains(p) {
+            front.push(p.clone());
+        }
+    }
+    front.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap_or(std::cmp::Ordering::Equal));
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ind(objs: &[f64]) -> Individual {
+        Individual {
+            genome: QuantConfig::uniform(2, 8),
+            objectives: objs.to_vec(),
+        }
+    }
+
+    #[test]
+    fn dominance_relation() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0])); // incomparable
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal
+    }
+
+    #[test]
+    fn sort_fronts() {
+        let pop = vec![
+            ind(&[1.0, 4.0]),
+            ind(&[2.0, 3.0]),
+            ind(&[3.0, 2.0]),
+            ind(&[4.0, 4.0]), // dominated by (2,3) and (3,2)
+            ind(&[5.0, 5.0]), // dominated by everything in front 0 and 1
+        ];
+        let fronts = non_dominated_sort(&pop);
+        assert_eq!(fronts[0], vec![0, 1, 2]);
+        assert_eq!(fronts[1], vec![3]);
+        assert_eq!(fronts[2], vec![4]);
+    }
+
+    #[test]
+    fn crowding_extremes_infinite() {
+        let pop = vec![ind(&[1.0, 4.0]), ind(&[2.0, 3.0]), ind(&[3.0, 2.0])];
+        let d = crowding_distance(&pop, &[0, 1, 2]);
+        assert!(d[0].is_infinite());
+        assert!(d[2].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn environmental_selection_prefers_front0_and_spread() {
+        let pop = vec![
+            ind(&[1.0, 5.0]),
+            ind(&[2.0, 4.0]),
+            ind(&[3.0, 3.0]),
+            ind(&[4.0, 2.0]),
+            ind(&[5.0, 1.0]),
+            ind(&[6.0, 6.0]), // dominated
+        ];
+        let sel = environmental_select(pop, 4);
+        assert_eq!(sel.len(), 4);
+        assert!(sel.iter().all(|i| i.objectives != vec![6.0, 6.0]));
+        // extremes survive (infinite crowding)
+        assert!(sel.iter().any(|i| i.objectives == vec![1.0, 5.0]));
+        assert!(sel.iter().any(|i| i.objectives == vec![5.0, 1.0]));
+    }
+
+    #[test]
+    fn selection_is_noop_when_small() {
+        let pop = vec![ind(&[1.0, 1.0])];
+        assert_eq!(environmental_select(pop, 4).len(), 1);
+    }
+
+    #[test]
+    fn crossover_genes_come_from_parents() {
+        let mut rng = Rng::new(3);
+        let a = QuantConfig::uniform(10, 2);
+        let b = QuantConfig::uniform(10, 8);
+        for _ in 0..20 {
+            let c = uniform_crossover(&a, &b, &mut rng);
+            for (i, &(qa, qw)) in c.layers.iter().enumerate() {
+                assert!(qa == 2 || qa == 8, "layer {i}");
+                assert!(qw == 2 || qw == 8, "layer {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_keeps_genome_valid() {
+        let mut rng = Rng::new(9);
+        let mut qc = QuantConfig::uniform(28, 5);
+        for _ in 0..500 {
+            mutate(&mut qc, 0.5, 0.5, &mut rng);
+            for &(qa, qw) in &qc.layers {
+                assert!((QMIN..=QMAX).contains(&qa));
+                assert!((QMIN..=QMAX).contains(&qw));
+            }
+        }
+    }
+
+    #[test]
+    fn run_converges_on_synthetic_problem() {
+        // objectives: f1 = total bits (minimize), f2 = "error" =
+        // sum (8-q)^2 (minimize) -> a clean trade-off curve.
+        let cfg = NsgaConfig {
+            population: 16,
+            offspring: 8,
+            generations: 30,
+            seed: 4,
+            ..NsgaConfig::default()
+        };
+        let evaluate = |gs: &[QuantConfig]| {
+            gs.iter()
+                .map(|g| {
+                    let bits: f64 = g.layers.iter().map(|&(a, w)| (a + w) as f64).sum();
+                    let err: f64 = g
+                        .layers
+                        .iter()
+                        .map(|&(a, w)| {
+                            ((8 - a.min(8)) as f64).powi(2) + ((8 - w.min(8)) as f64).powi(2)
+                        })
+                        .sum();
+                    vec![bits, err]
+                })
+                .collect()
+        };
+        let mut gens_seen = 0;
+        let front = run(6, &cfg, evaluate, |_, _| gens_seen += 1);
+        assert_eq!(gens_seen, cfg.generations + 1);
+        assert!(!front.is_empty());
+        // front must be mutually non-dominated
+        for a in &front {
+            for b in &front {
+                assert!(
+                    !dominates(&a.objectives, &b.objectives) || a.objectives == b.objectives
+                );
+            }
+        }
+        // and should reach near-extreme points on both objectives
+        let min_bits = front
+            .iter()
+            .map(|i| i.objectives[0])
+            .fold(f64::INFINITY, f64::min);
+        let min_err = front
+            .iter()
+            .map(|i| i.objectives[1])
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_bits <= 6.0 * 2.0 * 3.0, "min_bits={min_bits}");
+        assert!(min_err <= 10.0, "min_err={min_err}");
+    }
+
+    #[test]
+    fn pareto_front_util() {
+        let pts = vec![
+            vec![1.0, 4.0],
+            vec![2.0, 3.0],
+            vec![2.5, 3.5], // dominated by (2,3)
+            vec![3.0, 1.0],
+            vec![1.0, 4.0], // duplicate
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![vec![1.0, 4.0], vec![2.0, 3.0], vec![3.0, 1.0]]);
+    }
+}

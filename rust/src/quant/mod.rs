@@ -1,0 +1,272 @@
+//! Mixed-precision quantization configurations and bit-packing.
+//!
+//! The paper's central extension to Timeloop: every workload tensor
+//! carries a bit-width `(q_a, q_w, q_o)`, and storage levels pack
+//! `floor(word_bits / q)` elements into one memory word ("bit-packing",
+//! after BitFlow [17]). This shrinks both the *capacity footprint* of a
+//! tile (more mappings become valid) and the *word traffic* on every
+//! memory interface (less energy).
+//!
+//! A network-level configuration is the paper's "linear string of tuples
+//! of integers": per layer `(q_a, q_w)`, with the output bit-width of
+//! layer `i` defined as the input bit-width of layer `i+1` (8 bits for
+//! the last layer).
+
+use crate::workload::Tensor;
+
+/// Paper's search range: 2..=8 bits for weights and activations.
+pub const QMIN: u8 = 2;
+pub const QMAX: u8 = 8;
+
+/// Bit-widths of one layer's three tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerQuant {
+    /// Activations (layer inputs).
+    pub qa: u8,
+    /// Weights.
+    pub qw: u8,
+    /// Outputs / partial sums as stored to the next level (the paper's
+    /// `q_o`; equals the next layer's `q_a`).
+    pub qo: u8,
+}
+
+impl LayerQuant {
+    pub fn uniform(q: u8) -> Self {
+        LayerQuant { qa: q, qw: q, qo: q }
+    }
+
+    pub fn of(&self, t: Tensor) -> u8 {
+        match t {
+            Tensor::Weights => self.qw,
+            Tensor::Inputs => self.qa,
+            Tensor::Outputs => self.qo,
+        }
+    }
+
+    /// Canonical representative of this quantization's *packing
+    /// equivalence class*: the mapping engine observes bit-widths only
+    /// through `pack_factor`, so e.g. 6/7/8 bits at a 16-bit word are the
+    /// same workload (pack factor 2). Canonicalizing lets the mapper
+    /// cache and its RNG seed treat them identically — which also makes
+    /// the paper's "no benefit for x >= 6" plateau exact.
+    pub fn canonical(&self, word_bits: u32, bit_packing: bool) -> LayerQuant {
+        let canon = |q: u8| -> u8 {
+            if bit_packing {
+                (word_bits as u64 / pack_factor(word_bits, q)) as u8
+            } else {
+                // without packing only ceil(q/word) matters
+                (crate::util::ceil_div(q as u64, word_bits as u64) * word_bits as u64) as u8
+            }
+        };
+        LayerQuant {
+            qa: canon(self.qa),
+            qw: canon(self.qw),
+            qo: canon(self.qo),
+        }
+    }
+}
+
+/// How many data elements of width `q` bits fit in one `word_bits` memory
+/// word under bit-packing; without packing this is 1 (one element per
+/// word, the "naïve approach" in the paper).
+///
+/// Elements never straddle words (that is what both BitFlow-style packing
+/// and the Timeloop extension assume), so the packing factor is
+/// `floor(word_bits / q)`, min 1.
+#[inline]
+pub fn pack_factor(word_bits: u32, q: u8) -> u64 {
+    ((word_bits as u64) / (q as u64).max(1)).max(1)
+}
+
+/// Memory words needed for `elements` values of width `q` bits.
+#[inline]
+pub fn packed_words(elements: u64, word_bits: u32, q: u8) -> u64 {
+    crate::util::ceil_div(elements, pack_factor(word_bits, q))
+}
+
+/// Words needed without bit-packing (one element per word; elements wider
+/// than the word take multiple words).
+#[inline]
+pub fn unpacked_words(elements: u64, word_bits: u32, q: u8) -> u64 {
+    elements * crate::util::ceil_div(q as u64, word_bits as u64)
+}
+
+/// A full-network mixed-precision configuration: per layer `(q_a, q_w)`.
+///
+/// This is the NSGA-II genome. `q_o` is derived, never stored.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct QuantConfig {
+    /// (q_a, q_w) per layer.
+    pub layers: Vec<(u8, u8)>,
+    /// Output bit-width of the final layer (paper: constant 8).
+    pub last_qo: u8,
+}
+
+impl QuantConfig {
+    pub fn uniform(num_layers: usize, q: u8) -> Self {
+        QuantConfig {
+            layers: vec![(q, q); num_layers],
+            last_qo: 8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Per-layer `(q_a, q_w, q_o)` with the paper's output-chaining rule.
+    pub fn layer(&self, i: usize) -> LayerQuant {
+        let (qa, qw) = self.layers[i];
+        let qo = if i + 1 < self.layers.len() {
+            self.layers[i + 1].0
+        } else {
+            self.last_qo
+        };
+        LayerQuant { qa, qw, qo }
+    }
+
+    /// All layers as resolved `LayerQuant`s.
+    pub fn resolved(&self) -> Vec<LayerQuant> {
+        (0..self.len()).map(|i| self.layer(i)).collect()
+    }
+
+    /// The paper's flat integer-string encoding: `[qa0, qw0, qa1, qw1, ..]`
+    /// (56 integers for MobileNetV1).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(self.len() * 2);
+        for &(qa, qw) in &self.layers {
+            v.push(qa);
+            v.push(qw);
+        }
+        v
+    }
+
+    pub fn decode(genome: &[u8], last_qo: u8) -> Result<Self, String> {
+        if genome.len() % 2 != 0 {
+            return Err(format!("genome length {} is odd", genome.len()));
+        }
+        for &g in genome {
+            if !(QMIN..=QMAX).contains(&g) && g != 16 {
+                return Err(format!("bit-width {g} outside 2..=8 (or 16)"));
+            }
+        }
+        Ok(QuantConfig {
+            layers: genome.chunks(2).map(|c| (c[0], c[1])).collect(),
+            last_qo,
+        })
+    }
+
+    /// Naïve model size in bits: sum over layers of
+    /// `weight_elements * q_w` — the quantity a hardware-unaware method
+    /// minimizes (paper Fig. 1 x-axis).
+    pub fn model_size_bits(&self, layers: &[crate::workload::ConvLayer]) -> u64 {
+        assert_eq!(layers.len(), self.len());
+        layers
+            .iter()
+            .zip(&self.layers)
+            .map(|(l, &(_, qw))| l.tensor_elements(Tensor::Weights) * qw as u64)
+            .sum()
+    }
+
+    /// Weight-memory word count after bit-packing (paper Fig. 1(a) y-axis).
+    pub fn weight_memory_words(
+        &self,
+        layers: &[crate::workload::ConvLayer],
+        word_bits: u32,
+    ) -> u64 {
+        assert_eq!(layers.len(), self.len());
+        layers
+            .iter()
+            .zip(&self.layers)
+            .map(|(l, &(_, qw))| packed_words(l.tensor_elements(Tensor::Weights), word_bits, qw))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::mobilenet_v1;
+
+    #[test]
+    fn pack_factor_16bit_word() {
+        // the paper's observation: for word size 16, no packing benefit
+        // change within q in {6,7,8} (factor 2), none at all for q > 8
+        assert_eq!(pack_factor(16, 16), 1);
+        assert_eq!(pack_factor(16, 9), 1);
+        assert_eq!(pack_factor(16, 8), 2);
+        assert_eq!(pack_factor(16, 7), 2);
+        assert_eq!(pack_factor(16, 6), 2);
+        assert_eq!(pack_factor(16, 5), 3);
+        assert_eq!(pack_factor(16, 4), 4);
+        assert_eq!(pack_factor(16, 3), 5);
+        assert_eq!(pack_factor(16, 2), 8);
+    }
+
+    #[test]
+    fn packed_words_rounding() {
+        assert_eq!(packed_words(10, 16, 8), 5);
+        assert_eq!(packed_words(11, 16, 8), 6);
+        assert_eq!(packed_words(1, 16, 2), 1);
+        assert_eq!(packed_words(0, 16, 4), 0);
+        // unpacked: one element per word regardless of q <= word
+        assert_eq!(unpacked_words(10, 16, 4), 10);
+        assert_eq!(unpacked_words(10, 16, 16), 10);
+    }
+
+    #[test]
+    fn qo_chains_to_next_layers_qa() {
+        let mut c = QuantConfig::uniform(3, 8);
+        c.layers[1].0 = 4; // layer1 qa = 4
+        assert_eq!(c.layer(0).qo, 4);
+        assert_eq!(c.layer(1).qo, 8);
+        assert_eq!(c.layer(2).qo, 8); // last layer -> last_qo
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut c = QuantConfig::uniform(28, 8);
+        c.layers[3] = (2, 5);
+        c.layers[27] = (7, 3);
+        let g = c.encode();
+        assert_eq!(g.len(), 56); // paper: MobileNetV1 string = 56 integers
+        let c2 = QuantConfig::decode(&g, 8).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn decode_rejects_bad() {
+        assert!(QuantConfig::decode(&[8, 8, 8], 8).is_err());
+        assert!(QuantConfig::decode(&[1, 8], 8).is_err());
+        assert!(QuantConfig::decode(&[9, 8], 8).is_err());
+        assert!(QuantConfig::decode(&[16, 16], 8).is_ok()); // 16-bit baseline allowed
+    }
+
+    #[test]
+    fn model_size_vs_words_divergence() {
+        // the Fig.1 effect in miniature: equal model size, different word
+        // count. 5-bit and 4-bit pack differently (3 vs 4 per word).
+        let layers = mobilenet_v1();
+        let c8 = QuantConfig::uniform(28, 8);
+        let c4 = QuantConfig::uniform(28, 4);
+        assert_eq!(
+            c8.model_size_bits(&layers),
+            2 * c4.model_size_bits(&layers)
+        );
+        assert_eq!(
+            c8.weight_memory_words(&layers, 16),
+            2 * c4.weight_memory_words(&layers, 16)
+        );
+        // 6 bits: size = 1.5x of 4-bit, but words = 2x of 4-bit
+        let c6 = QuantConfig::uniform(28, 6);
+        assert!(c6.model_size_bits(&layers) < c8.model_size_bits(&layers));
+        assert_eq!(
+            c6.weight_memory_words(&layers, 16),
+            c8.weight_memory_words(&layers, 16)
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! Experiment reporting: ASCII tables, CSV/JSON dumps, SVG figures, and
+//! Pareto-front formatting shared by the benches that regenerate each
+//! paper artifact.
+
+pub mod svg;
+
+use crate::baselines::Candidate;
+use std::fmt::Write as _;
+
+/// Render an ASCII table with a header row.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            let _ = write!(out, "+{}", "-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        let _ = write!(out, "| {:<w$} ", h, w = widths[i]);
+    }
+    out.push_str("|\n");
+    sep(&mut out);
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            let _ = write!(out, "| {:<w$} ", c, w = widths[i]);
+        }
+        out.push_str("|\n");
+    }
+    sep(&mut out);
+    out
+}
+
+/// CSV rendering (comma-escaping via quoting).
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let esc = |s: &str| {
+        if s.contains(',') || s.contains('"') || s.contains('\n') {
+            format!("\"{}\"", s.replace('"', "\"\""))
+        } else {
+            s.to_string()
+        }
+    };
+    let mut out = String::new();
+    out.push_str(
+        &headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(","),
+    );
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format candidates as a Pareto table relative to a reference point
+/// (the uniform-8-bit implementation, as in paper Fig. 6 / Table II).
+pub fn pareto_table(cands: &[Candidate], ref_edp: f64, ref_mem: f64, ref_acc: f64) -> String {
+    let mut rows: Vec<Vec<String>> = cands
+        .iter()
+        .map(|c| {
+            vec![
+                c.strategy.to_string(),
+                format!("{:.4}", c.accuracy),
+                format!("{:+.1}%", (c.accuracy - ref_acc) * 100.0),
+                format!("{:.3}", c.hw.edp / ref_edp),
+                format!(
+                    "{:+.1}%",
+                    (c.hw.memory_energy_pj / ref_mem - 1.0) * 100.0
+                ),
+            ]
+        })
+        .collect();
+    rows.sort_by(|a, b| a[3].partial_cmp(&b[3]).unwrap_or(std::cmp::Ordering::Equal));
+    table(
+        &["strategy", "top-1", "Δacc", "EDP (rel u8)", "Δ mem-energy"],
+        &rows,
+    )
+}
+
+/// ASCII scatter of (x, y) points, log-x optional — a terminal stand-in
+/// for the paper's figures.
+pub fn ascii_scatter(
+    points: &[(f64, f64, char)],
+    width: usize,
+    height: usize,
+    x_label: &str,
+    y_label: &str,
+) -> String {
+    if points.is_empty() {
+        return "(no points)\n".into();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y, _) in points {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 <= x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 <= y0 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for &(x, y, c) in points {
+        let xi = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+        let yi = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+        grid[height - 1 - yi][xi] = c;
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{y_label} ({y0:.3} .. {y1:.3})");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    let _ = writeln!(out, "+{}", "-".repeat(width));
+    let _ = writeln!(out, " {x_label} ({x0:.3} .. {x1:.3})");
+    out
+}
+
+/// Write an experiment artifact under `results/` (created on demand)
+/// and return its path. Benches use this so every regenerated table and
+/// figure leaves a CSV/JSON trace next to the printed output.
+pub fn write_results(name: &str, content: &str) -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(name);
+    if let Err(e) = std::fs::write(&path, content) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            &["a", "bbbb"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["333".into(), "4".into()],
+            ],
+        );
+        assert!(t.contains("| a   | bbbb |"));
+        assert!(t.contains("| 333 | 4    |"));
+        // all lines same width
+        let widths: Vec<usize> = t.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let s = csv(&["x", "y"], &[vec!["a,b".into(), "c\"d".into()]]);
+        assert_eq!(s, "x,y\n\"a,b\",\"c\"\"d\"\n");
+    }
+
+    #[test]
+    fn scatter_renders_extremes() {
+        let s = ascii_scatter(
+            &[(0.0, 0.0, 'o'), (1.0, 1.0, '*')],
+            20,
+            5,
+            "x",
+            "y",
+        );
+        assert!(s.contains('o'));
+        assert!(s.contains('*'));
+        let first_grid_line = s.lines().nth(1).unwrap();
+        assert!(first_grid_line.ends_with('*')); // top-right
+    }
+
+    #[test]
+    fn scatter_empty() {
+        assert_eq!(ascii_scatter(&[], 10, 5, "x", "y"), "(no points)\n");
+    }
+}

@@ -1,0 +1,382 @@
+//! Minimal SVG figure writer (no plotting crates offline): scatter
+//! plots, poly-lines, and stacked bar charts — enough to regenerate the
+//! paper's figures as real graphics next to the ASCII renderings.
+//!
+//! The API is builder-ish: create a [`Plot`], add series, render to an
+//! SVG string, then persist via [`crate::report::write_results`].
+
+use std::fmt::Write as _;
+
+/// One data series in a plot.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+    /// CSS color.
+    pub color: String,
+    /// Draw a connecting poly-line (in x-sorted order) as well as dots.
+    pub line: bool,
+}
+
+/// A 2-D scatter/line figure.
+#[derive(Debug, Clone)]
+pub struct Plot {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+    pub width: u32,
+    pub height: u32,
+    pub log_x: bool,
+}
+
+const PALETTE: [&str; 8] = [
+    "#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b", "#e377c2", "#17becf",
+];
+
+const MARGIN_L: f64 = 64.0;
+const MARGIN_R: f64 = 16.0;
+const MARGIN_T: f64 = 34.0;
+const MARGIN_B: f64 = 46.0;
+
+impl Plot {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        Plot {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+            width: 640,
+            height: 420,
+            log_x: false,
+        }
+    }
+
+    /// Add a series with an automatic palette color.
+    pub fn scatter(&mut self, label: &str, points: &[(f64, f64)]) -> &mut Self {
+        self.push(label, points, false)
+    }
+
+    pub fn line(&mut self, label: &str, points: &[(f64, f64)]) -> &mut Self {
+        self.push(label, points, true)
+    }
+
+    fn push(&mut self, label: &str, points: &[(f64, f64)], line: bool) -> &mut Self {
+        let color = PALETTE[self.series.len() % PALETTE.len()].to_string();
+        self.series.push(Series {
+            label: label.into(),
+            points: points.to_vec(),
+            color,
+            line,
+        });
+        self
+    }
+
+    fn bounds(&self) -> (f64, f64, f64, f64) {
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                if !x.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                x0 = x0.min(x);
+                x1 = x1.max(x);
+                y0 = y0.min(y);
+                y1 = y1.max(y);
+            }
+        }
+        if !x0.is_finite() {
+            return (0.0, 1.0, 0.0, 1.0);
+        }
+        if x1 <= x0 {
+            x1 = x0 + 1.0;
+        }
+        if y1 <= y0 {
+            y1 = y0 + 1.0;
+        }
+        // 4% padding
+        let (dx, dy) = (0.04 * (x1 - x0), 0.04 * (y1 - y0));
+        (x0 - dx, x1 + dx, y0 - dy, y1 + dy)
+    }
+
+    /// Render to an SVG document string.
+    pub fn render(&self) -> String {
+        let (w, h) = (self.width as f64, self.height as f64);
+        let (x0, x1, y0, y1) = self.bounds();
+        let (tx, ty) = |log_x: bool| -> (Box<dyn Fn(f64) -> f64>, Box<dyn Fn(f64) -> f64>) {
+            let (lx0, lx1) = if log_x {
+                (x0.max(1e-300).ln(), x1.max(1e-299).ln())
+            } else {
+                (x0, x1)
+            };
+            let span_x = lx1 - lx0;
+            let tx = move |x: f64| {
+                let v = if log_x { x.max(1e-300).ln() } else { x };
+                MARGIN_L + (v - lx0) / span_x * (w - MARGIN_L - MARGIN_R)
+            };
+            let span_y = y1 - y0;
+            let ty = move |y: f64| h - MARGIN_B - (y - y0) / span_y * (h - MARGIN_T - MARGIN_B);
+            (Box::new(tx), Box::new(ty))
+        }(self.log_x);
+
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{}" height="{}" font-family="sans-serif" font-size="11">"#,
+            self.width, self.height
+        );
+        let _ = write!(
+            out,
+            r#"<rect width="100%" height="100%" fill="white"/><text x="{}" y="18" text-anchor="middle" font-size="13" font-weight="bold">{}</text>"#,
+            w / 2.0,
+            esc(&self.title)
+        );
+
+        // axes
+        let _ = write!(
+            out,
+            r#"<line x1="{MARGIN_L}" y1="{}" x2="{}" y2="{}" stroke="black"/><line x1="{MARGIN_L}" y1="{MARGIN_T}" x2="{MARGIN_L}" y2="{}" stroke="black"/>"#,
+            h - MARGIN_B,
+            w - MARGIN_R,
+            h - MARGIN_B,
+            h - MARGIN_B
+        );
+        // tick labels (min/mid/max)
+        for (frac, xv) in [(0.0, x0), (0.5, (x0 + x1) / 2.0), (1.0, x1)] {
+            let px = MARGIN_L + frac * (w - MARGIN_L - MARGIN_R);
+            let _ = write!(
+                out,
+                r#"<text x="{px}" y="{}" text-anchor="middle">{}</text>"#,
+                h - MARGIN_B + 16.0,
+                fmt_tick(if self.log_x {
+                    (x0.max(1e-300).ln() + frac * (x1.max(1e-299).ln() - x0.max(1e-300).ln())).exp()
+                } else {
+                    xv
+                })
+            );
+        }
+        for (frac, yv) in [(0.0, y0), (0.5, (y0 + y1) / 2.0), (1.0, y1)] {
+            let py = h - MARGIN_B - frac * (h - MARGIN_T - MARGIN_B);
+            let _ = write!(
+                out,
+                r#"<text x="{}" y="{}" text-anchor="end">{}</text>"#,
+                MARGIN_L - 6.0,
+                py + 4.0,
+                fmt_tick(yv)
+            );
+        }
+        // axis labels
+        let _ = write!(
+            out,
+            r#"<text x="{}" y="{}" text-anchor="middle">{}</text>"#,
+            (MARGIN_L + w - MARGIN_R) / 2.0,
+            h - 8.0,
+            esc(&self.x_label)
+        );
+        let _ = write!(
+            out,
+            r#"<text x="14" y="{}" text-anchor="middle" transform="rotate(-90 14 {})">{}</text>"#,
+            (MARGIN_T + h - MARGIN_B) / 2.0,
+            (MARGIN_T + h - MARGIN_B) / 2.0,
+            esc(&self.y_label)
+        );
+
+        // series
+        for s in &self.series {
+            if s.line {
+                let mut pts: Vec<(f64, f64)> = s.points.clone();
+                pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                let path: Vec<String> = pts
+                    .iter()
+                    .map(|&(x, y)| format!("{:.1},{:.1}", tx(x), ty(y)))
+                    .collect();
+                let _ = write!(
+                    out,
+                    r#"<polyline points="{}" fill="none" stroke="{}" stroke-width="1.5"/>"#,
+                    path.join(" "),
+                    s.color
+                );
+            }
+            for &(x, y) in &s.points {
+                if !x.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                let _ = write!(
+                    out,
+                    r#"<circle cx="{:.1}" cy="{:.1}" r="2.6" fill="{}" fill-opacity="0.75"/>"#,
+                    tx(x),
+                    ty(y),
+                    s.color
+                );
+            }
+        }
+
+        // legend
+        for (i, s) in self.series.iter().enumerate() {
+            let ly = MARGIN_T + 6.0 + i as f64 * 15.0;
+            let _ = write!(
+                out,
+                r#"<rect x="{}" y="{}" width="10" height="10" fill="{}"/><text x="{}" y="{}">{}</text>"#,
+                w - MARGIN_R - 150.0,
+                ly,
+                s.color,
+                w - MARGIN_R - 136.0,
+                ly + 9.0,
+                esc(&s.label)
+            );
+        }
+        out.push_str("</svg>");
+        out
+    }
+}
+
+/// Stacked bar chart (Fig. 4-style energy breakdowns).
+pub fn stacked_bars(
+    title: &str,
+    categories: &[String],
+    component_labels: &[&str],
+    values: &[Vec<f64>], // values[bar][component]
+) -> String {
+    let (w, h) = (640.0f64, 420.0f64);
+    let max_total: f64 = values
+        .iter()
+        .map(|v| v.iter().sum::<f64>())
+        .fold(0.0, f64::max)
+        .max(1e-300);
+    let n = categories.len().max(1) as f64;
+    let band = (w - MARGIN_L - MARGIN_R) / n;
+    let bar_w = band * 0.6;
+
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" font-family="sans-serif" font-size="11"><rect width="100%" height="100%" fill="white"/><text x="{}" y="18" text-anchor="middle" font-size="13" font-weight="bold">{}</text>"#,
+        w / 2.0,
+        esc(title)
+    );
+    let _ = write!(
+        out,
+        r#"<line x1="{MARGIN_L}" y1="{}" x2="{}" y2="{}" stroke="black"/>"#,
+        h - MARGIN_B,
+        w - MARGIN_R,
+        h - MARGIN_B
+    );
+    for (bi, (cat, vals)) in categories.iter().zip(values).enumerate() {
+        let x = MARGIN_L + bi as f64 * band + (band - bar_w) / 2.0;
+        let mut y = h - MARGIN_B;
+        for (ci, &v) in vals.iter().enumerate() {
+            let bh = v / max_total * (h - MARGIN_T - MARGIN_B);
+            y -= bh;
+            let _ = write!(
+                out,
+                r#"<rect x="{x:.1}" y="{y:.1}" width="{bar_w:.1}" height="{bh:.1}" fill="{}"/>"#,
+                PALETTE[ci % PALETTE.len()]
+            );
+        }
+        let _ = write!(
+            out,
+            r#"<text x="{:.1}" y="{}" text-anchor="middle">{}</text>"#,
+            x + bar_w / 2.0,
+            h - MARGIN_B + 16.0,
+            esc(cat)
+        );
+    }
+    for (ci, label) in component_labels.iter().enumerate() {
+        let ly = MARGIN_T + 6.0 + ci as f64 * 15.0;
+        let _ = write!(
+            out,
+            r#"<rect x="{}" y="{ly}" width="10" height="10" fill="{}"/><text x="{}" y="{}">{}</text>"#,
+            w - MARGIN_R - 120.0,
+            PALETTE[ci % PALETTE.len()],
+            w - MARGIN_R - 106.0,
+            ly + 9.0,
+            esc(label)
+        );
+    }
+    out.push_str("</svg>");
+    out
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if a >= 1e4 || a < 1e-2 {
+        format!("{v:.1e}")
+    } else if a >= 10.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_renders_valid_svg() {
+        let mut p = Plot::new("t", "x", "y");
+        p.scatter("a", &[(0.0, 0.0), (1.0, 2.0)]);
+        p.line("b", &[(0.0, 1.0), (1.0, 0.5), (0.5, 0.7)]);
+        let svg = p.render();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<circle").count(), 5);
+        assert_eq!(svg.matches("<polyline").count(), 1);
+        assert!(svg.contains(">t<"));
+    }
+
+    #[test]
+    fn empty_plot_does_not_panic() {
+        let p = Plot::new("empty", "x", "y");
+        let svg = p.render();
+        assert!(svg.contains("</svg>"));
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let mut p = Plot::new("one", "x", "y");
+        p.scatter("s", &[(3.0, 3.0)]);
+        let svg = p.render();
+        assert!(svg.contains("<circle"));
+        // no NaN coordinates leaked
+        assert!(!svg.contains("NaN"));
+    }
+
+    #[test]
+    fn log_x_handles_wide_ranges() {
+        let mut p = Plot::new("log", "x", "y");
+        p.log_x = true;
+        p.scatter("s", &[(1.0, 0.0), (1e9, 1.0)]);
+        let svg = p.render();
+        assert!(!svg.contains("NaN") && !svg.contains("inf"));
+    }
+
+    #[test]
+    fn stacked_bars_render() {
+        let svg = stacked_bars(
+            "breakdown",
+            &["16b".into(), "8b".into()],
+            &["mem", "mac"],
+            &[vec![2.0, 1.0], vec![1.0, 1.0]],
+        );
+        assert_eq!(svg.matches("<rect").count(), 1 + 4 + 2); // bg + bars + legend
+        assert!(svg.contains("</svg>"));
+    }
+
+    #[test]
+    fn xml_escaping() {
+        let mut p = Plot::new("a<b & c", "x", "y");
+        p.scatter("s<1>", &[(0.0, 0.0)]);
+        let svg = p.render();
+        assert!(svg.contains("a&lt;b &amp; c"));
+        assert!(!svg.contains("s<1>"));
+    }
+}

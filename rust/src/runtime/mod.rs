@@ -1,0 +1,400 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path. Python never runs at request time — the
+//! artifacts in `artifacts/` are produced once by `make artifacts`
+//! (`python/compile/aot.py`) and this module is the only consumer.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): HLO *text* is
+//! the interchange format because jax>=0.5 serialized protos use 64-bit
+//! instruction ids that this XLA rejects (see /opt/xla-example/README.md).
+
+pub mod qat;
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `model_meta.json` manifest.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub model: String,
+    pub num_layers: usize,
+    pub param_size: usize,
+    pub batch: usize,
+    pub img: usize,
+    pub in_ch: usize,
+    pub num_classes: usize,
+    pub use_pallas: bool,
+}
+
+impl ModelMeta {
+    pub fn from_json(src: &str) -> Result<Self> {
+        let v = parse(src).map_err(|e| anyhow!("model_meta.json: {e}"))?;
+        let need = |k: &str| -> Result<usize> {
+            v.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        Ok(ModelMeta {
+            model: v
+                .get("model")
+                .as_str()
+                .ok_or_else(|| anyhow!("manifest missing 'model'"))?
+                .to_string(),
+            num_layers: need("num_layers")?,
+            param_size: need("param_size")?,
+            batch: need("batch")?,
+            img: need("img")?,
+            in_ch: need("in_ch")?,
+            num_classes: need("num_classes")?,
+            use_pallas: matches!(v.get("use_pallas"), Json::Bool(true)),
+        })
+    }
+}
+
+/// A compiled artifact bundle: PJRT client + train/eval executables +
+/// initial parameters.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    pub meta: ModelMeta,
+    pub init_params: Vec<f32>,
+}
+
+impl Runtime {
+    /// Load `model_meta.json`, `{train,eval}_step.hlo.txt` and
+    /// `params_init.bin` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let meta_src = std::fs::read_to_string(dir.join("model_meta.json"))
+            .with_context(|| format!("reading {}/model_meta.json (run `make artifacts`)", dir.display()))?;
+        let meta = ModelMeta::from_json(&meta_src)?;
+
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        let train = Self::compile(&client, &dir.join("train_step.hlo.txt"))?;
+        let eval = Self::compile(&client, &dir.join("eval_step.hlo.txt"))?;
+
+        let raw = std::fs::read(dir.join("params_init.bin"))
+            .with_context(|| "reading params_init.bin")?;
+        if raw.len() != meta.param_size * 4 {
+            bail!(
+                "params_init.bin: expected {} bytes, got {}",
+                meta.param_size * 4,
+                raw.len()
+            );
+        }
+        let init_params: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        Ok(Runtime {
+            client,
+            train,
+            eval,
+            meta,
+            init_params,
+        })
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &PathBuf) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(to_anyhow)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(to_anyhow)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn x_literal(&self, x: &[f32]) -> Result<xla::Literal> {
+        let m = &self.meta;
+        xla::Literal::vec1(x)
+            .reshape(&[m.batch as i64, m.img as i64, m.img as i64, m.in_ch as i64])
+            .map_err(to_anyhow)
+    }
+
+    /// One SGD step. `params` is updated in place; returns the
+    /// post-step loss on the same batch (an extra forward pass — the
+    /// train artifact returns only `new_params`, see aot.py).
+    ///
+    /// Convenience wrapper that round-trips `params` through the host;
+    /// hot loops should use [`Runtime::train_session`], which keeps the
+    /// parameters resident on the PJRT device between steps.
+    pub fn train_step(
+        &self,
+        params: &mut Vec<f32>,
+        x: &[f32],
+        y: &[i32],
+        qa: &[f32],
+        qw: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        self.check_shapes(params, x, y, qa, qw)?;
+        let mut sess = self.train_session(params)?;
+        sess.step(x, y, qa, qw, lr)?;
+        let (_, loss) = sess.eval(x, y, qa, qw)?;
+        *params = sess.params_to_host()?;
+        Ok(loss)
+    }
+
+    /// Start a device-resident training session from a host checkpoint.
+    pub fn train_session(&self, params: &[f32]) -> Result<TrainSession<'_>> {
+        if params.len() != self.meta.param_size {
+            bail!(
+                "params: expected {} values, got {}",
+                self.meta.param_size,
+                params.len()
+            );
+        }
+        // the host-to-device copy is asynchronous: the literal must stay
+        // alive until the first sync point (see `in_flight`)
+        let lit = xla::Literal::vec1(params);
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(to_anyhow)?;
+        Ok(TrainSession {
+            rt: self,
+            params: buf,
+            in_flight: (Vec::new(), vec![lit]),
+            steps_since_sync: 0,
+        })
+    }
+
+    /// Evaluate one batch. Returns (correct_count, mean_loss).
+    pub fn eval_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        qa: &[f32],
+        qw: &[f32],
+    ) -> Result<(f32, f32)> {
+        self.check_shapes(params, x, y, qa, qw)?;
+        let args = vec![
+            xla::Literal::vec1(params),
+            self.x_literal(x)?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(qa),
+            xla::Literal::vec1(qw),
+        ];
+        let result = self.eval.execute::<xla::Literal>(&args).map_err(to_anyhow)?;
+        Self::unpack_eval(&result[0])
+    }
+
+    fn unpack_eval(outs: &[xla::PjRtBuffer]) -> Result<(f32, f32)> {
+        // the eval artifact returns a (correct, loss) tuple in one buffer
+        // (this PJRT does not untuple roots)
+        if outs.len() != 1 {
+            bail!("eval_step: expected 1 tuple output, got {}", outs.len());
+        }
+        let out = outs[0].to_literal_sync().map_err(to_anyhow)?;
+        let (correct, loss) = out.to_tuple2().map_err(to_anyhow)?;
+        Ok((
+            correct.get_first_element::<f32>().map_err(to_anyhow)?,
+            loss.get_first_element::<f32>().map_err(to_anyhow)?,
+        ))
+    }
+
+    fn check_shapes(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        qa: &[f32],
+        qw: &[f32],
+    ) -> Result<()> {
+        let m = &self.meta;
+        if params.len() != m.param_size {
+            bail!("params: expected {} values, got {}", m.param_size, params.len());
+        }
+        let want_x = m.batch * m.img * m.img * m.in_ch;
+        if x.len() != want_x {
+            bail!("x: expected {} values, got {}", want_x, x.len());
+        }
+        if y.len() != m.batch {
+            bail!("y: expected {} labels, got {}", m.batch, y.len());
+        }
+        if qa.len() != m.num_layers || qw.len() != m.num_layers {
+            bail!(
+                "qa/qw: expected {} entries, got {}/{}",
+                m.num_layers,
+                qa.len(),
+                qw.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A training loop whose parameters live on the PJRT device: each
+/// [`TrainSession::step`] feeds the previous step's `new_params` output
+/// buffer straight back into `execute_b`, so only the batch (and the
+/// scalar loss) cross the host boundary (§Perf: ~2x per step on CPU
+/// PJRT vs. the Literal round-trip).
+pub struct TrainSession<'rt> {
+    rt: &'rt Runtime,
+    params: xla::PjRtBuffer,
+    /// Operands (device buffers + host literals) of every dispatch
+    /// since the last sync point. PJRT CPU executes — and performs the
+    /// host-to-device literal copies — asynchronously, and the host
+    /// loop can enqueue many steps ahead of the device queue; freeing
+    /// an argument buffer or a Literal a deferred copy still reads
+    /// corrupts the heap (observed as `literal.size_bytes() ==
+    /// b->size()` CHECK failures). Everything is retained here and
+    /// released at sync points ([`TrainSession::sync`], `eval`,
+    /// `params_to_host`), which `step` inserts automatically every
+    /// [`SYNC_INTERVAL`] dispatches.
+    in_flight: (Vec<xla::PjRtBuffer>, Vec<xla::Literal>),
+    steps_since_sync: u32,
+}
+
+/// Dispatches between automatic sync points in [`TrainSession::step`]:
+/// bounds in-flight operand memory (~1.7 MB/step) while amortizing the
+/// ~0.85 MB params read-back a sync costs to ~53 KB/step.
+const SYNC_INTERVAL: u32 = 16;
+
+impl TrainSession<'_> {
+    /// One SGD step. The updated parameters replace the session's
+    /// device buffer; nothing crosses back to the host. (The train
+    /// artifact intentionally has no loss output — use
+    /// [`TrainSession::eval`] to sample a loss curve.)
+    pub fn step(&mut self, x: &[f32], y: &[i32], qa: &[f32], qw: &[f32], lr: f32) -> Result<()> {
+        let rt = self.rt;
+        let host_args = [
+            rt.x_literal(x)?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(qa),
+            xla::Literal::vec1(qw),
+            xla::Literal::scalar(lr),
+        ];
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(6);
+        for lit in &host_args {
+            bufs.push(
+                rt.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(to_anyhow)?,
+            );
+        }
+        let args: Vec<&xla::PjRtBuffer> = std::iter::once(&self.params)
+            .chain(bufs.iter())
+            .collect();
+        let mut result = rt.train.execute_b(&args).map_err(to_anyhow)?;
+        let outs = &mut result[0];
+        if outs.len() != 1 {
+            bail!("train_step: expected 1 output (new_params), got {}", outs.len());
+        }
+        let old_params = std::mem::replace(&mut self.params, outs.swap_remove(0));
+        // keep this dispatch's operands (incl. the consumed params
+        // buffer) alive until the next sync point
+        self.in_flight.0.extend(bufs);
+        self.in_flight.0.push(old_params);
+        self.in_flight.1.extend(host_args);
+        self.steps_since_sync += 1;
+        if self.steps_since_sync >= SYNC_INTERVAL {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Block until all in-flight dispatches have drained, then release
+    /// their retained operands.
+    pub fn sync(&mut self) -> Result<()> {
+        // reading the params buffer back forces completion of the whole
+        // dependency chain (every step writes params)
+        let _ = self.params.to_literal_sync().map_err(to_anyhow)?;
+        self.in_flight.0.clear();
+        self.in_flight.1.clear();
+        self.steps_since_sync = 0;
+        Ok(())
+    }
+
+    /// Evaluate a batch against the session's current parameters.
+    pub fn eval(&mut self, x: &[f32], y: &[i32], qa: &[f32], qw: &[f32]) -> Result<(f32, f32)> {
+        let rt = self.rt;
+        let host_args = [
+            rt.x_literal(x)?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(qa),
+            xla::Literal::vec1(qw),
+        ];
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(5);
+        for lit in &host_args {
+            bufs.push(
+                rt.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(to_anyhow)?,
+            );
+        }
+        let args: Vec<&xla::PjRtBuffer> = std::iter::once(&self.params)
+            .chain(bufs.iter())
+            .collect();
+        let result = rt.eval.execute_b(&args).map_err(to_anyhow)?;
+        let out = Runtime::unpack_eval(&result[0])?;
+        // unpack_eval synced on the eval output, which depends on the
+        // whole params chain: all retained operands are now drained
+        self.in_flight.0.clear();
+        self.in_flight.1.clear();
+        self.steps_since_sync = 0;
+        Ok(out)
+    }
+
+    /// Copy the current parameters back to the host.
+    pub fn params_to_host(&mut self) -> Result<Vec<f32>> {
+        let lit = self.params.to_literal_sync().map_err(to_anyhow)?;
+        self.in_flight.0.clear();
+        self.in_flight.1.clear();
+        self.steps_since_sync = 0;
+        lit.to_vec::<f32>().map_err(to_anyhow)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+/// Locate the repo's artifact directory: `$QMAP_ARTIFACTS` or
+/// `artifacts/` relative to the workspace root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("QMAP_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let src = r#"{"model":"scaled_mobilenet_v1","num_layers":28,
+            "param_size":100,"batch":32,"img":32,"in_ch":3,
+            "num_classes":10,"use_pallas":true}"#;
+        let m = ModelMeta::from_json(src).unwrap();
+        assert_eq!(m.num_layers, 28);
+        assert_eq!(m.batch, 32);
+        assert!(m.use_pallas);
+    }
+
+    #[test]
+    fn manifest_missing_field_errors() {
+        assert!(ModelMeta::from_json("{}").is_err());
+        assert!(ModelMeta::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_fails_with_hint() {
+        match Runtime::load("/nonexistent/path") {
+            Ok(_) => panic!("expected load failure"),
+            Err(err) => assert!(format!("{err:#}").contains("make artifacts")),
+        }
+    }
+
+    // Runtime execution tests live in rust/tests/runtime_integration.rs
+    // (they need `make artifacts` to have run).
+}

@@ -1,0 +1,128 @@
+//! Real QAT accuracy evaluation: the paper's training engine, executed
+//! from Rust through the AOT artifacts.
+//!
+//! `QatAccuracy` implements [`crate::accuracy::AccuracyModel`] by
+//! fine-tuning the pre-trained checkpoint for a step budget (the
+//! "e epochs" analogue at our scale) with the genome's bit-widths, then
+//! measuring top-1 on held-out synthetic batches. A per-genome
+//! memoization cache avoids re-training duplicates within one search.
+
+use super::Runtime;
+use crate::accuracy::AccuracyModel;
+use crate::data::SyntheticDataset;
+use crate::quant::QuantConfig;
+use rustc_hash::FxHashMap;
+
+/// Budget knobs for in-the-loop QAT (scaled-down analogue of the paper's
+/// e = 5/10/20 epochs).
+#[derive(Debug, Clone, Copy)]
+pub struct QatBudget {
+    /// Fine-tuning steps per candidate.
+    pub finetune_steps: u64,
+    /// Held-out eval batches.
+    pub eval_batches: u64,
+    pub lr: f32,
+}
+
+impl Default for QatBudget {
+    fn default() -> Self {
+        QatBudget {
+            finetune_steps: 60,
+            eval_batches: 8,
+            lr: 0.02,
+        }
+    }
+}
+
+/// Accuracy model backed by real QAT through PJRT.
+pub struct QatAccuracy<'rt> {
+    pub rt: &'rt Runtime,
+    pub data: SyntheticDataset,
+    /// Checkpoint to fine-tune from (e.g. the QAT-8 pre-trained params).
+    pub base_params: Vec<f32>,
+    pub budget: QatBudget,
+    memo: FxHashMap<Vec<u8>, f64>,
+    /// Batch counter offset separating train and eval streams.
+    eval_stream: u64,
+}
+
+impl<'rt> QatAccuracy<'rt> {
+    pub fn new(rt: &'rt Runtime, data: SyntheticDataset, base_params: Vec<f32>, budget: QatBudget) -> Self {
+        QatAccuracy {
+            rt,
+            data,
+            base_params,
+            budget,
+            memo: FxHashMap::default(),
+            eval_stream: 1_000_000,
+        }
+    }
+
+    fn genome_vectors(&self, qc: &QuantConfig) -> (Vec<f32>, Vec<f32>) {
+        let qa: Vec<f32> = qc.layers.iter().map(|&(a, _)| a as f32).collect();
+        let qw: Vec<f32> = qc.layers.iter().map(|&(_, w)| w as f32).collect();
+        (qa, qw)
+    }
+
+    /// Fine-tune + evaluate one genome; returns top-1 accuracy.
+    pub fn evaluate(&mut self, qc: &QuantConfig) -> anyhow::Result<f64> {
+        let key = qc.encode();
+        if let Some(&hit) = self.memo.get(&key) {
+            return Ok(hit);
+        }
+        let (qa, qw) = self.genome_vectors(qc);
+        let b = self.rt.meta.batch;
+        // device-resident fine-tune: params never round-trip to the host
+        let mut sess = self.rt.train_session(&self.base_params)?;
+        for step in 0..self.budget.finetune_steps {
+            let batch = self.data.batch(b, step);
+            sess.step(&batch.x, &batch.y, &qa, &qw, self.budget.lr)?;
+        }
+        let mut correct = 0.0f32;
+        let mut total = 0usize;
+        for i in 0..self.budget.eval_batches {
+            let batch = self.data.batch(b, self.eval_stream + i);
+            let (c, _loss) = sess.eval(&batch.x, &batch.y, &qa, &qw)?;
+            correct += c;
+            total += b;
+        }
+        let acc = correct as f64 / total as f64;
+        self.memo.insert(key, acc);
+        Ok(acc)
+    }
+
+    /// Pre-train the base checkpoint at a uniform bit-width (the QAT-8
+    /// initial model of the paper). Returns the final training loss
+    /// curve (for EXPERIMENTS.md / the E2E driver log).
+    pub fn pretrain(
+        rt: &Runtime,
+        data: &SyntheticDataset,
+        bits: u8,
+        steps: u64,
+        lr: f32,
+        mut on_step: impl FnMut(u64, f32),
+    ) -> anyhow::Result<Vec<f32>> {
+        let l = rt.meta.num_layers;
+        let qa = vec![bits as f32; l];
+        let qw = vec![bits as f32; l];
+        let mut sess = rt.train_session(&rt.init_params)?;
+        for step in 0..steps {
+            let batch = data.batch(rt.meta.batch, step);
+            sess.step(&batch.x, &batch.y, &qa, &qw, lr)?;
+            // loss comes from an extra forward pass (the train artifact
+            // returns only new_params; see runtime/mod.rs §Perf note)
+            let (_, loss) = sess.eval(&batch.x, &batch.y, &qa, &qw)?;
+            on_step(step, loss);
+        }
+        sess.params_to_host()
+    }
+}
+
+impl AccuracyModel for QatAccuracy<'_> {
+    fn accuracy(&mut self, qc: &QuantConfig) -> f64 {
+        self.evaluate(qc).unwrap_or(0.0)
+    }
+    fn name(&self) -> &'static str {
+        "qat"
+    }
+}

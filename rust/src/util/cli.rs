@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name and subcommand).
+    /// `flag_names` lists options that take no value.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    a.flags.push(body.to_string());
+                } else {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| format!("option --{body} expects a value"))?;
+                    a.options.insert(body.to_string(), v.clone());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = Args::parse(
+            &v(&["pos1", "--n", "32", "--arch=eyeriss", "--verbose", "pos2"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, v(&["pos1", "pos2"]));
+        assert_eq!(a.usize_or("n", 0), 32);
+        assert_eq!(a.str_or("arch", ""), "eyeriss");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&v(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&v(&[]), &[]).unwrap();
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("p", 0.5), 0.5);
+    }
+}

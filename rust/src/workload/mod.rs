@@ -1,0 +1,286 @@
+//! DNN layer workloads in Timeloop's 7-dimensional convolution form.
+//!
+//! A convolutional layer is a 7-deep loop nest over
+//! `N` (batch), `K` (output channels; Timeloop calls this `M`),
+//! `C` (input channels), `R`/`S` (filter height/width),
+//! `P`/`Q` (output height/width). Three data spaces are projected from
+//! these dims: Weights `W[K,C,R,S]`, Inputs `I[N,C,H,W]`
+//! (`H=(P-1)*stride+R` sliding window), Outputs `O[N,K,P,Q]`.
+//!
+//! Depthwise convolutions are modeled with `C = 1` and the input channel
+//! dimension *tied to K* (each output channel reads its own input
+//! channel), matching how Timeloop workloads for MobileNet are written.
+
+pub mod models;
+pub mod parser;
+
+/// The seven problem dimensions, in canonical order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    N,
+    K,
+    C,
+    R,
+    S,
+    P,
+    Q,
+}
+
+pub const DIMS: [Dim; 7] = [Dim::N, Dim::K, Dim::C, Dim::R, Dim::S, Dim::P, Dim::Q];
+
+impl Dim {
+    pub const fn index(self) -> usize {
+        match self {
+            Dim::N => 0,
+            Dim::K => 1,
+            Dim::C => 2,
+            Dim::R => 3,
+            Dim::S => 4,
+            Dim::P => 5,
+            Dim::Q => 6,
+        }
+    }
+    pub const fn name(self) -> &'static str {
+        match self {
+            Dim::N => "N",
+            Dim::K => "K",
+            Dim::C => "C",
+            Dim::R => "R",
+            Dim::S => "S",
+            Dim::P => "P",
+            Dim::Q => "Q",
+        }
+    }
+    pub fn from_index(i: usize) -> Dim {
+        DIMS[i]
+    }
+}
+
+/// The three data spaces of a convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tensor {
+    Weights,
+    Inputs,
+    Outputs,
+}
+
+pub const TENSORS: [Tensor; 3] = [Tensor::Weights, Tensor::Inputs, Tensor::Outputs];
+
+impl Tensor {
+    pub const fn index(self) -> usize {
+        match self {
+            Tensor::Weights => 0,
+            Tensor::Inputs => 1,
+            Tensor::Outputs => 2,
+        }
+    }
+    pub const fn name(self) -> &'static str {
+        match self {
+            Tensor::Weights => "Weights",
+            Tensor::Inputs => "Inputs",
+            Tensor::Outputs => "Outputs",
+        }
+    }
+}
+
+/// Layer kind; affects tensor projections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Standard convolution (includes pointwise when R=S=1 and
+    /// fully-connected when R=S=P=Q=1).
+    Standard,
+    /// Depthwise convolution: one filter per channel; we store the channel
+    /// count in `K` and fix `C = 1`; Inputs are indexed by `K`.
+    Depthwise,
+}
+
+/// One convolutional workload (a single layer of a network).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ConvLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Dimension sizes indexed by `Dim::index()`: `[N, K, C, R, S, P, Q]`.
+    pub dims: [u64; 7],
+    pub stride: (u64, u64),
+}
+
+impl ConvLayer {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        kind: LayerKind,
+        n: u64,
+        k: u64,
+        c: u64,
+        r: u64,
+        s: u64,
+        p: u64,
+        q: u64,
+        stride: (u64, u64),
+    ) -> Self {
+        let c = if kind == LayerKind::Depthwise { 1 } else { c };
+        assert!(n * k * c * r * s * p * q > 0, "zero-sized layer {name}");
+        ConvLayer {
+            name: name.to_string(),
+            kind,
+            dims: [n, k, c, r, s, p, q],
+            stride,
+        }
+    }
+
+    /// Standard conv helper from (in_ch, out_ch, filter, out_spatial).
+    pub fn conv(name: &str, c: u64, k: u64, r: u64, p: u64, stride: u64) -> Self {
+        ConvLayer::new(name, LayerKind::Standard, 1, k, c, r, r, p, p, (stride, stride))
+    }
+
+    /// Depthwise conv helper.
+    pub fn dw(name: &str, ch: u64, r: u64, p: u64, stride: u64) -> Self {
+        ConvLayer::new(name, LayerKind::Depthwise, 1, ch, 1, r, r, p, p, (stride, stride))
+    }
+
+    /// Pointwise (1x1) conv helper.
+    pub fn pw(name: &str, c: u64, k: u64, p: u64) -> Self {
+        ConvLayer::new(name, LayerKind::Standard, 1, k, c, 1, 1, p, p, (1, 1))
+    }
+
+    /// Fully-connected layer as a 1x1x1 conv.
+    pub fn fc(name: &str, c: u64, k: u64) -> Self {
+        ConvLayer::new(name, LayerKind::Standard, 1, k, c, 1, 1, 1, 1, (1, 1))
+    }
+
+    pub fn size(&self, d: Dim) -> u64 {
+        self.dims[d.index()]
+    }
+
+    /// Which dims index a tensor (its "relevant" / coupled dims).
+    pub fn coupled_dims(&self, t: Tensor) -> Vec<Dim> {
+        match (t, self.kind) {
+            (Tensor::Weights, LayerKind::Standard) => vec![Dim::K, Dim::C, Dim::R, Dim::S],
+            (Tensor::Weights, LayerKind::Depthwise) => vec![Dim::K, Dim::R, Dim::S],
+            (Tensor::Inputs, LayerKind::Standard) => {
+                vec![Dim::N, Dim::C, Dim::R, Dim::S, Dim::P, Dim::Q]
+            }
+            (Tensor::Inputs, LayerKind::Depthwise) => {
+                vec![Dim::N, Dim::K, Dim::R, Dim::S, Dim::P, Dim::Q]
+            }
+            (Tensor::Outputs, _) => vec![Dim::N, Dim::K, Dim::P, Dim::Q],
+        }
+    }
+
+    /// True iff iterating `d` changes which elements of `t` are touched.
+    pub fn is_relevant(&self, t: Tensor, d: Dim) -> bool {
+        match (t, self.kind) {
+            (Tensor::Weights, LayerKind::Standard) => {
+                matches!(d, Dim::K | Dim::C | Dim::R | Dim::S)
+            }
+            (Tensor::Weights, LayerKind::Depthwise) => matches!(d, Dim::K | Dim::R | Dim::S),
+            (Tensor::Inputs, LayerKind::Standard) => !matches!(d, Dim::K),
+            (Tensor::Inputs, LayerKind::Depthwise) => !matches!(d, Dim::C),
+            (Tensor::Outputs, _) => matches!(d, Dim::N | Dim::K | Dim::P | Dim::Q),
+        }
+    }
+
+    /// Footprint in elements of a *tile* described by per-dim extents.
+    /// Input spatial extents use the sliding-window formula.
+    pub fn tile_elements(&self, t: Tensor, tile: &[u64; 7]) -> u64 {
+        let g = |d: Dim| tile[d.index()];
+        match (t, self.kind) {
+            (Tensor::Weights, LayerKind::Standard) => g(Dim::K) * g(Dim::C) * g(Dim::R) * g(Dim::S),
+            (Tensor::Weights, LayerKind::Depthwise) => g(Dim::K) * g(Dim::R) * g(Dim::S),
+            (Tensor::Inputs, kind) => {
+                let h = (g(Dim::P) - 1) * self.stride.0 + g(Dim::R);
+                let w = (g(Dim::Q) - 1) * self.stride.1 + g(Dim::S);
+                let ch = if kind == LayerKind::Depthwise {
+                    g(Dim::K)
+                } else {
+                    g(Dim::C)
+                };
+                g(Dim::N) * ch * h * w
+            }
+            (Tensor::Outputs, _) => g(Dim::N) * g(Dim::K) * g(Dim::P) * g(Dim::Q),
+        }
+    }
+
+    /// Total footprint in elements of the full tensor.
+    pub fn tensor_elements(&self, t: Tensor) -> u64 {
+        self.tile_elements(t, &self.dims)
+    }
+
+    /// Total multiply-accumulate operations for the layer.
+    pub fn macs(&self) -> u64 {
+        self.dims.iter().product()
+    }
+
+    /// Input feature-map spatial size implied by output size and stride.
+    pub fn input_hw(&self) -> (u64, u64) {
+        (
+            (self.size(Dim::P) - 1) * self.stride.0 + self.size(Dim::R),
+            (self.size(Dim::Q) - 1) * self.stride.1 + self.size(Dim::S),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_conv_footprints() {
+        // 3x3 conv, C=16, K=32, 8x8 output, stride 1
+        let l = ConvLayer::conv("c", 16, 32, 3, 8, 1);
+        assert_eq!(l.tensor_elements(Tensor::Weights), 32 * 16 * 3 * 3);
+        assert_eq!(l.tensor_elements(Tensor::Outputs), 32 * 8 * 8);
+        assert_eq!(l.tensor_elements(Tensor::Inputs), 16 * 10 * 10);
+        assert_eq!(l.macs(), 32 * 16 * 3 * 3 * 8 * 8);
+    }
+
+    #[test]
+    fn depthwise_projections() {
+        let l = ConvLayer::dw("d", 32, 3, 112, 1);
+        assert_eq!(l.size(Dim::C), 1);
+        assert_eq!(l.tensor_elements(Tensor::Weights), 32 * 3 * 3);
+        // inputs indexed by K for depthwise
+        assert_eq!(l.tensor_elements(Tensor::Inputs), 32 * 114 * 114);
+        assert!(l.is_relevant(Tensor::Inputs, Dim::K));
+        assert!(!l.is_relevant(Tensor::Inputs, Dim::C));
+        assert!(l.is_relevant(Tensor::Weights, Dim::K));
+    }
+
+    #[test]
+    fn pointwise_and_fc() {
+        let l = ConvLayer::pw("p", 64, 128, 14);
+        assert_eq!(l.tensor_elements(Tensor::Weights), 64 * 128);
+        assert_eq!(l.tensor_elements(Tensor::Inputs), 64 * 14 * 14);
+        let f = ConvLayer::fc("f", 1024, 1000);
+        assert_eq!(f.tensor_elements(Tensor::Weights), 1024 * 1000);
+        assert_eq!(f.tensor_elements(Tensor::Outputs), 1000);
+        assert_eq!(f.macs(), 1024 * 1000);
+    }
+
+    #[test]
+    fn strided_input_window() {
+        let l = ConvLayer::dw("d", 8, 3, 56, 2);
+        let (h, w) = l.input_hw();
+        assert_eq!((h, w), (113, 113));
+        // tile of one output row
+        let mut tile = l.dims;
+        tile[Dim::P.index()] = 1;
+        let elems = l.tile_elements(Tensor::Inputs, &tile);
+        assert_eq!(elems, 8 * 3 * 113);
+    }
+
+    #[test]
+    fn relevance_vs_coupled_consistency() {
+        for l in [
+            ConvLayer::conv("c", 16, 32, 3, 8, 1),
+            ConvLayer::dw("d", 32, 3, 112, 1),
+        ] {
+            for t in TENSORS {
+                for d in DIMS {
+                    let coupled = l.coupled_dims(t).contains(&d);
+                    assert_eq!(coupled, l.is_relevant(t, d), "{t:?} {d:?}");
+                }
+            }
+        }
+    }
+}

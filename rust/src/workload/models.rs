@@ -1,0 +1,199 @@
+//! Full-size network layer tables used by the mapping-side experiments.
+//!
+//! These are the exact layer shapes of MobileNetV1 (224x224, width 1.0)
+//! and MobileNetV2 (224x224, width 1.0) as evaluated in the paper. The
+//! training-side experiments use a width-scaled variant (see
+//! `scaled_mobilenet_v1`) that matches these tables layer-for-layer, so a
+//! quantization genome indexes both consistently.
+
+use super::ConvLayer;
+
+/// MobileNetV1 @ 224x224, width multiplier 1.0: stem conv + 13 (dw, pw)
+/// blocks + classifier FC = 28 quantizable layers (the paper's genome has
+/// 56 integers = 28 layers x (q_a, q_w)).
+pub fn mobilenet_v1() -> Vec<ConvLayer> {
+    let mut layers = Vec::new();
+    // stem: 3x3 conv, stride 2, 3 -> 32, output 112x112
+    layers.push(ConvLayer::conv("conv1", 3, 32, 3, 112, 2));
+    // (channels_in, channels_out, dw_stride, out_spatial_after_block)
+    let blocks: [(u64, u64, u64, u64); 13] = [
+        (32, 64, 1, 112),
+        (64, 128, 2, 56),
+        (128, 128, 1, 56),
+        (128, 256, 2, 28),
+        (256, 256, 1, 28),
+        (256, 512, 2, 14),
+        (512, 512, 1, 14),
+        (512, 512, 1, 14),
+        (512, 512, 1, 14),
+        (512, 512, 1, 14),
+        (512, 512, 1, 14),
+        (512, 1024, 2, 7),
+        (1024, 1024, 1, 7),
+    ];
+    for (i, &(cin, cout, stride, out)) in blocks.iter().enumerate() {
+        layers.push(ConvLayer::dw(&format!("dw{}", i + 1), cin, 3, out, stride));
+        layers.push(ConvLayer::pw(&format!("pw{}", i + 1), cin, cout, out));
+    }
+    // classifier (global-avg-pool then FC 1024 -> 1000)
+    layers.push(ConvLayer::fc("fc", 1024, 1000));
+    layers
+}
+
+/// MobileNetV2 @ 224x224, width 1.0: stem + 17 inverted-residual blocks
+/// (expand pw, dw, project pw; the first block has no expand) + final 1x1
+/// conv + FC = 53 quantizable layers.
+pub fn mobilenet_v2() -> Vec<ConvLayer> {
+    let mut layers = Vec::new();
+    layers.push(ConvLayer::conv("conv1", 3, 32, 3, 112, 2));
+
+    // (expansion t, out channels c, repeats n, first stride s) per stage
+    let stages: [(u64, u64, u64, u64); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin: u64 = 32;
+    let mut spatial: u64 = 112;
+    let mut b = 0;
+    for &(t, cout, n, s) in &stages {
+        for rep in 0..n {
+            b += 1;
+            let stride = if rep == 0 { s } else { 1 };
+            let hidden = cin * t;
+            let out_sp = if stride == 2 { spatial / 2 } else { spatial };
+            if t != 1 {
+                layers.push(ConvLayer::pw(&format!("b{b}_expand"), cin, hidden, spatial));
+            }
+            layers.push(ConvLayer::dw(&format!("b{b}_dw"), hidden, 3, out_sp, stride));
+            layers.push(ConvLayer::pw(&format!("b{b}_project"), hidden, cout, out_sp));
+            cin = cout;
+            spatial = out_sp;
+        }
+    }
+    layers.push(ConvLayer::pw("conv_last", 320, 1280, 7));
+    layers.push(ConvLayer::fc("fc", 1280, 1000));
+    layers
+}
+
+/// The width-0.25, 32x32-input MobileNetV1 actually *trained* in this repo
+/// (see DESIGN.md §3 substitutions). Layer-for-layer aligned with
+/// `mobilenet_v1()` (28 layers), so bit-width genomes transfer 1:1. This
+/// table must stay in sync with `python/compile/model.py::ARCH`.
+pub fn scaled_mobilenet_v1(num_classes: u64) -> Vec<ConvLayer> {
+    let w = |ch: u64| (ch / 4).max(8); // width multiplier 0.25, floor 8
+    let mut layers = Vec::new();
+    // stem stride 1 at 32x32 (stride-2 stem would shrink too aggressively)
+    layers.push(ConvLayer::conv("conv1", 3, w(32), 3, 32, 1));
+    let blocks: [(u64, u64, u64, u64); 13] = [
+        (32, 64, 1, 32),
+        (64, 128, 2, 16),
+        (128, 128, 1, 16),
+        (128, 256, 2, 8),
+        (256, 256, 1, 8),
+        (256, 512, 2, 4),
+        (512, 512, 1, 4),
+        (512, 512, 1, 4),
+        (512, 512, 1, 4),
+        (512, 512, 1, 4),
+        (512, 512, 1, 4),
+        (512, 1024, 2, 2),
+        (1024, 1024, 1, 2),
+    ];
+    for (i, &(cin, cout, stride, out)) in blocks.iter().enumerate() {
+        layers.push(ConvLayer::dw(&format!("dw{}", i + 1), w(cin), 3, out, stride));
+        layers.push(ConvLayer::pw(&format!("pw{}", i + 1), w(cin), w(cout), out));
+    }
+    layers.push(ConvLayer::fc("fc", w(1024), num_classes));
+    layers
+}
+
+/// Look up a model table by name.
+pub fn by_name(name: &str) -> Option<Vec<ConvLayer>> {
+    match name {
+        "mobilenet_v1" | "v1" => Some(mobilenet_v1()),
+        "mobilenet_v2" | "v2" => Some(mobilenet_v2()),
+        "scaled_v1" => Some(scaled_mobilenet_v1(10)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{LayerKind, Tensor};
+
+    #[test]
+    fn v1_has_28_layers_and_56_genome_ints() {
+        let m = mobilenet_v1();
+        assert_eq!(m.len(), 28);
+        assert_eq!(2 * m.len(), 56); // paper: "the string consists of 56 integers"
+    }
+
+    #[test]
+    fn v1_macs_match_published() {
+        // MobileNetV1 1.0 @224 is ~569M MACs (paper reports ~0.57 GMACs).
+        let macs: u64 = mobilenet_v1().iter().map(|l| l.macs()).sum();
+        assert!((550_000_000..600_000_000).contains(&macs), "macs={macs}");
+    }
+
+    #[test]
+    fn v1_params_match_published() {
+        // ~4.2M weight parameters.
+        let params: u64 = mobilenet_v1()
+            .iter()
+            .map(|l| l.tensor_elements(Tensor::Weights))
+            .sum();
+        assert!((4_000_000..4_500_000).contains(&params), "params={params}");
+    }
+
+    #[test]
+    fn v1_layer2_is_the_papers_depthwise() {
+        // Table I uses "the second convolutional layer (a depthwise
+        // convolutional layer)": 32ch 3x3 dw over 112x112.
+        let m = mobilenet_v1();
+        let l = &m[1];
+        assert_eq!(l.kind, LayerKind::Depthwise);
+        assert_eq!(l.size(crate::workload::Dim::K), 32);
+        assert_eq!(l.size(crate::workload::Dim::P), 112);
+    }
+
+    #[test]
+    fn v2_shape_sanity() {
+        let m = mobilenet_v2();
+        assert_eq!(m.len(), 53);
+        // ~300M MACs and ~3.5M params for V2 1.0 @224 (conv+fc only).
+        let macs: u64 = m.iter().map(|l| l.macs()).sum();
+        assert!((290_000_000..330_000_000).contains(&macs), "macs={macs}");
+        let params: u64 = m.iter().map(|l| l.tensor_elements(Tensor::Weights)).sum();
+        assert!((3_200_000..3_700_000).contains(&params), "params={params}");
+    }
+
+    #[test]
+    fn scaled_v1_aligns_with_full_v1() {
+        let full = mobilenet_v1();
+        let small = scaled_mobilenet_v1(10);
+        assert_eq!(full.len(), small.len());
+        for (f, s) in full.iter().zip(&small) {
+            assert_eq!(f.kind, s.kind, "{}", f.name);
+        }
+        // small enough to fine-tune on CPU
+        let params: u64 = small.iter().map(|l| l.tensor_elements(Tensor::Weights)).sum();
+        assert!(params < 600_000, "params={params}");
+    }
+
+    #[test]
+    fn spatial_dims_consistent_through_v2() {
+        // every layer's input spatial size equals previous layer's output
+        // size for stride-1 chains (smoke check of the stage wiring)
+        let m = mobilenet_v2();
+        for l in &m {
+            let (h, _) = l.input_hw();
+            assert!(h >= l.size(crate::workload::Dim::P));
+        }
+    }
+}

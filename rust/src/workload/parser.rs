@@ -1,0 +1,202 @@
+//! Parser for network layer tables as text (`.qnet`): the workload-side
+//! analogue of the accelerator text specification. One layer per line:
+//!
+//! ```text
+//! # name  kind       N  K    C    R  S  P   Q   strideH strideW
+//! conv1   conv       1  32   3    3  3  112 112 2 2
+//! dw1     depthwise  1  32   1    3  3  112 112 1 1
+//! pw1     conv       1  64   32   1  1  112 112 1 1
+//! fc      conv       1  1000 1024 1  1  1   1   1 1
+//! ```
+//!
+//! Shorthand lines are also accepted:
+//!
+//! ```text
+//! conv1 conv(c=3, k=32, r=3, p=112, stride=2)
+//! dw1   dw(ch=32, r=3, p=112)
+//! pw1   pw(c=32, k=64, p=112)
+//! fc    fc(c=1024, k=1000)
+//! ```
+
+use super::{ConvLayer, LayerKind};
+
+/// Parse a `.qnet` source into a layer table.
+pub fn parse_net(src: &str) -> Result<Vec<ConvLayer>, String> {
+    let mut layers = Vec::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let layer = parse_line(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        layers.push(layer);
+    }
+    if layers.is_empty() {
+        return Err("no layers in network spec".into());
+    }
+    Ok(layers)
+}
+
+fn parse_line(line: &str) -> Result<ConvLayer, String> {
+    // shorthand form: "<name> <helper>(k=v, ...)"
+    if let Some(open) = line.find('(') {
+        let close = line.rfind(')').ok_or("missing ')'")?;
+        let head: Vec<&str> = line[..open].split_whitespace().collect();
+        if head.len() != 2 {
+            return Err(format!("want '<name> <kind>(...)', got '{line}'"));
+        }
+        let (name, helper) = (head[0], head[1]);
+        let kv = parse_kv(&line[open + 1..close])?;
+        let get = |k: &str| -> Result<u64, String> {
+            kv.iter()
+                .find(|(key, _)| key == k)
+                .map(|&(_, v)| v)
+                .ok_or(format!("{helper}: missing '{k}'"))
+        };
+        let opt = |k: &str, default: u64| -> u64 {
+            kv.iter().find(|(key, _)| key == k).map(|&(_, v)| v).unwrap_or(default)
+        };
+        return match helper {
+            "conv" => Ok(ConvLayer::conv(
+                name,
+                get("c")?,
+                get("k")?,
+                opt("r", 3),
+                get("p")?,
+                opt("stride", 1),
+            )),
+            "dw" => Ok(ConvLayer::dw(name, get("ch")?, opt("r", 3), get("p")?, opt("stride", 1))),
+            "pw" => Ok(ConvLayer::pw(name, get("c")?, get("k")?, get("p")?)),
+            "fc" => Ok(ConvLayer::fc(name, get("c")?, get("k")?)),
+            other => Err(format!("unknown layer helper '{other}'")),
+        };
+    }
+
+    // long form: name kind N K C R S P Q sh sw
+    let f: Vec<&str> = line.split_whitespace().collect();
+    if f.len() != 11 {
+        return Err(format!("want 11 fields (name kind N K C R S P Q sh sw), got {}", f.len()));
+    }
+    let kind = match f[1] {
+        "conv" | "standard" => LayerKind::Standard,
+        "depthwise" | "dw" => LayerKind::Depthwise,
+        other => return Err(format!("unknown kind '{other}'")),
+    };
+    let num = |i: usize| -> Result<u64, String> {
+        f[i].parse().map_err(|_| format!("bad number '{}'", f[i]))
+    };
+    Ok(ConvLayer::new(
+        f[0],
+        kind,
+        num(2)?,
+        num(3)?,
+        num(4)?,
+        num(5)?,
+        num(6)?,
+        num(7)?,
+        num(8)?,
+        (num(9)?, num(10)?),
+    ))
+}
+
+fn parse_kv(s: &str) -> Result<Vec<(String, u64)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part.split_once('=').ok_or(format!("bad 'k=v' pair '{part}'"))?;
+        out.push((
+            k.trim().to_string(),
+            v.trim().parse().map_err(|_| format!("bad number '{v}'"))?,
+        ));
+    }
+    Ok(out)
+}
+
+/// Load a layer table from a file path.
+pub fn load_net(path: &str) -> Result<Vec<ConvLayer>, String> {
+    let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    parse_net(&src)
+}
+
+/// Render a layer table back to the long text form (round-trippable).
+pub fn render_net(layers: &[ConvLayer]) -> String {
+    let mut out = String::from("# name kind N K C R S P Q strideH strideW\n");
+    for l in layers {
+        let kind = match l.kind {
+            LayerKind::Standard => "conv",
+            LayerKind::Depthwise => "depthwise",
+        };
+        out.push_str(&format!(
+            "{} {} {} {} {} {} {} {} {} {} {}\n",
+            l.name,
+            kind,
+            l.dims[0],
+            l.dims[1],
+            l.dims[2],
+            l.dims[3],
+            l.dims[4],
+            l.dims[5],
+            l.dims[6],
+            l.stride.0,
+            l.stride.1
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models;
+
+    #[test]
+    fn long_form_roundtrip_mobilenets() {
+        for net in [models::mobilenet_v1(), models::mobilenet_v2()] {
+            let text = render_net(&net);
+            let back = parse_net(&text).unwrap();
+            assert_eq!(back, net);
+        }
+    }
+
+    #[test]
+    fn shorthand_matches_helpers() {
+        let src = "\
+# a MobileNet-ish stem
+conv1 conv(c=3, k=32, r=3, p=112, stride=2)
+dw1   dw(ch=32, r=3, p=112)
+pw1   pw(c=32, k=64, p=112)
+fc    fc(c=1024, k=1000)
+";
+        let net = parse_net(src).unwrap();
+        assert_eq!(net[0], ConvLayer::conv("conv1", 3, 32, 3, 112, 2));
+        assert_eq!(net[1], ConvLayer::dw("dw1", 32, 3, 112, 1));
+        assert_eq!(net[2], ConvLayer::pw("pw1", 32, 64, 112));
+        assert_eq!(net[3], ConvLayer::fc("fc", 1024, 1000));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let net = parse_net("\n# only a comment\nfc fc(c=8, k=4)\n\n").unwrap();
+        assert_eq!(net.len(), 1);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_net("fc fc(c=8, k=4)\nbogus line here\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn missing_field_rejected() {
+        assert!(parse_net("pw1 pw(c=32, p=14)").unwrap_err().contains("missing 'k'"));
+        assert!(parse_net("x conv 1 2 3").unwrap_err().contains("11 fields"));
+    }
+
+    #[test]
+    fn empty_spec_rejected() {
+        assert!(parse_net("# nothing\n").is_err());
+    }
+}

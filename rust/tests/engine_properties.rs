@@ -1,0 +1,497 @@
+//! Property-based tests over the mapping engine's invariants
+//! (DESIGN.md deliverable (c): proptest-style coverage on the L3
+//! coordinator state — here, the mapping/quantization/energy substrate
+//! every experiment rests on).
+
+use qmap::arch::presets::{eyeriss, simba, toy};
+use qmap::arch::Arch;
+use qmap::mapping::mapspace::MapSpace;
+use qmap::mapping::{check, tile_words, Violation};
+use qmap::nest;
+use qmap::quant::{pack_factor, packed_words, unpacked_words, LayerQuant, QuantConfig, QMAX, QMIN};
+use qmap::util::prop::check as forall;
+use qmap::util::rng::Rng;
+use qmap::workload::{ConvLayer, Tensor, TENSORS};
+
+/// Random layer generator: plausible CNN layer geometries, including
+/// depthwise, pointwise and strided shapes.
+fn random_layer(r: &mut Rng) -> ConvLayer {
+    let c = [1u64, 3, 4, 8, 16, 32][r.range(0, 5)];
+    let k = [4u64, 8, 16, 32][r.range(0, 3)];
+    let p = [4u64, 7, 8, 14, 16, 28][r.range(0, 5)];
+    let stride = [1u64, 2][r.range(0, 1)];
+    match r.range(0, 3) {
+        0 => ConvLayer::conv("prop_conv", c, k, 3, p, stride),
+        1 => ConvLayer::dw("prop_dw", c.max(2), 3, p, stride),
+        2 => ConvLayer::pw("prop_pw", c, k, p),
+        _ => ConvLayer::fc("prop_fc", c * 16, k),
+    }
+}
+
+fn random_quant(r: &mut Rng) -> LayerQuant {
+    LayerQuant {
+        qa: QMIN + r.below((QMAX - QMIN + 1) as u64) as u8,
+        qw: QMIN + r.below((QMAX - QMIN + 1) as u64) as u8,
+        qo: QMIN + r.below((QMAX - QMIN + 1) as u64) as u8,
+    }
+}
+
+fn random_arch(r: &mut Rng) -> Arch {
+    [toy(), eyeriss(), simba()][r.range(0, 2)].clone()
+}
+
+// ---------------------------------------------------------------- packing
+
+#[test]
+fn packing_never_exceeds_unpacked() {
+    forall(
+        0xBAC4,
+        2000,
+        |r| (r.below(1 << 20) + 1, 1 + r.below(64) as u32, 1 + r.below(16) as u8),
+        |&(elems, word_bits, q)| {
+            if u32::from(q) > word_bits {
+                return Ok(()); // element wider than word: packing undefined
+            }
+            let p = packed_words(elems, word_bits, q);
+            let u = unpacked_words(elems, word_bits, q);
+            if p > u {
+                return Err(format!("packed {p} > unpacked {u}"));
+            }
+            // ceil-division identity: p == ceil(elems / floor(word/q))
+            let f = pack_factor(word_bits, q);
+            if p != elems.div_ceil(f) {
+                return Err(format!("p={p} != ceil({elems}/{f})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn packed_words_monotone_in_bits() {
+    forall(
+        0xBAC5,
+        1000,
+        |r| (r.below(1 << 18) + 1, r.below(7) as u8 + 2),
+        |&(elems, q)| {
+            // at fixed word size 16, fewer bits can never need more words
+            let lo = packed_words(elems, 16, q);
+            let hi = packed_words(elems, 16, q + 1);
+            if lo > hi {
+                return Err(format!("q={q}: {lo} words > q+1: {hi}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ genome codec
+
+#[test]
+fn genome_encode_decode_roundtrip() {
+    forall(
+        0x6E0,
+        500,
+        |r| {
+            let n = r.range(1, 60);
+            let mut qc = QuantConfig::uniform(n, 8);
+            for l in qc.layers.iter_mut() {
+                l.0 = QMIN + r.below((QMAX - QMIN + 1) as u64) as u8;
+                l.1 = QMIN + r.below((QMAX - QMIN + 1) as u64) as u8;
+            }
+            qc
+        },
+        |qc| {
+            let bytes = qc.encode();
+            let back = QuantConfig::decode(&bytes, 8).map_err(|e| e.to_string())?;
+            if back.layers != qc.layers {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn resolved_qo_is_next_layers_qa() {
+    forall(
+        0x6E1,
+        300,
+        |r| {
+            let n = r.range(2, 30);
+            let mut qc = QuantConfig::uniform(n, 8);
+            for l in qc.layers.iter_mut() {
+                l.0 = QMIN + r.below(7) as u8;
+            }
+            qc
+        },
+        |qc| {
+            let rs = qc.resolved();
+            for i in 0..rs.len() - 1 {
+                if rs[i].qo != qc.layers[i + 1].0 {
+                    return Err(format!("layer {i}: qo {} != next qa {}", rs[i].qo, qc.layers[i + 1].0));
+                }
+            }
+            // paper: "constant 8 bits are set for the last layer's outputs"
+            if rs.last().unwrap().qo != 8 {
+                return Err("last qo must be 8".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------------------- mapping validity
+
+#[test]
+fn valid_mappings_respect_capacities() {
+    forall(
+        0xA11D,
+        250,
+        |r| {
+            let arch = random_arch(r);
+            let layer = random_layer(r);
+            let q = random_quant(r);
+            let seed = r.next_u64();
+            (arch, layer, q, seed)
+        },
+        |(arch, layer, q, seed)| {
+            let space = MapSpace::of(arch);
+            let mut rng = Rng::new(*seed);
+            for _ in 0..200 {
+                let m = space.random_mapping(layer, &mut rng);
+                if check(arch, layer, q, &m).is_err() {
+                    continue;
+                }
+                // every kept tile must fit (in packed words)
+                for lv in 0..arch.levels.len() - 1 {
+                    for t in TENSORS {
+                        if !arch.levels[lv].keeps_tensor(t) {
+                            continue;
+                        }
+                        let w = tile_words(arch, layer, &m, lv, t, q);
+                        if let Some(cap) = arch.levels[lv].capacity_for(t) {
+                            if matches!(arch.levels[lv].capacity, qmap::arch::Capacity::PerTensor(_))
+                                && w > cap
+                            {
+                                return Err(format!(
+                                    "level {lv} tensor {t:?}: {w} words > cap {cap}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn check_rejects_wrong_factor_products() {
+    forall(
+        0xA11E,
+        200,
+        |r| (random_layer(r), r.next_u64()),
+        |(layer, seed)| {
+            let arch = toy();
+            let space = MapSpace::of(&arch);
+            let mut rng = Rng::new(*seed);
+            let mut m = space.random_mapping(layer, &mut rng);
+            // corrupt one factor so the product no longer matches
+            m.levels[0].temporal[0] += 1;
+            match check(&arch, layer, &LayerQuant::uniform(8), &m) {
+                Err(Violation::FactorProduct(_)) => Ok(()),
+                Err(_) => Ok(()), // a different violation may trigger first
+                Ok(()) => Err("corrupted mapping accepted".into()),
+            }
+        },
+    );
+}
+
+#[test]
+fn lower_bits_admit_supersets_of_mappings() {
+    // THE paper invariant: any mapping valid at q is valid at q' <= q
+    // (bit-packing only shrinks footprints).
+    forall(
+        0x5B5,
+        150,
+        |r| {
+            let layer = random_layer(r);
+            let q = random_quant(r);
+            let seed = r.next_u64();
+            (layer, q, seed)
+        },
+        |(layer, q, seed)| {
+            let arch = eyeriss();
+            let space = MapSpace::of(&arch);
+            let mut rng = Rng::new(*seed);
+            let smaller = LayerQuant {
+                qa: QMIN.max(q.qa - 1),
+                qw: QMIN.max(q.qw - 1),
+                qo: QMIN.max(q.qo - 1),
+            };
+            for _ in 0..100 {
+                let m = space.random_mapping(layer, &mut rng);
+                if check(&arch, layer, q, &m).is_ok()
+                    && check(&arch, layer, &smaller, &m).is_err()
+                {
+                    return Err(format!(
+                        "mapping valid at {q:?} but invalid at {smaller:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ nest analysis
+
+#[test]
+fn nest_macs_match_workload() {
+    forall(
+        0x4E57,
+        200,
+        |r| {
+            let arch = random_arch(r);
+            let layer = random_layer(r);
+            let seed = r.next_u64();
+            (arch, layer, seed)
+        },
+        |(arch, layer, seed)| {
+            let space = MapSpace::of(arch);
+            let mut rng = Rng::new(*seed);
+            let q = LayerQuant::uniform(8);
+            for _ in 0..100 {
+                let m = space.random_mapping(layer, &mut rng);
+                if check(arch, layer, &q, &m).is_err() {
+                    continue;
+                }
+                let nest = nest::analyze(arch, layer, &m);
+                if nest.macs != layer.macs() {
+                    return Err(format!(
+                        "nest macs {} != workload macs {}",
+                        nest.macs,
+                        layer.macs()
+                    ));
+                }
+                if nest.pes_used == 0 || nest.pes_used > arch.total_pes() {
+                    return Err(format!("pes_used {} out of range", nest.pes_used));
+                }
+                // every level's traffic must be non-negative and finite
+                for la in &nest.accesses {
+                    for t in &la[..] {
+                        if !(t.reads.is_finite() && t.writes.is_finite())
+                            || t.reads < 0.0
+                            || t.writes < 0.0
+                        {
+                            return Err("non-finite or negative traffic".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dram_reads_cover_each_tensor_at_least_once() {
+    // every weight/input element must enter the chip at least once; the
+    // DRAM read count can exceed the tensor size (re-fetch) but never
+    // undercut it.
+    forall(
+        0x4E58,
+        150,
+        |r| (random_layer(r), r.next_u64()),
+        |(layer, seed)| {
+            let arch = eyeriss();
+            let space = MapSpace::of(&arch);
+            let mut rng = Rng::new(*seed);
+            let q = LayerQuant::uniform(8);
+            let dram = arch.levels.len() - 1;
+            for _ in 0..60 {
+                let m = space.random_mapping(layer, &mut rng);
+                if check(&arch, layer, &q, &m).is_err() {
+                    continue;
+                }
+                let nest = nest::analyze(&arch, layer, &m);
+                for t in [Tensor::Weights, Tensor::Inputs] {
+                    let reads = nest.accesses[dram][t.index()].reads;
+                    let elems = layer.tensor_elements(t) as f64;
+                    if reads + 1e-6 < elems {
+                        return Err(format!(
+                            "{t:?}: DRAM reads {reads} < tensor elements {elems}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------------------------- energy
+
+#[test]
+fn energy_monotone_in_bitwidth_for_fixed_mapping() {
+    // for one fixed valid mapping, pricing it at fewer bits can never
+    // cost more memory energy (same accesses, fewer words per access)
+    forall(
+        0xE4E,
+        150,
+        |r| (random_layer(r), r.next_u64()),
+        |(layer, seed)| {
+            let arch = eyeriss();
+            let space = MapSpace::of(&arch);
+            let mut rng = Rng::new(*seed);
+            let q8 = LayerQuant::uniform(8);
+            for _ in 0..60 {
+                let m = space.random_mapping(layer, &mut rng);
+                if check(&arch, layer, &q8, &m).is_err() {
+                    continue;
+                }
+                let nest = nest::analyze(&arch, layer, &m);
+                let e8 = qmap::energy::estimate(&arch, layer, &q8, &nest);
+                let e2 = qmap::energy::estimate(&arch, layer, &LayerQuant::uniform(2), &nest);
+                if e2.memory_energy_pj() > e8.memory_energy_pj() + 1e-9 {
+                    return Err(format!(
+                        "memory energy grew: 2b {} > 8b {}",
+                        e2.memory_energy_pj(),
+                        e8.memory_energy_pj()
+                    ));
+                }
+                if (e2.mac_energy_pj - e8.mac_energy_pj).abs() > 1e-9 {
+                    return Err("MAC energy must not depend on bits".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------------ NSGA-II
+
+#[test]
+fn pareto_front_has_no_dominated_points() {
+    forall(
+        0x9A12,
+        400,
+        |r| {
+            let n = r.range(2, 40);
+            (0..n)
+                .map(|_| vec![r.f64(), r.f64()])
+                .collect::<Vec<Vec<f64>>>()
+        },
+        |pts| {
+            let front = qmap::nsga::pareto_front(pts);
+            if front.is_empty() {
+                return Err("front empty for nonempty input".into());
+            }
+            for a in &front {
+                for b in pts {
+                    if qmap::nsga::dominates(b, a) {
+                        return Err(format!("{b:?} dominates front member {a:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mutation_respects_bitwidth_bounds() {
+    forall(
+        0x9A13,
+        500,
+        |r| {
+            let n = r.range(1, 40);
+            let seed = r.next_u64();
+            (QuantConfig::uniform(n, 8), seed)
+        },
+        |(qc, seed)| {
+            let mut g = qc.clone();
+            let mut rng = Rng::new(*seed);
+            for _ in 0..50 {
+                qmap::nsga::mutate(&mut g, 0.5, 0.3, &mut rng);
+                for &(a, w) in &g.layers {
+                    if !(QMIN..=QMAX).contains(&a) || !(QMIN..=QMAX).contains(&w) {
+                        return Err(format!("gene out of range: ({a},{w})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn crossover_genes_come_from_parents() {
+    forall(
+        0x9A14,
+        300,
+        |r| {
+            let n = r.range(1, 40);
+            let mut a = QuantConfig::uniform(n, 8);
+            let mut b = QuantConfig::uniform(n, 8);
+            for l in a.layers.iter_mut() {
+                l.0 = QMIN + r.below(7) as u8;
+                l.1 = QMIN + r.below(7) as u8;
+            }
+            for l in b.layers.iter_mut() {
+                l.0 = QMIN + r.below(7) as u8;
+                l.1 = QMIN + r.below(7) as u8;
+            }
+            let seed = r.next_u64();
+            (a, b, seed)
+        },
+        |(a, b, seed)| {
+            let mut rng = Rng::new(*seed);
+            let child = qmap::nsga::uniform_crossover(a, b, &mut rng);
+            if child.layers.len() != a.layers.len() {
+                return Err("child length mismatch".into());
+            }
+            // the paper's genome is a linear string of *integers* (56 for
+            // MobileNetV1): qa and qw cross over independently
+            for (i, &(ca, cw)) in child.layers.iter().enumerate() {
+                if ca != a.layers[i].0 && ca != b.layers[i].0 {
+                    return Err(format!("qa gene {i} ({ca}) not from either parent"));
+                }
+                if cw != a.layers[i].1 && cw != b.layers[i].1 {
+                    return Err(format!("qw gene {i} ({cw}) not from either parent"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// -------------------------------------------------------- mapper stability
+
+#[test]
+fn canonical_quant_shares_search_results() {
+    // settings in the same packing-equivalence class must produce the
+    // same mapper outcome (this is what makes the cache effective)
+    forall(
+        0xCA40,
+        40,
+        |r| (random_layer(r), r.next_u64()),
+        |(layer, _)| {
+            let arch = eyeriss(); // word 16, packing on
+            let cfg = qmap::mapper::MapperConfig {
+                valid_target: 50,
+                max_draws: 50_000,
+                seed: 11,
+            };
+            // 7 and 8 bits both pack 2/word -> identical canonical class
+            let r7 = qmap::mapper::search(&arch, layer, &LayerQuant::uniform(7), &cfg);
+            let r8 = qmap::mapper::search(&arch, layer, &LayerQuant::uniform(8), &cfg);
+            if r7.best.map(|e| e.edp()) != r8.best.map(|e| e.edp()) {
+                return Err("7b and 8b (same pack class) diverged".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,155 @@
+//! PJRT runtime integration: load the AOT artifacts and execute the
+//! train/eval steps from Rust. Requires `make artifacts` to have run;
+//! the tests *fail* (not skip) when artifacts are missing, because the
+//! Makefile's `test` target guarantees them.
+
+use qmap::data::SyntheticDataset;
+use qmap::quant::QuantConfig;
+use qmap::runtime::qat::{QatAccuracy, QatBudget};
+use qmap::runtime::{default_artifact_dir, Runtime};
+
+/// PJRT handles are not Sync, so each test compiles its own runtime
+/// (a few seconds per test; acceptable for an integration binary).
+fn load_rt() -> Runtime {
+    Runtime::load(default_artifact_dir())
+        .expect("artifacts missing or stale — run `make artifacts`")
+}
+
+#[test]
+fn artifacts_load_and_metadata_is_consistent() {
+    let rt = &load_rt();
+    assert_eq!(rt.meta.num_layers, 28, "MobileNetV1 genome length");
+    assert_eq!(rt.init_params.len(), rt.meta.param_size);
+    assert!(rt.meta.batch > 0 && rt.meta.img > 0);
+    assert!(!rt.platform().is_empty());
+}
+
+#[test]
+fn eval_step_runs_and_is_deterministic() {
+    let rt = &load_rt();
+    let data = SyntheticDataset::new(1);
+    let b = data.batch(rt.meta.batch, 0);
+    let l = rt.meta.num_layers;
+    let qa = vec![8.0f32; l];
+    let qw = vec![8.0f32; l];
+    let (c1, l1) = rt.eval_step(&rt.init_params, &b.x, &b.y, &qa, &qw).unwrap();
+    let (c2, l2) = rt.eval_step(&rt.init_params, &b.x, &b.y, &qa, &qw).unwrap();
+    assert_eq!(c1, c2);
+    assert_eq!(l1, l2);
+    assert!(c1 >= 0.0 && c1 <= rt.meta.batch as f32);
+    assert!(l1.is_finite() && l1 > 0.0);
+}
+
+#[test]
+fn train_step_changes_params_and_loss_is_finite() {
+    let rt = &load_rt();
+    let data = SyntheticDataset::new(2);
+    let b = data.batch(rt.meta.batch, 0);
+    let l = rt.meta.num_layers;
+    let qa = vec![8.0f32; l];
+    let qw = vec![8.0f32; l];
+    let mut params = rt.init_params.clone();
+    let loss = rt.train_step(&mut params, &b.x, &b.y, &qa, &qw, 0.05).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    let changed = params
+        .iter()
+        .zip(&rt.init_params)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(
+        changed > params.len() / 10,
+        "only {changed}/{} params moved",
+        params.len()
+    );
+}
+
+#[test]
+fn short_training_reduces_loss() {
+    let rt = &load_rt();
+    let data = SyntheticDataset::new(3);
+    let mut first = None;
+    let mut last = 0.0f32;
+    QatAccuracy::pretrain(rt, &data, 8, 30, 0.05, |_, loss| {
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    })
+    .unwrap();
+    let first = first.unwrap();
+    assert!(
+        last < first,
+        "loss did not fall over 30 steps: {first} -> {last}"
+    );
+}
+
+#[test]
+fn lower_bitwidths_execute_and_degrade_gracefully() {
+    // the same artifact serves every genome: bit-widths are runtime
+    // inputs. 2-bit inference must run, and (untrained) should not be
+    // *better* than 8-bit by a large margin.
+    let rt = &load_rt();
+    let data = SyntheticDataset::new(4);
+    let params = QatAccuracy::pretrain(rt, &data, 8, 60, 0.05, |_, _| {}).unwrap();
+    let l = rt.meta.num_layers;
+    let eval_at = |bits: f32| {
+        let qa = vec![bits; l];
+        let qw = vec![bits; l];
+        let mut correct = 0.0;
+        for i in 0..4 {
+            let b = data.batch(rt.meta.batch, 10_000 + i);
+            let (c, _) = rt.eval_step(&params, &b.x, &b.y, &qa, &qw).unwrap();
+            correct += c;
+        }
+        correct / (4.0 * rt.meta.batch as f32)
+    };
+    let a8 = eval_at(8.0);
+    let a2 = eval_at(2.0);
+    assert!(
+        a8 >= a2 - 0.05,
+        "8-bit ({a8}) should not lose to 2-bit ({a2}) after 8-bit training"
+    );
+}
+
+#[test]
+fn qat_accuracy_memoizes_genomes() {
+    let rt = &load_rt();
+    let data = SyntheticDataset::new(5);
+    let mut qat = QatAccuracy::new(
+        rt,
+        data,
+        rt.init_params.clone(),
+        QatBudget {
+            finetune_steps: 2,
+            eval_batches: 1,
+            lr: 0.02,
+        },
+    );
+    let g = QuantConfig::uniform(rt.meta.num_layers, 6);
+    let t0 = std::time::Instant::now();
+    let a1 = qat.evaluate(&g).unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let a2 = qat.evaluate(&g).unwrap();
+    let warm = t1.elapsed();
+    assert_eq!(a1, a2);
+    assert!(
+        warm < cold / 10,
+        "memo hit not fast: cold {cold:?}, warm {warm:?}"
+    );
+}
+
+#[test]
+fn shape_mismatches_are_rejected() {
+    let rt = &load_rt();
+    let l = rt.meta.num_layers;
+    let qa = vec![8.0f32; l];
+    let bad_qw = vec![8.0f32; l + 1];
+    let data = SyntheticDataset::new(6);
+    let b = data.batch(rt.meta.batch, 0);
+    assert!(rt.eval_step(&rt.init_params, &b.x, &b.y, &qa, &bad_qw).is_err());
+    let bad_params = vec![0.0f32; 10];
+    assert!(rt.eval_step(&bad_params, &b.x, &b.y, &qa, &qa).is_err());
+    let bad_x = vec![0.0f32; 7];
+    assert!(rt.eval_step(&rt.init_params, &bad_x, &b.y, &qa, &qa).is_err());
+}

@@ -1,0 +1,201 @@
+//! Integration tests: the full search stack (NSGA-II x mapping engine x
+//! proxy accuracy) on the real presets, plus cache behaviour across a
+//! whole search — everything short of the PJRT runtime (see
+//! `runtime_integration.rs`).
+
+use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
+use qmap::arch::presets;
+use qmap::baselines::{naive_search, proposed_search, uniform_sweep};
+use qmap::coordinator::RunConfig;
+use qmap::eval::evaluate_network;
+use qmap::mapper::cache::MapperCache;
+use qmap::quant::QuantConfig;
+use qmap::workload::models;
+
+fn rc() -> RunConfig {
+    RunConfig::fast()
+}
+
+#[test]
+fn proposed_search_improves_over_uniform8() {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    let c = rc();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+
+    let reference = evaluate_network(
+        &arch,
+        &layers,
+        &QuantConfig::uniform(layers.len(), 8),
+        &cache,
+        &c.mapper,
+    )
+    .unwrap();
+    let ref_acc = acc.accuracy(&QuantConfig::uniform(layers.len(), 8));
+
+    let front = proposed_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, _| {});
+    assert!(!front.is_empty());
+
+    // some candidate must save EDP at tolerable accuracy loss
+    let best = front
+        .iter()
+        .filter(|cand| cand.accuracy >= ref_acc - 0.02)
+        .map(|cand| cand.hw.edp / reference.edp)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        best < 0.95,
+        "no candidate saved >=5% EDP at <=2% accuracy loss (best rel EDP {best})"
+    );
+}
+
+#[test]
+fn search_is_deterministic_given_seed() {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let c = rc();
+
+    let run = || {
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+        let front =
+            proposed_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, _| {});
+        front
+            .iter()
+            .map(|cand| (cand.genome.encode(), cand.hw.edp.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run(), "two identically-seeded searches diverged");
+}
+
+#[test]
+fn uniform_sweep_covers_all_bitwidths() {
+    let arch = presets::simba();
+    let layers = models::mobilenet_v2();
+    let cache = MapperCache::new();
+    let c = rc();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+    let cands = uniform_sweep(&arch, &layers, &mut acc, &cache, &c.mapper, true);
+    // 2..=8 plus 16-bit reference
+    assert_eq!(cands.len(), 8);
+    // accuracy should be non-decreasing with bits up to the proxy's
+    // small evaluation noise
+    let accs: Vec<f64> = cands.iter().map(|cand| cand.accuracy).collect();
+    for w in accs.windows(2) {
+        assert!(w[0] <= w[1] + 0.01, "uniform accuracy not monotone: {accs:?}");
+    }
+    // memory energy must be non-decreasing with bits too
+    let mems: Vec<f64> = cands.iter().map(|cand| cand.hw.memory_energy_pj).collect();
+    for w in mems.windows(2) {
+        assert!(w[0] <= w[1] + 1e-6, "uniform mem energy not monotone: {mems:?}");
+    }
+}
+
+#[test]
+fn naive_search_prices_winners_on_real_hardware() {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    let c = rc();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+    let cands = naive_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga);
+    assert!(!cands.is_empty());
+    for cand in &cands {
+        assert!(cand.hw.edp.is_finite() && cand.hw.edp > 0.0);
+        assert_eq!(cand.strategy, "naive");
+    }
+}
+
+#[test]
+fn cache_deduplicates_across_a_whole_search() {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    let c = rc();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+    let _ = proposed_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, _| {});
+    // an NSGA-II run evaluates |P| + |Q|*gens genomes x 28 layers;
+    // without the cache that is thousands of mapper searches. With it,
+    // the distinct-workload count stays small and hits dominate.
+    assert!(
+        cache.hits() > cache.misses(),
+        "cache ineffective: {} hits / {} misses",
+        cache.hits(),
+        cache.misses()
+    );
+    // canonicalization bounds distinct workloads: 28 layers x pack
+    // classes (16/8/4/2 -> 4 classes per tensor triple) is the true
+    // upper bound; allow slack
+    assert!(
+        cache.len() < 28 * 64,
+        "cache grew implausibly: {} entries",
+        cache.len()
+    );
+}
+
+#[test]
+fn cache_persistence_roundtrip() {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    let c = rc();
+    let qc = QuantConfig::uniform(layers.len(), 6);
+    let before = evaluate_network(&arch, &layers, &qc, &cache, &c.mapper).unwrap();
+
+    let json = cache.to_json();
+    let restored = MapperCache::new();
+    let n = restored.load_json(&json).unwrap();
+    assert_eq!(n, cache.len());
+
+    // the restored cache must produce identical results without misses
+    let after = evaluate_network(&arch, &layers, &qc, &restored, &c.mapper).unwrap();
+    assert_eq!(before, after);
+    assert_eq!(restored.misses(), 0, "restored cache re-evaluated workloads");
+}
+
+#[test]
+fn generation_callback_sees_monotone_progress() {
+    let arch = presets::eyeriss();
+    let layers = models::mobilenet_v1();
+    let cache = MapperCache::new();
+    let mut c = rc();
+    c.nsga.generations = 8;
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+
+    let mut best_edp_per_gen: Vec<f64> = Vec::new();
+    proposed_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, pop| {
+        let best = pop
+            .iter()
+            .map(|i| i.objectives[0])
+            .fold(f64::INFINITY, f64::min);
+        best_edp_per_gen.push(best);
+    });
+    assert!(best_edp_per_gen.len() >= 8);
+    // elitism: the best EDP in the population can never get worse
+    for w in best_edp_per_gen.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9, "elite lost: {best_edp_per_gen:?}");
+    }
+}
+
+#[test]
+fn cross_architecture_evaluation_is_consistent() {
+    // a genome tuned on Simba must still be evaluable on Eyeriss and
+    // produce finite, positive metrics (the Fig. 6 cross arm)
+    let eyeriss = presets::eyeriss();
+    let simba = presets::simba();
+    let layers = models::mobilenet_v1();
+    let c = rc();
+    let cache_s = MapperCache::new();
+    let cache_e = MapperCache::new();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+    let front = proposed_search(&simba, &layers, &mut acc, &cache_s, &c.mapper, &c.nsga, |_, _| {});
+    let mut priced = 0;
+    for cand in front.iter().take(6) {
+        if let Some(e) = evaluate_network(&eyeriss, &layers, &cand.genome, &cache_e, &c.mapper) {
+            assert!(e.edp.is_finite() && e.edp > 0.0);
+            assert!(e.memory_energy_pj > 0.0);
+            priced += 1;
+        }
+    }
+    assert!(priced > 0, "no Simba winner was mappable on Eyeriss");
+}

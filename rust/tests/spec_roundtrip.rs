@@ -1,0 +1,87 @@
+//! Text-spec round-trips and shipped spec files: the `.qarch`/`.qnet`
+//! formats are a public interface (the paper's "text specification"),
+//! so the files in `specs/` must stay loadable and equivalent to the
+//! built-in presets.
+
+use qmap::arch::parser::{load_arch, parse_arch, render_arch};
+use qmap::arch::presets;
+use qmap::workload::parser::{load_net, parse_net, render_net};
+use qmap::workload::models;
+
+fn spec_path(name: &str) -> String {
+    format!("{}/specs/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn shipped_qarch_files_match_presets() {
+    for (file, preset) in [
+        ("eyeriss.qarch", presets::eyeriss()),
+        ("simba.qarch", presets::simba()),
+        ("toy.qarch", presets::toy()),
+    ] {
+        let loaded = load_arch(&spec_path(file)).unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert_eq!(loaded, preset, "{file} drifted from the built-in preset");
+    }
+}
+
+#[test]
+fn arch_render_parse_roundtrip() {
+    for a in [presets::eyeriss(), presets::simba(), presets::toy()] {
+        let text = render_arch(&a);
+        let back = parse_arch(&text).unwrap();
+        assert_eq!(back, a);
+    }
+}
+
+#[test]
+fn shipped_qnet_loads_and_maps() {
+    let net = load_net(&spec_path("tinynet.qnet")).unwrap();
+    assert_eq!(net.len(), 6);
+    // it must actually be mappable on every preset
+    let cfg = qmap::mapper::MapperConfig {
+        valid_target: 30,
+        max_draws: 60_000,
+        seed: 1,
+    };
+    for arch in [presets::eyeriss(), presets::simba(), presets::toy()] {
+        let cache = qmap::mapper::cache::MapperCache::new();
+        let qc = qmap::quant::QuantConfig::uniform(net.len(), 8);
+        let e = qmap::eval::evaluate_network(&arch, &net, &qc, &cache, &cfg);
+        assert!(e.is_some(), "tinynet failed to map on {}", arch.name);
+    }
+}
+
+#[test]
+fn net_render_parse_roundtrip() {
+    for net in [models::mobilenet_v1(), models::mobilenet_v2()] {
+        assert_eq!(parse_net(&render_net(&net)).unwrap(), net);
+    }
+}
+
+#[test]
+fn mobilenet_v2_layer_count_matches_paper_genome() {
+    // 53 quantizable layers (stem + 17 blocks x (expand,dw,project) with
+    // no expand on block 1 + final 1x1 + FC)
+    assert_eq!(models::mobilenet_v2().len(), 53);
+}
+
+#[test]
+fn constraints_ship_for_both_paper_archs() {
+    use qmap::mapping::constraints::MapConstraints;
+    for a in [presets::eyeriss(), presets::simba()] {
+        let c = MapConstraints::for_arch(&a);
+        c.validate(&a).unwrap();
+        // constrained enumeration must still admit mappings for the
+        // paper's Table-I layer
+        let layer = &models::mobilenet_v1()[1];
+        let space = qmap::mapping::mapspace::MapSpace::of(&a);
+        let st = space.enumerate_valid(
+            &a,
+            layer,
+            &qmap::quant::LayerQuant::uniform(8),
+            500,
+            |_| {},
+        );
+        assert!(st.valid > 0, "{}: constrained space empty", a.name);
+    }
+}
