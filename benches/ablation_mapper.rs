@@ -36,6 +36,7 @@ fn main() {
         valid_target: budget,
         max_draws: budget * 200,
         seed: 3,
+        shards: 1,
     };
     let probe = [1usize, 3, 8, 13, 22, 27]; // dw, pw, early/late layers
     let mut rows = Vec::new();
@@ -130,6 +131,7 @@ fn main() {
             valid_target: target,
             max_draws: target * 500,
             seed: 5,
+            shards: 1,
         };
         let cache = MapperCache::new();
         let t0 = Instant::now();

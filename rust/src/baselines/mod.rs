@@ -203,6 +203,7 @@ mod tests {
             valid_target: 40,
             max_draws: 40_000,
             seed: 11,
+            shards: 1,
         }
     }
 

@@ -126,12 +126,17 @@ pub fn table1_mappings(limit: u64) -> Vec<Table1Row> {
         let space = MapSpace::of(&arch);
         for &(qa, qw, qo) in &settings {
             let q = LayerQuant { qa, qw, qo };
+            // price every visited mapping through the allocation-free
+            // context path (same numbers as analyze/estimate, much
+            // faster on exhaustive sweeps)
+            let lctx = crate::mapping::LayerContext::new(&arch, layer, &q);
+            let mut ectx = crate::mapper::EvalContext::for_arch(&arch);
             let mut min_edp = f64::INFINITY;
             let st = space.enumerate_valid(&arch, layer, &q, limit, |m| {
-                let nest = crate::nest::analyze(&arch, layer, m);
-                let est = crate::energy::estimate(&arch, layer, &q, &nest);
-                if est.edp() < min_edp {
-                    min_edp = est.edp();
+                crate::nest::analyze_into(&lctx, m, &mut ectx.ext, &mut ectx.nest);
+                crate::energy::estimate_into(&lctx, &ectx.nest, &mut ectx.est);
+                if ectx.est.edp() < min_edp {
+                    min_edp = ectx.est.edp();
                 }
             });
             rows.push(Table1Row {

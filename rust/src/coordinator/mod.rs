@@ -52,6 +52,11 @@ impl RunConfig {
                 rc.seed = s;
             }
         }
+        if let Ok(s) = std::env::var("QMAP_SHARDS") {
+            if let Ok(s) = s.parse() {
+                rc.mapper.shards = s;
+            }
+        }
         rc
     }
 
@@ -63,6 +68,9 @@ impl RunConfig {
                 valid_target: 2_000,
                 max_draws: 2_000_000,
                 seed: 7,
+                // population-level parallelism already saturates the
+                // cores; per-workload sharding stays off by default
+                shards: 1,
             },
             nsga: NsgaConfig::default(),
             ..RunConfig::default()
@@ -76,6 +84,7 @@ impl RunConfig {
                 valid_target: 60,
                 max_draws: 60_000,
                 seed: 1,
+                shards: 1,
             },
             nsga: NsgaConfig {
                 population: 12,

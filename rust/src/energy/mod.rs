@@ -12,6 +12,7 @@
 //! untouched".
 
 use crate::arch::Arch;
+use crate::mapping::LayerContext;
 use crate::nest::NestAnalysis;
 use crate::quant::{pack_factor, LayerQuant};
 use crate::workload::{ConvLayer, Tensor, TENSORS};
@@ -44,6 +45,30 @@ impl Estimate {
     /// Memory-subsystem energy (everything except MACs), pJ.
     pub fn memory_energy_pj(&self) -> f64 {
         self.energy_pj - self.mac_energy_pj
+    }
+
+    /// An empty estimate to be filled by [`estimate_into`]
+    /// (scratch-buffer construction for the allocation-free hot path).
+    pub fn empty() -> Self {
+        Estimate {
+            energy_pj: 0.0,
+            level_energy_pj: Vec::new(),
+            mac_energy_pj: 0.0,
+            cycles: 0.0,
+            level_words: Vec::new(),
+            pes_used: 0,
+        }
+    }
+
+    /// Overwrite `self` with `src`, reusing the level vectors' capacity
+    /// (no allocation once lengths match).
+    pub fn copy_from(&mut self, src: &Estimate) {
+        self.energy_pj = src.energy_pj;
+        self.level_energy_pj.clone_from(&src.level_energy_pj);
+        self.mac_energy_pj = src.mac_energy_pj;
+        self.cycles = src.cycles;
+        self.level_words.clone_from(&src.level_words);
+        self.pes_used = src.pes_used;
     }
 }
 
@@ -97,6 +122,43 @@ pub fn estimate(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, nest: &NestAnaly
         level_words,
         pes_used: nest.pes_used,
     }
+}
+
+/// Allocation-free, table-driven [`estimate`]: identical math in the
+/// same order (bit-identical results — asserted by
+/// `tests/hotpath_equivalence.rs`), with per-level constants read from
+/// the precomputed [`LayerContext`] and the result written into `out`
+/// without reallocating in steady state.
+pub fn estimate_into(lctx: &LayerContext, nest: &NestAnalysis, out: &mut Estimate) {
+    let nl = lctx.num_levels;
+    out.level_energy_pj.clear();
+    out.level_energy_pj.resize(nl, 0.0);
+    out.level_words.clear();
+    out.level_words.resize(nl, 0.0);
+
+    for lv in 0..nl {
+        for t in TENSORS {
+            let a = nest.accesses[lv][t.index()];
+            let w = lctx.words_f(t, a.total());
+            out.level_words[lv] += w;
+            out.level_energy_pj[lv] += w * lctx.access_energy[lv][t.index()];
+        }
+    }
+
+    out.mac_energy_pj = nest.macs as f64 * lctx.mac_energy_pj;
+    out.energy_pj = out.level_energy_pj.iter().sum::<f64>() + out.mac_energy_pj;
+
+    // latency: bound by compute or by the busiest memory interface;
+    // machine-total words are spread across a level's parallel instances
+    let compute_cycles = nest.macs as f64 / nest.pes_used.max(1) as f64;
+    let mut cycles = compute_cycles;
+    for lv in 0..nl {
+        let inst = lctx.inst_cap[lv].min(nest.pes_used.max(1));
+        let level_cycles = out.level_words[lv] / (lctx.bandwidth[lv] * inst as f64);
+        cycles = cycles.max(level_cycles);
+    }
+    out.cycles = cycles;
+    out.pes_used = nest.pes_used;
 }
 
 /// Number of parallel instances of level `lv`: total PEs divided by the

@@ -30,7 +30,9 @@ pub struct NetworkEval {
 }
 
 /// Evaluate a full network configuration. Returns `None` if any layer
-/// fails to map (no valid mapping found within the draw budget).
+/// fails to map (no valid mapping found within the draw budget) — and
+/// short-circuits on the first such layer, so a doomed genome does not
+/// pay for characterizing its remaining layers.
 pub fn evaluate_network(
     arch: &Arch,
     layers: &[ConvLayer],
@@ -39,16 +41,20 @@ pub fn evaluate_network(
     cfg: &MapperConfig,
 ) -> Option<NetworkEval> {
     assert_eq!(layers.len(), qc.len(), "genome/layer-count mismatch");
-    let per_layer: Vec<Option<CachedEval>> = layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| cache.evaluate(arch, l, &qc.layer(i), cfg))
-        .collect();
+    let mut per_layer: Vec<Option<CachedEval>> = Vec::with_capacity(layers.len());
+    for (i, l) in layers.iter().enumerate() {
+        match cache.evaluate(arch, l, &qc.layer(i), cfg) {
+            Some(e) => per_layer.push(Some(e)),
+            None => return None, // unmappable: the genome is dead already
+        }
+    }
     aggregate(arch, layers, qc, &per_layer)
 }
 
 /// Parallel variant: splits layers across `threads` std threads. The
 /// cache is shared, so concurrent NSGA-II evaluations de-duplicate work.
+/// An unmappable layer raises a stop flag; workers drain instead of
+/// characterizing the rest of a genome whose result is already `None`.
 pub fn evaluate_network_parallel(
     arch: &Arch,
     layers: &[ConvLayer],
@@ -61,18 +67,28 @@ pub fn evaluate_network_parallel(
     let n = layers.len();
     let results: Mutex<Vec<Option<CachedEval>>> = Mutex::new(vec![None; n]);
     let next = std::sync::atomic::AtomicUsize::new(0);
+    let failed = std::sync::atomic::AtomicBool::new(false);
     std::thread::scope(|s| {
         for _ in 0..threads.max(1).min(n) {
             s.spawn(|| loop {
+                if failed.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
                 let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
                 let r = cache.evaluate(arch, &layers[i], &qc.layer(i), cfg);
+                if r.is_none() {
+                    failed.store(true, std::sync::atomic::Ordering::Relaxed);
+                }
                 results.lock().unwrap()[i] = r;
             });
         }
     });
+    if failed.load(std::sync::atomic::Ordering::Relaxed) {
+        return None;
+    }
     let per_layer = results.into_inner().unwrap();
     aggregate(arch, layers, qc, &per_layer)
 }
@@ -129,6 +145,7 @@ mod tests {
             valid_target: 60,
             max_draws: 60_000,
             seed: 2,
+            shards: 1,
         }
     }
 
@@ -172,6 +189,26 @@ mod tests {
             evaluate_network(&a, &net, &QuantConfig::uniform(net.len(), 2), &cache, &cfg()).unwrap();
         assert!(e2.memory_energy_pj < e8.memory_energy_pj);
         assert!(e2.weight_words < e8.weight_words);
+    }
+
+    #[test]
+    fn unmappable_layer_short_circuits() {
+        // zero-capacity weight spad: nothing maps
+        let mut a = toy();
+        a.name = "toy-nospad".into();
+        a.levels[0].capacity = crate::arch::Capacity::PerTensor([0, 64, 64]);
+        let net = small_net();
+        let qc = QuantConfig::uniform(net.len(), 8);
+        let cache = MapperCache::new();
+        assert!(evaluate_network(&a, &net, &qc, &cache, &cfg()).is_none());
+        // only the first layer was searched; the rest were never touched
+        assert_eq!(cache.misses(), 1);
+        // a repeat costs one negative-cache hit, zero new searches
+        assert!(evaluate_network(&a, &net, &qc, &cache, &cfg()).is_none());
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        // the parallel variant also returns None
+        assert!(evaluate_network_parallel(&a, &net, &qc, &cache, &cfg(), 4).is_none());
     }
 
     #[test]

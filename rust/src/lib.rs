@@ -28,6 +28,7 @@ pub mod nest;
 pub mod nsga;
 pub mod quant;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod util;
 pub mod workload;

@@ -423,6 +423,17 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
     0
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> i32 {
+    fail(
+        "the PJRT training runtime is compiled out: add the `xla` and \
+         `anyhow` dependencies to rust/Cargo.toml (path deps to local \
+         checkouts) and rebuild with `--features pjrt` — see the \
+         [features] notes in rust/Cargo.toml",
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> i32 {
     use qmap::data::SyntheticDataset;
     use qmap::runtime::{default_artifact_dir, Runtime};

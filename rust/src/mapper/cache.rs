@@ -8,7 +8,16 @@
 //!
 //! The cache is keyed by `workload_hash(layer, quant)` (shape + strides
 //! + kind + bit-widths) and the architecture name, is thread-safe, and
-//! can persist to a JSON file across runs.
+//! can persist to a JSON file across runs. Two hot-path properties:
+//!
+//! * **Lock striping** — entries spread over [`NUM_SHARDS`] independent
+//!   `RwLock`ed maps selected by the high bits of the key, so
+//!   population-parallel NSGA-II evaluations no longer serialize behind
+//!   a single lock.
+//! * **Negative caching** — unmappable workloads are stored as `None`,
+//!   so every later genome touching one costs a lookup instead of
+//!   re-paying the full `max_draws` search. The JSON dump records them
+//!   with a `mappable: false` marker.
 
 use super::{search, workload_hash, MapperConfig};
 use crate::arch::Arch;
@@ -18,6 +27,10 @@ use crate::workload::ConvLayer;
 use rustc_hash::FxHashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
+
+/// Lock stripes; a power of two so the top key bits index directly.
+pub const NUM_SHARDS: usize = 16;
+const SHARD_SHIFT: u32 = 64 - 4; // log2(NUM_SHARDS) top bits
 
 /// The cached summary of one workload evaluation (everything the search
 /// engine needs; the winning mapping itself is not persisted).
@@ -35,9 +48,21 @@ pub struct CachedEval {
     pub mac_energy_pj: f64,
 }
 
-/// Thread-safe mapper cache.
+/// One cache slot: either a mapped workload's summary, or a negative
+/// record of a failed search tagged with the draw budget that failed.
+/// A later probe with a *larger* `max_draws` re-runs the search instead
+/// of trusting a smaller budget's failure; probes at or below the
+/// recorded budget are served as (negative) hits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum CacheEntry {
+    Mapped(CachedEval),
+    Unmappable { max_draws: u64 },
+}
+
+/// Thread-safe, lock-striped mapper cache with negative caching (see
+/// [`CacheEntry`]).
 pub struct MapperCache {
-    map: RwLock<FxHashMap<u64, CachedEval>>,
+    shards: Vec<RwLock<FxHashMap<u64, CacheEntry>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -51,10 +76,17 @@ impl Default for MapperCache {
 impl MapperCache {
     pub fn new() -> Self {
         MapperCache {
-            map: RwLock::new(FxHashMap::default()),
+            shards: (0..NUM_SHARDS)
+                .map(|_| RwLock::new(FxHashMap::default()))
+                .collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &RwLock<FxHashMap<u64, CacheEntry>> {
+        &self.shards[(key >> SHARD_SHIFT) as usize]
     }
 
     fn key(arch: &Arch, layer: &ConvLayer, q: &LayerQuant) -> u64 {
@@ -70,6 +102,10 @@ impl MapperCache {
     }
 
     /// Evaluate a workload through the cache, running the mapper on miss.
+    /// Returns `None` for unmappable workloads — a result that is itself
+    /// cached (tagged with the failing draw budget), so repeated probes
+    /// cost one lookup; a probe with a larger `max_draws` than any
+    /// recorded failure re-runs the search.
     pub fn evaluate(
         &self,
         arch: &Arch,
@@ -78,36 +114,57 @@ impl MapperCache {
         cfg: &MapperConfig,
     ) -> Option<CachedEval> {
         let key = Self::key(arch, layer, q);
-        if let Some(hit) = self.map.read().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Some(*hit);
+        if let Some(hit) = self.shard(key).read().unwrap().get(&key) {
+            match hit {
+                CacheEntry::Mapped(e) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(*e);
+                }
+                CacheEntry::Unmappable { max_draws } if *max_draws >= cfg.max_draws => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                // stale negative from a smaller budget: fall through and
+                // pay the search again with the bigger budget
+                CacheEntry::Unmappable { .. } => {}
+            }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let r = search(arch, layer, q, cfg);
-        let est = r.best?;
-        let nl = est.level_energy_pj.len();
-        let mut breakdown = [0.0f64; 3];
-        for (i, &e) in est.level_energy_pj.iter().enumerate() {
-            let slot = if i == nl - 1 {
-                2 // DRAM
-            } else if i == 0 {
-                0 // innermost spads/regs
-            } else {
-                1 // middle buffers
-            };
-            breakdown[slot] += e;
-        }
-        let cached = CachedEval {
-            energy_pj: est.energy_pj,
-            memory_energy_pj: est.memory_energy_pj(),
-            cycles: est.cycles,
-            edp: est.edp(),
-            valid_mappings: r.valid,
-            energy_breakdown_pj: breakdown,
-            mac_energy_pj: est.mac_energy_pj,
+        let (entry, out) = match r.best {
+            Some(est) => {
+                let nl = est.level_energy_pj.len();
+                let mut breakdown = [0.0f64; 3];
+                for (i, &e) in est.level_energy_pj.iter().enumerate() {
+                    let slot = if i == nl - 1 {
+                        2 // DRAM
+                    } else if i == 0 {
+                        0 // innermost spads/regs
+                    } else {
+                        1 // middle buffers
+                    };
+                    breakdown[slot] += e;
+                }
+                let cached = CachedEval {
+                    energy_pj: est.energy_pj,
+                    memory_energy_pj: est.memory_energy_pj(),
+                    cycles: est.cycles,
+                    edp: est.edp(),
+                    valid_mappings: r.valid,
+                    energy_breakdown_pj: breakdown,
+                    mac_energy_pj: est.mac_energy_pj,
+                };
+                (CacheEntry::Mapped(cached), Some(cached))
+            }
+            None => (
+                CacheEntry::Unmappable {
+                    max_draws: cfg.max_draws,
+                },
+                None,
+            ),
         };
-        self.map.write().unwrap().insert(key, cached);
-        Some(cached)
+        self.shard(key).write().unwrap().insert(key, entry);
+        out
     }
 
     pub fn hits(&self) -> u64 {
@@ -117,47 +174,69 @@ impl MapperCache {
         self.misses.load(Ordering::Relaxed)
     }
     pub fn len(&self) -> usize {
-        self.map.read().unwrap().len()
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Serialize to JSON (for cross-run persistence).
+    /// Serialize to JSON (for cross-run persistence). Unmappable
+    /// workloads persist as `{key, mappable: false, max_draws}` entries.
     pub fn to_json(&self) -> String {
-        let map = self.map.read().unwrap();
-        let mut entries = Vec::with_capacity(map.len());
-        for (k, v) in map.iter() {
-            entries.push(Json::obj(vec![
-                ("key", Json::Str(format!("{k:016x}"))),
-                ("energy_pj", Json::Num(v.energy_pj)),
-                ("memory_energy_pj", Json::Num(v.memory_energy_pj)),
-                ("cycles", Json::Num(v.cycles)),
-                ("edp", Json::Num(v.edp)),
-                ("valid_mappings", Json::Num(v.valid_mappings as f64)),
-                ("breakdown", Json::arr_f64(&v.energy_breakdown_pj)),
-                ("mac_energy_pj", Json::Num(v.mac_energy_pj)),
-            ]));
+        let mut entries = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let map = shard.read().unwrap();
+            for (k, v) in map.iter() {
+                match v {
+                    CacheEntry::Mapped(v) => entries.push(Json::obj(vec![
+                        ("key", Json::Str(format!("{k:016x}"))),
+                        ("mappable", Json::Bool(true)),
+                        ("energy_pj", Json::Num(v.energy_pj)),
+                        ("memory_energy_pj", Json::Num(v.memory_energy_pj)),
+                        ("cycles", Json::Num(v.cycles)),
+                        ("edp", Json::Num(v.edp)),
+                        ("valid_mappings", Json::Num(v.valid_mappings as f64)),
+                        ("breakdown", Json::arr_f64(&v.energy_breakdown_pj)),
+                        ("mac_energy_pj", Json::Num(v.mac_energy_pj)),
+                    ])),
+                    CacheEntry::Unmappable { max_draws } => entries.push(Json::obj(vec![
+                        ("key", Json::Str(format!("{k:016x}"))),
+                        ("mappable", Json::Bool(false)),
+                        ("max_draws", Json::Num(*max_draws as f64)),
+                    ])),
+                }
+            }
         }
         Json::obj(vec![("entries", Json::Arr(entries))]).to_string()
     }
 
-    /// Load entries from a JSON dump produced by `to_json`.
+    /// Load entries from a JSON dump produced by `to_json`. Dumps from
+    /// before negative caching (no `mappable` field) load as mappable;
+    /// negative entries without a `max_draws` field load with budget 0,
+    /// i.e. any future probe re-searches.
     pub fn load_json(&self, src: &str) -> Result<usize, String> {
         let v = parse(src)?;
         let entries = v.get("entries").as_arr().ok_or("missing entries")?;
-        let mut map = self.map.write().unwrap();
         let mut n = 0;
         for e in entries {
             let key = u64::from_str_radix(e.get("key").as_str().ok_or("key")?, 16)
                 .map_err(|_| "bad key")?;
+            if matches!(e.get("mappable"), Json::Bool(false)) {
+                let max_draws = e.get("max_draws").as_f64().unwrap_or(0.0) as u64;
+                self.shard(key)
+                    .write()
+                    .unwrap()
+                    .insert(key, CacheEntry::Unmappable { max_draws });
+                n += 1;
+                continue;
+            }
             let bd = e.get("breakdown").as_arr().ok_or("breakdown")?;
             if bd.len() != 3 {
                 return Err("breakdown len".into());
             }
-            map.insert(
+            self.shard(key).write().unwrap().insert(
                 key,
-                CachedEval {
+                CacheEntry::Mapped(CachedEval {
                     energy_pj: e.get("energy_pj").as_f64().ok_or("energy")?,
                     memory_energy_pj: e.get("memory_energy_pj").as_f64().ok_or("mem")?,
                     cycles: e.get("cycles").as_f64().ok_or("cycles")?,
@@ -169,7 +248,7 @@ impl MapperCache {
                         bd[2].as_f64().ok_or("bd2")?,
                     ],
                     mac_energy_pj: e.get("mac_energy_pj").as_f64().ok_or("mac")?,
-                },
+                }),
             );
             n += 1;
         }
@@ -200,6 +279,7 @@ mod tests {
             valid_target: 100,
             max_draws: 50_000,
             seed: 1,
+            shards: 1,
         }
     }
 
@@ -227,6 +307,73 @@ mod tests {
         assert_eq!(cache.len(), 2);
     }
 
+    /// A toy variant whose weight scratchpad holds zero words: every
+    /// mapping violates capacity, so no workload can ever map.
+    fn unmappable_arch() -> crate::arch::Arch {
+        let mut a = toy();
+        a.name = "toy-nospad".into();
+        a.levels[0].capacity = crate::arch::Capacity::PerTensor([0, 64, 64]);
+        a
+    }
+
+    #[test]
+    fn unmappable_workload_is_negative_cached() {
+        let cache = MapperCache::new();
+        let a = unmappable_arch();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let tiny = MapperConfig {
+            valid_target: u64::MAX,
+            max_draws: 500,
+            seed: 5,
+            shards: 1,
+        };
+        assert!(cache.evaluate(&a, &l, &LayerQuant::uniform(8), &tiny).is_none());
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+        // the second probe must NOT re-run the search
+        assert!(cache.evaluate(&a, &l, &LayerQuant::uniform(8), &tiny).is_none());
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn larger_budget_retries_a_negative_entry() {
+        // a failure recorded under a small draw budget must not poison
+        // later probes that are willing to search harder
+        let cache = MapperCache::new();
+        let a = toy();
+        // rare-but-possible validity: awkward primes on the toy arch
+        let l = ConvLayer::conv("t", 97, 89, 1, 13, 1);
+        let q = LayerQuant::uniform(8);
+        let starved = MapperConfig {
+            valid_target: 1,
+            max_draws: 1, // one draw: essentially guaranteed to fail
+            seed: 5,
+            shards: 1,
+        };
+        assert!(cache.evaluate(&a, &l, &q, &starved).is_none());
+        assert_eq!(cache.misses(), 1);
+        // same budget: served from the negative entry
+        assert!(cache.evaluate(&a, &l, &q, &starved).is_none());
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        // bigger budget: the cache re-searches instead of trusting the
+        // starved failure (and this workload is findable with draws)
+        let generous = MapperConfig {
+            valid_target: 1,
+            max_draws: 200_000,
+            seed: 5,
+            shards: 1,
+        };
+        let r = cache.evaluate(&a, &l, &q, &generous);
+        assert_eq!(cache.misses(), 2, "negative entry must not be trusted");
+        if let Some(e) = r {
+            // once found, the mapped entry replaces the negative one
+            assert!(e.edp > 0.0);
+            assert!(cache.evaluate(&a, &l, &q, &starved).is_some());
+        }
+    }
+
     #[test]
     fn json_roundtrip() {
         let cache = MapperCache::new();
@@ -242,6 +389,40 @@ mod tests {
         let r2 = cache2.evaluate(&a, &l, &q, &cfg()).unwrap();
         assert_eq!(cache2.hits(), 1);
         assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_negative_entries() {
+        let cache = MapperCache::new();
+        let a = unmappable_arch();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let tiny = MapperConfig {
+            valid_target: u64::MAX,
+            max_draws: 500,
+            seed: 5,
+            shards: 1,
+        };
+        assert!(cache.evaluate(&a, &l, &LayerQuant::uniform(8), &tiny).is_none());
+
+        let dump = cache.to_json();
+        assert!(dump.contains("\"mappable\":false"), "{dump}");
+        let cache2 = MapperCache::new();
+        assert_eq!(cache2.load_json(&dump).unwrap(), 1);
+        assert!(cache2.evaluate(&a, &l, &LayerQuant::uniform(8), &tiny).is_none());
+        assert_eq!(cache2.hits(), 1);
+        assert_eq!(cache2.misses(), 0);
+    }
+
+    #[test]
+    fn legacy_json_without_marker_loads() {
+        // dumps from before negative caching carry no `mappable` field
+        let legacy = "{\"entries\": [{\"key\": \"00000000000000aa\", \
+            \"energy_pj\": 1.5, \"memory_energy_pj\": 1.0, \"cycles\": 2.0, \
+            \"edp\": 3.0, \"valid_mappings\": 4, \"breakdown\": [0.5, 0.25, 0.25], \
+            \"mac_energy_pj\": 0.5}]}";
+        let cache = MapperCache::new();
+        assert_eq!(cache.load_json(legacy).unwrap(), 1);
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]
@@ -261,5 +442,20 @@ mod tests {
         let cache = MapperCache::new();
         assert!(cache.load_json("{\"entries\": [{\"key\": \"zz\"}]}").is_err());
         assert!(cache.load_json("not json").is_err());
+    }
+
+    #[test]
+    fn striping_spreads_entries_without_losing_any() {
+        let cache = MapperCache::new();
+        let a = toy();
+        // several distinct workloads land in (usually) several stripes
+        for k in [4u64, 8, 16, 32] {
+            for q in [2u8, 4, 8] {
+                let l = ConvLayer::conv("t", 4, k, 3, 8, 1);
+                cache.evaluate(&a, &l, &LayerQuant::uniform(q), &cfg());
+            }
+        }
+        assert_eq!(cache.len(), 12);
+        assert_eq!(cache.misses(), 12);
     }
 }

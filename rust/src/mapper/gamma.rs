@@ -13,12 +13,13 @@
 //! on the table by using Timeloop's random mapper (2000 valid mappings)
 //! instead of a guided search at the same evaluation budget.
 
-use super::MapperResult;
+use super::{EvalContext, MapperResult};
 use crate::arch::Arch;
-use crate::energy::{estimate, Estimate};
+use crate::energy::{estimate_into, Estimate};
+use crate::mapping::factorize::random_factorization_into;
 use crate::mapping::mapspace::MapSpace;
-use crate::mapping::{check, Mapping};
-use crate::nest::analyze;
+use crate::mapping::{LayerContext, Mapping};
+use crate::nest::analyze_into;
 use crate::quant::LayerQuant;
 use crate::util::rng::Rng;
 use crate::workload::{ConvLayer, DIMS};
@@ -78,38 +79,40 @@ fn copy_dim(dst: &mut Mapping, src: &Mapping, d: usize) {
     }
 }
 
-/// Re-randomize dim `d`'s placement using the mapspace sampler.
+/// Re-randomize dim `d`'s placement using the mapspace sampler
+/// (allocation-free: primes come from the layer context).
 fn randomize_dim(
     space: &MapSpace,
-    layer: &ConvLayer,
+    lctx: &LayerContext,
     m: &mut Mapping,
     d: usize,
+    fbuf: &mut [u64],
     rng: &mut Rng,
 ) {
-    use crate::mapping::factorize::random_ordered_factorization;
-    let fs = random_ordered_factorization(layer.dims[d], space.slots(), rng);
+    random_factorization_into(&lctx.dim_primes[d], rng, fbuf);
     for lv in 0..space.num_levels {
-        m.levels[lv].temporal[d] = fs[lv];
+        m.levels[lv].temporal[d] = fbuf[lv];
     }
     for (si, &lv) in space.spatial_levels.iter().enumerate() {
-        m.levels[lv].spatial[d] = fs[space.num_levels + si];
+        m.levels[lv].spatial[d] = fbuf[space.num_levels + si];
     }
 }
 
-fn score(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, m: &Mapping) -> Scored {
-    if check(arch, layer, q, m).is_err() {
+/// Check + price one candidate through the table-driven context path.
+fn score(lctx: &LayerContext, ectx: &mut EvalContext, m: &Mapping) -> Scored {
+    if lctx.check(m, &mut ectx.ext).is_err() {
         return Scored {
             mapping: m.clone(),
             est: None,
             edp: f64::INFINITY,
         };
     }
-    let nest = analyze(arch, layer, m);
-    let est = estimate(arch, layer, q, &nest);
+    analyze_into(lctx, m, &mut ectx.ext, &mut ectx.nest);
+    estimate_into(lctx, &ectx.nest, &mut ectx.est);
     Scored {
         mapping: m.clone(),
-        edp: est.edp(),
-        est: Some(est),
+        edp: ectx.est.edp(),
+        est: Some(ectx.est.clone()),
     }
 }
 
@@ -118,6 +121,8 @@ fn score(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, m: &Mapping) -> Scored 
 pub fn search(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, cfg: &GammaConfig) -> MapperResult {
     let q = &q.canonical(arch.word_bits, arch.bit_packing);
     let space = MapSpace::of(arch);
+    let lctx = LayerContext::new(arch, layer, q);
+    let mut ectx = EvalContext::for_arch(arch);
     let mut rng = Rng::new(cfg.seed ^ super::workload_hash(layer, q));
 
     // ---- seed: random valid mappings (fall back to invalid-tolerant
@@ -126,15 +131,17 @@ pub fn search(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, cfg: &GammaConfig)
     let mut draws = 0u64;
     while pop.len() < cfg.population && draws < cfg.init_draws {
         draws += 1;
-        let m = space.random_mapping(layer, &mut rng);
-        if check(arch, layer, q, &m).is_ok() {
-            pop.push(score(arch, layer, q, &m));
+        space.random_mapping_into(&lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
+        if lctx.check(&ectx.mapping, &mut ectx.ext).is_ok() {
+            let m = ectx.mapping.clone();
+            pop.push(score(&lctx, &mut ectx, &m));
         }
     }
     while pop.len() < cfg.population {
         // mapspace too hostile for random validity: admit invalid seeds
-        let m = space.random_mapping(layer, &mut rng);
-        pop.push(score(arch, layer, q, &m));
+        space.random_mapping_into(&lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
+        let m = ectx.mapping.clone();
+        pop.push(score(&lctx, &mut ectx, &m));
     }
     let mut evals = pop.len() as u64;
     let mut valid = pop.iter().filter(|s| s.est.is_some()).count() as u64;
@@ -173,7 +180,7 @@ pub fn search(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, cfg: &GammaConfig)
             }
             if rng.chance(cfg.p_mut_dim) {
                 let d = rng.range(0, DIMS.len() - 1);
-                randomize_dim(&space, layer, &mut child, d, &mut rng);
+                randomize_dim(&space, &lctx, &mut child, d, &mut ectx.fbuf, &mut rng);
             }
             if rng.chance(cfg.p_mut_perm) {
                 let lv = rng.range(0, child.levels.len() - 1);
@@ -181,7 +188,7 @@ pub fn search(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, cfg: &GammaConfig)
                 rng.shuffle(&mut perm);
                 child.levels[lv].perm = perm;
             }
-            let s = score(arch, layer, q, &child);
+            let s = score(&lctx, &mut ectx, &child);
             evals += 1;
             if s.est.is_some() {
                 valid += 1;
@@ -214,6 +221,7 @@ mod tests {
     use super::*;
     use crate::arch::presets::{eyeriss, toy};
     use crate::mapper::MapperConfig;
+    use crate::mapping::check;
 
     fn small_cfg() -> GammaConfig {
         GammaConfig {
@@ -269,6 +277,7 @@ mod tests {
                 valid_target: budget,
                 max_draws: budget * 50,
                 seed: 9,
+                shards: 1,
             },
         );
         let gam = search(&a, &l, &q, &g);

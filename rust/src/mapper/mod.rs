@@ -11,10 +11,10 @@ pub mod cache;
 pub mod gamma;
 
 use crate::arch::Arch;
-use crate::energy::{estimate, Estimate};
+use crate::energy::{estimate_into, Estimate};
 use crate::mapping::mapspace::MapSpace;
-use crate::mapping::{check, Mapping};
-use crate::nest::analyze;
+use crate::mapping::{LayerContext, Mapping};
+use crate::nest::{analyze_into, NestAnalysis};
 use crate::quant::LayerQuant;
 use crate::util::rng::Rng;
 use crate::workload::ConvLayer;
@@ -30,6 +30,11 @@ pub struct MapperConfig {
     pub max_draws: u64,
     /// RNG seed (combined with a workload hash for determinism).
     pub seed: u64,
+    /// Parallel search shards for one workload (0 = one per available
+    /// core). Targets and draw budgets split across shards; each shard
+    /// derives its own seed from (seed, workload hash, shard index), so
+    /// results are deterministic for a fixed (seed, shards) pair.
+    pub shards: usize,
 }
 
 impl Default for MapperConfig {
@@ -38,6 +43,37 @@ impl Default for MapperConfig {
             valid_target: 2000,
             max_draws: 400_000,
             seed: 0x51AB5EED,
+            shards: 1,
+        }
+    }
+}
+
+/// Reusable per-thread scratch for the allocation-free hot path: one
+/// candidate `Mapping`, the factorization slot buffer, the cumulative
+/// tile-extent buffer, and the nest/estimate output slots. Build once
+/// per (thread, workload) and reuse across candidate draws — the
+/// steady-state loop performs zero heap allocations per draw.
+pub struct EvalContext {
+    pub mapping: Mapping,
+    pub fbuf: Vec<u64>,
+    pub ext: Vec<[u64; 7]>,
+    pub nest: NestAnalysis,
+    pub est: Estimate,
+}
+
+impl EvalContext {
+    pub fn for_arch(arch: &Arch) -> Self {
+        let space = MapSpace::of(arch);
+        Self::with_dims(arch.levels.len(), space.slots())
+    }
+
+    pub fn with_dims(num_levels: usize, slots: usize) -> Self {
+        EvalContext {
+            mapping: Mapping::unit(num_levels),
+            fbuf: vec![1; slots],
+            ext: Vec::with_capacity(num_levels),
+            nest: NestAnalysis::empty(),
+            est: Estimate::empty(),
         }
     }
 }
@@ -55,32 +91,121 @@ pub struct MapperResult {
     pub draws: u64,
 }
 
+/// Per-shard search outcome (internal).
+struct ShardResult {
+    /// (EDP, estimate, mapping) of the shard's winner.
+    best: Option<(f64, Estimate, Mapping)>,
+    valid: u64,
+    draws: u64,
+}
+
+/// One shard of the random search: draws candidates through the
+/// allocation-free context path until its share of the valid-mapping
+/// target (or draw budget) is exhausted. Within a shard the first
+/// strictly-lower EDP wins, so the result is deterministic in the seed.
+fn search_shard(
+    space: &MapSpace,
+    lctx: &LayerContext,
+    seed: u64,
+    valid_target: u64,
+    max_draws: u64,
+) -> ShardResult {
+    let mut ctx = EvalContext::with_dims(lctx.num_levels, space.slots());
+    let mut rng = Rng::new(seed);
+    let mut best: Option<(f64, Estimate, Mapping)> = None;
+    let mut valid = 0u64;
+    let mut draws = 0u64;
+
+    while valid < valid_target && draws < max_draws {
+        draws += 1;
+        space.random_mapping_into(lctx, &mut rng, &mut ctx.fbuf, &mut ctx.mapping);
+        if lctx.check(&ctx.mapping, &mut ctx.ext).is_err() {
+            continue;
+        }
+        valid += 1;
+        analyze_into(lctx, &ctx.mapping, &mut ctx.ext, &mut ctx.nest);
+        estimate_into(lctx, &ctx.nest, &mut ctx.est);
+        let edp = ctx.est.edp();
+        match &mut best {
+            Some((b, be, bm)) => {
+                if edp < *b {
+                    *b = edp;
+                    be.copy_from(&ctx.est);
+                    bm.copy_from(&ctx.mapping);
+                }
+            }
+            None => best = Some((edp, ctx.est.clone(), ctx.mapping.clone())),
+        }
+    }
+
+    ShardResult { best, valid, draws }
+}
+
+/// Resolve the configured shard count (0 = auto) and cap it so no shard
+/// is left without a share of the valid-mapping target.
+fn effective_shards(cfg: &MapperConfig) -> usize {
+    let s = if cfg.shards == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.shards
+    };
+    s.max(1).min(cfg.valid_target.clamp(1, 1024) as usize)
+}
+
 /// Random-search the mapspace of `(layer, q)` on `arch`.
 ///
 /// Bit-widths are canonicalized to their packing-equivalence class first
 /// (see [`LayerQuant::canonical`]): the engine's capacity and energy
 /// models depend on `q` only through the pack factor, so equivalent
 /// settings must explore identical mapspaces (and share cache entries).
+///
+/// With `cfg.shards > 1` the valid-mapping target and draw budget split
+/// across that many threads, each with a seed derived from
+/// `(cfg.seed, workload, shard index)`, and the shard minima merge by
+/// minimum EDP with ties resolved to the lowest shard index (within a
+/// shard the strict `<` keeps the earliest winner) — deterministic for
+/// a fixed (seed, shards) pair. `shards == 1` reproduces the
+/// single-threaded candidate stream exactly.
 pub fn search(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, cfg: &MapperConfig) -> MapperResult {
     let q = &q.canonical(arch.word_bits, arch.bit_packing);
     let space = MapSpace::of(arch);
-    let mut rng = Rng::new(cfg.seed ^ workload_hash(layer, q));
-    let mut best: Option<(f64, Estimate, Mapping)> = None;
+    let lctx = LayerContext::new(arch, layer, q);
+    let base_seed = cfg.seed ^ workload_hash(layer, q);
+    let shards = effective_shards(cfg);
+
+    let results: Vec<ShardResult> = if shards <= 1 {
+        vec![search_shard(&space, &lctx, base_seed, cfg.valid_target, cfg.max_draws)]
+    } else {
+        let n = shards as u64;
+        let mut slots: Vec<Option<ShardResult>> = (0..shards).map(|_| None).collect();
+        std::thread::scope(|s| {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                let space = &space;
+                let lctx = &lctx;
+                let iu = i as u64;
+                let target = cfg.valid_target / n + u64::from(iu < cfg.valid_target % n);
+                let draws = cfg.max_draws / n + u64::from(iu < cfg.max_draws % n);
+                let seed = base_seed ^ iu.wrapping_mul(0x9E3779B97F4A7C15);
+                s.spawn(move || {
+                    *slot = Some(search_shard(space, lctx, seed, target, draws));
+                });
+            }
+        });
+        slots.into_iter().map(|r| r.expect("shard completed")).collect()
+    };
+
+    // deterministic merge: iterate shards in index order and keep the
+    // first strictly-minimum EDP (ties go to the lowest shard index).
     let mut valid = 0u64;
     let mut draws = 0u64;
-
-    while valid < cfg.valid_target && draws < cfg.max_draws {
-        draws += 1;
-        let m = space.random_mapping(layer, &mut rng);
-        if check(arch, layer, q, &m).is_err() {
-            continue;
-        }
-        valid += 1;
-        let nest = analyze(arch, layer, &m);
-        let est = estimate(arch, layer, q, &nest);
-        let edp = est.edp();
-        if best.as_ref().map_or(true, |(b, _, _)| edp < *b) {
-            best = Some((edp, est, m));
+    let mut best: Option<(f64, Estimate, Mapping)> = None;
+    for r in results {
+        valid += r.valid;
+        draws += r.draws;
+        if let Some((edp, est, m)) = r.best {
+            if best.as_ref().map_or(true, |(b, _, _)| edp < *b) {
+                best = Some((edp, est, m));
+            }
         }
     }
 
@@ -136,6 +261,7 @@ mod tests {
             valid_target: 200,
             max_draws: 100_000,
             seed: 1,
+            shards: 1,
         };
         let r = search(&a, &l, &LayerQuant::uniform(8), &cfg);
         assert!(r.valid >= 200);
@@ -151,12 +277,55 @@ mod tests {
             valid_target: 100,
             max_draws: 50_000,
             seed: 7,
+            shards: 1,
         };
         let q = LayerQuant::uniform(4);
         let r1 = search(&a, &l, &q, &cfg);
         let r2 = search(&a, &l, &q, &cfg);
         assert_eq!(r1.best.map(|e| e.edp()), r2.best.map(|e| e.edp()));
         assert_eq!(r1.valid, r2.valid);
+    }
+
+    #[test]
+    fn sharded_search_is_deterministic() {
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(4);
+        for shards in [2usize, 4] {
+            let cfg = MapperConfig {
+                valid_target: 120,
+                max_draws: 60_000,
+                seed: 7,
+                shards,
+            };
+            let r1 = search(&a, &l, &q, &cfg);
+            let r2 = search(&a, &l, &q, &cfg);
+            assert_eq!(
+                r1.best.as_ref().map(|e| e.edp().to_bits()),
+                r2.best.as_ref().map(|e| e.edp().to_bits()),
+                "shards={shards}"
+            );
+            assert_eq!(r1.valid, r2.valid);
+            assert_eq!(r1.draws, r2.draws);
+            assert!(r1.valid >= 120, "shards={shards} valid={}", r1.valid);
+            assert_eq!(r1.best_mapping, r2.best_mapping);
+        }
+    }
+
+    #[test]
+    fn sharded_targets_sum_to_config() {
+        // draws split exactly: on a never-valid workload every shard
+        // exhausts its share and the totals reassemble the budget
+        let a = toy();
+        let l = ConvLayer::conv("t", 97, 89, 1, 13, 1); // awkward primes
+        let cfg = MapperConfig {
+            valid_target: u64::MAX,
+            max_draws: 2_001, // deliberately not divisible by shards
+            seed: 5,
+            shards: 4,
+        };
+        let r = search(&a, &l, &LayerQuant::uniform(8), &cfg);
+        assert_eq!(r.draws, 2_001);
     }
 
     #[test]
@@ -168,6 +337,7 @@ mod tests {
             valid_target: 300,
             max_draws: 300_000,
             seed: 3,
+            shards: 1,
         };
         let e16 = search(&a, &l, &LayerQuant::uniform(16), &cfg);
         let e4 = search(&a, &l, &LayerQuant::uniform(4), &cfg);
@@ -203,6 +373,7 @@ mod tests {
             valid_target: u64::MAX,
             max_draws: 2_000,
             seed: 5,
+            shards: 1,
         };
         let r = search(&a, &l, &LayerQuant::uniform(8), &cfg);
         assert_eq!(r.draws, 2_000);

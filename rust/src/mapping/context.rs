@@ -1,0 +1,431 @@
+//! Precomputed per-workload evaluation context — the hot-path engine's
+//! lookup tables.
+//!
+//! The mapper prices hundreds of thousands of candidate mappings per
+//! `(arch, layer, quant)` workload, but everything the checker and the
+//! nest analysis derive from the workload itself is invariant across
+//! candidates: tensor-relevance of each problem dim, keeper chains,
+//! per-level capacities in packed words, prime factorizations of the dim
+//! sizes, per-level energy/bandwidth constants. [`LayerContext`]
+//! precomputes all of it once so the per-candidate path
+//! (`random_mapping_into` → [`LayerContext::check`] →
+//! [`crate::nest::analyze_into`] → [`crate::energy::estimate_into`])
+//! performs only table lookups and arithmetic — no heap allocation, no
+//! re-derivation.
+//!
+//! The context path is bit-identical to the naive path
+//! ([`crate::mapping::check`] / [`crate::nest::analyze`] /
+//! [`crate::energy::estimate`]); `tests/hotpath_equivalence.rs` asserts
+//! this property on random mappings.
+
+use super::factorize::prime_factors;
+use super::{Mapping, Violation};
+use crate::arch::{Arch, Capacity};
+use crate::quant::{pack_factor, LayerQuant};
+use crate::util::ceil_div;
+use crate::workload::{ConvLayer, Dim, Tensor, DIMS, TENSORS};
+
+/// Immutable per-`(arch, layer, quant)` lookup tables for the mapper hot
+/// path. Build once per workload with [`LayerContext::new`]; share
+/// freely across search shards (`&LayerContext` is `Sync`).
+#[derive(Debug, Clone)]
+pub struct LayerContext {
+    /// The workload (owned copy; `tile_elements` etc. run against it).
+    pub layer: ConvLayer,
+    /// Canonicalized quantization (packing-equivalence representative).
+    pub q: LayerQuant,
+    pub num_levels: usize,
+    /// Prime factorization of each dim size, indexed by `Dim::index()`.
+    pub dim_primes: Vec<Vec<(u64, u32)>>,
+    /// Relevance bitmask per tensor: bit `d` set iff dim `d` is relevant
+    /// to the tensor (replaces `ConvLayer::is_relevant` calls).
+    pub relevant: [u8; 3],
+    /// Keeper chain per tensor: levels storing the tensor, innermost
+    /// first (DRAM always last).
+    pub keepers: [Vec<usize>; 3],
+    /// `keeps` flags per level (copy of `Level::keeps`).
+    pub keeps: Vec<[bool; 3]>,
+    /// Capacity model per level (DRAM entry is `Unbounded`).
+    pub caps: Vec<Capacity>,
+    /// Spatial fanout per level.
+    pub fanout: Vec<u64>,
+    /// Allowed-spatial-dim bitmask per level.
+    pub spatial_allowed: Vec<u8>,
+    /// Multicast capability per level.
+    pub multicast: Vec<bool>,
+    /// Per-access energies per level `[W, I, O]`, pJ.
+    pub access_energy: Vec<[f64; 3]>,
+    /// Bandwidth in words/cycle per level instance.
+    pub bandwidth: Vec<f64>,
+    /// Max parallel instances of each level (product of fanouts strictly
+    /// above it, saturating).
+    pub inst_cap: Vec<u64>,
+    pub mac_energy_pj: f64,
+    pub word_bits: u32,
+    pub packing: bool,
+    /// Elements per memory word per tensor (packing mode).
+    pub pack_div: [u64; 3],
+    /// Words per element per tensor (no-packing mode).
+    pub unpack_mul: [u64; 3],
+    /// The same two tables as `f64`, for the energy model.
+    pub pack_div_f: [f64; 3],
+    pub unpack_mul_f: [f64; 3],
+    /// Full tensor footprints in elements.
+    pub tensor_elems: [u64; 3],
+    pub macs: u64,
+}
+
+impl LayerContext {
+    /// Precompute the tables for one workload. `q` is canonicalized
+    /// internally (see [`LayerQuant::canonical`]).
+    pub fn new(arch: &Arch, layer: &ConvLayer, q: &LayerQuant) -> Self {
+        let q = q.canonical(arch.word_bits, arch.bit_packing);
+        let nl = arch.levels.len();
+
+        let dim_primes: Vec<Vec<(u64, u32)>> =
+            DIMS.iter().map(|&d| prime_factors(layer.size(d))).collect();
+
+        let mut relevant = [0u8; 3];
+        let mut keepers: [Vec<usize>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let mut tensor_elems = [0u64; 3];
+        let mut pack_div = [1u64; 3];
+        let mut unpack_mul = [1u64; 3];
+        for t in TENSORS {
+            let ti = t.index();
+            for d in DIMS {
+                if layer.is_relevant(t, d) {
+                    relevant[ti] |= 1 << d.index();
+                }
+            }
+            keepers[ti] = (0..nl).filter(|&i| arch.levels[i].keeps_tensor(t)).collect();
+            debug_assert!(!keepers[ti].is_empty());
+            tensor_elems[ti] = layer.tensor_elements(t);
+            pack_div[ti] = pack_factor(arch.word_bits, q.of(t));
+            unpack_mul[ti] = ceil_div(q.of(t) as u64, arch.word_bits as u64);
+        }
+
+        let mut spatial_allowed = Vec::with_capacity(nl);
+        let mut inst_cap = Vec::with_capacity(nl);
+        for lv in 0..nl {
+            let mut mask = 0u8;
+            for d in &arch.levels[lv].spatial_dims {
+                mask |= 1 << d.index();
+            }
+            spatial_allowed.push(mask);
+            let mut max_inst = 1u64;
+            for l in arch.levels.iter().skip(lv + 1) {
+                max_inst = max_inst.saturating_mul(l.fanout);
+            }
+            inst_cap.push(max_inst);
+        }
+
+        LayerContext {
+            layer: layer.clone(),
+            q,
+            num_levels: nl,
+            dim_primes,
+            relevant,
+            keepers,
+            keeps: arch.levels.iter().map(|l| l.keeps).collect(),
+            caps: arch.levels.iter().map(|l| l.capacity.clone()).collect(),
+            fanout: arch.levels.iter().map(|l| l.fanout).collect(),
+            spatial_allowed,
+            multicast: arch.levels.iter().map(|l| l.multicast).collect(),
+            access_energy: arch.levels.iter().map(|l| l.access_energy_pj).collect(),
+            bandwidth: arch.levels.iter().map(|l| l.bandwidth_words).collect(),
+            inst_cap,
+            mac_energy_pj: arch.mac_energy_pj,
+            word_bits: arch.word_bits,
+            packing: arch.bit_packing,
+            pack_div_f: [pack_div[0] as f64, pack_div[1] as f64, pack_div[2] as f64],
+            unpack_mul_f: [
+                unpack_mul[0] as f64,
+                unpack_mul[1] as f64,
+                unpack_mul[2] as f64,
+            ],
+            pack_div,
+            unpack_mul,
+            tensor_elems,
+            macs: layer.macs(),
+        }
+    }
+
+    /// Table lookup replacing `ConvLayer::is_relevant`.
+    #[inline]
+    pub fn is_relevant(&self, t: Tensor, d: Dim) -> bool {
+        self.relevant[t.index()] & (1 << d.index()) != 0
+    }
+
+    /// Words occupied by `elems` elements of tensor `t` (same result as
+    /// `quant::packed_words` / `quant::unpacked_words`).
+    #[inline]
+    pub fn tile_words_from_elems(&self, t: Tensor, elems: u64) -> u64 {
+        if self.packing {
+            ceil_div(elems, self.pack_div[t.index()])
+        } else {
+            elems * self.unpack_mul[t.index()]
+        }
+    }
+
+    /// Float word conversion used by the energy model (same result as
+    /// `energy`'s internal `words`).
+    #[inline]
+    pub fn words_f(&self, t: Tensor, elems: f64) -> f64 {
+        if self.packing {
+            (elems / self.pack_div_f[t.index()]).ceil()
+        } else {
+            elems * self.unpack_mul_f[t.index()]
+        }
+    }
+
+    /// Fill `ext` with the cumulative per-level tile extents of `m`
+    /// (`ext[lv][d]` = product of temporal x spatial factors at levels
+    /// `<= lv`). One O(levels x dims) pass replacing the naive path's
+    /// per-(level, tensor) `Mapping::tile_extents` recomputation.
+    pub fn fill_extents(&self, m: &Mapping, ext: &mut Vec<[u64; 7]>) {
+        ext.clear();
+        let mut cur = [1u64; 7];
+        for lm in &m.levels {
+            for d in 0..7 {
+                cur[d] *= lm.temporal[d] * lm.spatial[d];
+            }
+            ext.push(cur);
+        }
+    }
+
+    /// Tile footprint in elements of tensor `t` given cumulative extents
+    /// at one level (clamped to the workload dims, as the naive path
+    /// does during partial construction).
+    #[inline]
+    pub fn tile_elems_at(&self, t: Tensor, ext_lv: &[u64; 7]) -> u64 {
+        let mut tile = *ext_lv;
+        for d in 0..7 {
+            tile[d] = tile[d].min(self.layer.dims[d]);
+        }
+        self.layer.tile_elements(t, &tile)
+    }
+
+    /// Table-driven validity check; same result (including the first
+    /// violation reported) as [`crate::mapping::check`]. `ext` is a
+    /// caller-provided scratch buffer (no allocation in steady state).
+    pub fn check(&self, m: &Mapping, ext: &mut Vec<[u64; 7]>) -> Result<(), Violation> {
+        assert_eq!(m.levels.len(), self.num_levels);
+        self.fill_extents(m, ext);
+
+        // (1) factor products
+        let totals = &ext[self.num_levels - 1];
+        for d in DIMS {
+            if totals[d.index()] != self.layer.size(d) {
+                return Err(Violation::FactorProduct(d));
+            }
+        }
+
+        // (2) spatial constraints
+        for (lv, lm) in m.levels.iter().enumerate() {
+            let sp = lm.spatial_product();
+            if self.fanout[lv] == 1 {
+                if sp != 1 {
+                    return Err(Violation::SpatialAtLeafLevel { level: lv });
+                }
+                continue;
+            }
+            if sp > self.fanout[lv] {
+                return Err(Violation::FanoutExceeded { level: lv });
+            }
+            for d in DIMS {
+                if lm.spatial[d.index()] > 1 && self.spatial_allowed[lv] & (1 << d.index()) == 0 {
+                    return Err(Violation::SpatialDimNotAllowed { level: lv, dim: d });
+                }
+            }
+        }
+
+        // (3) capacity with bit-packing; DRAM (last level) is unbounded
+        for lv in 0..self.num_levels - 1 {
+            let mut shared_needed = 0u64;
+            for t in TENSORS {
+                if !self.keeps[lv][t.index()] {
+                    continue;
+                }
+                let words = self.tile_words_from_elems(t, self.tile_elems_at(t, &ext[lv]));
+                match &self.caps[lv] {
+                    Capacity::Unbounded => {}
+                    Capacity::Shared(_) => shared_needed += words,
+                    Capacity::PerTensor(ws) => {
+                        let avail = ws[t.index()];
+                        if words > avail {
+                            return Err(Violation::CapacityExceeded {
+                                level: lv,
+                                tensor: t,
+                                needed_words: words,
+                                available_words: avail,
+                            });
+                        }
+                    }
+                }
+            }
+            if let Capacity::Shared(avail) = self.caps[lv] {
+                if shared_needed > avail {
+                    return Err(Violation::CapacityExceeded {
+                        level: lv,
+                        tensor: Tensor::Inputs, // aggregate (shared pool)
+                        needed_words: shared_needed,
+                        available_words: avail,
+                    });
+                }
+            }
+        }
+
+        Ok(())
+    }
+
+    /// Monotone partial capacity check for enumeration pruning (ctx
+    /// variant of the mapspace's pruner): with unplaced dims at extent 1,
+    /// current footprints lower-bound the final ones.
+    pub fn partial_capacity_ok(&self, m: &Mapping, ext: &mut Vec<[u64; 7]>) -> bool {
+        self.fill_extents(m, ext);
+        for lv in 0..self.num_levels - 1 {
+            let mut shared = 0u64;
+            for t in TENSORS {
+                if !self.keeps[lv][t.index()] {
+                    continue;
+                }
+                let words = self.tile_words_from_elems(t, self.tile_elems_at(t, &ext[lv]));
+                match &self.caps[lv] {
+                    Capacity::Unbounded => {}
+                    Capacity::Shared(_) => shared += words,
+                    Capacity::PerTensor(ws) => {
+                        if words > ws[t.index()] {
+                            return false;
+                        }
+                    }
+                }
+            }
+            if let Capacity::Shared(avail) = self.caps[lv] {
+                if shared > avail {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{eyeriss, simba, toy};
+    use crate::mapping::mapspace::MapSpace;
+    use crate::mapping::{check, Mapping};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn relevance_mask_matches_layer() {
+        for layer in [
+            ConvLayer::conv("c", 16, 32, 3, 8, 1),
+            ConvLayer::dw("d", 32, 3, 112, 1),
+        ] {
+            let ctx = LayerContext::new(&toy(), &layer, &LayerQuant::uniform(8));
+            for t in TENSORS {
+                for d in DIMS {
+                    assert_eq!(ctx.is_relevant(t, d), layer.is_relevant(t, d), "{t:?} {d:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keeper_chains_match_arch() {
+        for arch in [toy(), eyeriss(), simba()] {
+            let l = ConvLayer::conv("c", 4, 8, 3, 8, 1);
+            let ctx = LayerContext::new(&arch, &l, &LayerQuant::uniform(8));
+            for t in TENSORS {
+                let expect: Vec<usize> = (0..arch.levels.len())
+                    .filter(|&i| arch.levels[i].keeps_tensor(t))
+                    .collect();
+                assert_eq!(ctx.keepers[t.index()], expect, "{} {t:?}", arch.name);
+            }
+        }
+    }
+
+    #[test]
+    fn ctx_check_agrees_with_naive_check() {
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut ext = Vec::new();
+        for arch in [toy(), eyeriss(), simba()] {
+            let space = MapSpace::of(&arch);
+            for layer in [
+                ConvLayer::conv("c", 4, 8, 3, 8, 1),
+                ConvLayer::dw("d", 16, 3, 14, 1),
+                ConvLayer::pw("p", 8, 16, 14),
+            ] {
+                for bits in [2u8, 4, 8, 16] {
+                    let q = LayerQuant::uniform(bits).canonical(arch.word_bits, arch.bit_packing);
+                    let ctx = LayerContext::new(&arch, &layer, &q);
+                    for _ in 0..100 {
+                        let m = space.random_mapping(&layer, &mut rng);
+                        assert_eq!(
+                            check(&arch, &layer, &q, &m),
+                            ctx.check(&m, &mut ext),
+                            "{} {} {}b",
+                            arch.name,
+                            layer.name,
+                            bits
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extents_match_mapping_tile_extents() {
+        let a = toy();
+        let l = ConvLayer::conv("c", 4, 8, 3, 8, 1);
+        let ctx = LayerContext::new(&a, &l, &LayerQuant::uniform(8));
+        let space = MapSpace::of(&a);
+        let mut rng = Rng::new(7);
+        let mut ext = Vec::new();
+        for _ in 0..50 {
+            let m = space.random_mapping(&l, &mut rng);
+            ctx.fill_extents(&m, &mut ext);
+            for lv in 0..a.levels.len() {
+                assert_eq!(ext[lv], m.tile_extents(lv));
+            }
+        }
+    }
+
+    #[test]
+    fn words_tables_match_quant_helpers() {
+        use crate::quant::{packed_words, unpacked_words};
+        let mut a = toy();
+        for packing in [true, false] {
+            a.bit_packing = packing;
+            let l = ConvLayer::conv("c", 4, 8, 3, 8, 1);
+            for bits in [2u8, 3, 5, 8, 16] {
+                let q = LayerQuant::uniform(bits).canonical(a.word_bits, a.bit_packing);
+                let ctx = LayerContext::new(&a, &l, &q);
+                for t in TENSORS {
+                    for elems in [0u64, 1, 7, 36, 1000] {
+                        let expect = if packing {
+                            packed_words(elems, a.word_bits, q.of(t))
+                        } else {
+                            unpacked_words(elems, a.word_bits, q.of(t))
+                        };
+                        assert_eq!(ctx.tile_words_from_elems(t, elems), expect);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partial_capacity_agrees_on_unit_prefix() {
+        // a unit mapping trivially fits everywhere
+        let a = eyeriss();
+        let l = ConvLayer::dw("d", 32, 3, 112, 1);
+        let ctx = LayerContext::new(&a, &l, &LayerQuant::uniform(8));
+        let m = Mapping::unit(a.levels.len());
+        let mut ext = Vec::new();
+        assert!(ctx.partial_capacity_ok(&m, &mut ext));
+    }
+}

@@ -97,26 +97,35 @@ pub fn random_ordered_factorization(
     if slots == 0 {
         return out;
     }
-    for (p, e) in prime_factors(n) {
-        // distribute e identical prime factors into `slots` distinguishable
-        // bins uniformly over compositions (stars and bars sampling)
-        let mut remaining = e;
-        let mut bins = vec![0u32; slots];
-        // uniform composition: draw positions of bars among stars+bars
-        // simpler: repeated uniform assignment is NOT uniform over
-        // compositions, but over *assignments*; Timeloop's random mapper
-        // does per-factor uniform assignment too, which is what we mirror.
+    random_factorization_into(&prime_factors(n), rng, &mut out);
+    out
+}
+
+/// Allocation-free sampling core: distribute the given prime
+/// factorization across `out.len()` slots, writing the factors in place.
+/// Per prime factor instance, one uniform slot draw — NOT uniform over
+/// compositions, but over *assignments*; Timeloop's random mapper does
+/// per-factor uniform assignment too, which is what we mirror. The RNG
+/// stream consumed is identical to [`random_ordered_factorization`]'s
+/// (primes in ascending order, `e` draws per prime), so the in-place and
+/// allocating paths sample bit-identical factorizations.
+#[inline]
+pub fn random_factorization_into(
+    primes: &[(u64, u32)],
+    rng: &mut crate::util::rng::Rng,
+    out: &mut [u64],
+) {
+    debug_assert!(!out.is_empty());
+    for x in out.iter_mut() {
+        *x = 1;
+    }
+    let slots = out.len() as u64;
+    for &(p, e) in primes {
         for _ in 0..e {
-            let b = rng.below(slots as u64) as usize;
-            bins[b] += 1;
-            remaining -= 1;
-        }
-        debug_assert_eq!(remaining, 0);
-        for (i, &b) in bins.iter().enumerate() {
-            out[i] *= p.pow(b);
+            let b = rng.below(slots) as usize;
+            out[b] *= p;
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -175,6 +184,24 @@ mod tests {
                     let fs = random_ordered_factorization(n, slots, &mut r);
                     assert_eq!(fs.len(), slots.max(1));
                     assert_eq!(fs.iter().product::<u64>(), n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_variant() {
+        // same seed -> identical RNG consumption -> identical samples
+        for n in [112u64, 36, 97, 1, 720] {
+            for slots in 1..=4usize {
+                let primes = prime_factors(n);
+                let mut r1 = Rng::new(99);
+                let mut r2 = Rng::new(99);
+                let mut buf = vec![0u64; slots];
+                for _ in 0..20 {
+                    let a = random_ordered_factorization(n, slots, &mut r1);
+                    random_factorization_into(&primes, &mut r2, &mut buf);
+                    assert_eq!(a, buf, "n={n} slots={slots}");
                 }
             }
         }

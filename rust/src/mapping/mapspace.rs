@@ -14,10 +14,12 @@
 //! permutations.
 
 use super::constraints::MapConstraints;
+use super::context::LayerContext;
 use super::factorize::{
-    count_ordered_factorizations, for_each_ordered_factorization, random_ordered_factorization,
+    count_ordered_factorizations, for_each_ordered_factorization, random_factorization_into,
+    random_ordered_factorization,
 };
-use super::{check, Mapping};
+use super::Mapping;
 use crate::arch::Arch;
 use crate::quant::LayerQuant;
 use crate::util::rng::Rng;
@@ -80,6 +82,37 @@ impl MapSpace {
         m
     }
 
+    /// Allocation-free [`MapSpace::random_mapping`]: draw into a caller
+    /// scratch `Mapping`, using the dim prime factorizations precomputed
+    /// in `lctx` and a `slots()`-long factor buffer `fbuf`. Consumes the
+    /// RNG stream identically to `random_mapping`, so for a fixed seed
+    /// both paths sample the same candidates.
+    pub fn random_mapping_into(
+        &self,
+        lctx: &LayerContext,
+        rng: &mut Rng,
+        fbuf: &mut [u64],
+        m: &mut Mapping,
+    ) {
+        debug_assert_eq!(m.levels.len(), self.num_levels);
+        debug_assert_eq!(fbuf.len(), self.slots());
+        m.reset_unit();
+        for d in DIMS {
+            random_factorization_into(&lctx.dim_primes[d.index()], rng, fbuf);
+            for lv in 0..self.num_levels {
+                m.levels[lv].temporal[d.index()] = fbuf[lv];
+            }
+            for (si, &lv) in self.spatial_levels.iter().enumerate() {
+                m.levels[lv].spatial[d.index()] = fbuf[self.num_levels + si];
+            }
+        }
+        for lv in 0..self.num_levels {
+            let mut perm = DIMS;
+            rng.shuffle(&mut perm);
+            m.levels[lv].perm = perm;
+        }
+    }
+
     /// Count (and optionally visit) every valid mapping in the reduced
     /// exhaustive space: all factorizations x spatial splits, canonical
     /// permutations. Intended for single layers (Table I); the visitor
@@ -102,6 +135,9 @@ impl MapSpace {
     }
 
     /// [`MapSpace::enumerate_valid`] with an explicit constraint set.
+    ///
+    /// Internally builds a [`LayerContext`] so the per-candidate checks
+    /// run on the precomputed table path (no per-candidate allocation).
     pub fn enumerate_valid_with(
         &self,
         arch: &Arch,
@@ -136,26 +172,27 @@ impl MapSpace {
             factorizations.push(fs);
         }
 
+        let lctx = LayerContext::new(arch, layer, q);
         let mut stats = EnumStats::default();
         let mut m = Mapping::unit(self.num_levels);
+        let mut ext: Vec<[u64; 7]> = Vec::with_capacity(self.num_levels);
         // canonical permutation per level: the arch's natural dataflow
         // order (keep DIMS order; the checker is permutation-insensitive,
         // permutations only affect access counts, not validity).
-        self.rec_enumerate(arch, layer, q, &factorizations, 0, &mut m, limit, &mut stats, &mut visit);
+        self.rec_enumerate(&lctx, &factorizations, 0, &mut m, limit, &mut stats, &mut ext, &mut visit);
         stats
     }
 
     #[allow(clippy::too_many_arguments)]
     fn rec_enumerate(
         &self,
-        arch: &Arch,
-        layer: &ConvLayer,
-        q: &LayerQuant,
+        lctx: &LayerContext,
         factorizations: &[Vec<Vec<u64>>],
         di: usize,
         m: &mut Mapping,
         limit: u64,
         stats: &mut EnumStats,
+        ext: &mut Vec<[u64; 7]>,
         visit: &mut impl FnMut(&Mapping),
     ) {
         if stats.valid >= limit {
@@ -164,7 +201,7 @@ impl MapSpace {
         }
         if di == 7 {
             stats.examined += 1;
-            if check(arch, layer, q, m).is_ok() {
+            if lctx.check(m, ext).is_ok() {
                 stats.valid += 1;
                 visit(m);
             }
@@ -182,18 +219,18 @@ impl MapSpace {
             // early prune 1: spatial product so far must not exceed fanout
             let mut prune = false;
             for &lv in &self.spatial_levels {
-                if m.levels[lv].spatial_product() > arch.levels[lv].fanout {
+                if m.levels[lv].spatial_product() > lctx.fanout[lv] {
                     prune = true;
                     break;
                 }
             }
             // early prune 2: tile footprints only grow as more dims are
             // placed, so a partial capacity overflow is final
-            if !prune && !partial_capacity_ok(arch, layer, q, m) {
+            if !prune && !lctx.partial_capacity_ok(m, ext) {
                 prune = true;
             }
             if !prune {
-                self.rec_enumerate(arch, layer, q, factorizations, di + 1, m, limit, stats, visit);
+                self.rec_enumerate(lctx, factorizations, di + 1, m, limit, stats, ext, visit);
             }
             if stats.truncated {
                 break;
@@ -209,44 +246,6 @@ impl MapSpace {
     }
 }
 
-/// Monotone partial capacity check used for enumeration pruning: with
-/// unplaced dims at extent 1, current kept-tile word footprints are a
-/// lower bound on the final ones.
-fn partial_capacity_ok(
-    arch: &Arch,
-    layer: &ConvLayer,
-    q: &LayerQuant,
-    m: &Mapping,
-) -> bool {
-    use crate::mapping::tile_words;
-    use crate::workload::TENSORS;
-    for lv in 0..arch.levels.len() - 1 {
-        let al = &arch.levels[lv];
-        let mut shared = 0u64;
-        for t in TENSORS {
-            if !al.keeps_tensor(t) {
-                continue;
-            }
-            let words = tile_words(arch, layer, m, lv, t, q);
-            match &al.capacity {
-                crate::arch::Capacity::Unbounded => {}
-                crate::arch::Capacity::Shared(_) => shared += words,
-                crate::arch::Capacity::PerTensor(ws) => {
-                    if words > ws[t.index()] {
-                        return false;
-                    }
-                }
-            }
-        }
-        if let crate::arch::Capacity::Shared(avail) = al.capacity {
-            if shared > avail {
-                return false;
-            }
-        }
-    }
-    true
-}
-
 /// Outcome of an exhaustive enumeration.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct EnumStats {
@@ -259,6 +258,7 @@ pub struct EnumStats {
 mod tests {
     use super::*;
     use crate::arch::presets::toy;
+    use crate::mapping::check;
     use crate::quant::LayerQuant;
     use crate::workload::ConvLayer;
 
@@ -341,5 +341,23 @@ mod tests {
         assert_eq!(s.num_levels, 3);
         assert_eq!(s.spatial_levels, vec![1]);
         assert_eq!(s.slots(), 4);
+    }
+
+    #[test]
+    fn random_mapping_into_matches_allocating_path() {
+        // identical seed -> identical RNG stream -> identical candidates
+        let a = toy();
+        let space = MapSpace::of(&a);
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 2);
+        let lctx = LayerContext::new(&a, &l, &LayerQuant::uniform(8));
+        let mut r1 = Rng::new(41);
+        let mut r2 = Rng::new(41);
+        let mut m = Mapping::unit(space.num_levels);
+        let mut fbuf = vec![1u64; space.slots()];
+        for _ in 0..200 {
+            let expect = space.random_mapping(&l, &mut r1);
+            space.random_mapping_into(&lctx, &mut r2, &mut fbuf, &mut m);
+            assert_eq!(m, expect);
+        }
     }
 }

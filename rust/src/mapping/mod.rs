@@ -13,8 +13,11 @@
 //! exactly why Table I's mapping counts grow as precision drops.
 
 pub mod constraints;
+pub mod context;
 pub mod factorize;
 pub mod mapspace;
+
+pub use context::LayerContext;
 
 use crate::arch::Arch;
 use crate::quant::{packed_words, unpacked_words, LayerQuant};
@@ -61,6 +64,20 @@ impl Mapping {
         Mapping {
             levels: vec![LevelMapping::unit(); num_levels],
         }
+    }
+
+    /// Reset all factors to 1 and permutations to canonical, in place
+    /// (the allocation-free analogue of `Mapping::unit`).
+    pub fn reset_unit(&mut self) {
+        for lm in &mut self.levels {
+            *lm = LevelMapping::unit();
+        }
+    }
+
+    /// Overwrite `self` with `other` without reallocating (level counts
+    /// must match).
+    pub fn copy_from(&mut self, other: &Mapping) {
+        self.levels.clone_from_slice(&other.levels);
     }
 
     /// Cumulative tile extents at level `lv`: for each dim, the product

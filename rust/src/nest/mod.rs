@@ -24,7 +24,7 @@
 //! memory words using the bit-packing factors (see `crate::energy`).
 
 use crate::arch::Arch;
-use crate::mapping::Mapping;
+use crate::mapping::{LayerContext, Mapping};
 use crate::workload::{ConvLayer, Tensor, TENSORS};
 
 /// Element-granular access counts for one (level, tensor) slot.
@@ -52,6 +52,18 @@ pub struct NestAnalysis {
     pub macs: u64,
     /// MAC lanes actually used (product of spatial factors).
     pub pes_used: u64,
+}
+
+impl NestAnalysis {
+    /// An empty result to be filled by [`analyze_into`] (scratch-buffer
+    /// construction for the allocation-free hot path).
+    pub fn empty() -> Self {
+        NestAnalysis {
+            accesses: Vec::new(),
+            macs: 0,
+            pes_used: 0,
+        }
+    }
 }
 
 /// Number of times the tile of `t` held at level `k` is (re)loaded,
@@ -168,6 +180,117 @@ pub fn analyze(arch: &Arch, layer: &ConvLayer, mapping: &Mapping) -> NestAnalysi
         macs,
         pes_used: mapping.pes_used(),
     }
+}
+
+/// Allocation-free, table-driven [`analyze`]: identical math in the same
+/// order (bit-identical results — asserted by
+/// `tests/hotpath_equivalence.rs`), but keeper chains and relevance come
+/// from the precomputed [`LayerContext`], cumulative tile extents are
+/// computed once into the `ext` scratch buffer, and the result is
+/// written into `out` without reallocating in steady state.
+pub fn analyze_into(
+    lctx: &LayerContext,
+    mapping: &Mapping,
+    ext: &mut Vec<[u64; 7]>,
+    out: &mut NestAnalysis,
+) {
+    let nl = lctx.num_levels;
+    out.accesses.clear();
+    out.accesses.resize(nl, [Accesses::default(); 3]);
+    out.macs = lctx.macs;
+    out.pes_used = mapping.pes_used();
+    lctx.fill_extents(mapping, ext);
+    let macs = lctx.macs;
+
+    for t in TENSORS {
+        let ti = t.index();
+        let keepers = &lctx.keepers[ti];
+        debug_assert!(!keepers.is_empty());
+
+        // compute-level operand service at the innermost keeper
+        let k0 = keepers[0];
+        match t {
+            Tensor::Outputs => {
+                out.accesses[k0][ti].reads += macs as f64;
+                out.accesses[k0][ti].writes += macs as f64;
+            }
+            _ => out.accesses[k0][ti].reads += macs as f64,
+        }
+
+        // inter-level traffic along the keeper chain
+        for w in keepers.windows(2) {
+            let (k, pk) = (w[0], w[1]);
+            let tile = lctx.tile_elems_at(t, &ext[k]) as f64;
+            let inst = mapping.instances(k) as f64;
+            let rl = reloads_ctx(lctx, mapping, k, t);
+            let fills = tile * inst * rl;
+            let mc = multicast_discount_ctx(lctx, mapping, k, pk, t);
+            let full = lctx.tensor_elems[ti] as f64;
+
+            match t {
+                Tensor::Outputs => {
+                    // partial sums drain upward; spatial reduction merges
+                    // contributions from sibling children
+                    let up = fills / mc;
+                    out.accesses[pk][ti].writes += up;
+                    // revisited output tiles are re-read from the parent
+                    // (all but the compulsory first visit)
+                    out.accesses[pk][ti].reads += (up - full).max(0.0);
+                    // the child reads each drained tile out of its buffer
+                    out.accesses[k][ti].reads += fills;
+                }
+                _ => {
+                    out.accesses[pk][ti].reads += fills / mc;
+                    out.accesses[k][ti].writes += fills;
+                }
+            }
+        }
+    }
+}
+
+/// [`reloads`] with the relevance test replaced by a bitmask lookup
+/// (same multiplication order, same result).
+fn reloads_ctx(lctx: &LayerContext, mapping: &Mapping, k: usize, t: Tensor) -> f64 {
+    let mut reload = 1.0;
+    let mut contiguous = true; // still in the innermost irrelevant block
+    for lv in (k + 1)..mapping.levels.len() {
+        let lm = &mapping.levels[lv];
+        for &d in &lm.perm {
+            let f = lm.temporal[d.index()];
+            if f == 1 {
+                continue;
+            }
+            if contiguous && !lctx.is_relevant(t, d) {
+                continue; // temporal reuse: resident tile survives
+            }
+            contiguous = false;
+            reload *= f as f64;
+        }
+    }
+    reload
+}
+
+/// [`multicast_discount`] on the precomputed multicast table.
+fn multicast_discount_ctx(
+    lctx: &LayerContext,
+    mapping: &Mapping,
+    k: usize,
+    pk: usize,
+    t: Tensor,
+) -> f64 {
+    let mut mc = 1.0;
+    for lv in (k + 1)..=pk {
+        if !lctx.multicast[lv] {
+            continue;
+        }
+        for d in crate::workload::DIMS {
+            let s = mapping.levels[lv].spatial[d.index()];
+            if s > 1 && !lctx.is_relevant(t, d) {
+                mc *= s as f64;
+            }
+        }
+    }
+    mc
 }
 
 #[cfg(test)]

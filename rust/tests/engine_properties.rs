@@ -484,6 +484,7 @@ fn canonical_quant_shares_search_results() {
                 valid_target: 50,
                 max_draws: 50_000,
                 seed: 11,
+                shards: 1,
             };
             // 7 and 8 bits both pack 2/word -> identical canonical class
             let r7 = qmap::mapper::search(&arch, layer, &LayerQuant::uniform(7), &cfg);

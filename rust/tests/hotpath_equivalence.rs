@@ -1,0 +1,199 @@
+//! Equivalence and determinism properties of the allocation-free mapper
+//! hot path.
+//!
+//! The refactored engine (`LayerContext` tables + `EvalContext` scratch
+//! + `random_mapping_into`/`check`/`analyze_into`/`estimate_into`) must
+//! be *bit-identical* to the naive path (`random_mapping`/`check`/
+//! `analyze`/`estimate`) — same candidates, same verdicts, same floats.
+//! The sharded search must be deterministic in (seed, shard-count), and
+//! with one shard must reproduce the single-threaded reference loop
+//! exactly.
+
+use qmap::arch::presets::{eyeriss, simba, toy};
+use qmap::arch::Arch;
+use qmap::energy::{estimate, estimate_into, Estimate};
+use qmap::mapper::{search, workload_hash, EvalContext, MapperConfig};
+use qmap::mapping::mapspace::MapSpace;
+use qmap::mapping::{check, LayerContext};
+use qmap::nest::{analyze, analyze_into, NestAnalysis};
+use qmap::quant::LayerQuant;
+use qmap::util::rng::Rng;
+use qmap::workload::ConvLayer;
+
+fn layers_under_test() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::conv("c1", 4, 8, 3, 8, 1),
+        ConvLayer::conv("c2", 16, 32, 3, 14, 2),
+        ConvLayer::dw("d1", 32, 3, 14, 1),
+        ConvLayer::pw("p1", 16, 32, 14),
+        ConvLayer::fc("f1", 64, 10),
+    ]
+}
+
+#[test]
+fn ctx_analysis_is_bit_identical_to_naive_path() {
+    let mut total_checked = 0usize;
+    for arch in [toy(), eyeriss(), simba()] {
+        let space = MapSpace::of(&arch);
+        let mut ectx = EvalContext::for_arch(&arch);
+        for layer in layers_under_test() {
+            for bits in [2u8, 4, 8] {
+                let q = LayerQuant::uniform(bits).canonical(arch.word_bits, arch.bit_packing);
+                let lctx = LayerContext::new(&arch, &layer, &q);
+                let mut rng = Rng::new(0xB17 ^ bits as u64);
+                for _ in 0..150 {
+                    let m = space.random_mapping(&layer, &mut rng);
+                    let naive = check(&arch, &layer, &q, &m);
+                    let ctx = lctx.check(&m, &mut ectx.ext);
+                    assert_eq!(naive, ctx, "{} {} {}b", arch.name, layer.name, bits);
+                    if naive.is_err() {
+                        continue;
+                    }
+                    total_checked += 1;
+
+                    let nest_naive: NestAnalysis = analyze(&arch, &layer, &m);
+                    analyze_into(&lctx, &m, &mut ectx.ext, &mut ectx.nest);
+                    assert_eq!(nest_naive.macs, ectx.nest.macs);
+                    assert_eq!(nest_naive.pes_used, ectx.nest.pes_used);
+                    assert_eq!(
+                        nest_naive.accesses, ectx.nest.accesses,
+                        "{} {} {}b: access counts diverged",
+                        arch.name, layer.name, bits
+                    );
+
+                    let est_naive: Estimate = estimate(&arch, &layer, &q, &nest_naive);
+                    estimate_into(&lctx, &ectx.nest, &mut ectx.est);
+                    assert_eq!(
+                        est_naive, ectx.est,
+                        "{} {} {}b: estimate diverged",
+                        arch.name, layer.name, bits
+                    );
+                    assert_eq!(est_naive.edp().to_bits(), ectx.est.edp().to_bits());
+                }
+            }
+        }
+    }
+    assert!(total_checked > 100, "too few valid samples: {total_checked}");
+}
+
+/// Replicates the pre-refactor single-threaded search loop with the
+/// naive per-draw functions.
+fn reference_search(
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    cfg: &MapperConfig,
+) -> (Option<u64>, u64, u64) {
+    let q = &q.canonical(arch.word_bits, arch.bit_packing);
+    let space = MapSpace::of(arch);
+    let mut rng = Rng::new(cfg.seed ^ workload_hash(layer, q));
+    let mut best: Option<f64> = None;
+    let mut valid = 0u64;
+    let mut draws = 0u64;
+    while valid < cfg.valid_target && draws < cfg.max_draws {
+        draws += 1;
+        let m = space.random_mapping(layer, &mut rng);
+        if check(arch, layer, q, &m).is_err() {
+            continue;
+        }
+        valid += 1;
+        let nest = analyze(arch, layer, &m);
+        let est = estimate(arch, layer, q, &nest);
+        let edp = est.edp();
+        if best.map_or(true, |b| edp < b) {
+            best = Some(edp);
+        }
+    }
+    (best.map(f64::to_bits), valid, draws)
+}
+
+#[test]
+fn single_shard_search_matches_naive_reference() {
+    for (arch, layer) in [
+        (toy(), ConvLayer::conv("t", 4, 8, 3, 8, 1)),
+        (eyeriss(), ConvLayer::dw("d", 32, 3, 14, 1)),
+    ] {
+        for bits in [4u8, 8] {
+            let q = LayerQuant::uniform(bits);
+            let cfg = MapperConfig {
+                valid_target: 80,
+                max_draws: 80_000,
+                seed: 23,
+                shards: 1,
+            };
+            let (ref_best, ref_valid, ref_draws) = reference_search(&arch, &layer, &q, &cfg);
+            let r = search(&arch, &layer, &q, &cfg);
+            assert_eq!(r.best.map(|e| e.edp().to_bits()), ref_best, "{} {bits}b", arch.name);
+            assert_eq!(r.valid, ref_valid);
+            assert_eq!(r.draws, ref_draws);
+        }
+    }
+}
+
+#[test]
+fn sharded_search_is_deterministic_per_shard_count() {
+    let arch = eyeriss();
+    let layer = ConvLayer::pw("p", 16, 32, 14);
+    let q = LayerQuant::uniform(4);
+    for shards in [1usize, 2, 3, 8] {
+        let cfg = MapperConfig {
+            valid_target: 160,
+            max_draws: 160_000,
+            seed: 77,
+            shards,
+        };
+        let r1 = search(&arch, &layer, &q, &cfg);
+        let r2 = search(&arch, &layer, &q, &cfg);
+        assert_eq!(
+            r1.best.as_ref().map(|e| e.edp().to_bits()),
+            r2.best.as_ref().map(|e| e.edp().to_bits()),
+            "shards={shards}"
+        );
+        assert_eq!(r1.valid, r2.valid, "shards={shards}");
+        assert_eq!(r1.draws, r2.draws, "shards={shards}");
+        assert_eq!(r1.best_mapping, r2.best_mapping, "shards={shards}");
+        assert!(r1.valid >= 160, "shards={shards}: valid={}", r1.valid);
+    }
+}
+
+#[test]
+fn sharded_best_is_a_valid_mapping_with_plausible_edp() {
+    // the sharded winner must verify against the naive checker/pricer
+    let arch = eyeriss();
+    let layer = ConvLayer::dw("d", 32, 3, 14, 1);
+    let q = LayerQuant::uniform(8);
+    let cfg = MapperConfig {
+        valid_target: 200,
+        max_draws: 200_000,
+        seed: 5,
+        shards: 4,
+    };
+    let r = search(&arch, &layer, &q, &cfg);
+    let est = r.best.expect("should map");
+    let m = r.best_mapping.expect("mapping returned");
+    let qc = q.canonical(arch.word_bits, arch.bit_packing);
+    check(&arch, &layer, &qc, &m).expect("winner must be valid");
+    let nest = analyze(&arch, &layer, &m);
+    let naive = estimate(&arch, &layer, &qc, &nest);
+    assert_eq!(naive.edp().to_bits(), est.edp().to_bits());
+}
+
+#[test]
+fn more_shards_never_reduce_total_valid_target_coverage() {
+    // splitting the budget across shards must still reach the target on
+    // an easy workload, whatever the shard count
+    let arch = toy();
+    let layer = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+    let q = LayerQuant::uniform(8);
+    for shards in [1usize, 2, 5] {
+        let cfg = MapperConfig {
+            valid_target: 100,
+            max_draws: 100_000,
+            seed: 9,
+            shards,
+        };
+        let r = search(&arch, &layer, &q, &cfg);
+        assert!(r.valid >= 100, "shards={shards}: {}", r.valid);
+        assert!(r.best.is_some());
+    }
+}

@@ -42,6 +42,7 @@ fn shipped_qnet_loads_and_maps() {
         valid_target: 30,
         max_draws: 60_000,
         seed: 1,
+        shards: 1,
     };
     for arch in [presets::eyeriss(), presets::simba(), presets::toy()] {
         let cache = qmap::mapper::cache::MapperCache::new();
