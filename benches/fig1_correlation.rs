@@ -16,7 +16,10 @@ use qmap::report;
 use std::time::Instant;
 
 fn main() {
-    let rc = RunConfig::from_env();
+    let rc = RunConfig::from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2)
+    });
     let n = match std::env::var("QMAP_PROFILE").as_deref() {
         Ok("fast") => 60,
         Ok("full") => 1000, // the paper's 1000 unique configurations

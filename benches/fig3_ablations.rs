@@ -47,7 +47,10 @@ fn show(title: &str, r: &Fig3Result) {
 }
 
 fn main() {
-    let rc = RunConfig::from_env();
+    let rc = RunConfig::from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2)
+    });
     let t0 = Instant::now();
 
     println!("=== Fig. 3: NSGA-II ablations (MobileNetV1, Eyeriss) ===");

@@ -17,7 +17,10 @@ use qmap::report;
 use std::time::Instant;
 
 fn main() {
-    let rc = RunConfig::from_env();
+    let rc = RunConfig::from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2)
+    });
     println!("=== Fig. 4: energy breakdown, uniform x-bit MobileNetV1 on Eyeriss ===");
     let t0 = Instant::now();
     let rows = fig4_breakdown(&rc);

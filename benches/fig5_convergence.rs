@@ -31,7 +31,10 @@ fn hypervolume(front: &[Vec<f64>], ref_pt: (f64, f64)) -> f64 {
 }
 
 fn main() {
-    let mut rc = RunConfig::from_env();
+    let mut rc = RunConfig::from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2)
+    });
     if std::env::var("QMAP_PROFILE").is_err() {
         rc.nsga.offspring = 16; // the paper's |Q|=16 run
         rc.nsga.generations = 20;

@@ -18,7 +18,10 @@ use qmap::report;
 use std::time::Instant;
 
 fn main() {
-    let rc = RunConfig::from_env();
+    let rc = RunConfig::from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2)
+    });
     println!("=== Fig. 6: strategy comparison (MobileNetV1, Eyeriss, rel. uniform-8) ===");
     let t0 = Instant::now();
     let r = fig6_tradeoff(&rc);

@@ -11,17 +11,22 @@
 //!   * full-network characterization latency (28 workloads × target
 //!     valid mappings), cold and warm cache,
 //!   * cache hit latency on the lock-striped cache,
-//!   * parallel scaling of population evaluation.
+//!   * engine scaling: population evaluation through the work-stealing
+//!     `engine::driver` at 1/2/4/8 workers (1 worker = the serial
+//!     baseline the parallel runs are bit-identical to; acceptance bar:
+//!     >= 2x at 4 workers).
 //!
-//! Run: `cargo bench --bench perf_hotpath`. Writes the machine-readable
-//! trajectory record to `BENCH_perf.json` at the repository root.
+//! Run: `cargo bench --bench perf_hotpath` (QMAP_PROFILE=fast for the
+//! CI smoke: smaller draw budgets, same row structure). Writes the
+//! machine-readable trajectory record to `BENCH_perf.json` at the
+//! repository root.
 //!
 //! Both throughput numbers and their ratio are recorded so the >= 3x
 //! acceptance bar of the hot-path refactor stays auditable across PRs.
 
 use qmap::arch::presets;
-use qmap::coordinator::experiments::parallel_map;
 use qmap::energy::estimate_into;
+use qmap::engine::{driver, Engine};
 use qmap::eval::evaluate_network;
 use qmap::mapper::cache::MapperCache;
 use qmap::mapper::{self, EvalContext, MapperConfig};
@@ -43,12 +48,23 @@ fn time<R>(label: &str, f: impl FnOnce() -> R) -> (R, f64) {
 }
 
 fn main() {
-    println!("=== §Perf: L3 hot-path benchmarks ===\n");
+    // validate QMAP_PROFILE (and fail loudly on typos) even though this
+    // bench derives its own fixed budgets from the profile name
+    let _ = qmap::coordinator::RunConfig::from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2)
+    });
+    let fast = matches!(std::env::var("QMAP_PROFILE").as_deref(), Ok("fast"));
+    println!(
+        "=== §Perf: L3 hot-path benchmarks{} ===\n",
+        if fast { " (fast profile)" } else { "" }
+    );
     let arch = presets::eyeriss();
     let layers = models::mobilenet_v1();
     let cfg = MapperConfig {
-        valid_target: 2_000, // the paper's budget
-        max_draws: 2_000_000,
+        // the paper's budget; /10 for the CI smoke
+        valid_target: if fast { 200 } else { 2_000 },
+        max_draws: if fast { 200_000 } else { 2_000_000 },
         seed: 42,
         shards: 1,
     };
@@ -61,7 +77,8 @@ fn main() {
     let layer = &layers[1];
     let q = LayerQuant { qa: 8, qw: 8, qo: 8 }.canonical(arch.word_bits, arch.bit_packing);
     let space = MapSpace::of(&arch);
-    const PIPELINE_DRAWS: u64 = 200_000;
+    #[allow(non_snake_case)]
+    let PIPELINE_DRAWS: u64 = if fast { 40_000 } else { 200_000 };
 
     let (naive_priced, dt_naive) = time(
         &format!("mapper: naive draw+check+analyze+estimate x {PIPELINE_DRAWS}"),
@@ -159,9 +176,14 @@ fn main() {
     let cache_hit_ns = dth * 1e9 / 1e5;
     println!("  -> {cache_hit_ns:.0} ns per hit");
 
-    // 5. parallel scaling: 64 random genomes on 1 vs N threads
+    // 5. engine scaling: one genome population through the
+    //    work-stealing engine at 1/2/4/8 workers. The 1-worker engine
+    //    IS the serial baseline (inline execution), and every row is
+    //    bit-identical to it by construction — this is the
+    //    engine-vs-naive scaling record.
+    let pop_n = if fast { 24 } else { 64 };
     let mut rng = Rng::new(7);
-    let genomes: Vec<QuantConfig> = (0..64)
+    let genomes: Vec<QuantConfig> = (0..pop_n)
         .map(|_| {
             let mut g = QuantConfig::uniform(layers.len(), 8);
             for l in g.layers.iter_mut() {
@@ -171,23 +193,49 @@ fn main() {
             g
         })
         .collect();
-    let fresh = MapperCache::new();
-    let (_, dt1) = time("population: 64 genomes, 1 thread, shared cold cache", || {
-        for g in &genomes {
-            std::hint::black_box(evaluate_network(&arch, &layers, g, &fresh, &cfg));
+    let mut engine_rows: Vec<(usize, f64)> = Vec::new();
+    let mut reference: Option<Vec<Option<f64>>> = None;
+    let mut worker_counts: Vec<usize> = vec![1, 2, 4, 8];
+    if !worker_counts.contains(&threads) {
+        worker_counts.push(threads);
+    }
+    for &w in &worker_counts {
+        let engine = Engine::new(w);
+        let fresh = MapperCache::new();
+        let (evals, dt) = time(
+            &format!("engine: {pop_n} genomes, {w} worker(s), cold cache"),
+            || driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &fresh, &cfg),
+        );
+        let edps: Vec<Option<f64>> = evals.iter().map(|e| e.as_ref().map(|e| e.edp)).collect();
+        match reference.take() {
+            None => reference = Some(edps),
+            Some(r) => {
+                assert_eq!(r, edps, "engine results must be bit-identical at {w} workers");
+                reference = Some(r);
+            }
         }
-    });
-    let fresh2 = MapperCache::new();
-    let (_, dtn) = time(
-        &format!("population: 64 genomes, {threads} threads, shared cold cache"),
-        || {
-            parallel_map(&genomes, threads, |g| {
-                evaluate_network(&arch, &layers, g, &fresh2, &cfg).map(|e| e.edp)
-            })
-        },
-    );
-    let pop64 = dt1 / dtn.max(1e-12);
-    println!("  -> parallel speedup {pop64:.1}x on {threads} threads");
+        engine_rows.push((w, dt));
+        let st = engine.stats();
+        println!(
+            "  -> jobs {}, splits {}, tasks {}, steals {}",
+            st.jobs, st.splits, st.tasks, st.steals
+        );
+    }
+    let t_1w = engine_rows[0].1;
+    for &(w, dt) in &engine_rows {
+        println!("  -> engine speedup at {w} workers: {:.2}x", t_1w / dt.max(1e-12));
+    }
+    let engine_4w = engine_rows
+        .iter()
+        .find(|&&(w, _)| w == 4)
+        .map(|&(_, dt)| t_1w / dt.max(1e-12))
+        .unwrap_or(1.0);
+    let pop64 = engine_rows
+        .iter()
+        .find(|&&(w, _)| w == threads)
+        .map(|&(_, dt)| t_1w / dt.max(1e-12))
+        .unwrap_or(engine_4w);
+    println!("  -> engine speedup {engine_4w:.2}x at 4 workers (target >= 2x)");
 
     // summary + machine-readable record for the perf trajectory
     println!("\nsummary:");
@@ -200,10 +248,12 @@ fn main() {
     println!("  network_cold_ms              = {:.1}", dt_cold * 1e3);
     println!("  network_warm_us              = {:.1}", dt_warm * 1e6);
     println!("  cache_hit_ns                 = {cache_hit_ns:.0}");
+    println!("  engine_speedup_4w_x          = {engine_4w:.2}");
     println!("  pop64_speedup_x              = {pop64:.1}");
 
     let record = Json::obj(vec![
         ("bench", Json::Str("perf_hotpath".into())),
+        ("profile", Json::Str(if fast { "fast".into() } else { "default".into() })),
         ("pipeline_draws", Json::Num(PIPELINE_DRAWS as f64)),
         // valid mappings priced per second (naive twin measured in the
         // same run on the same candidate stream)
@@ -218,6 +268,25 @@ fn main() {
         ("network_cold_ms", Json::Num(dt_cold * 1e3)),
         ("network_warm_us", Json::Num(dt_warm * 1e6)),
         ("cache_hit_ns", Json::Num(cache_hit_ns)),
+        // engine scaling rows: population evaluation through
+        // engine::driver at each worker count (1 = serial baseline)
+        (
+            "engine_rows",
+            Json::Arr(
+                engine_rows
+                    .iter()
+                    .map(|&(w, dt)| {
+                        Json::obj(vec![
+                            ("workers", Json::Num(w as f64)),
+                            ("ms", Json::Num(dt * 1e3)),
+                            ("speedup_x", Json::Num(t_1w / dt.max(1e-12))),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("engine_population", Json::Num(pop_n as f64)),
+        ("engine_speedup_4w_x", Json::Num(engine_4w)),
         ("pop64_speedup_x", Json::Num(pop64)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");

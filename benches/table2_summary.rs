@@ -19,7 +19,10 @@ use qmap::report;
 use std::time::Instant;
 
 fn main() {
-    let rc = RunConfig::from_env();
+    let rc = RunConfig::from_env().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2)
+    });
     let per_cell = 4; // representative trade-offs per cell, as the paper prints
     println!("=== Table II: Δ memory-energy / Δ accuracy vs uniform-8 ===");
     let t0 = Instant::now();

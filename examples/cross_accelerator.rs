@@ -11,6 +11,7 @@ use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
 use qmap::arch::presets;
 use qmap::baselines::{proposed_search, Candidate};
 use qmap::coordinator::RunConfig;
+use qmap::engine::Engine;
 use qmap::eval::evaluate_network;
 use qmap::mapper::cache::MapperCache;
 use qmap::quant::QuantConfig;
@@ -24,6 +25,7 @@ fn main() {
 
     let eyeriss = presets::eyeriss();
     let simba = presets::simba();
+    let engine = Engine::new(rc.threads);
     let cache_e = MapperCache::new();
     let cache_s = MapperCache::new();
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
@@ -32,10 +34,10 @@ fn main() {
 
     // native searches
     let on_eyeriss = proposed_search(
-        &eyeriss, &layers, &mut acc, &cache_e, &rc.mapper, &rc.nsga, |_, _| {},
+        &engine, &eyeriss, &layers, &mut acc, &cache_e, &rc.mapper, &rc.nsga, |_, _| {},
     );
     let on_simba = proposed_search(
-        &simba, &layers, &mut acc, &cache_s, &rc.mapper, &rc.nsga, |_, _| {},
+        &engine, &simba, &layers, &mut acc, &cache_s, &rc.mapper, &rc.nsga, |_, _| {},
     );
 
     // references

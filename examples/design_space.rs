@@ -16,6 +16,7 @@ use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
 use qmap::arch::{presets, Arch, Capacity};
 use qmap::baselines::proposed_search;
 use qmap::coordinator::RunConfig;
+use qmap::engine::Engine;
 use qmap::mapper::cache::MapperCache;
 use qmap::quant::QuantConfig;
 use qmap::report;
@@ -65,6 +66,7 @@ fn main() {
     rc.nsga.generations = 8;
 
     println!("=== design-space exploration: Eyeriss variants x mixed-precision search ===\n");
+    let engine = Engine::new(rc.threads);
     let mut rows = Vec::new();
     for v in variants() {
         v.arch.validate().expect("variant must be a legal arch");
@@ -81,7 +83,7 @@ fn main() {
         .expect("uniform-8 must map on every variant");
 
         let front = proposed_search(
-            &v.arch, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga, |_, _| {},
+            &engine, &v.arch, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga, |_, _| {},
         );
 
         // best candidate with <= 1% accuracy drop vs uniform-8

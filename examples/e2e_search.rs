@@ -95,7 +95,9 @@ fn main() -> anyhow::Result<()> {
         rc.nsga.population, rc.nsga.offspring, rc.nsga.generations
     );
     let t_search = Instant::now();
+    let engine = qmap::engine::Engine::new(rc.threads);
     let front = proposed_search(
+        &engine,
         &arch,
         &layers,
         &mut qat,

@@ -12,7 +12,8 @@
 
 use crate::accuracy::AccuracyModel;
 use crate::arch::Arch;
-use crate::eval::{evaluate_network, NetworkEval};
+use crate::engine::{driver, Engine};
+use crate::eval::NetworkEval;
 use crate::mapper::cache::MapperCache;
 use crate::mapper::MapperConfig;
 use crate::nsga::{self, NsgaConfig};
@@ -28,9 +29,40 @@ pub struct Candidate {
     pub strategy: &'static str,
 }
 
+/// Fan a batch of genomes through the engine and pair each mappable one
+/// with its accuracy (accuracy calls stay in genome order — the proxy is
+/// pure, but order-stability keeps any future stateful model
+/// deterministic too).
+fn price_genomes(
+    engine: &Engine,
+    arch: &Arch,
+    layers: &[ConvLayer],
+    genomes: Vec<QuantConfig>,
+    acc: &mut dyn AccuracyModel,
+    cache: &MapperCache,
+    cfg: &MapperConfig,
+    strategy: &'static str,
+) -> Vec<Candidate> {
+    let evals = driver::evaluate_genomes(engine, arch, layers, &genomes, cache, cfg);
+    genomes
+        .into_iter()
+        .zip(evals)
+        .filter_map(|(genome, hw)| {
+            let hw = hw?;
+            Some(Candidate {
+                accuracy: acc.accuracy(&genome),
+                genome,
+                hw,
+                strategy,
+            })
+        })
+        .collect()
+}
+
 /// Uniform-quantization sweep: evaluate `(q, q)` for q in 2..=8 (and the
-/// 16-bit reference).
+/// 16-bit reference), fanned out on the engine.
 pub fn uniform_sweep(
+    engine: &Engine,
     arch: &Arch,
     layers: &[ConvLayer],
     acc: &mut dyn AccuracyModel,
@@ -42,23 +74,18 @@ pub fn uniform_sweep(
     if include_16bit {
         qs.push(16);
     }
-    qs.iter()
-        .filter_map(|&q| {
-            let genome = QuantConfig::uniform(layers.len(), q);
-            let hw = evaluate_network(arch, layers, &genome, cache, cfg)?;
-            Some(Candidate {
-                accuracy: acc.accuracy(&genome),
-                genome,
-                hw,
-                strategy: "uniform",
-            })
-        })
-        .collect()
+    let genomes: Vec<QuantConfig> = qs
+        .iter()
+        .map(|&q| QuantConfig::uniform(layers.len(), q))
+        .collect();
+    price_genomes(engine, arch, layers, genomes, acc, cache, cfg, "uniform")
 }
 
 /// Naïve hardware-unaware search: NSGA-II over (error, model-size-bits),
-/// winners re-priced on the actual accelerator afterwards.
+/// winners re-priced on the actual accelerator afterwards (on the
+/// engine — the search loop itself touches no hardware model).
 pub fn naive_search(
+    engine: &Engine,
     arch: &Arch,
     layers: &[ConvLayer],
     acc: &mut dyn AccuracyModel,
@@ -81,23 +108,17 @@ pub fn naive_search(
         },
         |_, _| {},
     );
-    front
-        .into_iter()
-        .filter_map(|ind| {
-            let hw = evaluate_network(arch, layers, &ind.genome, cache, map_cfg)?;
-            Some(Candidate {
-                accuracy: acc.accuracy(&ind.genome),
-                genome: ind.genome,
-                hw,
-                strategy: "naive",
-            })
-        })
-        .collect()
+    let genomes: Vec<QuantConfig> = front.into_iter().map(|ind| ind.genome).collect();
+    price_genomes(engine, arch, layers, genomes, acc, cache, map_cfg, "naive")
 }
 
 /// The proposed method: NSGA-II over (EDP on the target accelerator,
-/// error), exactly the paper's search engine.
+/// error), exactly the paper's search engine. Every generation's
+/// offspring fans out through `engine::driver` — deduplicated
+/// layer×quant jobs on the work-stealing pool — and the results are
+/// bit-identical to a single-threaded run for any worker count.
 pub fn proposed_search(
+    engine: &Engine,
     arch: &Arch,
     layers: &[ConvLayer],
     acc: &mut dyn AccuracyModel,
@@ -110,31 +131,21 @@ pub fn proposed_search(
         layers.len(),
         nsga_cfg,
         |genomes| {
+            let evals = driver::evaluate_genomes(engine, arch, layers, genomes, cache, map_cfg);
             genomes
                 .iter()
-                .map(|g| {
+                .zip(&evals)
+                .map(|(g, e)| {
                     let err = 1.0 - acc.accuracy(g);
-                    let edp = evaluate_network(arch, layers, g, cache, map_cfg)
-                        .map(|e| e.edp)
-                        .unwrap_or(f64::INFINITY);
+                    let edp = e.as_ref().map(|e| e.edp).unwrap_or(f64::INFINITY);
                     vec![edp, err]
                 })
                 .collect()
         },
         &mut on_generation,
     );
-    front
-        .into_iter()
-        .filter_map(|ind| {
-            let hw = evaluate_network(arch, layers, &ind.genome, cache, map_cfg)?;
-            Some(Candidate {
-                accuracy: acc.accuracy(&ind.genome),
-                genome: ind.genome,
-                hw,
-                strategy: "proposed",
-            })
-        })
-        .collect()
+    let genomes: Vec<QuantConfig> = front.into_iter().map(|ind| ind.genome).collect();
+    price_genomes(engine, arch, layers, genomes, acc, cache, map_cfg, "proposed")
 }
 
 /// The paper's full three-objective formulation: NSGA-II
@@ -144,6 +155,7 @@ pub fn proposed_search(
 /// for the accuracy-vs-EDP figures; this variant also presses on the
 /// memory axis and is what Table II's memory-energy columns report.
 pub fn proposed_search3(
+    engine: &Engine,
     arch: &Arch,
     layers: &[ConvLayer],
     acc: &mut dyn AccuracyModel,
@@ -155,11 +167,13 @@ pub fn proposed_search3(
         layers.len(),
         nsga_cfg,
         |genomes| {
+            let evals = driver::evaluate_genomes(engine, arch, layers, genomes, cache, map_cfg);
             genomes
                 .iter()
-                .map(|g| {
+                .zip(&evals)
+                .map(|(g, e)| {
                     let err = 1.0 - acc.accuracy(g);
-                    match evaluate_network(arch, layers, g, cache, map_cfg) {
+                    match e {
                         Some(e) => vec![e.memory_energy_pj, e.energy_pj * e.cycles, err],
                         None => vec![f64::INFINITY, f64::INFINITY, err],
                     }
@@ -168,18 +182,8 @@ pub fn proposed_search3(
         },
         |_, _| {},
     );
-    front
-        .into_iter()
-        .filter_map(|ind| {
-            let hw = evaluate_network(arch, layers, &ind.genome, cache, map_cfg)?;
-            Some(Candidate {
-                accuracy: acc.accuracy(&ind.genome),
-                genome: ind.genome,
-                hw,
-                strategy: "proposed",
-            })
-        })
-        .collect()
+    let genomes: Vec<QuantConfig> = front.into_iter().map(|ind| ind.genome).collect();
+    price_genomes(engine, arch, layers, genomes, acc, cache, map_cfg, "proposed")
 }
 
 #[cfg(test)]
@@ -211,9 +215,10 @@ mod tests {
     fn uniform_sweep_monotone_energy() {
         let a = toy();
         let layers = net();
+        let engine = Engine::new(2);
         let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
         let cache = MapperCache::new();
-        let cands = uniform_sweep(&a, &layers, &mut acc, &cache, &map_cfg(), true);
+        let cands = uniform_sweep(&engine, &a, &layers, &mut acc, &cache, &map_cfg(), true);
         assert_eq!(cands.len(), 8); // q = 2..8 + 16
         // memory energy decreases from 16b to 2b
         let e16 = cands.last().unwrap().hw.memory_energy_pj;
@@ -227,6 +232,7 @@ mod tests {
     fn naive_search_produces_front() {
         let a = toy();
         let layers = net();
+        let engine = Engine::new(2);
         let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
         let cache = MapperCache::new();
         let nsga_cfg = NsgaConfig {
@@ -236,7 +242,7 @@ mod tests {
             seed: 2,
             ..NsgaConfig::default()
         };
-        let cands = naive_search(&a, &layers, &mut acc, &cache, &map_cfg(), &nsga_cfg);
+        let cands = naive_search(&engine, &a, &layers, &mut acc, &cache, &map_cfg(), &nsga_cfg);
         assert!(!cands.is_empty());
         for c in &cands {
             assert_eq!(c.strategy, "naive");
@@ -250,6 +256,7 @@ mod tests {
         // point that matches 8-bit-uniform accuracy at lower EDP.
         let a = toy();
         let layers = net();
+        let engine = Engine::new(4);
         let cache = MapperCache::new();
         let nsga_cfg = NsgaConfig {
             population: 12,
@@ -259,9 +266,10 @@ mod tests {
             ..NsgaConfig::default()
         };
         let mut acc1 = ProxyAccuracy::new(&layers, ProxyParams::default());
-        let uni = uniform_sweep(&a, &layers, &mut acc1, &cache, &map_cfg(), false);
+        let uni = uniform_sweep(&engine, &a, &layers, &mut acc1, &cache, &map_cfg(), false);
         let mut acc2 = ProxyAccuracy::new(&layers, ProxyParams::default());
         let prop = proposed_search(
+            &engine,
             &a,
             &layers,
             &mut acc2,

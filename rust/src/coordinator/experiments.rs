@@ -15,6 +15,7 @@ use crate::accuracy::{AccuracyModel, InitModel, ProxyAccuracy, ProxyParams};
 use crate::arch::presets;
 use crate::arch::Arch;
 use crate::baselines::{naive_search, proposed_search, proposed_search3, uniform_sweep, Candidate};
+use crate::engine::{driver, Engine};
 use crate::eval::{evaluate_network, NetworkEval};
 use crate::mapper::cache::MapperCache;
 use crate::mapping::mapspace::MapSpace;
@@ -48,6 +49,7 @@ pub fn fig1_correlation(n: usize, rc: &RunConfig) -> Fig1Result {
     let arch = presets::eyeriss();
     let layers = models::mobilenet_v1();
     let cache = MapperCache::new();
+    let engine = Engine::new(rc.threads);
     let mut rng = Rng::new(rc.seed ^ 0xF161);
 
     let mut genomes: Vec<QuantConfig> = Vec::with_capacity(n);
@@ -60,9 +62,7 @@ pub fn fig1_correlation(n: usize, rc: &RunConfig) -> Fig1Result {
         genomes.push(qc);
     }
 
-    let evals = parallel_map(&genomes, rc.threads, |qc| {
-        evaluate_network(&arch, &layers, qc, &cache, &rc.mapper)
-    });
+    let evals = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &rc.mapper);
     let points: Vec<Fig1Point> = evals
         .into_iter()
         .flatten()
@@ -200,6 +200,7 @@ pub fn fig5_convergence(rc: &RunConfig, snapshot_gens: &[usize]) -> Fig5Result {
     let arch = presets::eyeriss();
     let layers = models::mobilenet_v1();
     let cache = MapperCache::new();
+    let engine = Engine::new(rc.threads);
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
 
     let mut fronts = Vec::new();
@@ -209,6 +210,7 @@ pub fn fig5_convergence(rc: &RunConfig, snapshot_gens: &[usize]) -> Fig5Result {
         let fronts_ref = &mut fronts;
         let initial_ref = &mut initial;
         proposed_search(
+            &engine,
             &arch,
             &layers,
             &mut acc,
@@ -301,10 +303,12 @@ fn ablation_arms(
     let arch = presets::eyeriss();
     let layers = models::mobilenet_v1();
     let cache = MapperCache::new();
+    let engine = Engine::new(rc.threads);
     let mut out = Vec::new();
     for (label, params, nsga_cfg) in arms {
         let mut acc = ProxyAccuracy::new(&layers, params);
         let cands = proposed_search(
+            &engine,
             &arch,
             &layers,
             &mut acc,
@@ -343,11 +347,13 @@ pub fn fig6_tradeoff(rc: &RunConfig) -> Fig6Result {
     let layers = models::mobilenet_v1();
     let cache = MapperCache::new();
     let cache_other = MapperCache::new();
+    let engine = Engine::new(rc.threads);
 
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-    let uniform = uniform_sweep(&target, &layers, &mut acc, &cache, &rc.mapper, false);
-    let naive = naive_search(&target, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga);
+    let uniform = uniform_sweep(&engine, &target, &layers, &mut acc, &cache, &rc.mapper, false);
+    let naive = naive_search(&engine, &target, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga);
     let proposed = proposed_search(
+        &engine,
         &target,
         &layers,
         &mut acc,
@@ -358,6 +364,7 @@ pub fn fig6_tradeoff(rc: &RunConfig) -> Fig6Result {
     );
     // search against Simba, then re-price winners on Eyeriss
     let cross_on_simba = proposed_search(
+        &engine,
         &other,
         &layers,
         &mut acc,
@@ -411,6 +418,7 @@ pub struct Table2Row {
 /// per (arch, net, strategy) cell, as the paper does.
 pub fn table2_summary(rc: &RunConfig, per_cell: usize) -> Vec<Table2Row> {
     let mut rows = Vec::new();
+    let engine = Engine::new(rc.threads);
     for arch in [presets::eyeriss(), presets::simba()] {
         for (net_name, layers) in [
             ("MobileNetV1", models::mobilenet_v1()),
@@ -428,12 +436,14 @@ pub fn table2_summary(rc: &RunConfig, per_cell: usize) -> Vec<Table2Row> {
             .expect("uniform-8 must map");
             let ref_acc = acc.accuracy(&QuantConfig::uniform(layers.len(), 8));
 
-            let uniform = uniform_sweep(&arch, &layers, &mut acc, &cache, &rc.mapper, false);
-            let naive = naive_search(&arch, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga);
+            let uniform =
+                uniform_sweep(&engine, &arch, &layers, &mut acc, &cache, &rc.mapper, false);
+            let naive =
+                naive_search(&engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga);
             // Table II reports the memory-energy axis, so use the
             // paper's full 3-objective search (memory, energy, error)
             let proposed =
-                proposed_search3(&arch, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga);
+                proposed_search3(&engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &rc.nsga);
             for cands in [uniform, naive, proposed] {
                 rows.extend(best_cells(
                     &cands, &arch, net_name, &reference, ref_acc, per_cell,
@@ -495,33 +505,11 @@ fn best_cells(
     rows
 }
 
-// ------------------------------------------------------------- helpers
-
-/// Order-preserving parallel map over a slice using scoped std threads.
-pub fn parallel_map<T: Sync, R: Send>(
-    items: &[T],
-    threads: usize,
-    f: impl Fn(&T) -> R + Sync,
-) -> Vec<R> {
-    let n = items.len();
-    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
-    out.resize_with(n, || None);
-    let out_mutex = std::sync::Mutex::new(&mut out);
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads.max(1).min(n.max(1)) {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                out_mutex.lock().unwrap()[i] = Some(r);
-            });
-        }
-    });
-    out.into_iter().map(|x| x.unwrap()).collect()
-}
+// NOTE: the old `parallel_map` helper (scoped threads, one pool per
+// call site) is retired — ordered fan-out is `Engine::map`, and genome
+// batches go through `engine::driver::evaluate_genomes`, so one
+// scheduler owns the core budget instead of three mechanisms competing
+// for it.
 
 #[cfg(test)]
 mod tests {
@@ -598,9 +586,19 @@ mod tests {
     }
 
     #[test]
-    fn parallel_map_preserves_order() {
-        let xs: Vec<usize> = (0..100).collect();
-        let ys = parallel_map(&xs, 8, |&x| x * 2);
-        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    fn fig1_engine_eval_matches_serial_reference() {
+        // the engine fan-out behind fig1 must price genomes exactly as
+        // the serial evaluator does
+        let rc = rc();
+        let arch = presets::eyeriss();
+        let layers = models::mobilenet_v1();
+        let engine = Engine::new(rc.threads);
+        let cache_e = MapperCache::new();
+        let cache_s = MapperCache::new();
+        let qc = QuantConfig::uniform(layers.len(), 5);
+        let from_engine =
+            driver::evaluate_genomes(&engine, &arch, &layers, &[qc.clone()], &cache_e, &rc.mapper);
+        let serial = evaluate_network(&arch, &layers, &qc, &cache_s, &rc.mapper);
+        assert_eq!(from_engine[0], serial);
     }
 }

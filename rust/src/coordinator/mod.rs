@@ -33,14 +33,29 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
-    /// Profile selection for the bench harnesses: `QMAP_PROFILE` =
-    /// `fast` (CI smoke) | `default` | `full` (paper-faithful budgets),
-    /// with `QMAP_THREADS` / `QMAP_SEED` overrides.
-    pub fn from_env() -> Self {
-        let mut rc = match std::env::var("QMAP_PROFILE").as_deref() {
-            Ok("fast") => RunConfig::fast(),
-            Ok("full") => RunConfig::full(),
-            _ => RunConfig::default(),
+    /// Resolve a profile by name: `fast` (CI smoke) | `default` |
+    /// `full` (paper-faithful budgets). An unknown name is an error (it
+    /// used to be silently treated as `default`, which made typos like
+    /// `QMAP_PROFILE=fastt` run 30x longer than intended with no
+    /// warning).
+    pub fn from_profile(name: &str) -> Result<Self, String> {
+        match name {
+            "fast" => Ok(RunConfig::fast()),
+            "full" => Ok(RunConfig::full()),
+            "default" | "" => Ok(RunConfig::default()),
+            other => Err(format!(
+                "unknown QMAP_PROFILE '{other}' (valid profiles: fast, default, full)"
+            )),
+        }
+    }
+
+    /// Profile selection for the bench harnesses: `QMAP_PROFILE` (see
+    /// [`RunConfig::from_profile`]) with `QMAP_THREADS` / `QMAP_SEED` /
+    /// `QMAP_SHARDS` overrides.
+    pub fn from_env() -> Result<Self, String> {
+        let mut rc = match std::env::var("QMAP_PROFILE") {
+            Ok(p) => Self::from_profile(&p)?,
+            Err(_) => RunConfig::default(),
         };
         if let Ok(t) = std::env::var("QMAP_THREADS") {
             if let Ok(t) = t.parse() {
@@ -57,7 +72,7 @@ impl RunConfig {
                 rc.mapper.shards = s;
             }
         }
-        rc
+        Ok(rc)
     }
 
     /// Paper-faithful budgets (2000 valid mappings per workload,
@@ -95,5 +110,38 @@ impl RunConfig {
             threads: 4,
             seed: 1,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // `from_profile` is pure, so these run without touching the
+    // process-global environment (setenv during parallel tests is a
+    // data race on glibc).
+    #[test]
+    fn known_profiles_resolve() {
+        let fast = RunConfig::from_profile("fast").expect("fast is a valid profile");
+        assert_eq!(fast.mapper.valid_target, RunConfig::fast().mapper.valid_target);
+        let full = RunConfig::from_profile("full").expect("full is a valid profile");
+        assert_eq!(full.mapper.max_draws, RunConfig::full().mapper.max_draws);
+        let def = RunConfig::from_profile("default").expect("default is a valid profile");
+        assert_eq!(def.mapper.valid_target, RunConfig::default().mapper.valid_target);
+        assert_eq!(
+            RunConfig::from_profile("").expect("empty means default").mapper.valid_target,
+            RunConfig::default().mapper.valid_target
+        );
+    }
+
+    #[test]
+    fn unknown_profile_is_rejected_with_the_valid_list() {
+        let err = RunConfig::from_profile("warp-speed")
+            .expect_err("unknown profile must be rejected");
+        assert!(err.contains("warp-speed"), "{err}");
+        assert!(
+            err.contains("fast") && err.contains("default") && err.contains("full"),
+            "error must list the valid profiles: {err}"
+        );
     }
 }

@@ -1,0 +1,418 @@
+//! Generation-boundary checkpointing for long searches.
+//!
+//! A checkpoint is one JSON document holding everything a search needs
+//! to continue after an interruption and still produce a bit-identical
+//! final front:
+//!
+//! * the NSGA-II [`SearchState`] — completed-generation count, the
+//!   parent population (genomes plus objective vectors, the latter
+//!   stored as hex-encoded IEEE-754 bits so `INFINITY` objectives of
+//!   unmappable genomes and every last mantissa bit round-trip), and
+//!   the breeding RNG's raw state;
+//! * the full [`MapperCache`] dump (the ROADMAP's "batch cache
+//!   persistence"): positive entries with their summaries, negative
+//!   entries with their draw-budget tags, so a resumed search neither
+//!   re-pays finished searches nor trusts failures recorded under a
+//!   smaller budget.
+//!
+//! Writes go through a `.tmp` + rename, so an interruption mid-save
+//! leaves the previous checkpoint intact.
+
+use crate::arch::Arch;
+use crate::mapper::cache::MapperCache;
+use crate::mapper::MapperConfig;
+use crate::nsga::{Individual, NsgaConfig, SearchState};
+use crate::quant::QuantConfig;
+use crate::util::json::{parse, Json};
+use crate::util::rng::Rng;
+
+const VERSION: f64 = 1.0;
+
+/// Identity of the search a checkpoint belongs to. A checkpoint written
+/// under one configuration and resumed under another (different
+/// accelerator, network size, mapper budgets/seed, or NSGA-II breeding
+/// parameters) would silently corrupt the search — stale objectives
+/// mixed with fresh ones, a diverged RNG stream — so `load` rejects any
+/// mismatch instead. `generations` is deliberately absent: extending a
+/// finished search with more generations is a legitimate resume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchIdent {
+    pub arch: String,
+    pub num_layers: usize,
+    pub mapper_seed: u64,
+    pub valid_target: u64,
+    pub max_draws: u64,
+    pub shards: usize,
+    pub population: usize,
+    pub offspring: usize,
+    pub nsga_seed: u64,
+    pub p_mut_bits: u64,
+    pub p_mut_acc_bits: u64,
+}
+
+impl SearchIdent {
+    pub fn new(
+        arch: &Arch,
+        num_layers: usize,
+        map_cfg: &MapperConfig,
+        nsga_cfg: &NsgaConfig,
+    ) -> SearchIdent {
+        SearchIdent {
+            arch: arch.name.clone(),
+            num_layers,
+            mapper_seed: map_cfg.seed,
+            valid_target: map_cfg.valid_target,
+            max_draws: map_cfg.max_draws,
+            shards: map_cfg.shards,
+            population: nsga_cfg.population,
+            offspring: nsga_cfg.offspring,
+            nsga_seed: nsga_cfg.seed,
+            p_mut_bits: nsga_cfg.p_mut.to_bits(),
+            p_mut_acc_bits: nsga_cfg.p_mut_acc.to_bits(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.clone())),
+            ("num_layers", Json::Num(self.num_layers as f64)),
+            ("mapper_seed", Json::Str(format!("{:016x}", self.mapper_seed))),
+            ("valid_target", Json::Str(format!("{:016x}", self.valid_target))),
+            ("max_draws", Json::Str(format!("{:016x}", self.max_draws))),
+            ("shards", Json::Num(self.shards as f64)),
+            ("population", Json::Num(self.population as f64)),
+            ("offspring", Json::Num(self.offspring as f64)),
+            ("nsga_seed", Json::Str(format!("{:016x}", self.nsga_seed))),
+            ("p_mut", Json::Str(format!("{:016x}", self.p_mut_bits))),
+            ("p_mut_acc", Json::Str(format!("{:016x}", self.p_mut_acc_bits))),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<SearchIdent, String> {
+        let hex = |key: &str| -> Result<u64, String> {
+            let s = v
+                .get(key)
+                .as_str()
+                .ok_or_else(|| format!("checkpoint ident: missing {key}"))?;
+            u64::from_str_radix(s, 16).map_err(|_| format!("checkpoint ident: bad {key}"))
+        };
+        Ok(SearchIdent {
+            arch: v
+                .get("arch")
+                .as_str()
+                .ok_or("checkpoint ident: missing arch")?
+                .to_string(),
+            num_layers: v
+                .get("num_layers")
+                .as_f64()
+                .ok_or("checkpoint ident: missing num_layers")? as usize,
+            mapper_seed: hex("mapper_seed")?,
+            valid_target: hex("valid_target")?,
+            max_draws: hex("max_draws")?,
+            shards: v.get("shards").as_f64().ok_or("checkpoint ident: missing shards")? as usize,
+            population: v
+                .get("population")
+                .as_f64()
+                .ok_or("checkpoint ident: missing population")? as usize,
+            offspring: v
+                .get("offspring")
+                .as_f64()
+                .ok_or("checkpoint ident: missing offspring")? as usize,
+            nsga_seed: hex("nsga_seed")?,
+            p_mut_bits: hex("p_mut")?,
+            p_mut_acc_bits: hex("p_mut_acc")?,
+        })
+    }
+}
+
+/// Saves/loads search checkpoints at a fixed path.
+pub struct Checkpointer {
+    path: String,
+}
+
+fn hex_bits(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn bits_hex(v: &Json, what: &str) -> Result<f64, String> {
+    let s = v.as_str().ok_or_else(|| format!("{what}: not a string"))?;
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| format!("{what}: bad hex '{s}'"))
+}
+
+impl Checkpointer {
+    pub fn new(path: impl Into<String>) -> Checkpointer {
+        Checkpointer { path: path.into() }
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    pub fn exists(&self) -> bool {
+        std::path::Path::new(&self.path).exists()
+    }
+
+    /// Snapshot the search state and the mapper cache under the given
+    /// search identity. Atomic at the filesystem level (temp file +
+    /// rename).
+    pub fn save(
+        &self,
+        st: &SearchState,
+        cache: &MapperCache,
+        ident: &SearchIdent,
+    ) -> Result<(), String> {
+        let pop: Vec<Json> = st
+            .pop
+            .iter()
+            .map(|ind| {
+                Json::obj(vec![
+                    (
+                        "genome",
+                        Json::Arr(
+                            ind.genome
+                                .encode()
+                                .iter()
+                                .map(|&b| Json::Num(b as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("last_qo", Json::Num(ind.genome.last_qo as f64)),
+                    (
+                        "objectives",
+                        Json::Arr(ind.objectives.iter().map(|&x| hex_bits(x)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("version", Json::Num(VERSION)),
+            ("ident", ident.to_json()),
+            ("generation", Json::Num(st.generation as f64)),
+            ("rng", Json::Str(format!("{:016x}", st.rng.state()))),
+            ("population", Json::Arr(pop)),
+            ("cache", cache.to_json_value()),
+        ]);
+        let tmp = format!("{}.tmp", self.path);
+        std::fs::write(&tmp, doc.to_string()).map_err(|e| format!("{tmp}: {e}"))?;
+        std::fs::rename(&tmp, &self.path).map_err(|e| format!("{}: {e}", self.path))
+    }
+
+    /// Restore a checkpoint: loads the cache entries into `cache` and
+    /// returns the search state. Rejects version, search-identity, or
+    /// genome-length mismatches with a clear error instead of resuming
+    /// garbage.
+    pub fn load(&self, ident: &SearchIdent, cache: &MapperCache) -> Result<SearchState, String> {
+        let num_layers = ident.num_layers;
+        let src =
+            std::fs::read_to_string(&self.path).map_err(|e| format!("{}: {e}", self.path))?;
+        let v = parse(&src).map_err(|e| format!("{}: {e}", self.path))?;
+        if v.get("version").as_f64() != Some(VERSION) {
+            return Err(format!(
+                "{}: unsupported checkpoint version (want {VERSION})",
+                self.path
+            ));
+        }
+        let stored = SearchIdent::from_json(v.get("ident"))?;
+        if stored != *ident {
+            return Err(format!(
+                "{}: checkpoint belongs to a different search configuration — \
+                 saved {stored:?}, current {ident:?}; resuming would corrupt the \
+                 search (delete the file or restore the original flags)",
+                self.path
+            ));
+        }
+        let generation = v
+            .get("generation")
+            .as_f64()
+            .ok_or("checkpoint: missing generation")? as usize;
+        let rng_hex = v.get("rng").as_str().ok_or("checkpoint: missing rng")?;
+        let rng = Rng::new(
+            u64::from_str_radix(rng_hex, 16).map_err(|_| "checkpoint: bad rng state")?,
+        );
+        let mut pop: Vec<Individual> = Vec::new();
+        for ind in v
+            .get("population")
+            .as_arr()
+            .ok_or("checkpoint: missing population")?
+        {
+            let bytes: Vec<u8> = ind
+                .get("genome")
+                .as_arr()
+                .ok_or("checkpoint: bad genome")?
+                .iter()
+                .map(|g| {
+                    g.as_f64()
+                        .map(|x| x as u8)
+                        .ok_or_else(|| "checkpoint: bad gene".to_string())
+                })
+                .collect::<Result<_, _>>()?;
+            let last_qo = ind.get("last_qo").as_f64().unwrap_or(8.0) as u8;
+            let genome = QuantConfig::decode(&bytes, last_qo)?;
+            if genome.len() != num_layers {
+                return Err(format!(
+                    "checkpoint genome has {} layers, the network has {num_layers}",
+                    genome.len()
+                ));
+            }
+            let mut objectives = Vec::new();
+            for o in ind
+                .get("objectives")
+                .as_arr()
+                .ok_or("checkpoint: bad objectives")?
+            {
+                objectives.push(bits_hex(o, "objective")?);
+            }
+            pop.push(Individual { genome, objectives });
+        }
+        if pop.is_empty() {
+            return Err("checkpoint: empty population".into());
+        }
+        cache
+            .load_json(&v.get("cache").to_string())
+            .map_err(|e| format!("checkpoint cache: {e}"))?;
+        Ok(SearchState {
+            generation,
+            pop,
+            rng,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::toy;
+    use crate::mapper::MapperConfig;
+    use crate::quant::LayerQuant;
+    use crate::workload::ConvLayer;
+
+    fn tmp_path(tag: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("qmap_ckpt_{tag}_{}.json", std::process::id()));
+        p.to_string_lossy().into_owned()
+    }
+
+    fn ident() -> SearchIdent {
+        SearchIdent::new(&toy(), 4, &MapperConfig::default(), &NsgaConfig::default())
+    }
+
+    fn state_with_objectives(objs: Vec<Vec<f64>>) -> SearchState {
+        SearchState {
+            generation: 3,
+            pop: objs
+                .into_iter()
+                .enumerate()
+                .map(|(i, objectives)| Individual {
+                    genome: QuantConfig::uniform(4, 2 + (i as u8 % 7)),
+                    objectives,
+                })
+                .collect(),
+            rng: Rng::new(0xFEED_F00D),
+        }
+    }
+
+    #[test]
+    fn state_roundtrips_bit_exactly_including_infinities() {
+        let path = tmp_path("bits");
+        let ckpt = Checkpointer::new(path.as_str());
+        let mut st = state_with_objectives(vec![
+            vec![1.5e-9, 0.25],
+            vec![f64::INFINITY, 0.1],
+            vec![3.141592653589793, 2.2250738585072014e-308],
+        ]);
+        // advance the RNG so a non-trivial state is saved
+        for _ in 0..17 {
+            st.rng.next_u64();
+        }
+        let cache = MapperCache::new();
+        ckpt.save(&st, &cache, &ident()).unwrap();
+        let cache2 = MapperCache::new();
+        let back = ckpt.load(&ident(), &cache2).unwrap();
+        assert_eq!(back.generation, st.generation);
+        assert_eq!(back.rng.state(), st.rng.state());
+        assert_eq!(back.pop.len(), st.pop.len());
+        for (a, b) in st.pop.iter().zip(&back.pop) {
+            assert_eq!(a.genome, b.genome);
+            let ab: Vec<u64> = a.objectives.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u64> = b.objectives.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cache_rides_along_with_negative_entries() {
+        // an unmappable workload becomes a negative entry; the
+        // checkpoint must round-trip it with its draw-budget tag
+        let path = tmp_path("negcache");
+        let ckpt = Checkpointer::new(path.as_str());
+        let mut a = toy();
+        a.name = "toy-nospad".into();
+        a.levels[0].capacity = crate::arch::Capacity::PerTensor([0, 64, 64]);
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let tiny = MapperConfig {
+            valid_target: u64::MAX,
+            max_draws: 500,
+            seed: 5,
+            shards: 1,
+        };
+        let cache = MapperCache::new();
+        assert!(cache.evaluate(&a, &l, &LayerQuant::uniform(8), &tiny).is_none());
+        assert_eq!(cache.misses(), 1);
+
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        let restored = MapperCache::new();
+        ckpt.load(&ident(), &restored).unwrap();
+        // negative hit without re-searching at the recorded budget
+        assert!(restored
+            .evaluate(&a, &l, &LayerQuant::uniform(8), &tiny)
+            .is_none());
+        assert_eq!(restored.misses(), 0, "negative entry lost its budget tag");
+        assert_eq!(restored.hits(), 1);
+        // a larger budget must still re-search instead of trusting it
+        let bigger = MapperConfig {
+            max_draws: 5_000,
+            ..tiny
+        };
+        let _ = restored.evaluate(&a, &l, &LayerQuant::uniform(8), &bigger);
+        assert_eq!(restored.misses(), 1, "bigger budget served from stale negative");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_mismatched_network() {
+        let path = tmp_path("mismatch");
+        let ckpt = Checkpointer::new(path.as_str());
+        let cache = MapperCache::new();
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        // saved genomes have 4 layers; a 7-layer network must refuse
+        let mut other = ident();
+        other.num_layers = 7;
+        assert!(ckpt.load(&other, &cache).is_err());
+        // ... and so must any other drifted search parameter
+        let mut other = ident();
+        other.arch = "simba".into();
+        assert!(ckpt.load(&other, &cache).is_err());
+        let mut other = ident();
+        other.mapper_seed ^= 1;
+        assert!(ckpt.load(&other, &cache).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_missing_or_corrupt_files() {
+        let ckpt = Checkpointer::new(tmp_path("absent"));
+        assert!(!ckpt.exists());
+        assert!(ckpt.load(&ident(), &MapperCache::new()).is_err());
+
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "not json at all").unwrap();
+        let ckpt = Checkpointer::new(path.as_str());
+        assert!(ckpt.load(&ident(), &MapperCache::new()).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,372 @@
+//! The engine's typed job layer: the one way NSGA-II generations and
+//! bench harnesses fan out mapper work.
+//!
+//! The unit of scheduling is an [`EvalJob`]: one layer×quant-config
+//! mapper search, routed through the shared lock-striped
+//! [`MapperCache`]. A generation's genomes are flattened into the set
+//! of *unique* jobs (NSGA-II genomes share most of their layers, so
+//! this deduplication is also what makes the cache effective), the set
+//! runs on the work-stealing pool, and per-genome results are assembled
+//! afterwards from the job table.
+//!
+//! Two invariants make every result bit-identical to single-threaded
+//! execution (`Engine::new(1)`), regardless of worker count or steal
+//! order:
+//!
+//! * results are keyed by job id (slot index), never by completion
+//!   order, and genome assembly walks layers in index order;
+//! * a job's shard decomposition is the mapper's deterministic
+//!   [`shard_plan`](crate::mapper::shard_plan) — a pure function of the
+//!   `MapperConfig` and workload. Idle workers only change *where* the
+//!   shards execute, never what they compute, and
+//!   [`merge_shards`](crate::mapper::merge_shards) reduces them in
+//!   shard-index order.
+
+use super::checkpoint::{Checkpointer, SearchIdent};
+use super::Engine;
+use crate::accuracy::AccuracyModel;
+use crate::arch::Arch;
+use crate::baselines::Candidate;
+use crate::eval::{aggregate, NetworkEval};
+use crate::mapper::cache::{CachedEval, MapperCache};
+use crate::mapper::{self, MapperConfig};
+use crate::mapping::mapspace::MapSpace;
+use crate::mapping::LayerContext;
+use crate::nsga::{self, Individual, NsgaConfig};
+use crate::quant::{LayerQuant, QuantConfig};
+use crate::workload::ConvLayer;
+use rustc_hash::FxHashMap;
+
+/// One schedulable unit: characterize `layer` under `quant` (canonical
+/// form) on the current architecture. `layer_index` ties the job back
+/// to the network tables; jobs with identical workload hashes are
+/// deduplicated before dispatch.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalJob {
+    pub layer_index: usize,
+    pub quant: LayerQuant,
+}
+
+/// Run one workload search through the cache, executing cache misses on
+/// the engine: the mapper's shard plan runs as stealable pool subtasks
+/// when idle workers exist, inline otherwise — same shards, same merge,
+/// same bits either way.
+pub fn eval_layer(
+    engine: &Engine,
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    cache: &MapperCache,
+    cfg: &MapperConfig,
+) -> Option<CachedEval> {
+    if let Some(res) = cache.probe(arch, layer, q, cfg) {
+        return res;
+    }
+    let r = search_on_engine(engine, arch, layer, q, cfg);
+    cache.insert_search(arch, layer, q, cfg, &r)
+}
+
+/// The engine-side twin of [`mapper::search`]: identical decomposition
+/// ([`mapper::shard_plan`]) and identical reduction
+/// ([`mapper::merge_shards`]), but the shards execute as pool subtasks
+/// *only when idle workers exist* — otherwise the owning worker runs
+/// them sequentially. Both paths are bit-identical to each other and to
+/// `mapper::search` for the same `MapperConfig`.
+pub fn search_on_engine(
+    engine: &Engine,
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    cfg: &MapperConfig,
+) -> mapper::MapperResult {
+    let q = q.canonical(arch.word_bits, arch.bit_packing);
+    let space = MapSpace::of(arch);
+    let lctx = LayerContext::new(arch, layer, &q);
+    let specs = mapper::shard_plan(cfg, cfg.seed ^ mapper::workload_hash(layer, &q));
+    let outcomes = if specs.len() > 1 && engine.pool().idle_workers() > 0 {
+        engine.note_split();
+        engine.map(&specs, |s| mapper::run_shard(&space, &lctx, s))
+    } else {
+        specs.iter().map(|s| mapper::run_shard(&space, &lctx, s)).collect()
+    };
+    mapper::merge_shards(outcomes)
+}
+
+/// Evaluate a population of genomes on the engine: deduplicate the
+/// layer×quant workloads across all genomes into unique [`EvalJob`]s,
+/// run them on the pool, then assemble each genome's [`NetworkEval`]
+/// from the job table (`None` if any of its layers is unmappable).
+///
+/// Replaces both `coordinator::parallel_map` over
+/// `eval::evaluate_network` and the retired `evaluate_network_parallel`
+/// as the fan-out path, with one scheduler and no duplicated searches
+/// within a generation.
+pub fn evaluate_genomes(
+    engine: &Engine,
+    arch: &Arch,
+    layers: &[ConvLayer],
+    genomes: &[QuantConfig],
+    cache: &MapperCache,
+    cfg: &MapperConfig,
+) -> Vec<Option<NetworkEval>> {
+    if genomes.is_empty() {
+        return Vec::new();
+    }
+    // A genome with a negative-cached layer is already dead: don't
+    // schedule its workloads (a live genome sharing one still will).
+    // This restores the serial evaluator's short-circuit economics for
+    // repeat offenders; the assembly below still evaluates any
+    // uncached layers of a dead genome serially up to the dead layer,
+    // exactly as the serial path would.
+    let alive: Vec<bool> = genomes
+        .iter()
+        .map(|qc| {
+            assert_eq!(qc.len(), layers.len(), "genome/layer-count mismatch");
+            (0..layers.len())
+                .all(|i| cache.probe(arch, &layers[i], &qc.layer(i), cfg) != Some(None))
+        })
+        .collect();
+    // unique jobs across the live population, in first-encounter order
+    let mut index: FxHashMap<u64, usize> = FxHashMap::default();
+    let mut jobs: Vec<EvalJob> = Vec::new();
+    for (gi, qc) in genomes.iter().enumerate() {
+        if !alive[gi] {
+            continue;
+        }
+        for i in 0..layers.len() {
+            let quant = qc.layer(i).canonical(arch.word_bits, arch.bit_packing);
+            let h = mapper::workload_hash(&layers[i], &quant);
+            if !index.contains_key(&h) {
+                index.insert(h, jobs.len());
+                jobs.push(EvalJob {
+                    layer_index: i,
+                    quant,
+                });
+            }
+        }
+    }
+    engine.note_jobs(jobs.len() as u64);
+    let _results: Vec<Option<CachedEval>> = engine.map(&jobs, |job| {
+        eval_layer(
+            engine,
+            arch,
+            &layers[job.layer_index],
+            &job.quant,
+            cache,
+            cfg,
+        )
+    });
+    // assemble per genome through the cache (every probe is a hit: the
+    // job phase above inserted a positive or negative entry for each
+    // unique workload), walking layers in index order and
+    // short-circuiting dead genomes exactly like the serial evaluator
+    genomes
+        .iter()
+        .map(|qc| {
+            let mut per: Vec<Option<CachedEval>> = Vec::with_capacity(layers.len());
+            for (i, l) in layers.iter().enumerate() {
+                match cache.evaluate(arch, l, &qc.layer(i), cfg) {
+                    Some(e) => per.push(Some(e)),
+                    None => return None, // unmappable layer: genome is dead
+                }
+            }
+            aggregate(arch, layers, qc, &per)
+        })
+        .collect()
+}
+
+/// Engine-scheduled single-network characterization (the one-genome
+/// case of [`evaluate_genomes`]). Against a fresh cache it does not
+/// short-circuit on the first unmappable layer the way the serial
+/// [`eval::evaluate_network`](crate::eval::evaluate_network) does —
+/// the unique jobs run concurrently — but once the failure is
+/// negative-cached, later calls skip the genome's workloads entirely,
+/// and the returned value is identical either way.
+pub fn evaluate_network(
+    engine: &Engine,
+    arch: &Arch,
+    layers: &[ConvLayer],
+    qc: &QuantConfig,
+    cache: &MapperCache,
+    cfg: &MapperConfig,
+) -> Option<NetworkEval> {
+    evaluate_genomes(engine, arch, layers, std::slice::from_ref(qc), cache, cfg)
+        .pop()
+        .expect("one genome in, one result out")
+}
+
+/// The paper's hardware-aware NSGA-II search (objectives: EDP on the
+/// target accelerator, CNN error), scheduled on the engine and
+/// checkpointed to `ckpt` at every generation boundary — population,
+/// breeding-RNG state, and the mapper cache (negative entries keep
+/// their draw-budget tags). With `resume` and an existing checkpoint
+/// file, the search continues where it stopped and produces a final
+/// front bit-identical to an uninterrupted run.
+#[allow(clippy::too_many_arguments)]
+pub fn search_resumable(
+    engine: &Engine,
+    arch: &Arch,
+    layers: &[ConvLayer],
+    acc: &mut dyn AccuracyModel,
+    cache: &MapperCache,
+    map_cfg: &MapperConfig,
+    nsga_cfg: &NsgaConfig,
+    ckpt: &Checkpointer,
+    resume: bool,
+    mut on_generation: impl FnMut(usize, &[Individual]),
+) -> Result<Vec<Candidate>, String> {
+    let mut evaluate = |genomes: &[QuantConfig]| -> Vec<Vec<f64>> {
+        let evals = evaluate_genomes(engine, arch, layers, genomes, cache, map_cfg);
+        genomes
+            .iter()
+            .zip(&evals)
+            .map(|(g, e)| {
+                let err = 1.0 - acc.accuracy(g);
+                let edp = e.as_ref().map(|e| e.edp).unwrap_or(f64::INFINITY);
+                vec![edp, err]
+            })
+            .collect()
+    };
+
+    let ident = SearchIdent::new(arch, layers.len(), map_cfg, nsga_cfg);
+    let mut st = if resume && ckpt.exists() {
+        ckpt.load(&ident, cache)?
+    } else {
+        let st = nsga::init_state(layers.len(), nsga_cfg, &mut evaluate);
+        on_generation(0, &st.pop);
+        ckpt.save(&st, cache, &ident)?;
+        st
+    };
+    while st.generation < nsga_cfg.generations {
+        nsga::step(&mut st, nsga_cfg, &mut evaluate);
+        on_generation(st.generation, &st.pop);
+        ckpt.save(&st, cache, &ident)?;
+    }
+
+    let front = nsga::final_front(&st.pop);
+    Ok(front
+        .into_iter()
+        .filter_map(|ind| {
+            let hw = evaluate_network(engine, arch, layers, &ind.genome, cache, map_cfg)?;
+            Some(Candidate {
+                accuracy: acc.accuracy(&ind.genome),
+                genome: ind.genome,
+                hw,
+                strategy: "proposed",
+            })
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::toy;
+    use crate::eval;
+
+    fn net() -> Vec<ConvLayer> {
+        vec![
+            ConvLayer::conv("c1", 3, 8, 3, 16, 1),
+            ConvLayer::dw("d1", 8, 3, 16, 1),
+            ConvLayer::pw("p1", 8, 16, 16),
+            ConvLayer::fc("fc", 16, 10),
+        ]
+    }
+
+    fn cfg(shards: usize) -> MapperConfig {
+        MapperConfig {
+            valid_target: 40,
+            max_draws: 40_000,
+            seed: 2,
+            shards,
+        }
+    }
+
+    #[test]
+    fn engine_network_eval_is_bit_identical_to_serial() {
+        let a = toy();
+        let layers = net();
+        for shards in [1usize, 3] {
+            let c = cfg(shards);
+            let qc = QuantConfig::uniform(layers.len(), 4);
+            let serial_cache = MapperCache::new();
+            let serial = eval::evaluate_network(&a, &layers, &qc, &serial_cache, &c).unwrap();
+            for workers in [1usize, 2, 4, 8] {
+                let engine = Engine::new(workers);
+                let cache = MapperCache::new();
+                let got = evaluate_network(&engine, &a, &layers, &qc, &cache, &c).unwrap();
+                assert_eq!(serial, got, "workers={workers} shards={shards}");
+                assert_eq!(serial.edp.to_bits(), got.edp.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn generation_dedup_searches_each_workload_once() {
+        let a = toy();
+        let layers = net();
+        let c = cfg(1);
+        let engine = Engine::new(4);
+        let cache = MapperCache::new();
+        // two genomes differing only in layer 0 → distinct workloads =
+        // (4 + 1) minus pack-class overlaps; every job searched once
+        let g1 = QuantConfig::uniform(layers.len(), 8);
+        let mut g2 = QuantConfig::uniform(layers.len(), 8);
+        g2.layers[0] = (4, 4);
+        let genomes = vec![g1, g2];
+        let evals = evaluate_genomes(&engine, &a, &layers, &genomes, &cache, &c);
+        assert_eq!(evals.len(), 2);
+        assert!(evals[0].is_some() && evals[1].is_some());
+        // every unique workload was searched exactly once
+        assert_eq!(cache.misses() as usize, cache.len());
+        let misses_before = cache.misses();
+        // re-evaluating the same genomes costs zero new searches
+        let again = evaluate_genomes(&engine, &a, &layers, &genomes, &cache, &c);
+        assert_eq!(evals, again);
+        assert_eq!(cache.misses(), misses_before);
+    }
+
+    #[test]
+    fn unmappable_layer_yields_none_like_serial() {
+        let mut a = toy();
+        a.name = "toy-nospad".into();
+        a.levels[0].capacity = crate::arch::Capacity::PerTensor([0, 64, 64]);
+        let layers = net();
+        let c = cfg(1);
+        let qc = QuantConfig::uniform(layers.len(), 8);
+        let serial_cache = MapperCache::new();
+        assert!(eval::evaluate_network(&a, &layers, &qc, &serial_cache, &c).is_none());
+        let engine = Engine::new(3);
+        let cache = MapperCache::new();
+        assert!(evaluate_network(&engine, &a, &layers, &qc, &cache, &c).is_none());
+    }
+
+    #[test]
+    fn population_results_independent_of_worker_count() {
+        let a = toy();
+        let layers = net();
+        let c = cfg(2); // sharded jobs: exercises the split path too
+        let mut rng = crate::util::rng::Rng::new(77);
+        let genomes: Vec<QuantConfig> = (0..6)
+            .map(|_| {
+                let mut g = QuantConfig::uniform(layers.len(), 8);
+                for l in g.layers.iter_mut() {
+                    l.0 = 2 + rng.below(7) as u8;
+                    l.1 = 2 + rng.below(7) as u8;
+                }
+                g
+            })
+            .collect();
+        let reference: Vec<Option<NetworkEval>> = {
+            let engine = Engine::new(1);
+            let cache = MapperCache::new();
+            evaluate_genomes(&engine, &a, &layers, &genomes, &cache, &c)
+        };
+        for workers in [2usize, 4, 8] {
+            let engine = Engine::new(workers);
+            let cache = MapperCache::new();
+            let got = evaluate_genomes(&engine, &a, &layers, &genomes, &cache, &c);
+            assert_eq!(reference, got, "workers={workers}");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! The execution engine: one scheduler for every fan-out in the system.
+//!
+//! The paper's method is a large pile of independent
+//! `(layer, q_a, q_w) → mapper search` evaluations driven by NSGA-II
+//! (§III-C). Before this subsystem, three ad-hoc mechanisms fought each
+//! other for cores: `parallel_map`'s scoped threads, per-network layer
+//! threads in `eval`, and `MapperConfig::shards` inside a single
+//! workload. The engine replaces all three with one work-stealing pool
+//! that owns the process-wide core budget:
+//!
+//! * [`pool`] — the executor: per-worker deques + a global injector,
+//!   plain `std` primitives, nested fan-outs, caller participation.
+//! * [`driver`] — the typed job layer: an `EvalJob` is one
+//!   layer×quant-config mapper search through the shared
+//!   [`MapperCache`](crate::mapper::cache::MapperCache); generations
+//!   deduplicate jobs across genomes and a job splits into the mapper's
+//!   deterministic shard subtasks *only when idle workers exist*.
+//!   Results are keyed by job id and merged in index order, so every
+//!   output is bit-identical to single-threaded execution regardless of
+//!   worker count or steal order.
+//! * [`checkpoint`] — generation-boundary snapshots of the NSGA-II
+//!   search state plus the mapper cache (negative entries keep their
+//!   draw-budget tags), so long searches survive interruption and
+//!   resume to bit-identical final fronts.
+//!
+//! This is also the seam the ROADMAP's distributed multi-host search
+//! plugs into: shard seeds are position-independent, so remote workers
+//! can execute the same `ShardSpec`s and merge through the same
+//! deterministic reduction.
+
+pub mod checkpoint;
+pub mod driver;
+pub mod pool;
+
+pub use checkpoint::Checkpointer;
+pub use pool::{Pool, ScopedTask};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// The engine: a work-stealing [`Pool`] plus job-level accounting.
+/// Create one per process (or per experiment) with the global core
+/// budget; every fan-out — NSGA-II generations, bench harnesses,
+/// network characterizations — goes through it.
+pub struct Engine {
+    pool: Pool,
+    jobs: AtomicU64,
+    splits: AtomicU64,
+}
+
+/// A point-in-time snapshot of the engine's counters.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineStats {
+    /// Total concurrency budget (workers + the submitting thread).
+    pub workers: usize,
+    /// `EvalJob`s dispatched (one per unique layer×quant workload).
+    pub jobs: u64,
+    /// Jobs that split into shard subtasks because idle workers existed.
+    pub splits: u64,
+    /// Pool tasks executed (jobs + shard subtasks + helper drains).
+    pub tasks: u64,
+    /// Tasks taken from another worker's deque.
+    pub steals: u64,
+    /// Workers parked at the moment of the snapshot.
+    pub idle_now: usize,
+}
+
+impl Engine {
+    /// An engine with a concurrency budget of `budget` threads
+    /// (`0` = all available cores). `Engine::new(1)` executes
+    /// everything inline — the serial baseline every parallel run is
+    /// bit-identical to.
+    pub fn new(budget: usize) -> Engine {
+        Engine {
+            pool: Pool::new(budget),
+            jobs: AtomicU64::new(0),
+            splits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// The engine's concurrency budget.
+    pub fn workers(&self) -> usize {
+        self.pool.budget()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            workers: self.pool.budget(),
+            jobs: self.jobs.load(Ordering::Relaxed),
+            splits: self.splits.load(Ordering::Relaxed),
+            tasks: self.pool.tasks_executed(),
+            steals: self.pool.steals(),
+            idle_now: self.pool.idle_workers(),
+        }
+    }
+
+    pub(crate) fn note_jobs(&self, n: u64) {
+        self.jobs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_split(&self) {
+        self.splits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Order-preserving parallel map over a slice: the engine's
+    /// replacement for the retired `coordinator::parallel_map`. Results
+    /// land in slots keyed by item index, so the output order (and every
+    /// value in it) is independent of worker count and steal order.
+    pub fn map<T, R>(&self, items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        {
+            let f = &f;
+            let slots = &slots;
+            let mut tasks: Vec<ScopedTask> = Vec::with_capacity(n);
+            for (i, item) in items.iter().enumerate() {
+                tasks.push(Box::new(move || {
+                    let r = f(item);
+                    *slots[i].lock().unwrap() = Some(r);
+                }));
+            }
+            self.pool.run_scoped(tasks);
+        }
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("engine task completed"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order_for_any_worker_count() {
+        let xs: Vec<usize> = (0..100).collect();
+        let expect: Vec<usize> = xs.iter().map(|x| x * 2).collect();
+        for budget in [1usize, 2, 4, 8] {
+            let engine = Engine::new(budget);
+            assert_eq!(engine.map(&xs, |&x| x * 2), expect, "budget={budget}");
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_input() {
+        let engine = Engine::new(2);
+        let out: Vec<u32> = engine.map(&[] as &[u32], |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn stats_count_tasks() {
+        let engine = Engine::new(3);
+        let xs: Vec<u64> = (0..50).collect();
+        let _ = engine.map(&xs, |&x| x + 1);
+        let st = engine.stats();
+        assert_eq!(st.workers, 3);
+        assert!(st.tasks >= 50, "tasks={}", st.tasks);
+    }
+}

@@ -1,0 +1,475 @@
+//! The work-stealing executor behind the engine.
+//!
+//! One [`Pool`] owns the process-wide core budget: `budget - 1` worker
+//! threads plus the submitting thread, which always participates in the
+//! fan-outs it starts. Work lives in per-worker deques (owners push and
+//! pop the back, LIFO; thieves take the front, FIFO) plus a global FIFO
+//! injector for top-level submissions — the classic Chase–Lev shape,
+//! built from plain `std` primitives (`Mutex`/`Condvar`/atomics) because
+//! no external crates are available offline.
+//!
+//! The pool deliberately has no opinion about *what* runs: it executes
+//! erased `FnOnce` tasks. Determinism is the caller's property — the
+//! engine's jobs write results keyed by job id and merge in index order,
+//! so steal order and worker count never show up in the output (see
+//! `engine::driver`).
+//!
+//! Nesting is supported and is how adaptive shard-splitting works: a
+//! task already running on a worker may call [`Pool::run_scoped`] again;
+//! its subtasks go to that worker's own deque, where idle workers steal
+//! them while the owner drains the rest itself.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A pool task with its borrows erased to `'static` by
+/// [`Pool::run_scoped`] — sound because that call does not return until
+/// every task it submitted has completed.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A task that may borrow data from the submitting scope.
+pub type ScopedTask<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+struct Shared {
+    /// Global FIFO: top-level (non-worker) submissions land here.
+    injector: Mutex<VecDeque<Task>>,
+    /// Per-worker deques: owner pushes/pops the back, thieves steal the
+    /// front.
+    locals: Vec<Mutex<VecDeque<Task>>>,
+    /// Workers currently parked on the condvar.
+    idle: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Submitters notify under this lock and parked workers re-check the
+    /// queues under it before sleeping, so no wakeup is ever lost.
+    gate: Mutex<()>,
+    cv: Condvar,
+    executed: AtomicU64,
+    steals: AtomicU64,
+}
+
+thread_local! {
+    /// `(pool identity, worker index)` when the current thread is a pool
+    /// worker — lets nested fan-outs target the worker's own deque.
+    static WORKER: std::cell::Cell<Option<(usize, usize)>> =
+        std::cell::Cell::new(None);
+}
+
+fn shared_id(s: &Arc<Shared>) -> usize {
+    Arc::as_ptr(s) as usize
+}
+
+impl Shared {
+    fn has_work(&self) -> bool {
+        if !self.injector.lock().unwrap().is_empty() {
+            return true;
+        }
+        self.locals.iter().any(|q| !q.lock().unwrap().is_empty())
+    }
+
+    /// Worker `me`'s next task: own back (LIFO), then the injector,
+    /// then steal a neighbour's front (FIFO).
+    fn find_task(&self, me: usize) -> Option<Task> {
+        if let Some(t) = self.locals[me].lock().unwrap().pop_back() {
+            return Some(t);
+        }
+        if let Some(t) = self.injector.lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        for k in 1..self.locals.len() {
+            let victim = (me + k) % self.locals.len();
+            if let Some(t) = self.locals[victim].lock().unwrap().pop_front() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    WORKER.with(|w| w.set(Some((shared_id(&shared), me))));
+    loop {
+        if let Some(t) = shared.find_task(me) {
+            t();
+            continue;
+        }
+        let guard = shared.gate.lock().unwrap();
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        if shared.has_work() {
+            drop(guard);
+            continue;
+        }
+        shared.idle.fetch_add(1, Ordering::SeqCst);
+        let guard = shared.cv.wait(guard).unwrap();
+        shared.idle.fetch_sub(1, Ordering::SeqCst);
+        drop(guard);
+    }
+}
+
+/// One fan-out in flight: the scope's tasks in claimable slots, the
+/// claim counter, and the completion latch. Helpers — idle workers that
+/// popped a stub, and the submitting thread itself — call [`help`]:
+/// claim a slot index, take the task, run it, complete the latch.
+/// Nobody executing inside a scope ever runs a *different* scope's
+/// tasks, so nesting depth is bounded by real nesting (generation →
+/// job → shards), never by queue contents.
+///
+/// [`help`]: ScopeState::help
+struct ScopeState {
+    slots: Vec<Mutex<Option<Task>>>,
+    next: AtomicUsize,
+    latch: Latch,
+    shared: Arc<Shared>,
+}
+
+impl ScopeState {
+    fn help(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.slots.len() {
+                break;
+            }
+            // fetch_add hands out each index exactly once, so the slot
+            // is always occupied; the Option guards double-execution
+            // anyway
+            if let Some(t) = self.slots[i].lock().unwrap().take() {
+                self.shared.executed.fetch_add(1, Ordering::Relaxed);
+                let r = catch_unwind(AssertUnwindSafe(t));
+                self.latch.complete(r.err());
+            }
+        }
+    }
+}
+
+/// Completion latch for one `run_scoped` fan-out; also carries the first
+/// captured panic so it can be re-raised on the submitting thread.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(n),
+            cv: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn std::any::Any + Send + 'static>>) {
+        if let Some(p) = panic {
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+        drop(r);
+        if let Some(p) = self.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Work-stealing thread pool with a fixed concurrency budget.
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    budget: usize,
+}
+
+impl Pool {
+    /// A pool with a total concurrency budget of `budget` threads
+    /// (`0` = all available cores): the submitting thread participates
+    /// in every fan-out it starts, so `budget - 1` worker threads are
+    /// spawned. `budget == 1` spawns nothing and executes every task
+    /// inline on the caller — a true serial baseline.
+    pub fn new(budget: usize) -> Pool {
+        let budget = if budget == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            budget
+        };
+        let workers = budget - 1;
+        let shared = Arc::new(Shared {
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            idle: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+            executed: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|me| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("qmap-engine-{me}"))
+                    .spawn(move || worker_loop(shared, me))
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        Pool {
+            shared,
+            handles,
+            budget,
+        }
+    }
+
+    /// The total concurrency budget (worker threads + the caller).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Workers parked right now. Advisory only — it drives the
+    /// shard-split *execution* heuristic, never the decomposition, so
+    /// results cannot depend on it.
+    pub fn idle_workers(&self) -> usize {
+        self.shared.idle.load(Ordering::Relaxed)
+    }
+
+    /// Tasks executed so far (workers + helping submitters).
+    pub fn tasks_executed(&self) -> u64 {
+        self.shared.executed.load(Ordering::Relaxed)
+    }
+
+    /// Tasks a worker took from another worker's deque.
+    pub fn steals(&self) -> u64 {
+        self.shared.steals.load(Ordering::Relaxed)
+    }
+
+    /// Execute every task to completion across the pool's workers plus
+    /// the calling thread; returns once all are done. Tasks may borrow
+    /// from the caller's stack: the borrow is erased to `'static`
+    /// internally, which is sound because this function neither returns
+    /// nor unwinds until every submitted task has completed. A panic
+    /// inside a task is captured, the remaining tasks still run, and
+    /// the first panic is re-raised here.
+    ///
+    /// The scope's tasks sit in claimable slots; what goes on the
+    /// queues are cheap helper *stubs* (one per pool worker, capped by
+    /// the task count) that claim slots until none remain. Called from
+    /// a pool worker (a nested fan-out, e.g. a job splitting into
+    /// mapper shards), the stubs land on that worker's own deque where
+    /// idle workers steal them; the caller claims the rest itself, so
+    /// completion never depends on any stub actually running.
+    pub fn run_scoped<'scope>(&self, tasks: Vec<ScopedTask<'scope>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        // SAFETY: the lifetime erasure is sound because `latch.wait()`
+        // at the end of this function blocks until all `n` tasks have
+        // completed (the caller's `help` claims every slot no stub got
+        // to), so every `'scope` borrow outlives its task's execution.
+        // Leftover stubs executed after this scope ends only see empty
+        // slots.
+        let slots: Vec<Mutex<Option<Task>>> = tasks
+            .into_iter()
+            .map(|t| {
+                Mutex::new(Some(unsafe {
+                    std::mem::transmute::<ScopedTask<'scope>, Task>(t)
+                }))
+            })
+            .collect();
+        let state = Arc::new(ScopeState {
+            slots,
+            next: AtomicUsize::new(0),
+            latch: Latch::new(n),
+            shared: Arc::clone(&self.shared),
+        });
+        let stubs = n.saturating_sub(1).min(self.shared.locals.len());
+        if stubs > 0 {
+            let me = WORKER
+                .with(|w| w.get())
+                .filter(|&(pool, _)| pool == shared_id(&self.shared))
+                .map(|(_, idx)| idx);
+            {
+                let mut helpers: Vec<Task> = Vec::with_capacity(stubs);
+                for _ in 0..stubs {
+                    let st = Arc::clone(&state);
+                    helpers.push(Box::new(move || st.help()));
+                }
+                match me {
+                    Some(idx) => self.shared.locals[idx].lock().unwrap().extend(helpers),
+                    None => self.shared.injector.lock().unwrap().extend(helpers),
+                }
+            }
+            let _g = self.shared.gate.lock().unwrap();
+            if stubs == 1 {
+                self.shared.cv.notify_one();
+            } else {
+                self.shared.cv.notify_all();
+            }
+        }
+        state.help();
+        state.latch.wait();
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let _g = self.shared.gate.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+            self.shared.cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn scoped<'a>(f: impl FnOnce() + Send + 'a) -> ScopedTask<'a> {
+        Box::new(f)
+    }
+
+    #[test]
+    fn runs_every_task_once() {
+        for budget in [1usize, 2, 4, 8] {
+            let pool = Pool::new(budget);
+            let counter = AtomicUsize::new(0);
+            let tasks: Vec<ScopedTask> = (0..200)
+                .map(|_| {
+                    scoped(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+                .collect();
+            pool.run_scoped(tasks);
+            assert_eq!(counter.load(Ordering::Relaxed), 200, "budget={budget}");
+        }
+    }
+
+    #[test]
+    fn tasks_can_borrow_the_callers_stack() {
+        let pool = Pool::new(4);
+        let data: Vec<u64> = (0..64).collect();
+        let slots: Vec<Mutex<u64>> = (0..64).map(|_| Mutex::new(0)).collect();
+        {
+            let data = &data;
+            let slots = &slots;
+            let tasks: Vec<ScopedTask> = (0..64)
+                .map(|i| scoped(move || *slots[i].lock().unwrap() = data[i] * 3))
+                .collect();
+            pool.run_scoped(tasks);
+        }
+        for (i, s) in slots.iter().enumerate() {
+            assert_eq!(*s.lock().unwrap(), i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn nested_fanout_completes() {
+        let pool = Pool::new(4);
+        let total = AtomicUsize::new(0);
+        {
+            let pool_ref = &pool;
+            let total = &total;
+            let outer: Vec<ScopedTask> = (0..8)
+                .map(|_| {
+                    scoped(move || {
+                        let inner: Vec<ScopedTask> = (0..8)
+                            .map(|_| {
+                                scoped(move || {
+                                    total.fetch_add(1, Ordering::Relaxed);
+                                })
+                            })
+                            .collect();
+                        pool_ref.run_scoped(inner);
+                    })
+                })
+                .collect();
+            pool.run_scoped(outer);
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn pool_survives_many_fanouts() {
+        let pool = Pool::new(3);
+        for round in 0..50 {
+            let sum = AtomicUsize::new(0);
+            {
+                let sum = &sum;
+                let tasks: Vec<ScopedTask> =
+                    (0..10).map(|i| scoped(move || {
+                        sum.fetch_add(i, Ordering::Relaxed);
+                    })).collect();
+                pool.run_scoped(tasks);
+            }
+            assert_eq!(sum.load(Ordering::Relaxed), 45, "round {round}");
+        }
+        assert!(pool.tasks_executed() >= 500);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn task_panic_propagates_to_submitter() {
+        let pool = Pool::new(2);
+        let tasks: Vec<ScopedTask> = vec![
+            scoped(|| {}),
+            scoped(|| panic!("boom")),
+            scoped(|| {}),
+        ];
+        pool.run_scoped(tasks);
+    }
+
+    #[test]
+    fn panic_does_not_kill_the_pool() {
+        let pool = Pool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(vec![scoped(|| panic!("first"))]);
+        }));
+        assert!(r.is_err());
+        // the pool still executes later fan-outs
+        let ok = AtomicUsize::new(0);
+        {
+            let ok = &ok;
+            pool.run_scoped((0..20).map(|_| scoped(move || {
+                ok.fetch_add(1, Ordering::Relaxed);
+            })).collect());
+        }
+        assert_eq!(ok.load(Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn budget_one_is_inline() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.budget(), 1);
+        assert_eq!(pool.idle_workers(), 0);
+        let tid = std::thread::current().id();
+        let ran_on = Mutex::new(None);
+        {
+            let ran_on = &ran_on;
+            pool.run_scoped(vec![scoped(move || {
+                *ran_on.lock().unwrap() = Some(std::thread::current().id());
+            })]);
+        }
+        assert_eq!(*ran_on.lock().unwrap(), Some(tid));
+    }
+}

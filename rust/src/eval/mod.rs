@@ -9,7 +9,6 @@ use crate::mapper::cache::{CachedEval, MapperCache};
 use crate::mapper::MapperConfig;
 use crate::quant::QuantConfig;
 use crate::workload::ConvLayer;
-use std::sync::Mutex;
 
 /// Aggregated hardware metrics of one quantized network on one
 /// accelerator.
@@ -51,49 +50,18 @@ pub fn evaluate_network(
     aggregate(arch, layers, qc, &per_layer)
 }
 
-/// Parallel variant: splits layers across `threads` std threads. The
-/// cache is shared, so concurrent NSGA-II evaluations de-duplicate work.
-/// An unmappable layer raises a stop flag; workers drain instead of
-/// characterizing the rest of a genome whose result is already `None`.
-pub fn evaluate_network_parallel(
-    arch: &Arch,
-    layers: &[ConvLayer],
-    qc: &QuantConfig,
-    cache: &MapperCache,
-    cfg: &MapperConfig,
-    threads: usize,
-) -> Option<NetworkEval> {
-    assert_eq!(layers.len(), qc.len());
-    let n = layers.len();
-    let results: Mutex<Vec<Option<CachedEval>>> = Mutex::new(vec![None; n]);
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let failed = std::sync::atomic::AtomicBool::new(false);
-    std::thread::scope(|s| {
-        for _ in 0..threads.max(1).min(n) {
-            s.spawn(|| loop {
-                if failed.load(std::sync::atomic::Ordering::Relaxed) {
-                    break;
-                }
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = cache.evaluate(arch, &layers[i], &qc.layer(i), cfg);
-                if r.is_none() {
-                    failed.store(true, std::sync::atomic::Ordering::Relaxed);
-                }
-                results.lock().unwrap()[i] = r;
-            });
-        }
-    });
-    if failed.load(std::sync::atomic::Ordering::Relaxed) {
-        return None;
-    }
-    let per_layer = results.into_inner().unwrap();
-    aggregate(arch, layers, qc, &per_layer)
-}
+// NOTE: the old `evaluate_network_parallel` (per-network scoped
+// threads) is retired: parallel characterization now goes through
+// `engine::driver::{evaluate_network, evaluate_genomes}`, which
+// schedules one deduplicated job per layer×quant workload on the
+// process-wide work-stealing pool and produces bit-identical results
+// for any worker count.
 
-fn aggregate(
+/// Sum per-layer summaries into a [`NetworkEval`] (the paper's "total
+/// energy is a sum over workloads"; same for latency). `None` if any
+/// layer is missing. Shared by the serial path above and the engine
+/// driver's per-genome assembly.
+pub fn aggregate(
     arch: &Arch,
     layers: &[ConvLayer],
     qc: &QuantConfig,
@@ -167,14 +135,18 @@ mod tests {
     }
 
     #[test]
-    fn parallel_matches_serial() {
+    fn engine_matches_serial() {
+        // the engine driver is the replacement for the retired
+        // per-network thread fan-out; it must agree bit-for-bit
         let a = toy();
         let net = small_net();
         let qc = QuantConfig::uniform(net.len(), 4);
         let c1 = MapperCache::new();
         let c2 = MapperCache::new();
         let serial = evaluate_network(&a, &net, &qc, &c1, &cfg()).unwrap();
-        let parallel = evaluate_network_parallel(&a, &net, &qc, &c2, &cfg(), 4).unwrap();
+        let engine = crate::engine::Engine::new(4);
+        let parallel =
+            crate::engine::driver::evaluate_network(&engine, &a, &net, &qc, &c2, &cfg()).unwrap();
         assert_eq!(serial, parallel);
     }
 
@@ -207,8 +179,6 @@ mod tests {
         assert!(evaluate_network(&a, &net, &qc, &cache, &cfg()).is_none());
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.hits(), 1);
-        // the parallel variant also returns None
-        assert!(evaluate_network_parallel(&a, &net, &qc, &cache, &cfg(), 4).is_none());
     }
 
     #[test]

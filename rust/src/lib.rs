@@ -21,6 +21,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod data;
 pub mod energy;
+pub mod engine;
 pub mod eval;
 pub mod mapper;
 pub mod mapping;

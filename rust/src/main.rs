@@ -9,6 +9,7 @@ use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
 use qmap::arch::{presets, Arch};
 use qmap::baselines::{naive_search, proposed_search, uniform_sweep};
 use qmap::coordinator::{experiments, RunConfig};
+use qmap::engine::{driver, Checkpointer, Engine};
 use qmap::eval::evaluate_network;
 use qmap::mapper::cache::MapperCache;
 use qmap::mapper::{self, MapperConfig};
@@ -36,7 +37,13 @@ characterize:
   eval      [--arch A] [--net N] (--bits 8 | --genome 8/8,6/4,...)
                                                              full-network metrics
   search    [--arch A] [--net N] [--strategy proposed|naive|uniform]
-            [--gens 20] [--pop 32] [--offspring 16]          NSGA-II / baseline search
+            [--gens 20] [--pop 32] [--offspring 16]
+            [--checkpoint file.json [--resume]]              NSGA-II / baseline search
+                                                             (checkpointed per generation)
+
+engine:
+  engine-stats [--workers N]                                 work-stealing pool self-test:
+                                                             scaling rows + steal/split counters
 
 paper artifacts (same engines as `cargo bench`):
   fig1 [--n 250] | table1 | fig3 | fig4 | fig5 | fig6 | table2
@@ -53,7 +60,7 @@ fn main() {
         print!("{USAGE}");
         std::process::exit(2);
     };
-    let args = match Args::parse(&argv[1..], &["help", "csv", "no-packing", "emit"]) {
+    let args = match Args::parse(&argv[1..], &["help", "csv", "no-packing", "emit", "resume"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -67,7 +74,13 @@ fn main() {
     if let Some(p) = args.get("profile") {
         std::env::set_var("QMAP_PROFILE", p);
     }
-    let mut rc = RunConfig::from_env();
+    let mut rc = match RunConfig::from_env() {
+        Ok(rc) => rc,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
     rc.threads = args.usize_or("threads", rc.threads);
     rc.seed = args.u64_or("seed", rc.seed);
 
@@ -78,6 +91,7 @@ fn main() {
         "enumerate" => cmd_enumerate(&args),
         "eval" => cmd_eval(&args, &rc),
         "search" => cmd_search(&args, &rc),
+        "engine-stats" => cmd_engine_stats(&args, &rc),
         "fig1" => {
             let r = experiments::fig1_correlation(args.usize_or("n", 250), &rc);
             println!("pearson r size<->words {:+.4}, size<->EDP {:+.4}", r.r_size_words, r.r_size_edp);
@@ -382,17 +396,46 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
     nsga.population = args.usize_or("pop", nsga.population);
     nsga.offspring = args.usize_or("offspring", nsga.offspring);
 
+    let engine = Engine::new(rc.threads);
     let cache = MapperCache::new();
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
     let strategy = args.str_or("strategy", "proposed");
-    let cands = match strategy.as_str() {
-        "proposed" => proposed_search(&arch, &layers, &mut acc, &cache, &rc.mapper, &nsga, |g, pop| {
-            let best = pop.iter().map(|i| i.objectives[0]).fold(f64::INFINITY, f64::min);
-            eprintln!("gen {g:>3}: best EDP {best:.3e}");
-        }),
-        "naive" => naive_search(&arch, &layers, &mut acc, &cache, &rc.mapper, &nsga),
-        "uniform" => uniform_sweep(&arch, &layers, &mut acc, &cache, &rc.mapper, true),
-        other => return fail(format!("unknown strategy '{other}'")),
+    let progress = |g: usize, pop: &[qmap::nsga::Individual]| {
+        let best = pop.iter().map(|i| i.objectives[0]).fold(f64::INFINITY, f64::min);
+        eprintln!("gen {g:>3}: best EDP {best:.3e}");
+    };
+    if args.flag("resume") && args.get("checkpoint").is_none() {
+        return fail("--resume needs --checkpoint FILE");
+    }
+    if args.get("checkpoint").is_some() && strategy != "proposed" {
+        // refuse rather than silently run hours of un-checkpointed search
+        return fail(format!(
+            "--checkpoint is only supported with --strategy proposed (got '{strategy}')"
+        ));
+    }
+    let cands = match (strategy.as_str(), args.get("checkpoint")) {
+        ("proposed", Some(path)) => {
+            let ckpt = Checkpointer::new(path);
+            let resume = args.flag("resume");
+            if resume && ckpt.exists() {
+                eprintln!("resuming from checkpoint {path}");
+            }
+            match driver::search_resumable(
+                &engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &nsga, &ckpt, resume,
+                progress,
+            ) {
+                Ok(c) => c,
+                Err(e) => return fail(e),
+            }
+        }
+        ("proposed", None) => {
+            proposed_search(&engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &nsga, progress)
+        }
+        ("naive", _) => naive_search(&engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &nsga),
+        ("uniform", _) => {
+            uniform_sweep(&engine, &arch, &layers, &mut acc, &cache, &rc.mapper, true)
+        }
+        (other, _) => return fail(format!("unknown strategy '{other}'")),
     };
     let reference = evaluate_network(
         &arch,
@@ -420,6 +463,94 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
             .collect();
         print!("{}", report::csv(&["accuracy", "edp", "genome"], &rows));
     }
+    0
+}
+
+/// Exercise the work-stealing engine on a small synthetic population and
+/// print scaling rows plus the pool's counters — a quick sanity check
+/// that parallel evaluation is (a) faster and (b) bit-identical to the
+/// 1-worker baseline on this machine.
+fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
+    use std::time::Instant;
+    let budget = args.usize_or("workers", rc.threads).max(1);
+    let arch = presets::toy();
+    let layers = vec![
+        ConvLayer::conv("c1", 3, 8, 3, 16, 1),
+        ConvLayer::dw("d1", 8, 3, 16, 1),
+        ConvLayer::pw("p1", 8, 16, 16),
+        ConvLayer::fc("fc", 16, 10),
+    ];
+    let cfg = MapperConfig {
+        valid_target: 200,
+        max_draws: 200_000,
+        seed: 9,
+        shards: 4,
+    };
+    let mut rng = qmap::util::rng::Rng::new(0xE6);
+    let genomes: Vec<QuantConfig> = (0..16)
+        .map(|_| {
+            let mut g = QuantConfig::uniform(layers.len(), 8);
+            for l in g.layers.iter_mut() {
+                l.0 = 2 + rng.below(7) as u8;
+                l.1 = 2 + rng.below(7) as u8;
+            }
+            g
+        })
+        .collect();
+
+    println!(
+        "engine self-test: {} genomes x {} layers on '{}', budget {budget} (of {} cores)",
+        genomes.len(),
+        layers.len(),
+        arch.name,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    let mut workers: Vec<usize> = [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&w| w <= budget)
+        .collect();
+    if !workers.contains(&budget) {
+        workers.push(budget);
+    }
+    let mut reference: Option<Vec<Option<qmap::eval::NetworkEval>>> = None;
+    let mut t1 = 0.0f64;
+    for &w in &workers {
+        let engine = Engine::new(w);
+        let cache = MapperCache::new();
+        let t0 = Instant::now();
+        let evals = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg);
+        let dt = t0.elapsed().as_secs_f64();
+        if w == 1 {
+            t1 = dt;
+        }
+        let identical = match reference.take() {
+            None => {
+                reference = Some(evals);
+                true
+            }
+            Some(r) => {
+                let same = r == evals;
+                reference = Some(r);
+                same
+            }
+        };
+        let st = engine.stats();
+        println!(
+            "  workers {w:>2}: {:>8.1} ms  speedup {:>4.2}x  jobs {:>3}  splits {:>3}  tasks {:>4}  steals {:>4}  identical {}",
+            dt * 1e3,
+            if dt > 0.0 && t1 > 0.0 { t1 / dt } else { 1.0 },
+            st.jobs,
+            st.splits,
+            st.tasks,
+            st.steals,
+            identical
+        );
+        if !identical {
+            eprintln!("error: engine results diverged from the 1-worker baseline");
+            return 1;
+        }
+    }
+    println!("results bit-identical across all worker counts");
     0
 }
 

@@ -19,7 +19,7 @@
 //!   re-paying the full `max_draws` search. The JSON dump records them
 //!   with a `mappable: false` marker.
 
-use super::{search, workload_hash, MapperConfig};
+use super::{search, workload_hash, MapperConfig, MapperResult};
 use crate::arch::Arch;
 use crate::quant::LayerQuant;
 use crate::util::json::{parse, Json};
@@ -113,25 +113,59 @@ impl MapperCache {
         q: &LayerQuant,
         cfg: &MapperConfig,
     ) -> Option<CachedEval> {
+        if let Some(hit) = self.probe(arch, layer, q, cfg) {
+            return hit;
+        }
+        let r = search(arch, layer, q, cfg);
+        self.insert_search(arch, layer, q, cfg, &r)
+    }
+
+    /// The lookup half of [`MapperCache::evaluate`]: `Some(Some(e))` is
+    /// a positive hit, `Some(None)` a negative hit that is valid for
+    /// `cfg.max_draws`, and `None` a miss — the caller must run the
+    /// search (however it likes; the engine runs it on the work-stealing
+    /// pool) and record it with [`MapperCache::insert_search`].
+    pub fn probe(
+        &self,
+        arch: &Arch,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        cfg: &MapperConfig,
+    ) -> Option<Option<CachedEval>> {
         let key = Self::key(arch, layer, q);
         if let Some(hit) = self.shard(key).read().unwrap().get(&key) {
             match hit {
                 CacheEntry::Mapped(e) => {
                     self.hits.fetch_add(1, Ordering::Relaxed);
-                    return Some(*e);
+                    return Some(Some(*e));
                 }
                 CacheEntry::Unmappable { max_draws } if *max_draws >= cfg.max_draws => {
                     self.hits.fetch_add(1, Ordering::Relaxed);
-                    return None;
+                    return Some(None);
                 }
-                // stale negative from a smaller budget: fall through and
-                // pay the search again with the bigger budget
+                // stale negative from a smaller budget: report a miss so
+                // the caller pays the search again with the bigger budget
                 CacheEntry::Unmappable { .. } => {}
             }
         }
+        None
+    }
+
+    /// The record half of [`MapperCache::evaluate`]: fold a finished
+    /// mapper search into a cache entry (counting the miss), and return
+    /// the summary served to the caller. Failed searches are stored as
+    /// negative entries tagged with the draw budget that failed.
+    pub fn insert_search(
+        &self,
+        arch: &Arch,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        cfg: &MapperConfig,
+        r: &MapperResult,
+    ) -> Option<CachedEval> {
+        let key = Self::key(arch, layer, q);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let r = search(arch, layer, q, cfg);
-        let (entry, out) = match r.best {
+        let (entry, out) = match &r.best {
             Some(est) => {
                 let nl = est.level_energy_pj.len();
                 let mut breakdown = [0.0f64; 3];
@@ -183,6 +217,13 @@ impl MapperCache {
     /// Serialize to JSON (for cross-run persistence). Unmappable
     /// workloads persist as `{key, mappable: false, max_draws}` entries.
     pub fn to_json(&self) -> String {
+        self.to_json_value().to_string()
+    }
+
+    /// The dump as a [`Json`] value — lets `engine::checkpoint` embed
+    /// the cache in a larger document without a serialize/parse round
+    /// trip.
+    pub fn to_json_value(&self) -> Json {
         let mut entries = Vec::with_capacity(self.len());
         for shard in &self.shards {
             let map = shard.read().unwrap();
@@ -207,7 +248,7 @@ impl MapperCache {
                 }
             }
         }
-        Json::obj(vec![("entries", Json::Arr(entries))]).to_string()
+        Json::obj(vec![("entries", Json::Arr(entries))])
     }
 
     /// Load entries from a JSON dump produced by `to_json`. Dumps from

@@ -91,25 +91,51 @@ pub struct MapperResult {
     pub draws: u64,
 }
 
-/// Per-shard search outcome (internal).
-struct ShardResult {
+/// One shard's slice of a search: its derived seed and its share of the
+/// valid-mapping target and draw budget. The full decomposition of a
+/// workload search is [`shard_plan`]; it is a pure function of the
+/// `MapperConfig` and the workload, never of how the shards end up
+/// being executed — which is what lets `engine::driver` run the same
+/// shards on a work-stealing pool and still merge to bit-identical
+/// results.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardSpec {
+    pub seed: u64,
+    pub valid_target: u64,
+    pub max_draws: u64,
+}
+
+/// Per-shard search outcome. Opaque outside the mapper: produced by
+/// [`run_shard`], consumed (in shard-index order) by [`merge_shards`].
+pub struct ShardOutcome {
     /// (EDP, estimate, mapping) of the shard's winner.
     best: Option<(f64, Estimate, Mapping)>,
     valid: u64,
     draws: u64,
 }
 
+/// The deterministic decomposition of one workload search into shards:
+/// `effective_shards(cfg)` entries, each with a seed derived from
+/// `(base_seed, shard index)` and an even split of the valid-mapping
+/// target and draw budget (remainders to the lowest indices). One shard
+/// reproduces the single-threaded candidate stream exactly.
+pub fn shard_plan(cfg: &MapperConfig, base_seed: u64) -> Vec<ShardSpec> {
+    let n = effective_shards(cfg) as u64;
+    (0..n)
+        .map(|i| ShardSpec {
+            seed: base_seed ^ i.wrapping_mul(0x9E3779B97F4A7C15),
+            valid_target: cfg.valid_target / n + u64::from(i < cfg.valid_target % n),
+            max_draws: cfg.max_draws / n + u64::from(i < cfg.max_draws % n),
+        })
+        .collect()
+}
+
 /// One shard of the random search: draws candidates through the
 /// allocation-free context path until its share of the valid-mapping
 /// target (or draw budget) is exhausted. Within a shard the first
 /// strictly-lower EDP wins, so the result is deterministic in the seed.
-fn search_shard(
-    space: &MapSpace,
-    lctx: &LayerContext,
-    seed: u64,
-    valid_target: u64,
-    max_draws: u64,
-) -> ShardResult {
+pub fn run_shard(space: &MapSpace, lctx: &LayerContext, spec: &ShardSpec) -> ShardOutcome {
+    let (seed, valid_target, max_draws) = (spec.seed, spec.valid_target, spec.max_draws);
     let mut ctx = EvalContext::with_dims(lctx.num_levels, space.slots());
     let mut rng = Rng::new(seed);
     let mut best: Option<(f64, Estimate, Mapping)> = None;
@@ -138,12 +164,46 @@ fn search_shard(
         }
     }
 
-    ShardResult { best, valid, draws }
+    ShardOutcome { best, valid, draws }
+}
+
+/// Deterministic merge of shard outcomes: iterate in shard-index order,
+/// keep the first strictly-minimum EDP (ties go to the lowest shard
+/// index), and sum the counters. Order-independent of how the shards
+/// were *executed*, so work-stealing execution merges identically to
+/// sequential execution.
+pub fn merge_shards(outcomes: Vec<ShardOutcome>) -> MapperResult {
+    let mut valid = 0u64;
+    let mut draws = 0u64;
+    let mut best: Option<(f64, Estimate, Mapping)> = None;
+    for r in outcomes {
+        valid += r.valid;
+        draws += r.draws;
+        if let Some((edp, est, m)) = r.best {
+            if best.as_ref().map_or(true, |(b, _, _)| edp < *b) {
+                best = Some((edp, est, m));
+            }
+        }
+    }
+    match best {
+        Some((_, est, m)) => MapperResult {
+            best: Some(est),
+            best_mapping: Some(m),
+            valid,
+            draws,
+        },
+        None => MapperResult {
+            best: None,
+            best_mapping: None,
+            valid,
+            draws,
+        },
+    }
 }
 
 /// Resolve the configured shard count (0 = auto) and cap it so no shard
 /// is left without a share of the valid-mapping target.
-fn effective_shards(cfg: &MapperConfig) -> usize {
+pub fn effective_shards(cfg: &MapperConfig) -> usize {
     let s = if cfg.shards == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
@@ -170,59 +230,29 @@ pub fn search(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, cfg: &MapperConfig
     let q = &q.canonical(arch.word_bits, arch.bit_packing);
     let space = MapSpace::of(arch);
     let lctx = LayerContext::new(arch, layer, q);
-    let base_seed = cfg.seed ^ workload_hash(layer, q);
-    let shards = effective_shards(cfg);
+    let specs = shard_plan(cfg, cfg.seed ^ workload_hash(layer, q));
 
-    let results: Vec<ShardResult> = if shards <= 1 {
-        vec![search_shard(&space, &lctx, base_seed, cfg.valid_target, cfg.max_draws)]
+    let outcomes: Vec<ShardOutcome> = if specs.len() <= 1 {
+        specs.iter().map(|s| run_shard(&space, &lctx, s)).collect()
     } else {
-        let n = shards as u64;
-        let mut slots: Vec<Option<ShardResult>> = (0..shards).map(|_| None).collect();
-        std::thread::scope(|s| {
-            for (i, slot) in slots.iter_mut().enumerate() {
+        // standalone parallel path (scoped threads). Under the engine
+        // the same specs run as work-stealing pool subtasks instead —
+        // see `engine::driver::search_on_engine` — and merge to the
+        // same result.
+        let mut slots: Vec<Option<ShardOutcome>> = specs.iter().map(|_| None).collect();
+        std::thread::scope(|sc| {
+            for (spec, slot) in specs.iter().zip(slots.iter_mut()) {
                 let space = &space;
                 let lctx = &lctx;
-                let iu = i as u64;
-                let target = cfg.valid_target / n + u64::from(iu < cfg.valid_target % n);
-                let draws = cfg.max_draws / n + u64::from(iu < cfg.max_draws % n);
-                let seed = base_seed ^ iu.wrapping_mul(0x9E3779B97F4A7C15);
-                s.spawn(move || {
-                    *slot = Some(search_shard(space, lctx, seed, target, draws));
+                sc.spawn(move || {
+                    *slot = Some(run_shard(space, lctx, spec));
                 });
             }
         });
         slots.into_iter().map(|r| r.expect("shard completed")).collect()
     };
 
-    // deterministic merge: iterate shards in index order and keep the
-    // first strictly-minimum EDP (ties go to the lowest shard index).
-    let mut valid = 0u64;
-    let mut draws = 0u64;
-    let mut best: Option<(f64, Estimate, Mapping)> = None;
-    for r in results {
-        valid += r.valid;
-        draws += r.draws;
-        if let Some((edp, est, m)) = r.best {
-            if best.as_ref().map_or(true, |(b, _, _)| edp < *b) {
-                best = Some((edp, est, m));
-            }
-        }
-    }
-
-    match best {
-        Some((_, est, m)) => MapperResult {
-            best: Some(est),
-            best_mapping: Some(m),
-            valid,
-            draws,
-        },
-        None => MapperResult {
-            best: None,
-            best_mapping: None,
-            valid,
-            draws,
-        },
-    }
+    merge_shards(outcomes)
 }
 
 /// Stable 64-bit hash of a workload + quantization (cache key and seed

@@ -188,6 +188,79 @@ pub fn mutate(qc: &mut QuantConfig, p_mut: f64, p_mut_acc: f64, rng: &mut Rng) {
     }
 }
 
+/// Everything a paused NSGA-II run needs to continue and still produce
+/// a bit-identical final front: the number of completed generations,
+/// the parent population, and the breeding RNG mid-stream.
+/// `engine::checkpoint` persists it at generation boundaries.
+#[derive(Debug, Clone)]
+pub struct SearchState {
+    /// Generations completed so far (0 = only the initial population).
+    pub generation: usize,
+    /// Parent population after the latest environmental selection.
+    pub pop: Vec<Individual>,
+    /// The breeding RNG (consumed only by crossover/mutation draws).
+    pub rng: Rng,
+}
+
+/// Build and evaluate the initial population (the paper's uniformly
+/// quantized configurations), run the first environmental selection,
+/// and return the generation-0 state.
+pub fn init_state<E>(num_layers: usize, cfg: &NsgaConfig, evaluate: &mut E) -> SearchState
+where
+    E: FnMut(&[QuantConfig]) -> Vec<Vec<f64>>,
+{
+    let rng = Rng::new(cfg.seed);
+    let genomes: Vec<QuantConfig> = (0..cfg.population)
+        .map(|i| {
+            let q = QMIN + (i as u8 % (QMAX - QMIN + 1));
+            QuantConfig::uniform(num_layers, q)
+        })
+        .collect();
+    let objs = evaluate(&genomes);
+    assert_eq!(objs.len(), genomes.len(), "evaluator arity");
+    let pop: Vec<Individual> = genomes
+        .into_iter()
+        .zip(objs)
+        .map(|(genome, objectives)| Individual { genome, objectives })
+        .collect();
+    SearchState {
+        generation: 0,
+        pop: environmental_select(pop, cfg.population),
+        rng,
+    }
+}
+
+/// Advance the search by one generation: breed `cfg.offspring`
+/// children, evaluate them, and select the next parent population.
+pub fn step<E>(st: &mut SearchState, cfg: &NsgaConfig, evaluate: &mut E)
+where
+    E: FnMut(&[QuantConfig]) -> Vec<Vec<f64>>,
+{
+    let mut offspring: Vec<QuantConfig> = Vec::with_capacity(cfg.offspring);
+    for _ in 0..cfg.offspring {
+        let pa = &st.pop[st.rng.below(st.pop.len() as u64) as usize].genome;
+        let pb = &st.pop[st.rng.below(st.pop.len() as u64) as usize].genome;
+        let mut child = uniform_crossover(pa, pb, &mut st.rng);
+        mutate(&mut child, cfg.p_mut, cfg.p_mut_acc, &mut st.rng);
+        offspring.push(child);
+    }
+    let objs = evaluate(&offspring);
+    assert_eq!(objs.len(), offspring.len(), "evaluator arity");
+    for (genome, objectives) in offspring.into_iter().zip(objs) {
+        st.pop.push(Individual { genome, objectives });
+    }
+    let pop = std::mem::take(&mut st.pop);
+    st.pop = environmental_select(pop, cfg.population);
+    st.generation += 1;
+}
+
+/// The population's non-dominated front (the paper filters dominated
+/// points from the final answer).
+pub fn final_front(pop: &[Individual]) -> Vec<Individual> {
+    let fronts = non_dominated_sort(pop);
+    fronts[0].iter().map(|&i| pop[i].clone()).collect()
+}
+
 /// One NSGA-II run over a user-supplied evaluator.
 ///
 /// `evaluate(genomes)` is called with the genomes needing objectives
@@ -196,6 +269,10 @@ pub fn mutate(qc: &mut QuantConfig, p_mut: f64, p_mut_acc: f64, rng: &mut Rng) {
 /// `on_generation(gen, population)` observes the parent population after
 /// each environmental selection (Fig. 5 snapshots). Returns the final
 /// non-dominated front.
+///
+/// Built on [`init_state`]/[`step`], so a checkpointed run through
+/// `engine::driver::search_resumable` walks the identical RNG stream
+/// and produces the identical front.
 pub fn run<E, O>(
     num_layers: usize,
     cfg: &NsgaConfig,
@@ -206,46 +283,13 @@ where
     E: FnMut(&[QuantConfig]) -> Vec<Vec<f64>>,
     O: FnMut(usize, &[Individual]),
 {
-    let mut rng = Rng::new(cfg.seed);
-
-    // initial population: uniformly quantized configurations (paper)
-    let genomes: Vec<QuantConfig> = (0..cfg.population)
-        .map(|i| {
-            let q = QMIN + (i as u8 % (QMAX - QMIN + 1));
-            QuantConfig::uniform(num_layers, q)
-        })
-        .collect();
-    let objs = evaluate(&genomes);
-    assert_eq!(objs.len(), genomes.len(), "evaluator arity");
-    let mut pop: Vec<Individual> = genomes
-        .into_iter()
-        .zip(objs)
-        .map(|(genome, objectives)| Individual { genome, objectives })
-        .collect();
-    pop = environmental_select(pop, cfg.population);
-    on_generation(0, &pop);
-
-    for gen in 1..=cfg.generations {
-        let mut offspring: Vec<QuantConfig> = Vec::with_capacity(cfg.offspring);
-        for _ in 0..cfg.offspring {
-            let pa = &pop[rng.below(pop.len() as u64) as usize].genome;
-            let pb = &pop[rng.below(pop.len() as u64) as usize].genome;
-            let mut child = uniform_crossover(pa, pb, &mut rng);
-            mutate(&mut child, cfg.p_mut, cfg.p_mut_acc, &mut rng);
-            offspring.push(child);
-        }
-        let objs = evaluate(&offspring);
-        assert_eq!(objs.len(), offspring.len(), "evaluator arity");
-        for (genome, objectives) in offspring.into_iter().zip(objs) {
-            pop.push(Individual { genome, objectives });
-        }
-        pop = environmental_select(pop, cfg.population);
-        on_generation(gen, &pop);
+    let mut st = init_state(num_layers, cfg, &mut evaluate);
+    on_generation(0, &st.pop);
+    while st.generation < cfg.generations {
+        step(&mut st, cfg, &mut evaluate);
+        on_generation(st.generation, &st.pop);
     }
-
-    // final answer: the non-dominated front (paper filters dominated)
-    let fronts = non_dominated_sort(&pop);
-    fronts[0].iter().map(|&i| pop[i].clone()).collect()
+    final_front(&st.pop)
 }
 
 /// Extract the Pareto front (objective vectors) from a set of points,

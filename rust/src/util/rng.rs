@@ -25,6 +25,12 @@ impl Rng {
         Rng::new(s ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw generator state, for checkpointing: `Rng::new(state)`
+    /// resumes the exact stream (SplitMix64's whole state is one word).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);

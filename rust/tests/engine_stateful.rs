@@ -1,0 +1,257 @@
+//! Stateful property tests for the execution engine, in the style of
+//! radupopescu/proptest-stateful's model-vs-SUT approach: generate a
+//! random command sequence, apply it both to a *model* (single-threaded
+//! `eval::evaluate_network` with its own cache) and to the *SUT* (the
+//! work-stealing engine with a random worker count, random per-job
+//! shard counts, and its own cache), and assert the two systems agree
+//! bit-for-bit after every command — including across a mid-run
+//! checkpoint save/restore of the NSGA-II search.
+
+use qmap::accuracy::{ProxyAccuracy, ProxyParams};
+use qmap::arch::presets::toy;
+use qmap::engine::{driver, Checkpointer, Engine};
+use qmap::eval::evaluate_network;
+use qmap::mapper::cache::MapperCache;
+use qmap::mapper::MapperConfig;
+use qmap::nsga::NsgaConfig;
+use qmap::quant::{QuantConfig, QMAX, QMIN};
+use qmap::util::prop::check as forall;
+use qmap::util::rng::Rng;
+use qmap::workload::ConvLayer;
+
+fn small_net() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::conv("c1", 3, 8, 3, 16, 1),
+        ConvLayer::dw("d1", 8, 3, 16, 1),
+        ConvLayer::pw("p1", 8, 16, 16),
+        ConvLayer::fc("fc", 16, 10),
+    ]
+}
+
+fn random_genome(r: &mut Rng, n: usize) -> QuantConfig {
+    let mut g = QuantConfig::uniform(n, 8);
+    for l in g.layers.iter_mut() {
+        l.0 = QMIN + r.below((QMAX - QMIN + 1) as u64) as u8;
+        l.1 = QMIN + r.below((QMAX - QMIN + 1) as u64) as u8;
+    }
+    g
+}
+
+/// One command of the stateful test: a batch of genomes to evaluate.
+#[derive(Debug)]
+struct Cmd {
+    genomes: Vec<QuantConfig>,
+}
+
+#[derive(Debug)]
+struct Script {
+    workers: usize,
+    shards: usize,
+    commands: Vec<Cmd>,
+}
+
+fn random_script(r: &mut Rng) -> Script {
+    let n = small_net().len();
+    let commands = (0..r.range(2, 4))
+        .map(|_| Cmd {
+            genomes: (0..r.range(1, 3)).map(|_| random_genome(r, n)).collect(),
+        })
+        .collect();
+    Script {
+        workers: r.range(1, 4),
+        shards: r.range(1, 3),
+        commands,
+    }
+}
+
+#[test]
+fn engine_agrees_with_serial_model_under_random_job_mixes() {
+    let arch = toy();
+    let layers = small_net();
+    forall(0xE6E1, 10, random_script, |script| {
+        let cfg = MapperConfig {
+            valid_target: 24,
+            max_draws: 24_000,
+            seed: 13,
+            shards: script.shards,
+        };
+        let engine = Engine::new(script.workers);
+        let sut_cache = MapperCache::new();
+        let model_cache = MapperCache::new();
+        for (ci, cmd) in script.commands.iter().enumerate() {
+            // SUT: deduplicated jobs on the work-stealing pool
+            let got = driver::evaluate_genomes(
+                &engine,
+                &arch,
+                &layers,
+                &cmd.genomes,
+                &sut_cache,
+                &cfg,
+            );
+            // model: plain serial evaluation, genome by genome
+            for (gi, g) in cmd.genomes.iter().enumerate() {
+                let want = evaluate_network(&arch, &layers, g, &model_cache, &cfg);
+                if got[gi] != want {
+                    return Err(format!(
+                        "command {ci}, genome {gi}: engine {:?} != serial {:?} \
+                         (workers={}, shards={})",
+                        got[gi], want, script.workers, script.shards
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn ckpt_path(tag: u64) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("qmap_stateful_{tag}_{}.json", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+/// Run the checkpointed search to `stop_after` generations (simulating
+/// an interruption), then resume from the file with a *fresh* engine,
+/// cache, and accuracy model, and compare the final front against an
+/// uninterrupted run — bit-for-bit, for random worker counts and
+/// interruption points.
+#[test]
+fn checkpoint_restore_mid_search_is_bit_identical() {
+    let arch = toy();
+    let layers = small_net();
+    let map_cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 17,
+        shards: 1,
+    };
+    let nsga_cfg = NsgaConfig {
+        population: 8,
+        offspring: 4,
+        generations: 5,
+        seed: 23,
+        ..NsgaConfig::default()
+    };
+
+    let front_key = |cands: &[qmap::baselines::Candidate]| -> Vec<(Vec<u8>, u64)> {
+        let mut k: Vec<(Vec<u8>, u64)> = cands
+            .iter()
+            .map(|c| (c.genome.encode(), c.hw.edp.to_bits()))
+            .collect();
+        k.sort();
+        k
+    };
+
+    // the uninterrupted reference, serial engine
+    let reference = {
+        let engine = Engine::new(1);
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+        let path = ckpt_path(0);
+        let ckpt = Checkpointer::new(path.as_str());
+        let cands = driver::search_resumable(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt, false,
+            |_, _| {},
+        )
+        .expect("uninterrupted search");
+        let _ = std::fs::remove_file(&path);
+        front_key(&cands)
+    };
+
+    forall(
+        0xE6E2,
+        6,
+        |r| (r.range(0, 4), r.range(1, 4), r.next_u64()),
+        |&(stop_after, workers, tag)| {
+            let path = ckpt_path(tag);
+            let ckpt = Checkpointer::new(path.as_str());
+            // phase 1: run, but stop after `stop_after` generations
+            {
+                let engine = Engine::new(workers);
+                let cache = MapperCache::new();
+                let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+                let truncated = NsgaConfig {
+                    generations: stop_after,
+                    ..nsga_cfg
+                };
+                driver::search_resumable(
+                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &truncated, &ckpt,
+                    false,
+                    |_, _| {},
+                )
+                .map_err(|e| format!("phase 1: {e}"))?;
+            }
+            // phase 2: everything is dropped; resume from disk alone
+            let resumed = {
+                let engine = Engine::new(workers);
+                let cache = MapperCache::new();
+                let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+                driver::search_resumable(
+                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt,
+                    true,
+                    |_, _| {},
+                )
+                .map_err(|e| format!("phase 2: {e}"))?
+            };
+            let _ = std::fs::remove_file(&path);
+            let got = front_key(&resumed);
+            if got != reference {
+                return Err(format!(
+                    "resumed front differs (stop_after={stop_after}, workers={workers}):\n\
+                     got {got:?}\nwant {reference:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A search checkpointed at every generation but never interrupted must
+/// match the plain (non-checkpointed) `proposed_search` exactly — the
+/// checkpoint machinery must be invisible to the result.
+#[test]
+fn checkpointing_does_not_perturb_the_search() {
+    let arch = toy();
+    let layers = small_net();
+    let map_cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 29,
+        shards: 1,
+    };
+    let nsga_cfg = NsgaConfig {
+        population: 8,
+        offspring: 4,
+        generations: 3,
+        seed: 31,
+        ..NsgaConfig::default()
+    };
+    let engine = Engine::new(2);
+
+    let plain = {
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+        qmap::baselines::proposed_search(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, |_, _| {},
+        )
+    };
+    let path = ckpt_path(0xC0);
+    let ckpt = Checkpointer::new(path.as_str());
+    let checkpointed = {
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+        driver::search_resumable(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt, false,
+            |_, _| {},
+        )
+        .expect("checkpointed search")
+    };
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(plain.len(), checkpointed.len());
+    for (a, b) in plain.iter().zip(&checkpointed) {
+        assert_eq!(a.genome, b.genome);
+        assert_eq!(a.hw.edp.to_bits(), b.hw.edp.to_bits());
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    }
+}

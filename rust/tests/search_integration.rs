@@ -7,6 +7,7 @@ use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
 use qmap::arch::presets;
 use qmap::baselines::{naive_search, proposed_search, uniform_sweep};
 use qmap::coordinator::RunConfig;
+use qmap::engine::Engine;
 use qmap::eval::evaluate_network;
 use qmap::mapper::cache::MapperCache;
 use qmap::quant::QuantConfig;
@@ -22,6 +23,7 @@ fn proposed_search_improves_over_uniform8() {
     let layers = models::mobilenet_v1();
     let cache = MapperCache::new();
     let c = rc();
+    let engine = Engine::new(c.threads);
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
 
     let reference = evaluate_network(
@@ -34,7 +36,7 @@ fn proposed_search_improves_over_uniform8() {
     .unwrap();
     let ref_acc = acc.accuracy(&QuantConfig::uniform(layers.len(), 8));
 
-    let front = proposed_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, _| {});
+    let front = proposed_search(&engine, &arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, _| {});
     assert!(!front.is_empty());
 
     // some candidate must save EDP at tolerable accuracy loss
@@ -54,12 +56,13 @@ fn search_is_deterministic_given_seed() {
     let arch = presets::eyeriss();
     let layers = models::mobilenet_v1();
     let c = rc();
+    let engine = Engine::new(c.threads);
 
     let run = || {
         let cache = MapperCache::new();
         let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
         let front =
-            proposed_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, _| {});
+            proposed_search(&engine, &arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, _| {});
         front
             .iter()
             .map(|cand| (cand.genome.encode(), cand.hw.edp.to_bits()))
@@ -74,8 +77,9 @@ fn uniform_sweep_covers_all_bitwidths() {
     let layers = models::mobilenet_v2();
     let cache = MapperCache::new();
     let c = rc();
+    let engine = Engine::new(c.threads);
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-    let cands = uniform_sweep(&arch, &layers, &mut acc, &cache, &c.mapper, true);
+    let cands = uniform_sweep(&engine, &arch, &layers, &mut acc, &cache, &c.mapper, true);
     // 2..=8 plus 16-bit reference
     assert_eq!(cands.len(), 8);
     // accuracy should be non-decreasing with bits up to the proxy's
@@ -97,8 +101,9 @@ fn naive_search_prices_winners_on_real_hardware() {
     let layers = models::mobilenet_v1();
     let cache = MapperCache::new();
     let c = rc();
+    let engine = Engine::new(c.threads);
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-    let cands = naive_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga);
+    let cands = naive_search(&engine, &arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga);
     assert!(!cands.is_empty());
     for cand in &cands {
         assert!(cand.hw.edp.is_finite() && cand.hw.edp > 0.0);
@@ -112,8 +117,9 @@ fn cache_deduplicates_across_a_whole_search() {
     let layers = models::mobilenet_v1();
     let cache = MapperCache::new();
     let c = rc();
+    let engine = Engine::new(c.threads);
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-    let _ = proposed_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, _| {});
+    let _ = proposed_search(&engine, &arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, _| {});
     // an NSGA-II run evaluates |P| + |Q|*gens genomes x 28 layers;
     // without the cache that is thousands of mapper searches. With it,
     // the distinct-workload count stays small and hits dominate.
@@ -159,11 +165,12 @@ fn generation_callback_sees_monotone_progress() {
     let layers = models::mobilenet_v1();
     let cache = MapperCache::new();
     let mut c = rc();
+    let engine = Engine::new(c.threads);
     c.nsga.generations = 8;
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
 
     let mut best_edp_per_gen: Vec<f64> = Vec::new();
-    proposed_search(&arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, pop| {
+    proposed_search(&engine, &arch, &layers, &mut acc, &cache, &c.mapper, &c.nsga, |_, pop| {
         let best = pop
             .iter()
             .map(|i| i.objectives[0])
@@ -185,10 +192,11 @@ fn cross_architecture_evaluation_is_consistent() {
     let simba = presets::simba();
     let layers = models::mobilenet_v1();
     let c = rc();
+    let engine = Engine::new(c.threads);
     let cache_s = MapperCache::new();
     let cache_e = MapperCache::new();
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-    let front = proposed_search(&simba, &layers, &mut acc, &cache_s, &c.mapper, &c.nsga, |_, _| {});
+    let front = proposed_search(&engine, &simba, &layers, &mut acc, &cache_s, &c.mapper, &c.nsga, |_, _| {});
     let mut priced = 0;
     for cand in front.iter().take(6) {
         if let Some(e) = evaluate_network(&eyeriss, &layers, &cand.genome, &cache_e, &c.mapper) {
