@@ -221,6 +221,36 @@ fn main() {
             st.jobs, st.splits, st.tasks, st.steals
         );
     }
+    // 6. distributed loopback: the same population through
+    //    `Engine::distributed` over an in-process `qmap worker`
+    //    (TCP on 127.0.0.1). Asserts bit-identity with the local rows
+    //    — the distributed seam's acceptance bar — and records the
+    //    protocol's overhead next to the local timings.
+    let dist_ms = {
+        let addr =
+            qmap::engine::remote::spawn_local_worker(qmap::engine::WorkerOptions::default())
+                .expect("loopback worker");
+        let engine = Engine::distributed(2, vec![addr]);
+        let fresh = MapperCache::new();
+        let (evals, dt) = time(
+            &format!("engine: {pop_n} genomes, distributed loopback, cold cache"),
+            || driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &fresh, &cfg),
+        );
+        let edps: Vec<Option<f64>> = evals.iter().map(|e| e.as_ref().map(|e| e.edp)).collect();
+        if let Some(r) = &reference {
+            assert_eq!(
+                r, &edps,
+                "distributed loopback results must be bit-identical to local"
+            );
+        }
+        let st = engine.stats();
+        println!(
+            "  -> remote jobs {}, requeued specs {}, lost workers {}",
+            st.remote_jobs, st.requeued_specs, st.lost_workers
+        );
+        dt * 1e3
+    };
+
     let t_1w = engine_rows[0].1;
     for &(w, dt) in &engine_rows {
         println!("  -> engine speedup at {w} workers: {:.2}x", t_1w / dt.max(1e-12));
@@ -250,6 +280,7 @@ fn main() {
     println!("  cache_hit_ns                 = {cache_hit_ns:.0}");
     println!("  engine_speedup_4w_x          = {engine_4w:.2}");
     println!("  pop64_speedup_x              = {pop64:.1}");
+    println!("  distributed_loopback_ms      = {dist_ms:.1}");
 
     let record = Json::obj(vec![
         ("bench", Json::Str("perf_hotpath".into())),
@@ -288,6 +319,9 @@ fn main() {
         ("engine_population", Json::Num(pop_n as f64)),
         ("engine_speedup_4w_x", Json::Num(engine_4w)),
         ("pop64_speedup_x", Json::Num(pop64)),
+        // same population through Engine::distributed over a loopback
+        // qmap worker (bit-identity asserted above)
+        ("distributed_loopback_ms", Json::Num(dist_ms)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
     match std::fs::write(path, record.to_string()) {

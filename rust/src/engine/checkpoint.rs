@@ -26,7 +26,13 @@ use crate::quant::QuantConfig;
 use crate::util::json::{parse, Json};
 use crate::util::rng::Rng;
 
-const VERSION: f64 = 1.0;
+/// Bumped to 2.0 with PR 3: `mapper::effective_shards` now also caps
+/// the shard count by `max_draws`, so a degenerate config (more shards
+/// than draws) produces a different `shard_plan` — and therefore
+/// different cached results — than the same config under version 1.
+/// Resuming a v1 checkpoint would silently mix the two plans; refusing
+/// it keeps the resume-bit-identical guarantee honest.
+const VERSION: f64 = 2.0;
 
 /// Identity of the search a checkpoint belongs to. A checkpoint written
 /// under one configuration and resumed under another (different
@@ -76,25 +82,21 @@ impl SearchIdent {
         Json::obj(vec![
             ("arch", Json::Str(self.arch.clone())),
             ("num_layers", Json::Num(self.num_layers as f64)),
-            ("mapper_seed", Json::Str(format!("{:016x}", self.mapper_seed))),
-            ("valid_target", Json::Str(format!("{:016x}", self.valid_target))),
-            ("max_draws", Json::Str(format!("{:016x}", self.max_draws))),
+            ("mapper_seed", Json::hex_u64(self.mapper_seed)),
+            ("valid_target", Json::hex_u64(self.valid_target)),
+            ("max_draws", Json::hex_u64(self.max_draws)),
             ("shards", Json::Num(self.shards as f64)),
             ("population", Json::Num(self.population as f64)),
             ("offspring", Json::Num(self.offspring as f64)),
-            ("nsga_seed", Json::Str(format!("{:016x}", self.nsga_seed))),
-            ("p_mut", Json::Str(format!("{:016x}", self.p_mut_bits))),
-            ("p_mut_acc", Json::Str(format!("{:016x}", self.p_mut_acc_bits))),
+            ("nsga_seed", Json::hex_u64(self.nsga_seed)),
+            ("p_mut", Json::hex_u64(self.p_mut_bits)),
+            ("p_mut_acc", Json::hex_u64(self.p_mut_acc_bits)),
         ])
     }
 
     fn from_json(v: &Json) -> Result<SearchIdent, String> {
         let hex = |key: &str| -> Result<u64, String> {
-            let s = v
-                .get(key)
-                .as_str()
-                .ok_or_else(|| format!("checkpoint ident: missing {key}"))?;
-            u64::from_str_radix(s, 16).map_err(|_| format!("checkpoint ident: bad {key}"))
+            v.get(key).as_hex_u64(&format!("checkpoint ident {key}"))
         };
         Ok(SearchIdent {
             arch: v
@@ -125,20 +127,11 @@ impl SearchIdent {
     }
 }
 
-/// Saves/loads search checkpoints at a fixed path.
+/// Saves/loads search checkpoints at a fixed path. Numeric encoding is
+/// shared with the distributed wire protocol (`engine::proto`):
+/// `Json::hex_u64` / `Json::hex_bits` from `util::json`.
 pub struct Checkpointer {
     path: String,
-}
-
-fn hex_bits(x: f64) -> Json {
-    Json::Str(format!("{:016x}", x.to_bits()))
-}
-
-fn bits_hex(v: &Json, what: &str) -> Result<f64, String> {
-    let s = v.as_str().ok_or_else(|| format!("{what}: not a string"))?;
-    u64::from_str_radix(s, 16)
-        .map(f64::from_bits)
-        .map_err(|_| format!("{what}: bad hex '{s}'"))
 }
 
 impl Checkpointer {
@@ -181,7 +174,7 @@ impl Checkpointer {
                     ("last_qo", Json::Num(ind.genome.last_qo as f64)),
                     (
                         "objectives",
-                        Json::Arr(ind.objectives.iter().map(|&x| hex_bits(x)).collect()),
+                        Json::Arr(ind.objectives.iter().map(|&x| Json::hex_bits(x)).collect()),
                     ),
                 ])
             })
@@ -190,7 +183,7 @@ impl Checkpointer {
             ("version", Json::Num(VERSION)),
             ("ident", ident.to_json()),
             ("generation", Json::Num(st.generation as f64)),
-            ("rng", Json::Str(format!("{:016x}", st.rng.state()))),
+            ("rng", Json::hex_u64(st.rng.state())),
             ("population", Json::Arr(pop)),
             ("cache", cache.to_json_value()),
         ]);
@@ -227,10 +220,7 @@ impl Checkpointer {
             .get("generation")
             .as_f64()
             .ok_or("checkpoint: missing generation")? as usize;
-        let rng_hex = v.get("rng").as_str().ok_or("checkpoint: missing rng")?;
-        let rng = Rng::new(
-            u64::from_str_radix(rng_hex, 16).map_err(|_| "checkpoint: bad rng state")?,
-        );
+        let rng = Rng::new(v.get("rng").as_hex_u64("checkpoint rng")?);
         let mut pop: Vec<Individual> = Vec::new();
         for ind in v
             .get("population")
@@ -262,7 +252,7 @@ impl Checkpointer {
                 .as_arr()
                 .ok_or("checkpoint: bad objectives")?
             {
-                objectives.push(bits_hex(o, "objective")?);
+                objectives.push(o.as_f64_bits("objective")?);
             }
             pop.push(Individual { genome, objectives });
         }

@@ -23,7 +23,7 @@
 //!   shard-index order.
 
 use super::checkpoint::{Checkpointer, SearchIdent};
-use super::Engine;
+use super::{remote, Backend, Engine};
 use crate::accuracy::AccuracyModel;
 use crate::arch::Arch;
 use crate::baselines::Candidate;
@@ -146,16 +146,27 @@ pub fn evaluate_genomes(
         }
     }
     engine.note_jobs(jobs.len() as u64);
-    let _results: Vec<Option<CachedEval>> = engine.map(&jobs, |job| {
-        eval_layer(
-            engine,
-            arch,
-            &layers[job.layer_index],
-            &job.quant,
-            cache,
-            cfg,
-        )
-    });
+    match engine.backend() {
+        // local: the unique jobs fan out over the work-stealing pool
+        Backend::Local => {
+            let _results: Vec<Option<CachedEval>> = engine.map(&jobs, |job| {
+                eval_layer(
+                    engine,
+                    arch,
+                    &layers[job.layer_index],
+                    &job.quant,
+                    cache,
+                    cfg,
+                )
+            });
+        }
+        // distributed: remote workers and the local pool race the same
+        // job queue; every job lands in the cache either way, with the
+        // same bits (remote::eval_jobs merges the same shard plan)
+        Backend::Distributed { workers } => {
+            remote::eval_jobs(engine, arch, layers, &jobs, cache, cfg, workers);
+        }
+    }
     // assemble per genome through the cache (every probe is a hit: the
     // job phase above inserted a positive or negative entry for each
     // unique workload), walking layers in index order and
@@ -339,6 +350,31 @@ mod tests {
         let engine = Engine::new(3);
         let cache = MapperCache::new();
         assert!(evaluate_network(&engine, &a, &layers, &qc, &cache, &c).is_none());
+    }
+
+    #[test]
+    fn distributed_backend_is_bit_identical_to_local() {
+        let a = toy();
+        let layers = net();
+        let c = cfg(2); // sharded jobs: remote batches carry >1 spec
+        let qc = QuantConfig::uniform(layers.len(), 4);
+        let serial = {
+            let engine = Engine::new(1);
+            let cache = MapperCache::new();
+            evaluate_network(&engine, &a, &layers, &qc, &cache, &c).unwrap()
+        };
+        let addr = remote::spawn_local_worker(crate::engine::WorkerOptions::default())
+            .expect("loopback worker");
+        for budget in [1usize, 3] {
+            let engine = Engine::distributed(budget, vec![addr.clone()]);
+            let cache = MapperCache::new();
+            let got = evaluate_network(&engine, &a, &layers, &qc, &cache, &c).unwrap();
+            assert_eq!(serial, got, "budget={budget}");
+            assert_eq!(serial.edp.to_bits(), got.edp.to_bits());
+        }
+        // an empty worker list silently degrades to the local backend
+        let engine = Engine::distributed(2, Vec::new());
+        assert!(matches!(engine.backend(), Backend::Local));
     }
 
     #[test]

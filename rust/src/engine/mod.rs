@@ -22,30 +22,55 @@
 //!   search state plus the mapper cache (negative entries keep their
 //!   draw-budget tags), so long searches survive interruption and
 //!   resume to bit-identical final fronts.
-//!
-//! This is also the seam the ROADMAP's distributed multi-host search
-//! plugs into: shard seeds are position-independent, so remote workers
-//! can execute the same `ShardSpec`s and merge through the same
-//! deterministic reduction.
+//! * [`proto`] / [`remote`] — the multi-host seam: shard seeds are
+//!   position-independent, so `qmap worker` processes execute the same
+//!   `ShardSpec`s over length-prefixed, checksummed JSON frames and
+//!   the driver merges through the same deterministic reduction.
+//!   Worker loss, duplicate delivery, and reordering are absorbed
+//!   without perturbing a single bit of the result (see [`Backend`]).
 
 pub mod checkpoint;
 pub mod driver;
 pub mod pool;
+pub mod proto;
+pub mod remote;
 
 pub use checkpoint::Checkpointer;
 pub use pool::{Pool, ScopedTask};
+pub use remote::WorkerOptions;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// The engine: a work-stealing [`Pool`] plus job-level accounting.
-/// Create one per process (or per experiment) with the global core
-/// budget; every fan-out — NSGA-II generations, bench harnesses,
-/// network characterizations — goes through it.
+/// Where a generation's mapper jobs execute. The seam the ROADMAP's
+/// distributed search plugs into: `Local` keeps everything on this
+/// process's work-stealing pool; `Distributed` additionally fans
+/// cache-miss jobs out to remote `qmap worker` processes, with the
+/// local pool racing the same queue (and absorbing anything a lost
+/// worker leaves behind). Results are bit-identical either way — see
+/// [`remote::eval_jobs`].
+#[derive(Debug, Clone)]
+pub enum Backend {
+    Local,
+    Distributed {
+        /// `host:port` of each `qmap worker --listen` process.
+        workers: Vec<String>,
+    },
+}
+
+/// The engine: a work-stealing [`Pool`] plus job-level accounting and
+/// the execution [`Backend`]. Create one per process (or per
+/// experiment) with the global core budget; every fan-out — NSGA-II
+/// generations, bench harnesses, network characterizations — goes
+/// through it.
 pub struct Engine {
     pool: Pool,
+    backend: Backend,
     jobs: AtomicU64,
     splits: AtomicU64,
+    remote_jobs: AtomicU64,
+    requeued_specs: AtomicU64,
+    lost_workers: AtomicU64,
 }
 
 /// A point-in-time snapshot of the engine's counters.
@@ -63,6 +88,12 @@ pub struct EngineStats {
     pub steals: u64,
     /// Workers parked at the moment of the snapshot.
     pub idle_now: usize,
+    /// Jobs whose batch completed on a remote worker.
+    pub remote_jobs: u64,
+    /// Shard specs a lost worker owed that were re-run locally.
+    pub requeued_specs: u64,
+    /// Remote workers that became unreachable or violated the protocol.
+    pub lost_workers: u64,
 }
 
 impl Engine {
@@ -71,11 +102,34 @@ impl Engine {
     /// everything inline — the serial baseline every parallel run is
     /// bit-identical to.
     pub fn new(budget: usize) -> Engine {
+        Engine::with_backend(budget, Backend::Local)
+    }
+
+    /// An engine whose generations additionally fan out to remote
+    /// `qmap worker` processes. The local pool still runs with the
+    /// given budget — remote workers add capacity, they never replace
+    /// the local one.
+    pub fn distributed(budget: usize, workers: Vec<String>) -> Engine {
+        if workers.is_empty() {
+            return Engine::new(budget);
+        }
+        Engine::with_backend(budget, Backend::Distributed { workers })
+    }
+
+    pub fn with_backend(budget: usize, backend: Backend) -> Engine {
         Engine {
             pool: Pool::new(budget),
+            backend,
             jobs: AtomicU64::new(0),
             splits: AtomicU64::new(0),
+            remote_jobs: AtomicU64::new(0),
+            requeued_specs: AtomicU64::new(0),
+            lost_workers: AtomicU64::new(0),
         }
+    }
+
+    pub fn backend(&self) -> &Backend {
+        &self.backend
     }
 
     pub fn pool(&self) -> &Pool {
@@ -95,6 +149,9 @@ impl Engine {
             tasks: self.pool.tasks_executed(),
             steals: self.pool.steals(),
             idle_now: self.pool.idle_workers(),
+            remote_jobs: self.remote_jobs.load(Ordering::Relaxed),
+            requeued_specs: self.requeued_specs.load(Ordering::Relaxed),
+            lost_workers: self.lost_workers.load(Ordering::Relaxed),
         }
     }
 
@@ -104,6 +161,18 @@ impl Engine {
 
     pub(crate) fn note_split(&self) {
         self.splits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_remote_job(&self) {
+        self.remote_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_requeued(&self, n: u64) {
+        self.requeued_specs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_lost_worker(&self) {
+        self.lost_workers.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Order-preserving parallel map over a slice: the engine's

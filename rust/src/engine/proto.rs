@@ -1,0 +1,413 @@
+//! Wire protocol for distributed shard execution.
+//!
+//! One frame = one JSON document, delimited and integrity-checked:
+//!
+//! ```text
+//! +------+----------+-----------+-----------------+
+//! | QMAP | len: u32 | fnv: u64  | payload (JSON)  |
+//! | 4 B  | BE       | BE        | len bytes       |
+//! +------+----------+-----------+-----------------+
+//! ```
+//!
+//! Design constraints, in order:
+//!
+//! * **Total decoding.** Frames arrive from the network; every
+//!   malformed input — truncation, a flipped bit, a hostile length
+//!   prefix — must produce an `Err`, never a panic and never an
+//!   attempt to allocate the attacker's choice of buffer. The length
+//!   is validated against [`MAX_FRAME`] *before* any allocation, and
+//!   the FNV-1a checksum over the payload catches corruption that the
+//!   JSON grammar would happily accept.
+//! * **Bit-exactness.** Every f64 in a message travels as its IEEE-754
+//!   bit pattern and every u64 as hex (the same convention as
+//!   `engine::checkpoint`, via the shared `util::json` helpers), so a
+//!   `ShardOutcome` computed on another host merges into a Pareto
+//!   front bit-identical to local execution.
+//! * **Statelessness.** A `batch` message carries everything a worker
+//!   needs — the rendered architecture spec, the workload, the
+//!   canonical quantization, and the shard specs — so any batch can be
+//!   re-sent to any worker (or re-run locally) at any time. Fault
+//!   tolerance upstream is just re-execution.
+//!
+//! Messages (the `type` field):
+//!
+//! * `hello`  — version handshake, sent by the worker on connect.
+//! * `batch`  — driver → worker: execute these [`ShardSpec`]s.
+//! * `outcome`— worker → driver: one shard's [`ShardOutcome`], keyed
+//!   by `(id, shard)`; may arrive duplicated or out of order.
+//! * `done`   — worker → driver: batch `id` fully streamed.
+//! * `error`  — worker → driver: the batch could not be executed.
+
+use crate::mapper::{ShardOutcome, ShardSpec};
+use crate::quant::LayerQuant;
+use crate::util::json::{parse, Json};
+use crate::workload::{ConvLayer, LayerKind};
+use std::io::{Read, Write};
+
+/// Protocol version; bumped on any incompatible message change.
+/// Checked on both sides: the driver refuses a worker whose `hello`
+/// advertises a different version, and the worker refuses a `batch`
+/// whose `v` field mismatches (drivers never send `hello`, so the
+/// batch itself carries the driver's version).
+pub const VERSION: u64 = 1;
+
+/// Frame magic: catches a peer that is not speaking this protocol at
+/// all (or a stream that lost sync) on the first four bytes.
+pub const MAGIC: [u8; 4] = *b"QMAP";
+
+/// Hard cap on a frame payload. A `batch` for the largest real
+/// workload is a few kilobytes; 16 MiB leaves three orders of margin
+/// while keeping a hostile length prefix from turning into a
+/// multi-gigabyte allocation.
+pub const MAX_FRAME: usize = 16 << 20;
+
+const HEADER_LEN: usize = 4 + 4 + 8;
+
+/// FNV-1a over a byte slice — the frame checksum (the shared
+/// `util::Fnv1a` implementation). Not cryptographic; it exists to turn
+/// line noise and truncation into clean errors, not to authenticate
+/// peers.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    crate::util::fnv1a(bytes)
+}
+
+/// Encode one payload as a complete frame (header + payload bytes).
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(&fnv1a(payload).to_be_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Write one frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), String> {
+    if payload.len() > MAX_FRAME {
+        return Err(format!(
+            "refusing to send a {} byte frame (max {MAX_FRAME})",
+            payload.len()
+        ));
+    }
+    w.write_all(&encode_frame(payload)).map_err(|e| format!("send: {e}"))?;
+    w.flush().map_err(|e| format!("send: {e}"))
+}
+
+/// Read one frame's payload. Total: truncated input, wrong magic, a
+/// length prefix beyond [`MAX_FRAME`], or a checksum mismatch all
+/// return `Err` — the length is validated before the payload buffer is
+/// allocated, so a hostile prefix cannot force an OOM.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, String> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).map_err(|e| format!("frame header: {e}"))?;
+    if header[..4] != MAGIC {
+        return Err("frame: bad magic (peer is not speaking the qmap protocol)".into());
+    }
+    let len = u32::from_be_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    if len > MAX_FRAME {
+        return Err(format!("frame: length {len} exceeds the {MAX_FRAME} byte cap"));
+    }
+    let want = u64::from_be_bytes([
+        header[8], header[9], header[10], header[11], header[12], header[13], header[14],
+        header[15],
+    ]);
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| format!("frame payload: {e}"))?;
+    let got = fnv1a(&payload);
+    if got != want {
+        return Err(format!("frame: checksum mismatch (want {want:016x}, got {got:016x})"));
+    }
+    Ok(payload)
+}
+
+/// Write one message (a JSON value) as a frame.
+pub fn write_msg(w: &mut impl Write, msg: &Json) -> Result<(), String> {
+    write_frame(w, msg.to_string().as_bytes())
+}
+
+/// Read one message. Malformed UTF-8 or JSON (including pathological
+/// nesting — see `util::json::MAX_DEPTH`) is an `Err`.
+pub fn read_msg(r: &mut impl Read) -> Result<Json, String> {
+    let payload = read_frame(r)?;
+    let text = std::str::from_utf8(&payload).map_err(|_| "frame: payload is not UTF-8")?;
+    parse(text).map_err(|e| format!("frame json: {e}"))
+}
+
+/// The `type` field of a message, or an error naming what was there.
+pub fn msg_type(msg: &Json) -> Result<&str, String> {
+    msg.get("type")
+        .as_str()
+        .ok_or_else(|| format!("message has no type: {}", msg.to_string()))
+}
+
+// ---------------------------------------------------------- messages
+
+/// The worker's greeting.
+pub fn hello() -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("hello".into())),
+        ("version", Json::hex_u64(VERSION)),
+    ])
+}
+
+/// Workload wire form. The name rides along for log readability only —
+/// `mapper::workload_hash` ignores it, so it cannot affect results.
+pub fn layer_to_json(l: &ConvLayer) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(l.name.clone())),
+        (
+            "kind",
+            Json::Str(
+                match l.kind {
+                    LayerKind::Standard => "standard",
+                    LayerKind::Depthwise => "depthwise",
+                }
+                .into(),
+            ),
+        ),
+        ("dims", Json::Arr(l.dims.iter().map(|&d| Json::hex_u64(d)).collect())),
+        ("stride", Json::Arr(vec![Json::hex_u64(l.stride.0), Json::hex_u64(l.stride.1)])),
+    ])
+}
+
+/// Decode and *validate* a workload: zero dims or strides are rejected
+/// here (`ConvLayer::new` asserts on them, and a worker must never
+/// panic on network input).
+pub fn layer_from_json(v: &Json) -> Result<ConvLayer, String> {
+    let kind = match v.get("kind").as_str() {
+        Some("standard") => LayerKind::Standard,
+        Some("depthwise") => LayerKind::Depthwise,
+        other => return Err(format!("layer kind: bad value {other:?}")),
+    };
+    let dims_arr = v.get("dims").as_arr().ok_or("layer dims: not an array")?;
+    if dims_arr.len() != 7 {
+        return Err(format!("layer dims: expected 7 entries, got {}", dims_arr.len()));
+    }
+    let mut dims = [0u64; 7];
+    for (i, d) in dims_arr.iter().enumerate() {
+        dims[i] = d.as_hex_u64("layer dim")?;
+        if dims[i] == 0 {
+            return Err("layer dims: zero-sized dimension".into());
+        }
+    }
+    let stride_arr = v.get("stride").as_arr().ok_or("layer stride: not an array")?;
+    if stride_arr.len() != 2 {
+        return Err("layer stride: expected 2 entries".into());
+    }
+    let stride = (
+        stride_arr[0].as_hex_u64("layer stride")?,
+        stride_arr[1].as_hex_u64("layer stride")?,
+    );
+    if stride.0 == 0 || stride.1 == 0 {
+        return Err("layer stride: zero stride".into());
+    }
+    if kind == LayerKind::Depthwise && dims[2] != 1 {
+        return Err("layer dims: depthwise layers must have C = 1".into());
+    }
+    Ok(ConvLayer {
+        name: v.get("name").as_str().unwrap_or("remote").to_string(),
+        kind,
+        dims,
+        stride,
+    })
+}
+
+pub fn quant_to_json(q: &LayerQuant) -> Json {
+    Json::obj(vec![
+        ("qa", Json::Num(q.qa as f64)),
+        ("qw", Json::Num(q.qw as f64)),
+        ("qo", Json::Num(q.qo as f64)),
+    ])
+}
+
+pub fn quant_from_json(v: &Json) -> Result<LayerQuant, String> {
+    let field = |key: &str| -> Result<u8, String> {
+        let x = v.get(key).as_f64().ok_or_else(|| format!("quant {key}: missing"))?;
+        if !(x.is_finite() && (0.0..=255.0).contains(&x) && x.fract() == 0.0) {
+            return Err(format!("quant {key}: bad value {x}"));
+        }
+        Ok(x as u8)
+    };
+    let q = LayerQuant {
+        qa: field("qa")?,
+        qw: field("qw")?,
+        qo: field("qo")?,
+    };
+    if q.qa == 0 || q.qw == 0 || q.qo == 0 {
+        return Err("quant: zero bit-width".into());
+    }
+    Ok(q)
+}
+
+/// Driver → worker: execute `specs` for one workload. The architecture
+/// travels as its rendered text spec — `arch::parser`'s round-trip is
+/// exact (asserted by `spec_roundtrip`), so the worker rebuilds the
+/// identical numerics.
+pub fn batch(id: u64, arch_spec: &str, layer: &ConvLayer, q: &LayerQuant, specs: &[ShardSpec]) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("batch".into())),
+        ("v", Json::hex_u64(VERSION)),
+        ("id", Json::hex_u64(id)),
+        ("arch", Json::Str(arch_spec.to_string())),
+        ("layer", layer_to_json(layer)),
+        ("quant", quant_to_json(q)),
+        ("specs", Json::Arr(specs.iter().map(|s| s.to_json()).collect())),
+    ])
+}
+
+/// Worker → driver: one shard's outcome.
+pub fn outcome(id: u64, shard: usize, out: &ShardOutcome) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("outcome".into())),
+        ("id", Json::hex_u64(id)),
+        ("shard", Json::Num(shard as f64)),
+        ("outcome", out.to_json()),
+    ])
+}
+
+/// Worker → driver: batch `id` is complete.
+pub fn done(id: u64) -> Json {
+    Json::obj(vec![("type", Json::Str("done".into())), ("id", Json::hex_u64(id))])
+}
+
+/// Worker → driver: the batch failed (reason for the driver's logs;
+/// the driver re-runs the specs locally either way).
+pub fn error(msg: &str) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("error".into())),
+        ("msg", Json::Str(msg.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::toy;
+    use crate::arch::parser::{parse_arch, render_arch};
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = br#"{"type":"hello"}"#;
+        let framed = encode_frame(payload);
+        let mut cur = std::io::Cursor::new(framed);
+        assert_eq!(read_frame(&mut cur).unwrap(), payload.to_vec());
+    }
+
+    #[test]
+    fn truncated_frames_error() {
+        let framed = encode_frame(b"0123456789");
+        for cut in 0..framed.len() {
+            let mut cur = std::io::Cursor::new(framed[..cut].to_vec());
+            assert!(read_frame(&mut cur).is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn any_flipped_bit_is_detected() {
+        let framed = encode_frame(br#"{"type":"done","id":"00"}"#);
+        for byte in 0..framed.len() {
+            for bit in 0..8 {
+                let mut bad = framed.clone();
+                bad[byte] ^= 1 << bit;
+                let mut cur = std::io::Cursor::new(bad);
+                // a flip in the length prefix may ask for more bytes
+                // than exist (Err), a shorter prefix fails the
+                // checksum over the shorter slice, a payload/checksum
+                // flip fails the comparison, a magic flip fails the
+                // magic check — every single-bit flip must error.
+                assert!(
+                    read_frame(&mut cur).is_err(),
+                    "flip byte {byte} bit {bit} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_length_prefix_is_rejected_before_allocation() {
+        let mut framed = encode_frame(b"tiny");
+        // rewrite the length to 4 GiB - 1; the reader must reject it
+        // from the header alone instead of allocating
+        framed[4..8].copy_from_slice(&u32::MAX.to_be_bytes());
+        let mut cur = std::io::Cursor::new(framed);
+        let err = read_frame(&mut cur).unwrap_err();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn oversize_payload_refused_on_send() {
+        let big = vec![b'x'; MAX_FRAME + 1];
+        let mut sink = Vec::new();
+        assert!(write_frame(&mut sink, &big).is_err());
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn layer_and_quant_wire_roundtrip() {
+        for l in [
+            ConvLayer::conv("c1", 3, 8, 3, 16, 2),
+            ConvLayer::dw("d1", 8, 3, 16, 1),
+            ConvLayer::fc("fc", 16, 10),
+        ] {
+            let back = layer_from_json(&layer_to_json(&l)).unwrap();
+            assert_eq!(back, l);
+        }
+        let q = LayerQuant { qa: 4, qw: 6, qo: 8 };
+        assert_eq!(quant_from_json(&quant_to_json(&q)).unwrap(), q);
+    }
+
+    #[test]
+    fn hostile_layer_and_quant_are_rejected_not_panicked() {
+        // zero dim (ConvLayer::new would assert)
+        let mut bad = layer_to_json(&ConvLayer::fc("fc", 16, 10));
+        if let Json::Obj(m) = &mut bad {
+            m.insert(
+                "dims".into(),
+                Json::Arr((0..7).map(|_| Json::hex_u64(0)).collect()),
+            );
+        }
+        assert!(layer_from_json(&bad).is_err());
+        assert!(layer_from_json(&Json::Null).is_err());
+        assert!(quant_from_json(&Json::Null).is_err());
+        let nan_q = Json::obj(vec![
+            ("qa", Json::Num(f64::NAN)),
+            ("qw", Json::Num(8.0)),
+            ("qo", Json::Num(8.0)),
+        ]);
+        assert!(quant_from_json(&nan_q).is_err());
+    }
+
+    #[test]
+    fn batch_message_roundtrips_through_bytes() {
+        let arch = toy();
+        let l = ConvLayer::conv("c1", 3, 8, 3, 16, 1);
+        let q = LayerQuant::uniform(4);
+        let specs = crate::mapper::shard_plan(
+            &crate::mapper::MapperConfig {
+                valid_target: 10,
+                max_draws: 1000,
+                seed: 3,
+                shards: 3,
+            },
+            42,
+        );
+        let msg = batch(7, &render_arch(&arch), &l, &q, &specs);
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        let back = read_msg(&mut cur).unwrap();
+        assert_eq!(msg_type(&back).unwrap(), "batch");
+        assert_eq!(back.get("id").as_hex_u64("id").unwrap(), 7);
+        let arch_back = parse_arch(back.get("arch").as_str().unwrap()).unwrap();
+        assert_eq!(arch_back, arch);
+        assert_eq!(layer_from_json(back.get("layer")).unwrap(), l);
+        let specs_back: Vec<_> = back
+            .get("specs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| ShardSpec::from_json(s).unwrap())
+            .collect();
+        assert_eq!(specs_back, specs);
+    }
+}

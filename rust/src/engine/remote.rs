@@ -1,0 +1,803 @@
+//! Distributed shard execution over the engine seam.
+//!
+//! The ROADMAP's multi-host search, built on the invariants PR 2 left
+//! in place: a [`ShardSpec`] is position-independent (its seed is
+//! derived from the config and workload, never from where it runs) and
+//! [`merge_shards`](mapper::merge_shards) reduces in shard-index
+//! order. So a remote worker can execute the same specs a local pool
+//! worker would, ship the [`ShardOutcome`]s back over
+//! [`proto`](super::proto) frames, and the driver merges a Pareto
+//! front bit-identical to single-host serial execution — for any
+//! worker set, disconnect order, or duplicate delivery.
+//!
+//! Roles:
+//!
+//! * [`serve`] — the worker side (`qmap worker --listen ADDR`): accept
+//!   connections, execute `batch` messages against a locally rebuilt
+//!   `MapSpace`/`LayerContext`, stream `outcome`s back. Stateless
+//!   across batches; safe to kill at any time.
+//! * [`BatchLedger`] — the driver-side collection point for one
+//!   batch's outcomes: keyed by shard index, idempotent under
+//!   duplicate delivery, indifferent to arrival order, and able to say
+//!   exactly which shards a lost worker still owed.
+//! * [`eval_jobs`] — the distributed scheduler behind
+//!   `engine::driver::evaluate_genomes`: remote connections and the
+//!   local pool race a single claim counter over the generation's
+//!   cache-miss jobs, so idle local workers keep stealing while
+//!   batches are in flight; a lost worker's unacknowledged specs are
+//!   re-injected into the local pool. Shards are idempotent, so fault
+//!   tolerance is re-execution — nothing else.
+//!
+//! Fault injection for the stateful test suite lives in
+//! [`WorkerOptions`]: a worker can be told to drop the connection
+//! mid-stream, deliver every outcome twice, or stream outcomes in
+//! reverse order. The driver must produce bit-identical results under
+//! all of them — that is the property `tests/distributed_stateful.rs`
+//! pins.
+
+use super::driver::EvalJob;
+use super::proto;
+use super::Engine;
+use crate::arch::parser::{parse_arch, render_arch};
+use crate::arch::Arch;
+use crate::mapper::cache::MapperCache;
+use crate::mapper::{self, MapperConfig, MapperResult, ShardOutcome, ShardSpec};
+use crate::mapping::mapspace::MapSpace;
+use crate::mapping::LayerContext;
+use crate::quant::LayerQuant;
+use crate::util::json::Json;
+use crate::workload::ConvLayer;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Worker behavior knobs. The defaults are a well-behaved worker; the
+/// fault options let the stateful tests stand up adversarial workers
+/// on a loopback socket and assert that the driver's results do not
+/// change by a single bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerOptions {
+    /// Close the connection (without `done`) after this many `outcome`
+    /// frames have been sent across the connection's lifetime —
+    /// simulates a worker lost mid-stream.
+    pub drop_after: Option<usize>,
+    /// Send every `outcome` frame twice — simulates duplicate
+    /// delivery. The driver's ledger must treat outcomes as idempotent.
+    pub duplicate_outcomes: bool,
+    /// Stream a batch's outcomes in reverse shard order — simulates
+    /// reordering. The driver must merge by shard index, not arrival.
+    pub reverse_outcomes: bool,
+}
+
+/// Driver-side network timeout (connect + per-read). Workers stream
+/// each outcome as soon as its shard finishes, so this bounds one
+/// shard's compute (not a whole batch); still, leave headroom for a
+/// full-profile single-shard search on a slow machine, and override
+/// with `QMAP_WORKER_TIMEOUT_MS` when a deployment knows better. On
+/// expiry the worker is treated as lost and its specs re-run locally.
+pub fn worker_timeout() -> Duration {
+    let ms = std::env::var("QMAP_WORKER_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(30_000);
+    Duration::from_millis(ms.max(1))
+}
+
+// ------------------------------------------------------------ worker
+
+/// Serve batches forever on `listener`, one thread per connection.
+/// Every connection failure is contained, and so are transient
+/// `accept` errors (ECONNABORTED from a driver that reset before the
+/// accept, EMFILE under fd pressure) — a fleet worker documented as
+/// "kill/restart freely" must not die because one peer misbehaved.
+/// Only a long unbroken run of accept failures (listener genuinely
+/// dead) ends the loop.
+pub fn serve(listener: TcpListener, opts: WorkerOptions) {
+    let mut consecutive_failures = 0u32;
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                consecutive_failures = 0;
+                let spawned = std::thread::Builder::new()
+                    .name("qmap-worker-conn".into())
+                    .spawn(move || {
+                        if let Err(e) = serve_conn(stream, opts) {
+                            eprintln!("qmap worker: connection {peer}: {e}");
+                        }
+                    });
+                if let Err(e) = spawned {
+                    eprintln!("qmap worker: spawn for {peer}: {e}");
+                }
+            }
+            Err(e) => {
+                consecutive_failures += 1;
+                eprintln!("qmap worker: accept: {e} ({consecutive_failures} in a row)");
+                if consecutive_failures >= 128 {
+                    eprintln!("qmap worker: listener looks dead, giving up");
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Bind an OS-chosen loopback port and serve on a background thread;
+/// returns the `host:port` to hand to a driver. Used by the stateful
+/// tests, the CI smoke, and the bench's distributed row.
+pub fn spawn_local_worker(opts: WorkerOptions) -> Result<String, String> {
+    let listener =
+        TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind 127.0.0.1:0: {e}"))?;
+    let addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?.to_string();
+    std::thread::Builder::new()
+        .name("qmap-worker".into())
+        .spawn(move || serve(listener, opts))
+        .map_err(|e| format!("spawn worker thread: {e}"))?;
+    Ok(addr)
+}
+
+/// How long a worker connection may sit idle (no incoming batch)
+/// before the worker drops it. Drivers connect per generation and
+/// never idle this long; what this bounds is the *half-open* case — a
+/// driver host that lost power or a silently dropped flow would
+/// otherwise pin one connection thread and one fd in `read_exact`
+/// forever, and a long-lived fleet worker would leak its way to
+/// EMFILE.
+const CONN_IDLE_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// One worker connection: hello, then execute batches until the peer
+/// hangs up. A malformed batch gets an `error` reply, a panic inside
+/// the mapper is caught and reported the same way — network input must
+/// never take the worker down.
+fn serve_conn(stream: TcpStream, opts: WorkerOptions) -> Result<(), String> {
+    stream.set_nodelay(true).ok();
+    // an expired idle timeout surfaces as a read_msg error below, and
+    // the connection closes cleanly (the driver reconnects per
+    // generation anyway)
+    stream.set_read_timeout(Some(CONN_IDLE_TIMEOUT)).ok();
+    let mut reader =
+        BufReader::new(stream.try_clone().map_err(|e| format!("clone stream: {e}"))?);
+    let mut writer = BufWriter::new(stream);
+    proto::write_msg(&mut writer, &proto::hello())?;
+    let mut sent_outcomes = 0usize;
+    loop {
+        let msg = match proto::read_msg(&mut reader) {
+            Ok(m) => m,
+            // peer closed or sent garbage; either way this connection
+            // is over (the driver re-runs anything unacknowledged)
+            Err(_) => return Ok(()),
+        };
+        let ty = match proto::msg_type(&msg) {
+            Ok(t) => t.to_string(),
+            Err(e) => {
+                proto::write_msg(&mut writer, &proto::error(&e))?;
+                continue;
+            }
+        };
+        match ty.as_str() {
+            "batch" => {
+                let end = catch_unwind(AssertUnwindSafe(|| {
+                    handle_batch(&msg, &mut writer, opts, &mut sent_outcomes)
+                }));
+                match end {
+                    Ok(Ok(BatchEnd::Done)) => {}
+                    Ok(Ok(BatchEnd::Drop)) => return Ok(()), // injected fault
+                    Ok(Err(e)) => return Err(e), // transport gone: close
+                    Err(_) => {
+                        proto::write_msg(
+                            &mut writer,
+                            &proto::error("worker panicked executing the batch"),
+                        )?;
+                    }
+                }
+            }
+            "hello" => {}
+            other => {
+                proto::write_msg(
+                    &mut writer,
+                    &proto::error(&format!("unexpected message type '{other}'")),
+                )?;
+            }
+        }
+    }
+}
+
+/// How a batch ended on the worker side.
+enum BatchEnd {
+    /// Streamed to completion (or answered with an `error` reply).
+    Done,
+    /// The injected drop fault fired: the caller closes the connection.
+    Drop,
+}
+
+/// Decode a `batch` message into everything needed to run it. Total:
+/// hostile input is an `Err` (which becomes an `error` reply), never a
+/// panic.
+fn decode_batch(msg: &Json) -> Result<(u64, Arch, ConvLayer, LayerQuant, Vec<ShardSpec>), String> {
+    let v = msg.get("v").as_hex_u64("batch version")?;
+    if v != proto::VERSION {
+        return Err(format!(
+            "batch speaks protocol version {v}, this worker speaks {}",
+            proto::VERSION
+        ));
+    }
+    let id = msg.get("id").as_hex_u64("batch id")?;
+    let arch_src = msg.get("arch").as_str().ok_or("batch: missing arch")?;
+    let arch = parse_arch(arch_src).map_err(|e| format!("batch arch: {e}"))?;
+    let layer = proto::layer_from_json(msg.get("layer"))?;
+    let q = proto::quant_from_json(msg.get("quant"))?;
+    // the driver sends canonical quants; canonicalizing again is
+    // idempotent and protects against non-canonical peers
+    let q = q.canonical(arch.word_bits, arch.bit_packing);
+    let mut specs = Vec::new();
+    for s in msg.get("specs").as_arr().ok_or("batch: missing specs")? {
+        specs.push(ShardSpec::from_json(s)?);
+    }
+    Ok((id, arch, layer, q, specs))
+}
+
+/// Run one batch, streaming each [`ShardOutcome`] **as soon as its
+/// shard finishes** — the worker-side twin of the mapper hot path,
+/// bit-identical because `run_shard` is a pure function of
+/// `(arch, layer, quant, spec)`. Incremental streaming matters twice:
+/// the driver's per-read timeout only has to cover one shard's
+/// compute, and a worker that dies mid-batch has already shipped its
+/// finished shards, so only the genuinely lost ones re-run locally.
+fn handle_batch(
+    msg: &Json,
+    writer: &mut BufWriter<TcpStream>,
+    opts: WorkerOptions,
+    sent: &mut usize,
+) -> Result<BatchEnd, String> {
+    let (id, arch, layer, q, specs) = match decode_batch(msg) {
+        Ok(d) => d,
+        Err(e) => {
+            proto::write_msg(writer, &proto::error(&e))?;
+            return Ok(BatchEnd::Done);
+        }
+    };
+    let space = MapSpace::of(&arch);
+    let lctx = LayerContext::new(&arch, &layer, &q);
+    // returns Ok(false) when the injected drop fault says to vanish
+    let send = |writer: &mut BufWriter<TcpStream>,
+                sent: &mut usize,
+                i: usize,
+                out: &ShardOutcome|
+     -> Result<bool, String> {
+        if let Some(n) = opts.drop_after {
+            if *sent >= n {
+                return Ok(false);
+            }
+        }
+        proto::write_msg(writer, &proto::outcome(id, i, out))?;
+        *sent += 1;
+        if opts.duplicate_outcomes {
+            proto::write_msg(writer, &proto::outcome(id, i, out))?;
+        }
+        Ok(true)
+    };
+    if opts.reverse_outcomes {
+        // fault-injection path only: compute everything, then stream
+        // in reverse shard order to exercise the driver's reordering
+        let outs: Vec<ShardOutcome> =
+            specs.iter().map(|s| mapper::run_shard(&space, &lctx, s)).collect();
+        for i in (0..outs.len()).rev() {
+            if !send(writer, sent, i, &outs[i])? {
+                return Ok(BatchEnd::Drop);
+            }
+        }
+    } else {
+        for (i, spec) in specs.iter().enumerate() {
+            let out = mapper::run_shard(&space, &lctx, spec);
+            if !send(writer, sent, i, &out)? {
+                return Ok(BatchEnd::Drop);
+            }
+        }
+    }
+    proto::write_msg(writer, &proto::done(id))?;
+    Ok(BatchEnd::Done)
+}
+
+// ------------------------------------------------------------ ledger
+
+/// Driver-side outcome collection for one batch. Slots are keyed by
+/// shard index, so delivery order is irrelevant; duplicates are
+/// ignored (shards are deterministic, so a duplicate carries the same
+/// bits); and [`BatchLedger::missing`] names exactly the specs a lost
+/// worker still owed — the re-injection set.
+#[derive(Debug)]
+pub struct BatchLedger {
+    specs: Vec<ShardSpec>,
+    slots: Vec<Option<ShardOutcome>>,
+}
+
+impl BatchLedger {
+    pub fn new(specs: Vec<ShardSpec>) -> BatchLedger {
+        let n = specs.len();
+        BatchLedger {
+            specs,
+            slots: (0..n).map(|_| None).collect(),
+        }
+    }
+
+    pub fn specs(&self) -> &[ShardSpec] {
+        &self.specs
+    }
+
+    /// Record one shard's outcome. Returns `Ok(true)` if it filled the
+    /// slot, `Ok(false)` for an ignored duplicate, and `Err` for a
+    /// shard index outside the batch (a protocol violation — the
+    /// caller should stop trusting the peer).
+    pub fn deliver(&mut self, shard: usize, out: ShardOutcome) -> Result<bool, String> {
+        match self.slots.get_mut(shard) {
+            None => Err(format!(
+                "shard index {shard} out of range ({} shards in the batch)",
+                self.specs.len()
+            )),
+            Some(slot) => {
+                if slot.is_none() {
+                    *slot = Some(out);
+                    Ok(true)
+                } else {
+                    Ok(false)
+                }
+            }
+        }
+    }
+
+    /// Shard indices not yet delivered.
+    pub fn missing(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.slots.iter().all(|s| s.is_some())
+    }
+
+    /// Merge to the final [`MapperResult`], running `fill` for any
+    /// shard no worker delivered. Because the merge walks slots in
+    /// shard-index order, the result is independent of which host
+    /// computed which shard, in what order, or how many times.
+    pub fn finalize(
+        mut self,
+        mut fill: impl FnMut(usize, &ShardSpec) -> ShardOutcome,
+    ) -> MapperResult {
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_none() {
+                self.slots[i] = Some(fill(i, &self.specs[i]));
+            }
+        }
+        mapper::merge_shards(
+            self.slots
+                .into_iter()
+                .map(|s| s.expect("all slots filled above"))
+                .collect(),
+        )
+    }
+}
+
+// ------------------------------------------------------------ client
+
+/// One driver→worker connection.
+pub struct RemoteClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+    addr: String,
+}
+
+impl RemoteClient {
+    /// Connect and complete the hello exchange within `timeout` (which
+    /// also becomes the per-read timeout for batches).
+    pub fn connect(addr: &str, timeout: Duration) -> Result<RemoteClient, String> {
+        let sockaddr = addr
+            .to_socket_addrs()
+            .map_err(|e| format!("{addr}: {e}"))?
+            .next()
+            .ok_or_else(|| format!("{addr}: no address"))?;
+        let stream =
+            TcpStream::connect_timeout(&sockaddr, timeout).map_err(|e| format!("{addr}: {e}"))?;
+        stream
+            .set_read_timeout(Some(timeout))
+            .map_err(|e| format!("{addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let reader =
+            BufReader::new(stream.try_clone().map_err(|e| format!("{addr}: {e}"))?);
+        let writer = BufWriter::new(stream);
+        let mut client = RemoteClient {
+            reader,
+            writer,
+            next_id: 1,
+            addr: addr.to_string(),
+        };
+        let m = proto::read_msg(&mut client.reader)?;
+        if proto::msg_type(&m)? != "hello" {
+            return Err(format!("{addr}: expected hello, got {}", m.to_string()));
+        }
+        let version = m.get("version").as_hex_u64("hello version")?;
+        if version != proto::VERSION {
+            return Err(format!(
+                "{addr}: protocol version {version} (this driver speaks {})",
+                proto::VERSION
+            ));
+        }
+        Ok(client)
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Execute one batch remotely, delivering outcomes into `ledger`
+    /// as they stream in. On `Err` the connection is unusable but the
+    /// ledger keeps everything already delivered — the caller re-runs
+    /// only [`BatchLedger::missing`].
+    pub fn run_batch(
+        &mut self,
+        arch_spec: &str,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        ledger: &mut BatchLedger,
+    ) -> Result<(), String> {
+        let id = self.next_id;
+        self.next_id += 1;
+        proto::write_msg(
+            &mut self.writer,
+            &proto::batch(id, arch_spec, layer, q, ledger.specs()),
+        )?;
+        loop {
+            let m = proto::read_msg(&mut self.reader)?;
+            match proto::msg_type(&m)? {
+                "outcome" => {
+                    if m.get("id").as_hex_u64("outcome id")? != id {
+                        continue; // stale frame from an earlier batch
+                    }
+                    // strict index decode: a saturating `as usize` on a
+                    // negative/fractional value would silently land in
+                    // the wrong ledger slot — reject instead
+                    let sf = m.get("shard").as_f64().ok_or("outcome: missing shard")?;
+                    if !(sf.is_finite() && sf.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&sf)) {
+                        return Err(format!("worker {}: bad shard index {sf}", self.addr));
+                    }
+                    let out = ShardOutcome::from_json(m.get("outcome"))?;
+                    ledger.deliver(sf as usize, out)?;
+                }
+                "done" => {
+                    if m.get("id").as_hex_u64("done id")? == id {
+                        return Ok(());
+                    }
+                }
+                "error" => {
+                    return Err(format!(
+                        "worker {}: {}",
+                        self.addr,
+                        m.get("msg").as_str().unwrap_or("unspecified error")
+                    ))
+                }
+                other => return Err(format!("worker {}: unexpected '{other}'", self.addr)),
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- scheduler
+
+struct Work<'a> {
+    layer: &'a ConvLayer,
+    quant: LayerQuant,
+    ledger: Mutex<BatchLedger>,
+}
+
+/// Execute a generation's unique cache-miss jobs across `workers` and
+/// the local engine, and record every result in `cache`.
+///
+/// Remote connection threads and the submitting thread race one claim
+/// counter, so job placement is load-driven and nondeterministic — but
+/// each job's result is `merge_shards` over the same deterministic
+/// [`mapper::shard_plan`] regardless of who ran it, so the cache ends
+/// up bit-identical to local (or serial) execution. A worker that
+/// cannot be reached, violates the protocol, or disconnects mid-batch
+/// is abandoned: its claimed batch keeps the outcomes already
+/// streamed, the missing specs are re-injected into the local pool,
+/// and the remaining queue drains through the other executors.
+pub fn eval_jobs(
+    engine: &Engine,
+    arch: &Arch,
+    layers: &[ConvLayer],
+    jobs: &[EvalJob],
+    cache: &MapperCache,
+    cfg: &MapperConfig,
+    workers: &[String],
+) {
+    let work: Vec<Work> = jobs
+        .iter()
+        .filter_map(|job| {
+            let layer = &layers[job.layer_index];
+            // canonicalize once, here: shard seeds, the local-refill
+            // LayerContext, and the remote worker (which always
+            // canonicalizes) must all see the same quant, or a job's
+            // bits would depend on which host ran it. evaluate_genomes
+            // already sends canonical quants; this keeps direct
+            // callers honest too (and matches search_on_engine).
+            let quant = job.quant.canonical(arch.word_bits, arch.bit_packing);
+            if cache.probe(arch, layer, &quant, cfg).is_some() {
+                return None; // already known (positive or negative)
+            }
+            let specs =
+                mapper::shard_plan(cfg, cfg.seed ^ mapper::workload_hash(layer, &quant));
+            Some(Work {
+                layer,
+                quant,
+                ledger: Mutex::new(BatchLedger::new(specs)),
+            })
+        })
+        .collect();
+    if work.is_empty() {
+        return;
+    }
+    let rendered = render_arch(arch);
+    let next = AtomicUsize::new(0);
+    let timeout = worker_timeout();
+    std::thread::scope(|sc| {
+        for addr in workers {
+            let work = &work;
+            let next = &next;
+            let rendered = &rendered;
+            sc.spawn(move || {
+                let mut client = match RemoteClient::connect(addr, timeout) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("qmap: worker {addr} unavailable, staying local: {e}");
+                        engine.note_lost_worker();
+                        return;
+                    }
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= work.len() {
+                        return;
+                    }
+                    let w = &work[i];
+                    let mut ledger = w.ledger.lock().unwrap();
+                    match client.run_batch(rendered, w.layer, &w.quant, &mut ledger) {
+                        Ok(()) => {
+                            engine.note_remote_job();
+                        }
+                        Err(e) => {
+                            let owed = ledger.missing().len();
+                            drop(ledger);
+                            eprintln!(
+                                "qmap: worker {addr} lost mid-batch, re-injecting {owed} \
+                                 shard(s) into the local pool: {e}"
+                            );
+                            engine.note_requeued(owed as u64);
+                            engine.note_lost_worker();
+                            return; // unclaimed jobs drain via the other executors
+                        }
+                    }
+                }
+            });
+        }
+        // the submitting thread claims from the same counter and runs
+        // jobs on the local work-stealing pool — idle local workers
+        // keep stealing shards while remote batches are in flight
+        loop {
+            let i = next.fetch_add(1, Ordering::SeqCst);
+            if i >= work.len() {
+                break;
+            }
+            run_job_local(engine, arch, &work[i]);
+        }
+    });
+    // sweep: re-run anything a lost worker never delivered (on the
+    // pool), merge each job in shard-index order, record in the cache
+    for w in &work {
+        let ledger = {
+            let mut guard = w.ledger.lock().unwrap();
+            std::mem::replace(&mut *guard, BatchLedger::new(Vec::new()))
+        };
+        let result = if ledger.is_complete() {
+            ledger.finalize(|_, _| unreachable!("complete ledger never fills"))
+        } else {
+            let specs: Vec<ShardSpec> = ledger.specs().to_vec();
+            let missing = ledger.missing();
+            let space = MapSpace::of(arch);
+            let lctx = LayerContext::new(arch, w.layer, &w.quant);
+            let refills =
+                engine.map(&missing, |&i| mapper::run_shard(&space, &lctx, &specs[i]));
+            let mut ledger = ledger;
+            for (&i, out) in missing.iter().zip(refills) {
+                let _ = ledger.deliver(i, out);
+            }
+            ledger.finalize(|_, spec| mapper::run_shard(&space, &lctx, spec))
+        };
+        cache.insert_search(arch, w.layer, &w.quant, cfg, &result);
+    }
+}
+
+/// Run one claimed job entirely on the local pool (the same shards a
+/// worker would have executed), filling its ledger.
+fn run_job_local(engine: &Engine, arch: &Arch, w: &Work) {
+    let specs: Vec<ShardSpec> = w.ledger.lock().unwrap().specs().to_vec();
+    let space = MapSpace::of(arch);
+    let lctx = LayerContext::new(arch, w.layer, &w.quant);
+    let outs = engine.map(&specs, |s| mapper::run_shard(&space, &lctx, s));
+    let mut ledger = w.ledger.lock().unwrap();
+    for (i, out) in outs.into_iter().enumerate() {
+        let _ = ledger.deliver(i, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::toy;
+
+    fn workload() -> (Arch, ConvLayer, LayerQuant, MapperConfig) {
+        let arch = toy();
+        let layer = ConvLayer::conv("c1", 3, 8, 3, 16, 1);
+        let q = LayerQuant::uniform(4).canonical(arch.word_bits, arch.bit_packing);
+        let cfg = MapperConfig {
+            valid_target: 30,
+            max_draws: 30_000,
+            seed: 11,
+            shards: 3,
+        };
+        (arch, layer, q, cfg)
+    }
+
+    fn serial_reference(
+        arch: &Arch,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        cfg: &MapperConfig,
+    ) -> MapperResult {
+        mapper::search(arch, layer, q, cfg)
+    }
+
+    fn run_against(opts: WorkerOptions) -> (MapperResult, MapperResult) {
+        let (arch, layer, q, cfg) = workload();
+        let addr = spawn_local_worker(opts).expect("loopback worker");
+        let mut client =
+            RemoteClient::connect(&addr, Duration::from_secs(10)).expect("connect");
+        let specs = mapper::shard_plan(&cfg, cfg.seed ^ mapper::workload_hash(&layer, &q));
+        let mut ledger = BatchLedger::new(specs);
+        let rendered = render_arch(&arch);
+        let net = client.run_batch(&rendered, &layer, &q, &mut ledger);
+        // only the injected drop fault may sever the stream
+        assert_eq!(net.is_err(), opts.drop_after.is_some(), "{net:?}");
+        let space = MapSpace::of(&arch);
+        let lctx = LayerContext::new(&arch, &layer, &q);
+        let got = ledger.finalize(|_, spec| mapper::run_shard(&space, &lctx, spec));
+        (got, serial_reference(&arch, &layer, &q, &cfg))
+    }
+
+    fn assert_bit_identical(got: &MapperResult, want: &MapperResult) {
+        assert_eq!(got.valid, want.valid);
+        assert_eq!(got.draws, want.draws);
+        assert_eq!(
+            got.best.as_ref().map(|e| e.edp().to_bits()),
+            want.best.as_ref().map(|e| e.edp().to_bits())
+        );
+        assert_eq!(got.best_mapping, want.best_mapping);
+    }
+
+    #[test]
+    fn loopback_batch_is_bit_identical_to_serial() {
+        let (got, want) = run_against(WorkerOptions::default());
+        assert!(want.best.is_some());
+        assert_bit_identical(&got, &want);
+    }
+
+    #[test]
+    fn duplicate_delivery_is_idempotent() {
+        let (got, want) = run_against(WorkerOptions {
+            duplicate_outcomes: true,
+            ..WorkerOptions::default()
+        });
+        assert_bit_identical(&got, &want);
+    }
+
+    #[test]
+    fn reordered_delivery_merges_identically() {
+        let (got, want) = run_against(WorkerOptions {
+            reverse_outcomes: true,
+            ..WorkerOptions::default()
+        });
+        assert_bit_identical(&got, &want);
+    }
+
+    #[test]
+    fn dropped_connection_refills_locally_and_identically() {
+        for drop_after in [0usize, 1, 2] {
+            let (got, want) = run_against(WorkerOptions {
+                drop_after: Some(drop_after),
+                ..WorkerOptions::default()
+            });
+            assert_bit_identical(&got, &want);
+        }
+    }
+
+    #[test]
+    fn ledger_rejects_out_of_range_and_ignores_duplicates() {
+        let (arch, layer, q, cfg) = workload();
+        let specs = mapper::shard_plan(&cfg, cfg.seed ^ mapper::workload_hash(&layer, &q));
+        let space = MapSpace::of(&arch);
+        let lctx = LayerContext::new(&arch, &layer, &q);
+        let out0 = mapper::run_shard(&space, &lctx, &specs[0]);
+        let mut ledger = BatchLedger::new(specs);
+        assert!(ledger.deliver(99, out0.clone()).is_err());
+        assert_eq!(ledger.deliver(0, out0.clone()), Ok(true));
+        assert_eq!(ledger.deliver(0, out0), Ok(false));
+        assert_eq!(ledger.missing(), vec![1, 2]);
+        assert!(!ledger.is_complete());
+    }
+
+    #[test]
+    fn eval_jobs_fills_the_cache_identically_to_serial() {
+        let (arch, layer, q, cfg) = workload();
+        let addr = spawn_local_worker(WorkerOptions::default()).expect("worker");
+        let layers = vec![layer.clone(), ConvLayer::fc("fc", 16, 10)];
+        let jobs: Vec<EvalJob> = vec![
+            EvalJob {
+                layer_index: 0,
+                quant: q,
+            },
+            EvalJob {
+                layer_index: 1,
+                quant: LayerQuant::uniform(8).canonical(arch.word_bits, arch.bit_packing),
+            },
+        ];
+        let engine = Engine::new(2);
+        let cache = MapperCache::new();
+        eval_jobs(&engine, &arch, &layers, &jobs, &cache, &cfg, &[addr]);
+        assert_eq!(cache.len(), 2);
+        // every entry matches a from-scratch serial evaluation
+        let serial = MapperCache::new();
+        for job in &jobs {
+            let got = cache.evaluate(&arch, &layers[job.layer_index], &job.quant, &cfg);
+            let want = serial.evaluate(&arch, &layers[job.layer_index], &job.quant, &cfg);
+            assert_eq!(got, want);
+            if let (Some(g), Some(w)) = (got, want) {
+                assert_eq!(g.edp.to_bits(), w.edp.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn unreachable_worker_degrades_to_local() {
+        let (arch, layer, q, cfg) = workload();
+        let layers = vec![layer];
+        let jobs = vec![EvalJob {
+            layer_index: 0,
+            quant: q,
+        }];
+        let engine = Engine::new(2);
+        let cache = MapperCache::new();
+        // a loopback port nobody listens on: the connect is refused
+        // immediately (no timeout involved) and the jobs run locally
+        eval_jobs(
+            &engine,
+            &arch,
+            &layers,
+            &jobs,
+            &cache,
+            &cfg,
+            &["127.0.0.1:9".to_string()],
+        );
+        assert_eq!(cache.len(), 1);
+        let serial = MapperCache::new();
+        assert_eq!(
+            cache.evaluate(&arch, &layers[0], &jobs[0].quant, &cfg),
+            serial.evaluate(&arch, &layers[0], &jobs[0].quant, &cfg)
+        );
+    }
+}

@@ -39,11 +39,19 @@ characterize:
   search    [--arch A] [--net N] [--strategy proposed|naive|uniform]
             [--gens 20] [--pop 32] [--offspring 16]
             [--checkpoint file.json [--resume]]              NSGA-II / baseline search
-                                                             (checkpointed per generation)
+            [--workers host:port,...]                        (checkpointed per generation;
+                                                             shards fan out to qmap workers,
+                                                             results bit-identical to local)
+
+distributed:
+  worker    --listen HOST:PORT                               serve mapper shard batches to a
+                                                             remote `qmap search --workers`
+                                                             driver (stateless, kill-safe)
 
 engine:
-  engine-stats [--workers N]                                 work-stealing pool self-test:
-                                                             scaling rows + steal/split counters
+  engine-stats [--budget N] [--workers host:port,...]        work-stealing pool self-test:
+                                                             scaling rows + steal/split/remote
+                                                             counters, bit-identity check
 
 paper artifacts (same engines as `cargo bench`):
   fig1 [--n 250] | table1 | fig3 | fig4 | fig5 | fig6 | table2
@@ -91,6 +99,7 @@ fn main() {
         "enumerate" => cmd_enumerate(&args),
         "eval" => cmd_eval(&args, &rc),
         "search" => cmd_search(&args, &rc),
+        "worker" => cmd_worker(&args),
         "engine-stats" => cmd_engine_stats(&args, &rc),
         "fig1" => {
             let r = experiments::fig1_correlation(args.usize_or("n", 250), &rc);
@@ -212,6 +221,29 @@ fn parse_genome(s: &str, n: usize) -> Result<QuantConfig, String> {
 fn fail(e: impl std::fmt::Display) -> i32 {
     eprintln!("error: {e}");
     1
+}
+
+/// Remote worker addresses: the `--workers` flag, falling back to the
+/// `QMAP_WORKERS` environment variable. Empty means local-only.
+fn worker_list(args: &Args) -> Vec<String> {
+    match args.get("workers") {
+        Some(s) => qmap::coordinator::parse_worker_list(s),
+        None => qmap::coordinator::workers_from_env(),
+    }
+}
+
+/// Build the engine for a run: local, or distributed across the
+/// configured `qmap worker` processes (results are bit-identical
+/// either way; workers only add capacity).
+fn build_engine(threads: usize, workers: Vec<String>) -> Engine {
+    if !workers.is_empty() {
+        eprintln!(
+            "distributing mapper shards to {} worker(s): {}",
+            workers.len(),
+            workers.join(", ")
+        );
+    }
+    Engine::distributed(threads, workers)
 }
 
 // ------------------------------------------------------------ commands
@@ -396,7 +428,9 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
     nsga.population = args.usize_or("pop", nsga.population);
     nsga.offspring = args.usize_or("offspring", nsga.offspring);
 
-    let engine = Engine::new(rc.threads);
+    let workers = worker_list(args);
+    let distributed = !workers.is_empty();
+    let engine = build_engine(rc.threads, workers);
     let cache = MapperCache::new();
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
     let strategy = args.str_or("strategy", "proposed");
@@ -437,6 +471,16 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
         }
         (other, _) => return fail(format!("unknown strategy '{other}'")),
     };
+    if distributed {
+        // positive marker for scripts (the CI smoke asserts on it):
+        // "remote job(s) > 0" proves the remote path actually executed
+        // rather than silently degrading to local
+        let st = engine.stats();
+        eprintln!(
+            "distributed: {} remote job(s), {} requeued spec(s), {} lost worker(s)",
+            st.remote_jobs, st.requeued_specs, st.lost_workers
+        );
+    }
     let reference = evaluate_network(
         &arch,
         &layers,
@@ -466,13 +510,49 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
     0
 }
 
+/// Serve mapper shard batches to remote drivers: `qmap worker --listen
+/// HOST:PORT`. Stateless — every batch carries its full context — so a
+/// worker can be killed and restarted at any time; the driver re-runs
+/// whatever was in flight.
+fn cmd_worker(args: &Args) -> i32 {
+    let addr = args.str_or("listen", "127.0.0.1:7070");
+    let listener = match std::net::TcpListener::bind(&addr) {
+        Ok(l) => l,
+        Err(e) => return fail(format!("bind {addr}: {e}")),
+    };
+    let local = listener
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| addr.clone());
+    // the "listening" line is what scripts (and the CI smoke) wait for
+    eprintln!(
+        "qmap worker listening on {local} (protocol v{})",
+        qmap::engine::proto::VERSION
+    );
+    qmap::engine::remote::serve(listener, qmap::engine::WorkerOptions::default());
+    fail("worker accept loop ended")
+}
+
 /// Exercise the work-stealing engine on a small synthetic population and
 /// print scaling rows plus the pool's counters — a quick sanity check
 /// that parallel evaluation is (a) faster and (b) bit-identical to the
-/// 1-worker baseline on this machine.
+/// 1-worker baseline on this machine. With `--workers host:port,...`
+/// the same check runs through the distributed backend.
 fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
     use std::time::Instant;
-    let budget = args.usize_or("workers", rc.threads).max(1);
+    // `--workers N` historically meant the thread budget; keep that
+    // reading when the value is a bare integer, now that `--workers`
+    // means remote addresses everywhere else (`--budget` is explicit)
+    let (legacy_budget, remote_workers) = match args.get("workers") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) => (Some(n), Vec::new()),
+            Err(_) => (None, qmap::coordinator::parse_worker_list(s)),
+        },
+        None => (None, qmap::coordinator::workers_from_env()),
+    };
+    let budget = args
+        .usize_or("budget", legacy_budget.unwrap_or(rc.threads))
+        .max(1);
     let arch = presets::toy();
     let layers = vec![
         ConvLayer::conv("c1", 3, 8, 3, 16, 1),
@@ -512,10 +592,17 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
     if !workers.contains(&budget) {
         workers.push(budget);
     }
+    if !remote_workers.is_empty() {
+        println!(
+            "  fanning shards out to {} remote worker(s): {}",
+            remote_workers.len(),
+            remote_workers.join(", ")
+        );
+    }
     let mut reference: Option<Vec<Option<qmap::eval::NetworkEval>>> = None;
     let mut t1 = 0.0f64;
     for &w in &workers {
-        let engine = Engine::new(w);
+        let engine = Engine::distributed(w, remote_workers.clone());
         let cache = MapperCache::new();
         let t0 = Instant::now();
         let evals = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg);
@@ -536,13 +623,16 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
         };
         let st = engine.stats();
         println!(
-            "  workers {w:>2}: {:>8.1} ms  speedup {:>4.2}x  jobs {:>3}  splits {:>3}  tasks {:>4}  steals {:>4}  identical {}",
+            "  workers {w:>2}: {:>8.1} ms  speedup {:>4.2}x  jobs {:>3}  splits {:>3}  tasks {:>4}  steals {:>4}  remote {:>3}  requeued {:>3}  lost {:>2}  identical {}",
             dt * 1e3,
             if dt > 0.0 && t1 > 0.0 { t1 / dt } else { 1.0 },
             st.jobs,
             st.splits,
             st.tasks,
             st.steals,
+            st.remote_jobs,
+            st.requeued_specs,
+            st.lost_workers,
             identical
         );
         if !identical {

@@ -92,13 +92,11 @@ impl MapperCache {
     fn key(arch: &Arch, layer: &ConvLayer, q: &LayerQuant) -> u64 {
         // packing-equivalent settings share one entry (see mapper::search)
         let q = &q.canonical(arch.word_bits, arch.bit_packing);
-        let mut h = workload_hash(layer, q);
-        for b in arch.name.as_bytes() {
-            h ^= *b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        h ^= (arch.bit_packing as u64) << 7;
-        h
+        // continue the workload hash's FNV stream with the arch name
+        // (bit-identical to the previous inlined loop)
+        let mut h = crate::util::Fnv1a::with_state(workload_hash(layer, q));
+        h.write(arch.name.as_bytes());
+        h.finish() ^ ((arch.bit_packing as u64) << 7)
     }
 
     /// Evaluate a workload through the cache, running the mapper on miss.

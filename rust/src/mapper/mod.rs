@@ -13,11 +13,12 @@ pub mod gamma;
 use crate::arch::Arch;
 use crate::energy::{estimate_into, Estimate};
 use crate::mapping::mapspace::MapSpace;
-use crate::mapping::{LayerContext, Mapping};
+use crate::mapping::{LayerContext, LevelMapping, Mapping};
 use crate::nest::{analyze_into, NestAnalysis};
 use crate::quant::LayerQuant;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::workload::ConvLayer;
+use crate::workload::{ConvLayer, Dim};
 
 /// Mapper configuration.
 #[derive(Debug, Clone, Copy)]
@@ -79,7 +80,7 @@ impl EvalContext {
 }
 
 /// Outcome of a mapper search on one workload.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MapperResult {
     /// Best (minimum-EDP) estimate found; `None` if no valid mapping.
     pub best: Option<Estimate>,
@@ -98,20 +99,199 @@ pub struct MapperResult {
 /// being executed — which is what lets `engine::driver` run the same
 /// shards on a work-stealing pool and still merge to bit-identical
 /// results.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardSpec {
     pub seed: u64,
     pub valid_target: u64,
     pub max_draws: u64,
 }
 
+impl ShardSpec {
+    /// Wire form. Budgets and seeds are `u64`s that can exceed 2^53
+    /// (e.g. `valid_target: u64::MAX` for draw-bounded searches), so
+    /// every field travels as a hex string, never a JSON number.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::hex_u64(self.seed)),
+            ("valid_target", Json::hex_u64(self.valid_target)),
+            ("max_draws", Json::hex_u64(self.max_draws)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ShardSpec, String> {
+        Ok(ShardSpec {
+            seed: v.get("seed").as_hex_u64("spec seed")?,
+            valid_target: v.get("valid_target").as_hex_u64("spec valid_target")?,
+            max_draws: v.get("max_draws").as_hex_u64("spec max_draws")?,
+        })
+    }
+}
+
 /// Per-shard search outcome. Opaque outside the mapper: produced by
-/// [`run_shard`], consumed (in shard-index order) by [`merge_shards`].
+/// [`run_shard`], consumed (in shard-index order) by [`merge_shards`],
+/// and shipped between hosts via [`ShardOutcome::to_json`] — the wire
+/// form is bit-exact (every f64 travels as its IEEE-754 bits), so a
+/// remotely executed shard merges identically to a local one.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardOutcome {
     /// (EDP, estimate, mapping) of the shard's winner.
     best: Option<(f64, Estimate, Mapping)>,
     valid: u64,
     draws: u64,
+}
+
+fn estimate_to_json(e: &Estimate) -> Json {
+    Json::obj(vec![
+        ("energy_pj", Json::hex_bits(e.energy_pj)),
+        (
+            "level_energy_pj",
+            Json::Arr(e.level_energy_pj.iter().map(|&x| Json::hex_bits(x)).collect()),
+        ),
+        ("mac_energy_pj", Json::hex_bits(e.mac_energy_pj)),
+        ("cycles", Json::hex_bits(e.cycles)),
+        (
+            "level_words",
+            Json::Arr(e.level_words.iter().map(|&x| Json::hex_bits(x)).collect()),
+        ),
+        ("pes_used", Json::hex_u64(e.pes_used)),
+    ])
+}
+
+fn hex_f64_arr(v: &Json, what: &str) -> Result<Vec<f64>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("{what}: not an array"))?
+        .iter()
+        .map(|x| x.as_f64_bits(what))
+        .collect()
+}
+
+fn estimate_from_json(v: &Json) -> Result<Estimate, String> {
+    Ok(Estimate {
+        energy_pj: v.get("energy_pj").as_f64_bits("estimate energy_pj")?,
+        level_energy_pj: hex_f64_arr(v.get("level_energy_pj"), "estimate level_energy_pj")?,
+        mac_energy_pj: v.get("mac_energy_pj").as_f64_bits("estimate mac_energy_pj")?,
+        cycles: v.get("cycles").as_f64_bits("estimate cycles")?,
+        level_words: hex_f64_arr(v.get("level_words"), "estimate level_words")?,
+        pes_used: v.get("pes_used").as_hex_u64("estimate pes_used")?,
+    })
+}
+
+fn hex_u64_7(v: &Json, what: &str) -> Result<[u64; 7], String> {
+    let arr = v.as_arr().ok_or_else(|| format!("{what}: not an array"))?;
+    if arr.len() != 7 {
+        return Err(format!("{what}: expected 7 entries, got {}", arr.len()));
+    }
+    let mut out = [0u64; 7];
+    for (i, x) in arr.iter().enumerate() {
+        out[i] = x.as_hex_u64(what)?;
+    }
+    Ok(out)
+}
+
+fn mapping_to_json(m: &Mapping) -> Json {
+    let levels: Vec<Json> = m
+        .levels
+        .iter()
+        .map(|lm| {
+            Json::obj(vec![
+                (
+                    "temporal",
+                    Json::Arr(lm.temporal.iter().map(|&x| Json::hex_u64(x)).collect()),
+                ),
+                (
+                    "spatial",
+                    Json::Arr(lm.spatial.iter().map(|&x| Json::hex_u64(x)).collect()),
+                ),
+                (
+                    "perm",
+                    Json::arr_usize(&lm.perm.iter().map(|d| d.index()).collect::<Vec<_>>()),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("levels", Json::Arr(levels))])
+}
+
+fn mapping_from_json(v: &Json) -> Result<Mapping, String> {
+    let mut levels = Vec::new();
+    for lv in v.get("levels").as_arr().ok_or("mapping: missing levels")? {
+        let perm_arr = lv.get("perm").as_arr().ok_or("mapping: missing perm")?;
+        if perm_arr.len() != 7 {
+            return Err(format!("mapping perm: expected 7 entries, got {}", perm_arr.len()));
+        }
+        let mut perm = [Dim::N; 7];
+        for (i, x) in perm_arr.iter().enumerate() {
+            let xf = x.as_f64().ok_or("mapping perm: not a number")?;
+            // strict: a saturating cast would map -1 or 3.7 to a valid
+            // index and silently corrupt the decoded mapping
+            if !(xf.is_finite() && xf.fract() == 0.0 && (0.0..7.0).contains(&xf)) {
+                return Err(format!("mapping perm: bad dim index {xf}"));
+            }
+            perm[i] = Dim::from_index(xf as usize);
+        }
+        levels.push(LevelMapping {
+            temporal: hex_u64_7(lv.get("temporal"), "mapping temporal")?,
+            spatial: hex_u64_7(lv.get("spatial"), "mapping spatial")?,
+            perm,
+        });
+    }
+    if levels.is_empty() {
+        return Err("mapping: no levels".into());
+    }
+    Ok(Mapping { levels })
+}
+
+impl ShardOutcome {
+    /// Bit-exact wire form: counters as hex `u64`s, the winning EDP,
+    /// estimate, and mapping (if any) with every f64 as its raw bits.
+    pub fn to_json(&self) -> Json {
+        let best = match &self.best {
+            None => Json::Null,
+            Some((edp, est, m)) => Json::obj(vec![
+                ("edp", Json::hex_bits(*edp)),
+                ("est", estimate_to_json(est)),
+                ("mapping", mapping_to_json(m)),
+            ]),
+        };
+        Json::obj(vec![
+            ("best", best),
+            ("valid", Json::hex_u64(self.valid)),
+            ("draws", Json::hex_u64(self.draws)),
+        ])
+    }
+
+    /// Decode a wire-form outcome. Total: malformed input is an `Err`,
+    /// never a panic — this is parsed from network bytes.
+    pub fn from_json(v: &Json) -> Result<ShardOutcome, String> {
+        let best = match v.get("best") {
+            Json::Null => None,
+            b => Some((
+                b.get("edp").as_f64_bits("outcome edp")?,
+                estimate_from_json(b.get("est"))?,
+                mapping_from_json(b.get("mapping"))?,
+            )),
+        };
+        Ok(ShardOutcome {
+            best,
+            valid: v.get("valid").as_hex_u64("outcome valid")?,
+            draws: v.get("draws").as_hex_u64("outcome draws")?,
+        })
+    }
+
+    /// Valid mappings this shard found (summary accessor for logs/tests).
+    pub fn valid(&self) -> u64 {
+        self.valid
+    }
+
+    /// Candidates this shard drew.
+    pub fn draws(&self) -> u64 {
+        self.draws
+    }
+
+    /// The shard winner's EDP, if any mapping was valid.
+    pub fn best_edp(&self) -> Option<f64> {
+        self.best.as_ref().map(|(edp, _, _)| *edp)
+    }
 }
 
 /// The deterministic decomposition of one workload search into shards:
@@ -170,8 +350,12 @@ pub fn run_shard(space: &MapSpace, lctx: &LayerContext, spec: &ShardSpec) -> Sha
 /// Deterministic merge of shard outcomes: iterate in shard-index order,
 /// keep the first strictly-minimum EDP (ties go to the lowest shard
 /// index), and sum the counters. Order-independent of how the shards
-/// were *executed*, so work-stealing execution merges identically to
-/// sequential execution.
+/// were *executed*, so work-stealing (or remote) execution merges
+/// identically to sequential execution.
+///
+/// Total on every input: an empty outcome set, or one where no shard
+/// found a valid mapping, merges to the no-mapping result with summed
+/// counters — no caller invariant required.
 pub fn merge_shards(outcomes: Vec<ShardOutcome>) -> MapperResult {
     let mut valid = 0u64;
     let mut draws = 0u64;
@@ -202,14 +386,20 @@ pub fn merge_shards(outcomes: Vec<ShardOutcome>) -> MapperResult {
 }
 
 /// Resolve the configured shard count (0 = auto) and cap it so no shard
-/// is left without a share of the valid-mapping target.
+/// is left without a share of the valid-mapping target *or* of the draw
+/// budget: `shards > max_draws` used to hand some shards a zero-draw
+/// budget (dead weight the merge then had to carry), so degenerate
+/// configs now collapse to fewer shards instead. Always returns
+/// `>= 1`, even for zero budgets.
 pub fn effective_shards(cfg: &MapperConfig) -> usize {
     let s = if cfg.shards == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
         cfg.shards
     };
-    s.max(1).min(cfg.valid_target.clamp(1, 1024) as usize)
+    s.max(1)
+        .min(cfg.valid_target.clamp(1, 1024) as usize)
+        .min(cfg.max_draws.clamp(1, 1024) as usize)
 }
 
 /// Random-search the mapspace of `(layer, q)` on `arch`.
@@ -256,25 +446,20 @@ pub fn search(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, cfg: &MapperConfig
 }
 
 /// Stable 64-bit hash of a workload + quantization (cache key and seed
-/// derivation). FNV-1a over the canonical fields.
+/// derivation). FNV-1a over the canonical fields, via the shared
+/// `util::Fnv1a` (bit-identical to the previous inlined loop).
 pub fn workload_hash(layer: &ConvLayer, q: &LayerQuant) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut feed = |x: u64| {
-        for b in x.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    };
+    let mut h = crate::util::Fnv1a::new();
     for &d in &layer.dims {
-        feed(d);
+        h.write_u64(d);
     }
-    feed(layer.stride.0);
-    feed(layer.stride.1);
-    feed(layer.kind as u64);
-    feed(q.qa as u64);
-    feed(q.qw as u64);
-    feed(q.qo as u64);
-    h
+    h.write_u64(layer.stride.0);
+    h.write_u64(layer.stride.1);
+    h.write_u64(layer.kind as u64);
+    h.write_u64(q.qa as u64);
+    h.write_u64(q.qw as u64);
+    h.write_u64(q.qo as u64);
+    h.finish()
 }
 
 #[cfg(test)]
@@ -387,6 +572,158 @@ mod tests {
         // name does NOT affect the key: same shape+q hits the same cache
         let l1b = ConvLayer::conv("other_name", 4, 8, 3, 8, 1);
         assert_eq!(workload_hash(&l1, &q8), workload_hash(&l1b, &q8));
+    }
+
+    #[test]
+    fn merge_shards_is_total_on_degenerate_inputs() {
+        // empty outcome set: the no-mapping result, not a panic
+        let r = merge_shards(Vec::new());
+        assert!(r.best.is_none() && r.best_mapping.is_none());
+        assert_eq!((r.valid, r.draws), (0, 0));
+        // all-empty outcomes (no shard found a mapping): counters sum.
+        // A zero-capacity weight scratchpad makes every mapping invalid,
+        // so emptiness is guaranteed, not seed-dependent.
+        let mut a = toy();
+        a.levels[0].capacity = crate::arch::Capacity::PerTensor([0, 64, 64]);
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let space = MapSpace::of(&a);
+        let q = LayerQuant::uniform(8);
+        let lctx = LayerContext::new(&a, &l, &q);
+        let outcomes: Vec<ShardOutcome> = (0..3)
+            .map(|i| {
+                run_shard(
+                    &space,
+                    &lctx,
+                    &ShardSpec {
+                        seed: i,
+                        valid_target: u64::MAX,
+                        max_draws: 10,
+                    },
+                )
+            })
+            .collect();
+        assert!(outcomes.iter().all(|o| o.best_edp().is_none()));
+        let r = merge_shards(outcomes);
+        assert!(r.best.is_none());
+        assert_eq!(r.draws, 30);
+    }
+
+    #[test]
+    fn shard_plan_is_total_when_shards_exceed_budgets() {
+        // more shards than draws: collapse instead of zero-budget shards
+        let cfg = MapperConfig {
+            valid_target: 1_000,
+            max_draws: 3,
+            seed: 1,
+            shards: 16,
+        };
+        let specs = shard_plan(&cfg, 99);
+        assert_eq!(specs.len(), 3);
+        assert!(specs.iter().all(|s| s.max_draws >= 1));
+        assert_eq!(specs.iter().map(|s| s.max_draws).sum::<u64>(), 3);
+        // zero draw budget: one empty shard, still a valid plan
+        let zero = MapperConfig {
+            valid_target: 100,
+            max_draws: 0,
+            seed: 1,
+            shards: 8,
+        };
+        let specs = shard_plan(&zero, 99);
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].max_draws, 0);
+        // zero valid target likewise
+        let novalid = MapperConfig {
+            valid_target: 0,
+            max_draws: 100,
+            seed: 1,
+            shards: 8,
+        };
+        assert_eq!(shard_plan(&novalid, 99).len(), 1);
+        // and the full search on such configs terminates with no result
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let r = search(&a, &l, &LayerQuant::uniform(8), &zero);
+        assert!(r.best.is_none());
+        assert_eq!(r.draws, 0);
+    }
+
+    #[test]
+    fn shard_spec_json_roundtrips_extreme_budgets() {
+        let spec = ShardSpec {
+            seed: u64::MAX,
+            valid_target: u64::MAX, // > 2^53: must not travel as an f64
+            max_draws: (1u64 << 53) + 1,
+        };
+        let back = ShardSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        let reparsed =
+            ShardSpec::from_json(&crate::util::json::parse(&spec.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(reparsed, spec);
+        assert!(ShardSpec::from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn shard_outcome_json_roundtrips_bit_exactly() {
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(4);
+        let space = MapSpace::of(&a);
+        let lctx = LayerContext::new(&a, &l, &q);
+        let spec = ShardSpec {
+            seed: 7,
+            valid_target: 50,
+            max_draws: 50_000,
+        };
+        let out = run_shard(&space, &lctx, &spec);
+        assert!(out.best_edp().is_some());
+        // through the value model AND through actual bytes
+        let text = out.to_json().to_string();
+        let back = ShardOutcome::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, out);
+        assert_eq!(
+            back.best_edp().unwrap().to_bits(),
+            out.best_edp().unwrap().to_bits()
+        );
+        // a no-mapping outcome round-trips too
+        let empty = run_shard(
+            &space,
+            &lctx,
+            &ShardSpec {
+                seed: 7,
+                valid_target: u64::MAX,
+                max_draws: 0,
+            },
+        );
+        assert!(empty.best_edp().is_none());
+        let back = ShardOutcome::from_json(&empty.to_json()).unwrap();
+        assert_eq!(back, empty);
+        // malformed wire data is an error, never a panic
+        assert!(ShardOutcome::from_json(&Json::Num(3.0)).is_err());
+        assert!(
+            ShardOutcome::from_json(&Json::obj(vec![("best", Json::Num(1.0))])).is_err()
+        );
+        // perm indices must be exact in-range integers: a saturating
+        // cast would turn -1 or 3.7 into a "valid" dim and corrupt the
+        // mapping silently
+        let mut doc = out.to_json();
+        if let Json::Obj(top) = &mut doc {
+            let best = top.get_mut("best").unwrap();
+            if let Json::Obj(b) = best {
+                let mapping = b.get_mut("mapping").unwrap();
+                if let Json::Obj(mm) = mapping {
+                    if let Some(Json::Arr(levels)) = mm.get_mut("levels") {
+                        if let Json::Obj(l0) = &mut levels[0] {
+                            l0.insert(
+                                "perm".into(),
+                                Json::arr_f64(&[-1.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        assert!(ShardOutcome::from_json(&doc).is_err(), "negative perm index accepted");
     }
 
     #[test]

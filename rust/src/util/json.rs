@@ -64,6 +64,33 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// A `u64` as a 16-digit hex string value. JSON numbers are f64, so
+    /// integers above 2^53 (draw budgets, RNG states, hashes) and f64
+    /// *bit patterns* both travel as hex strings; see [`Json::hex_bits`].
+    pub fn hex_u64(x: u64) -> Json {
+        Json::Str(format!("{x:016x}"))
+    }
+
+    /// An `f64` as the hex of its IEEE-754 bits — the only encoding that
+    /// round-trips every value (infinities, subnormals, every last
+    /// mantissa bit). Used by `engine::checkpoint` and the distributed
+    /// wire protocol, where "close" is not "bit-identical".
+    pub fn hex_bits(x: f64) -> Json {
+        Self::hex_u64(x.to_bits())
+    }
+
+    /// Decode a [`Json::hex_u64`] value; `what` names the field in the
+    /// error message.
+    pub fn as_hex_u64(&self, what: &str) -> Result<u64, String> {
+        let s = self.as_str().ok_or_else(|| format!("{what}: not a string"))?;
+        u64::from_str_radix(s, 16).map_err(|_| format!("{what}: bad hex '{s}'"))
+    }
+
+    /// Decode a [`Json::hex_bits`] value back to the exact f64.
+    pub fn as_f64_bits(&self, what: &str) -> Result<f64, String> {
+        self.as_hex_u64(what).map(f64::from_bits)
+    }
+
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -126,12 +153,21 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Maximum container nesting the parser accepts. The parser is
+/// recursive-descent, so unbounded nesting (`[[[[…`) from an untrusted
+/// source — a network frame, a corrupt checkpoint — would overflow the
+/// stack instead of returning an error. Our real documents nest < 10
+/// deep.
+pub const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document. Returns an error message with byte offset on
-/// malformed input.
+/// malformed input; never panics, and refuses pathological nesting
+/// (see [`MAX_DEPTH`]).
 pub fn parse(src: &str) -> Result<Json, String> {
     let mut p = Parser {
         b: src.as_bytes(),
         i: 0,
+        depth: 0,
     };
     p.skip_ws();
     let v = p.value()?;
@@ -145,6 +181,7 @@ pub fn parse(src: &str) -> Result<Json, String> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -189,12 +226,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, String> {
         self.eat(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -210,6 +257,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
@@ -219,10 +267,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, String> {
         self.eat(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -233,6 +283,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
@@ -350,5 +401,49 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn hex_u64_roundtrips_extremes() {
+        for x in [0u64, 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
+            let v = Json::hex_u64(x);
+            assert_eq!(v.as_hex_u64("x").unwrap(), x);
+            let v2 = parse(&v.to_string()).unwrap();
+            assert_eq!(v2.as_hex_u64("x").unwrap(), x);
+        }
+        assert!(Json::Num(1.0).as_hex_u64("x").is_err());
+        assert!(Json::Str("zz".into()).as_hex_u64("x").is_err());
+    }
+
+    #[test]
+    fn hex_bits_roundtrips_every_f64_class() {
+        for x in [
+            0.0,
+            -0.0,
+            1.5e-308,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            std::f64::consts::PI,
+        ] {
+            let v = Json::hex_bits(x);
+            assert_eq!(v.as_f64_bits("x").unwrap().to_bits(), x.to_bits());
+        }
+        // NaN round-trips by bit pattern even though NaN != NaN
+        let v = Json::hex_bits(f64::NAN);
+        assert_eq!(v.as_f64_bits("x").unwrap().to_bits(), f64::NAN.to_bits());
+    }
+
+    #[test]
+    fn pathological_nesting_is_an_error_not_a_crash() {
+        let deep = "[".repeat(MAX_DEPTH + 10) + &"]".repeat(MAX_DEPTH + 10);
+        let err = parse(&deep).expect_err("deep nesting must be rejected");
+        assert!(err.contains("nesting"), "{err}");
+        // mixed object/array nesting hits the same guard
+        let mixed = "{\"a\":".repeat(MAX_DEPTH) + "1" + &"}".repeat(MAX_DEPTH);
+        assert!(parse(&mixed).is_err());
+        // a document at a sane depth still parses
+        let ok = "[".repeat(20) + &"]".repeat(20);
+        assert!(parse(&ok).is_ok());
     }
 }

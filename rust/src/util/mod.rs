@@ -16,6 +16,53 @@ pub fn ceil_div(a: u64, b: u64) -> u64 {
     (a + b - 1) / b
 }
 
+/// Streaming FNV-1a (64-bit) — the one copy of the offset basis and
+/// prime shared by the mapper's workload hash, the cache key, and the
+/// wire-frame checksum, so they cannot drift apart. Not cryptographic.
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf29ce484222325)
+    }
+
+    /// Continue hashing from a previously finished state (used by the
+    /// cache key, which extends the workload hash with the arch name).
+    pub fn with_state(state: u64) -> Fnv1a {
+        Fnv1a(state)
+    }
+
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// FNV-1a of one byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
 /// Format a large count with thousands separators (report tables).
 pub fn with_commas(n: u64) -> String {
     let s = n.to_string();
@@ -40,6 +87,25 @@ mod tests {
         assert_eq!(ceil_div(1, 4), 1);
         assert_eq!(ceil_div(4, 4), 1);
         assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn fnv1a_reference_vectors() {
+        // canonical FNV-1a 64 test vectors; pin the constants so the
+        // three users (workload hash, cache key, frame checksum) can
+        // never silently diverge
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+        // streaming in pieces equals one-shot
+        let mut h = Fnv1a::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), fnv1a(b"foobar"));
+        // resuming from a state continues the same stream
+        let mut r = Fnv1a::with_state(fnv1a(b"foo"));
+        r.write(b"bar");
+        assert_eq!(r.finish(), fnv1a(b"foobar"));
     }
 
     #[test]

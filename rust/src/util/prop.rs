@@ -1,50 +1,196 @@
-//! Mini property-testing harness (proptest is unavailable offline).
+//! Mini property-testing harness (proptest is unavailable offline),
+//! in the spirit of proptest-stateful's model-vs-SUT loops.
 //!
-//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
-//! and asserts `prop`; on failure it performs a simple greedy shrink by
-//! retrying with re-generated "smaller" candidates drawn from the same
-//! generator and reports the seed so the case can be replayed.
+//! [`check_shrink`] draws random inputs, asserts the property, and on
+//! failure performs a *real greedy shrink*: the failing input itself
+//! is handed to a caller-supplied shrinker that proposes strictly
+//! smaller variants, and the first variant that still fails becomes
+//! the new failing input — repeated to a local minimum. (The previous
+//! harness "shrank" by re-generating fresh candidates, which almost
+//! never preserved the failure.)
+//!
+//! Every failure report names the seed and case, and every entry point
+//! honors two environment overrides so a reported failure can be
+//! replayed exactly:
+//!
+//! * `QMAP_PROP_SEED`  — root seed (decimal or `0x…` hex);
+//! * `QMAP_PROP_CASES` — number of cases to run.
+//!
+//! A CI matrix sets `QMAP_PROP_SEED` to fan the stateful suites across
+//! seeds without recompiling; a developer sets both to replay the
+//! exact case a CI job reported.
 
 use super::rng::Rng;
 
-/// Run a property over randomly generated inputs.
-///
-/// * `gen` maps an RNG to an input value.
-/// * `prop` returns `Err(msg)` to signal a violated property.
-pub fn check<T: std::fmt::Debug>(
-    seed: u64,
-    cases: usize,
-    mut gen: impl FnMut(&mut Rng) -> T,
-    mut prop: impl FnMut(&T) -> Result<(), String>,
-) {
-    let mut root = Rng::new(seed);
-    for case in 0..cases {
-        let mut r = root.split(case as u64);
-        let input = gen(&mut r);
-        if let Err(msg) = prop(&input) {
-            panic!(
-                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  error: {msg}"
-            );
-        }
+/// Cap on property re-evaluations spent shrinking one failure, so a
+/// pathological shrinker cannot hang a test run.
+const SHRINK_BUDGET: usize = 2_000;
+
+/// Seed and case count for one property run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Config {
+    pub seed: u64,
+    pub cases: usize,
+}
+
+impl Config {
+    pub fn new(seed: u64, cases: usize) -> Config {
+        Config { seed, cases }
+    }
+
+    /// The given defaults, overridden by `QMAP_PROP_SEED` /
+    /// `QMAP_PROP_CASES` when set (for replaying reported failures and
+    /// for CI seed matrices). Unparseable values fall back to the
+    /// defaults rather than silently running something unintended —
+    /// with a note on stderr.
+    pub fn from_env(default_seed: u64, default_cases: usize) -> Config {
+        resolve(
+            std::env::var("QMAP_PROP_SEED").ok(),
+            std::env::var("QMAP_PROP_CASES").ok(),
+            default_seed,
+            default_cases,
+        )
     }
 }
 
+/// Worker-count pin for the stateful suites: `QMAP_TEST_WORKERS` (the
+/// CI matrix runs {1, 2, 4}); `None` when unset, unparseable, or zero
+/// — callers fall back to their own default or a random draw. Lives
+/// here beside the `QMAP_PROP_*` handling so every suite parses the
+/// pinning convention identically.
+pub fn env_test_workers() -> Option<usize> {
+    std::env::var("QMAP_TEST_WORKERS")
+        .ok()
+        .and_then(|v| parse_u64(&v))
+        .map(|w| w as usize)
+        .filter(|&w| w >= 1)
+}
+
+fn parse_u64(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Pure core of [`Config::from_env`] (testable without touching the
+/// process environment, which is racy under parallel tests).
+fn resolve(
+    seed_env: Option<String>,
+    cases_env: Option<String>,
+    default_seed: u64,
+    default_cases: usize,
+) -> Config {
+    let seed = match &seed_env {
+        None => default_seed,
+        Some(s) => parse_u64(s).unwrap_or_else(|| {
+            eprintln!("prop: ignoring unparseable QMAP_PROP_SEED='{s}'");
+            default_seed
+        }),
+    };
+    let cases = match &cases_env {
+        None => default_cases,
+        Some(s) => match parse_u64(s) {
+            Some(n) => n as usize,
+            None => {
+                eprintln!("prop: ignoring unparseable QMAP_PROP_CASES='{s}'");
+                default_cases
+            }
+        },
+    };
+    Config { seed, cases }
+}
+
+/// Run a property over randomly generated inputs, greedily shrinking
+/// any failure to a local minimum before reporting it.
+///
+/// * `gen` maps an RNG to an input value.
+/// * `shrink` proposes *smaller* variants of a failing input (return
+///   an empty vec for unshrinkable inputs). It must make progress
+///   toward a fixpoint — e.g. halve counts, drop elements — or the
+///   shrink loop stops at [`SHRINK_BUDGET`] evaluations.
+/// * `prop` returns `Err(msg)` to signal a violated property.
+pub fn check_shrink<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut r = root.split(case as u64);
+        let input = gen(&mut r);
+        let msg = match prop(&input) {
+            Ok(()) => continue,
+            Err(m) => m,
+        };
+        // greedy descent: keep replacing the failing input with its
+        // first still-failing shrink candidate
+        let mut cur = input;
+        let mut cur_msg = msg;
+        let mut steps = 0usize;
+        let mut budget = SHRINK_BUDGET;
+        'descend: loop {
+            for cand in shrink(&cur) {
+                if budget == 0 {
+                    break 'descend;
+                }
+                budget -= 1;
+                if let Err(m) = prop(&cand) {
+                    cur = cand;
+                    cur_msg = m;
+                    steps += 1;
+                    continue 'descend;
+                }
+            }
+            break; // no candidate still fails: local minimum
+        }
+        panic!(
+            "property failed (seed={seed}, case={case}, shrunk {steps} step(s))\n  \
+             minimal input: {cur:?}\n  error: {cur_msg}\n  \
+             replay: QMAP_PROP_SEED={seed} QMAP_PROP_CASES={cases} cargo test <this test>",
+            seed = cfg.seed,
+            cases = case + 1,
+        );
+    }
+}
+
+/// Run a property over randomly generated inputs (no shrinking).
+/// Honors the `QMAP_PROP_*` overrides; `seed`/`cases` are the
+/// defaults. Kept for properties whose inputs have no useful smaller
+/// form — prefer [`check_shrink`] elsewhere.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check_shrink(&Config::from_env(seed, cases), gen, |_| Vec::new(), prop);
+}
+
 /// Like `check` but the property also receives an RNG (for randomized
-/// assertions inside the property body).
+/// assertions inside the property body). Honors the `QMAP_PROP_*`
+/// overrides.
 pub fn check_with_rng<T: std::fmt::Debug>(
     seed: u64,
     cases: usize,
     mut gen: impl FnMut(&mut Rng) -> T,
     mut prop: impl FnMut(&T, &mut Rng) -> Result<(), String>,
 ) {
-    let mut root = Rng::new(seed);
-    for case in 0..cases {
+    let cfg = Config::from_env(seed, cases);
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
         let mut r = root.split(case as u64);
         let input = gen(&mut r);
         let mut r2 = root.split(0x5EED ^ case as u64);
         if let Err(msg) = prop(&input, &mut r2) {
             panic!(
-                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  error: {msg}"
+                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  \
+                 error: {msg}\n  replay: QMAP_PROP_SEED={seed} QMAP_PROP_CASES={cases}",
+                seed = cfg.seed,
+                cases = case + 1,
             );
         }
     }
@@ -53,6 +199,7 @@ pub fn check_with_rng<T: std::fmt::Debug>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
 
     #[test]
     fn passing_property() {
@@ -75,5 +222,103 @@ mod tests {
                 Err(format!("{x} >= 5"))
             }
         });
+    }
+
+    #[test]
+    fn greedy_shrink_reaches_the_minimal_failing_input() {
+        // property: fails for every x >= 17; shrinker proposes x/2 and
+        // x-1. Greedy descent from any failing draw must bottom out at
+        // exactly 17 — the smallest input that still fails.
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            check_shrink(
+                &Config::new(3, 100),
+                |r| r.range(0, 1000),
+                |&x| {
+                    let mut cands = Vec::new();
+                    if x > 0 {
+                        cands.push(x / 2);
+                        cands.push(x - 1);
+                    }
+                    cands
+                },
+                |&x| {
+                    if x < 17 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} >= 17"))
+                    }
+                },
+            );
+        }))
+        .expect_err("the property must fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .expect("panic payload is the formatted report");
+        assert!(msg.contains("minimal input: 17"), "not shrunk to 17: {msg}");
+        assert!(msg.contains("replay: QMAP_PROP_SEED="), "{msg}");
+    }
+
+    #[test]
+    fn shrink_of_the_input_itself_not_a_regenerated_candidate() {
+        // the shrinker sees exactly the failing value (a marker makes
+        // any regenerated value detectable)
+        let seen = std::cell::RefCell::new(Vec::new());
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            check_shrink(
+                &Config::new(9, 5),
+                |_| 1_000_000usize, // generator only produces this value
+                |&x| {
+                    seen.borrow_mut().push(x);
+                    if x > 1 {
+                        vec![x - 1]
+                    } else {
+                        Vec::new()
+                    }
+                },
+                |&x| {
+                    if x >= 999_998 {
+                        Err("too big".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        }))
+        .expect_err("must fail");
+        let seen = seen.into_inner();
+        // first shrink call sees the generated failing input verbatim,
+        // later calls see its descendants
+        assert_eq!(seen.first(), Some(&1_000_000));
+        assert!(seen.windows(2).all(|w| w[1] == w[0] - 1), "{seen:?}");
+    }
+
+    #[test]
+    fn shrink_budget_bounds_pathological_shrinkers() {
+        // a shrinker that always reproduces the same failing value
+        // must terminate via the budget, not loop forever
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            check_shrink(
+                &Config::new(4, 1),
+                |_| 5usize,
+                |&x| vec![x], // no progress, always still failing
+                |_| Err("always".into()),
+            );
+        }))
+        .expect_err("must fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("property failed"), "{msg}");
+    }
+
+    #[test]
+    fn env_resolution_parses_decimal_and_hex() {
+        let c = resolve(Some("123".into()), Some("7".into()), 1, 10);
+        assert_eq!(c, Config::new(123, 7));
+        let c = resolve(Some("0xE6E1".into()), None, 1, 10);
+        assert_eq!(c, Config::new(0xE6E1, 10));
+        // unparseable values fall back to the defaults
+        let c = resolve(Some("banana".into()), Some("many".into()), 42, 3);
+        assert_eq!(c, Config::new(42, 3));
+        // absent: pure defaults
+        assert_eq!(resolve(None, None, 8, 2), Config::new(8, 2));
     }
 }

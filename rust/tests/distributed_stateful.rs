@@ -1,0 +1,445 @@
+//! Stateful model-vs-SUT property tests for distributed shard
+//! execution, in the style of proptest-stateful / polestar: generate a
+//! random command sequence — submit a batch, drop the connection
+//! mid-stream, deliver outcomes twice, reorder outcomes, kill a worker
+//! and resume from the per-generation checkpoint — apply it to the
+//! *SUT* (loopback `qmap` workers + the driver's ledger/scheduler) and
+//! compare against the *model* (the plain single-threaded mapper /
+//! search), asserting bit-identical results in every interleaving.
+//!
+//! The worker count is env-parameterized (`QMAP_TEST_WORKERS`, CI runs
+//! {1, 2, 4}) and the property seeds honor `QMAP_PROP_SEED` /
+//! `QMAP_PROP_CASES`, so a CI-reported failure replays exactly; on
+//! failure the harness greedily shrinks the command sequence itself.
+
+use qmap::accuracy::{ProxyAccuracy, ProxyParams};
+use qmap::arch::parser::render_arch;
+use qmap::arch::presets::toy;
+use qmap::engine::remote::{spawn_local_worker, BatchLedger, RemoteClient};
+use qmap::engine::{driver, Checkpointer, Engine, WorkerOptions};
+use qmap::mapper::cache::MapperCache;
+use qmap::mapper::{self, MapperConfig, MapperResult};
+use qmap::mapping::mapspace::MapSpace;
+use qmap::mapping::LayerContext;
+use qmap::nsga::NsgaConfig;
+use qmap::quant::{LayerQuant, QuantConfig, QMAX, QMIN};
+use qmap::util::prop::{check_shrink, Config};
+use qmap::util::rng::Rng;
+use qmap::workload::ConvLayer;
+use std::time::Duration;
+
+fn small_net() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::conv("c1", 3, 8, 3, 16, 1),
+        ConvLayer::dw("d1", 8, 3, 16, 1),
+        ConvLayer::pw("p1", 8, 16, 16),
+        ConvLayer::fc("fc", 16, 10),
+    ]
+}
+
+/// Loopback workers to stand up for the search-level tests
+/// (`QMAP_TEST_WORKERS`, default 2 — the CI matrix runs {1, 2, 4}).
+fn test_worker_count() -> usize {
+    qmap::util::prop::env_test_workers().unwrap_or(2)
+}
+
+fn random_genome(r: &mut Rng, n: usize) -> QuantConfig {
+    let mut g = QuantConfig::uniform(n, 8);
+    for l in g.layers.iter_mut() {
+        l.0 = QMIN + r.below((QMAX - QMIN + 1) as u64) as u8;
+        l.1 = QMIN + r.below((QMAX - QMIN + 1) as u64) as u8;
+    }
+    g
+}
+
+// ------------------------------------------------- batch-level suite
+
+/// Network fault injected into one command's worker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Fault {
+    None,
+    /// Worker vanishes after this many outcome frames.
+    DropAfter(usize),
+    /// Every outcome frame arrives twice.
+    DeliverTwice,
+    /// Outcomes stream in reverse shard order.
+    Reorder,
+}
+
+impl Fault {
+    fn options(self) -> WorkerOptions {
+        match self {
+            Fault::None => WorkerOptions::default(),
+            Fault::DropAfter(n) => WorkerOptions {
+                drop_after: Some(n),
+                ..WorkerOptions::default()
+            },
+            Fault::DeliverTwice => WorkerOptions {
+                duplicate_outcomes: true,
+                ..WorkerOptions::default()
+            },
+            Fault::Reorder => WorkerOptions {
+                reverse_outcomes: true,
+                ..WorkerOptions::default()
+            },
+        }
+    }
+}
+
+/// One command: characterize `(layer, qa/qw)` through a worker with
+/// the given fault.
+#[derive(Debug, Clone)]
+struct Cmd {
+    layer: usize,
+    qa: u8,
+    qw: u8,
+    fault: Fault,
+}
+
+#[derive(Debug, Clone)]
+struct Script {
+    shards: usize,
+    commands: Vec<Cmd>,
+}
+
+fn random_script(r: &mut Rng) -> Script {
+    let n = small_net().len();
+    let commands = (0..r.range(2, 5))
+        .map(|_| Cmd {
+            layer: r.range(0, n - 1),
+            qa: QMIN + r.below((QMAX - QMIN + 1) as u64) as u8,
+            qw: QMIN + r.below((QMAX - QMIN + 1) as u64) as u8,
+            fault: match r.below(4) {
+                0 => Fault::None,
+                1 => Fault::DropAfter(r.range(0, 3)),
+                2 => Fault::DeliverTwice,
+                _ => Fault::Reorder,
+            },
+        })
+        .collect();
+    Script {
+        shards: r.range(1, 3),
+        commands,
+    }
+}
+
+/// Shrink toward the smallest still-failing script: fewer commands,
+/// fewer shards, and faults softened to `None` (a fault that can be
+/// removed without fixing the failure was not the cause).
+fn shrink_script(s: &Script) -> Vec<Script> {
+    let mut out = Vec::new();
+    if s.commands.len() > 1 {
+        let mut t = s.clone();
+        t.commands.pop();
+        out.push(t);
+        let mut t = s.clone();
+        t.commands.remove(0);
+        out.push(t);
+    }
+    for i in 0..s.commands.len() {
+        if s.commands[i].fault != Fault::None {
+            let mut t = s.clone();
+            t.commands[i].fault = Fault::None;
+            out.push(t);
+        }
+    }
+    if s.shards > 1 {
+        let mut t = s.clone();
+        t.shards -= 1;
+        out.push(t);
+    }
+    out
+}
+
+fn run_script(script: &Script) -> Result<(), String> {
+    let arch = toy();
+    let layers = small_net();
+    let rendered = render_arch(&arch);
+    let cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 13,
+        shards: script.shards,
+    };
+    for (ci, cmd) in script.commands.iter().enumerate() {
+        let layer = &layers[cmd.layer];
+        let q = LayerQuant {
+            qa: cmd.qa,
+            qw: cmd.qw,
+            qo: 8,
+        }
+        .canonical(arch.word_bits, arch.bit_packing);
+
+        // SUT: a fresh loopback worker with this command's fault, the
+        // driver-side ledger, and local refill of anything undelivered
+        let addr = spawn_local_worker(cmd.fault.options()).map_err(|e| format!("cmd {ci}: {e}"))?;
+        let mut client = RemoteClient::connect(&addr, Duration::from_secs(20))
+            .map_err(|e| format!("cmd {ci}: {e}"))?;
+        let specs = mapper::shard_plan(&cfg, cfg.seed ^ mapper::workload_hash(layer, &q));
+        let mut ledger = BatchLedger::new(specs);
+        let net = client.run_batch(&rendered, layer, &q, &mut ledger);
+        if net.is_err() && !matches!(cmd.fault, Fault::DropAfter(_)) {
+            return Err(format!("cmd {ci}: unexpected transport failure: {net:?}"));
+        }
+        let space = MapSpace::of(&arch);
+        let lctx = LayerContext::new(&arch, layer, &q);
+        let got: MapperResult = ledger.finalize(|_, spec| mapper::run_shard(&space, &lctx, spec));
+
+        // model: the plain serial mapper on the same workload
+        let want = mapper::search(&arch, layer, &q, &cfg);
+        let got_bits = got.best.as_ref().map(|e| e.edp().to_bits());
+        let want_bits = want.best.as_ref().map(|e| e.edp().to_bits());
+        if got_bits != want_bits
+            || got.valid != want.valid
+            || got.draws != want.draws
+            || got.best_mapping != want.best_mapping
+        {
+            return Err(format!(
+                "cmd {ci} ({cmd:?}): merged result diverged from the serial model\n  \
+                 got  edp_bits={got_bits:?} valid={} draws={}\n  \
+                 want edp_bits={want_bits:?} valid={} draws={}",
+                got.valid, got.draws, want.valid, want.draws
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn faulty_distributed_batches_agree_with_the_serial_model() {
+    check_shrink(
+        &Config::from_env(0xD157, 8),
+        random_script,
+        shrink_script,
+        |s| run_script(s),
+    );
+}
+
+// -------------------------------------------- generation-level suite
+
+#[test]
+fn distributed_generation_is_bit_identical_even_with_flaky_workers() {
+    let arch = toy();
+    let layers = small_net();
+    let cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 17,
+        shards: 2,
+    };
+    let mut rng = Rng::new(0xBEEF);
+    let genomes: Vec<QuantConfig> = (0..6)
+        .map(|_| random_genome(&mut rng, layers.len()))
+        .collect();
+    let reference = {
+        let engine = Engine::new(1);
+        let cache = MapperCache::new();
+        driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg)
+    };
+    // a mixed fleet: healthy, vanishing, duplicating, reordering —
+    // every fault class live in one generation
+    let faults = [
+        WorkerOptions::default(),
+        WorkerOptions {
+            drop_after: Some(1),
+            ..WorkerOptions::default()
+        },
+        WorkerOptions {
+            duplicate_outcomes: true,
+            ..WorkerOptions::default()
+        },
+        WorkerOptions {
+            reverse_outcomes: true,
+            ..WorkerOptions::default()
+        },
+    ];
+    let addrs: Vec<String> = (0..test_worker_count())
+        .map(|i| spawn_local_worker(faults[i % faults.len()]).expect("loopback worker"))
+        .collect();
+    let engine = Engine::distributed(2, addrs);
+    let cache = MapperCache::new();
+    let got = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg);
+    assert_eq!(reference.len(), got.len());
+    for (gi, (a, b)) in reference.iter().zip(&got).enumerate() {
+        match (a, b) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x, y, "genome {gi}");
+                assert_eq!(x.edp.to_bits(), y.edp.to_bits(), "genome {gi}");
+            }
+            (None, None) => {}
+            _ => panic!("genome {gi}: mappability diverged ({a:?} vs {b:?})"),
+        }
+    }
+}
+
+// ------------------------------------------------ search-level suite
+
+fn ckpt_path(tag: u64) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("qmap_dist_{tag}_{}.json", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+fn front_key(cands: &[qmap::baselines::Candidate]) -> Vec<(Vec<u8>, u64)> {
+    let mut k: Vec<(Vec<u8>, u64)> = cands
+        .iter()
+        .map(|c| (c.genome.encode(), c.hw.edp.to_bits()))
+        .collect();
+    k.sort();
+    k
+}
+
+/// The acceptance property in-process: a distributed search's Pareto
+/// front is bit-identical to the single-threaded serial run's.
+#[test]
+fn distributed_search_front_equals_the_serial_front() {
+    let arch = toy();
+    let layers = small_net();
+    let map_cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 19,
+        shards: 2,
+    };
+    let nsga_cfg = NsgaConfig {
+        population: 8,
+        offspring: 4,
+        generations: 3,
+        seed: 29,
+        ..NsgaConfig::default()
+    };
+    let serial = {
+        let engine = Engine::new(1);
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+        qmap::baselines::proposed_search(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, |_, _| {},
+        )
+    };
+    let addrs: Vec<String> = (0..test_worker_count())
+        .map(|_| spawn_local_worker(WorkerOptions::default()).expect("loopback worker"))
+        .collect();
+    let distributed = {
+        let engine = Engine::distributed(2, addrs);
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+        qmap::baselines::proposed_search(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, |_, _| {},
+        )
+    };
+    assert_eq!(front_key(&serial), front_key(&distributed));
+    // accuracy objectives too, bit for bit
+    assert_eq!(serial.len(), distributed.len());
+    for (a, b) in serial.iter().zip(&distributed) {
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    }
+}
+
+/// Kill-and-resume: a distributed search over a *flaky* worker is
+/// stopped after a random number of generations (simulating a driver
+/// crash mid-search — the mid-generation work is lost, the
+/// per-generation checkpoint is not), then resumed from the checkpoint
+/// with a fresh engine, fresh workers, and fresh caches. The final
+/// front must be bit-identical to an uninterrupted serial run, for
+/// every interruption point, worker count, and fault mix.
+#[test]
+fn kill_and_resume_from_checkpoint_is_bit_identical() {
+    let arch = toy();
+    let layers = small_net();
+    let map_cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 23,
+        shards: 2,
+    };
+    let nsga_cfg = NsgaConfig {
+        population: 8,
+        offspring: 4,
+        generations: 4,
+        seed: 31,
+        ..NsgaConfig::default()
+    };
+    let reference = {
+        let engine = Engine::new(1);
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+        let path = ckpt_path(0);
+        let ckpt = Checkpointer::new(path.as_str());
+        let cands = driver::search_resumable(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt, false,
+            |_, _| {},
+        )
+        .expect("serial reference search");
+        let _ = std::fs::remove_file(&path);
+        front_key(&cands)
+    };
+
+    check_shrink(
+        &Config::from_env(0xD158, 4),
+        |r| (r.range(0, 3), r.range(0, 2), r.next_u64()),
+        |&(stop_after, drop_after, tag)| {
+            let mut cands = Vec::new();
+            if stop_after > 0 {
+                cands.push((stop_after - 1, drop_after, tag));
+            }
+            if drop_after > 0 {
+                cands.push((stop_after, drop_after - 1, tag));
+            }
+            cands
+        },
+        |&(stop_after, drop_after, tag)| {
+            let path = ckpt_path(tag);
+            let ckpt = Checkpointer::new(path.as_str());
+            let flaky = WorkerOptions {
+                drop_after: Some(drop_after),
+                ..WorkerOptions::default()
+            };
+            // phase 1: distributed search over a worker that keeps
+            // dying mid-stream, killed after `stop_after` generations
+            {
+                let addrs: Vec<String> = (0..test_worker_count())
+                    .map(|_| spawn_local_worker(flaky).expect("loopback worker"))
+                    .collect();
+                let engine = Engine::distributed(2, addrs);
+                let cache = MapperCache::new();
+                let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+                let truncated = NsgaConfig {
+                    generations: stop_after,
+                    ..nsga_cfg
+                };
+                driver::search_resumable(
+                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &truncated, &ckpt,
+                    false,
+                    |_, _| {},
+                )
+                .map_err(|e| format!("phase 1: {e}"))?;
+            }
+            // phase 2: everything is gone but the checkpoint file;
+            // resume on a fresh (still flaky) distributed engine
+            let resumed = {
+                let addrs: Vec<String> = (0..test_worker_count())
+                    .map(|_| spawn_local_worker(flaky).expect("loopback worker"))
+                    .collect();
+                let engine = Engine::distributed(2, addrs);
+                let cache = MapperCache::new();
+                let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+                driver::search_resumable(
+                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt,
+                    true,
+                    |_, _| {},
+                )
+                .map_err(|e| format!("phase 2: {e}"))?
+            };
+            let _ = std::fs::remove_file(&path);
+            let got = front_key(&resumed);
+            if got != reference {
+                return Err(format!(
+                    "resumed distributed front differs \
+                     (stop_after={stop_after}, drop_after={drop_after}):\n  \
+                     got {got:?}\n  want {reference:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}

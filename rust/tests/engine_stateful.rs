@@ -15,7 +15,7 @@ use qmap::mapper::cache::MapperCache;
 use qmap::mapper::MapperConfig;
 use qmap::nsga::NsgaConfig;
 use qmap::quant::{QuantConfig, QMAX, QMIN};
-use qmap::util::prop::check as forall;
+use qmap::util::prop::{check_shrink, Config};
 use qmap::util::rng::Rng;
 use qmap::workload::ConvLayer;
 
@@ -28,6 +28,12 @@ fn small_net() -> Vec<ConvLayer> {
     ]
 }
 
+/// Engine worker count: `QMAP_TEST_WORKERS` pins it (the CI matrix
+/// runs {1, 2, 4}); otherwise it is drawn per script.
+fn pick_workers(r: &mut Rng) -> usize {
+    qmap::util::prop::env_test_workers().unwrap_or_else(|| r.range(1, 4))
+}
+
 fn random_genome(r: &mut Rng, n: usize) -> QuantConfig {
     let mut g = QuantConfig::uniform(n, 8);
     for l in g.layers.iter_mut() {
@@ -38,12 +44,12 @@ fn random_genome(r: &mut Rng, n: usize) -> QuantConfig {
 }
 
 /// One command of the stateful test: a batch of genomes to evaluate.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Cmd {
     genomes: Vec<QuantConfig>,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Script {
     workers: usize,
     shards: usize,
@@ -58,17 +64,47 @@ fn random_script(r: &mut Rng) -> Script {
         })
         .collect();
     Script {
-        workers: r.range(1, 4),
+        workers: pick_workers(r),
         shards: r.range(1, 3),
         commands,
     }
+}
+
+/// Shrink a failing script toward the smallest one that still fails:
+/// drop trailing commands, thin each command's genome batch, and walk
+/// the worker / shard counts down toward the serial baseline.
+fn shrink_script(s: &Script) -> Vec<Script> {
+    let mut out = Vec::new();
+    if s.commands.len() > 1 {
+        let mut t = s.clone();
+        t.commands.pop();
+        out.push(t);
+    }
+    for i in 0..s.commands.len() {
+        if s.commands[i].genomes.len() > 1 {
+            let mut t = s.clone();
+            t.commands[i].genomes.pop();
+            out.push(t);
+        }
+    }
+    if s.workers > 1 {
+        let mut t = s.clone();
+        t.workers -= 1;
+        out.push(t);
+    }
+    if s.shards > 1 {
+        let mut t = s.clone();
+        t.shards -= 1;
+        out.push(t);
+    }
+    out
 }
 
 #[test]
 fn engine_agrees_with_serial_model_under_random_job_mixes() {
     let arch = toy();
     let layers = small_net();
-    forall(0xE6E1, 10, random_script, |script| {
+    check_shrink(&Config::from_env(0xE6E1, 10), random_script, shrink_script, |script| {
         let cfg = MapperConfig {
             valid_target: 24,
             max_draws: 24_000,
@@ -158,10 +194,21 @@ fn checkpoint_restore_mid_search_is_bit_identical() {
         front_key(&cands)
     };
 
-    forall(
-        0xE6E2,
-        6,
-        |r| (r.range(0, 4), r.range(1, 4), r.next_u64()),
+    check_shrink(
+        &Config::from_env(0xE6E2, 6),
+        |r| (r.range(0, 4), pick_workers(r), r.next_u64()),
+        |&(stop_after, workers, tag)| {
+            // shrink toward the earliest interruption and the serial
+            // engine, keeping the checkpoint-file tag stable
+            let mut cands = Vec::new();
+            if stop_after > 0 {
+                cands.push((stop_after - 1, workers, tag));
+            }
+            if workers > 1 {
+                cands.push((stop_after, workers - 1, tag));
+            }
+            cands
+        },
         |&(stop_after, workers, tag)| {
             let path = ckpt_path(tag);
             let ckpt = Checkpointer::new(path.as_str());

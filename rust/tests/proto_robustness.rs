@@ -1,0 +1,280 @@
+//! Fuzz-ish robustness properties for the two untrusted parsers: wire
+//! frames (`engine::proto`) and checkpoint files
+//! (`engine::checkpoint`). Property-generated corpus via `util::prop`:
+//! truncated, bit-flipped, and oversize-length-prefix inputs must
+//! return `Err` — never panic, never attempt an attacker-sized
+//! allocation. Honors `QMAP_PROP_SEED` / `QMAP_PROP_CASES` for
+//! replaying any reported failure.
+
+use qmap::arch::presets::toy;
+use qmap::engine::checkpoint::SearchIdent;
+use qmap::engine::{proto, Checkpointer};
+use qmap::mapper::cache::MapperCache;
+use qmap::mapper::{MapperConfig, ShardOutcome, ShardSpec};
+use qmap::nsga::{Individual, NsgaConfig, SearchState};
+use qmap::quant::{LayerQuant, QuantConfig};
+use qmap::util::json::Json;
+use qmap::util::prop::{check, check_with_rng};
+use qmap::util::rng::Rng;
+use qmap::workload::ConvLayer;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+// ------------------------------------------------------------ frames
+
+fn random_payload(r: &mut Rng) -> Vec<u8> {
+    let n = r.range(0, 300);
+    (0..n).map(|_| r.below(256) as u8).collect()
+}
+
+#[test]
+fn truncated_frames_always_error() {
+    check_with_rng(
+        0xF0A1,
+        60,
+        random_payload,
+        |payload, r| {
+            let framed = proto::encode_frame(payload);
+            // any strict prefix must fail to decode
+            let cut = r.range(0, framed.len() - 1);
+            let mut cur = std::io::Cursor::new(framed[..cut].to_vec());
+            match proto::read_frame(&mut cur) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("decoded a frame truncated at {cut}/{}", framed.len())),
+            }
+        },
+    );
+}
+
+#[test]
+fn bit_flipped_frames_always_error() {
+    check_with_rng(
+        0xF0A2,
+        60,
+        random_payload,
+        |payload, r| {
+            let framed = proto::encode_frame(payload);
+            let byte = r.range(0, framed.len() - 1);
+            let bit = r.range(0, 7);
+            let mut bad = framed.clone();
+            bad[byte] ^= 1 << bit;
+            let mut cur = std::io::Cursor::new(bad);
+            match proto::read_frame(&mut cur) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("accepted a frame with byte {byte} bit {bit} flipped")),
+            }
+        },
+    );
+}
+
+#[test]
+fn hostile_length_prefixes_never_allocate() {
+    // every length above the cap must be rejected from the 16-byte
+    // header alone — the payload buffer is never allocated, so even a
+    // 4 GiB claim is a cheap, clean error
+    check(
+        0xF0A3,
+        40,
+        |r| (proto::MAX_FRAME as u64 + 1 + r.below(u32::MAX as u64 - proto::MAX_FRAME as u64)) as u32,
+        |&len| {
+            let mut framed = proto::encode_frame(b"x");
+            framed[4..8].copy_from_slice(&len.to_be_bytes());
+            let mut cur = std::io::Cursor::new(framed);
+            match proto::read_frame(&mut cur) {
+                Err(e) if e.contains("cap") => Ok(()),
+                other => Err(format!("length {len} not rejected by the cap: {other:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn random_garbage_streams_error() {
+    check(
+        0xF0A4,
+        80,
+        |r| {
+            // random bytes that are (deliberately) not frame-magic
+            let mut b = random_payload(r);
+            if b.first() == Some(&b'Q') {
+                b[0] = b'X';
+            }
+            b
+        },
+        |bytes| {
+            let mut cur = std::io::Cursor::new(bytes.clone());
+            match proto::read_frame(&mut cur) {
+                Err(_) => Ok(()),
+                Ok(_) => Err("decoded random garbage as a frame".into()),
+            }
+        },
+    );
+}
+
+#[test]
+fn valid_frames_with_malformed_json_error_cleanly() {
+    // the frame layer passes, the message layer must still be total
+    for payload in [
+        &b"not json"[..],
+        &b"{\"type\":"[..],
+        &b"\xff\xfe\xfd"[..],                  // invalid UTF-8
+        &b"{\"a\":1}{\"b\":2}"[..],            // trailing garbage
+    ] {
+        let framed = proto::encode_frame(payload);
+        let mut cur = std::io::Cursor::new(framed);
+        assert!(proto::read_msg(&mut cur).is_err(), "payload {payload:?}");
+    }
+    // pathological nesting is bounded by the JSON parser's depth cap
+    let deep = "[".repeat(100_000);
+    let framed = proto::encode_frame(deep.as_bytes());
+    let mut cur = std::io::Cursor::new(framed);
+    assert!(proto::read_msg(&mut cur).is_err());
+}
+
+// ------------------------------------------ structured wire payloads
+
+/// A small random-JSON grammar for structure-level fuzzing of the
+/// typed decoders.
+fn random_json(r: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { r.below(4) } else { r.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(r.below(2) == 0),
+        2 => Json::Num(f64::from_bits(r.next_u64())),
+        3 => Json::Str(
+            (0..r.range(0, 12))
+                .map(|_| char::from(32 + r.below(95) as u8))
+                .collect(),
+        ),
+        4 => Json::Arr((0..r.range(0, 4)).map(|_| random_json(r, depth - 1)).collect()),
+        _ => Json::obj(
+            ["seed", "valid_target", "max_draws", "best", "valid", "draws", "x"]
+                .iter()
+                .take(r.range(0, 6))
+                .map(|k| (*k, random_json(r, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn typed_decoders_are_total_on_random_json() {
+    check(
+        0xF0A5,
+        300,
+        |r| random_json(r, 3),
+        |v| {
+            // none of these may panic; Err is the expected common case
+            let _ = ShardSpec::from_json(v);
+            let _ = ShardOutcome::from_json(v);
+            let _ = proto::layer_from_json(v);
+            let _ = proto::quant_from_json(v);
+            Ok(())
+        },
+    );
+}
+
+// -------------------------------------------------------- checkpoint
+
+fn tmp_path(tag: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("qmap_robust_{tag}_{}.json", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+fn ident() -> SearchIdent {
+    SearchIdent::new(&toy(), 4, &MapperConfig::default(), &NsgaConfig::default())
+}
+
+/// A realistic checkpoint document (population with infinite
+/// objectives, advanced RNG, cache with positive and negative
+/// entries), as raw bytes.
+fn checkpoint_bytes() -> Vec<u8> {
+    let path = tmp_path("seed");
+    let ckpt = Checkpointer::new(path.as_str());
+    let mut st = SearchState {
+        generation: 2,
+        pop: (0..3)
+            .map(|i| Individual {
+                genome: QuantConfig::uniform(4, 2 + i as u8),
+                objectives: vec![if i == 0 { f64::INFINITY } else { 1.5e-9 * i as f64 }, 0.25],
+            })
+            .collect(),
+        rng: Rng::new(0xFEED),
+    };
+    for _ in 0..9 {
+        st.rng.next_u64();
+    }
+    let cache = MapperCache::new();
+    let arch = toy();
+    let cfg = MapperConfig {
+        valid_target: 20,
+        max_draws: 20_000,
+        seed: 5,
+        shards: 1,
+    };
+    cache.evaluate(&arch, &ConvLayer::fc("fc", 16, 10), &LayerQuant::uniform(8), &cfg);
+    ckpt.save(&st, &cache, &ident()).expect("seed checkpoint");
+    let bytes = std::fs::read(&path).expect("read seed checkpoint");
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+#[test]
+fn truncated_checkpoints_error_not_panic() {
+    let bytes = checkpoint_bytes();
+    check(
+        0xF0B1,
+        40,
+        |r| r.range(0, bytes.len() - 1),
+        |&cut| {
+            let path = tmp_path(&format!("trunc{cut}"));
+            std::fs::write(&path, &bytes[..cut]).map_err(|e| e.to_string())?;
+            let ckpt = Checkpointer::new(path.as_str());
+            let r = catch_unwind(AssertUnwindSafe(|| ckpt.load(&ident(), &MapperCache::new())));
+            let _ = std::fs::remove_file(&path);
+            match r {
+                Ok(Err(_)) => Ok(()),
+                Ok(Ok(_)) => Err(format!("loaded a checkpoint truncated at {cut}")),
+                Err(_) => Err(format!("panicked on a checkpoint truncated at {cut}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn bit_flipped_checkpoints_never_panic() {
+    // a flipped bit may still parse (e.g. inside a hex digit) — that
+    // is fine; what is not fine is a panic or abort. The load path
+    // must be total on arbitrary corruption.
+    let bytes = checkpoint_bytes();
+    check_with_rng(
+        0xF0B2,
+        60,
+        |_| (),
+        |_, r| {
+            let byte = r.range(0, bytes.len() - 1);
+            let bit = r.range(0, 7);
+            let mut bad = bytes.clone();
+            bad[byte] ^= 1 << bit;
+            let path = tmp_path(&format!("flip{byte}_{bit}"));
+            std::fs::write(&path, &bad).map_err(|e| e.to_string())?;
+            let ckpt = Checkpointer::new(path.as_str());
+            let r = catch_unwind(AssertUnwindSafe(|| ckpt.load(&ident(), &MapperCache::new())));
+            let _ = std::fs::remove_file(&path);
+            match r {
+                Ok(_) => Ok(()),
+                Err(_) => Err(format!("panicked on checkpoint with byte {byte} bit {bit} flipped")),
+            }
+        },
+    );
+}
+
+#[test]
+fn pathological_checkpoint_nesting_is_rejected() {
+    let path = tmp_path("deepnest");
+    let deep = format!("{}1{}", "[".repeat(100_000), "]".repeat(100_000));
+    std::fs::write(&path, deep).unwrap();
+    let ckpt = Checkpointer::new(path.as_str());
+    let r = catch_unwind(AssertUnwindSafe(|| ckpt.load(&ident(), &MapperCache::new())));
+    let _ = std::fs::remove_file(&path);
+    assert!(matches!(r, Ok(Err(_))), "deep nesting must be a clean error");
+}
