@@ -1,0 +1,95 @@
+//! CI bench-regression guard: compares the fast-profile
+//! `perf_hotpath` record (`BENCH_perf.json`, written by the bench that
+//! must run first) against the committed floors in
+//! `BENCH_baseline.json`, and exits non-zero when any guarded row
+//! regresses by more than the configured tolerance.
+//!
+//! Only machine-portable *ratios* are guarded (hot-path speedup,
+//! engine scaling, tail improvement, pipeline speedup, checkpoint
+//! journal-vs-snapshot) — absolute millisecond rows vary with the
+//! runner and would make the guard flaky. The baseline values are
+//! deliberately conservative floors, not aspirations: the guard
+//! exists to catch a real regression (a lost fast path, an accidental
+//! serialization), not to fail on scheduler noise.
+//!
+//! Run: `cargo bench --bench perf_hotpath && cargo bench --bench
+//! perf_guard` (the CI smoke does exactly this, fast profile).
+
+use qmap::util::json::parse;
+
+fn read(path: &str) -> String {
+    match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bench guard: {path}: {e} (run `cargo bench --bench perf_hotpath` first)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+    let perf_path = format!("{root}/BENCH_perf.json");
+    let base_path = format!("{root}/BENCH_baseline.json");
+    // BENCH_perf.json is generated, not tracked — on a fresh checkout a
+    // bare `cargo bench` runs this target BEFORE perf_hotpath
+    // (alphabetical order) and must not abort the whole bench run.
+    // CI sets QMAP_GUARD_REQUIRE=1 right after running perf_hotpath,
+    // where a missing record is a genuine failure.
+    if !std::path::Path::new(&perf_path).exists() {
+        if std::env::var("QMAP_GUARD_REQUIRE").is_ok() {
+            eprintln!("bench guard: {perf_path} missing (perf_hotpath must run first)");
+            std::process::exit(2);
+        }
+        println!("bench guard: no {perf_path} yet — skipping (run perf_hotpath first)");
+        return;
+    }
+    let perf = parse(&read(&perf_path)).unwrap_or_else(|e| {
+        eprintln!("bench guard: {perf_path}: {e}");
+        std::process::exit(2);
+    });
+    let base = parse(&read(&base_path)).unwrap_or_else(|e| {
+        eprintln!("bench guard: {base_path}: {e}");
+        std::process::exit(2);
+    });
+    let tolerance = base.get("tolerance").as_f64().unwrap_or(0.25);
+    let Some(guards) = base.get("guards").as_obj() else {
+        eprintln!("bench guard: {base_path} has no guards object");
+        std::process::exit(2);
+    };
+    println!(
+        "bench guard: {} row(s), fail below baseline - {:.0}%",
+        guards.len(),
+        tolerance * 100.0
+    );
+    let mut failed = 0usize;
+    for (key, want) in guards {
+        let Some(want) = want.as_f64() else {
+            eprintln!("  {key:<28} baseline is not a number — guard misconfigured");
+            failed += 1;
+            continue;
+        };
+        let Some(got) = perf.get(key).as_f64() else {
+            eprintln!("  {key:<28} MISSING from BENCH_perf.json");
+            failed += 1;
+            continue;
+        };
+        let floor = want * (1.0 - tolerance);
+        let ok = got >= floor;
+        println!(
+            "  {key:<28} {got:>8.2}  (baseline {want:.2}, floor {floor:.2})  {}",
+            if ok { "ok" } else { "REGRESSED" }
+        );
+        if !ok {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        eprintln!(
+            "bench guard: {failed} row(s) regressed past the {:.0}% tolerance",
+            tolerance * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!("bench guard: all rows within tolerance");
+}

@@ -26,17 +26,19 @@
 
 use qmap::arch::presets;
 use qmap::energy::estimate_into;
-use qmap::engine::{driver, Engine};
+use qmap::engine::checkpoint::SearchIdent;
+use qmap::engine::{driver, Checkpointer, Engine, SchedPolicy};
 use qmap::eval::evaluate_network;
 use qmap::mapper::cache::MapperCache;
 use qmap::mapper::{self, EvalContext, MapperConfig};
 use qmap::mapping::mapspace::MapSpace;
 use qmap::mapping::{check, LayerContext};
 use qmap::nest::analyze_into;
+use qmap::nsga::{Individual, NsgaConfig, SearchState};
 use qmap::quant::{LayerQuant, QuantConfig};
 use qmap::util::json::Json;
 use qmap::util::rng::Rng;
-use qmap::workload::models;
+use qmap::workload::{models, ConvLayer};
 use std::time::Instant;
 
 fn time<R>(label: &str, f: impl FnOnce() -> R) -> (R, f64) {
@@ -221,26 +223,70 @@ fn main() {
             st.jobs, st.splits, st.tasks, st.steals
         );
     }
-    // 6. distributed loopback: the same population through
+    // 6. generation tail under FIFO vs priority scheduling at 4
+    //    workers: tail = time between the job queue running dry (last
+    //    job claimed) and the last job finishing. Priority order
+    //    (largest effective draw budget first) plus tail-mode shard
+    //    splitting is the fix for the idle-workers-at-the-tail problem
+    //    FIFO leaves; both runs must stay bit-identical to the serial
+    //    reference.
+    let (tail_fifo_ms, tail_prio_ms, fifo_ms, prio_ms) = {
+        let run = |label: &str, policy: SchedPolicy| {
+            let engine = Engine::new(4).with_sched_policy(policy);
+            let fresh = MapperCache::new();
+            let (evals, dt) = time(
+                &format!("engine: {pop_n} genomes, 4 workers, {label} order, cold cache"),
+                || driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &fresh, &cfg),
+            );
+            let edps: Vec<Option<f64>> =
+                evals.iter().map(|e| e.as_ref().map(|e| e.edp)).collect();
+            if let Some(r) = &reference {
+                assert_eq!(r, &edps, "{label} scheduling must be bit-identical");
+            }
+            let tail = engine.stats().last_tail_ms;
+            println!("  -> generation tail {tail:.1} ms ({label})");
+            (tail, dt * 1e3)
+        };
+        let (tf, f) = run("fifo", SchedPolicy::Fifo);
+        let (tp, p) = run("priority", SchedPolicy::Priority);
+        (tf, tp, f, p)
+    };
+    // clamp both tails to 1 ms before the ratio: a sub-millisecond
+    // tail means "no measurable tail either way", and the ratio should
+    // read ~1x instead of exploding (or collapsing) on timer noise —
+    // the regression guard floors this row
+    let tail_improvement = tail_fifo_ms.max(1.0) / tail_prio_ms.max(1.0);
+    println!("  -> tail improvement {tail_improvement:.2}x (priority vs fifo)");
+
+    // 7. distributed loopback: the same population through
     //    `Engine::distributed` over an in-process `qmap worker`
-    //    (TCP on 127.0.0.1). Asserts bit-identity with the local rows
-    //    — the distributed seam's acceptance bar — and records the
-    //    protocol's overhead next to the local timings.
-    let dist_ms = {
-        let addr =
-            qmap::engine::remote::spawn_local_worker(qmap::engine::WorkerOptions::default())
-                .expect("loopback worker");
-        let engine = Engine::distributed(2, vec![addr]);
+    //    (TCP on 127.0.0.1), at pipeline depth 1 (the PR 3
+    //    one-in-flight baseline) and at the default windowed depth.
+    //    Asserts bit-identity with the local rows — the distributed
+    //    seam's acceptance bar — and records the protocol's overhead
+    //    next to the local timings.
+    let pipeline_depth = 4usize;
+    let run_loopback = |label: &str, depth: usize| {
+        // the worker-side outcome cache is process-global; with it on,
+        // the second row would be served from the first row's outcomes
+        // and the comparison would measure cache hits, not pipelining —
+        // disable it for BOTH rows so the ratio isolates the window
+        let opts = qmap::engine::WorkerOptions {
+            disable_outcome_cache: true,
+            ..qmap::engine::WorkerOptions::default()
+        };
+        let addr = qmap::engine::remote::spawn_local_worker(opts).expect("loopback worker");
+        let engine = Engine::distributed(2, vec![addr]).with_pipeline_depth(depth);
         let fresh = MapperCache::new();
         let (evals, dt) = time(
-            &format!("engine: {pop_n} genomes, distributed loopback, cold cache"),
+            &format!("engine: {pop_n} genomes, distributed loopback, {label}, cold cache"),
             || driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &fresh, &cfg),
         );
         let edps: Vec<Option<f64>> = evals.iter().map(|e| e.as_ref().map(|e| e.edp)).collect();
         if let Some(r) = &reference {
             assert_eq!(
                 r, &edps,
-                "distributed loopback results must be bit-identical to local"
+                "distributed loopback results must be bit-identical to local ({label})"
             );
         }
         let st = engine.stats();
@@ -250,6 +296,79 @@ fn main() {
         );
         dt * 1e3
     };
+    let dist_ms = run_loopback("single in-flight batch", 1);
+    let pipelined_ms = run_loopback("pipelined window", pipeline_depth);
+    let pipeline_speedup = dist_ms / pipelined_ms.max(1e-9);
+    println!("  -> pipelined loopback speedup {pipeline_speedup:.2}x at depth {pipeline_depth}");
+
+    // 8. checkpoint cost: the pre-journal per-generation snapshot
+    //    rewrote the whole cache (O(cache)); the append-only journal
+    //    writes one frame per new entry plus an fsync'd generation
+    //    mark (O(new)). Measured on a synthetic cache large enough for
+    //    the difference to dominate (the first save IS the full
+    //    rewrite, so it doubles as the snapshot-cost measurement).
+    let (ck_full_ms, ck_append_ms, ck_entries) = {
+        let n_entries: usize = if fast { 20_000 } else { 100_000 };
+        let mut dump = String::from("{\"entries\":[");
+        for i in 0..n_entries {
+            if i > 0 {
+                dump.push(',');
+            }
+            dump.push_str(&format!(
+                "{{\"key\":\"{i:016x}\",\"mappable\":true,\"energy_pj\":1.0,\
+                 \"memory_energy_pj\":0.5,\"cycles\":2.0,\"edp\":3.0,\
+                 \"valid_mappings\":4,\"breakdown\":[0.25,0.25,0.0],\
+                 \"mac_energy_pj\":0.5}}"
+            ));
+        }
+        dump.push_str("]}");
+        let big = MapperCache::new();
+        assert_eq!(big.load_json(&dump).expect("synthetic dump"), n_entries);
+        let st = SearchState {
+            generation: 1,
+            pop: vec![Individual {
+                genome: QuantConfig::uniform(4, 8),
+                objectives: vec![1.0, 2.0],
+            }],
+            rng: Rng::new(1),
+        };
+        let toy_arch = presets::toy();
+        let ident = SearchIdent::new(&toy_arch, 4, &cfg, &NsgaConfig::default());
+        let mut path = std::env::temp_dir();
+        path.push(format!("qmap_bench_journal_{}.jsonl", std::process::id()));
+        let path = path.to_string_lossy().into_owned();
+        let ckpt = Checkpointer::new(path.as_str());
+        let (r, dt_full) = time(
+            &format!("checkpoint: full snapshot write, {n_entries} cache entries"),
+            || ckpt.save(&st, &big, &ident),
+        );
+        r.expect("snapshot save");
+        // a handful of real inserts between generation boundaries
+        let tiny = MapperConfig {
+            valid_target: 1,
+            max_draws: 200,
+            seed: 1,
+            shards: 1,
+        };
+        for k in 0..16u64 {
+            big.evaluate(
+                &toy_arch,
+                &ConvLayer::fc("fc", 16, 10 + k),
+                &LayerQuant::uniform(8),
+                &tiny,
+            );
+        }
+        let (r, dt_app) = time("checkpoint: journal append, 16 new entries", || {
+            ckpt.save(&st, &big, &ident)
+        });
+        r.expect("journal append");
+        let _ = std::fs::remove_file(&path);
+        (dt_full * 1e3, dt_app * 1e3, n_entries)
+    };
+    let checkpoint_speedup = ck_full_ms / ck_append_ms.max(1e-9);
+    println!(
+        "  -> journal append {checkpoint_speedup:.0}x cheaper than the {ck_entries}-entry snapshot"
+    );
 
     let t_1w = engine_rows[0].1;
     for &(w, dt) in &engine_rows {
@@ -280,7 +399,15 @@ fn main() {
     println!("  cache_hit_ns                 = {cache_hit_ns:.0}");
     println!("  engine_speedup_4w_x          = {engine_4w:.2}");
     println!("  pop64_speedup_x              = {pop64:.1}");
+    println!("  tail_fifo_ms                 = {tail_fifo_ms:.1}");
+    println!("  tail_priority_ms             = {tail_prio_ms:.1}");
+    println!("  tail_improvement_x           = {tail_improvement:.2}");
     println!("  distributed_loopback_ms      = {dist_ms:.1}");
+    println!("  pipelined_loopback_ms        = {pipelined_ms:.1}");
+    println!("  pipeline_speedup_x           = {pipeline_speedup:.2}");
+    println!("  checkpoint_snapshot_ms       = {ck_full_ms:.1}");
+    println!("  checkpoint_journal_ms        = {ck_append_ms:.1}");
+    println!("  checkpoint_speedup_x         = {checkpoint_speedup:.1}");
 
     let record = Json::obj(vec![
         ("bench", Json::Str("perf_hotpath".into())),
@@ -319,9 +446,27 @@ fn main() {
         ("engine_population", Json::Num(pop_n as f64)),
         ("engine_speedup_4w_x", Json::Num(engine_4w)),
         ("pop64_speedup_x", Json::Num(pop64)),
+        // generation tail (last-job-finish minus queue-dry) at 4
+        // workers, FIFO vs priority injection (bit-identity asserted)
+        ("tail_fifo_ms", Json::Num(tail_fifo_ms)),
+        ("tail_priority_ms", Json::Num(tail_prio_ms)),
+        ("tail_improvement_x", Json::Num(tail_improvement)),
+        ("tail_fifo_total_ms", Json::Num(fifo_ms)),
+        ("tail_priority_total_ms", Json::Num(prio_ms)),
         // same population through Engine::distributed over a loopback
-        // qmap worker (bit-identity asserted above)
+        // qmap worker (bit-identity asserted above): depth 1 is the
+        // PR 3 single-in-flight baseline, the pipelined row keeps a
+        // window of batches per connection
         ("distributed_loopback_ms", Json::Num(dist_ms)),
+        ("pipelined_loopback_ms", Json::Num(pipelined_ms)),
+        ("pipeline_depth", Json::Num(pipeline_depth as f64)),
+        ("pipeline_speedup_x", Json::Num(pipeline_speedup)),
+        // per-generation checkpoint cost: full-cache snapshot rewrite
+        // vs append-only journal (16 new entries + one fsync'd mark)
+        ("checkpoint_entries", Json::Num(ck_entries as f64)),
+        ("checkpoint_snapshot_ms", Json::Num(ck_full_ms)),
+        ("checkpoint_journal_ms", Json::Num(ck_append_ms)),
+        ("checkpoint_speedup_x", Json::Num(checkpoint_speedup)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
     match std::fs::write(path, record.to_string()) {

@@ -32,24 +32,11 @@ impl Default for RunConfig {
     }
 }
 
-/// Parse a comma-separated `host:port` list — the format of the CLI's
-/// `--workers` flag and the `QMAP_WORKERS` environment variable.
-/// Whitespace around entries is tolerated, empty entries are dropped.
-pub fn parse_worker_list(s: &str) -> Vec<String> {
-    s.split(',')
-        .map(str::trim)
-        .filter(|t| !t.is_empty())
-        .map(str::to_string)
-        .collect()
-}
-
-/// Remote `qmap worker` addresses from `QMAP_WORKERS`, if set. The
-/// CLI's explicit `--workers` flag takes precedence over this.
-pub fn workers_from_env() -> Vec<String> {
-    std::env::var("QMAP_WORKERS")
-        .map(|s| parse_worker_list(&s))
-        .unwrap_or_default()
-}
+// `--workers` / `QMAP_WORKERS` parsing lives with its consumer now:
+// `engine::WorkerSource::parse` handles both the comma-separated form
+// and the `@file` elastic-fleet form (the former `parse_worker_list` /
+// `workers_from_env` helpers here were an exact subset and have been
+// retired to keep one implementation).
 
 impl RunConfig {
     /// Resolve a profile by name: `fast` (CI smoke) | `default` |
@@ -151,16 +138,6 @@ mod tests {
             RunConfig::from_profile("").expect("empty means default").mapper.valid_target,
             RunConfig::default().mapper.valid_target
         );
-    }
-
-    #[test]
-    fn worker_list_parsing() {
-        assert_eq!(
-            parse_worker_list("a:1, b:2 ,,c:3"),
-            vec!["a:1".to_string(), "b:2".into(), "c:3".into()]
-        );
-        assert!(parse_worker_list("").is_empty());
-        assert!(parse_worker_list(" , ").is_empty());
     }
 
     #[test]

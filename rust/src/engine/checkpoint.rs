@@ -1,22 +1,48 @@
-//! Generation-boundary checkpointing for long searches.
+//! Generation-boundary checkpointing for long searches, persisted as
+//! an **append-only journal** so checkpoint cost is O(new cache
+//! entries) per generation instead of O(cache).
 //!
-//! A checkpoint is one JSON document holding everything a search needs
-//! to continue after an interruption and still produce a bit-identical
-//! final front:
+//! ## Journal format (one JSON frame per line)
 //!
-//! * the NSGA-II [`SearchState`] — completed-generation count, the
-//!   parent population (genomes plus objective vectors, the latter
-//!   stored as hex-encoded IEEE-754 bits so `INFINITY` objectives of
-//!   unmappable genomes and every last mantissa bit round-trip), and
-//!   the breeding RNG's raw state;
-//! * the full [`MapperCache`] dump (the ROADMAP's "batch cache
-//!   persistence"): positive entries with their summaries, negative
-//!   entries with their draw-budget tags, so a resumed search neither
-//!   re-pays finished searches nor trusts failures recorded under a
-//!   smaller budget.
+//! ```text
+//! {"journal":1,"ident":{...}}          header: format version + search identity
+//! {"insert":{...cache entry...}}       one frame per mapper-cache insert
+//! {"mark":{"generation":g,"rng":"...","population":[...]}}
+//! ```
 //!
-//! Writes go through a `.tmp` + rename, so an interruption mid-save
-//! leaves the previous checkpoint intact.
+//! * The **header** carries the [`SearchIdent`]; a journal written
+//!   under one configuration refuses to resume under another.
+//! * **insert** frames are exactly the `entries` objects of the old
+//!   cache dump — positive summaries, or negative records with their
+//!   draw-budget tags. `MapperCache` queues each live insert
+//!   ([`MapperCache::drain_journal`]), and a generation's save appends
+//!   only those.
+//! * A **mark** frame is one generation boundary: completed-generation
+//!   count, the breeding RNG's raw state, and the parent population
+//!   (objectives as hex-encoded IEEE-754 bits, so `INFINITY` and every
+//!   mantissa bit round-trip). Each save ends with a mark and an
+//!   `fsync`, so a mark on disk is durable.
+//!
+//! **Replay** (load) applies insert frames in order and resumes from
+//! the *last complete* mark. A torn final line — the crash-mid-append
+//! case — is discarded; any complete insert frames past the last mark
+//! are kept, which is sound because cache entries are pure data: extra
+//! entries can only save re-searching, never change a bit of the
+//! result. After a torn load the appender stays unarmed, so the next
+//! save rewrites the file whole instead of welding new frames onto the
+//! partial tail. A malformed line anywhere *before* the final one is
+//! corruption and fails the load.
+//!
+//! **Compaction**: when the journal has accumulated far more insert
+//! frames than the cache has entries (duplicate keys from re-searched
+//! stale negatives, long resumed histories), the whole file is
+//! rewritten — header, one insert per current entry, one mark — via
+//! tmp + rename, and appending resumes. The rewrite is the same code
+//! path as the initial save.
+//!
+//! Checkpoints from before the journal (the single-document v2
+//! snapshot) still load; the first save then migrates the file to the
+//! journal format.
 
 use crate::arch::Arch;
 use crate::mapper::cache::MapperCache;
@@ -25,14 +51,23 @@ use crate::nsga::{Individual, NsgaConfig, SearchState};
 use crate::quant::QuantConfig;
 use crate::util::json::{parse, Json};
 use crate::util::rng::Rng;
+use std::io::Write as _;
+use std::sync::Mutex;
 
-/// Bumped to 2.0 with PR 3: `mapper::effective_shards` now also caps
-/// the shard count by `max_draws`, so a degenerate config (more shards
-/// than draws) produces a different `shard_plan` — and therefore
-/// different cached results — than the same config under version 1.
-/// Resuming a v1 checkpoint would silently mix the two plans; refusing
-/// it keeps the resume-bit-identical guarantee honest.
-const VERSION: f64 = 2.0;
+/// Journal format version (the `journal` field of the header frame).
+const JOURNAL_VERSION: f64 = 1.0;
+
+/// The pre-journal single-document snapshot version this module still
+/// loads (see PR 3's note: bumped to 2.0 when `effective_shards`
+/// changed the shard plan of degenerate configs).
+const LEGACY_VERSION: f64 = 2.0;
+
+/// Compaction slack: the journal is rewritten when the insert frames
+/// appended since the last full write exceed `2 * cache.len() +
+/// slack`. The default keeps compaction rare (duplicate keys are the
+/// only way appends outpace entries); tests shrink it to force the
+/// path.
+const DEFAULT_COMPACT_SLACK: usize = 1024;
 
 /// Identity of the search a checkpoint belongs to. A checkpoint written
 /// under one configuration and resumed under another (different
@@ -125,40 +160,24 @@ impl SearchIdent {
             p_mut_acc_bits: hex("p_mut_acc")?,
         })
     }
+
+    fn check(&self, stored: &SearchIdent, path: &str) -> Result<(), String> {
+        if stored != self {
+            return Err(format!(
+                "{path}: checkpoint belongs to a different search configuration — \
+                 saved {stored:?}, current {self:?}; resuming would corrupt the \
+                 search (delete the file or restore the original flags)"
+            ));
+        }
+        Ok(())
+    }
 }
 
-/// Saves/loads search checkpoints at a fixed path. Numeric encoding is
-/// shared with the distributed wire protocol (`engine::proto`):
-/// `Json::hex_u64` / `Json::hex_bits` from `util::json`.
-pub struct Checkpointer {
-    path: String,
-}
-
-impl Checkpointer {
-    pub fn new(path: impl Into<String>) -> Checkpointer {
-        Checkpointer { path: path.into() }
-    }
-
-    pub fn path(&self) -> &str {
-        &self.path
-    }
-
-    pub fn exists(&self) -> bool {
-        std::path::Path::new(&self.path).exists()
-    }
-
-    /// Snapshot the search state and the mapper cache under the given
-    /// search identity. Atomic at the filesystem level (temp file +
-    /// rename).
-    pub fn save(
-        &self,
-        st: &SearchState,
-        cache: &MapperCache,
-        ident: &SearchIdent,
-    ) -> Result<(), String> {
-        let pop: Vec<Json> = st
-            .pop
-            .iter()
+/// The population's JSON form (shared by journal marks and the legacy
+/// snapshot loader): genomes as byte arrays, objectives as hex bits.
+fn population_to_json(pop: &[Individual]) -> Json {
+    Json::Arr(
+        pop.iter()
             .map(|ind| {
                 Json::obj(vec![
                     (
@@ -178,87 +197,350 @@ impl Checkpointer {
                     ),
                 ])
             })
-            .collect();
-        let doc = Json::obj(vec![
-            ("version", Json::Num(VERSION)),
+            .collect(),
+    )
+}
+
+fn population_from_json(v: &Json, num_layers: usize) -> Result<Vec<Individual>, String> {
+    let mut pop: Vec<Individual> = Vec::new();
+    for ind in v.as_arr().ok_or("checkpoint: missing population")? {
+        let bytes: Vec<u8> = ind
+            .get("genome")
+            .as_arr()
+            .ok_or("checkpoint: bad genome")?
+            .iter()
+            .map(|g| {
+                g.as_f64()
+                    .map(|x| x as u8)
+                    .ok_or_else(|| "checkpoint: bad gene".to_string())
+            })
+            .collect::<Result<_, _>>()?;
+        let last_qo = ind.get("last_qo").as_f64().unwrap_or(8.0) as u8;
+        let genome = QuantConfig::decode(&bytes, last_qo)?;
+        if genome.len() != num_layers {
+            return Err(format!(
+                "checkpoint genome has {} layers, the network has {num_layers}",
+                genome.len()
+            ));
+        }
+        let mut objectives = Vec::new();
+        for o in ind
+            .get("objectives")
+            .as_arr()
+            .ok_or("checkpoint: bad objectives")?
+        {
+            objectives.push(o.as_f64_bits("objective")?);
+        }
+        pop.push(Individual { genome, objectives });
+    }
+    if pop.is_empty() {
+        return Err("checkpoint: empty population".into());
+    }
+    Ok(pop)
+}
+
+/// Open append handle plus the compaction accounting.
+struct Appender {
+    file: std::fs::File,
+    /// Insert frames written since the last full rewrite (replayed
+    /// frames count too, on resume).
+    appended: usize,
+}
+
+/// Saves/loads search checkpoints at a fixed path (journal format; see
+/// the module docs). Numeric encoding is shared with the distributed
+/// wire protocol (`engine::proto`): `Json::hex_u64` / `Json::hex_bits`
+/// from `util::json`.
+///
+/// One `Checkpointer` journals one cache: the first [`Checkpointer::
+/// save`] (or a successful journal [`Checkpointer::load`]) enables the
+/// cache's insert queue, full-writes the file, and every later save
+/// appends only the queued inserts plus a generation mark.
+pub struct Checkpointer {
+    path: String,
+    writer: Mutex<Option<Appender>>,
+    compact_slack: usize,
+}
+
+impl Checkpointer {
+    pub fn new(path: impl Into<String>) -> Checkpointer {
+        Checkpointer {
+            path: path.into(),
+            writer: Mutex::new(None),
+            compact_slack: DEFAULT_COMPACT_SLACK,
+        }
+    }
+
+    /// Lower the compaction trigger (tests force the rewrite path with
+    /// slack 0).
+    pub fn with_compact_slack(mut self, slack: usize) -> Checkpointer {
+        self.compact_slack = slack;
+        self
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    pub fn exists(&self) -> bool {
+        std::path::Path::new(&self.path).exists()
+    }
+
+    fn header_frame(ident: &SearchIdent) -> Json {
+        Json::obj(vec![
+            ("journal", Json::Num(JOURNAL_VERSION)),
             ("ident", ident.to_json()),
-            ("generation", Json::Num(st.generation as f64)),
-            ("rng", Json::hex_u64(st.rng.state())),
-            ("population", Json::Arr(pop)),
-            ("cache", cache.to_json_value()),
-        ]);
+        ])
+    }
+
+    fn mark_frame(st: &SearchState) -> Json {
+        Json::obj(vec![(
+            "mark",
+            Json::obj(vec![
+                ("generation", Json::Num(st.generation as f64)),
+                ("rng", Json::hex_u64(st.rng.state())),
+                ("population", population_to_json(&st.pop)),
+            ]),
+        )])
+    }
+
+    /// Full rewrite: header + one insert frame per current cache entry
+    /// + one mark, atomically (tmp + rename), then reopen for appends.
+    /// Both the first save of a run and every compaction land here.
+    fn rewrite(
+        &self,
+        st: &SearchState,
+        cache: &MapperCache,
+        ident: &SearchIdent,
+    ) -> Result<Appender, String> {
         let tmp = format!("{}.tmp", self.path);
-        std::fs::write(&tmp, doc.to_string()).map_err(|e| format!("{tmp}: {e}"))?;
-        std::fs::rename(&tmp, &self.path).map_err(|e| format!("{}: {e}", self.path))
+        let mut buf = String::new();
+        buf.push_str(&Self::header_frame(ident).to_string());
+        buf.push('\n');
+        for e in cache.entries_json() {
+            buf.push_str(&Json::obj(vec![("insert", e)]).to_string());
+            buf.push('\n');
+        }
+        buf.push_str(&Self::mark_frame(st).to_string());
+        buf.push('\n');
+        {
+            let mut f = std::fs::File::create(&tmp).map_err(|e| format!("{tmp}: {e}"))?;
+            f.write_all(buf.as_bytes()).map_err(|e| format!("{tmp}: {e}"))?;
+            f.sync_data().map_err(|e| format!("{tmp}: {e}"))?;
+        }
+        std::fs::rename(&tmp, &self.path).map_err(|e| format!("{}: {e}", self.path))?;
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| format!("{}: {e}", self.path))?;
+        Ok(Appender { file, appended: 0 })
+    }
+
+    /// Checkpoint the search at a generation boundary.
+    ///
+    /// The first save of a process (or any save against a cache whose
+    /// journal queue is not enabled) writes the whole file and arms
+    /// the cache's insert queue; every subsequent save appends the
+    /// queued inserts and one fsync'd mark — O(new entries), which is
+    /// what makes per-generation checkpointing affordable at 10^6
+    /// cache entries.
+    pub fn save(
+        &self,
+        st: &SearchState,
+        cache: &MapperCache,
+        ident: &SearchIdent,
+    ) -> Result<(), String> {
+        let mut guard = self.writer.lock().unwrap();
+        // append path: an armed writer and a journaling cache
+        let mut appended: Option<Result<usize, String>> = None;
+        if cache.journal_enabled() {
+            if let Some(app) = guard.as_mut() {
+                appended = Some((|| {
+                    let pending = cache.drain_journal();
+                    let n_pending = pending.len();
+                    let mut buf = String::new();
+                    for e in pending {
+                        buf.push_str(&Json::obj(vec![("insert", e)]).to_string());
+                        buf.push('\n');
+                    }
+                    buf.push_str(&Self::mark_frame(st).to_string());
+                    buf.push('\n');
+                    app.file
+                        .write_all(buf.as_bytes())
+                        .map_err(|e| format!("{}: {e}", self.path))?;
+                    // the mark is the durability point: a resumed
+                    // search restarts from the last mark on disk
+                    app.file.sync_data().map_err(|e| format!("{}: {e}", self.path))?;
+                    app.appended += n_pending;
+                    Ok(app.appended)
+                })());
+            }
+        }
+        match appended {
+            // a failed append may have left a partial frame at the
+            // tail; disarm so the next save rewrites the file whole
+            Some(Err(e)) => {
+                *guard = None;
+                Err(e)
+            }
+            Some(Ok(n)) => {
+                if n > self.compact_slack + 2 * cache.len() {
+                    match self.rewrite(st, cache, ident) {
+                        Ok(app) => *guard = Some(app),
+                        Err(e) => {
+                            // the rename may already have happened: the
+                            // old handle could point at an unlinked
+                            // inode, where appends would "succeed"
+                            // invisibly — disarm so the next save
+                            // rewrites whole
+                            *guard = None;
+                            return Err(e);
+                        }
+                    }
+                }
+                Ok(())
+            }
+            // first save (or a non-journaling cache): arm the insert
+            // queue — everything already in the cache is covered by
+            // the full dump, everything after lands in the queue —
+            // then write the whole file
+            None => {
+                cache.enable_journal();
+                let _ = cache.drain_journal();
+                *guard = Some(self.rewrite(st, cache, ident)?);
+                Ok(())
+            }
+        }
     }
 
     /// Restore a checkpoint: loads the cache entries into `cache` and
     /// returns the search state. Rejects version, search-identity, or
     /// genome-length mismatches with a clear error instead of resuming
-    /// garbage.
+    /// garbage; tolerates a torn final line (crash mid-append) by
+    /// resuming from the last complete mark. On success the journal is
+    /// reopened for appending, so later saves extend it in place.
     pub fn load(&self, ident: &SearchIdent, cache: &MapperCache) -> Result<SearchState, String> {
-        let num_layers = ident.num_layers;
         let src =
             std::fs::read_to_string(&self.path).map_err(|e| format!("{}: {e}", self.path))?;
-        let v = parse(&src).map_err(|e| format!("{}: {e}", self.path))?;
-        if v.get("version").as_f64() != Some(VERSION) {
+        // format sniff on the first line: journal header vs the legacy
+        // single-document snapshot
+        let first = src.lines().next().unwrap_or("");
+        let head = parse(first);
+        let is_journal = matches!(&head, Ok(h) if h.get("journal").as_f64().is_some());
+        if !is_journal {
+            let st = self.load_legacy(&src, ident, cache)?;
+            // leave the writer unarmed: the first save migrates the
+            // file to the journal format with a full rewrite
+            return Ok(st);
+        }
+        let header = head.map_err(|e| format!("{}: {e}", self.path))?;
+        if header.get("journal").as_f64() != Some(JOURNAL_VERSION) {
             return Err(format!(
-                "{}: unsupported checkpoint version (want {VERSION})",
+                "{}: unsupported journal version (want {JOURNAL_VERSION})",
+                self.path
+            ));
+        }
+        let stored = SearchIdent::from_json(header.get("ident"))?;
+        ident.check(&stored, &self.path)?;
+        let lines: Vec<&str> = src.lines().collect();
+        let mut latest: Option<Json> = None;
+        let mut inserts = 0usize;
+        let mut torn = false;
+        for (i, line) in lines.iter().enumerate().skip(1) {
+            let frame = match parse(line) {
+                Ok(f) => f,
+                Err(e) => {
+                    if i + 1 == lines.len() {
+                        // torn final line: the crash-mid-append case —
+                        // everything before it is intact, stop here
+                        torn = true;
+                        break;
+                    }
+                    return Err(format!("{}: corrupt frame at line {}: {e}", self.path, i + 1));
+                }
+            };
+            if !matches!(frame.get("insert"), Json::Null) {
+                cache
+                    .load_entry_json(frame.get("insert"))
+                    .map_err(|e| format!("{}: insert frame at line {}: {e}", self.path, i + 1))?;
+                inserts += 1;
+            } else if !matches!(frame.get("mark"), Json::Null) {
+                latest = Some(frame.get("mark").clone());
+            } else {
+                return Err(format!(
+                    "{}: unknown frame at line {} (neither insert nor mark)",
+                    self.path,
+                    i + 1
+                ));
+            }
+        }
+        // a file that does not end in '\n' had its final append cut
+        // short even if the last frame happens to parse — appending
+        // after it would weld two frames into one line, so treat it as
+        // torn (the frame itself is still safe to use: it was fully
+        // written, only its terminator is missing)
+        if !src.ends_with('\n') {
+            torn = true;
+        }
+        let mark = latest.ok_or_else(|| {
+            format!("{}: journal has no complete generation mark", self.path)
+        })?;
+        let generation = mark
+            .get("generation")
+            .as_f64()
+            .ok_or("checkpoint: missing generation")? as usize;
+        let rng = Rng::new(mark.get("rng").as_hex_u64("checkpoint rng")?);
+        let pop = population_from_json(mark.get("population"), ident.num_layers)?;
+        // arm the cache's insert queue; keep appending to the replayed
+        // journal UNLESS the tail was torn — appending after partial
+        // bytes would merge the torn line with the next frame into one
+        // malformed middle-of-file line and make the journal
+        // unloadable, so a torn journal leaves the writer unarmed and
+        // the next save rewrites the file whole (tmp + rename)
+        cache.enable_journal();
+        let _ = cache.drain_journal();
+        if torn {
+            *self.writer.lock().unwrap() = None;
+        } else {
+            let file = std::fs::OpenOptions::new()
+                .append(true)
+                .open(&self.path)
+                .map_err(|e| format!("{}: {e}", self.path))?;
+            *self.writer.lock().unwrap() = Some(Appender {
+                file,
+                appended: inserts,
+            });
+        }
+        Ok(SearchState {
+            generation,
+            pop,
+            rng,
+        })
+    }
+
+    /// Load the pre-journal single-document snapshot format.
+    fn load_legacy(
+        &self,
+        src: &str,
+        ident: &SearchIdent,
+        cache: &MapperCache,
+    ) -> Result<SearchState, String> {
+        let v = parse(src).map_err(|e| format!("{}: {e}", self.path))?;
+        if v.get("version").as_f64() != Some(LEGACY_VERSION) {
+            return Err(format!(
+                "{}: unsupported checkpoint version (want the journal format or \
+                 legacy {LEGACY_VERSION})",
                 self.path
             ));
         }
         let stored = SearchIdent::from_json(v.get("ident"))?;
-        if stored != *ident {
-            return Err(format!(
-                "{}: checkpoint belongs to a different search configuration — \
-                 saved {stored:?}, current {ident:?}; resuming would corrupt the \
-                 search (delete the file or restore the original flags)",
-                self.path
-            ));
-        }
+        ident.check(&stored, &self.path)?;
         let generation = v
             .get("generation")
             .as_f64()
             .ok_or("checkpoint: missing generation")? as usize;
         let rng = Rng::new(v.get("rng").as_hex_u64("checkpoint rng")?);
-        let mut pop: Vec<Individual> = Vec::new();
-        for ind in v
-            .get("population")
-            .as_arr()
-            .ok_or("checkpoint: missing population")?
-        {
-            let bytes: Vec<u8> = ind
-                .get("genome")
-                .as_arr()
-                .ok_or("checkpoint: bad genome")?
-                .iter()
-                .map(|g| {
-                    g.as_f64()
-                        .map(|x| x as u8)
-                        .ok_or_else(|| "checkpoint: bad gene".to_string())
-                })
-                .collect::<Result<_, _>>()?;
-            let last_qo = ind.get("last_qo").as_f64().unwrap_or(8.0) as u8;
-            let genome = QuantConfig::decode(&bytes, last_qo)?;
-            if genome.len() != num_layers {
-                return Err(format!(
-                    "checkpoint genome has {} layers, the network has {num_layers}",
-                    genome.len()
-                ));
-            }
-            let mut objectives = Vec::new();
-            for o in ind
-                .get("objectives")
-                .as_arr()
-                .ok_or("checkpoint: bad objectives")?
-            {
-                objectives.push(o.as_f64_bits("objective")?);
-            }
-            pop.push(Individual { genome, objectives });
-        }
-        if pop.is_empty() {
-            return Err("checkpoint: empty population".into());
-        }
+        let pop = population_from_json(v.get("population"), ident.num_layers)?;
         cache
             .load_json(&v.get("cache").to_string())
             .map_err(|e| format!("checkpoint cache: {e}"))?;
@@ -403,6 +685,245 @@ mod tests {
         std::fs::write(&path, "not json at all").unwrap();
         let ckpt = Checkpointer::new(path.as_str());
         assert!(ckpt.load(&ident(), &MapperCache::new()).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The save-twice path: the second save must *append* — the first
+    /// file's bytes stay a literal prefix — and carry only the entries
+    /// inserted in between, plus the new mark.
+    #[test]
+    fn second_save_appends_only_the_new_entries() {
+        let path = tmp_path("append");
+        let ckpt = Checkpointer::new(path.as_str());
+        let a = toy();
+        let cfg = MapperConfig {
+            valid_target: 20,
+            max_draws: 20_000,
+            seed: 5,
+            shards: 1,
+        };
+        let cache = MapperCache::new();
+        cache.evaluate(&a, &ConvLayer::fc("fc", 16, 10), &LayerQuant::uniform(8), &cfg);
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        let before = std::fs::read(&path).unwrap();
+        // two fresh inserts between generation boundaries
+        cache.evaluate(&a, &ConvLayer::fc("fc", 16, 12), &LayerQuant::uniform(8), &cfg);
+        cache.evaluate(&a, &ConvLayer::fc("fc", 16, 14), &LayerQuant::uniform(8), &cfg);
+        let mut st = state_with_objectives(vec![vec![3.0, 4.0]]);
+        st.generation = 4;
+        ckpt.save(&st, &cache, &ident()).unwrap();
+        let after = std::fs::read(&path).unwrap();
+        assert!(
+            after.starts_with(&before),
+            "a generation save must append, not rewrite"
+        );
+        let tail = String::from_utf8_lossy(&after[before.len()..]).into_owned();
+        assert_eq!(
+            tail.matches("{\"insert\":").count(),
+            2,
+            "exactly the two new entries ride the journal: {tail}"
+        );
+        // replay resumes from the latest mark with the full cache
+        let restored = MapperCache::new();
+        let back = ckpt.load(&ident(), &restored).unwrap();
+        assert_eq!(back.generation, 4);
+        assert_eq!(restored.len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A torn final line (crash mid-append) resumes from the last
+    /// complete mark; complete insert frames past that mark are kept.
+    #[test]
+    fn torn_tail_resumes_from_the_last_complete_mark() {
+        let path = tmp_path("torn");
+        let ckpt = Checkpointer::new(path.as_str());
+        let a = toy();
+        let cfg = MapperConfig {
+            valid_target: 20,
+            max_draws: 20_000,
+            seed: 5,
+            shards: 1,
+        };
+        let cache = MapperCache::new();
+        cache.evaluate(&a, &ConvLayer::fc("fc", 16, 10), &LayerQuant::uniform(8), &cfg);
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        cache.evaluate(&a, &ConvLayer::fc("fc", 16, 12), &LayerQuant::uniform(8), &cfg);
+        let mut st = state_with_objectives(vec![vec![3.0, 4.0]]);
+        st.generation = 4;
+        ckpt.save(&st, &cache, &ident()).unwrap();
+        // tear the file inside the final mark line
+        let bytes = std::fs::read(&path).unwrap();
+        let text = String::from_utf8(bytes).unwrap();
+        let last_mark = text.rfind("{\"mark\":").expect("final mark frame");
+        std::fs::write(&path, &text[..last_mark + 9]).unwrap();
+        let restored = MapperCache::new();
+        let resumed = Checkpointer::new(path.as_str());
+        let back = resumed.load(&ident(), &restored).unwrap();
+        assert_eq!(back.generation, 3, "must fall back to the last complete mark");
+        // the complete insert frame past the surviving mark is kept
+        assert_eq!(restored.len(), 2);
+        // saving after a torn load must NOT append onto the partial
+        // tail (that would weld two frames into one corrupt middle
+        // line): the file is rewritten whole and loads again
+        let mut st2 = state_with_objectives(vec![vec![5.0, 6.0]]);
+        st2.generation = 5;
+        resumed.save(&st2, &restored, &ident()).unwrap();
+        let again = MapperCache::new();
+        let back2 = Checkpointer::new(path.as_str()).load(&ident(), &again).unwrap();
+        assert_eq!(back2.generation, 5);
+        assert_eq!(again.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A file whose final frame is complete but lost its trailing
+    /// newline (crash between the frame bytes and the terminator) must
+    /// load — and must NOT be appended to, or the next frame would
+    /// weld onto the same line.
+    #[test]
+    fn missing_trailing_newline_is_treated_as_torn() {
+        let path = tmp_path("noeol");
+        let ckpt = Checkpointer::new(path.as_str());
+        let cache = MapperCache::new();
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        std::fs::write(&path, text.trim_end_matches('\n')).unwrap();
+        let resumed = Checkpointer::new(path.as_str());
+        let back = resumed.load(&ident(), &MapperCache::new()).unwrap();
+        assert_eq!(back.generation, 3, "the complete final mark still counts");
+        // the next save must rewrite whole, leaving a loadable journal
+        let mut st = state_with_objectives(vec![vec![3.0, 4.0]]);
+        st.generation = 7;
+        resumed.save(&st, &MapperCache::new(), &ident()).unwrap();
+        let back2 = Checkpointer::new(path.as_str())
+            .load(&ident(), &MapperCache::new())
+            .unwrap();
+        assert_eq!(back2.generation, 7);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Corruption *before* the final line is an error, not a silent
+    /// partial load.
+    #[test]
+    fn corrupt_middle_frame_is_rejected() {
+        let path = tmp_path("midcorrupt");
+        let ckpt = Checkpointer::new(path.as_str());
+        let cache = MapperCache::new();
+        let a = toy();
+        let cfg = MapperConfig {
+            valid_target: 20,
+            max_draws: 20_000,
+            seed: 5,
+            shards: 1,
+        };
+        cache.evaluate(&a, &ConvLayer::fc("fc", 16, 10), &LayerQuant::uniform(8), &cfg);
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+        assert!(lines.len() >= 3, "header + insert + mark");
+        lines[1] = "{\"insert\": garbage".into();
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let err = Checkpointer::new(path.as_str())
+            .load(&ident(), &MapperCache::new())
+            .unwrap_err();
+        assert!(err.contains("corrupt frame"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Forced compaction: with zero slack and duplicate-key churn the
+    /// journal rewrites itself and stays loadable.
+    #[test]
+    fn compaction_bounds_the_journal_and_preserves_replay() {
+        let path = tmp_path("compact");
+        let ckpt = Checkpointer::new(path.as_str()).with_compact_slack(0);
+        let a = toy();
+        let cfg = MapperConfig {
+            valid_target: 10,
+            max_draws: 10_000,
+            seed: 5,
+            shards: 1,
+        };
+        let cache = MapperCache::new();
+        let l = ConvLayer::fc("fc", 16, 10);
+        let q = LayerQuant::uniform(8);
+        let r = crate::mapper::search(&a, &l, &q, &cfg);
+        cache.insert_search(&a, &l, &q, &cfg, &r);
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        // churn the same key: every insert queues a journal frame but
+        // the cache stays at one entry, so appends outrun 2*len fast
+        for gen in 0..6 {
+            for _ in 0..4 {
+                cache.insert_search(&a, &l, &q, &cfg, &r);
+            }
+            let mut st = state_with_objectives(vec![vec![1.0, 2.0]]);
+            st.generation = 3 + gen;
+            ckpt.save(&st, &cache, &ident()).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let inserts = text.matches("{\"insert\":").count();
+        assert!(
+            inserts <= 6,
+            "compaction must bound duplicate insert frames, found {inserts}"
+        );
+        let restored = MapperCache::new();
+        let back = Checkpointer::new(path.as_str()).load(&ident(), &restored).unwrap();
+        assert_eq!(back.generation, 8);
+        assert_eq!(restored.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A pre-journal (v2 single-document) checkpoint still loads, and
+    /// the next save migrates the file to the journal format.
+    #[test]
+    fn legacy_snapshot_loads_and_migrates() {
+        let path = tmp_path("legacy");
+        let a = toy();
+        let cfg = MapperConfig {
+            valid_target: 20,
+            max_draws: 20_000,
+            seed: 5,
+            shards: 1,
+        };
+        let cache = MapperCache::new();
+        cache.evaluate(&a, &ConvLayer::fc("fc", 16, 10), &LayerQuant::uniform(8), &cfg);
+        let st = state_with_objectives(vec![vec![1.0, f64::INFINITY]]);
+        // the old format: one JSON document with a version field
+        let doc = Json::obj(vec![
+            ("version", Json::Num(LEGACY_VERSION)),
+            ("ident", ident().to_json()),
+            ("generation", Json::Num(st.generation as f64)),
+            ("rng", Json::hex_u64(st.rng.state())),
+            ("population", population_to_json(&st.pop)),
+            ("cache", cache.to_json_value()),
+        ]);
+        std::fs::write(&path, doc.to_string()).unwrap();
+
+        let ckpt = Checkpointer::new(path.as_str());
+        let restored = MapperCache::new();
+        let back = ckpt.load(&ident(), &restored).unwrap();
+        assert_eq!(back.generation, st.generation);
+        assert_eq!(back.rng.state(), st.rng.state());
+        assert_eq!(restored.len(), 1);
+        assert_eq!(
+            back.pop[0].objectives[1].to_bits(),
+            f64::INFINITY.to_bits()
+        );
+        // saving migrates to the journal format...
+        ckpt.save(&back, &restored, &ident()).unwrap();
+        let migrated = std::fs::read_to_string(&path).unwrap();
+        assert!(migrated.starts_with("{\"ident\":") || migrated.starts_with("{\"journal\":"),
+            "{migrated}");
+        assert!(migrated.contains("\"journal\":"));
+        // ...which loads again
+        let again = MapperCache::new();
+        let back2 = Checkpointer::new(path.as_str()).load(&ident(), &again).unwrap();
+        assert_eq!(back2.generation, st.generation);
+        assert_eq!(again.len(), 1);
         let _ = std::fs::remove_file(&path);
     }
 }

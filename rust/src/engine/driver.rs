@@ -23,7 +23,7 @@
 //!   shard-index order.
 
 use super::checkpoint::{Checkpointer, SearchIdent};
-use super::{remote, Backend, Engine};
+use super::{remote, Backend, Engine, SchedPolicy};
 use crate::accuracy::AccuracyModel;
 use crate::arch::Arch;
 use crate::baselines::Candidate;
@@ -34,8 +34,11 @@ use crate::mapping::mapspace::MapSpace;
 use crate::mapping::LayerContext;
 use crate::nsga::{self, Individual, NsgaConfig};
 use crate::quant::{LayerQuant, QuantConfig};
+use crate::util::rng::Rng;
 use crate::workload::ConvLayer;
 use rustc_hash::FxHashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 /// One schedulable unit: characterize `layer` under `quant` (canonical
 /// form) on the current architecture. `layer_index` ties the job back
@@ -59,10 +62,26 @@ pub fn eval_layer(
     cache: &MapperCache,
     cfg: &MapperConfig,
 ) -> Option<CachedEval> {
+    eval_layer_hinted(engine, arch, layer, q, cache, cfg, false)
+}
+
+/// [`eval_layer`] with the generation-tail hint: `force_split` marks a
+/// job running while the job queue is (nearly) dry, whose shards should
+/// fan out even before any worker has parked. Placement only — the
+/// shard plan and merge are identical either way.
+fn eval_layer_hinted(
+    engine: &Engine,
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    cache: &MapperCache,
+    cfg: &MapperConfig,
+    force_split: bool,
+) -> Option<CachedEval> {
     if let Some(res) = cache.probe(arch, layer, q, cfg) {
         return res;
     }
-    let r = search_on_engine(engine, arch, layer, q, cfg);
+    let r = search_on_engine_hinted(engine, arch, layer, q, cfg, force_split);
     cache.insert_search(arch, layer, q, cfg, &r)
 }
 
@@ -79,17 +98,73 @@ pub fn search_on_engine(
     q: &LayerQuant,
     cfg: &MapperConfig,
 ) -> mapper::MapperResult {
+    search_on_engine_hinted(engine, arch, layer, q, cfg, false)
+}
+
+/// The split decision: shards fan out when idle workers exist (the
+/// steady-state heuristic), or when `force_split` says the generation
+/// is in its tail — fewer unfinished jobs than workers, so the largest
+/// still-running jobs should hand their shards to the workers that are
+/// about to go idle rather than keep them serial.
+fn search_on_engine_hinted(
+    engine: &Engine,
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    cfg: &MapperConfig,
+    force_split: bool,
+) -> mapper::MapperResult {
     let q = q.canonical(arch.word_bits, arch.bit_packing);
     let space = MapSpace::of(arch);
     let lctx = LayerContext::new(arch, layer, &q);
     let specs = mapper::shard_plan(cfg, cfg.seed ^ mapper::workload_hash(layer, &q));
-    let outcomes = if specs.len() > 1 && engine.pool().idle_workers() > 0 {
+    let split = specs.len() > 1
+        && (engine.pool().idle_workers() > 0 || (force_split && engine.workers() > 1));
+    let outcomes = if split {
         engine.note_split();
         engine.map(&specs, |s| mapper::run_shard(&space, &lctx, s))
     } else {
         specs.iter().map(|s| mapper::run_shard(&space, &lctx, s)).collect()
     };
     mapper::merge_shards(outcomes)
+}
+
+/// Inject a generation's jobs in scheduler order (see [`SchedPolicy`]).
+///
+/// `Priority` sorts by descending *effective draw budget* — the
+/// cache-probe-aware cost estimate from
+/// [`MapperCache::effective_draws`]: stale negatives (guaranteed to
+/// burn the whole budget) first, fresh misses next with larger layers
+/// (more MACs per draw) ahead, cached jobs (cost 0) last. Ties break
+/// on first-encounter order, so the order is deterministic. Pure
+/// placement: every policy produces bit-identical results.
+pub(crate) fn order_jobs(
+    engine: &Engine,
+    arch: &Arch,
+    layers: &[ConvLayer],
+    jobs: &[EvalJob],
+    cache: &MapperCache,
+    cfg: &MapperConfig,
+) -> Vec<EvalJob> {
+    let mut idx: Vec<usize> = (0..jobs.len()).collect();
+    match engine.sched_policy() {
+        SchedPolicy::Fifo => {}
+        SchedPolicy::Priority => {
+            let key: Vec<(u64, u64)> = jobs
+                .iter()
+                .map(|j| {
+                    let layer = &layers[j.layer_index];
+                    (cache.effective_draws(arch, layer, &j.quant, cfg), layer.macs())
+                })
+                .collect();
+            idx.sort_by(|&a, &b| key[b].cmp(&key[a]).then(a.cmp(&b)));
+        }
+        SchedPolicy::Shuffled(seed) => {
+            let mut r = Rng::new(seed ^ jobs.len() as u64);
+            r.shuffle(&mut idx);
+        }
+    }
+    idx.into_iter().map(|i| jobs[i]).collect()
 }
 
 /// Evaluate a population of genomes on the engine: deduplicate the
@@ -147,24 +222,45 @@ pub fn evaluate_genomes(
     }
     engine.note_jobs(jobs.len() as u64);
     match engine.backend() {
-        // local: the unique jobs fan out over the work-stealing pool
+        // local: the unique jobs fan out over the work-stealing pool in
+        // scheduler order (priority by default — largest effective draw
+        // budgets first, cached jobs last), with the tail instrumented:
+        // once fewer unfinished jobs remain than workers, each job runs
+        // with the force-split hint so its shards feed the workers the
+        // dry queue is about to idle.
         Backend::Local => {
-            let _results: Vec<Option<CachedEval>> = engine.map(&jobs, |job| {
-                eval_layer(
+            let ordered = order_jobs(engine, arch, layers, &jobs, cache, cfg);
+            let remaining = AtomicUsize::new(ordered.len());
+            let t0 = Instant::now();
+            let spans: Vec<(f64, f64)> = engine.map(&ordered, |job| {
+                let claimed = t0.elapsed().as_secs_f64();
+                let tail_mode = remaining.load(Ordering::Relaxed) <= engine.workers();
+                let _ = eval_layer_hinted(
                     engine,
                     arch,
                     &layers[job.layer_index],
                     &job.quant,
                     cache,
                     cfg,
-                )
+                    tail_mode,
+                );
+                remaining.fetch_sub(1, Ordering::Relaxed);
+                (claimed, t0.elapsed().as_secs_f64())
             });
+            // generation tail = last finish minus last claim: once the
+            // final job has been claimed the queue is dry, and whatever
+            // runs past that point is the tail the scheduler tries to
+            // shrink (exposed as EngineStats::last_tail_ms)
+            let last_claim = spans.iter().map(|s| s.0).fold(0.0f64, f64::max);
+            let last_finish = spans.iter().map(|s| s.1).fold(0.0f64, f64::max);
+            engine.note_tail(last_finish - last_claim);
         }
         // distributed: remote workers and the local pool race the same
         // job queue; every job lands in the cache either way, with the
         // same bits (remote::eval_jobs merges the same shard plan)
         Backend::Distributed { workers } => {
-            remote::eval_jobs(engine, arch, layers, &jobs, cache, cfg, workers);
+            let addrs = workers.resolve();
+            remote::eval_jobs(engine, arch, layers, &jobs, cache, cfg, &addrs);
         }
     }
     // assemble per genome through the cache (every probe is a hit: the
@@ -404,5 +500,85 @@ mod tests {
             let got = evaluate_genomes(&engine, &a, &layers, &genomes, &cache, &c);
             assert_eq!(reference, got, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn sched_policy_never_changes_results() {
+        let a = toy();
+        let layers = net();
+        let c = cfg(2);
+        let mut rng = crate::util::rng::Rng::new(41);
+        let genomes: Vec<QuantConfig> = (0..5)
+            .map(|_| {
+                let mut g = QuantConfig::uniform(layers.len(), 8);
+                for l in g.layers.iter_mut() {
+                    l.0 = 2 + rng.below(7) as u8;
+                    l.1 = 2 + rng.below(7) as u8;
+                }
+                g
+            })
+            .collect();
+        let reference = {
+            let engine = Engine::new(1).with_sched_policy(SchedPolicy::Fifo);
+            let cache = MapperCache::new();
+            evaluate_genomes(&engine, &a, &layers, &genomes, &cache, &c)
+        };
+        for policy in [
+            SchedPolicy::Fifo,
+            SchedPolicy::Priority,
+            SchedPolicy::Shuffled(7),
+            SchedPolicy::Shuffled(0xDEAD_BEEF),
+        ] {
+            let engine = Engine::new(3).with_sched_policy(policy);
+            let cache = MapperCache::new();
+            let got = evaluate_genomes(&engine, &a, &layers, &genomes, &cache, &c);
+            assert_eq!(reference, got, "policy={policy:?}");
+            // a second generation over a warm cache: priority now sinks
+            // the cached jobs; the results still cannot move
+            let again = evaluate_genomes(&engine, &a, &layers, &genomes, &cache, &c);
+            assert_eq!(reference, again, "warm policy={policy:?}");
+        }
+    }
+
+    #[test]
+    fn priority_order_sinks_cached_jobs_and_is_deterministic() {
+        let a = toy();
+        let layers = net();
+        let c = cfg(1);
+        let engine = Engine::new(1); // default policy: Priority
+        let cache = MapperCache::new();
+        let quants: Vec<LayerQuant> = (0..layers.len())
+            .map(|i| {
+                LayerQuant::uniform(if i % 2 == 0 { 4 } else { 8 })
+                    .canonical(a.word_bits, a.bit_packing)
+            })
+            .collect();
+        let jobs: Vec<EvalJob> = quants
+            .iter()
+            .enumerate()
+            .map(|(i, &quant)| EvalJob { layer_index: i, quant })
+            .collect();
+        // cold cache: every job costs max_draws; ties resolve by MACs
+        // (descending), then first-encounter order — deterministic
+        let cold1 = order_jobs(&engine, &a, &layers, &jobs, &cache, &c);
+        let cold2 = order_jobs(&engine, &a, &layers, &jobs, &cache, &c);
+        let key = |v: &[EvalJob]| v.iter().map(|j| j.layer_index).collect::<Vec<_>>();
+        assert_eq!(key(&cold1), key(&cold2));
+        let macs: Vec<u64> = cold1.iter().map(|j| layers[j.layer_index].macs()).collect();
+        let sorted = {
+            let mut m = macs.clone();
+            m.sort_unstable_by(|x, y| y.cmp(x));
+            m
+        };
+        assert_eq!(macs, sorted, "cold priority order must be MACs-descending");
+        // warm one workload: it must sink to the end of the order
+        let warm_idx = cold1[0].layer_index;
+        cache.evaluate(&a, &layers[warm_idx], &cold1[0].quant, &c);
+        let warm = order_jobs(&engine, &a, &layers, &jobs, &cache, &c);
+        assert_eq!(
+            warm.last().unwrap().layer_index,
+            warm_idx,
+            "cached job must sink to the tail of the schedule"
+        );
     }
 }

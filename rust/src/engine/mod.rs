@@ -42,6 +42,73 @@ pub use remote::WorkerOptions;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// Where the addresses of remote `qmap worker` processes come from.
+///
+/// `Static` is a fixed fleet (the comma-separated `--workers` /
+/// `QMAP_WORKERS` form). `File` is the elastic form (`--workers
+/// @path`): a file of `host:port` lines that is **re-read at every
+/// generation boundary** ([`remote::eval_jobs`] calls
+/// [`WorkerSource::resolve`] once per generation), so a fleet can grow
+/// or shrink mid-search without restarting the driver. Results are
+/// bit-identical for any worker set, so membership churn is safe by
+/// construction.
+#[derive(Debug, Clone)]
+pub enum WorkerSource {
+    Static(Vec<String>),
+    /// Path to a file of `host:port` entries (one per line; commas and
+    /// blank lines tolerated, `#` comments skipped).
+    File(String),
+}
+
+impl WorkerSource {
+    /// Parse a `--workers` argument: `@path` selects the file form,
+    /// anything else is a comma-separated static list.
+    pub fn parse(s: &str) -> WorkerSource {
+        let t = s.trim();
+        match t.strip_prefix('@') {
+            Some(path) => WorkerSource::File(path.trim().to_string()),
+            None => WorkerSource::Static(
+                t.split(',')
+                    .map(str::trim)
+                    .filter(|x| !x.is_empty())
+                    .map(str::to_string)
+                    .collect(),
+            ),
+        }
+    }
+
+    /// The current worker list. For the file form this re-reads the
+    /// file; an unreadable file degrades to an empty list (local-only
+    /// execution) with a warning, never an error — an elastic fleet
+    /// shrinking to zero is a legitimate state.
+    pub fn resolve(&self) -> Vec<String> {
+        match self {
+            WorkerSource::Static(ws) => ws.clone(),
+            WorkerSource::File(path) => match std::fs::read_to_string(path) {
+                // strip each line from '#' to end-of-line BEFORE
+                // splitting on commas: '# hostA:1, hostB:2' retires
+                // every host on the line, and 'hostA:1  # main rack'
+                // keeps the host without swallowing the comment into
+                // the address
+                Ok(src) => src
+                    .lines()
+                    .map(|l| l.split('#').next().unwrap_or(""))
+                    .flat_map(|l| l.split(','))
+                    .map(str::trim)
+                    .filter(|t| !t.is_empty())
+                    .map(str::to_string)
+                    .collect(),
+                Err(e) => {
+                    eprintln!(
+                        "qmap: workers file {path}: {e} (running local-only this generation)"
+                    );
+                    Vec::new()
+                }
+            },
+        }
+    }
+}
+
 /// Where a generation's mapper jobs execute. The seam the ROADMAP's
 /// distributed search plugs into: `Local` keeps everything on this
 /// process's work-stealing pool; `Distributed` additionally fans
@@ -53,9 +120,42 @@ use std::sync::Mutex;
 pub enum Backend {
     Local,
     Distributed {
-        /// `host:port` of each `qmap worker --listen` process.
-        workers: Vec<String>,
+        /// The `qmap worker --listen` fleet, resolved to concrete
+        /// `host:port` addresses at each generation boundary.
+        workers: WorkerSource,
     },
+}
+
+/// Order in which a generation's [`driver::EvalJob`]s are injected
+/// into the scheduler. Purely a placement decision: results are keyed
+/// by job identity and merged deterministically, so every policy
+/// produces bit-identical output — the property the stateful suites
+/// pin across policy × pipeline-depth × worker-count permutations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// First-encounter order (the pre-priority behavior; kept as the
+    /// bench baseline for the generation-tail comparison).
+    Fifo,
+    /// Descending effective draw budget (cache-probe-aware): workloads
+    /// known to burn their whole budget (stale negative entries) run
+    /// first, fresh misses next (largest layers first), cached jobs
+    /// sink to the end. Longest-processing-time-first shrinks the
+    /// generation tail that FIFO leaves. The default.
+    Priority,
+    /// Deterministic pseudo-random permutation of the job order (test
+    /// harness: any permutation must merge bit-identically).
+    Shuffled(u64),
+}
+
+/// Default window of outstanding batches per remote worker connection:
+/// `QMAP_PIPELINE_DEPTH` (clamped to [1, 64]), else 4. Depth 1
+/// reproduces the old one-in-flight-batch behavior.
+fn default_pipeline_depth() -> usize {
+    std::env::var("QMAP_PIPELINE_DEPTH")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|d| d.clamp(1, 64))
+        .unwrap_or(4)
 }
 
 /// The engine: a work-stealing [`Pool`] plus job-level accounting and
@@ -66,11 +166,16 @@ pub enum Backend {
 pub struct Engine {
     pool: Pool,
     backend: Backend,
+    sched: SchedPolicy,
+    pipeline: usize,
     jobs: AtomicU64,
     splits: AtomicU64,
     remote_jobs: AtomicU64,
     requeued_specs: AtomicU64,
     lost_workers: AtomicU64,
+    /// Last generation's scheduling tail, in microseconds (see
+    /// [`EngineStats::last_tail_ms`]).
+    tail_us: AtomicU64,
 }
 
 /// A point-in-time snapshot of the engine's counters.
@@ -94,6 +199,12 @@ pub struct EngineStats {
     pub requeued_specs: u64,
     /// Remote workers that became unreachable or violated the protocol.
     pub lost_workers: u64,
+    /// The last generation's scheduling tail: time between the job
+    /// queue running dry (the last job being claimed, after which an
+    /// out-of-work worker can only steal shards) and the last job
+    /// finishing. The metric the priority scheduler exists to shrink;
+    /// recorded by `driver::evaluate_genomes` on the local backend.
+    pub last_tail_ms: f64,
 }
 
 impl Engine {
@@ -113,19 +224,62 @@ impl Engine {
         if workers.is_empty() {
             return Engine::new(budget);
         }
-        Engine::with_backend(budget, Backend::Distributed { workers })
+        Engine::with_backend(
+            budget,
+            Backend::Distributed {
+                workers: WorkerSource::Static(workers),
+            },
+        )
+    }
+
+    /// Like [`Engine::distributed`], but from a [`WorkerSource`]. An
+    /// empty *static* list degrades to the local backend; a file
+    /// source stays distributed even when the file is currently empty
+    /// (an elastic fleet may grow later).
+    pub fn distributed_source(budget: usize, source: WorkerSource) -> Engine {
+        match source {
+            WorkerSource::Static(ws) => Engine::distributed(budget, ws),
+            src @ WorkerSource::File(_) => {
+                Engine::with_backend(budget, Backend::Distributed { workers: src })
+            }
+        }
     }
 
     pub fn with_backend(budget: usize, backend: Backend) -> Engine {
         Engine {
             pool: Pool::new(budget),
             backend,
+            sched: SchedPolicy::Priority,
+            pipeline: default_pipeline_depth(),
             jobs: AtomicU64::new(0),
             splits: AtomicU64::new(0),
             remote_jobs: AtomicU64::new(0),
             requeued_specs: AtomicU64::new(0),
             lost_workers: AtomicU64::new(0),
+            tail_us: AtomicU64::new(0),
         }
+    }
+
+    /// Override the job-injection order (results are bit-identical
+    /// under every policy; see [`SchedPolicy`]).
+    pub fn with_sched_policy(mut self, p: SchedPolicy) -> Engine {
+        self.sched = p;
+        self
+    }
+
+    /// Override the per-connection window of outstanding remote
+    /// batches (>= 1; depth 1 = the old one-in-flight behavior).
+    pub fn with_pipeline_depth(mut self, depth: usize) -> Engine {
+        self.pipeline = depth.clamp(1, 64);
+        self
+    }
+
+    pub fn sched_policy(&self) -> SchedPolicy {
+        self.sched
+    }
+
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline
     }
 
     pub fn backend(&self) -> &Backend {
@@ -152,7 +306,13 @@ impl Engine {
             remote_jobs: self.remote_jobs.load(Ordering::Relaxed),
             requeued_specs: self.requeued_specs.load(Ordering::Relaxed),
             lost_workers: self.lost_workers.load(Ordering::Relaxed),
+            last_tail_ms: self.tail_us.load(Ordering::Relaxed) as f64 / 1e3,
         }
+    }
+
+    /// Record one generation's scheduling tail (seconds).
+    pub(crate) fn note_tail(&self, secs: f64) {
+        self.tail_us.store((secs.max(0.0) * 1e6) as u64, Ordering::Relaxed);
     }
 
     pub(crate) fn note_jobs(&self, n: u64) {
@@ -237,5 +397,68 @@ mod tests {
         let st = engine.stats();
         assert_eq!(st.workers, 3);
         assert!(st.tasks >= 50, "tasks={}", st.tasks);
+    }
+
+    #[test]
+    fn worker_source_parses_static_and_file_forms() {
+        match WorkerSource::parse("a:1, b:2 ,,c:3") {
+            WorkerSource::Static(ws) => assert_eq!(ws, vec!["a:1", "b:2", "c:3"]),
+            other => panic!("expected static source, got {other:?}"),
+        }
+        match WorkerSource::parse(" @/tmp/fleet.txt ") {
+            WorkerSource::File(p) => assert_eq!(p, "/tmp/fleet.txt"),
+            other => panic!("expected file source, got {other:?}"),
+        }
+        for empty in ["", " , "] {
+            match WorkerSource::parse(empty) {
+                WorkerSource::Static(ws) => assert!(ws.is_empty(), "{empty:?}"),
+                other => panic!("expected empty static source, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn worker_file_source_is_reread_on_every_resolve() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("qmap_workers_{}.txt", std::process::id()));
+        let path_str = path.to_string_lossy().into_owned();
+        let src = WorkerSource::File(path_str.clone());
+        // missing file: empty fleet, not an error
+        let _ = std::fs::remove_file(&path);
+        assert!(src.resolve().is_empty());
+        // the fleet grows... (a commented-out line retires EVERY host
+        // on it, including hosts after a comma; an inline comment does
+        // not swallow the host before it)
+        std::fs::write(
+            &path,
+            "hostA:7911  # main rack\n# hostX:1, hostY:2\nhostB:7911, hostC:7911\n",
+        )
+        .unwrap();
+        assert_eq!(src.resolve(), vec!["hostA:7911", "hostB:7911", "hostC:7911"]);
+        // ...and shrinks, between two resolves of the same source
+        std::fs::write(&path, "hostB:7911\n").unwrap();
+        assert_eq!(src.resolve(), vec!["hostB:7911"]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn file_backed_engine_stays_distributed_even_when_empty() {
+        let engine = Engine::distributed_source(1, WorkerSource::File("/nonexistent".into()));
+        assert!(matches!(engine.backend(), Backend::Distributed { .. }));
+        // a static empty list still degrades to local
+        let engine = Engine::distributed_source(1, WorkerSource::Static(Vec::new()));
+        assert!(matches!(engine.backend(), Backend::Local));
+    }
+
+    #[test]
+    fn scheduling_knobs_are_builder_configurable() {
+        let engine = Engine::new(1)
+            .with_sched_policy(SchedPolicy::Fifo)
+            .with_pipeline_depth(0); // clamped up to 1
+        assert_eq!(engine.sched_policy(), SchedPolicy::Fifo);
+        assert_eq!(engine.pipeline_depth(), 1);
+        let engine = Engine::new(1).with_pipeline_depth(7);
+        assert_eq!(engine.pipeline_depth(), 7);
+        assert_eq!(engine.sched_policy(), SchedPolicy::Priority);
     }
 }

@@ -242,12 +242,26 @@ pub fn quant_from_json(v: &Json) -> Result<LayerQuant, String> {
 /// Driver → worker: execute `specs` for one workload. The architecture
 /// travels as its rendered text spec — `arch::parser`'s round-trip is
 /// exact (asserted by `spec_roundtrip`), so the worker rebuilds the
-/// identical numerics.
-pub fn batch(id: u64, arch_spec: &str, layer: &ConvLayer, q: &LayerQuant, specs: &[ShardSpec]) -> Json {
+/// identical numerics. `search` identifies the driver's search (a hash
+/// of the arch spec and mapper budgets) and scopes the worker's local
+/// shard-outcome cache; it never affects what is computed, only what
+/// may be *reused*, and reuse is sound because a shard outcome is a
+/// pure function of `(arch, layer, quant, spec)`. Workers predating
+/// the field treat its absence as search 0.
+#[allow(clippy::too_many_arguments)]
+pub fn batch(
+    id: u64,
+    search: u64,
+    arch_spec: &str,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    specs: &[ShardSpec],
+) -> Json {
     Json::obj(vec![
         ("type", Json::Str("batch".into())),
         ("v", Json::hex_u64(VERSION)),
         ("id", Json::hex_u64(id)),
+        ("search", Json::hex_u64(search)),
         ("arch", Json::Str(arch_spec.to_string())),
         ("layer", layer_to_json(layer)),
         ("quant", quant_to_json(q)),
@@ -391,13 +405,14 @@ mod tests {
             },
             42,
         );
-        let msg = batch(7, &render_arch(&arch), &l, &q, &specs);
+        let msg = batch(7, 0xFEED_5EED, &render_arch(&arch), &l, &q, &specs);
         let mut buf = Vec::new();
         write_msg(&mut buf, &msg).unwrap();
         let mut cur = std::io::Cursor::new(buf);
         let back = read_msg(&mut cur).unwrap();
         assert_eq!(msg_type(&back).unwrap(), "batch");
         assert_eq!(back.get("id").as_hex_u64("id").unwrap(), 7);
+        assert_eq!(back.get("search").as_hex_u64("search").unwrap(), 0xFEED_5EED);
         let arch_back = parse_arch(back.get("arch").as_str().unwrap()).unwrap();
         assert_eq!(arch_back, arch);
         assert_eq!(layer_from_json(back.get("layer")).unwrap(), l);

@@ -23,10 +23,14 @@
 //! * [`eval_jobs`] — the distributed scheduler behind
 //!   `engine::driver::evaluate_genomes`: remote connections and the
 //!   local pool race a single claim counter over the generation's
-//!   cache-miss jobs, so idle local workers keep stealing while
-//!   batches are in flight; a lost worker's unacknowledged specs are
+//!   cache-miss jobs (priority-ordered, largest effective draw budget
+//!   first), each connection pipelining a window of batches
+//!   (`Engine::pipeline_depth`) so workers never stall a round-trip
+//!   between batches; a lost worker's unacknowledged specs are
 //!   re-injected into the local pool. Shards are idempotent, so fault
-//!   tolerance is re-execution — nothing else.
+//!   tolerance is re-execution — nothing else. Workers additionally
+//!   keep a per-search shard-outcome cache, so re-sent specs cost a
+//!   lookup instead of a search.
 //!
 //! Fault injection for the stateful test suite lives in
 //! [`WorkerOptions`]: a worker can be told to drop the connection
@@ -47,11 +51,13 @@ use crate::mapping::LayerContext;
 use crate::quant::LayerQuant;
 use crate::util::json::Json;
 use crate::workload::ConvLayer;
+use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
 /// Worker behavior knobs. The defaults are a well-behaved worker; the
@@ -70,6 +76,20 @@ pub struct WorkerOptions {
     /// Stream a batch's outcomes in reverse shard order — simulates
     /// reordering. The driver must merge by shard index, not arrival.
     pub reverse_outcomes: bool,
+    /// Skip the per-search shard-outcome cache: every spec re-runs the
+    /// mapper. For measurement (the bench's pipelining rows must not
+    /// be contaminated by cache hits — the cache is process-global, so
+    /// a second in-process worker would otherwise inherit the first
+    /// run's outcomes) and for memory-constrained deployments.
+    pub disable_outcome_cache: bool,
+    /// Cooperative shutdown switch (SIGTERM / stdin-close handling in
+    /// `qmap worker`): once set, [`serve`] stops accepting new
+    /// connections, every connection finishes its in-flight batch
+    /// (outcomes and `done` fully flushed) and closes instead of
+    /// reading another, and `serve` returns once nothing is executing.
+    /// `&'static` keeps the options `Copy`; the CLI leaks one flag per
+    /// process, tests leak one per case.
+    pub shutdown: Option<&'static AtomicBool>,
 }
 
 /// Driver-side network timeout (connect + per-read). Workers stream
@@ -97,20 +117,56 @@ pub fn worker_timeout() -> Duration {
 /// dead) ends the loop.
 pub fn serve(listener: TcpListener, opts: WorkerOptions) {
     let mut consecutive_failures = 0u32;
+    // batches currently executing across all connections — the set a
+    // graceful shutdown waits for
+    let executing = Arc::new(AtomicUsize::new(0));
+    if opts.shutdown.is_some() {
+        // poll the flag between accepts (std has no accept timeout)
+        if let Err(e) = listener.set_nonblocking(true) {
+            eprintln!("qmap worker: set_nonblocking: {e} (shutdown flag will not be polled)");
+        }
+    }
     loop {
+        if let Some(flag) = opts.shutdown {
+            if flag.load(Ordering::SeqCst) {
+                // stop accepting; let in-flight batches stream out. A
+                // batch already sitting in a connection's socket buffer
+                // may not have marked itself executing yet, so require
+                // two quiet readings a grace period apart before
+                // declaring the worker drained.
+                loop {
+                    while executing.load(Ordering::SeqCst) > 0 {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    std::thread::sleep(Duration::from_millis(150));
+                    if executing.load(Ordering::SeqCst) == 0 {
+                        return;
+                    }
+                }
+            }
+        }
         match listener.accept() {
             Ok((stream, peer)) => {
                 consecutive_failures = 0;
+                // the listener may be non-blocking (shutdown polling);
+                // the per-connection socket must not be
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let executing = Arc::clone(&executing);
                 let spawned = std::thread::Builder::new()
                     .name("qmap-worker-conn".into())
                     .spawn(move || {
-                        if let Err(e) = serve_conn(stream, opts) {
+                        if let Err(e) = serve_conn(stream, opts, &executing) {
                             eprintln!("qmap worker: connection {peer}: {e}");
                         }
                     });
                 if let Err(e) = spawned {
                     eprintln!("qmap worker: spawn for {peer}: {e}");
                 }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
             }
             Err(e) => {
                 consecutive_failures += 1;
@@ -151,13 +207,21 @@ const CONN_IDLE_TIMEOUT: Duration = Duration::from_secs(600);
 /// One worker connection: hello, then execute batches until the peer
 /// hangs up. A malformed batch gets an `error` reply, a panic inside
 /// the mapper is caught and reported the same way — network input must
-/// never take the worker down.
-fn serve_conn(stream: TcpStream, opts: WorkerOptions) -> Result<(), String> {
+/// never take the worker down. When the shutdown flag is raised, the
+/// in-flight batch still streams to completion, then the connection
+/// closes instead of reading the next message.
+fn serve_conn(
+    stream: TcpStream,
+    opts: WorkerOptions,
+    executing: &AtomicUsize,
+) -> Result<(), String> {
     stream.set_nodelay(true).ok();
     // an expired idle timeout surfaces as a read_msg error below, and
     // the connection closes cleanly (the driver reconnects per
-    // generation anyway)
+    // generation anyway); the write timeout bounds streaming outcomes
+    // to a driver that stopped reading
     stream.set_read_timeout(Some(CONN_IDLE_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(CONN_IDLE_TIMEOUT)).ok();
     let mut reader =
         BufReader::new(stream.try_clone().map_err(|e| format!("clone stream: {e}"))?);
     let mut writer = BufWriter::new(stream);
@@ -179,9 +243,11 @@ fn serve_conn(stream: TcpStream, opts: WorkerOptions) -> Result<(), String> {
         };
         match ty.as_str() {
             "batch" => {
+                executing.fetch_add(1, Ordering::SeqCst);
                 let end = catch_unwind(AssertUnwindSafe(|| {
                     handle_batch(&msg, &mut writer, opts, &mut sent_outcomes)
                 }));
+                executing.fetch_sub(1, Ordering::SeqCst);
                 match end {
                     Ok(Ok(BatchEnd::Done)) => {}
                     Ok(Ok(BatchEnd::Drop)) => return Ok(()), // injected fault
@@ -191,6 +257,13 @@ fn serve_conn(stream: TcpStream, opts: WorkerOptions) -> Result<(), String> {
                             &mut writer,
                             &proto::error("worker panicked executing the batch"),
                         )?;
+                    }
+                }
+                if let Some(flag) = opts.shutdown {
+                    if flag.load(Ordering::SeqCst) {
+                        // in-flight batch flushed above; bow out (the
+                        // driver re-runs anything it had not yet sent)
+                        return Ok(());
                     }
                 }
             }
@@ -213,10 +286,93 @@ enum BatchEnd {
     Drop,
 }
 
+// ------------------------------------------------------ worker cache
+
+/// How many distinct searches the worker keeps shard outcomes for
+/// (oldest-first eviction), and how many outcomes one search may hold
+/// before its map is reset. Both bounds exist purely to cap memory on
+/// a long-lived fleet worker serving many drivers.
+const WORKER_CACHE_SEARCHES: usize = 4;
+const WORKER_CACHE_ENTRIES: usize = 1 << 16;
+
+/// The worker-side shard-outcome cache: one map per search identity
+/// (the `search` field of `batch` messages), keyed by the full shard
+/// identity hash. Sound because [`mapper::run_shard`] is a pure
+/// function of `(arch, layer, quant, spec)` — a cached outcome is
+/// byte-for-byte what a fresh run would produce — so repeated specs
+/// across batches and generations (driver restarts without their cache
+/// file, several drivers sharing a fleet, re-sent batches after a lost
+/// connection) hit locally instead of re-searching. Shared by every
+/// connection of the process.
+struct WorkerCache {
+    searches: Mutex<(VecDeque<u64>, FxHashMap<u64, FxHashMap<u64, ShardOutcome>>)>,
+}
+
+impl WorkerCache {
+    fn get(&self, search: u64, key: u64) -> Option<ShardOutcome> {
+        let g = self.searches.lock().unwrap();
+        g.1.get(&search).and_then(|m| m.get(&key)).cloned()
+    }
+
+    fn put(&self, search: u64, key: u64, out: &ShardOutcome) {
+        let mut g = self.searches.lock().unwrap();
+        let (order, maps) = &mut *g;
+        if !maps.contains_key(&search) {
+            order.push_back(search);
+            while order.len() > WORKER_CACHE_SEARCHES {
+                if let Some(old) = order.pop_front() {
+                    maps.remove(&old);
+                }
+            }
+            maps.insert(search, FxHashMap::default());
+        }
+        let m = maps.get_mut(&search).expect("inserted above");
+        if m.len() >= WORKER_CACHE_ENTRIES {
+            m.clear();
+        }
+        m.insert(key, out.clone());
+    }
+}
+
+fn worker_cache() -> &'static WorkerCache {
+    static CACHE: OnceLock<WorkerCache> = OnceLock::new();
+    CACHE.get_or_init(|| WorkerCache {
+        searches: Mutex::new((VecDeque::new(), FxHashMap::default())),
+    })
+}
+
+/// The full identity of one shard's work: the arch source text (the
+/// canonical `render_arch` form the driver sends), the workload hash,
+/// and every `ShardSpec` field. Everything `run_shard`'s result
+/// depends on is folded in, so equal keys imply bit-identical
+/// outcomes.
+fn shard_cache_key(arch_src: &str, layer: &ConvLayer, q: &LayerQuant, spec: &ShardSpec) -> u64 {
+    let mut h = crate::util::Fnv1a::new();
+    h.write(arch_src.as_bytes());
+    h.write_u64(mapper::workload_hash(layer, q));
+    h.write_u64(spec.seed);
+    h.write_u64(spec.valid_target);
+    h.write_u64(spec.max_draws);
+    h.finish()
+}
+
+/// One decoded `batch` message: everything needed to run it.
+struct BatchWork {
+    id: u64,
+    /// Search identity scoping the worker-side outcome cache (0 for
+    /// drivers predating the field).
+    search: u64,
+    arch_src: String,
+    arch: Arch,
+    layer: ConvLayer,
+    quant: LayerQuant,
+    specs: Vec<ShardSpec>,
+}
+
 /// Decode a `batch` message into everything needed to run it. Total:
 /// hostile input is an `Err` (which becomes an `error` reply), never a
 /// panic.
-fn decode_batch(msg: &Json) -> Result<(u64, Arch, ConvLayer, LayerQuant, Vec<ShardSpec>), String> {
+fn decode_batch(msg: &Json) -> Result<BatchWork, String> {
     let v = msg.get("v").as_hex_u64("batch version")?;
     if v != proto::VERSION {
         return Err(format!(
@@ -225,18 +381,27 @@ fn decode_batch(msg: &Json) -> Result<(u64, Arch, ConvLayer, LayerQuant, Vec<Sha
         ));
     }
     let id = msg.get("id").as_hex_u64("batch id")?;
+    let search = msg.get("search").as_hex_u64("batch search").unwrap_or(0);
     let arch_src = msg.get("arch").as_str().ok_or("batch: missing arch")?;
     let arch = parse_arch(arch_src).map_err(|e| format!("batch arch: {e}"))?;
     let layer = proto::layer_from_json(msg.get("layer"))?;
     let q = proto::quant_from_json(msg.get("quant"))?;
     // the driver sends canonical quants; canonicalizing again is
     // idempotent and protects against non-canonical peers
-    let q = q.canonical(arch.word_bits, arch.bit_packing);
+    let quant = q.canonical(arch.word_bits, arch.bit_packing);
     let mut specs = Vec::new();
     for s in msg.get("specs").as_arr().ok_or("batch: missing specs")? {
         specs.push(ShardSpec::from_json(s)?);
     }
-    Ok((id, arch, layer, q, specs))
+    Ok(BatchWork {
+        id,
+        search,
+        arch_src: arch_src.to_string(),
+        arch,
+        layer,
+        quant,
+        specs,
+    })
 }
 
 /// Run one batch, streaming each [`ShardOutcome`] **as soon as its
@@ -252,15 +417,41 @@ fn handle_batch(
     opts: WorkerOptions,
     sent: &mut usize,
 ) -> Result<BatchEnd, String> {
-    let (id, arch, layer, q, specs) = match decode_batch(msg) {
+    let work = match decode_batch(msg) {
         Ok(d) => d,
         Err(e) => {
             proto::write_msg(writer, &proto::error(&e))?;
             return Ok(BatchEnd::Done);
         }
     };
+    let BatchWork {
+        id,
+        search,
+        arch_src,
+        arch,
+        layer,
+        quant: q,
+        specs,
+    } = work;
     let space = MapSpace::of(&arch);
     let lctx = LayerContext::new(&arch, &layer, &q);
+    let cache = worker_cache();
+    // the per-search outcome cache: a spec this worker has already run
+    // for the same search (an earlier batch, an earlier generation, a
+    // re-send after a lost connection) is served without re-searching —
+    // the cached outcome is bit-identical to a fresh run by purity
+    let run_cached = |spec: &ShardSpec| -> ShardOutcome {
+        if opts.disable_outcome_cache {
+            return mapper::run_shard(&space, &lctx, spec);
+        }
+        let key = shard_cache_key(&arch_src, &layer, &q, spec);
+        if let Some(hit) = cache.get(search, key) {
+            return hit;
+        }
+        let out = mapper::run_shard(&space, &lctx, spec);
+        cache.put(search, key, &out);
+        out
+    };
     // returns Ok(false) when the injected drop fault says to vanish
     let send = |writer: &mut BufWriter<TcpStream>,
                 sent: &mut usize,
@@ -282,8 +473,7 @@ fn handle_batch(
     if opts.reverse_outcomes {
         // fault-injection path only: compute everything, then stream
         // in reverse shard order to exercise the driver's reordering
-        let outs: Vec<ShardOutcome> =
-            specs.iter().map(|s| mapper::run_shard(&space, &lctx, s)).collect();
+        let outs: Vec<ShardOutcome> = specs.iter().map(&run_cached).collect();
         for i in (0..outs.len()).rev() {
             if !send(writer, sent, i, &outs[i])? {
                 return Ok(BatchEnd::Drop);
@@ -291,7 +481,7 @@ fn handle_batch(
         }
     } else {
         for (i, spec) in specs.iter().enumerate() {
-            let out = mapper::run_shard(&space, &lctx, spec);
+            let out = run_cached(spec);
             if !send(writer, sent, i, &out)? {
                 return Ok(BatchEnd::Drop);
             }
@@ -396,7 +586,9 @@ pub struct RemoteClient {
 
 impl RemoteClient {
     /// Connect and complete the hello exchange within `timeout` (which
-    /// also becomes the per-read timeout for batches).
+    /// also becomes the per-read and per-write timeout for batches —
+    /// the write timeout keeps a deep pipeline from blocking forever
+    /// against a worker that stopped draining its socket).
     pub fn connect(addr: &str, timeout: Duration) -> Result<RemoteClient, String> {
         let sockaddr = addr
             .to_socket_addrs()
@@ -407,6 +599,9 @@ impl RemoteClient {
             TcpStream::connect_timeout(&sockaddr, timeout).map_err(|e| format!("{addr}: {e}"))?;
         stream
             .set_read_timeout(Some(timeout))
+            .map_err(|e| format!("{addr}: {e}"))?;
+        stream
+            .set_write_timeout(Some(timeout))
             .map_err(|e| format!("{addr}: {e}"))?;
         stream.set_nodelay(true).ok();
         let reader =
@@ -436,10 +631,70 @@ impl RemoteClient {
         &self.addr
     }
 
+    /// Ship one batch without waiting for anything back; returns the
+    /// batch id. The building block of the pipelined scheduler: up to
+    /// [`Engine::pipeline_depth`](super::Engine::pipeline_depth)
+    /// batches ride the connection concurrently, each identified by
+    /// its id in the interleaved outcome stream.
+    pub fn send_batch(
+        &mut self,
+        arch_spec: &str,
+        search: u64,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        specs: &[ShardSpec],
+    ) -> Result<u64, String> {
+        let id = self.next_id;
+        self.next_id += 1;
+        proto::write_msg(
+            &mut self.writer,
+            &proto::batch(id, search, arch_spec, layer, q, specs),
+        )?;
+        Ok(id)
+    }
+
+    /// The next `outcome`/`done` event on the connection. `error`
+    /// frames, protocol violations, and transport failures are `Err` —
+    /// the connection is then unusable and the caller re-runs whatever
+    /// its ledgers still miss.
+    pub fn recv_event(&mut self) -> Result<WorkerEvent, String> {
+        let m = proto::read_msg(&mut self.reader)?;
+        match proto::msg_type(&m)? {
+            "outcome" => {
+                let id = m.get("id").as_hex_u64("outcome id")?;
+                // strict index decode: a saturating `as usize` on a
+                // negative/fractional value would silently land in
+                // the wrong ledger slot — reject instead
+                let sf = m.get("shard").as_f64().ok_or("outcome: missing shard")?;
+                if !(sf.is_finite() && sf.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&sf))
+                {
+                    return Err(format!("worker {}: bad shard index {sf}", self.addr));
+                }
+                let outcome = ShardOutcome::from_json(m.get("outcome"))?;
+                Ok(WorkerEvent::Outcome {
+                    id,
+                    shard: sf as usize,
+                    outcome,
+                })
+            }
+            "done" => Ok(WorkerEvent::Done {
+                id: m.get("id").as_hex_u64("done id")?,
+            }),
+            "error" => Err(format!(
+                "worker {}: {}",
+                self.addr,
+                m.get("msg").as_str().unwrap_or("unspecified error")
+            )),
+            other => Err(format!("worker {}: unexpected '{other}'", self.addr)),
+        }
+    }
+
     /// Execute one batch remotely, delivering outcomes into `ledger`
-    /// as they stream in. On `Err` the connection is unusable but the
-    /// ledger keeps everything already delivered — the caller re-runs
-    /// only [`BatchLedger::missing`].
+    /// as they stream in (the depth-1 special case of the pipeline;
+    /// kept for the batch-level tests and simple callers). On `Err`
+    /// the connection is unusable but the ledger keeps everything
+    /// already delivered — the caller re-runs only
+    /// [`BatchLedger::missing`].
     pub fn run_batch(
         &mut self,
         arch_spec: &str,
@@ -447,45 +702,43 @@ impl RemoteClient {
         q: &LayerQuant,
         ledger: &mut BatchLedger,
     ) -> Result<(), String> {
-        let id = self.next_id;
-        self.next_id += 1;
-        proto::write_msg(
-            &mut self.writer,
-            &proto::batch(id, arch_spec, layer, q, ledger.specs()),
-        )?;
+        let specs: Vec<ShardSpec> = ledger.specs().to_vec();
+        let id = self.send_batch(arch_spec, 0, layer, q, &specs)?;
         loop {
-            let m = proto::read_msg(&mut self.reader)?;
-            match proto::msg_type(&m)? {
-                "outcome" => {
-                    if m.get("id").as_hex_u64("outcome id")? != id {
+            match self.recv_event()? {
+                WorkerEvent::Outcome {
+                    id: oid,
+                    shard,
+                    outcome,
+                } => {
+                    if oid != id {
                         continue; // stale frame from an earlier batch
                     }
-                    // strict index decode: a saturating `as usize` on a
-                    // negative/fractional value would silently land in
-                    // the wrong ledger slot — reject instead
-                    let sf = m.get("shard").as_f64().ok_or("outcome: missing shard")?;
-                    if !(sf.is_finite() && sf.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&sf)) {
-                        return Err(format!("worker {}: bad shard index {sf}", self.addr));
-                    }
-                    let out = ShardOutcome::from_json(m.get("outcome"))?;
-                    ledger.deliver(sf as usize, out)?;
+                    ledger.deliver(shard, outcome)?;
                 }
-                "done" => {
-                    if m.get("id").as_hex_u64("done id")? == id {
+                WorkerEvent::Done { id: did } => {
+                    if did == id {
                         return Ok(());
                     }
                 }
-                "error" => {
-                    return Err(format!(
-                        "worker {}: {}",
-                        self.addr,
-                        m.get("msg").as_str().unwrap_or("unspecified error")
-                    ))
-                }
-                other => return Err(format!("worker {}: unexpected '{other}'", self.addr)),
             }
         }
     }
+}
+
+/// One event of a worker's interleaved reply stream (see
+/// [`RemoteClient::recv_event`]).
+#[derive(Debug)]
+pub enum WorkerEvent {
+    /// One shard's outcome for batch `id`; may arrive duplicated or
+    /// out of order.
+    Outcome {
+        id: u64,
+        shard: usize,
+        outcome: ShardOutcome,
+    },
+    /// Batch `id` fully streamed.
+    Done { id: u64 },
 }
 
 // --------------------------------------------------------- scheduler
@@ -500,14 +753,21 @@ struct Work<'a> {
 /// the local engine, and record every result in `cache`.
 ///
 /// Remote connection threads and the submitting thread race one claim
-/// counter, so job placement is load-driven and nondeterministic — but
-/// each job's result is `merge_shards` over the same deterministic
-/// [`mapper::shard_plan`] regardless of who ran it, so the cache ends
-/// up bit-identical to local (or serial) execution. A worker that
-/// cannot be reached, violates the protocol, or disconnects mid-batch
-/// is abandoned: its claimed batch keeps the outcomes already
-/// streamed, the missing specs are re-injected into the local pool,
-/// and the remaining queue drains through the other executors.
+/// counter over the priority-ordered job list, so job placement is
+/// load-driven and nondeterministic — but each job's result is
+/// `merge_shards` over the same deterministic [`mapper::shard_plan`]
+/// regardless of who ran it, so the cache ends up bit-identical to
+/// local (or serial) execution.
+///
+/// Each connection keeps a **window** of up to
+/// [`Engine::pipeline_depth`](super::Engine::pipeline_depth) batches in
+/// flight (ledger slots keyed by `(batch id, shard index)`), so a
+/// worker starts the next batch from its socket buffer instead of
+/// stalling a round-trip between batches. A worker that cannot be
+/// reached, violates the protocol, or disconnects is abandoned: every
+/// in-flight batch keeps the outcomes already streamed, the missing
+/// specs are re-injected into the local pool, and the remaining queue
+/// drains through the other executors.
 pub fn eval_jobs(
     engine: &Engine,
     arch: &Arch,
@@ -517,7 +777,9 @@ pub fn eval_jobs(
     cfg: &MapperConfig,
     workers: &[String],
 ) {
-    let work: Vec<Work> = jobs
+    // same injection order as the local backend: priority by default
+    let ordered = super::driver::order_jobs(engine, arch, layers, jobs, cache, cfg);
+    let work: Vec<Work> = ordered
         .iter()
         .filter_map(|job| {
             let layer = &layers[job.layer_index];
@@ -544,8 +806,21 @@ pub fn eval_jobs(
         return;
     }
     let rendered = render_arch(arch);
+    // scopes the worker-side shard-outcome cache: a pure function of
+    // the arch text and the mapper budgets, so every generation of one
+    // search maps to the same id and repeated specs hit remotely
+    let search_id = {
+        let mut h = crate::util::Fnv1a::new();
+        h.write(rendered.as_bytes());
+        h.write_u64(cfg.seed);
+        h.write_u64(cfg.valid_target);
+        h.write_u64(cfg.max_draws);
+        h.write_u64(mapper::effective_shards(cfg) as u64);
+        h.finish()
+    };
     let next = AtomicUsize::new(0);
     let timeout = worker_timeout();
+    let depth = engine.pipeline_depth().max(1);
     std::thread::scope(|sc| {
         for addr in workers {
             let work = &work;
@@ -560,29 +835,93 @@ pub fn eval_jobs(
                         return;
                     }
                 };
-                loop {
-                    let i = next.fetch_add(1, Ordering::SeqCst);
-                    if i >= work.len() {
-                        return;
-                    }
-                    let w = &work[i];
-                    let mut ledger = w.ledger.lock().unwrap();
-                    match client.run_batch(rendered, w.layer, &w.quant, &mut ledger) {
-                        Ok(()) => {
-                            engine.note_remote_job();
+                // the window: (batch id, work index) of every batch in
+                // flight on this connection
+                let mut inflight: Vec<(u64, usize)> = Vec::with_capacity(depth);
+                let pump = |client: &mut RemoteClient,
+                            inflight: &mut Vec<(u64, usize)>|
+                 -> Result<(), String> {
+                    loop {
+                        // top the window up from the shared claim queue
+                        while inflight.len() < depth {
+                            // near the tail, keep the window shallow: a
+                            // claimed batch is never reclaimed from a
+                            // healthy-but-slow worker, so stacking the
+                            // generation's last jobs behind this
+                            // connection would strand them while every
+                            // other executor idles — the inverse of the
+                            // tail this scheduler exists to shrink.
+                            // Beyond the first in-flight batch, only
+                            // claim while more unclaimed jobs remain
+                            // than there are other executors to feed.
+                            if !inflight.is_empty() {
+                                let claimed = next.load(Ordering::SeqCst);
+                                if work.len().saturating_sub(claimed) <= workers.len() {
+                                    break;
+                                }
+                            }
+                            let i = next.fetch_add(1, Ordering::SeqCst);
+                            if i >= work.len() {
+                                break;
+                            }
+                            let w = &work[i];
+                            let specs: Vec<ShardSpec> =
+                                w.ledger.lock().unwrap().specs().to_vec();
+                            let id = match client
+                                .send_batch(rendered, search_id, w.layer, &w.quant, &specs)
+                            {
+                                Ok(id) => id,
+                                Err(e) => {
+                                    // the claim already happened: record
+                                    // the never-sent batch in the window
+                                    // (pseudo id 0 — real ids start at 1)
+                                    // so the owed count below includes
+                                    // its specs
+                                    inflight.push((0, i));
+                                    return Err(e);
+                                }
+                            };
+                            inflight.push((id, i));
                         }
-                        Err(e) => {
-                            let owed = ledger.missing().len();
-                            drop(ledger);
-                            eprintln!(
-                                "qmap: worker {addr} lost mid-batch, re-injecting {owed} \
-                                 shard(s) into the local pool: {e}"
-                            );
-                            engine.note_requeued(owed as u64);
-                            engine.note_lost_worker();
-                            return; // unclaimed jobs drain via the other executors
+                        if inflight.is_empty() {
+                            return Ok(());
+                        }
+                        match client.recv_event()? {
+                            WorkerEvent::Outcome { id, shard, outcome } => {
+                                // an id no longer in flight is a stale
+                                // duplicate from a completed batch —
+                                // ignore, exactly like the ledger would
+                                if let Some(&(_, wi)) =
+                                    inflight.iter().find(|&&(bid, _)| bid == id)
+                                {
+                                    work[wi].ledger.lock().unwrap().deliver(shard, outcome)?;
+                                }
+                            }
+                            WorkerEvent::Done { id } => {
+                                if let Some(pos) =
+                                    inflight.iter().position(|&(bid, _)| bid == id)
+                                {
+                                    inflight.remove(pos);
+                                    engine.note_remote_job();
+                                }
+                            }
                         }
                     }
+                };
+                if let Err(e) = pump(&mut client, &mut inflight) {
+                    // every batch still in the window keeps what it
+                    // already received; the rest re-runs locally
+                    let owed: usize = inflight
+                        .iter()
+                        .map(|&(_, wi)| work[wi].ledger.lock().unwrap().missing().len())
+                        .sum();
+                    eprintln!(
+                        "qmap: worker {addr} lost with {} batch(es) in flight, \
+                         re-injecting {owed} shard(s) into the local pool: {e}",
+                        inflight.len()
+                    );
+                    engine.note_requeued(owed as u64);
+                    engine.note_lost_worker();
                 }
             });
         }
@@ -768,6 +1107,132 @@ mod tests {
             assert_eq!(got, want);
             if let (Some(g), Some(w)) = (got, want) {
                 assert_eq!(g.edp.to_bits(), w.edp.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_eval_jobs_is_bit_identical_for_any_depth_and_fault() {
+        let (arch, layer, q, cfg) = workload();
+        let layers = vec![
+            layer.clone(),
+            ConvLayer::fc("fc", 16, 10),
+            ConvLayer::pw("p1", 8, 16, 16),
+        ];
+        let jobs: Vec<EvalJob> = (0..layers.len())
+            .map(|i| EvalJob {
+                layer_index: i,
+                quant: q,
+            })
+            .collect();
+        let serial = MapperCache::new();
+        for depth in [1usize, 2, 4] {
+            for fault in [
+                WorkerOptions::default(),
+                WorkerOptions {
+                    drop_after: Some(1),
+                    ..WorkerOptions::default()
+                },
+                WorkerOptions {
+                    duplicate_outcomes: true,
+                    ..WorkerOptions::default()
+                },
+            ] {
+                let addr = spawn_local_worker(fault).expect("worker");
+                let engine = Engine::new(2).with_pipeline_depth(depth);
+                let cache = MapperCache::new();
+                eval_jobs(&engine, &arch, &layers, &jobs, &cache, &cfg, &[addr]);
+                assert_eq!(cache.len(), layers.len(), "depth={depth} fault={fault:?}");
+                for job in &jobs {
+                    let got = cache.evaluate(&arch, &layers[job.layer_index], &job.quant, &cfg);
+                    let want =
+                        serial.evaluate(&arch, &layers[job.layer_index], &job.quant, &cfg);
+                    assert_eq!(got, want, "depth={depth} fault={fault:?}");
+                    if let (Some(g), Some(w)) = (got, want) {
+                        assert_eq!(g.edp.to_bits(), w.edp.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_cache_serves_repeated_specs_bit_identically() {
+        let (arch, layer, q, cfg) = workload();
+        let rendered = render_arch(&arch);
+        let addr = spawn_local_worker(WorkerOptions::default()).expect("worker");
+        let specs = mapper::shard_plan(&cfg, cfg.seed ^ mapper::workload_hash(&layer, &q));
+        let space = MapSpace::of(&arch);
+        let lctx = LayerContext::new(&arch, &layer, &q);
+        let mut results = Vec::new();
+        // the same batch under the same search id three times: the
+        // second and third are served from the worker's outcome cache
+        // and must not change a bit
+        let mut client = RemoteClient::connect(&addr, Duration::from_secs(10)).expect("connect");
+        for _ in 0..3 {
+            let mut ledger = BatchLedger::new(specs.clone());
+            let id = client
+                .send_batch(&rendered, 0xA5A5, &layer, &q, &specs)
+                .expect("send");
+            loop {
+                match client.recv_event().expect("event") {
+                    WorkerEvent::Outcome { id: oid, shard, outcome } => {
+                        if oid == id {
+                            ledger.deliver(shard, outcome).expect("deliver");
+                        }
+                    }
+                    WorkerEvent::Done { id: did } => {
+                        if did == id {
+                            break;
+                        }
+                    }
+                }
+            }
+            results.push(ledger.finalize(|_, spec| mapper::run_shard(&space, &lctx, spec)));
+        }
+        let want = serial_reference(&arch, &layer, &q, &cfg);
+        for got in &results {
+            assert_bit_identical(got, &want);
+        }
+    }
+
+    #[test]
+    fn graceful_shutdown_finishes_the_inflight_batch_then_stops_accepting() {
+        use std::sync::atomic::AtomicBool;
+        let (arch, layer, q, cfg) = workload();
+        let flag: &'static AtomicBool = Box::leak(Box::new(AtomicBool::new(false)));
+        let opts = WorkerOptions {
+            shutdown: Some(flag),
+            ..WorkerOptions::default()
+        };
+        let addr = spawn_local_worker(opts).expect("worker");
+        let mut client = RemoteClient::connect(&addr, Duration::from_secs(10)).expect("connect");
+        // raise the flag, then submit: the worker must still finish
+        // and flush this batch before closing the connection
+        flag.store(true, Ordering::SeqCst);
+        let specs = mapper::shard_plan(&cfg, cfg.seed ^ mapper::workload_hash(&layer, &q));
+        let mut ledger = BatchLedger::new(specs);
+        client
+            .run_batch(&render_arch(&arch), &layer, &q, &mut ledger)
+            .expect("in-flight batch must complete after shutdown request");
+        assert!(ledger.is_complete(), "all outcomes must be flushed");
+        let space = MapSpace::of(&arch);
+        let lctx = LayerContext::new(&arch, &layer, &q);
+        let got = ledger.finalize(|_, spec| mapper::run_shard(&space, &lctx, spec));
+        assert_bit_identical(&got, &serial_reference(&arch, &layer, &q, &cfg));
+        // the accept loop drains and closes the listener: new
+        // connections are eventually refused
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match RemoteClient::connect(&addr, Duration::from_millis(250)) {
+                Err(_) => break, // listener gone
+                Ok(_) => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "worker kept accepting after graceful shutdown"
+                    );
+                    std::thread::sleep(Duration::from_millis(50));
+                }
             }
         }
     }

@@ -9,7 +9,7 @@ use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
 use qmap::arch::{presets, Arch};
 use qmap::baselines::{naive_search, proposed_search, uniform_sweep};
 use qmap::coordinator::{experiments, RunConfig};
-use qmap::engine::{driver, Checkpointer, Engine};
+use qmap::engine::{driver, Backend, Checkpointer, Engine, WorkerSource};
 use qmap::eval::evaluate_network;
 use qmap::mapper::cache::MapperCache;
 use qmap::mapper::{self, MapperConfig};
@@ -39,19 +39,26 @@ characterize:
   search    [--arch A] [--net N] [--strategy proposed|naive|uniform]
             [--gens 20] [--pop 32] [--offspring 16]
             [--checkpoint file.json [--resume]]              NSGA-II / baseline search
-            [--workers host:port,...]                        (checkpointed per generation;
-                                                             shards fan out to qmap workers,
+            [--workers host:port,...|@fleet.txt]             (append-only journal checkpoint per
+            [--pipeline N]                                   generation; shards fan out to qmap
+                                                             workers — @file is re-read every
+                                                             generation for elastic fleets, N
+                                                             batches pipelined per connection —
                                                              results bit-identical to local)
 
 distributed:
-  worker    --listen HOST:PORT                               serve mapper shard batches to a
+  worker    --listen HOST:PORT [--stdin-close]               serve mapper shard batches to a
                                                              remote `qmap search --workers`
-                                                             driver (stateless, kill-safe)
+                                                             driver (stateless; SIGTERM — and
+                                                             stdin EOF with --stdin-close —
+                                                             finishes the in-flight batch,
+                                                             flushes, exits 0)
 
 engine:
-  engine-stats [--budget N] [--workers host:port,...]        work-stealing pool self-test:
-                                                             scaling rows + steal/split/remote
-                                                             counters, bit-identity check
+  engine-stats [--budget N] [--workers host:port,...|@file]  work-stealing pool self-test:
+               [--pipeline N]                                scaling rows + tail latency +
+                                                             steal/split/remote counters,
+                                                             bit-identity check
 
 paper artifacts (same engines as `cargo bench`):
   fig1 [--n 250] | table1 | fig3 | fig4 | fig5 | fig6 | table2
@@ -68,7 +75,10 @@ fn main() {
         print!("{USAGE}");
         std::process::exit(2);
     };
-    let args = match Args::parse(&argv[1..], &["help", "csv", "no-packing", "emit", "resume"]) {
+    let args = match Args::parse(
+        &argv[1..],
+        &["help", "csv", "no-packing", "emit", "resume", "stdin-close"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -223,27 +233,53 @@ fn fail(e: impl std::fmt::Display) -> i32 {
     1
 }
 
-/// Remote worker addresses: the `--workers` flag, falling back to the
-/// `QMAP_WORKERS` environment variable. Empty means local-only.
-fn worker_list(args: &Args) -> Vec<String> {
+/// Remote worker source: the `--workers` flag (comma-separated
+/// `host:port` list, or `@file` for an elastic fleet file that is
+/// re-read at every generation boundary), falling back to the
+/// `QMAP_WORKERS` environment variable. An empty static list means
+/// local-only.
+fn worker_source(args: &Args) -> WorkerSource {
     match args.get("workers") {
-        Some(s) => qmap::coordinator::parse_worker_list(s),
-        None => qmap::coordinator::workers_from_env(),
+        Some(s) => WorkerSource::parse(s),
+        None => match std::env::var("QMAP_WORKERS") {
+            Ok(s) => WorkerSource::parse(&s),
+            Err(_) => WorkerSource::Static(Vec::new()),
+        },
+    }
+}
+
+/// The `--pipeline` override, warning (once, at parse time) on a
+/// value that is not a positive integer rather than silently ignoring
+/// the flag.
+fn pipeline_override(args: &Args) -> Option<usize> {
+    let d = args.get("pipeline")?;
+    match d.parse::<usize>() {
+        Ok(d) if d >= 1 => Some(d),
+        _ => {
+            eprintln!("warning: ignoring bad --pipeline '{d}' (want an integer >= 1)");
+            None
+        }
     }
 }
 
 /// Build the engine for a run: local, or distributed across the
 /// configured `qmap worker` processes (results are bit-identical
-/// either way; workers only add capacity).
-fn build_engine(threads: usize, workers: Vec<String>) -> Engine {
-    if !workers.is_empty() {
+/// either way; workers only add capacity). `--pipeline` overrides the
+/// per-connection batch window (default `QMAP_PIPELINE_DEPTH` or 4).
+fn build_engine(threads: usize, source: WorkerSource, args: &Args) -> Engine {
+    let addrs = source.resolve();
+    if !addrs.is_empty() {
         eprintln!(
             "distributing mapper shards to {} worker(s): {}",
-            workers.len(),
-            workers.join(", ")
+            addrs.len(),
+            addrs.join(", ")
         );
     }
-    Engine::distributed(threads, workers)
+    let mut engine = Engine::distributed_source(threads, source);
+    if let Some(d) = pipeline_override(args) {
+        engine = engine.with_pipeline_depth(d);
+    }
+    engine
 }
 
 // ------------------------------------------------------------ commands
@@ -428,9 +464,8 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
     nsga.population = args.usize_or("pop", nsga.population);
     nsga.offspring = args.usize_or("offspring", nsga.offspring);
 
-    let workers = worker_list(args);
-    let distributed = !workers.is_empty();
-    let engine = build_engine(rc.threads, workers);
+    let engine = build_engine(rc.threads, worker_source(args), args);
+    let distributed = matches!(engine.backend(), Backend::Distributed { .. });
     let cache = MapperCache::new();
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
     let strategy = args.str_or("strategy", "proposed");
@@ -510,10 +545,44 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
     0
 }
 
+/// The worker's graceful-shutdown flag, raised by SIGTERM/SIGINT (and
+/// by stdin EOF when `--stdin-close` asked for it). The handler only
+/// performs an atomic store — async-signal-safe. No libc crate is
+/// vendored and std exposes no signal API, so this binds the C
+/// runtime's `signal(2)` directly (std already links libc).
+#[cfg(unix)]
+fn install_shutdown_signals() -> &'static std::sync::atomic::AtomicBool {
+    use std::sync::atomic::AtomicBool;
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+    }
+    &SHUTDOWN
+}
+
+#[cfg(not(unix))]
+fn install_shutdown_signals() -> &'static std::sync::atomic::AtomicBool {
+    use std::sync::atomic::AtomicBool;
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+    &SHUTDOWN
+}
+
 /// Serve mapper shard batches to remote drivers: `qmap worker --listen
 /// HOST:PORT`. Stateless — every batch carries its full context — so a
 /// worker can be killed and restarted at any time; the driver re-runs
-/// whatever was in flight.
+/// whatever was in flight. SIGTERM/SIGINT (and stdin EOF, with
+/// `--stdin-close`, for supervisors that manage workers by pipe) drain
+/// gracefully: the in-flight batch finishes and flushes its outcomes,
+/// no new connections are accepted, and the process exits 0.
 fn cmd_worker(args: &Args) -> i32 {
     let addr = args.str_or("listen", "127.0.0.1:7070");
     let listener = match std::net::TcpListener::bind(&addr) {
@@ -524,12 +593,41 @@ fn cmd_worker(args: &Args) -> i32 {
         .local_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| addr.clone());
+    let shutdown = install_shutdown_signals();
+    if args.flag("stdin-close") {
+        let spawned = std::thread::Builder::new()
+            .name("qmap-stdin-watch".into())
+            .spawn(move || {
+                use std::io::Read as _;
+                let mut buf = [0u8; 256];
+                let mut stdin = std::io::stdin();
+                loop {
+                    match stdin.read(&mut buf) {
+                        Ok(0) | Err(_) => break, // EOF: parent is gone
+                        Ok(_) => {}
+                    }
+                }
+                eprintln!("qmap worker: stdin closed, draining");
+                shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+            });
+        if let Err(e) = spawned {
+            eprintln!("qmap worker: stdin watcher: {e}");
+        }
+    }
     // the "listening" line is what scripts (and the CI smoke) wait for
     eprintln!(
         "qmap worker listening on {local} (protocol v{})",
         qmap::engine::proto::VERSION
     );
-    qmap::engine::remote::serve(listener, qmap::engine::WorkerOptions::default());
+    let opts = qmap::engine::WorkerOptions {
+        shutdown: Some(shutdown),
+        ..qmap::engine::WorkerOptions::default()
+    };
+    qmap::engine::remote::serve(listener, opts);
+    if shutdown.load(std::sync::atomic::Ordering::SeqCst) {
+        eprintln!("qmap worker: drained, exiting");
+        return 0;
+    }
     fail("worker accept loop ended")
 }
 
@@ -543,13 +641,15 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
     // `--workers N` historically meant the thread budget; keep that
     // reading when the value is a bare integer, now that `--workers`
     // means remote addresses everywhere else (`--budget` is explicit)
-    let (legacy_budget, remote_workers) = match args.get("workers") {
+    let (legacy_budget, source) = match args.get("workers") {
         Some(s) => match s.parse::<usize>() {
-            Ok(n) => (Some(n), Vec::new()),
-            Err(_) => (None, qmap::coordinator::parse_worker_list(s)),
+            Ok(n) => (Some(n), WorkerSource::Static(Vec::new())),
+            Err(_) => (None, WorkerSource::parse(s)),
         },
-        None => (None, qmap::coordinator::workers_from_env()),
+        None => (None, worker_source(args)),
     };
+    let remote_workers = source.resolve();
+    let pipeline = pipeline_override(args);
     let budget = args
         .usize_or("budget", legacy_budget.unwrap_or(rc.threads))
         .max(1);
@@ -602,7 +702,10 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
     let mut reference: Option<Vec<Option<qmap::eval::NetworkEval>>> = None;
     let mut t1 = 0.0f64;
     for &w in &workers {
-        let engine = Engine::distributed(w, remote_workers.clone());
+        let mut engine = Engine::distributed_source(w, source.clone());
+        if let Some(d) = pipeline {
+            engine = engine.with_pipeline_depth(d);
+        }
         let cache = MapperCache::new();
         let t0 = Instant::now();
         let evals = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg);
@@ -622,8 +725,15 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
             }
         };
         let st = engine.stats();
+        // the tail metric is recorded by the local scheduling path
+        // only; on the distributed backend it was never measured, so
+        // print n/a instead of a misleading 0.0
+        let tail_cell = match engine.backend() {
+            Backend::Local => format!("{:>7.1} ms", st.last_tail_ms),
+            Backend::Distributed { .. } => format!("{:>7} ms", "n/a"),
+        };
         println!(
-            "  workers {w:>2}: {:>8.1} ms  speedup {:>4.2}x  jobs {:>3}  splits {:>3}  tasks {:>4}  steals {:>4}  remote {:>3}  requeued {:>3}  lost {:>2}  identical {}",
+            "  workers {w:>2}: {:>8.1} ms  speedup {:>4.2}x  tail {tail_cell}  jobs {:>3}  splits {:>3}  tasks {:>4}  steals {:>4}  remote {:>3}  requeued {:>3}  lost {:>2}  identical {}",
             dt * 1e3,
             if dt > 0.0 && t1 > 0.0 { t1 / dt } else { 1.0 },
             st.jobs,

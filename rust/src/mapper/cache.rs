@@ -25,8 +25,8 @@ use crate::quant::LayerQuant;
 use crate::util::json::{parse, Json};
 use crate::workload::ConvLayer;
 use rustc_hash::FxHashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
 
 /// Lock stripes; a power of two so the top key bits index directly.
 pub const NUM_SHARDS: usize = 16;
@@ -65,6 +65,13 @@ pub struct MapperCache {
     shards: Vec<RwLock<FxHashMap<u64, CacheEntry>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// When set (by `engine::checkpoint`'s journal), every
+    /// `insert_search` also queues its entry JSON in `pending` so the
+    /// next checkpoint appends exactly the new entries — O(new) instead
+    /// of the old O(cache) full-dump rewrite. Off by default: callers
+    /// that never checkpoint pay nothing but one relaxed load.
+    journal: AtomicBool,
+    pending: Mutex<Vec<Json>>,
 }
 
 impl Default for MapperCache {
@@ -81,6 +88,8 @@ impl MapperCache {
                 .collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            journal: AtomicBool::new(false),
+            pending: Mutex::new(Vec::new()),
         }
     }
 
@@ -149,6 +158,36 @@ impl MapperCache {
         None
     }
 
+    /// Scheduling cost estimate for a workload under `cfg` — the
+    /// "effective draw budget" the engine's priority scheduler sorts
+    /// by. Cache hits (positive, or negative at a sufficient budget)
+    /// cost 0 and sink to the end of a generation's schedule; fresh
+    /// misses may burn up to `max_draws`; a *stale* negative (recorded
+    /// under a smaller budget) is known to burn its whole budget
+    /// without terminating early, so it ranks above a fresh miss.
+    /// Unlike [`MapperCache::probe`] this never touches the hit/miss
+    /// counters — it is a scheduling peek, not a lookup.
+    pub fn effective_draws(
+        &self,
+        arch: &Arch,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        cfg: &MapperConfig,
+    ) -> u64 {
+        let key = Self::key(arch, layer, q);
+        match self.shard(key).read().unwrap().get(&key) {
+            Some(CacheEntry::Mapped(_)) => 0,
+            Some(CacheEntry::Unmappable { max_draws }) => {
+                if *max_draws >= cfg.max_draws {
+                    0
+                } else {
+                    cfg.max_draws.saturating_add(*max_draws)
+                }
+            }
+            None => cfg.max_draws,
+        }
+    }
+
     /// The record half of [`MapperCache::evaluate`]: fold a finished
     /// mapper search into a cache entry (counting the miss), and return
     /// the summary served to the caller. Failed searches are stored as
@@ -196,7 +235,30 @@ impl MapperCache {
             ),
         };
         self.shard(key).write().unwrap().insert(key, entry);
+        if self.journal.load(Ordering::Relaxed) {
+            self.pending.lock().unwrap().push(Self::entry_json(key, &entry));
+        }
         out
+    }
+
+    /// Start queueing every future `insert_search` for the checkpoint
+    /// journal (see [`MapperCache::drain_journal`]). Idempotent.
+    /// Entries arriving via `load_json`/`load_entry_json` are *not*
+    /// queued — they were read from a journal or dump in the first
+    /// place.
+    pub fn enable_journal(&self) {
+        self.journal.store(true, Ordering::SeqCst);
+    }
+
+    pub fn journal_enabled(&self) -> bool {
+        self.journal.load(Ordering::SeqCst)
+    }
+
+    /// Take the entries inserted since the last drain (their JSON
+    /// object form, same schema as `to_json`'s `entries`). Empty
+    /// unless [`MapperCache::enable_journal`] was called.
+    pub fn drain_journal(&self) -> Vec<Json> {
+        std::mem::take(&mut *self.pending.lock().unwrap())
     }
 
     pub fn hits(&self) -> u64 {
@@ -218,77 +280,96 @@ impl MapperCache {
         self.to_json_value().to_string()
     }
 
-    /// The dump as a [`Json`] value — lets `engine::checkpoint` embed
-    /// the cache in a larger document without a serialize/parse round
-    /// trip.
-    pub fn to_json_value(&self) -> Json {
+    /// One entry's JSON object form — shared by the full dump
+    /// (`to_json`), the journal pending queue, and the checkpoint
+    /// journal's full-rewrite frames.
+    fn entry_json(k: u64, v: &CacheEntry) -> Json {
+        match v {
+            CacheEntry::Mapped(v) => Json::obj(vec![
+                ("key", Json::Str(format!("{k:016x}"))),
+                ("mappable", Json::Bool(true)),
+                ("energy_pj", Json::Num(v.energy_pj)),
+                ("memory_energy_pj", Json::Num(v.memory_energy_pj)),
+                ("cycles", Json::Num(v.cycles)),
+                ("edp", Json::Num(v.edp)),
+                ("valid_mappings", Json::Num(v.valid_mappings as f64)),
+                ("breakdown", Json::arr_f64(&v.energy_breakdown_pj)),
+                ("mac_energy_pj", Json::Num(v.mac_energy_pj)),
+            ]),
+            CacheEntry::Unmappable { max_draws } => Json::obj(vec![
+                ("key", Json::Str(format!("{k:016x}"))),
+                ("mappable", Json::Bool(false)),
+                ("max_draws", Json::Num(*max_draws as f64)),
+            ]),
+        }
+    }
+
+    /// Every entry as its JSON object form, in shard order. The
+    /// checkpoint journal writes these one frame per line.
+    pub fn entries_json(&self) -> Vec<Json> {
         let mut entries = Vec::with_capacity(self.len());
         for shard in &self.shards {
             let map = shard.read().unwrap();
             for (k, v) in map.iter() {
-                match v {
-                    CacheEntry::Mapped(v) => entries.push(Json::obj(vec![
-                        ("key", Json::Str(format!("{k:016x}"))),
-                        ("mappable", Json::Bool(true)),
-                        ("energy_pj", Json::Num(v.energy_pj)),
-                        ("memory_energy_pj", Json::Num(v.memory_energy_pj)),
-                        ("cycles", Json::Num(v.cycles)),
-                        ("edp", Json::Num(v.edp)),
-                        ("valid_mappings", Json::Num(v.valid_mappings as f64)),
-                        ("breakdown", Json::arr_f64(&v.energy_breakdown_pj)),
-                        ("mac_energy_pj", Json::Num(v.mac_energy_pj)),
-                    ])),
-                    CacheEntry::Unmappable { max_draws } => entries.push(Json::obj(vec![
-                        ("key", Json::Str(format!("{k:016x}"))),
-                        ("mappable", Json::Bool(false)),
-                        ("max_draws", Json::Num(*max_draws as f64)),
-                    ])),
-                }
+                entries.push(Self::entry_json(*k, v));
             }
         }
-        Json::obj(vec![("entries", Json::Arr(entries))])
+        entries
     }
 
-    /// Load entries from a JSON dump produced by `to_json`. Dumps from
-    /// before negative caching (no `mappable` field) load as mappable;
-    /// negative entries without a `max_draws` field load with budget 0,
-    /// i.e. any future probe re-searches.
+    /// The dump as a [`Json`] value — lets `engine::checkpoint` embed
+    /// the cache in a larger document without a serialize/parse round
+    /// trip.
+    pub fn to_json_value(&self) -> Json {
+        Json::obj(vec![("entries", Json::Arr(self.entries_json()))])
+    }
+
+    /// Parse and insert one entry object (one element of a dump's
+    /// `entries`, or one journal `insert` frame). Total on malformed
+    /// input. Entries from before negative caching (no `mappable`
+    /// field) load as mappable; negative entries without a `max_draws`
+    /// field load with budget 0, i.e. any future probe re-searches.
+    pub fn load_entry_json(&self, e: &Json) -> Result<(), String> {
+        let key = u64::from_str_radix(e.get("key").as_str().ok_or("key")?, 16)
+            .map_err(|_| "bad key")?;
+        if matches!(e.get("mappable"), Json::Bool(false)) {
+            let max_draws = e.get("max_draws").as_f64().unwrap_or(0.0) as u64;
+            self.shard(key)
+                .write()
+                .unwrap()
+                .insert(key, CacheEntry::Unmappable { max_draws });
+            return Ok(());
+        }
+        let bd = e.get("breakdown").as_arr().ok_or("breakdown")?;
+        if bd.len() != 3 {
+            return Err("breakdown len".into());
+        }
+        self.shard(key).write().unwrap().insert(
+            key,
+            CacheEntry::Mapped(CachedEval {
+                energy_pj: e.get("energy_pj").as_f64().ok_or("energy")?,
+                memory_energy_pj: e.get("memory_energy_pj").as_f64().ok_or("mem")?,
+                cycles: e.get("cycles").as_f64().ok_or("cycles")?,
+                edp: e.get("edp").as_f64().ok_or("edp")?,
+                valid_mappings: e.get("valid_mappings").as_f64().ok_or("valid")? as u64,
+                energy_breakdown_pj: [
+                    bd[0].as_f64().ok_or("bd0")?,
+                    bd[1].as_f64().ok_or("bd1")?,
+                    bd[2].as_f64().ok_or("bd2")?,
+                ],
+                mac_energy_pj: e.get("mac_energy_pj").as_f64().ok_or("mac")?,
+            }),
+        );
+        Ok(())
+    }
+
+    /// Load entries from a JSON dump produced by `to_json`.
     pub fn load_json(&self, src: &str) -> Result<usize, String> {
         let v = parse(src)?;
         let entries = v.get("entries").as_arr().ok_or("missing entries")?;
         let mut n = 0;
         for e in entries {
-            let key = u64::from_str_radix(e.get("key").as_str().ok_or("key")?, 16)
-                .map_err(|_| "bad key")?;
-            if matches!(e.get("mappable"), Json::Bool(false)) {
-                let max_draws = e.get("max_draws").as_f64().unwrap_or(0.0) as u64;
-                self.shard(key)
-                    .write()
-                    .unwrap()
-                    .insert(key, CacheEntry::Unmappable { max_draws });
-                n += 1;
-                continue;
-            }
-            let bd = e.get("breakdown").as_arr().ok_or("breakdown")?;
-            if bd.len() != 3 {
-                return Err("breakdown len".into());
-            }
-            self.shard(key).write().unwrap().insert(
-                key,
-                CacheEntry::Mapped(CachedEval {
-                    energy_pj: e.get("energy_pj").as_f64().ok_or("energy")?,
-                    memory_energy_pj: e.get("memory_energy_pj").as_f64().ok_or("mem")?,
-                    cycles: e.get("cycles").as_f64().ok_or("cycles")?,
-                    edp: e.get("edp").as_f64().ok_or("edp")?,
-                    valid_mappings: e.get("valid_mappings").as_f64().ok_or("valid")? as u64,
-                    energy_breakdown_pj: [
-                        bd[0].as_f64().ok_or("bd0")?,
-                        bd[1].as_f64().ok_or("bd1")?,
-                        bd[2].as_f64().ok_or("bd2")?,
-                    ],
-                    mac_energy_pj: e.get("mac_energy_pj").as_f64().ok_or("mac")?,
-                }),
-            );
+            self.load_entry_json(e)?;
             n += 1;
         }
         Ok(n)
@@ -481,6 +562,71 @@ mod tests {
         let cache = MapperCache::new();
         assert!(cache.load_json("{\"entries\": [{\"key\": \"zz\"}]}").is_err());
         assert!(cache.load_json("not json").is_err());
+    }
+
+    #[test]
+    fn effective_draws_ranks_misses_and_stale_negatives() {
+        let cache = MapperCache::new();
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(8);
+        let c = cfg();
+        // unknown workload: a fresh miss costs the full budget
+        assert_eq!(cache.effective_draws(&a, &l, &q, &c), c.max_draws);
+        assert_eq!(cache.hits() + cache.misses(), 0, "a peek must not count");
+        // mapped workload: cost 0 (sinks to the end of the schedule)
+        cache.evaluate(&a, &l, &q, &c).unwrap();
+        assert_eq!(cache.effective_draws(&a, &l, &q, &c), 0);
+        // negative entry at a small budget: free at that budget,
+        // ranked above a fresh miss at a larger one
+        let ua = unmappable_arch();
+        let starved = MapperConfig {
+            valid_target: u64::MAX,
+            max_draws: 500,
+            seed: 5,
+            shards: 1,
+        };
+        assert!(cache.evaluate(&ua, &l, &q, &starved).is_none());
+        assert_eq!(cache.effective_draws(&ua, &l, &q, &starved), 0);
+        let bigger = MapperConfig {
+            max_draws: 5_000,
+            ..starved
+        };
+        let hard = cache.effective_draws(&ua, &l, &q, &bigger);
+        assert!(hard > bigger.max_draws, "stale negative must outrank a fresh miss");
+    }
+
+    #[test]
+    fn journal_queue_captures_only_live_inserts() {
+        let cache = MapperCache::new();
+        let a = toy();
+        let c = cfg();
+        // before enabling: inserts are not queued
+        cache.evaluate(&a, &ConvLayer::conv("t", 4, 8, 3, 8, 1), &LayerQuant::uniform(8), &c);
+        assert!(cache.drain_journal().is_empty());
+        cache.enable_journal();
+        assert!(cache.journal_enabled());
+        // a live search lands in the queue once
+        cache.evaluate(&a, &ConvLayer::conv("t", 4, 16, 3, 8, 1), &LayerQuant::uniform(8), &c);
+        let q1 = cache.drain_journal();
+        assert_eq!(q1.len(), 1);
+        assert!(matches!(q1[0].get("mappable"), Json::Bool(true)));
+        // draining empties the queue; a cache hit queues nothing
+        cache.evaluate(&a, &ConvLayer::conv("t", 4, 16, 3, 8, 1), &LayerQuant::uniform(8), &c);
+        assert!(cache.drain_journal().is_empty());
+        // replayed entries (load path) are not re-queued
+        let dump = cache.to_json();
+        let other = MapperCache::new();
+        other.enable_journal();
+        other.load_json(&dump).unwrap();
+        assert!(other.drain_journal().is_empty());
+        // and a queued entry round-trips through load_entry_json
+        cache.evaluate(&a, &ConvLayer::conv("t", 4, 32, 3, 8, 1), &LayerQuant::uniform(8), &c);
+        let q2 = cache.drain_journal();
+        assert_eq!(q2.len(), 1);
+        let fresh = MapperCache::new();
+        fresh.load_entry_json(&q2[0]).unwrap();
+        assert_eq!(fresh.len(), 1);
     }
 
     #[test]

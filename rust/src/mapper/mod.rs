@@ -425,20 +425,38 @@ pub fn search(arch: &Arch, layer: &ConvLayer, q: &LayerQuant, cfg: &MapperConfig
     let outcomes: Vec<ShardOutcome> = if specs.len() <= 1 {
         specs.iter().map(|s| run_shard(&space, &lctx, s)).collect()
     } else {
-        // standalone parallel path (scoped threads). Under the engine
-        // the same specs run as work-stealing pool subtasks instead —
-        // see `engine::driver::search_on_engine` — and merge to the
-        // same result.
+        // standalone parallel path (scoped threads), bounded to the
+        // machine: it used to spawn one thread per shard — up to 1024
+        // on auto-sharded configs — so now at most
+        // `available_parallelism` threads each walk a contiguous chunk
+        // of the spec list in index order. Slots are keyed by shard
+        // index, so the chunking cannot change the merge. Under the
+        // engine the same specs run as work-stealing pool subtasks
+        // instead — see `engine::driver::search_on_engine` — and merge
+        // to the same result.
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(specs.len());
         let mut slots: Vec<Option<ShardOutcome>> = specs.iter().map(|_| None).collect();
-        std::thread::scope(|sc| {
+        if threads <= 1 {
             for (spec, slot) in specs.iter().zip(slots.iter_mut()) {
-                let space = &space;
-                let lctx = &lctx;
-                sc.spawn(move || {
-                    *slot = Some(run_shard(space, lctx, spec));
-                });
+                *slot = Some(run_shard(&space, &lctx, spec));
             }
-        });
+        } else {
+            let chunk = specs.len().div_ceil(threads);
+            std::thread::scope(|sc| {
+                for (spec_chunk, slot_chunk) in specs.chunks(chunk).zip(slots.chunks_mut(chunk)) {
+                    let space = &space;
+                    let lctx = &lctx;
+                    sc.spawn(move || {
+                        for (spec, slot) in spec_chunk.iter().zip(slot_chunk.iter_mut()) {
+                            *slot = Some(run_shard(space, lctx, spec));
+                        }
+                    });
+                }
+            });
+        }
         slots.into_iter().map(|r| r.expect("shard completed")).collect()
     };
 
@@ -525,6 +543,35 @@ mod tests {
             assert!(r1.valid >= 120, "shards={shards} valid={}", r1.valid);
             assert_eq!(r1.best_mapping, r2.best_mapping);
         }
+    }
+
+    #[test]
+    fn many_shards_use_bounded_threads_and_merge_identically() {
+        // more shards than the machine has cores: the standalone
+        // parallel path chunks them over bounded threads; the result
+        // must equal a purely sequential run of the same shard plan
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(4).canonical(a.word_bits, a.bit_packing);
+        let cfg = MapperConfig {
+            valid_target: 96,
+            max_draws: 96_000,
+            seed: 9,
+            shards: 96, // far above available_parallelism on any CI box
+        };
+        let got = search(&a, &l, &q, &cfg);
+        let specs = shard_plan(&cfg, cfg.seed ^ workload_hash(&l, &q));
+        assert_eq!(specs.len(), 96);
+        let space = MapSpace::of(&a);
+        let lctx = LayerContext::new(&a, &l, &q);
+        let want = merge_shards(specs.iter().map(|s| run_shard(&space, &lctx, s)).collect());
+        assert_eq!(got.valid, want.valid);
+        assert_eq!(got.draws, want.draws);
+        assert_eq!(
+            got.best.as_ref().map(|e| e.edp().to_bits()),
+            want.best.as_ref().map(|e| e.edp().to_bits())
+        );
+        assert_eq!(got.best_mapping, want.best_mapping);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use qmap::accuracy::{ProxyAccuracy, ProxyParams};
 use qmap::arch::parser::render_arch;
 use qmap::arch::presets::toy;
 use qmap::engine::remote::{spawn_local_worker, BatchLedger, RemoteClient};
-use qmap::engine::{driver, Checkpointer, Engine, WorkerOptions};
+use qmap::engine::{driver, Checkpointer, Engine, SchedPolicy, WorkerOptions};
 use qmap::mapper::cache::MapperCache;
 use qmap::mapper::{self, MapperConfig, MapperResult};
 use qmap::mapping::mapspace::MapSpace;
@@ -270,6 +270,104 @@ fn distributed_generation_is_bit_identical_even_with_flaky_workers() {
             _ => panic!("genome {gi}: mappability diverged ({a:?} vs {b:?})"),
         }
     }
+}
+
+/// Satellite property of the scheduling rework: *any* job-priority
+/// permutation (FIFO, the cache-probe-aware priority order, or a
+/// seeded shuffle) crossed with *any* pipeline depth — and a flaky
+/// worker on top — must evaluate a generation bit-identically to the
+/// single-threaded serial model. Runs in the CI stateful matrix, where
+/// `QMAP_PIPELINE_DEPTH` also varies the engine-wide default.
+#[test]
+fn any_priority_permutation_and_pipeline_depth_is_bit_identical() {
+    let arch = toy();
+    let layers = small_net();
+    let cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 37,
+        shards: 2,
+    };
+    let mut rng = Rng::new(0xCAFE);
+    let genomes: Vec<QuantConfig> = (0..5)
+        .map(|_| random_genome(&mut rng, layers.len()))
+        .collect();
+    let reference = {
+        let engine = Engine::new(1);
+        let cache = MapperCache::new();
+        driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg)
+    };
+
+    #[derive(Debug, Clone)]
+    struct Case {
+        policy: SchedPolicy,
+        depth: usize,
+        drop_after: Option<usize>,
+    }
+    check_shrink(
+        &Config::from_env(0xD159, 6),
+        |r| Case {
+            policy: match r.below(3) {
+                0 => SchedPolicy::Fifo,
+                1 => SchedPolicy::Priority,
+                _ => SchedPolicy::Shuffled(r.next_u64()),
+            },
+            depth: r.range(1, 4),
+            drop_after: if r.chance(0.5) {
+                Some(r.range(0, 2))
+            } else {
+                None
+            },
+        },
+        |c| {
+            let mut cands = Vec::new();
+            if c.depth > 1 {
+                cands.push(Case {
+                    depth: c.depth - 1,
+                    ..c.clone()
+                });
+            }
+            if c.policy != SchedPolicy::Fifo {
+                cands.push(Case {
+                    policy: SchedPolicy::Fifo,
+                    ..c.clone()
+                });
+            }
+            if c.drop_after.is_some() {
+                cands.push(Case {
+                    drop_after: None,
+                    ..c.clone()
+                });
+            }
+            cands
+        },
+        |c| {
+            let opts = WorkerOptions {
+                drop_after: c.drop_after,
+                ..WorkerOptions::default()
+            };
+            let addrs: Vec<String> = (0..test_worker_count())
+                .map(|_| spawn_local_worker(opts).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+            let engine = Engine::distributed(2, addrs)
+                .with_sched_policy(c.policy)
+                .with_pipeline_depth(c.depth);
+            let cache = MapperCache::new();
+            let got = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg);
+            for (gi, (a, b)) in reference.iter().zip(&got).enumerate() {
+                match (a, b) {
+                    (Some(x), Some(y)) if x == y && x.edp.to_bits() == y.edp.to_bits() => {}
+                    (None, None) => {}
+                    _ => {
+                        return Err(format!(
+                            "genome {gi} diverged under {c:?}: {a:?} vs {b:?}"
+                        ))
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 // ------------------------------------------------ search-level suite

@@ -9,7 +9,7 @@
 
 use qmap::accuracy::{ProxyAccuracy, ProxyParams};
 use qmap::arch::presets::toy;
-use qmap::engine::{driver, Checkpointer, Engine};
+use qmap::engine::{driver, Checkpointer, Engine, SchedPolicy};
 use qmap::eval::evaluate_network;
 use qmap::mapper::cache::MapperCache;
 use qmap::mapper::MapperConfig;
@@ -53,7 +53,18 @@ struct Cmd {
 struct Script {
     workers: usize,
     shards: usize,
+    /// Job-injection order: FIFO, priority, or a random permutation —
+    /// every one must be invisible in the results.
+    policy: SchedPolicy,
     commands: Vec<Cmd>,
+}
+
+fn random_policy(r: &mut Rng) -> SchedPolicy {
+    match r.below(3) {
+        0 => SchedPolicy::Fifo,
+        1 => SchedPolicy::Priority,
+        _ => SchedPolicy::Shuffled(r.next_u64()),
+    }
 }
 
 fn random_script(r: &mut Rng) -> Script {
@@ -66,13 +77,16 @@ fn random_script(r: &mut Rng) -> Script {
     Script {
         workers: pick_workers(r),
         shards: r.range(1, 3),
+        policy: random_policy(r),
         commands,
     }
 }
 
 /// Shrink a failing script toward the smallest one that still fails:
-/// drop trailing commands, thin each command's genome batch, and walk
-/// the worker / shard counts down toward the serial baseline.
+/// drop trailing commands, thin each command's genome batch, walk the
+/// worker / shard counts down toward the serial baseline, and soften
+/// the scheduling policy to FIFO (a policy that can be removed without
+/// fixing the failure was not the cause).
 fn shrink_script(s: &Script) -> Vec<Script> {
     let mut out = Vec::new();
     if s.commands.len() > 1 {
@@ -97,6 +111,11 @@ fn shrink_script(s: &Script) -> Vec<Script> {
         t.shards -= 1;
         out.push(t);
     }
+    if s.policy != SchedPolicy::Fifo {
+        let mut t = s.clone();
+        t.policy = SchedPolicy::Fifo;
+        out.push(t);
+    }
     out
 }
 
@@ -111,7 +130,7 @@ fn engine_agrees_with_serial_model_under_random_job_mixes() {
             seed: 13,
             shards: script.shards,
         };
-        let engine = Engine::new(script.workers);
+        let engine = Engine::new(script.workers).with_sched_policy(script.policy);
         let sut_cache = MapperCache::new();
         let model_cache = MapperCache::new();
         for (ci, cmd) in script.commands.iter().enumerate() {
@@ -130,8 +149,8 @@ fn engine_agrees_with_serial_model_under_random_job_mixes() {
                 if got[gi] != want {
                     return Err(format!(
                         "command {ci}, genome {gi}: engine {:?} != serial {:?} \
-                         (workers={}, shards={})",
-                        got[gi], want, script.workers, script.shards
+                         (workers={}, shards={}, policy={:?})",
+                        got[gi], want, script.workers, script.shards, script.policy
                     ));
                 }
             }
