@@ -328,12 +328,18 @@ fn main() {
             generation: 1,
             pop: vec![Individual {
                 genome: QuantConfig::uniform(4, 8),
-                objectives: vec![1.0, 2.0],
+                objectives: qmap::objective::ObjectiveVec::raw(vec![1.0, 2.0]),
             }],
             rng: Rng::new(1),
         };
         let toy_arch = presets::toy();
-        let ident = SearchIdent::new(&toy_arch, 4, &cfg, &NsgaConfig::default());
+        let ident = SearchIdent::new(
+            &toy_arch,
+            4,
+            &qmap::objective::ObjectiveSpec::default(),
+            &cfg,
+            &NsgaConfig::default(),
+        );
         let mut path = std::env::temp_dir();
         path.push(format!("qmap_bench_journal_{}.jsonl", std::process::id()));
         let path = path.to_string_lossy().into_owned();
@@ -370,6 +376,71 @@ fn main() {
         "  -> journal append {checkpoint_speedup:.0}x cheaper than the {ck_entries}-entry snapshot"
     );
 
+    // 9. objective-space cost (the typed k-objective refactor):
+    //    (a) the NSGA-II internals — environmental selection over a
+    //        synthetic population at k=2 vs k=3 (dominance and
+    //        crowding are O(k); the ratio guards against an
+    //        accidentally superlinear k-objective path);
+    //    (b) one full 3-objective generation end-to-end — the same
+    //        genome population through the driver plus spec
+    //        evaluation, bit-identity with the 2-objective engine
+    //        rows asserted (the spec must never change what the
+    //        mapper computes).
+    let (nsga2_ms, nsga3_ms, obj3_gen_ms) = {
+        use qmap::objective::{ObjectiveSpec, ObjectiveVec};
+        let select_time = |k: usize| -> f64 {
+            let mut r = Rng::new(0x0B1 ^ k as u64);
+            let pop: Vec<Individual> = (0..256)
+                .map(|_| Individual {
+                    genome: QuantConfig::uniform(4, 8),
+                    objectives: ObjectiveVec::raw((0..k).map(|_| r.f64()).collect()),
+                })
+                .collect();
+            let t0 = Instant::now();
+            let mut kept = 0usize;
+            for _ in 0..100 {
+                kept += qmap::nsga::environmental_select(pop.clone(), 128).len();
+            }
+            std::hint::black_box(kept);
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        let n2 = select_time(2);
+        let n3 = select_time(3);
+        println!(
+            "nsga: environmental selection x100, |pop|=256        k=2 {n2:>8.1} ms, k=3 {n3:>8.1} ms"
+        );
+        let spec = ObjectiveSpec::parse("error,energy,weight_words").expect("3-objective spec");
+        let engine = Engine::new(4).with_objectives(spec);
+        let fresh = MapperCache::new();
+        let (objs, dt) = time(
+            &format!("engine: {pop_n} genomes, 3-objective generation, cold cache"),
+            || {
+                let evals =
+                    driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &fresh, &cfg);
+                let objs: Vec<_> = evals
+                    .iter()
+                    .map(|e| spec.evaluate(e.as_ref(), 0.9))
+                    .collect();
+                (evals, objs)
+            },
+        );
+        let (evals, objs) = objs;
+        assert_eq!(objs.len(), genomes.len());
+        assert!(objs.iter().all(|o| o.len() == 3));
+        // the objective spec is identity-only on the hardware side:
+        // the mapper results must match the 2-objective engine rows
+        let edps: Vec<Option<f64>> = evals.iter().map(|e| e.as_ref().map(|e| e.edp)).collect();
+        if let Some(r) = &reference {
+            assert_eq!(r, &edps, "3-objective run must not perturb mapper results");
+        }
+        (n2, n3, dt * 1e3)
+    };
+    let nsga_k3_vs_k2_x = nsga2_ms / nsga3_ms.max(1e-9);
+    println!(
+        "  -> k=3 selection costs {:.2}x of k=2 (ratio floor-guarded)",
+        1.0 / nsga_k3_vs_k2_x.max(1e-9)
+    );
+
     let t_1w = engine_rows[0].1;
     for &(w, dt) in &engine_rows {
         println!("  -> engine speedup at {w} workers: {:.2}x", t_1w / dt.max(1e-12));
@@ -388,6 +459,10 @@ fn main() {
 
     // summary + machine-readable record for the perf trajectory
     println!("\nsummary:");
+    println!("  nsga_select_2obj_ms          = {nsga2_ms:.1}");
+    println!("  nsga_select_3obj_ms          = {nsga3_ms:.1}");
+    println!("  nsga_k3_vs_k2_x              = {nsga_k3_vs_k2_x:.2}");
+    println!("  objectives3_generation_ms    = {obj3_gen_ms:.1}");
     println!("  mappings_per_sec_core        = {ctx_valid_rate:.0}");
     println!("  mappings_per_sec_core_naive  = {naive_valid_rate:.0}");
     println!("  candidates_per_sec_core      = {ctx_rate:.0}");
@@ -467,6 +542,15 @@ fn main() {
         ("checkpoint_snapshot_ms", Json::Num(ck_full_ms)),
         ("checkpoint_journal_ms", Json::Num(ck_append_ms)),
         ("checkpoint_speedup_x", Json::Num(checkpoint_speedup)),
+        // the typed objective space: k-objective NSGA internals cost
+        // (k=2 vs k=3 environmental selection; the guarded ratio
+        // catches an accidentally superlinear k path) and one full
+        // 3-objective generation (bit-identity with the 2-objective
+        // rows asserted above)
+        ("nsga_select_2obj_ms", Json::Num(nsga2_ms)),
+        ("nsga_select_3obj_ms", Json::Num(nsga3_ms)),
+        ("nsga_k3_vs_k2_x", Json::Num(nsga_k3_vs_k2_x)),
+        ("objectives3_generation_ms", Json::Num(obj3_gen_ms)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
     match std::fs::write(path, record.to_string()) {

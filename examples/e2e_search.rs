@@ -28,7 +28,7 @@ fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), String> {
     let t0 = Instant::now();
     println!("=== E2E: QAT-in-the-loop quantization + mapping search ===\n");
 
@@ -105,13 +105,18 @@ fn main() -> anyhow::Result<()> {
         &rc.mapper,
         &rc.nsga,
         |generation, pop| {
+            // the default spec is (edp, error): look the axes up by
+            // name instead of trusting positions
+            let spec = qmap::objective::ObjectiveSpec::default();
+            let i_err = spec.index_of(qmap::objective::Axis::Error).expect("error axis");
+            let i_edp = spec.index_of(qmap::objective::Axis::Edp).expect("edp axis");
             let best_acc = pop
                 .iter()
-                .map(|i| 1.0 - i.objectives[1])
+                .map(|i| 1.0 - i.objectives[i_err])
                 .fold(f64::NEG_INFINITY, f64::max);
             let best_edp = pop
                 .iter()
-                .map(|i| i.objectives[0])
+                .map(|i| i.objectives[i_edp])
                 .fold(f64::INFINITY, f64::min);
             println!(
                 "  gen {generation:>3}: best top-1 {best_acc:.3}, best EDP {best_edp:.3e} ({} mapper workloads cached)",

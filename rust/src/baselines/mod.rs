@@ -17,6 +17,7 @@ use crate::eval::NetworkEval;
 use crate::mapper::cache::MapperCache;
 use crate::mapper::MapperConfig;
 use crate::nsga::{self, NsgaConfig};
+use crate::objective::{Axis, ObjectiveSpec, ObjectiveVec};
 use crate::quant::QuantConfig;
 use crate::workload::ConvLayer;
 
@@ -81,9 +82,10 @@ pub fn uniform_sweep(
     price_genomes(engine, arch, layers, genomes, acc, cache, cfg, "uniform")
 }
 
-/// Naïve hardware-unaware search: NSGA-II over (error, model-size-bits),
+/// Naïve hardware-unaware search: NSGA-II over `model_size,error`,
 /// winners re-priced on the actual accelerator afterwards (on the
-/// engine — the search loop itself touches no hardware model).
+/// engine — the search loop itself touches no hardware model, which is
+/// the point: its `model_size` axis is computed from the genome alone).
 pub fn naive_search(
     engine: &Engine,
     arch: &Arch,
@@ -93,6 +95,12 @@ pub fn naive_search(
     map_cfg: &MapperConfig,
     nsga_cfg: &NsgaConfig,
 ) -> Vec<Candidate> {
+    let spec = ObjectiveSpec::new(&[Axis::ModelSize, Axis::Error])
+        .expect("naive spec is valid");
+    // the search loop is hardware-free, but the winners' re-pricing
+    // below fans out through the engine: stamp its wire identity with
+    // naive's own spec
+    engine.set_objectives(spec);
     let front = nsga::run(
         layers.len(),
         nsga_cfg,
@@ -100,9 +108,12 @@ pub fn naive_search(
             genomes
                 .iter()
                 .map(|g| {
+                    // both axes are genome-derivable, so the vector is
+                    // built directly (still stamped with the spec) —
+                    // no accelerator model in the loop, by design
                     let err = 1.0 - acc.accuracy(g);
                     let size = g.model_size_bits(layers) as f64;
-                    vec![size, err]
+                    ObjectiveVec::new(&spec, vec![size, err])
                 })
                 .collect()
         },
@@ -112,12 +123,13 @@ pub fn naive_search(
     price_genomes(engine, arch, layers, genomes, acc, cache, map_cfg, "naive")
 }
 
-/// The proposed method: NSGA-II over (EDP on the target accelerator,
-/// error), exactly the paper's search engine. Every generation's
-/// offspring fans out through `engine::driver` — deduplicated
-/// layer×quant jobs on the work-stealing pool — and the results are
-/// bit-identical to a single-threaded run for any worker count.
-pub fn proposed_search(
+/// The proposed method over an arbitrary [`ObjectiveSpec`]: NSGA-II
+/// with the hardware axes priced on the target accelerator through
+/// `engine::driver` — deduplicated layer×quant jobs on the
+/// work-stealing pool — and results bit-identical to a single-threaded
+/// run for any worker count, pipeline depth, or fleet.
+#[allow(clippy::too_many_arguments)]
+pub fn search_with_objectives(
     engine: &Engine,
     arch: &Arch,
     layers: &[ConvLayer],
@@ -125,8 +137,14 @@ pub fn proposed_search(
     cache: &MapperCache,
     map_cfg: &MapperConfig,
     nsga_cfg: &NsgaConfig,
+    objectives: &ObjectiveSpec,
     mut on_generation: impl FnMut(usize, &[nsga::Individual]),
 ) -> Vec<Candidate> {
+    // the engine's wire identity must carry THIS search's spec —
+    // installing it here means no caller can desync the two (a batch
+    // stamped with a stale spec would quietly share worker-cache
+    // identities across incomparable searches)
+    engine.set_objectives(*objectives);
     let front = nsga::run(
         layers.len(),
         nsga_cfg,
@@ -135,11 +153,7 @@ pub fn proposed_search(
             genomes
                 .iter()
                 .zip(&evals)
-                .map(|(g, e)| {
-                    let err = 1.0 - acc.accuracy(g);
-                    let edp = e.as_ref().map(|e| e.edp).unwrap_or(f64::INFINITY);
-                    vec![edp, err]
-                })
+                .map(|(g, e)| objectives.evaluate(e.as_ref(), acc.accuracy(g)))
                 .collect()
         },
         &mut on_generation,
@@ -148,12 +162,38 @@ pub fn proposed_search(
     price_genomes(engine, arch, layers, genomes, acc, cache, map_cfg, "proposed")
 }
 
+/// The paper's default two-objective formulation (`edp,error`) —
+/// [`search_with_objectives`] under [`ObjectiveSpec::default`].
+pub fn proposed_search(
+    engine: &Engine,
+    arch: &Arch,
+    layers: &[ConvLayer],
+    acc: &mut dyn AccuracyModel,
+    cache: &MapperCache,
+    map_cfg: &MapperConfig,
+    nsga_cfg: &NsgaConfig,
+    on_generation: impl FnMut(usize, &[nsga::Individual]),
+) -> Vec<Candidate> {
+    search_with_objectives(
+        engine,
+        arch,
+        layers,
+        acc,
+        cache,
+        map_cfg,
+        nsga_cfg,
+        &ObjectiveSpec::default(),
+        on_generation,
+    )
+}
+
 /// The paper's full three-objective formulation: NSGA-II
 /// "simultaneously minimizes the weight memory size (reflecting the
-/// accelerator's memory subsystems), inference energy, and CNN error".
-/// [`proposed_search`] is the two-objective (EDP, error) projection used
-/// for the accuracy-vs-EDP figures; this variant also presses on the
-/// memory axis and is what Table II's memory-energy columns report.
+/// accelerator's memory subsystems), inference energy, and CNN error" —
+/// the named spec `memory_energy,edp,error`. [`proposed_search`] is the
+/// two-objective projection used for the accuracy-vs-EDP figures; this
+/// variant also presses on the memory axis and is what Table II's
+/// memory-energy columns report.
 pub fn proposed_search3(
     engine: &Engine,
     arch: &Arch,
@@ -163,27 +203,11 @@ pub fn proposed_search3(
     map_cfg: &MapperConfig,
     nsga_cfg: &NsgaConfig,
 ) -> Vec<Candidate> {
-    let front = nsga::run(
-        layers.len(),
-        nsga_cfg,
-        |genomes| {
-            let evals = driver::evaluate_genomes(engine, arch, layers, genomes, cache, map_cfg);
-            genomes
-                .iter()
-                .zip(&evals)
-                .map(|(g, e)| {
-                    let err = 1.0 - acc.accuracy(g);
-                    match e {
-                        Some(e) => vec![e.memory_energy_pj, e.energy_pj * e.cycles, err],
-                        None => vec![f64::INFINITY, f64::INFINITY, err],
-                    }
-                })
-                .collect()
-        },
-        |_, _| {},
-    );
-    let genomes: Vec<QuantConfig> = front.into_iter().map(|ind| ind.genome).collect();
-    price_genomes(engine, arch, layers, genomes, acc, cache, map_cfg, "proposed")
+    let spec = ObjectiveSpec::new(&[Axis::MemoryEnergy, Axis::Edp, Axis::Error])
+        .expect("three-objective spec is valid");
+    search_with_objectives(
+        engine, arch, layers, acc, cache, map_cfg, nsga_cfg, &spec, |_, _| {},
+    )
 }
 
 #[cfg(test)]

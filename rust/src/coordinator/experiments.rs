@@ -19,7 +19,8 @@ use crate::engine::{driver, Engine};
 use crate::eval::{evaluate_network, NetworkEval};
 use crate::mapper::cache::MapperCache;
 use crate::mapping::mapspace::MapSpace;
-use crate::nsga::{pareto_front, NsgaConfig};
+use crate::nsga::{pareto_front_of_points, NsgaConfig};
+use crate::objective::{Axis, ObjectiveSpec};
 use crate::quant::{LayerQuant, QuantConfig, QMAX, QMIN};
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -219,12 +220,12 @@ pub fn fig5_convergence(rc: &RunConfig, snapshot_gens: &[usize]) -> Fig5Result {
             &rc.nsga,
             |gen, pop| {
                 let pts: Vec<Vec<f64>> =
-                    pop.iter().map(|i| i.objectives.clone()).collect();
+                    pop.iter().map(|i| i.objectives.values().to_vec()).collect();
                 if gen == 0 {
-                    *initial_ref = pareto_front(&pts);
+                    *initial_ref = pareto_front_of_points(&pts);
                 }
                 if snapshot_gens.contains(&gen) {
-                    fronts_ref.push((gen, pareto_front(&pts)));
+                    fronts_ref.push((gen, pareto_front_of_points(&pts)));
                 }
             },
         );
@@ -304,10 +305,14 @@ fn ablation_arms(
     let layers = models::mobilenet_v1();
     let cache = MapperCache::new();
     let engine = Engine::new(rc.threads);
+    // the arms' front axes come from the run's objective spec — named,
+    // not positional: reordering or extending the spec reorders these
+    // points with it instead of silently swapping EDP for error
+    let spec = rc.objectives;
     let mut out = Vec::new();
     for (label, params, nsga_cfg) in arms {
         let mut acc = ProxyAccuracy::new(&layers, params);
-        let cands = proposed_search(
+        let cands = crate::baselines::search_with_objectives(
             &engine,
             &arch,
             &layers,
@@ -315,13 +320,14 @@ fn ablation_arms(
             &cache,
             &rc.mapper,
             &nsga_cfg,
+            &spec,
             |_, _| {},
         );
         let pts: Vec<Vec<f64>> = cands
             .iter()
-            .map(|c| vec![c.hw.edp, 1.0 - c.accuracy])
+            .map(|c| spec.evaluate(Some(&c.hw), c.accuracy).into_values())
             .collect();
-        out.push((label, pareto_front(&pts)));
+        out.push((label, pareto_front_of_points(&pts)));
     }
     Fig3Result { arms: out }
 }
@@ -462,17 +468,20 @@ fn best_cells(
     ref_acc: f64,
     per_cell: usize,
 ) -> Vec<Table2Row> {
-    // keep the Pareto subset by (mem energy, -accuracy), then the
-    // `per_cell` with the largest savings at acceptable accuracy
+    // keep the Pareto subset by the named (memory_energy, error) axes,
+    // then the `per_cell` with the largest savings at acceptable
+    // accuracy
+    let table_spec = ObjectiveSpec::new(&[Axis::MemoryEnergy, Axis::Error])
+        .expect("table 2 axes are valid");
     let pts: Vec<Vec<f64>> = cands
         .iter()
-        .map(|c| vec![c.hw.memory_energy_pj, 1.0 - c.accuracy])
+        .map(|c| table_spec.evaluate(Some(&c.hw), c.accuracy).into_values())
         .collect();
-    let front = pareto_front(&pts);
+    let front = pareto_front_of_points(&pts);
     let pareto: Vec<Table2Row> = cands
         .iter()
         .filter(|c| {
-            front.contains(&vec![c.hw.memory_energy_pj, 1.0 - c.accuracy])
+            front.contains(&table_spec.evaluate(Some(&c.hw), c.accuracy).into_values())
         })
         .map(|c| Table2Row {
             arch: arch.name.clone(),

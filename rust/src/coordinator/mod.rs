@@ -7,6 +7,7 @@ pub mod experiments;
 
 use crate::mapper::MapperConfig;
 use crate::nsga::NsgaConfig;
+use crate::objective::ObjectiveSpec;
 
 /// Global experiment knobs with paper-faithful defaults, scaled for a
 /// laptop-class run (DESIGN.md §3: budget substitution).
@@ -14,6 +15,9 @@ use crate::nsga::NsgaConfig;
 pub struct RunConfig {
     pub mapper: MapperConfig,
     pub nsga: NsgaConfig,
+    /// The search's objective space (default: the paper's `edp,error`;
+    /// `QMAP_OBJECTIVES` / `--objectives` select another).
+    pub objectives: ObjectiveSpec,
     /// Worker threads for parallel candidate evaluation.
     pub threads: usize,
     pub seed: u64,
@@ -24,6 +28,7 @@ impl Default for RunConfig {
         RunConfig {
             mapper: MapperConfig::default(),
             nsga: NsgaConfig::default(),
+            objectives: ObjectiveSpec::default(),
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4),
@@ -57,12 +62,17 @@ impl RunConfig {
 
     /// Profile selection for the bench harnesses: `QMAP_PROFILE` (see
     /// [`RunConfig::from_profile`]) with `QMAP_THREADS` / `QMAP_SEED` /
-    /// `QMAP_SHARDS` overrides.
+    /// `QMAP_SHARDS` / `QMAP_OBJECTIVES` overrides. A malformed
+    /// objective spec is an error, not a silent fallback to the
+    /// default axes.
     pub fn from_env() -> Result<Self, String> {
         let mut rc = match std::env::var("QMAP_PROFILE") {
             Ok(p) => Self::from_profile(&p)?,
             Err(_) => RunConfig::default(),
         };
+        if let Some(spec) = ObjectiveSpec::from_env()? {
+            rc.objectives = spec;
+        }
         if let Ok(t) = std::env::var("QMAP_THREADS") {
             if let Ok(t) = t.parse() {
                 rc.threads = t;
@@ -113,6 +123,7 @@ impl RunConfig {
                 generations: 6,
                 ..NsgaConfig::default()
             },
+            objectives: ObjectiveSpec::default(),
             threads: 4,
             seed: 1,
         }

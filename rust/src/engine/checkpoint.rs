@@ -48,6 +48,7 @@ use crate::arch::Arch;
 use crate::mapper::cache::MapperCache;
 use crate::mapper::MapperConfig;
 use crate::nsga::{Individual, NsgaConfig, SearchState};
+use crate::objective::{ObjectiveSpec, ObjectiveVec};
 use crate::quant::QuantConfig;
 use crate::util::json::{parse, Json};
 use crate::util::rng::Rng;
@@ -72,14 +73,21 @@ const DEFAULT_COMPACT_SLACK: usize = 1024;
 /// Identity of the search a checkpoint belongs to. A checkpoint written
 /// under one configuration and resumed under another (different
 /// accelerator, network size, mapper budgets/seed, or NSGA-II breeding
-/// parameters) would silently corrupt the search — stale objectives
-/// mixed with fresh ones, a diverged RNG stream — so `load` rejects any
+/// parameters, or a different *objective space*) would silently corrupt
+/// the search — stale objectives mixed with fresh ones, incomparable
+/// objective vectors, a diverged RNG stream — so `load` rejects any
 /// mismatch instead. `generations` is deliberately absent: extending a
 /// finished search with more generations is a legitimate resume.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchIdent {
     pub arch: String,
     pub num_layers: usize,
+    /// Canonical [`ObjectiveSpec`] string (`edp,error`, ...). A
+    /// checkpoint written under one objective space must never resume
+    /// under another: dominance over mixed-spec vectors is garbage.
+    /// Checkpoints from before the objective subsystem have no such
+    /// field; they load as the historical two-objective default.
+    pub objectives: String,
     pub mapper_seed: u64,
     pub valid_target: u64,
     pub max_draws: u64,
@@ -95,12 +103,14 @@ impl SearchIdent {
     pub fn new(
         arch: &Arch,
         num_layers: usize,
+        objectives: &ObjectiveSpec,
         map_cfg: &MapperConfig,
         nsga_cfg: &NsgaConfig,
     ) -> SearchIdent {
         SearchIdent {
             arch: arch.name.clone(),
             num_layers,
+            objectives: objectives.canonical(),
             mapper_seed: map_cfg.seed,
             valid_target: map_cfg.valid_target,
             max_draws: map_cfg.max_draws,
@@ -113,10 +123,19 @@ impl SearchIdent {
         }
     }
 
+    /// The checkpoint's objective spec, parsed back from its canonical
+    /// string (total: a stored spec this build cannot parse is a clear
+    /// error naming the axes, not garbage objectives).
+    pub fn objective_spec(&self) -> Result<ObjectiveSpec, String> {
+        ObjectiveSpec::parse(&self.objectives)
+            .map_err(|e| format!("checkpoint objective spec: {e}"))
+    }
+
     fn to_json(&self) -> Json {
         Json::obj(vec![
             ("arch", Json::Str(self.arch.clone())),
             ("num_layers", Json::Num(self.num_layers as f64)),
+            ("objectives", Json::Str(self.objectives.clone())),
             ("mapper_seed", Json::hex_u64(self.mapper_seed)),
             ("valid_target", Json::hex_u64(self.valid_target)),
             ("max_draws", Json::hex_u64(self.max_draws)),
@@ -143,6 +162,15 @@ impl SearchIdent {
                 .get("num_layers")
                 .as_f64()
                 .ok_or("checkpoint ident: missing num_layers")? as usize,
+            // checkpoints from before the objective subsystem (legacy
+            // v2 snapshots and early journals) carry no spec: they were
+            // all written by the hardcoded (EDP, error) pipeline, so
+            // they migrate as the default spec
+            objectives: v
+                .get("objectives")
+                .as_str()
+                .unwrap_or(&ObjectiveSpec::default().canonical())
+                .to_string(),
             mapper_seed: hex("mapper_seed")?,
             valid_target: hex("valid_target")?,
             max_draws: hex("max_draws")?,
@@ -162,6 +190,18 @@ impl SearchIdent {
     }
 
     fn check(&self, stored: &SearchIdent, path: &str) -> Result<(), String> {
+        if stored.objectives != self.objectives {
+            // name the one field a user is most likely to change on
+            // purpose, with the exact fix
+            return Err(format!(
+                "{path}: checkpoint was written under objective spec \
+                 '{}', this run uses '{}' — resuming would mix \
+                 incomparable objective vectors. Re-run with \
+                 --objectives {} to continue that search, or delete \
+                 the checkpoint to start fresh under the new spec",
+                stored.objectives, self.objectives, stored.objectives
+            ));
+        }
         if stored != self {
             return Err(format!(
                 "{path}: checkpoint belongs to a different search configuration — \
@@ -201,7 +241,11 @@ fn population_to_json(pop: &[Individual]) -> Json {
     )
 }
 
-fn population_from_json(v: &Json, num_layers: usize) -> Result<Vec<Individual>, String> {
+fn population_from_json(
+    v: &Json,
+    num_layers: usize,
+    spec: &ObjectiveSpec,
+) -> Result<Vec<Individual>, String> {
     let mut pop: Vec<Individual> = Vec::new();
     for ind in v.as_arr().ok_or("checkpoint: missing population")? {
         let bytes: Vec<u8> = ind
@@ -231,7 +275,18 @@ fn population_from_json(v: &Json, num_layers: usize) -> Result<Vec<Individual>, 
         {
             objectives.push(o.as_f64_bits("objective")?);
         }
-        pop.push(Individual { genome, objectives });
+        if objectives.len() != spec.len() {
+            return Err(format!(
+                "checkpoint individual has {} objectives, the ident's spec \
+                 '{spec}' has {} axes — corrupt or hand-edited checkpoint",
+                objectives.len(),
+                spec.len()
+            ));
+        }
+        pop.push(Individual {
+            genome,
+            objectives: ObjectiveVec::rebound(spec, objectives),
+        });
     }
     if pop.is_empty() {
         return Err("checkpoint: empty population".into());
@@ -490,7 +545,8 @@ impl Checkpointer {
             .as_f64()
             .ok_or("checkpoint: missing generation")? as usize;
         let rng = Rng::new(mark.get("rng").as_hex_u64("checkpoint rng")?);
-        let pop = population_from_json(mark.get("population"), ident.num_layers)?;
+        let spec = ident.objective_spec()?;
+        let pop = population_from_json(mark.get("population"), ident.num_layers, &spec)?;
         // arm the cache's insert queue; keep appending to the replayed
         // journal UNLESS the tail was torn — appending after partial
         // bytes would merge the torn line with the next frame into one
@@ -540,7 +596,8 @@ impl Checkpointer {
             .as_f64()
             .ok_or("checkpoint: missing generation")? as usize;
         let rng = Rng::new(v.get("rng").as_hex_u64("checkpoint rng")?);
-        let pop = population_from_json(v.get("population"), ident.num_layers)?;
+        let spec = ident.objective_spec()?;
+        let pop = population_from_json(v.get("population"), ident.num_layers, &spec)?;
         cache
             .load_json(&v.get("cache").to_string())
             .map_err(|e| format!("checkpoint cache: {e}"))?;
@@ -567,7 +624,13 @@ mod tests {
     }
 
     fn ident() -> SearchIdent {
-        SearchIdent::new(&toy(), 4, &MapperConfig::default(), &NsgaConfig::default())
+        SearchIdent::new(
+            &toy(),
+            4,
+            &ObjectiveSpec::default(),
+            &MapperConfig::default(),
+            &NsgaConfig::default(),
+        )
     }
 
     fn state_with_objectives(objs: Vec<Vec<f64>>) -> SearchState {
@@ -578,7 +641,7 @@ mod tests {
                 .enumerate()
                 .map(|(i, objectives)| Individual {
                     genome: QuantConfig::uniform(4, 2 + (i as u8 % 7)),
-                    objectives,
+                    objectives: ObjectiveVec::raw(objectives),
                 })
                 .collect(),
             rng: Rng::new(0xFEED_F00D),
@@ -672,6 +735,80 @@ mod tests {
         let mut other = ident();
         other.mapper_seed ^= 1;
         assert!(ckpt.load(&other, &cache).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Resuming under a different objective spec is a hard error that
+    /// names both specs and the fix — never silent garbage.
+    #[test]
+    fn load_rejects_mismatched_objective_spec() {
+        let path = tmp_path("objmismatch");
+        let ckpt = Checkpointer::new(path.as_str());
+        let cache = MapperCache::new();
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        let mut other = ident();
+        other.objectives = "error,energy,weight_words".into();
+        let err = ckpt.load(&other, &cache).unwrap_err();
+        assert!(err.contains("edp,error"), "{err}");
+        assert!(err.contains("error,energy,weight_words"), "{err}");
+        assert!(err.contains("--objectives"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A journal whose header predates the objective subsystem (no
+    /// `objectives` field in the ident) loads as the historical
+    /// two-objective default — and only as that.
+    #[test]
+    fn pre_objective_journal_migrates_to_the_default_spec() {
+        let path = tmp_path("objlegacy");
+        let ckpt = Checkpointer::new(path.as_str());
+        let cache = MapperCache::new();
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        // strip the objectives field from the header line, simulating a
+        // journal written before the field existed
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stripped = text.replacen("\"objectives\":\"edp,error\",", "", 1);
+        assert_ne!(text, stripped, "header must have carried the spec");
+        std::fs::write(&path, stripped).unwrap();
+        // default-spec ident: loads
+        let back = Checkpointer::new(path.as_str())
+            .load(&ident(), &MapperCache::new())
+            .unwrap();
+        assert_eq!(back.generation, 3);
+        // three-objective ident: refused with the migration hint
+        let mut other = ident();
+        other.objectives = "error,energy,weight_words".into();
+        let err = Checkpointer::new(path.as_str())
+            .load(&other, &MapperCache::new())
+            .unwrap_err();
+        assert!(err.contains("edp,error"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A three-objective search checkpoints and resumes with all three
+    /// axes intact, bit for bit.
+    #[test]
+    fn three_objective_state_roundtrips() {
+        let path = tmp_path("threeobj");
+        let ckpt = Checkpointer::new(path.as_str());
+        let spec = ObjectiveSpec::parse("error,energy,weight_words").unwrap();
+        let mut id3 = ident();
+        id3.objectives = spec.canonical();
+        let st = state_with_objectives(vec![
+            vec![0.25, 1.5e9, 40_000.0],
+            vec![0.1, f64::INFINITY, f64::INFINITY],
+        ]);
+        ckpt.save(&st, &MapperCache::new(), &id3).unwrap();
+        let back = ckpt.load(&id3, &MapperCache::new()).unwrap();
+        assert_eq!(back.pop.len(), 2);
+        for (a, b) in st.pop.iter().zip(&back.pop) {
+            let ab: Vec<u64> = a.objectives.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u64> = b.objectives.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb);
+            assert_eq!(b.objectives.spec_hash(), spec.hash());
+        }
         let _ = std::fs::remove_file(&path);
     }
 

@@ -33,6 +33,7 @@ use crate::mapper::{self, MapperConfig};
 use crate::mapping::mapspace::MapSpace;
 use crate::mapping::LayerContext;
 use crate::nsga::{self, Individual, NsgaConfig};
+use crate::objective::{ObjectiveSpec, ObjectiveVec};
 use crate::quant::{LayerQuant, QuantConfig};
 use crate::util::rng::Rng;
 use crate::workload::ConvLayer;
@@ -302,13 +303,16 @@ pub fn evaluate_network(
         .expect("one genome in, one result out")
 }
 
-/// The paper's hardware-aware NSGA-II search (objectives: EDP on the
-/// target accelerator, CNN error), scheduled on the engine and
-/// checkpointed to `ckpt` at every generation boundary — population,
-/// breeding-RNG state, and the mapper cache (negative entries keep
-/// their draw-budget tags). With `resume` and an existing checkpoint
-/// file, the search continues where it stopped and produces a final
-/// front bit-identical to an uninterrupted run.
+/// The paper's hardware-aware NSGA-II search over an arbitrary
+/// [`ObjectiveSpec`] (default: EDP on the target accelerator, CNN
+/// error), scheduled on the engine and checkpointed to `ckpt` at every
+/// generation boundary — population, breeding-RNG state, and the
+/// mapper cache (negative entries keep their draw-budget tags). With
+/// `resume` and an existing checkpoint file, the search continues
+/// where it stopped and produces a final front bit-identical to an
+/// uninterrupted run; the spec is part of the checkpoint identity, so
+/// resuming under a *different* spec is a hard error, never silent
+/// garbage.
 #[allow(clippy::too_many_arguments)]
 pub fn search_resumable(
     engine: &Engine,
@@ -318,24 +322,24 @@ pub fn search_resumable(
     cache: &MapperCache,
     map_cfg: &MapperConfig,
     nsga_cfg: &NsgaConfig,
+    objectives: &ObjectiveSpec,
     ckpt: &Checkpointer,
     resume: bool,
     mut on_generation: impl FnMut(usize, &[Individual]),
 ) -> Result<Vec<Candidate>, String> {
-    let mut evaluate = |genomes: &[QuantConfig]| -> Vec<Vec<f64>> {
+    // the engine's wire identity always carries the running search's
+    // spec (see baselines::search_with_objectives for why)
+    engine.set_objectives(*objectives);
+    let mut evaluate = |genomes: &[QuantConfig]| -> Vec<ObjectiveVec> {
         let evals = evaluate_genomes(engine, arch, layers, genomes, cache, map_cfg);
         genomes
             .iter()
             .zip(&evals)
-            .map(|(g, e)| {
-                let err = 1.0 - acc.accuracy(g);
-                let edp = e.as_ref().map(|e| e.edp).unwrap_or(f64::INFINITY);
-                vec![edp, err]
-            })
+            .map(|(g, e)| objectives.evaluate(e.as_ref(), acc.accuracy(g)))
             .collect()
     };
 
-    let ident = SearchIdent::new(arch, layers.len(), map_cfg, nsga_cfg);
+    let ident = SearchIdent::new(arch, layers.len(), objectives, map_cfg, nsga_cfg);
     let mut st = if resume && ckpt.exists() {
         ckpt.load(&ident, cache)?
     } else {

@@ -39,6 +39,7 @@ pub use checkpoint::Checkpointer;
 pub use pool::{Pool, ScopedTask};
 pub use remote::WorkerOptions;
 
+use crate::objective::ObjectiveSpec;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -168,6 +169,17 @@ pub struct Engine {
     backend: Backend,
     sched: SchedPolicy,
     pipeline: usize,
+    /// The *active search's* objective space. The engine itself never
+    /// computes objectives (jobs produce `NetworkEval`s); the spec
+    /// rides here so the distributed layer can fold its identity hash
+    /// into every batch — a mixed-version fleet disagreeing about the
+    /// objective space fails loudly instead of mixing incomparable
+    /// searches. Interior-mutable because the search entry points
+    /// ([`crate::baselines::search_with_objectives`],
+    /// [`driver::search_resumable`]) install their spec on whatever
+    /// engine they were handed — the one value on the wire is always
+    /// the one the running search uses, by construction.
+    objectives: Mutex<ObjectiveSpec>,
     jobs: AtomicU64,
     splits: AtomicU64,
     remote_jobs: AtomicU64,
@@ -176,6 +188,9 @@ pub struct Engine {
     /// Last generation's scheduling tail, in microseconds (see
     /// [`EngineStats::last_tail_ms`]).
     tail_us: AtomicU64,
+    /// Last distributed generation's effective pipeline window (see
+    /// [`EngineStats::last_pipeline_depth`]).
+    eff_pipeline: AtomicU64,
 }
 
 /// A point-in-time snapshot of the engine's counters.
@@ -199,6 +214,15 @@ pub struct EngineStats {
     pub requeued_specs: u64,
     /// Remote workers that became unreachable or violated the protocol.
     pub lost_workers: u64,
+    /// The *effective* per-connection pipeline window the last
+    /// distributed generation settled on: `remote::eval_jobs` measures
+    /// per-connection batch RTT and serve time and clamps the
+    /// configured [`Engine::pipeline_depth`] to
+    /// `min(depth, ceil(rtt / serve) + 1)` — a window deep enough to
+    /// hide the round-trip, no deeper (placement only; results are
+    /// bit-identical at every depth). 0 until a distributed generation
+    /// has run.
+    pub last_pipeline_depth: usize,
     /// The last generation's scheduling tail: time between the job
     /// queue running dry (the last job being claimed, after which an
     /// out-of-work worker can only steal shards) and the last job
@@ -251,13 +275,37 @@ impl Engine {
             backend,
             sched: SchedPolicy::Priority,
             pipeline: default_pipeline_depth(),
+            objectives: Mutex::new(ObjectiveSpec::default()),
             jobs: AtomicU64::new(0),
             splits: AtomicU64::new(0),
             remote_jobs: AtomicU64::new(0),
             requeued_specs: AtomicU64::new(0),
             lost_workers: AtomicU64::new(0),
             tail_us: AtomicU64::new(0),
+            eff_pipeline: AtomicU64::new(0),
         }
+    }
+
+    /// Bind the run's objective space (default: the paper's
+    /// `edp,error`). Purely identity: it changes what rides the batch
+    /// headers and checkpoint idents, never what a mapper job computes.
+    pub fn with_objectives(self, spec: ObjectiveSpec) -> Engine {
+        self.set_objectives(spec);
+        self
+    }
+
+    /// Install the active search's spec (what the search entry points
+    /// call — an engine can serve searches under different specs over
+    /// its lifetime, and the wire identity must always be the running
+    /// one's).
+    pub fn set_objectives(&self, spec: ObjectiveSpec) {
+        *self.objectives.lock().unwrap() = spec;
+    }
+
+    /// The active search's objective spec (a copy; the spec is small
+    /// and `Copy` by design).
+    pub fn objectives(&self) -> ObjectiveSpec {
+        *self.objectives.lock().unwrap()
     }
 
     /// Override the job-injection order (results are bit-identical
@@ -307,7 +355,20 @@ impl Engine {
             requeued_specs: self.requeued_specs.load(Ordering::Relaxed),
             lost_workers: self.lost_workers.load(Ordering::Relaxed),
             last_tail_ms: self.tail_us.load(Ordering::Relaxed) as f64 / 1e3,
+            last_pipeline_depth: self.eff_pipeline.load(Ordering::Relaxed) as usize,
         }
+    }
+
+    /// Record the effective pipeline window a distributed connection
+    /// settled on (the deepest across the generation's connections
+    /// wins — the stat answers "how much pipelining did we get").
+    pub(crate) fn note_pipeline_depth(&self, depth: usize) {
+        self.eff_pipeline.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Start a fresh per-generation pipeline-depth reading.
+    pub(crate) fn reset_pipeline_depth(&self) {
+        self.eff_pipeline.store(0, Ordering::Relaxed);
     }
 
     /// Record one generation's scheduling tail (seconds).

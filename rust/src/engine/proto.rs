@@ -243,15 +243,26 @@ pub fn quant_from_json(v: &Json) -> Result<LayerQuant, String> {
 /// travels as its rendered text spec — `arch::parser`'s round-trip is
 /// exact (asserted by `spec_roundtrip`), so the worker rebuilds the
 /// identical numerics. `search` identifies the driver's search (a hash
-/// of the arch spec and mapper budgets) and scopes the worker's local
-/// shard-outcome cache; it never affects what is computed, only what
-/// may be *reused*, and reuse is sound because a shard outcome is a
-/// pure function of `(arch, layer, quant, spec)`. Workers predating
-/// the field treat its absence as search 0.
+/// of the arch spec, mapper budgets, and objective-spec identity) and
+/// scopes the worker's local shard-outcome cache; it never affects
+/// what is computed, only what may be *reused*, and reuse is sound
+/// because a shard outcome is a pure function of
+/// `(arch, layer, quant, spec)`. Workers predating the field treat its
+/// absence as search 0.
+///
+/// `objectives` is the driver's canonical objective-spec string
+/// (`engine::Engine::objectives`). Workers never compute objectives,
+/// but they *validate* the field: a worker that cannot parse the spec
+/// (an axis this build does not know) answers with an `error` frame
+/// naming the axis instead of participating in a search whose
+/// objective space it does not share — the loud-failure seam for
+/// mixed-version fleets. Workers predating the field ignore it, which
+/// is sound for exactly the axes that existed then.
 #[allow(clippy::too_many_arguments)]
 pub fn batch(
     id: u64,
     search: u64,
+    objectives: &str,
     arch_spec: &str,
     layer: &ConvLayer,
     q: &LayerQuant,
@@ -262,6 +273,7 @@ pub fn batch(
         ("v", Json::hex_u64(VERSION)),
         ("id", Json::hex_u64(id)),
         ("search", Json::hex_u64(search)),
+        ("objectives", Json::Str(objectives.to_string())),
         ("arch", Json::Str(arch_spec.to_string())),
         ("layer", layer_to_json(layer)),
         ("quant", quant_to_json(q)),
@@ -405,7 +417,7 @@ mod tests {
             },
             42,
         );
-        let msg = batch(7, 0xFEED_5EED, &render_arch(&arch), &l, &q, &specs);
+        let msg = batch(7, 0xFEED_5EED, "edp,error", &render_arch(&arch), &l, &q, &specs);
         let mut buf = Vec::new();
         write_msg(&mut buf, &msg).unwrap();
         let mut cur = std::io::Cursor::new(buf);
@@ -413,6 +425,7 @@ mod tests {
         assert_eq!(msg_type(&back).unwrap(), "batch");
         assert_eq!(back.get("id").as_hex_u64("id").unwrap(), 7);
         assert_eq!(back.get("search").as_hex_u64("search").unwrap(), 0xFEED_5EED);
+        assert_eq!(back.get("objectives").as_str().unwrap(), "edp,error");
         let arch_back = parse_arch(back.get("arch").as_str().unwrap()).unwrap();
         assert_eq!(arch_back, arch);
         assert_eq!(layer_from_json(back.get("layer")).unwrap(), l);

@@ -382,6 +382,19 @@ fn decode_batch(msg: &Json) -> Result<BatchWork, String> {
     }
     let id = msg.get("id").as_hex_u64("batch id")?;
     let search = msg.get("search").as_hex_u64("batch search").unwrap_or(0);
+    // objective-space validation: the worker never computes objectives,
+    // but a spec this build cannot even parse means the fleet is mixed
+    // across incompatible versions — refuse loudly (the driver logs the
+    // error and re-runs locally) rather than serve a search whose
+    // objective space this worker does not share. Absent/empty field =
+    // a driver predating the objective subsystem; its axes are the
+    // default pair every build knows.
+    if let Some(objectives) = msg.get("objectives").as_str() {
+        if !objectives.is_empty() {
+            crate::objective::ObjectiveSpec::parse(objectives)
+                .map_err(|e| format!("batch objectives: {e} (mixed-version fleet?)"))?;
+        }
+    }
     let arch_src = msg.get("arch").as_str().ok_or("batch: missing arch")?;
     let arch = parse_arch(arch_src).map_err(|e| format!("batch arch: {e}"))?;
     let layer = proto::layer_from_json(msg.get("layer"))?;
@@ -636,10 +649,12 @@ impl RemoteClient {
     /// [`Engine::pipeline_depth`](super::Engine::pipeline_depth)
     /// batches ride the connection concurrently, each identified by
     /// its id in the interleaved outcome stream.
+    #[allow(clippy::too_many_arguments)]
     pub fn send_batch(
         &mut self,
         arch_spec: &str,
         search: u64,
+        objectives: &str,
         layer: &ConvLayer,
         q: &LayerQuant,
         specs: &[ShardSpec],
@@ -648,7 +663,7 @@ impl RemoteClient {
         self.next_id += 1;
         proto::write_msg(
             &mut self.writer,
-            &proto::batch(id, search, arch_spec, layer, q, specs),
+            &proto::batch(id, search, objectives, arch_spec, layer, q, specs),
         )?;
         Ok(id)
     }
@@ -703,7 +718,7 @@ impl RemoteClient {
         ledger: &mut BatchLedger,
     ) -> Result<(), String> {
         let specs: Vec<ShardSpec> = ledger.specs().to_vec();
-        let id = self.send_batch(arch_spec, 0, layer, q, &specs)?;
+        let id = self.send_batch(arch_spec, 0, "", layer, q, &specs)?;
         loop {
             match self.recv_event()? {
                 WorkerEvent::Outcome {
@@ -806,9 +821,14 @@ pub fn eval_jobs(
         return;
     }
     let rendered = render_arch(arch);
+    let obj_spec = engine.objectives();
+    let objectives = obj_spec.canonical();
     // scopes the worker-side shard-outcome cache: a pure function of
-    // the arch text and the mapper budgets, so every generation of one
-    // search maps to the same id and repeated specs hit remotely
+    // the arch text, the mapper budgets, and the objective-spec
+    // identity, so every generation of one search maps to the same id
+    // and repeated specs hit remotely — while two searches that agree
+    // on everything but their objective space never share an identity
+    // (mixed-version fleets must fail loudly, not blend)
     let search_id = {
         let mut h = crate::util::Fnv1a::new();
         h.write(rendered.as_bytes());
@@ -816,16 +836,19 @@ pub fn eval_jobs(
         h.write_u64(cfg.valid_target);
         h.write_u64(cfg.max_draws);
         h.write_u64(mapper::effective_shards(cfg) as u64);
+        h.write_u64(obj_spec.hash());
         h.finish()
     };
     let next = AtomicUsize::new(0);
     let timeout = worker_timeout();
     let depth = engine.pipeline_depth().max(1);
+    engine.reset_pipeline_depth();
     std::thread::scope(|sc| {
         for addr in workers {
             let work = &work;
             let next = &next;
             let rendered = &rendered;
+            let objectives = &objectives;
             sc.spawn(move || {
                 let mut client = match RemoteClient::connect(addr, timeout) {
                     Ok(c) => c,
@@ -838,12 +861,42 @@ pub fn eval_jobs(
                 // the window: (batch id, work index) of every batch in
                 // flight on this connection
                 let mut inflight: Vec<(u64, usize)> = Vec::with_capacity(depth);
+                // the *effective* window this connection settled on
+                // (reported to EngineStats at pump exit)
+                let eff_cell = std::cell::Cell::new(depth);
                 let pump = |client: &mut RemoteClient,
                             inflight: &mut Vec<(u64, usize)>|
                  -> Result<(), String> {
+                    // Adaptive depth: the window exists to hide the
+                    // send→first-outcome round trip behind the worker's
+                    // compute, so the depth it needs is
+                    // `ceil(rtt / serve_time) + 1` — one batch being
+                    // served plus enough queued to cover the next
+                    // request's flight time. Measure both per
+                    // connection (EWMA over completed batches: rtt =
+                    // send→first outcome, serve = first outcome→done)
+                    // and clamp the configured depth down to it. A fast
+                    // LAN needs no 64-deep queue, and every batch
+                    // queued behind a slow connection is a batch no
+                    // healthy executor can claim. Placement only:
+                    // results are bit-identical at every depth.
+                    let mut sent_at: Vec<(u64, std::time::Instant)> = Vec::new();
+                    let mut first_out: Vec<(u64, std::time::Instant)> = Vec::new();
+                    let mut rtt_ewma: Option<f64> = None;
+                    let mut serve_ewma: Option<f64> = None;
                     loop {
+                        let eff = match (rtt_ewma, serve_ewma) {
+                            // a near-zero serve time (cache-served
+                            // batches) makes the ratio meaningless:
+                            // keep the configured window
+                            (Some(r), Some(s)) if s > 1e-9 => {
+                                depth.min((r / s).ceil() as usize + 1).max(1)
+                            }
+                            _ => depth,
+                        };
+                        eff_cell.set(eff);
                         // top the window up from the shared claim queue
-                        while inflight.len() < depth {
+                        while inflight.len() < eff {
                             // near the tail, keep the window shallow: a
                             // claimed batch is never reclaimed from a
                             // healthy-but-slow worker, so stacking the
@@ -867,9 +920,14 @@ pub fn eval_jobs(
                             let w = &work[i];
                             let specs: Vec<ShardSpec> =
                                 w.ledger.lock().unwrap().specs().to_vec();
-                            let id = match client
-                                .send_batch(rendered, search_id, w.layer, &w.quant, &specs)
-                            {
+                            let id = match client.send_batch(
+                                rendered,
+                                search_id,
+                                objectives,
+                                w.layer,
+                                &w.quant,
+                                &specs,
+                            ) {
                                 Ok(id) => id,
                                 Err(e) => {
                                     // the claim already happened: record
@@ -881,6 +939,7 @@ pub fn eval_jobs(
                                     return Err(e);
                                 }
                             };
+                            sent_at.push((id, std::time::Instant::now()));
                             inflight.push((id, i));
                         }
                         if inflight.is_empty() {
@@ -894,6 +953,9 @@ pub fn eval_jobs(
                                 if let Some(&(_, wi)) =
                                     inflight.iter().find(|&&(bid, _)| bid == id)
                                 {
+                                    if !first_out.iter().any(|&(bid, _)| bid == id) {
+                                        first_out.push((id, std::time::Instant::now()));
+                                    }
                                     work[wi].ledger.lock().unwrap().deliver(shard, outcome)?;
                                 }
                             }
@@ -903,12 +965,35 @@ pub fn eval_jobs(
                                 {
                                     inflight.remove(pos);
                                     engine.note_remote_job();
+                                    // fold this batch's timings into the
+                                    // EWMAs (α = 1/2): rtt from the send
+                                    // to its first outcome, serve from
+                                    // the first outcome to done
+                                    let now = std::time::Instant::now();
+                                    let sent = sent_at
+                                        .iter()
+                                        .position(|&(bid, _)| bid == id)
+                                        .map(|p| sent_at.swap_remove(p).1);
+                                    let first = first_out
+                                        .iter()
+                                        .position(|&(bid, _)| bid == id)
+                                        .map(|p| first_out.swap_remove(p).1);
+                                    if let (Some(sent), Some(first)) = (sent, first) {
+                                        let rtt = first.duration_since(sent).as_secs_f64();
+                                        let serve = now.duration_since(first).as_secs_f64();
+                                        rtt_ewma =
+                                            Some(rtt_ewma.map_or(rtt, |e| (e + rtt) / 2.0));
+                                        serve_ewma =
+                                            Some(serve_ewma.map_or(serve, |e| (e + serve) / 2.0));
+                                    }
                                 }
                             }
                         }
                     }
                 };
-                if let Err(e) = pump(&mut client, &mut inflight) {
+                let pumped = pump(&mut client, &mut inflight);
+                engine.note_pipeline_depth(eff_cell.get());
+                if let Err(e) = pumped {
                     // every batch still in the window keeps what it
                     // already received; the rest re-runs locally
                     let owed: usize = inflight
@@ -1143,6 +1228,15 @@ mod tests {
                 let cache = MapperCache::new();
                 eval_jobs(&engine, &arch, &layers, &jobs, &cache, &cfg, &[addr]);
                 assert_eq!(cache.len(), layers.len(), "depth={depth} fault={fault:?}");
+                // the adaptive window may clamp below the configured
+                // depth (RTT-derived), never above it, and is always
+                // at least 1 once a connection pumped
+                let st = engine.stats();
+                assert!(
+                    (1..=depth).contains(&st.last_pipeline_depth),
+                    "effective depth {} outside [1, {depth}]",
+                    st.last_pipeline_depth
+                );
                 for job in &jobs {
                     let got = cache.evaluate(&arch, &layers[job.layer_index], &job.quant, &cfg);
                     let want =
@@ -1172,7 +1266,7 @@ mod tests {
         for _ in 0..3 {
             let mut ledger = BatchLedger::new(specs.clone());
             let id = client
-                .send_batch(&rendered, 0xA5A5, &layer, &q, &specs)
+                .send_batch(&rendered, 0xA5A5, "edp,error", &layer, &q, &specs)
                 .expect("send");
             loop {
                 match client.recv_event().expect("event") {
@@ -1235,6 +1329,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn batch_naming_an_unknown_objective_axis_is_refused() {
+        // the mixed-version-fleet seam: a worker that cannot parse the
+        // driver's objective spec answers with an `error` frame naming
+        // the axis instead of executing the batch
+        let (arch, layer, q, cfg) = workload();
+        let addr = spawn_local_worker(WorkerOptions::default()).expect("worker");
+        let mut client = RemoteClient::connect(&addr, Duration::from_secs(10)).expect("connect");
+        let specs = mapper::shard_plan(&cfg, cfg.seed ^ mapper::workload_hash(&layer, &q));
+        let msg = proto::batch(
+            1,
+            0,
+            "edp,flux_capacitance",
+            &render_arch(&arch),
+            &layer,
+            &q,
+            &specs,
+        );
+        proto::write_msg(&mut client.writer, &msg).expect("send");
+        let err = client.recv_event().expect_err("hostile spec must be refused");
+        assert!(err.contains("flux_capacitance"), "{err}");
+        // the connection survives: a well-formed spec still executes
+        let mut ledger = BatchLedger::new(specs);
+        client
+            .run_batch(&render_arch(&arch), &layer, &q, &mut ledger)
+            .expect("well-formed batch after the refused one");
+        assert!(ledger.is_complete());
     }
 
     #[test]

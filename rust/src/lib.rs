@@ -27,6 +27,7 @@ pub mod mapper;
 pub mod mapping;
 pub mod nest;
 pub mod nsga;
+pub mod objective;
 pub mod quant;
 pub mod report;
 #[cfg(feature = "pjrt")]

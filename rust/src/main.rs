@@ -7,13 +7,14 @@
 
 use qmap::accuracy::{AccuracyModel, ProxyAccuracy, ProxyParams};
 use qmap::arch::{presets, Arch};
-use qmap::baselines::{naive_search, proposed_search, uniform_sweep};
+use qmap::baselines::{naive_search, search_with_objectives, uniform_sweep};
 use qmap::coordinator::{experiments, RunConfig};
 use qmap::engine::{driver, Backend, Checkpointer, Engine, WorkerSource};
 use qmap::eval::evaluate_network;
 use qmap::mapper::cache::MapperCache;
 use qmap::mapper::{self, MapperConfig};
 use qmap::mapping::mapspace::MapSpace;
+use qmap::objective::ObjectiveSpec;
 use qmap::quant::{LayerQuant, QuantConfig};
 use qmap::report;
 use qmap::util::cli::Args;
@@ -38,13 +39,22 @@ characterize:
                                                              full-network metrics
   search    [--arch A] [--net N] [--strategy proposed|naive|uniform]
             [--gens 20] [--pop 32] [--offspring 16]
-            [--checkpoint file.json [--resume]]              NSGA-II / baseline search
-            [--workers host:port,...|@fleet.txt]             (append-only journal checkpoint per
-            [--pipeline N]                                   generation; shards fan out to qmap
-                                                             workers — @file is re-read every
-                                                             generation for elastic fleets, N
-                                                             batches pipelined per connection —
-                                                             results bit-identical to local)
+            [--objectives error,energy,weight_words]         NSGA-II / baseline search over a
+            [--checkpoint file.json [--resume]]              named k-objective space (default
+            [--workers host:port,...|@fleet.txt]             edp,error; or QMAP_OBJECTIVES; axes:
+            [--pipeline N] [--svg PREFIX]                    error energy memory_energy edp
+                                                             cycles weight_words model_size).
+                                                             Append-only journal checkpoint per
+                                                             generation records the spec — resume
+                                                             under another spec is refused;
+                                                             shards fan out to qmap workers —
+                                                             @file is re-read every generation
+                                                             for elastic fleets, N batches
+                                                             pipelined per connection (window
+                                                             auto-clamps to measured RTT) —
+                                                             results bit-identical to local.
+                                                             --svg writes every 2-D projection
+                                                             of the k-D front as PREFIX_*.svg
 
 distributed:
   worker    --listen HOST:PORT [--stdin-close]               serve mapper shard batches to a
@@ -463,15 +473,26 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
     nsga.generations = args.usize_or("gens", nsga.generations);
     nsga.population = args.usize_or("pop", nsga.population);
     nsga.offspring = args.usize_or("offspring", nsga.offspring);
+    // the run's objective space: --objectives beats QMAP_OBJECTIVES
+    // (already folded into rc) beats the paper's edp,error default
+    let objectives = match args.get("objectives") {
+        Some(s) => match ObjectiveSpec::parse(s) {
+            Ok(spec) => spec,
+            Err(e) => return fail(e),
+        },
+        None => rc.objectives,
+    };
 
-    let engine = build_engine(rc.threads, worker_source(args), args);
+    let engine =
+        build_engine(rc.threads, worker_source(args), args).with_objectives(objectives);
     let distributed = matches!(engine.backend(), Backend::Distributed { .. });
     let cache = MapperCache::new();
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
     let strategy = args.str_or("strategy", "proposed");
+    let axis0 = objectives.axes()[0].name();
     let progress = |g: usize, pop: &[qmap::nsga::Individual]| {
         let best = pop.iter().map(|i| i.objectives[0]).fold(f64::INFINITY, f64::min);
-        eprintln!("gen {g:>3}: best EDP {best:.3e}");
+        eprintln!("gen {g:>3}: best {axis0} {best:.3e}");
     };
     if args.flag("resume") && args.get("checkpoint").is_none() {
         return fail("--resume needs --checkpoint FILE");
@@ -482,6 +503,25 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
             "--checkpoint is only supported with --strategy proposed (got '{strategy}')"
         ));
     }
+    if strategy != "proposed"
+        && (args.get("objectives").is_some() || objectives != ObjectiveSpec::default())
+    {
+        // naive pins its own (model_size, error) axes and uniform has
+        // none — an ignored flag (or a silently dropped
+        // QMAP_OBJECTIVES) would be worse than a refusal
+        return fail(format!(
+            "--objectives / QMAP_OBJECTIVES is only supported with --strategy proposed \
+             (got '{strategy}')"
+        ));
+    }
+    if args.get("svg").is_some() && strategy != "proposed" {
+        // the projections are drawn in the search's objective space;
+        // naive/uniform fronts were not optimized under these axes and
+        // would render as false "Pareto fronts"
+        return fail(format!(
+            "--svg is only supported with --strategy proposed (got '{strategy}')"
+        ));
+    }
     let cands = match (strategy.as_str(), args.get("checkpoint")) {
         ("proposed", Some(path)) => {
             let ckpt = Checkpointer::new(path);
@@ -490,16 +530,16 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
                 eprintln!("resuming from checkpoint {path}");
             }
             match driver::search_resumable(
-                &engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &nsga, &ckpt, resume,
-                progress,
+                &engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &nsga, &objectives,
+                &ckpt, resume, progress,
             ) {
                 Ok(c) => c,
                 Err(e) => return fail(e),
             }
         }
-        ("proposed", None) => {
-            proposed_search(&engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &nsga, progress)
-        }
+        ("proposed", None) => search_with_objectives(
+            &engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &nsga, &objectives, progress,
+        ),
         ("naive", _) => naive_search(&engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &nsga),
         ("uniform", _) => {
             uniform_sweep(&engine, &arch, &layers, &mut acc, &cache, &rc.mapper, true)
@@ -529,6 +569,23 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
         "{}",
         report::pareto_table(&cands, reference.edp, reference.memory_energy_pj, ref_acc)
     );
+    if let Some(prefix) = args.get("svg") {
+        // every 2-D projection of the k-D front (k*(k-1)/2 figures)
+        let pts: Vec<Vec<f64>> = cands
+            .iter()
+            .map(|c| objectives.evaluate(Some(&c.hw), c.accuracy).into_values())
+            .collect();
+        let axis_names: Vec<&str> = objectives.axes().iter().map(|a| a.name()).collect();
+        for (stem, svg) in
+            report::svg::front_projections("Pareto front", &axis_names, &pts)
+        {
+            let path = format!("{prefix}_{stem}.svg");
+            match std::fs::write(&path, svg) {
+                Ok(()) => eprintln!("wrote {path}"),
+                Err(e) => return fail(format!("{path}: {e}")),
+            }
+        }
+    }
     if args.flag("csv") {
         let rows: Vec<Vec<String>> = cands
             .iter()
@@ -757,10 +814,10 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
 #[cfg(not(feature = "pjrt"))]
 fn cmd_train(_args: &Args) -> i32 {
     fail(
-        "the PJRT training runtime is compiled out: add the `xla` and \
-         `anyhow` dependencies to rust/Cargo.toml (path deps to local \
-         checkouts) and rebuild with `--features pjrt` — see the \
-         [features] notes in rust/Cargo.toml",
+        "the PJRT training runtime is compiled out: rebuild with \
+         `--features pjrt` (runs on the deterministic stub backend; a \
+         real PJRT client plugs into runtime::backend::PjrtBackend — \
+         see the [features] notes in rust/Cargo.toml)",
     )
 }
 
@@ -770,7 +827,7 @@ fn cmd_train(args: &Args) -> i32 {
     use qmap::runtime::{default_artifact_dir, Runtime};
     let rt = match Runtime::load(default_artifact_dir()) {
         Ok(r) => r,
-        Err(e) => return fail(format!("{e:#}")),
+        Err(e) => return fail(e),
     };
     println!("platform {}, model {}", rt.platform(), rt.meta.model);
     let data = SyntheticDataset::new(args.u64_or("seed", 0xDA7A));
@@ -784,6 +841,6 @@ fn cmd_train(args: &Args) -> i32 {
     });
     match r {
         Ok(_) => 0,
-        Err(e) => fail(format!("{e:#}")),
+        Err(e) => fail(e),
     }
 }

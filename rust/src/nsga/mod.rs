@@ -7,9 +7,11 @@
 //! * uniform crossover: each integer from either parent with p=1/2;
 //! * mutation: with `p_mutAcc` reset one random layer to 8/8; with
 //!   `p_mut` replace one random integer with a random valid value;
-//! * objectives: minimize CNN error and EDP (both minimized);
+//! * objectives: any k-axis [`crate::objective::ObjectiveSpec`] (the
+//!   paper's default is CNN error and EDP, both minimized);
 //! * selection: fast non-dominated sort + crowding distance.
 
+use crate::objective::ObjectiveVec;
 use crate::quant::{QuantConfig, QMAX, QMIN};
 use crate::util::rng::Rng;
 
@@ -17,8 +19,11 @@ use crate::util::rng::Rng;
 #[derive(Debug, Clone)]
 pub struct Individual {
     pub genome: QuantConfig,
-    /// Objective values, all minimized.
-    pub objectives: Vec<f64>,
+    /// Objective values, all minimized, stamped with the
+    /// [`ObjectiveSpec`](crate::objective::ObjectiveSpec) identity they
+    /// were computed under. Every algorithm below is k-objective: the
+    /// arity comes from the vectors, never from a hardcoded 2.
+    pub objectives: ObjectiveVec,
 }
 
 /// NSGA-II hyper-parameters (paper defaults from §IV).
@@ -100,6 +105,17 @@ pub fn non_dominated_sort(pop: &[Individual]) -> Vec<Vec<usize>> {
 }
 
 /// Crowding distance within one front (NSGA-II diversity measure).
+///
+/// k-objective determinism: each axis's sort breaks ties by the **full
+/// objective vector** (lexicographic), falling back to front order only
+/// for exact duplicates. With a first-axis-only key, partially tied
+/// points (equal energy, different error — routine in a k-D front of
+/// quantized genomes) were ordered by front *position*, so the same
+/// point's distance depended on where it sat in the input — the
+/// selection-level cousin of the `pareto_front_of_points` tie bug. Now
+/// the (vector → distance) map is a pure function of the objective
+/// multiset; only indistinguishable exact duplicates still resolve by
+/// position, which no caller can observe through their values.
 pub fn crowding_distance(pop: &[Individual], front: &[usize]) -> Vec<f64> {
     let m = pop[front[0]].objectives.len();
     let n = front.len();
@@ -107,9 +123,18 @@ pub fn crowding_distance(pop: &[Individual], front: &[usize]) -> Vec<f64> {
     for k in 0..m {
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by(|&a, &b| {
-            pop[front[a]].objectives[k]
-                .partial_cmp(&pop[front[b]].objectives[k])
-                .unwrap_or(std::cmp::Ordering::Equal)
+            let (pa, pb) = (&pop[front[a]].objectives, &pop[front[b]].objectives);
+            match pa[k].partial_cmp(&pb[k]) {
+                Some(std::cmp::Ordering::Equal) | None => {}
+                Some(ord) => return ord,
+            }
+            for (x, y) in pa.iter().zip(pb.iter()) {
+                match x.partial_cmp(y) {
+                    Some(std::cmp::Ordering::Equal) | None => continue,
+                    Some(ord) => return ord,
+                }
+            }
+            std::cmp::Ordering::Equal
         });
         dist[order[0]] = f64::INFINITY;
         dist[order[n - 1]] = f64::INFINITY;
@@ -207,7 +232,7 @@ pub struct SearchState {
 /// and return the generation-0 state.
 pub fn init_state<E>(num_layers: usize, cfg: &NsgaConfig, evaluate: &mut E) -> SearchState
 where
-    E: FnMut(&[QuantConfig]) -> Vec<Vec<f64>>,
+    E: FnMut(&[QuantConfig]) -> Vec<ObjectiveVec>,
 {
     let rng = Rng::new(cfg.seed);
     let genomes: Vec<QuantConfig> = (0..cfg.population)
@@ -234,7 +259,7 @@ where
 /// children, evaluate them, and select the next parent population.
 pub fn step<E>(st: &mut SearchState, cfg: &NsgaConfig, evaluate: &mut E)
 where
-    E: FnMut(&[QuantConfig]) -> Vec<Vec<f64>>,
+    E: FnMut(&[QuantConfig]) -> Vec<ObjectiveVec>,
 {
     let mut offspring: Vec<QuantConfig> = Vec::with_capacity(cfg.offspring);
     for _ in 0..cfg.offspring {
@@ -280,7 +305,7 @@ pub fn run<E, O>(
     mut on_generation: O,
 ) -> Vec<Individual>
 where
-    E: FnMut(&[QuantConfig]) -> Vec<Vec<f64>>,
+    E: FnMut(&[QuantConfig]) -> Vec<ObjectiveVec>,
     O: FnMut(usize, &[Individual]),
 {
     let mut st = init_state(num_layers, cfg, &mut evaluate);
@@ -293,8 +318,17 @@ where
 }
 
 /// Extract the Pareto front (objective vectors) from a set of points,
-/// sorted by the first objective. Utility for reports/benches.
-pub fn pareto_front(points: &[Vec<f64>]) -> Vec<Vec<f64>> {
+/// sorted **lexicographically across all axes** — not just the first.
+/// Utility for reports/benches.
+///
+/// The full-vector sort matters: with a first-axis-only key, points
+/// tying on axis 0 (equal energy, say) kept their *input* order, so two
+/// pipelines producing the same front in different candidate orders
+/// printed different files — latent nondeterminism the serial-vs-
+/// distributed diffs would eventually trip over. The lexicographic key
+/// is total over the non-NaN floats the front can contain (including
+/// `INFINITY`), so the output order is a pure function of the set.
+pub fn pareto_front_of_points(points: &[Vec<f64>]) -> Vec<Vec<f64>> {
     let mut front: Vec<Vec<f64>> = Vec::new();
     for p in points {
         if points.iter().any(|q| dominates(q, p)) {
@@ -304,7 +338,15 @@ pub fn pareto_front(points: &[Vec<f64>]) -> Vec<Vec<f64>> {
             front.push(p.clone());
         }
     }
-    front.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap_or(std::cmp::Ordering::Equal));
+    front.sort_by(|a, b| {
+        for (x, y) in a.iter().zip(b) {
+            match x.partial_cmp(y) {
+                Some(std::cmp::Ordering::Equal) | None => continue,
+                Some(ord) => return ord,
+            }
+        }
+        a.len().cmp(&b.len())
+    });
     front
 }
 
@@ -315,7 +357,7 @@ mod tests {
     fn ind(objs: &[f64]) -> Individual {
         Individual {
             genome: QuantConfig::uniform(2, 8),
-            objectives: objs.to_vec(),
+            objectives: ObjectiveVec::raw(objs.to_vec()),
         }
     }
 
@@ -363,10 +405,10 @@ mod tests {
         ];
         let sel = environmental_select(pop, 4);
         assert_eq!(sel.len(), 4);
-        assert!(sel.iter().all(|i| i.objectives != vec![6.0, 6.0]));
+        assert!(sel.iter().all(|i| i.objectives.values() != [6.0, 6.0]));
         // extremes survive (infinite crowding)
-        assert!(sel.iter().any(|i| i.objectives == vec![1.0, 5.0]));
-        assert!(sel.iter().any(|i| i.objectives == vec![5.0, 1.0]));
+        assert!(sel.iter().any(|i| i.objectives.values() == [1.0, 5.0]));
+        assert!(sel.iter().any(|i| i.objectives.values() == [5.0, 1.0]));
     }
 
     #[test]
@@ -424,7 +466,7 @@ mod tests {
                             ((8 - a.min(8)) as f64).powi(2) + ((8 - w.min(8)) as f64).powi(2)
                         })
                         .sum();
-                    vec![bits, err]
+                    ObjectiveVec::raw(vec![bits, err])
                 })
                 .collect()
         };
@@ -462,7 +504,24 @@ mod tests {
             vec![3.0, 1.0],
             vec![1.0, 4.0], // duplicate
         ];
-        let f = pareto_front(&pts);
+        let f = pareto_front_of_points(&pts);
         assert_eq!(f, vec![vec![1.0, 4.0], vec![2.0, 3.0], vec![3.0, 1.0]]);
+    }
+
+    #[test]
+    fn pareto_front_order_is_stable_under_first_axis_ties() {
+        // three mutually non-dominated 3-axis points sharing the first
+        // coordinate: the output order must be a pure function of the
+        // set, regardless of the input permutation (the old first-axis
+        // sort kept insertion order here)
+        let a = vec![1.0, 5.0, 3.0];
+        let b = vec![1.0, 4.0, 9.0];
+        let c = vec![1.0, 3.0, 10.0];
+        let want = vec![c.clone(), b.clone(), a.clone()];
+        let perms: [[&Vec<f64>; 3]; 3] = [[&a, &b, &c], [&c, &a, &b], [&b, &c, &a]];
+        for perm in perms {
+            let pts: Vec<Vec<f64>> = perm.iter().map(|p| (*p).clone()).collect();
+            assert_eq!(pareto_front_of_points(&pts), want, "input {pts:?}");
+        }
     }
 }

@@ -1,0 +1,405 @@
+//! Typed, pluggable objective space for the multi-objective search.
+//!
+//! The paper's central claim is a *three-way* trade-off among accuracy,
+//! energy, and memory (Fig. 1 plots model size on its own axis), and
+//! HAQ / Hardware-Centric AutoML show that *which* hardware signal you
+//! optimize against materially changes the chosen per-layer bit-widths.
+//! Before this module the search pipeline hardcoded an anonymous
+//! two-element `Vec<f64>` of `(EDP, error)` from `eval::NetworkEval`
+//! through `nsga`, the engine driver, the checkpoint journal, the wire
+//! protocol, and the reports. Now the objective space is a first-class
+//! value:
+//!
+//! * an [`Axis`] is one named minimized quantity, a **total** function
+//!   of the hardware characterization ([`NetworkEval`]) plus the
+//!   accuracy model (an unmappable genome prices every hardware axis at
+//!   `+inf`, never a panic);
+//! * an [`ObjectiveSpec`] is an ordered, duplicate-free list of axes,
+//!   selectable per run (`qmap search --objectives
+//!   error,energy,weight_words` / `QMAP_OBJECTIVES`), with a canonical
+//!   string form and an FNV-1a identity hash that rides checkpoint
+//!   headers and distributed batch messages so a resume or a
+//!   mixed-version fleet under a *different* spec fails loudly instead
+//!   of silently mixing incomparable fronts;
+//! * an [`ObjectiveVec`] is one genome's objective values stamped with
+//!   the spec identity they were computed under — the payload
+//!   `nsga::Individual` carries.
+//!
+//! [`ObjectiveSpec::evaluate`] is the **single evaluation site**: every
+//! former inline `1.0 - accuracy` / `e.edp` computation in the driver,
+//! the baselines, and the experiment arms now routes through it.
+
+use crate::eval::NetworkEval;
+
+/// One named, minimized objective axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    /// CNN classification error, `1 - accuracy` (the accuracy model's
+    /// axis; defined even for unmappable genomes).
+    Error,
+    /// Total inference energy on the target accelerator, pJ.
+    Energy,
+    /// Memory-subsystem energy (spads + buffers + DRAM), pJ.
+    MemoryEnergy,
+    /// Sum of per-layer energy-delay products (the paper's headline
+    /// hardware metric).
+    Edp,
+    /// Total inference latency, cycles.
+    Cycles,
+    /// Packed weight-memory word count (Fig. 1a metric).
+    WeightWords,
+    /// Naïve model size in bits (Fig. 1 x-axis; the hardware-unaware
+    /// baseline's proxy).
+    ModelSize,
+}
+
+impl Axis {
+    /// Every known axis, in canonical declaration order.
+    pub const ALL: [Axis; 7] = [
+        Axis::Error,
+        Axis::Energy,
+        Axis::MemoryEnergy,
+        Axis::Edp,
+        Axis::Cycles,
+        Axis::WeightWords,
+        Axis::ModelSize,
+    ];
+
+    /// The axis name as it appears in spec strings and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Axis::Error => "error",
+            Axis::Energy => "energy",
+            Axis::MemoryEnergy => "memory_energy",
+            Axis::Edp => "edp",
+            Axis::Cycles => "cycles",
+            Axis::WeightWords => "weight_words",
+            Axis::ModelSize => "model_size",
+        }
+    }
+
+    /// Parse one axis name; unknown names list the valid axes.
+    pub fn parse(s: &str) -> Result<Axis, String> {
+        Axis::ALL
+            .into_iter()
+            .find(|a| a.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = Axis::ALL.iter().map(|a| a.name()).collect();
+                format!(
+                    "unknown objective axis '{s}' (valid axes: {})",
+                    names.join(", ")
+                )
+            })
+    }
+
+    /// Price this axis for one genome: the hardware characterization
+    /// (when the genome mapped) plus its accuracy. Total by
+    /// construction — an unmappable genome (`hw == None`) prices every
+    /// hardware axis at `+inf`, exactly how the old inline code treated
+    /// dead genomes, while `error` stays defined.
+    pub fn compute(self, hw: Option<&NetworkEval>, accuracy: f64) -> f64 {
+        if self == Axis::Error {
+            return 1.0 - accuracy;
+        }
+        let Some(e) = hw else {
+            return f64::INFINITY;
+        };
+        match self {
+            Axis::Error => unreachable!("handled above"),
+            Axis::Energy => e.energy_pj,
+            Axis::MemoryEnergy => e.memory_energy_pj,
+            Axis::Edp => e.edp,
+            Axis::Cycles => e.cycles,
+            Axis::WeightWords => e.weight_words as f64,
+            Axis::ModelSize => e.model_size_bits as f64,
+        }
+    }
+}
+
+/// Most axes a spec can name (each at most once).
+pub const MAX_AXES: usize = Axis::ALL.len();
+
+/// An ordered, duplicate-free set of objective axes — the type-level
+/// identity of a search's objective space. `Copy` on purpose: it rides
+/// inside `RunConfig` and `Engine` without ceremony.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObjectiveSpec {
+    axes: [Axis; MAX_AXES],
+    len: u8,
+}
+
+impl Default for ObjectiveSpec {
+    /// The paper's two-objective formulation, `(EDP, error)` — exactly
+    /// the pre-refactor hardcoded convention, including the order.
+    fn default() -> Self {
+        ObjectiveSpec::new(&[Axis::Edp, Axis::Error]).expect("default spec is valid")
+    }
+}
+
+impl std::fmt::Display for ObjectiveSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, a) in self.axes().iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            f.write_str(a.name())?;
+        }
+        Ok(())
+    }
+}
+
+impl ObjectiveSpec {
+    /// A spec from an explicit axis list. At least one axis; at least
+    /// two to make dominance meaningful is *not* required (a 1-axis
+    /// spec degenerates to plain minimization, which is legitimate);
+    /// duplicates are rejected — a repeated axis would double-weight it
+    /// in crowding distance while adding no information to dominance.
+    pub fn new(axes: &[Axis]) -> Result<ObjectiveSpec, String> {
+        if axes.is_empty() {
+            return Err("objective spec: at least one axis is required".into());
+        }
+        if axes.len() > MAX_AXES {
+            return Err(format!(
+                "objective spec: at most {MAX_AXES} axes ({} given)",
+                axes.len()
+            ));
+        }
+        let mut packed = [Axis::Error; MAX_AXES];
+        for (i, &a) in axes.iter().enumerate() {
+            if axes[..i].contains(&a) {
+                return Err(format!("objective spec: duplicate axis '{}'", a.name()));
+            }
+            packed[i] = a;
+        }
+        Ok(ObjectiveSpec {
+            axes: packed,
+            len: axes.len() as u8,
+        })
+    }
+
+    /// Parse the comma-separated grammar of `--objectives` /
+    /// `QMAP_OBJECTIVES`: `error,energy,weight_words`. Whitespace
+    /// around names is tolerated; empty entries, unknown names, and
+    /// duplicates are errors.
+    pub fn parse(s: &str) -> Result<ObjectiveSpec, String> {
+        let mut axes = Vec::new();
+        for part in s.split(',') {
+            let name = part.trim();
+            if name.is_empty() {
+                return Err(format!("objective spec '{s}': empty axis name"));
+            }
+            axes.push(Axis::parse(name)?);
+        }
+        ObjectiveSpec::new(&axes)
+    }
+
+    /// The spec selected by `QMAP_OBJECTIVES`, if any (unset or empty
+    /// means "caller's default"); a malformed value is an error, not a
+    /// silent fallback.
+    pub fn from_env() -> Result<Option<ObjectiveSpec>, String> {
+        match std::env::var("QMAP_OBJECTIVES") {
+            Ok(s) if !s.trim().is_empty() => {
+                ObjectiveSpec::parse(&s).map(Some).map_err(|e| format!("QMAP_OBJECTIVES: {e}"))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    pub fn axes(&self) -> &[Axis] {
+        &self.axes[..self.len as usize]
+    }
+
+    /// Number of objectives (k).
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a spec always has at least one axis
+    }
+
+    /// The canonical comma-separated string (what [`std::fmt::Display`]
+    /// prints, what checkpoints store, what the wire carries).
+    pub fn canonical(&self) -> String {
+        self.to_string()
+    }
+
+    /// FNV-1a identity over the canonical string: equal hashes iff the
+    /// same axes in the same order. Folded into the distributed batch
+    /// identity and compared on checkpoint resume.
+    pub fn hash(&self) -> u64 {
+        crate::util::fnv1a(self.canonical().as_bytes())
+    }
+
+    /// Position of `axis` in this spec, if present — named (not
+    /// positional) access for reports and experiment arms.
+    pub fn index_of(&self, axis: Axis) -> Option<usize> {
+        self.axes().iter().position(|&a| a == axis)
+    }
+
+    /// **The** evaluation site: price one genome's objective vector
+    /// from its (optional) hardware characterization and its accuracy.
+    pub fn evaluate(&self, hw: Option<&NetworkEval>, accuracy: f64) -> ObjectiveVec {
+        ObjectiveVec {
+            spec: self.hash(),
+            values: self.axes().iter().map(|a| a.compute(hw, accuracy)).collect(),
+        }
+    }
+}
+
+/// One genome's objective values, stamped with the [`ObjectiveSpec`]
+/// identity they were computed under. Derefs to `[f64]`, so dominance
+/// and crowding code reads it as a plain slice; the stamp exists so
+/// layers that *persist or transport* objectives (checkpoint, wire)
+/// can refuse to mix incomparable spaces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjectiveVec {
+    /// [`ObjectiveSpec::hash`] of the producing spec; `0` for raw
+    /// vectors (tests, generic point utilities) that never cross a
+    /// persistence boundary.
+    spec: u64,
+    values: Vec<f64>,
+}
+
+impl ObjectiveVec {
+    /// A vector bound to `spec` (lengths must agree).
+    pub fn new(spec: &ObjectiveSpec, values: Vec<f64>) -> ObjectiveVec {
+        assert_eq!(values.len(), spec.len(), "objective arity");
+        ObjectiveVec {
+            spec: spec.hash(),
+            values,
+        }
+    }
+
+    /// An unbound vector (spec id 0) for tests and generic utilities.
+    pub fn raw(values: Vec<f64>) -> ObjectiveVec {
+        ObjectiveVec { spec: 0, values }
+    }
+
+    /// Rebind persisted values to the spec they were checkpointed
+    /// under (the loader validated arity against the stored ident).
+    pub fn rebound(spec: &ObjectiveSpec, values: Vec<f64>) -> ObjectiveVec {
+        ObjectiveVec::new(spec, values)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn into_values(self) -> Vec<f64> {
+        self.values
+    }
+
+    /// The producing spec's identity hash (0 = unbound).
+    pub fn spec_hash(&self) -> u64 {
+        self.spec
+    }
+}
+
+impl std::ops::Deref for ObjectiveVec {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> NetworkEval {
+        NetworkEval {
+            energy_pj: 10.0,
+            memory_energy_pj: 6.0,
+            mac_energy_pj: 4.0,
+            cycles: 100.0,
+            edp: 1e-3,
+            energy_breakdown_pj: [1.0, 2.0, 3.0],
+            weight_words: 42,
+            model_size_bits: 1024,
+        }
+    }
+
+    #[test]
+    fn default_spec_is_the_papers_edp_error_convention() {
+        let spec = ObjectiveSpec::default();
+        assert_eq!(spec.canonical(), "edp,error");
+        let v = spec.evaluate(Some(&hw()), 0.9);
+        assert_eq!(v.values(), &[1e-3, 1.0 - 0.9]);
+    }
+
+    #[test]
+    fn every_axis_prices_its_networkeval_field() {
+        let spec = ObjectiveSpec::new(&Axis::ALL).unwrap();
+        let e = hw();
+        let v = spec.evaluate(Some(&e), 0.75);
+        assert_eq!(
+            v.values(),
+            &[0.25, e.energy_pj, e.memory_energy_pj, e.edp, e.cycles, 42.0, 1024.0]
+        );
+    }
+
+    #[test]
+    fn unmappable_genomes_price_hardware_axes_at_infinity_only() {
+        let spec = ObjectiveSpec::parse("error,energy,weight_words").unwrap();
+        let v = spec.evaluate(None, 0.6);
+        assert_eq!(v[0], 0.4);
+        assert!(v[1].is_infinite() && v[2].is_infinite());
+    }
+
+    #[test]
+    fn parse_roundtrips_and_tolerates_whitespace() {
+        for s in ["edp,error", "error,energy,weight_words", "model_size , error"] {
+            let spec = ObjectiveSpec::parse(s).unwrap();
+            let again = ObjectiveSpec::parse(&spec.canonical()).unwrap();
+            assert_eq!(spec, again);
+            assert_eq!(spec.hash(), again.hash());
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_names() {
+        let err = ObjectiveSpec::parse("edp,warp").unwrap_err();
+        assert!(err.contains("warp") && err.contains("weight_words"), "{err}");
+        assert!(ObjectiveSpec::parse("").is_err());
+        assert!(ObjectiveSpec::parse("edp,,error").is_err());
+        let err = ObjectiveSpec::parse("edp,edp").unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        assert!(ObjectiveSpec::new(&[]).is_err());
+    }
+
+    #[test]
+    fn hash_separates_axis_order_and_content() {
+        let a = ObjectiveSpec::parse("edp,error").unwrap();
+        let b = ObjectiveSpec::parse("error,edp").unwrap();
+        let c = ObjectiveSpec::parse("edp,error,cycles").unwrap();
+        assert_ne!(a.hash(), b.hash());
+        assert_ne!(a.hash(), c.hash());
+        assert_eq!(a.hash(), ObjectiveSpec::default().hash());
+    }
+
+    #[test]
+    fn named_axis_lookup() {
+        let spec = ObjectiveSpec::parse("error,energy,weight_words").unwrap();
+        assert_eq!(spec.index_of(Axis::Energy), Some(1));
+        assert_eq!(spec.index_of(Axis::Edp), None);
+    }
+
+    #[test]
+    fn objective_vec_carries_its_spec_identity() {
+        let spec = ObjectiveSpec::parse("error,energy").unwrap();
+        let v = spec.evaluate(Some(&hw()), 0.5);
+        assert_eq!(v.spec_hash(), spec.hash());
+        assert_eq!(ObjectiveVec::raw(vec![1.0]).spec_hash(), 0);
+        // deref: plain slice reads for the nsga internals
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0], 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "objective arity")]
+    fn binding_wrong_arity_panics() {
+        let spec = ObjectiveSpec::default();
+        let _ = ObjectiveVec::new(&spec, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -298,6 +298,35 @@ pub fn stacked_bars(
     out
 }
 
+/// All 2-D projections of a k-dimensional objective front: one scatter
+/// per axis pair `(i, j)` with `i < j`, in spec order. `axes` names the
+/// axes (the objective spec's canonical names) and each point carries
+/// one value per axis; non-finite coordinates (unmappable genomes'
+/// `+inf` hardware axes) are dropped per-plot by the renderer. Returns
+/// `(file_stem, svg)` pairs, e.g. `("front_error_vs_energy", ...)` —
+/// `k*(k-1)/2` plots, which for the paper's 2-objective default is the
+/// single figure the reports always drew.
+pub fn front_projections(title: &str, axes: &[&str], points: &[Vec<f64>]) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for i in 0..axes.len() {
+        for j in i + 1..axes.len() {
+            let pts: Vec<(f64, f64)> = points
+                .iter()
+                .filter(|p| p.len() == axes.len())
+                .map(|p| (p[i], p[j]))
+                .collect();
+            let mut plot = Plot::new(
+                &format!("{title}: {} vs {}", axes[i], axes[j]),
+                axes[i],
+                axes[j],
+            );
+            plot.scatter("front", &pts);
+            out.push((format!("front_{}_vs_{}", axes[i], axes[j]), plot.render()));
+        }
+    }
+    out
+}
+
 fn fmt_tick(v: f64) -> String {
     if v == 0.0 {
         return "0".into();
@@ -369,6 +398,33 @@ mod tests {
         );
         assert_eq!(svg.matches("<rect").count(), 1 + 4 + 2); // bg + bars + legend
         assert!(svg.contains("</svg>"));
+    }
+
+    #[test]
+    fn three_objective_front_yields_three_projections() {
+        let axes = ["error", "energy", "weight_words"];
+        let pts = vec![
+            vec![0.1, 5.0, 100.0],
+            vec![0.2, 4.0, 90.0],
+            vec![0.3, f64::INFINITY, 80.0], // unmappable: dropped where non-finite
+        ];
+        let figs = front_projections("3-obj front", &axes, &pts);
+        assert_eq!(figs.len(), 3); // C(3,2)
+        let names: Vec<&str> = figs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "front_error_vs_energy",
+                "front_error_vs_weight_words",
+                "front_energy_vs_weight_words"
+            ]
+        );
+        for (_, svg) in &figs {
+            assert!(svg.starts_with("<svg") && svg.ends_with("</svg>"));
+            assert!(!svg.contains("NaN") && !svg.contains("inf"));
+        }
+        // the 2-objective default degenerates to the single usual plot
+        assert_eq!(front_projections("t", &["edp", "error"], &[]).len(), 1);
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! The PJRT seam: a minimal executor trait plus a **deterministic stub
+//! implementation**, so the `pjrt` feature compiles (and its tests run)
+//! without the unvendorable `xla` bindings.
+//!
+//! The ROADMAP's runtime item was stuck on a hard dependency: the real
+//! PJRT path needs the `xla_extension` C++ toolchain, which cannot ride
+//! an offline build. This module inverts the dependency — `Runtime`
+//! talks to a [`PjrtBackend`] trait whose contract is exactly the two
+//! artifacts the AOT pipeline produces (a train step and an eval step
+//! over flat host buffers), and ships a [`StubBackend`] that implements
+//! the contract with pure, deterministic Rust math. A real
+//! `xla`-backed implementation drops in behind the same trait (as a
+//! path-dependency build of this file's sibling; see `Cargo.toml`'s
+//! `[features]` notes) without touching any caller.
+//!
+//! ## Stub semantics
+//!
+//! The stub models QAT as quantized regression toward a fixed,
+//! seed-derived target vector `t`:
+//!
+//! * `q(p, b)` fake-quantizes a parameter to a `b`-bit lattice
+//!   (`step = 2^(1-b)`), with the genome's per-layer `qw` selecting the
+//!   lattice for each contiguous parameter chunk;
+//! * **loss** = `mean((q(p_i) - t_i)^2)` + an activation penalty
+//!   `mean(4^(2 - qa_l)) * 1e-2` + a `0.01` floor (losses are positive);
+//! * **train** applies one straight-through-estimator SGD step,
+//!   `p_i -= lr * (2 (q(p_i) - t_i) + batch_noise_i)`, so loss falls
+//!   geometrically toward a bit-width-dependent floor — more bits, a
+//!   finer lattice, a lower floor, exactly the monotonicity the
+//!   integration tests (and the proxy-accuracy calibration story)
+//!   need;
+//! * **eval** reports `correct = batch / (1 + loss)` — a smooth,
+//!   deterministic stand-in for top-1 counts, bounded by the batch.
+//!
+//! Everything is a pure function of the inputs (the batch noise is
+//! FNV-hashed from the batch bytes), so repeated executions are
+//! bit-identical — the property every suite in this repo leans on.
+
+/// One operand of an executable call, as flat host data (what PJRT
+/// calls a host literal). The real backend copies these to device
+/// buffers; the stub reads them in place.
+pub enum Operand<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    Scalar(f32),
+}
+
+/// Which AOT artifact an HLO text file is. The real backend ignores
+/// this (the HLO itself is the program); the stub keys its deterministic
+/// math off it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `train_step.hlo.txt`: `(params, x, y, qa, qw, lr) -> new_params`.
+    TrainStep,
+    /// `eval_step.hlo.txt`: `(params, x, y, qa, qw) -> (correct, loss)`.
+    EvalStep,
+}
+
+/// A loaded executable: one artifact, callable over flat buffers.
+/// Outputs are flat `f32` buffers in artifact order (`train` returns
+/// `[new_params]`, `eval` returns `[correct], [loss]`).
+pub trait PjrtExecutable: Send + Sync {
+    fn execute(&self, args: &[Operand<'_>]) -> Result<Vec<Vec<f32>>, String>;
+}
+
+/// A PJRT client: compiles artifact text into executables.
+pub trait PjrtBackend: Send + Sync {
+    fn platform_name(&self) -> String;
+    fn compile_hlo(
+        &self,
+        hlo_text: &str,
+        kind: ArtifactKind,
+    ) -> Result<Box<dyn PjrtExecutable>, String>;
+}
+
+/// The backend `Runtime::load` uses: the deterministic stub. Swap the
+/// body for a real `xla`-backed client when the bindings are available.
+pub fn default_backend() -> Box<dyn PjrtBackend> {
+    Box::new(StubBackend)
+}
+
+// -------------------------------------------------------------- stub
+
+/// Deterministic pure-Rust stand-in for the CPU PJRT client.
+pub struct StubBackend;
+
+impl PjrtBackend for StubBackend {
+    fn platform_name(&self) -> String {
+        "stub-cpu".into()
+    }
+
+    fn compile_hlo(
+        &self,
+        hlo_text: &str,
+        kind: ArtifactKind,
+    ) -> Result<Box<dyn PjrtExecutable>, String> {
+        if hlo_text.trim().is_empty() {
+            return Err("stub backend: empty HLO artifact".into());
+        }
+        Ok(Box::new(StubExecutable { kind }))
+    }
+}
+
+struct StubExecutable {
+    kind: ArtifactKind,
+}
+
+/// SplitMix64 → uniform f32 in [-0.5, 0.5).
+fn unit(seed: u64) -> f32 {
+    let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+}
+
+/// The fixed regression target for parameter `i` (seeded so it is a
+/// property of the "model", not of any batch).
+fn target(i: usize) -> f32 {
+    0.8 * unit(0x7A26_E7A2 ^ i as u64)
+}
+
+/// Fake-quantize to a `bits`-bit lattice (straight-through lattice of
+/// step `2^(1-bits)`); 16+ bits is treated as continuous.
+fn quantize(p: f32, bits: f32) -> f32 {
+    let b = bits.clamp(1.0, 16.0);
+    if b >= 16.0 {
+        return p;
+    }
+    let step = (1.0f32 - b).exp2();
+    (p / step).round() * step
+}
+
+/// FNV-1a over the batch bytes: the seed of the per-batch gradient
+/// noise (same batch, same noise — determinism end to end).
+fn batch_hash(x: &[f32], y: &[i32]) -> u64 {
+    let mut h = crate::util::Fnv1a::new();
+    for &v in x {
+        h.write(&v.to_le_bytes());
+    }
+    for &v in y {
+        h.write(&v.to_le_bytes());
+    }
+    h.finish()
+}
+
+/// Per-parameter bit-width: `qw[l]` for the l-th contiguous chunk.
+fn bits_for(i: usize, n_params: usize, qw: &[f32]) -> f32 {
+    if qw.is_empty() {
+        return 16.0;
+    }
+    let chunk = (n_params / qw.len()).max(1);
+    qw[(i / chunk).min(qw.len() - 1)]
+}
+
+fn loss_of(params: &[f32], qa: &[f32], qw: &[f32]) -> f32 {
+    let n = params.len().max(1);
+    let mut sq = 0.0f32;
+    for (i, &p) in params.iter().enumerate() {
+        let d = quantize(p, bits_for(i, params.len(), qw)) - target(i);
+        sq += d * d;
+    }
+    let act_pen: f32 = if qa.is_empty() {
+        0.0
+    } else {
+        qa.iter().map(|&b| (2.0 - b.clamp(1.0, 16.0)).exp2().powi(2)).sum::<f32>()
+            / qa.len() as f32
+            * 1e-2
+    };
+    sq / n as f32 + act_pen + 0.01
+}
+
+impl PjrtExecutable for StubExecutable {
+    fn execute(&self, args: &[Operand<'_>]) -> Result<Vec<Vec<f32>>, String> {
+        let f32_arg = |i: usize| -> Result<&[f32], String> {
+            match args.get(i) {
+                Some(Operand::F32(v)) => Ok(*v),
+                _ => Err(format!("stub executable: argument {i} must be f32 data")),
+            }
+        };
+        let i32_arg = |i: usize| -> Result<&[i32], String> {
+            match args.get(i) {
+                Some(Operand::I32(v)) => Ok(*v),
+                _ => Err(format!("stub executable: argument {i} must be i32 data")),
+            }
+        };
+        match self.kind {
+            ArtifactKind::TrainStep => {
+                if args.len() != 6 {
+                    return Err(format!("train step wants 6 operands, got {}", args.len()));
+                }
+                let (params, x, y) = (f32_arg(0)?, f32_arg(1)?, i32_arg(2)?);
+                // qa is validated (arity/type) but only enters through
+                // the eval-side activation penalty, as in the real
+                // artifact (the train step's gradient is weight-side)
+                let (_qa, qw) = (f32_arg(3)?, f32_arg(4)?);
+                let lr = match &args[5] {
+                    Operand::Scalar(v) => *v,
+                    _ => return Err("train step: operand 5 must be the lr scalar".into()),
+                };
+                let noise_seed = batch_hash(x, y);
+                let new_params: Vec<f32> = params
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &p)| {
+                        let grad = 2.0
+                            * (quantize(p, bits_for(i, params.len(), qw)) - target(i))
+                            + 2e-3 * unit(noise_seed ^ i as u64);
+                        p - lr * grad
+                    })
+                    .collect();
+                Ok(vec![new_params])
+            }
+            ArtifactKind::EvalStep => {
+                if args.len() != 5 {
+                    return Err(format!("eval step wants 5 operands, got {}", args.len()));
+                }
+                let (params, _x, y) = (f32_arg(0)?, f32_arg(1)?, i32_arg(2)?);
+                let (qa, qw) = (f32_arg(3)?, f32_arg(4)?);
+                let loss = loss_of(params, qa, qw);
+                let correct = y.len() as f32 / (1.0 + loss);
+                Ok(vec![vec![correct], vec![loss]])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exe(kind: ArtifactKind) -> Box<dyn PjrtExecutable> {
+        StubBackend.compile_hlo("// stub artifact", kind).unwrap()
+    }
+
+    #[test]
+    fn empty_hlo_is_refused() {
+        assert!(StubBackend.compile_hlo("  \n", ArtifactKind::TrainStep).is_err());
+    }
+
+    #[test]
+    fn train_is_deterministic_and_reduces_loss() {
+        let train = exe(ArtifactKind::TrainStep);
+        let eval = exe(ArtifactKind::EvalStep);
+        let mut params: Vec<f32> = (0..256).map(|i| 0.4 * unit(i as u64)).collect();
+        let x = vec![0.5f32; 64];
+        let y = vec![1i32, 2, 3, 4];
+        let qa = vec![8.0f32; 4];
+        let qw = vec![8.0f32; 4];
+        let loss_at = |p: &[f32]| -> f32 {
+            let out = eval
+                .execute(&[
+                    Operand::F32(p),
+                    Operand::F32(&x),
+                    Operand::I32(&y),
+                    Operand::F32(&qa),
+                    Operand::F32(&qw),
+                ])
+                .unwrap();
+            out[1][0]
+        };
+        let l0 = loss_at(&params);
+        for _ in 0..20 {
+            let out = train
+                .execute(&[
+                    Operand::F32(&params),
+                    Operand::F32(&x),
+                    Operand::I32(&y),
+                    Operand::F32(&qa),
+                    Operand::F32(&qw),
+                    Operand::Scalar(0.05),
+                ])
+                .unwrap();
+            params = out.into_iter().next().unwrap();
+        }
+        let l1 = loss_at(&params);
+        assert!(l1 < l0, "loss did not fall: {l0} -> {l1}");
+        // identical inputs, identical outputs, bit for bit
+        let a = train
+            .execute(&[
+                Operand::F32(&params),
+                Operand::F32(&x),
+                Operand::I32(&y),
+                Operand::F32(&qa),
+                Operand::F32(&qw),
+                Operand::Scalar(0.05),
+            ])
+            .unwrap();
+        let b = train
+            .execute(&[
+                Operand::F32(&params),
+                Operand::F32(&x),
+                Operand::I32(&y),
+                Operand::F32(&qa),
+                Operand::F32(&qw),
+                Operand::Scalar(0.05),
+            ])
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fewer_bits_floor_the_loss_higher() {
+        // train to convergence at each width; the coarser lattice (and
+        // activation penalty) must leave more residual loss
+        let train = exe(ArtifactKind::TrainStep);
+        let eval = exe(ArtifactKind::EvalStep);
+        let x = vec![0.25f32; 32];
+        let y = vec![0i32; 2];
+        let loss_after = |bits: f32| -> f32 {
+            let mut params: Vec<f32> = (0..128).map(|i| 0.4 * unit(i as u64)).collect();
+            let q = vec![bits; 4];
+            for _ in 0..60 {
+                let out = train
+                    .execute(&[
+                        Operand::F32(&params),
+                        Operand::F32(&x),
+                        Operand::I32(&y),
+                        Operand::F32(&q),
+                        Operand::F32(&q),
+                        Operand::Scalar(0.05),
+                    ])
+                    .unwrap();
+                params = out.into_iter().next().unwrap();
+            }
+            eval.execute(&[
+                Operand::F32(&params),
+                Operand::F32(&x),
+                Operand::I32(&y),
+                Operand::F32(&q),
+                Operand::F32(&q),
+            ])
+            .unwrap()[1][0]
+        };
+        assert!(loss_after(2.0) > loss_after(8.0));
+    }
+}

@@ -3,14 +3,20 @@
 //! artifacts in `artifacts/` are produced once by `make artifacts`
 //! (`python/compile/aot.py`) and this module is the only consumer.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): HLO *text* is
-//! the interchange format because jax>=0.5 serialized protos use 64-bit
-//! instruction ids that this XLA rejects (see /opt/xla-example/README.md).
+//! Execution goes through the [`backend::PjrtBackend`] trait. The
+//! build ships the deterministic [`backend::StubBackend`] (pure Rust,
+//! no `xla` bindings), so `--features pjrt` compiles and its tests run
+//! offline; a real PJRT client implements the same trait when the
+//! `xla_extension` toolchain is available. HLO *text* remains the
+//! interchange format because jax>=0.5 serialized protos use 64-bit
+//! instruction ids that the vendored XLA rejects (see
+//! /opt/xla-example/README.md).
 
+pub mod backend;
 pub mod qat;
 
 use crate::util::json::{parse, Json};
-use anyhow::{anyhow, bail, Context, Result};
+use backend::{ArtifactKind, Operand, PjrtBackend, PjrtExecutable};
 use std::path::{Path, PathBuf};
 
 /// Parsed `model_meta.json` manifest.
@@ -27,18 +33,18 @@ pub struct ModelMeta {
 }
 
 impl ModelMeta {
-    pub fn from_json(src: &str) -> Result<Self> {
-        let v = parse(src).map_err(|e| anyhow!("model_meta.json: {e}"))?;
-        let need = |k: &str| -> Result<usize> {
+    pub fn from_json(src: &str) -> Result<Self, String> {
+        let v = parse(src).map_err(|e| format!("model_meta.json: {e}"))?;
+        let need = |k: &str| -> Result<usize, String> {
             v.get(k)
                 .as_usize()
-                .ok_or_else(|| anyhow!("manifest missing '{k}'"))
+                .ok_or_else(|| format!("manifest missing '{k}'"))
         };
         Ok(ModelMeta {
             model: v
                 .get("model")
                 .as_str()
-                .ok_or_else(|| anyhow!("manifest missing 'model'"))?
+                .ok_or("manifest missing 'model'")?
                 .to_string(),
             num_layers: need("num_layers")?,
             param_size: need("param_size")?,
@@ -51,37 +57,55 @@ impl ModelMeta {
     }
 }
 
-/// A compiled artifact bundle: PJRT client + train/eval executables +
+/// A compiled artifact bundle: PJRT backend + train/eval executables +
 /// initial parameters.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    train: xla::PjRtLoadedExecutable,
-    eval: xla::PjRtLoadedExecutable,
+    backend: Box<dyn PjrtBackend>,
+    train: Box<dyn PjrtExecutable>,
+    eval: Box<dyn PjrtExecutable>,
     pub meta: ModelMeta,
     pub init_params: Vec<f32>,
 }
 
 impl Runtime {
     /// Load `model_meta.json`, `{train,eval}_step.hlo.txt` and
-    /// `params_init.bin` from an artifact directory.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+    /// `params_init.bin` from an artifact directory, on the default
+    /// backend ([`backend::default_backend`]).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        Self::load_with(backend::default_backend(), dir)
+    }
+
+    /// [`Runtime::load`] on an explicit backend (tests, or a real PJRT
+    /// client built against the `xla` bindings).
+    pub fn load_with(backend: Box<dyn PjrtBackend>, dir: impl AsRef<Path>) -> Result<Self, String> {
         let dir = dir.as_ref();
-        let meta_src = std::fs::read_to_string(dir.join("model_meta.json"))
-            .with_context(|| format!("reading {}/model_meta.json (run `make artifacts`)", dir.display()))?;
+        let meta_src = std::fs::read_to_string(dir.join("model_meta.json")).map_err(|e| {
+            format!(
+                "reading {}/model_meta.json (run `make artifacts`): {e}",
+                dir.display()
+            )
+        })?;
         let meta = ModelMeta::from_json(&meta_src)?;
 
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        let train = Self::compile(&client, &dir.join("train_step.hlo.txt"))?;
-        let eval = Self::compile(&client, &dir.join("eval_step.hlo.txt"))?;
+        let compile = |name: &str, kind: ArtifactKind| -> Result<Box<dyn PjrtExecutable>, String> {
+            let path = dir.join(name);
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("reading {}: {e}", path.display()))?;
+            backend
+                .compile_hlo(&text, kind)
+                .map_err(|e| format!("compiling {}: {e}", path.display()))
+        };
+        let train = compile("train_step.hlo.txt", ArtifactKind::TrainStep)?;
+        let eval = compile("eval_step.hlo.txt", ArtifactKind::EvalStep)?;
 
         let raw = std::fs::read(dir.join("params_init.bin"))
-            .with_context(|| "reading params_init.bin")?;
+            .map_err(|e| format!("reading params_init.bin: {e}"))?;
         if raw.len() != meta.param_size * 4 {
-            bail!(
+            return Err(format!(
                 "params_init.bin: expected {} bytes, got {}",
                 meta.param_size * 4,
                 raw.len()
-            );
+            ));
         }
         let init_params: Vec<f32> = raw
             .chunks_exact(4)
@@ -89,7 +113,7 @@ impl Runtime {
             .collect();
 
         Ok(Runtime {
-            client,
+            backend,
             train,
             eval,
             meta,
@@ -97,33 +121,13 @@ impl Runtime {
         })
     }
 
-    fn compile(client: &xla::PjRtClient, path: &PathBuf) -> Result<xla::PjRtLoadedExecutable> {
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(to_anyhow)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        client.compile(&comp).map_err(to_anyhow)
-    }
-
     pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn x_literal(&self, x: &[f32]) -> Result<xla::Literal> {
-        let m = &self.meta;
-        xla::Literal::vec1(x)
-            .reshape(&[m.batch as i64, m.img as i64, m.img as i64, m.in_ch as i64])
-            .map_err(to_anyhow)
+        self.backend.platform_name()
     }
 
     /// One SGD step. `params` is updated in place; returns the
     /// post-step loss on the same batch (an extra forward pass — the
     /// train artifact returns only `new_params`, see aot.py).
-    ///
-    /// Convenience wrapper that round-trips `params` through the host;
-    /// hot loops should use [`Runtime::train_session`], which keeps the
-    /// parameters resident on the PJRT device between steps.
     pub fn train_step(
         &self,
         params: &mut Vec<f32>,
@@ -132,7 +136,7 @@ impl Runtime {
         qa: &[f32],
         qw: &[f32],
         lr: f32,
-    ) -> Result<f32> {
+    ) -> Result<f32, String> {
         self.check_shapes(params, x, y, qa, qw)?;
         let mut sess = self.train_session(params)?;
         sess.step(x, y, qa, qw, lr)?;
@@ -141,27 +145,21 @@ impl Runtime {
         Ok(loss)
     }
 
-    /// Start a device-resident training session from a host checkpoint.
-    pub fn train_session(&self, params: &[f32]) -> Result<TrainSession<'_>> {
+    /// Start a training session from a host checkpoint. (With a real
+    /// device backend the session is where parameters stay
+    /// device-resident between steps; the trait keeps that invisible
+    /// to callers.)
+    pub fn train_session(&self, params: &[f32]) -> Result<TrainSession<'_>, String> {
         if params.len() != self.meta.param_size {
-            bail!(
+            return Err(format!(
                 "params: expected {} values, got {}",
                 self.meta.param_size,
                 params.len()
-            );
+            ));
         }
-        // the host-to-device copy is asynchronous: the literal must stay
-        // alive until the first sync point (see `in_flight`)
-        let lit = xla::Literal::vec1(params);
-        let buf = self
-            .client
-            .buffer_from_host_literal(None, &lit)
-            .map_err(to_anyhow)?;
         Ok(TrainSession {
             rt: self,
-            params: buf,
-            in_flight: (Vec::new(), vec![lit]),
-            steps_since_sync: 0,
+            params: params.to_vec(),
         })
     }
 
@@ -173,31 +171,27 @@ impl Runtime {
         y: &[i32],
         qa: &[f32],
         qw: &[f32],
-    ) -> Result<(f32, f32)> {
+    ) -> Result<(f32, f32), String> {
         self.check_shapes(params, x, y, qa, qw)?;
-        let args = vec![
-            xla::Literal::vec1(params),
-            self.x_literal(x)?,
-            xla::Literal::vec1(y),
-            xla::Literal::vec1(qa),
-            xla::Literal::vec1(qw),
-        ];
-        let result = self.eval.execute::<xla::Literal>(&args).map_err(to_anyhow)?;
-        Self::unpack_eval(&result[0])
+        let outs = self.eval.execute(&[
+            Operand::F32(params),
+            Operand::F32(x),
+            Operand::I32(y),
+            Operand::F32(qa),
+            Operand::F32(qw),
+        ])?;
+        Self::unpack_eval(&outs)
     }
 
-    fn unpack_eval(outs: &[xla::PjRtBuffer]) -> Result<(f32, f32)> {
-        // the eval artifact returns a (correct, loss) tuple in one buffer
-        // (this PJRT does not untuple roots)
-        if outs.len() != 1 {
-            bail!("eval_step: expected 1 tuple output, got {}", outs.len());
+    fn unpack_eval(outs: &[Vec<f32>]) -> Result<(f32, f32), String> {
+        // the eval artifact returns a (correct, loss) pair
+        if outs.len() != 2 || outs[0].is_empty() || outs[1].is_empty() {
+            return Err(format!(
+                "eval_step: expected (correct, loss) outputs, got {} buffers",
+                outs.len()
+            ));
         }
-        let out = outs[0].to_literal_sync().map_err(to_anyhow)?;
-        let (correct, loss) = out.to_tuple2().map_err(to_anyhow)?;
-        Ok((
-            correct.get_first_element::<f32>().map_err(to_anyhow)?,
-            loss.get_first_element::<f32>().map_err(to_anyhow)?,
-        ))
+        Ok((outs[0][0], outs[1][0]))
     }
 
     fn check_shapes(
@@ -207,154 +201,94 @@ impl Runtime {
         y: &[i32],
         qa: &[f32],
         qw: &[f32],
-    ) -> Result<()> {
+    ) -> Result<(), String> {
         let m = &self.meta;
         if params.len() != m.param_size {
-            bail!("params: expected {} values, got {}", m.param_size, params.len());
+            return Err(format!(
+                "params: expected {} values, got {}",
+                m.param_size,
+                params.len()
+            ));
         }
         let want_x = m.batch * m.img * m.img * m.in_ch;
         if x.len() != want_x {
-            bail!("x: expected {} values, got {}", want_x, x.len());
+            return Err(format!("x: expected {} values, got {}", want_x, x.len()));
         }
         if y.len() != m.batch {
-            bail!("y: expected {} labels, got {}", m.batch, y.len());
+            return Err(format!("y: expected {} labels, got {}", m.batch, y.len()));
         }
         if qa.len() != m.num_layers || qw.len() != m.num_layers {
-            bail!(
+            return Err(format!(
                 "qa/qw: expected {} entries, got {}/{}",
                 m.num_layers,
                 qa.len(),
                 qw.len()
-            );
+            ));
         }
         Ok(())
     }
 }
 
-/// A training loop whose parameters live on the PJRT device: each
+/// A training loop over the session's parameter state. Each
 /// [`TrainSession::step`] feeds the previous step's `new_params` output
-/// buffer straight back into `execute_b`, so only the batch (and the
-/// scalar loss) cross the host boundary (§Perf: ~2x per step on CPU
-/// PJRT vs. the Literal round-trip).
+/// straight back into the next dispatch; only batches (and the scalar
+/// loss) cross the caller boundary.
 pub struct TrainSession<'rt> {
     rt: &'rt Runtime,
-    params: xla::PjRtBuffer,
-    /// Operands (device buffers + host literals) of every dispatch
-    /// since the last sync point. PJRT CPU executes — and performs the
-    /// host-to-device literal copies — asynchronously, and the host
-    /// loop can enqueue many steps ahead of the device queue; freeing
-    /// an argument buffer or a Literal a deferred copy still reads
-    /// corrupts the heap (observed as `literal.size_bytes() ==
-    /// b->size()` CHECK failures). Everything is retained here and
-    /// released at sync points ([`TrainSession::sync`], `eval`,
-    /// `params_to_host`), which `step` inserts automatically every
-    /// [`SYNC_INTERVAL`] dispatches.
-    in_flight: (Vec<xla::PjRtBuffer>, Vec<xla::Literal>),
-    steps_since_sync: u32,
+    params: Vec<f32>,
 }
-
-/// Dispatches between automatic sync points in [`TrainSession::step`]:
-/// bounds in-flight operand memory (~1.7 MB/step) while amortizing the
-/// ~0.85 MB params read-back a sync costs to ~53 KB/step.
-const SYNC_INTERVAL: u32 = 16;
 
 impl TrainSession<'_> {
     /// One SGD step. The updated parameters replace the session's
-    /// device buffer; nothing crosses back to the host. (The train
-    /// artifact intentionally has no loss output — use
-    /// [`TrainSession::eval`] to sample a loss curve.)
-    pub fn step(&mut self, x: &[f32], y: &[i32], qa: &[f32], qw: &[f32], lr: f32) -> Result<()> {
-        let rt = self.rt;
-        let host_args = [
-            rt.x_literal(x)?,
-            xla::Literal::vec1(y),
-            xla::Literal::vec1(qa),
-            xla::Literal::vec1(qw),
-            xla::Literal::scalar(lr),
-        ];
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(6);
-        for lit in &host_args {
-            bufs.push(
-                rt.client
-                    .buffer_from_host_literal(None, lit)
-                    .map_err(to_anyhow)?,
-            );
+    /// state. (The train artifact intentionally has no loss output —
+    /// use [`TrainSession::eval`] to sample a loss curve.)
+    pub fn step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        qa: &[f32],
+        qw: &[f32],
+        lr: f32,
+    ) -> Result<(), String> {
+        self.rt.check_shapes(&self.params, x, y, qa, qw)?;
+        let outs = self.rt.train.execute(&[
+            Operand::F32(&self.params),
+            Operand::F32(x),
+            Operand::I32(y),
+            Operand::F32(qa),
+            Operand::F32(qw),
+            Operand::Scalar(lr),
+        ])?;
+        let new_params = outs
+            .into_iter()
+            .next()
+            .ok_or("train_step: expected 1 output (new_params)")?;
+        if new_params.len() != self.params.len() {
+            return Err(format!(
+                "train_step: new_params has {} values, expected {}",
+                new_params.len(),
+                self.params.len()
+            ));
         }
-        let args: Vec<&xla::PjRtBuffer> = std::iter::once(&self.params)
-            .chain(bufs.iter())
-            .collect();
-        let mut result = rt.train.execute_b(&args).map_err(to_anyhow)?;
-        let outs = &mut result[0];
-        if outs.len() != 1 {
-            bail!("train_step: expected 1 output (new_params), got {}", outs.len());
-        }
-        let old_params = std::mem::replace(&mut self.params, outs.swap_remove(0));
-        // keep this dispatch's operands (incl. the consumed params
-        // buffer) alive until the next sync point
-        self.in_flight.0.extend(bufs);
-        self.in_flight.0.push(old_params);
-        self.in_flight.1.extend(host_args);
-        self.steps_since_sync += 1;
-        if self.steps_since_sync >= SYNC_INTERVAL {
-            self.sync()?;
-        }
+        self.params = new_params;
         Ok(())
     }
 
-    /// Block until all in-flight dispatches have drained, then release
-    /// their retained operands.
-    pub fn sync(&mut self) -> Result<()> {
-        // reading the params buffer back forces completion of the whole
-        // dependency chain (every step writes params)
-        let _ = self.params.to_literal_sync().map_err(to_anyhow)?;
-        self.in_flight.0.clear();
-        self.in_flight.1.clear();
-        self.steps_since_sync = 0;
+    /// Drain any in-flight work (a no-op for host-side backends; kept
+    /// so device-resident implementations have their sync point).
+    pub fn sync(&mut self) -> Result<(), String> {
         Ok(())
     }
 
     /// Evaluate a batch against the session's current parameters.
-    pub fn eval(&mut self, x: &[f32], y: &[i32], qa: &[f32], qw: &[f32]) -> Result<(f32, f32)> {
-        let rt = self.rt;
-        let host_args = [
-            rt.x_literal(x)?,
-            xla::Literal::vec1(y),
-            xla::Literal::vec1(qa),
-            xla::Literal::vec1(qw),
-        ];
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(5);
-        for lit in &host_args {
-            bufs.push(
-                rt.client
-                    .buffer_from_host_literal(None, lit)
-                    .map_err(to_anyhow)?,
-            );
-        }
-        let args: Vec<&xla::PjRtBuffer> = std::iter::once(&self.params)
-            .chain(bufs.iter())
-            .collect();
-        let result = rt.eval.execute_b(&args).map_err(to_anyhow)?;
-        let out = Runtime::unpack_eval(&result[0])?;
-        // unpack_eval synced on the eval output, which depends on the
-        // whole params chain: all retained operands are now drained
-        self.in_flight.0.clear();
-        self.in_flight.1.clear();
-        self.steps_since_sync = 0;
-        Ok(out)
+    pub fn eval(&mut self, x: &[f32], y: &[i32], qa: &[f32], qw: &[f32]) -> Result<(f32, f32), String> {
+        self.rt.eval_step(&self.params, x, y, qa, qw)
     }
 
-    /// Copy the current parameters back to the host.
-    pub fn params_to_host(&mut self) -> Result<Vec<f32>> {
-        let lit = self.params.to_literal_sync().map_err(to_anyhow)?;
-        self.in_flight.0.clear();
-        self.in_flight.1.clear();
-        self.steps_since_sync = 0;
-        lit.to_vec::<f32>().map_err(to_anyhow)
+    /// Copy the current parameters back to the caller.
+    pub fn params_to_host(&mut self) -> Result<Vec<f32>, String> {
+        Ok(self.params.clone())
     }
-}
-
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow!("{e}")
 }
 
 /// Locate the repo's artifact directory: `$QMAP_ARTIFACTS` or
@@ -364,6 +298,37 @@ pub fn default_artifact_dir() -> PathBuf {
         return PathBuf::from(p);
     }
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Write a minimal, self-consistent artifact bundle for the stub
+/// backend: the manifest, two stub HLO files, and a deterministic
+/// `params_init.bin`. Lets `runtime_integration` (and CI) exercise the
+/// whole runtime stack without `make artifacts`' Python toolchain; the
+/// real artifacts, when present, take precedence.
+pub fn write_stub_artifacts(dir: impl AsRef<Path>) -> Result<(), String> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let meta = r#"{"model":"stub_mobilenet_v1","num_layers":28,"param_size":1792,"batch":8,"img":32,"in_ch":3,"num_classes":10,"use_pallas":false}"#;
+    let write = |name: &str, bytes: &[u8]| -> Result<(), String> {
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).map_err(|e| format!("{}: {e}", p.display()))
+    };
+    write("model_meta.json", meta.as_bytes())?;
+    let hlo = "// stub HLO artifact: executed by runtime::backend::StubBackend\n";
+    write("train_step.hlo.txt", hlo.as_bytes())?;
+    write("eval_step.hlo.txt", hlo.as_bytes())?;
+    // deterministic initial params in [-0.4, 0.4] (same SplitMix64 the
+    // stub's target uses a different seed of)
+    let mut params = Vec::with_capacity(1792 * 4);
+    for i in 0..1792u64 {
+        let mut z = (i ^ 0x1217_A9A5).wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        let v = ((z >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 0.8;
+        params.extend_from_slice(&v.to_le_bytes());
+    }
+    write("params_init.bin", &params)
 }
 
 #[cfg(test)]
@@ -391,10 +356,23 @@ mod tests {
     fn load_missing_dir_fails_with_hint() {
         match Runtime::load("/nonexistent/path") {
             Ok(_) => panic!("expected load failure"),
-            Err(err) => assert!(format!("{err:#}").contains("make artifacts")),
+            Err(err) => assert!(err.contains("make artifacts")),
         }
     }
 
-    // Runtime execution tests live in rust/tests/runtime_integration.rs
-    // (they need `make artifacts` to have run).
+    #[test]
+    fn stub_artifacts_roundtrip_through_load() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("qmap_stub_art_{}", std::process::id()));
+        write_stub_artifacts(&dir).unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.meta.num_layers, 28);
+        assert_eq!(rt.init_params.len(), rt.meta.param_size);
+        assert_eq!(rt.platform(), "stub-cpu");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // Full runtime execution tests live in
+    // rust/tests/runtime_integration.rs (they generate stub artifacts
+    // when `make artifacts` has not run).
 }

@@ -65,7 +65,7 @@ impl<'rt> QatAccuracy<'rt> {
     }
 
     /// Fine-tune + evaluate one genome; returns top-1 accuracy.
-    pub fn evaluate(&mut self, qc: &QuantConfig) -> anyhow::Result<f64> {
+    pub fn evaluate(&mut self, qc: &QuantConfig) -> Result<f64, String> {
         let key = qc.encode();
         if let Some(&hit) = self.memo.get(&key) {
             return Ok(hit);
@@ -101,7 +101,7 @@ impl<'rt> QatAccuracy<'rt> {
         steps: u64,
         lr: f32,
         mut on_step: impl FnMut(u64, f32),
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> Result<Vec<f32>, String> {
         let l = rt.meta.num_layers;
         let qa = vec![bits as f32; l];
         let qw = vec![bits as f32; l];

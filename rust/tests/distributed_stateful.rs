@@ -22,11 +22,29 @@ use qmap::mapper::{self, MapperConfig, MapperResult};
 use qmap::mapping::mapspace::MapSpace;
 use qmap::mapping::LayerContext;
 use qmap::nsga::NsgaConfig;
+use qmap::objective::ObjectiveSpec;
 use qmap::quant::{LayerQuant, QuantConfig, QMAX, QMIN};
 use qmap::util::prop::{check_shrink, Config};
 use qmap::util::rng::Rng;
 use qmap::workload::ConvLayer;
 use std::time::Duration;
+
+/// Objective spec for a generated case: `QMAP_OBJECTIVES` pins it (the
+/// CI matrix rides a 3-objective cell); otherwise drawn per case —
+/// serial/distributed/kill-and-resume bit-identity must hold for every
+/// spec.
+fn pick_spec(r: &mut Rng) -> ObjectiveSpec {
+    if let Some(pinned) = ObjectiveSpec::from_env().expect("QMAP_OBJECTIVES") {
+        return pinned;
+    }
+    let pool = [
+        "edp,error",
+        "error,energy,weight_words",
+        "memory_energy,edp,error",
+        "error,energy,edp,model_size",
+    ];
+    ObjectiveSpec::parse(pool[r.below(pool.len() as u64) as usize]).expect("pool spec")
+}
 
 fn small_net() -> Vec<ConvLayer> {
     vec![
@@ -354,6 +372,22 @@ fn any_priority_permutation_and_pipeline_depth_is_bit_identical() {
                 .with_pipeline_depth(c.depth);
             let cache = MapperCache::new();
             let got = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg);
+            // adaptive pipelining is placement-only: the effective
+            // window may clamp below the configured depth, never above
+            // it — and whatever it chose, the results above must not
+            // move (the bit-identity check below)
+            let st = engine.stats();
+            if st.last_pipeline_depth > c.depth {
+                return Err(format!(
+                    "effective pipeline depth {} exceeds configured {} under {c:?}",
+                    st.last_pipeline_depth, c.depth
+                ));
+            }
+            if st.remote_jobs > 0 && st.last_pipeline_depth == 0 {
+                return Err(format!(
+                    "remote jobs completed but no effective depth was recorded under {c:?}"
+                ));
+            }
             for (gi, (a, b)) in reference.iter().zip(&got).enumerate() {
                 match (a, b) {
                     (Some(x), Some(y)) if x == y && x.edp.to_bits() == y.edp.to_bits() => {}
@@ -406,23 +440,28 @@ fn distributed_search_front_equals_the_serial_front() {
         seed: 29,
         ..NsgaConfig::default()
     };
+    // the env-pinned spec when the matrix rides one, else the default —
+    // both engines carry it so the spec hash rides the batch identity
+    let spec = ObjectiveSpec::from_env()
+        .expect("QMAP_OBJECTIVES")
+        .unwrap_or_default();
     let serial = {
-        let engine = Engine::new(1);
+        let engine = Engine::new(1).with_objectives(spec);
         let cache = MapperCache::new();
         let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-        qmap::baselines::proposed_search(
-            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, |_, _| {},
+        qmap::baselines::search_with_objectives(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec, |_, _| {},
         )
     };
     let addrs: Vec<String> = (0..test_worker_count())
         .map(|_| spawn_local_worker(WorkerOptions::default()).expect("loopback worker"))
         .collect();
     let distributed = {
-        let engine = Engine::distributed(2, addrs);
+        let engine = Engine::distributed(2, addrs).with_objectives(spec);
         let cache = MapperCache::new();
         let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-        qmap::baselines::proposed_search(
-            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, |_, _| {},
+        qmap::baselines::search_with_objectives(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec, |_, _| {},
         )
     };
     assert_eq!(front_key(&serial), front_key(&distributed));
@@ -457,35 +496,47 @@ fn kill_and_resume_from_checkpoint_is_bit_identical() {
         seed: 31,
         ..NsgaConfig::default()
     };
-    let reference = {
-        let engine = Engine::new(1);
-        let cache = MapperCache::new();
-        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-        let path = ckpt_path(0);
-        let ckpt = Checkpointer::new(path.as_str());
-        let cands = driver::search_resumable(
-            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt, false,
-            |_, _| {},
-        )
-        .expect("serial reference search");
-        let _ = std::fs::remove_file(&path);
-        front_key(&cands)
-    };
-
+    // serial reference fronts, cached per spec across cases and
+    // shrink steps (the generator pool has at most four entries)
+    let mut references: std::collections::HashMap<u64, Vec<(Vec<u8>, u64)>> =
+        std::collections::HashMap::new();
     check_shrink(
         &Config::from_env(0xD158, 4),
-        |r| (r.range(0, 3), r.range(0, 2), r.next_u64()),
-        |&(stop_after, drop_after, tag)| {
+        |r| (r.range(0, 3), r.range(0, 2), r.next_u64(), pick_spec(r)),
+        |&(stop_after, drop_after, tag, spec)| {
             let mut cands = Vec::new();
             if stop_after > 0 {
-                cands.push((stop_after - 1, drop_after, tag));
+                cands.push((stop_after - 1, drop_after, tag, spec));
             }
             if drop_after > 0 {
-                cands.push((stop_after, drop_after - 1, tag));
+                cands.push((stop_after, drop_after - 1, tag, spec));
+            }
+            if spec != ObjectiveSpec::default() {
+                cands.push((stop_after, drop_after, tag, ObjectiveSpec::default()));
             }
             cands
         },
-        |&(stop_after, drop_after, tag)| {
+        |&(stop_after, drop_after, tag, spec)| {
+            let reference = match references.get(&spec.hash()) {
+                Some(r) => r.clone(),
+                None => {
+                    let engine = Engine::new(1);
+                    let cache = MapperCache::new();
+                    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+                    let path = ckpt_path(tag ^ 1);
+                    let ckpt = Checkpointer::new(path.as_str());
+                    let cands = driver::search_resumable(
+                        &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg,
+                        &spec, &ckpt, false,
+                        |_, _| {},
+                    )
+                    .map_err(|e| format!("reference: {e}"))?;
+                    let _ = std::fs::remove_file(&path);
+                    let r = front_key(&cands);
+                    references.insert(spec.hash(), r.clone());
+                    r
+                }
+            };
             let path = ckpt_path(tag);
             let ckpt = Checkpointer::new(path.as_str());
             let flaky = WorkerOptions {
@@ -498,7 +549,7 @@ fn kill_and_resume_from_checkpoint_is_bit_identical() {
                 let addrs: Vec<String> = (0..test_worker_count())
                     .map(|_| spawn_local_worker(flaky).expect("loopback worker"))
                     .collect();
-                let engine = Engine::distributed(2, addrs);
+                let engine = Engine::distributed(2, addrs).with_objectives(spec);
                 let cache = MapperCache::new();
                 let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
                 let truncated = NsgaConfig {
@@ -506,8 +557,8 @@ fn kill_and_resume_from_checkpoint_is_bit_identical() {
                     ..nsga_cfg
                 };
                 driver::search_resumable(
-                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &truncated, &ckpt,
-                    false,
+                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &truncated, &spec,
+                    &ckpt, false,
                     |_, _| {},
                 )
                 .map_err(|e| format!("phase 1: {e}"))?;
@@ -518,12 +569,12 @@ fn kill_and_resume_from_checkpoint_is_bit_identical() {
                 let addrs: Vec<String> = (0..test_worker_count())
                     .map(|_| spawn_local_worker(flaky).expect("loopback worker"))
                     .collect();
-                let engine = Engine::distributed(2, addrs);
+                let engine = Engine::distributed(2, addrs).with_objectives(spec);
                 let cache = MapperCache::new();
                 let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
                 driver::search_resumable(
-                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt,
-                    true,
+                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec,
+                    &ckpt, true,
                     |_, _| {},
                 )
                 .map_err(|e| format!("phase 2: {e}"))?
@@ -533,11 +584,59 @@ fn kill_and_resume_from_checkpoint_is_bit_identical() {
             if got != reference {
                 return Err(format!(
                     "resumed distributed front differs \
-                     (stop_after={stop_after}, drop_after={drop_after}):\n  \
+                     (stop_after={stop_after}, drop_after={drop_after}, spec={spec}):\n  \
                      got {got:?}\n  want {reference:?}"
                 ));
             }
             Ok(())
         },
     );
+}
+
+/// The acceptance criterion's negative half, end to end: a search
+/// checkpointed under one objective spec refuses to resume under
+/// another, naming both specs — never silently mixing fronts.
+#[test]
+fn resuming_under_a_different_objective_spec_is_a_hard_error() {
+    let arch = toy();
+    let layers = small_net();
+    let map_cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 41,
+        shards: 1,
+    };
+    let nsga_cfg = NsgaConfig {
+        population: 6,
+        offspring: 3,
+        generations: 2,
+        seed: 43,
+        ..NsgaConfig::default()
+    };
+    let spec_a = ObjectiveSpec::parse("error,energy,weight_words").unwrap();
+    let spec_b = ObjectiveSpec::parse("edp,error").unwrap();
+    let path = ckpt_path(0xA11D);
+    let ckpt = Checkpointer::new(path.as_str());
+    {
+        let engine = Engine::new(1).with_objectives(spec_a);
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+        driver::search_resumable(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec_a, &ckpt,
+            false,
+            |_, _| {},
+        )
+        .expect("spec-A search");
+    }
+    let engine = Engine::new(1).with_objectives(spec_b);
+    let cache = MapperCache::new();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+    let err = driver::search_resumable(
+        &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec_b, &ckpt, true,
+        |_, _| {},
+    )
+    .expect_err("mismatched objective spec must refuse to resume");
+    assert!(err.contains("error,energy,weight_words"), "{err}");
+    assert!(err.contains("edp,error"), "{err}");
+    let _ = std::fs::remove_file(&path);
 }

@@ -385,7 +385,7 @@ fn pareto_front_has_no_dominated_points() {
                 .collect::<Vec<Vec<f64>>>()
         },
         |pts| {
-            let front = qmap::nsga::pareto_front(pts);
+            let front = qmap::nsga::pareto_front_of_points(pts);
             if front.is_empty() {
                 return Err("front empty for nonempty input".into());
             }

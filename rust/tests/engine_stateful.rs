@@ -14,10 +14,29 @@ use qmap::eval::evaluate_network;
 use qmap::mapper::cache::MapperCache;
 use qmap::mapper::MapperConfig;
 use qmap::nsga::NsgaConfig;
+use qmap::objective::ObjectiveSpec;
 use qmap::quant::{QuantConfig, QMAX, QMIN};
 use qmap::util::prop::{check_shrink, Config};
 use qmap::util::rng::Rng;
 use qmap::workload::ConvLayer;
+
+/// Objective spec for a generated script: `QMAP_OBJECTIVES` pins it
+/// (the CI matrix rides a 3-objective cell); otherwise drawn from a
+/// pool spanning 2-, 3-, and 4-axis spaces. The repo invariant —
+/// checkpointed/parallel runs bit-identical to serial — must hold for
+/// every spec, so the spec is part of the generated input.
+fn pick_spec(r: &mut Rng) -> ObjectiveSpec {
+    if let Some(pinned) = ObjectiveSpec::from_env().expect("QMAP_OBJECTIVES") {
+        return pinned;
+    }
+    let pool = [
+        "edp,error",
+        "error,energy,weight_words",
+        "memory_energy,edp,error",
+        "error,energy,edp,model_size",
+    ];
+    ObjectiveSpec::parse(pool[r.below(pool.len() as u64) as usize]).expect("pool spec")
+}
 
 fn small_net() -> Vec<ConvLayer> {
     vec![
@@ -197,38 +216,51 @@ fn checkpoint_restore_mid_search_is_bit_identical() {
         k
     };
 
-    // the uninterrupted reference, serial engine
-    let reference = {
-        let engine = Engine::new(1);
-        let cache = MapperCache::new();
-        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-        let path = ckpt_path(0);
-        let ckpt = Checkpointer::new(path.as_str());
-        let cands = driver::search_resumable(
-            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt, false,
-            |_, _| {},
-        )
-        .expect("uninterrupted search");
-        let _ = std::fs::remove_file(&path);
-        front_key(&cands)
-    };
-
+    // the uninterrupted serial reference fronts, one per spec the
+    // generator can draw (computed lazily, cached across cases and
+    // shrink steps — the pool has at most four entries)
+    let mut references: std::collections::HashMap<u64, Vec<(Vec<u8>, u64)>> =
+        std::collections::HashMap::new();
     check_shrink(
         &Config::from_env(0xE6E2, 6),
-        |r| (r.range(0, 4), pick_workers(r), r.next_u64()),
-        |&(stop_after, workers, tag)| {
-            // shrink toward the earliest interruption and the serial
-            // engine, keeping the checkpoint-file tag stable
+        |r| (r.range(0, 4), pick_workers(r), r.next_u64(), pick_spec(r)),
+        |&(stop_after, workers, tag, spec)| {
+            // shrink toward the earliest interruption, the serial
+            // engine, and the default objective space, keeping the
+            // checkpoint-file tag stable
             let mut cands = Vec::new();
             if stop_after > 0 {
-                cands.push((stop_after - 1, workers, tag));
+                cands.push((stop_after - 1, workers, tag, spec));
             }
             if workers > 1 {
-                cands.push((stop_after, workers - 1, tag));
+                cands.push((stop_after, workers - 1, tag, spec));
+            }
+            if spec != ObjectiveSpec::default() {
+                cands.push((stop_after, workers, tag, ObjectiveSpec::default()));
             }
             cands
         },
-        |&(stop_after, workers, tag)| {
+        |&(stop_after, workers, tag, spec)| {
+            let reference = match references.get(&spec.hash()) {
+                Some(r) => r.clone(),
+                None => {
+                    let engine = Engine::new(1);
+                    let cache = MapperCache::new();
+                    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+                    let path = ckpt_path(tag ^ 1);
+                    let ckpt = Checkpointer::new(path.as_str());
+                    let cands = driver::search_resumable(
+                        &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg,
+                        &spec, &ckpt, false,
+                        |_, _| {},
+                    )
+                    .map_err(|e| format!("reference: {e}"))?;
+                    let _ = std::fs::remove_file(&path);
+                    let r = front_key(&cands);
+                    references.insert(spec.hash(), r.clone());
+                    r
+                }
+            };
             let path = ckpt_path(tag);
             let ckpt = Checkpointer::new(path.as_str());
             // phase 1: run, but stop after `stop_after` generations
@@ -241,8 +273,8 @@ fn checkpoint_restore_mid_search_is_bit_identical() {
                     ..nsga_cfg
                 };
                 driver::search_resumable(
-                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &truncated, &ckpt,
-                    false,
+                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &truncated, &spec,
+                    &ckpt, false,
                     |_, _| {},
                 )
                 .map_err(|e| format!("phase 1: {e}"))?;
@@ -253,8 +285,8 @@ fn checkpoint_restore_mid_search_is_bit_identical() {
                 let cache = MapperCache::new();
                 let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
                 driver::search_resumable(
-                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt,
-                    true,
+                    &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec,
+                    &ckpt, true,
                     |_, _| {},
                 )
                 .map_err(|e| format!("phase 2: {e}"))?
@@ -263,8 +295,8 @@ fn checkpoint_restore_mid_search_is_bit_identical() {
             let got = front_key(&resumed);
             if got != reference {
                 return Err(format!(
-                    "resumed front differs (stop_after={stop_after}, workers={workers}):\n\
-                     got {got:?}\nwant {reference:?}"
+                    "resumed front differs (stop_after={stop_after}, workers={workers}, \
+                     spec={spec}):\ngot {got:?}\nwant {reference:?}"
                 ));
             }
             Ok(())
@@ -293,12 +325,16 @@ fn checkpointing_does_not_perturb_the_search() {
         ..NsgaConfig::default()
     };
     let engine = Engine::new(2);
+    // the env-pinned spec when the matrix rides one, else the default
+    let spec = ObjectiveSpec::from_env()
+        .expect("QMAP_OBJECTIVES")
+        .unwrap_or_default();
 
     let plain = {
         let cache = MapperCache::new();
         let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
-        qmap::baselines::proposed_search(
-            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, |_, _| {},
+        qmap::baselines::search_with_objectives(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec, |_, _| {},
         )
     };
     let path = ckpt_path(0xC0);
@@ -307,7 +343,8 @@ fn checkpointing_does_not_perturb_the_search() {
         let cache = MapperCache::new();
         let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
         driver::search_resumable(
-            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &ckpt, false,
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec, &ckpt,
+            false,
             |_, _| {},
         )
         .expect("checkpointed search")

@@ -1,0 +1,405 @@
+//! k-objective correctness of the NSGA-II internals and the typed
+//! objective space — unit + property tests.
+//!
+//! The tentpole refactor made the objective arity a run-time property
+//! of the `ObjectiveSpec` instead of a hardcoded 2, so `dominates`,
+//! `non_dominated_sort`, crowding distance, environmental selection,
+//! and the front utilities must be *provably* k-objective-correct and
+//! deterministic — including 3- and 4-axis vectors, duplicate points,
+//! infinite crowding at front extremes, and permutation independence
+//! (the property the distributed bit-identity guarantees stand on).
+
+use qmap::nsga::{
+    crowding_distance, dominates, environmental_select, non_dominated_sort,
+    pareto_front_of_points, Individual,
+};
+use qmap::objective::{Axis, ObjectiveSpec, ObjectiveVec};
+use qmap::quant::QuantConfig;
+use qmap::util::prop::check;
+use qmap::util::rng::Rng;
+
+fn ind(objs: Vec<f64>) -> Individual {
+    Individual {
+        genome: QuantConfig::uniform(2, 8),
+        objectives: ObjectiveVec::raw(objs),
+    }
+}
+
+/// A random population of k-objective points on a small integer grid
+/// (small coordinates force plenty of ties and duplicates — the cases
+/// the two-objective era never exercised).
+fn random_points(r: &mut Rng, k: usize) -> Vec<Vec<f64>> {
+    let n = r.range(2, 24);
+    (0..n)
+        .map(|_| (0..k).map(|_| r.below(4) as f64).collect())
+        .collect()
+}
+
+// ------------------------------------------------------------ dominance
+
+/// The textbook definition, written independently of the
+/// implementation: all <= and at least one <.
+fn dominates_naive(a: &[f64], b: &[f64]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+}
+
+#[test]
+fn dominance_matches_the_definition_for_3_and_4_axes() {
+    for k in [3usize, 4] {
+        check(
+            0x0B31 ^ k as u64,
+            400,
+            |r| random_points(r, k),
+            |pts| {
+                for a in pts {
+                    for b in pts {
+                        if dominates(a, b) != dominates_naive(a, b) {
+                            return Err(format!("dominates({a:?}, {b:?}) disagrees"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn dominance_axioms_hold_with_duplicates_and_infinities() {
+    // equal vectors never dominate (duplicates are mutually
+    // non-dominated), dominance is irreflexive and asymmetric, and an
+    // unmappable genome's +inf hardware axes lose to any finite value
+    let a = vec![1.0, 2.0, 3.0];
+    assert!(!dominates(&a, &a));
+    let worse = vec![1.0, 2.0, f64::INFINITY];
+    assert!(dominates(&a, &worse));
+    assert!(!dominates(&worse, &a));
+    let inf2 = vec![f64::INFINITY, 2.0, 3.0];
+    // incomparable: each wins one axis
+    assert!(!dominates(&worse, &inf2) && !dominates(&inf2, &worse));
+}
+
+#[test]
+fn non_dominated_sort_fronts_are_sound_for_k_axes() {
+    for k in [2usize, 3, 4] {
+        check(
+            0x50B7 ^ k as u64,
+            200,
+            |r| random_points(r, k),
+            |pts| {
+                let pop: Vec<Individual> = pts.iter().map(|p| ind(p.clone())).collect();
+                let fronts = non_dominated_sort(&pop);
+                // partition: every index appears exactly once
+                let mut seen = vec![false; pop.len()];
+                for f in &fronts {
+                    for &i in f {
+                        if seen[i] {
+                            return Err(format!("index {i} in two fronts"));
+                        }
+                        seen[i] = true;
+                    }
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("sort dropped an individual".into());
+                }
+                // within a front: mutually non-dominated; and every
+                // member of front j>0 is dominated by someone in j-1
+                for (j, f) in fronts.iter().enumerate() {
+                    for &i1 in f {
+                        for &i2 in f {
+                            if dominates(&pop[i1].objectives, &pop[i2].objectives) {
+                                return Err(format!("front {j} not mutually non-dominated"));
+                            }
+                        }
+                        if j > 0
+                            && !fronts[j - 1].iter().any(|&p| {
+                                dominates(&pop[p].objectives, &pop[i1].objectives)
+                            })
+                        {
+                            return Err(format!(
+                                "front {j} member {i1} not dominated by front {}",
+                                j - 1
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+// ------------------------------------------------------------- crowding
+
+#[test]
+fn crowding_extremes_are_infinite_on_every_axis_for_k_objectives() {
+    // a 3-axis front where each axis has a distinct extreme point:
+    // each extreme must pick up an infinite distance
+    let pop = vec![
+        ind(vec![0.0, 5.0, 5.0]),
+        ind(vec![5.0, 0.0, 5.0]),
+        ind(vec![5.0, 5.0, 0.0]),
+        ind(vec![2.0, 2.0, 2.0]), // interior on no axis extreme... but
+                                  // it IS non-extreme on all: finite
+    ];
+    // (all four are mutually non-dominated)
+    let front: Vec<usize> = (0..pop.len()).collect();
+    let d = crowding_distance(&pop, &front);
+    assert!(d[0].is_infinite() && d[1].is_infinite() && d[2].is_infinite());
+    assert!(d[3].is_finite());
+}
+
+#[test]
+fn crowding_handles_duplicate_points_without_nan() {
+    let pop = vec![
+        ind(vec![1.0, 2.0, 3.0]),
+        ind(vec![1.0, 2.0, 3.0]), // exact duplicate
+        ind(vec![3.0, 1.0, 2.0]),
+        ind(vec![2.0, 3.0, 1.0]),
+    ];
+    let front: Vec<usize> = (0..pop.len()).collect();
+    let d = crowding_distance(&pop, &front);
+    assert!(d.iter().all(|x| !x.is_nan()), "{d:?}");
+    // a fully degenerate front (all identical) is all zeros, not NaN
+    let dup = vec![ind(vec![1.0, 1.0, 1.0]); 3];
+    let d = crowding_distance(&dup, &[0, 1, 2]);
+    assert!(d.iter().all(|x| !x.is_nan()), "{d:?}");
+}
+
+/// Exact bit key of one distance value (infinities included).
+fn dist_bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+#[test]
+fn crowding_is_permutation_deterministic_for_3_and_4_axes() {
+    // the distance belongs to the point's objective VECTOR, not to its
+    // position in the front: permuting the front index order must
+    // permute the distances with it for every point whose vector is
+    // unique, and preserve the (vector, distance) multiset overall
+    // (exact duplicates are indistinguishable by value, so only their
+    // copies may trade places). This is the determinism k-objective
+    // selection — and therefore the serial-vs-distributed bit-identity
+    // — rests on; ties on single axes are the norm on a small grid.
+    for k in [3usize, 4] {
+        check(
+            0xC04D ^ k as u64,
+            200,
+            |r| {
+                let pts = random_points(r, k);
+                let mut perm: Vec<usize> = (0..pts.len()).collect();
+                r.shuffle(&mut perm);
+                (pts, perm)
+            },
+            |(pts, perm)| {
+                let pop: Vec<Individual> = pts.iter().map(|p| ind(p.clone())).collect();
+                let front: Vec<usize> = (0..pop.len()).collect();
+                let base = crowding_distance(&pop, &front);
+                let permuted = crowding_distance(&pop, perm);
+                // per-point equality (bitwise) for unique vectors
+                for (slot, &orig_idx) in perm.iter().enumerate() {
+                    let unique = pts
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, p)| *j != orig_idx && **p == pts[orig_idx])
+                        .count()
+                        == 0;
+                    if unique && dist_bits(permuted[slot]) != dist_bits(base[orig_idx]) {
+                        return Err(format!(
+                            "distance of unique point {orig_idx} changed under \
+                             permutation: {} -> {} (k={k})",
+                            base[orig_idx], permuted[slot]
+                        ));
+                    }
+                }
+                // multiset of (vector, distance) preserved exactly
+                let mut m1: Vec<(Vec<u64>, u64)> = front
+                    .iter()
+                    .map(|&i| {
+                        (pts[i].iter().map(|x| x.to_bits()).collect(), dist_bits(base[i]))
+                    })
+                    .collect();
+                let mut m2: Vec<(Vec<u64>, u64)> = perm
+                    .iter()
+                    .enumerate()
+                    .map(|(slot, &i)| {
+                        (
+                            pts[i].iter().map(|x| x.to_bits()).collect(),
+                            dist_bits(permuted[slot]),
+                        )
+                    })
+                    .collect();
+                m1.sort();
+                m2.sort();
+                if m1 != m2 {
+                    return Err(format!(
+                        "(vector, distance) multiset changed under permutation (k={k})"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn environmental_selection_is_input_order_deterministic() {
+    // the same multiset of individuals in the same order always
+    // selects the same survivors (stable sorts end to end) — run the
+    // selection twice and compare exactly
+    check(
+        0x5E1E,
+        150,
+        |r| random_points(r, 3),
+        |pts| {
+            let pop1: Vec<Individual> = pts.iter().map(|p| ind(p.clone())).collect();
+            let pop2 = pop1.clone();
+            let keep = (pts.len() / 2).max(1);
+            let s1: Vec<Vec<f64>> = environmental_select(pop1, keep)
+                .into_iter()
+                .map(|i| i.objectives.values().to_vec())
+                .collect();
+            let s2: Vec<Vec<f64>> = environmental_select(pop2, keep)
+                .into_iter()
+                .map(|i| i.objectives.values().to_vec())
+                .collect();
+            if s1 != s2 {
+                return Err(format!("selection not deterministic: {s1:?} vs {s2:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------ front utilities
+
+#[test]
+fn pareto_front_of_points_is_permutation_invariant_including_order() {
+    // the satellite fix: equal-first-axis points used to keep input
+    // order; now the output (content AND order) is a pure function of
+    // the point set, for any arity
+    for k in [2usize, 3, 4] {
+        check(
+            0xFA0B ^ k as u64,
+            200,
+            |r| {
+                let pts = random_points(r, k);
+                let mut shuffled = pts.clone();
+                r.shuffle(&mut shuffled);
+                (pts, shuffled)
+            },
+            |(pts, shuffled)| {
+                let f1 = pareto_front_of_points(pts);
+                let f2 = pareto_front_of_points(shuffled);
+                if f1 != f2 {
+                    return Err(format!(
+                        "front depends on input order (k={k}):\n{f1:?}\nvs\n{f2:?}"
+                    ));
+                }
+                // soundness: nothing in the front is dominated
+                for a in &f1 {
+                    if pts.iter().any(|q| dominates(q, a)) {
+                        return Err(format!("dominated point {a:?} in front"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+// ----------------------------------------------- spec-driven evaluation
+
+#[test]
+fn spec_evaluation_prices_a_real_network_consistently() {
+    // one real characterization, every axis checked against its
+    // NetworkEval field — the single evaluation site does what the
+    // deleted inline computations did
+    let arch = qmap::arch::presets::toy();
+    let layers = vec![
+        qmap::workload::ConvLayer::conv("c1", 3, 8, 3, 16, 1),
+        qmap::workload::ConvLayer::fc("fc", 16, 10),
+    ];
+    let qc = QuantConfig::uniform(layers.len(), 8);
+    let cache = qmap::mapper::cache::MapperCache::new();
+    let cfg = qmap::mapper::MapperConfig {
+        valid_target: 30,
+        max_draws: 30_000,
+        seed: 3,
+        shards: 1,
+    };
+    let hw = qmap::eval::evaluate_network(&arch, &layers, &qc, &cache, &cfg).unwrap();
+    let spec = ObjectiveSpec::new(&Axis::ALL).unwrap();
+    let v = spec.evaluate(Some(&hw), 0.9);
+    assert_eq!(v[spec.index_of(Axis::Error).unwrap()], 1.0 - 0.9);
+    assert_eq!(v[spec.index_of(Axis::Energy).unwrap()].to_bits(), hw.energy_pj.to_bits());
+    assert_eq!(
+        v[spec.index_of(Axis::MemoryEnergy).unwrap()].to_bits(),
+        hw.memory_energy_pj.to_bits()
+    );
+    assert_eq!(v[spec.index_of(Axis::Edp).unwrap()].to_bits(), hw.edp.to_bits());
+    assert_eq!(v[spec.index_of(Axis::Cycles).unwrap()].to_bits(), hw.cycles.to_bits());
+    assert_eq!(v[spec.index_of(Axis::WeightWords).unwrap()], hw.weight_words as f64);
+    assert_eq!(v[spec.index_of(Axis::ModelSize).unwrap()], hw.model_size_bits as f64);
+    // unmappable: hardware axes infinite, error intact
+    let dead = spec.evaluate(None, 0.4);
+    for (i, axis) in spec.axes().iter().enumerate() {
+        if *axis == Axis::Error {
+            assert_eq!(dead[i], 1.0 - 0.4);
+        } else {
+            assert!(dead[i].is_infinite(), "{axis:?}");
+        }
+    }
+}
+
+#[test]
+fn three_objective_search_produces_a_mutually_nondominated_front() {
+    // a small end-to-end 3-objective search on the toy accelerator:
+    // every returned candidate must be non-dominated under the chosen
+    // axes — the acceptance property the 2-objective era asserted only
+    // for (edp, error)
+    let arch = qmap::arch::presets::toy();
+    let layers = vec![
+        qmap::workload::ConvLayer::conv("c1", 3, 8, 3, 16, 1),
+        qmap::workload::ConvLayer::dw("d1", 8, 3, 16, 1),
+        qmap::workload::ConvLayer::pw("p1", 8, 16, 16),
+        qmap::workload::ConvLayer::fc("fc", 16, 10),
+    ];
+    let spec = ObjectiveSpec::parse("error,energy,weight_words").unwrap();
+    let engine = qmap::engine::Engine::new(2).with_objectives(spec);
+    let cache = qmap::mapper::cache::MapperCache::new();
+    let map_cfg = qmap::mapper::MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 7,
+        shards: 1,
+    };
+    let nsga_cfg = qmap::nsga::NsgaConfig {
+        population: 8,
+        offspring: 4,
+        generations: 3,
+        seed: 11,
+        ..qmap::nsga::NsgaConfig::default()
+    };
+    let mut acc = qmap::accuracy::ProxyAccuracy::new(
+        &layers,
+        qmap::accuracy::ProxyParams::default(),
+    );
+    let cands = qmap::baselines::search_with_objectives(
+        &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec, |_, _| {},
+    );
+    assert!(!cands.is_empty());
+    let pts: Vec<Vec<f64>> = cands
+        .iter()
+        .map(|c| spec.evaluate(Some(&c.hw), c.accuracy).into_values())
+        .collect();
+    for (i, a) in pts.iter().enumerate() {
+        assert_eq!(a.len(), 3);
+        for b in &pts {
+            assert!(
+                !dominates(b, a) || b == a,
+                "candidate {i} dominated under {spec}: {a:?} by {b:?}"
+            );
+        }
+    }
+}

@@ -181,7 +181,13 @@ fn tmp_path(tag: &str) -> String {
 }
 
 fn ident() -> SearchIdent {
-    SearchIdent::new(&toy(), 4, &MapperConfig::default(), &NsgaConfig::default())
+    SearchIdent::new(
+        &toy(),
+        4,
+        &qmap::objective::ObjectiveSpec::default(),
+        &MapperConfig::default(),
+        &NsgaConfig::default(),
+    )
 }
 
 /// A realistic checkpoint document (population with infinite
@@ -195,7 +201,10 @@ fn checkpoint_bytes() -> Vec<u8> {
         pop: (0..3)
             .map(|i| Individual {
                 genome: QuantConfig::uniform(4, 2 + i as u8),
-                objectives: vec![if i == 0 { f64::INFINITY } else { 1.5e-9 * i as f64 }, 0.25],
+                objectives: qmap::objective::ObjectiveVec::raw(vec![
+                    if i == 0 { f64::INFINITY } else { 1.5e-9 * i as f64 },
+                    0.25,
+                ]),
             })
             .collect(),
         rng: Rng::new(0xFEED),

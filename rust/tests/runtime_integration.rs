@@ -1,18 +1,35 @@
 //! PJRT runtime integration: load the AOT artifacts and execute the
-//! train/eval steps from Rust. Requires `make artifacts` to have run;
-//! the tests *fail* (not skip) when artifacts are missing, because the
-//! Makefile's `test` target guarantees them.
+//! train/eval steps from Rust. When `make artifacts` has run, the real
+//! artifacts are used; otherwise a deterministic stub bundle is
+//! generated on the fly (`runtime::write_stub_artifacts`) and executed
+//! by the stub backend — so this suite runs in CI with no Python
+//! toolchain and still pins the full Runtime/TrainSession/QatAccuracy
+//! contract (shapes, determinism, loss descent, bit-width
+//! degradation, memoization).
 
 use qmap::data::SyntheticDataset;
 use qmap::quant::QuantConfig;
 use qmap::runtime::qat::{QatAccuracy, QatBudget};
-use qmap::runtime::{default_artifact_dir, Runtime};
+use qmap::runtime::{default_artifact_dir, write_stub_artifacts, Runtime};
 
 /// PJRT handles are not Sync, so each test compiles its own runtime
-/// (a few seconds per test; acceptable for an integration binary).
+/// (cheap on the stub; a few seconds per test on a real client). The
+/// stub bundle is written exactly once per process — tests run in
+/// parallel, and `fs::write` truncates before writing, so a per-test
+/// rewrite would race another test's `Runtime::load` mid-truncation.
 fn load_rt() -> Runtime {
-    Runtime::load(default_artifact_dir())
-        .expect("artifacts missing or stale — run `make artifacts`")
+    let dir = default_artifact_dir();
+    if dir.join("model_meta.json").exists() {
+        return Runtime::load(dir).expect("artifacts present but stale — run `make artifacts`");
+    }
+    static STUB_DIR: std::sync::OnceLock<std::path::PathBuf> = std::sync::OnceLock::new();
+    let stub = STUB_DIR.get_or_init(|| {
+        let mut d = std::env::temp_dir();
+        d.push(format!("qmap_stub_artifacts_{}", std::process::id()));
+        write_stub_artifacts(&d).expect("stub artifacts");
+        d
+    });
+    Runtime::load(stub).expect("stub artifact bundle must load")
 }
 
 #[test]
