@@ -5,12 +5,13 @@
 //! regresses by more than the configured tolerance.
 //!
 //! Only machine-portable *ratios* are guarded (hot-path speedup,
-//! engine scaling, tail improvement, pipeline speedup, checkpoint
-//! journal-vs-snapshot) — absolute millisecond rows vary with the
-//! runner and would make the guard flaky. The baseline values are
-//! deliberately conservative floors, not aspirations: the guard
-//! exists to catch a real regression (a lost fast path, an accidental
-//! serialization), not to fail on scheduler noise.
+//! batched-vs-scalar speedup, engine scaling, tail improvement,
+//! pipeline speedup, checkpoint journal-vs-snapshot) — absolute
+//! millisecond rows vary with the runner and would make the guard
+//! flaky. The baseline values are deliberately conservative floors,
+//! not aspirations: the guard exists to catch a real regression (a
+//! lost fast path, an accidental serialization), not to fail on
+//! scheduler noise.
 //!
 //! Run: `cargo bench --bench perf_hotpath && cargo bench --bench
 //! perf_guard` (the CI smoke does exactly this, fast profile).

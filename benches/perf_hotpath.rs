@@ -7,6 +7,10 @@
 //!     naive loop reproduces the pre-refactor hot path with the same
 //!     functions it used (`random_mapping`/`check`/`analyze`/
 //!     `estimate`), so the speedup is measured in one environment;
+//!   * the staged batch evaluator (`run_shard`) on the identical
+//!     stream — block draws, spatial pre-check cascade, fused
+//!     check+analyze over survivors — with its per-stage cost split
+//!     and reject rates (`batch_speedup_x` is floor-guarded);
 //!   * sharded single-layer characterization scaling,
 //!   * full-network characterization latency (28 workloads × target
 //!     valid mappings), cold and warm cache,
@@ -103,13 +107,14 @@ fn main() {
     let naive_rate = PIPELINE_DRAWS as f64 / dt_naive;
     println!("  -> {naive_priced} valid priced, {naive_rate:.0} candidates/s/core (naive)");
 
-    let (ctx_priced, dt_ctx) = time(
+    let ((ctx_priced, ctx_best_bits), dt_ctx) = time(
         &format!("mapper: ctx   draw+check+analyze+estimate x {PIPELINE_DRAWS}"),
         || {
             let lctx = LayerContext::new(&arch, layer, &q);
             let mut ectx = EvalContext::for_arch(&arch);
             let mut rng = Rng::new(42);
             let mut priced = 0u64;
+            let mut best: Option<f64> = None;
             for _ in 0..PIPELINE_DRAWS {
                 space.random_mapping_into(&lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
                 if lctx.check(&ectx.mapping, &mut ectx.ext).is_err() {
@@ -117,10 +122,14 @@ fn main() {
                 }
                 analyze_into(&lctx, &ectx.mapping, &mut ectx.ext, &mut ectx.nest);
                 estimate_into(&lctx, &ectx.nest, &mut ectx.est);
-                std::hint::black_box(ectx.est.edp());
+                let edp = ectx.est.edp();
+                std::hint::black_box(edp);
+                if best.map_or(true, |b| edp < b) {
+                    best = Some(edp);
+                }
                 priced += 1;
             }
-            priced
+            (priced, best.map(f64::to_bits))
         },
     );
     let ctx_rate = PIPELINE_DRAWS as f64 / dt_ctx;
@@ -137,6 +146,102 @@ fn main() {
     let ctx_valid_rate = ctx_priced as f64 / dt_ctx;
     println!("  -> {ctx_priced} valid priced, {ctx_rate:.0} candidates/s/core (ctx)");
     println!("  -> hot-path speedup {speedup:.2}x (target >= 3x)");
+
+    // 1c. the staged batch evaluator (`run_shard`: block draws, spatial
+    //     pre-check cascade, fused check+analyze over survivors) on the
+    //     identical candidate stream — the same seed with an unbounded
+    //     valid target walks exactly the draws of row 1b, so valid
+    //     count and winning EDP must agree bit-for-bit.
+    let lctx = LayerContext::new(&arch, layer, &q);
+    let spec = mapper::ShardSpec {
+        seed: 42,
+        valid_target: u64::MAX,
+        max_draws: PIPELINE_DRAWS,
+    };
+    let (batch_out, dt_batch) = time(
+        &format!("mapper: batch draw+cascade+analyze+estimate x {PIPELINE_DRAWS}"),
+        || mapper::run_shard(&space, &lctx, &spec),
+    );
+    assert_eq!(
+        batch_out.valid(),
+        ctx_priced,
+        "batched and scalar paths must accept identical candidate streams"
+    );
+    assert_eq!(batch_out.draws(), PIPELINE_DRAWS);
+    assert_eq!(
+        batch_out.best_edp().map(f64::to_bits),
+        ctx_best_bits,
+        "batched winner must be bit-identical to the scalar winner"
+    );
+    let batch_rate = PIPELINE_DRAWS as f64 / dt_batch;
+    let batch_speedup = batch_rate / ctx_rate.max(1e-12);
+    println!("  -> {} valid priced, {batch_rate:.0} candidates/s/core (batched)", batch_out.valid());
+    println!("  -> batch speedup {batch_speedup:.2}x over the scalar ctx path");
+
+    // 1d. per-stage cost split of the staged pipeline, measured as
+    //     cumulative prefixes over the identical stream (deltas are the
+    //     per-stage cost; clamped at 0 against timer noise), plus the
+    //     cascade's reject rates.
+    let (stage_draw_ms, stage_check_ms, stage_price_ms, reject_rate, spatial_reject_rate) = {
+        let mut ectx = EvalContext::for_arch(&arch);
+        let cum1 = {
+            let mut rng = Rng::new(42);
+            let t0 = Instant::now();
+            for _ in 0..PIPELINE_DRAWS {
+                space.random_mapping_into(&lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
+            }
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        let (cum2, spatial_killed, valid) = {
+            let mut rng = Rng::new(42);
+            let (mut sk, mut v) = (0u64, 0u64);
+            let t0 = Instant::now();
+            for _ in 0..PIPELINE_DRAWS {
+                space.random_mapping_into(&lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
+                if lctx.check_spatial(&ectx.mapping).is_err() {
+                    sk += 1;
+                } else if lctx
+                    .check_tiles_into(&ectx.mapping, &mut ectx.ext, &mut ectx.elems)
+                    .is_ok()
+                {
+                    v += 1;
+                }
+            }
+            (t0.elapsed().as_secs_f64() * 1e3, sk, v)
+        };
+        let cum3 = {
+            let mut rng = Rng::new(42);
+            let t0 = Instant::now();
+            for _ in 0..PIPELINE_DRAWS {
+                space.random_mapping_into(&lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
+                if lctx.check_spatial(&ectx.mapping).is_err()
+                    || lctx
+                        .check_tiles_into(&ectx.mapping, &mut ectx.ext, &mut ectx.elems)
+                        .is_err()
+                {
+                    continue;
+                }
+                qmap::nest::analyze_prefilled(&lctx, &ectx.mapping, &ectx.elems, &mut ectx.nest);
+                estimate_into(&lctx, &ectx.nest, &mut ectx.est);
+                std::hint::black_box(ectx.est.edp());
+            }
+            t0.elapsed().as_secs_f64() * 1e3
+        };
+        assert_eq!(valid, ctx_priced, "cascade must accept the same stream");
+        (
+            cum1,
+            (cum2 - cum1).max(0.0),
+            (cum3 - cum2).max(0.0),
+            1.0 - valid as f64 / PIPELINE_DRAWS as f64,
+            spatial_killed as f64 / PIPELINE_DRAWS as f64,
+        )
+    };
+    println!(
+        "  -> stage split: draw {stage_draw_ms:.1} ms, check {stage_check_ms:.1} ms, \
+         price {stage_price_ms:.1} ms; reject rate {:.1}% ({:.1}% spatial)",
+        reject_rate * 1e2,
+        spatial_reject_rate * 1e2
+    );
 
     // 2. random-search characterization of one layer (2000 valid),
     //    1 shard vs all-core sharding
@@ -468,6 +573,13 @@ fn main() {
     println!("  candidates_per_sec_core      = {ctx_rate:.0}");
     println!("  candidates_per_sec_core_naive= {naive_rate:.0}");
     println!("  hotpath_speedup_x            = {speedup:.2}");
+    println!("  batch_candidates_per_sec_core= {batch_rate:.0}");
+    println!("  batch_speedup_x              = {batch_speedup:.2}");
+    println!("  stage_draw_ms                = {stage_draw_ms:.1}");
+    println!("  stage_check_ms               = {stage_check_ms:.1}");
+    println!("  stage_price_ms               = {stage_price_ms:.1}");
+    println!("  reject_rate                  = {reject_rate:.3}");
+    println!("  spatial_reject_rate          = {spatial_reject_rate:.3}");
     println!("  shard_scaling_x              = {shard_scaling:.2}");
     println!("  network_cold_ms              = {:.1}", dt_cold * 1e3);
     println!("  network_warm_us              = {:.1}", dt_warm * 1e6);
@@ -496,6 +608,17 @@ fn main() {
         ("candidates_per_sec_core", Json::Num(ctx_rate)),
         ("candidates_per_sec_core_naive", Json::Num(naive_rate)),
         ("hotpath_speedup_x", Json::Num(speedup)),
+        // the staged batch evaluator (run_shard) over the identical
+        // stream: block draws + spatial pre-check cascade + fused
+        // check/analyze over survivors (bit-identity asserted above),
+        // with the per-stage cost split and the cascade's reject rates
+        ("batch_candidates_per_sec_core", Json::Num(batch_rate)),
+        ("batch_speedup_x", Json::Num(batch_speedup)),
+        ("stage_draw_ms", Json::Num(stage_draw_ms)),
+        ("stage_check_ms", Json::Num(stage_check_ms)),
+        ("stage_price_ms", Json::Num(stage_price_ms)),
+        ("reject_rate", Json::Num(reject_rate)),
+        ("spatial_reject_rate", Json::Num(spatial_reject_rate)),
         ("shard_scaling_x", Json::Num(shard_scaling)),
         ("threads", Json::Num(threads as f64)),
         ("network_cold_ms", Json::Num(dt_cold * 1e3)),

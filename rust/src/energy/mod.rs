@@ -136,12 +136,17 @@ pub fn estimate_into(lctx: &LayerContext, nest: &NestAnalysis, out: &mut Estimat
     out.level_words.clear();
     out.level_words.resize(nl, 0.0);
 
+    // energy table read from the contiguous `num_levels * 3` slab —
+    // same values as `access_energy[lv][t]`, same accumulation order
+    // (TENSORS is index order), so the sums stay bit-identical to the
+    // naive path while the inner loop indexes one flat buffer.
     for lv in 0..nl {
+        let ae = &lctx.access_energy_flat[lv * 3..lv * 3 + 3];
         for t in TENSORS {
             let a = nest.accesses[lv][t.index()];
             let w = lctx.words_f(t, a.total());
             out.level_words[lv] += w;
-            out.level_energy_pj[lv] += w * lctx.access_energy[lv][t.index()];
+            out.level_energy_pj[lv] += w * ae[t.index()];
         }
     }
 

@@ -28,7 +28,7 @@ use crate::accuracy::AccuracyModel;
 use crate::arch::Arch;
 use crate::baselines::Candidate;
 use crate::eval::{aggregate, NetworkEval};
-use crate::mapper::cache::{CachedEval, MapperCache};
+use crate::mapper::cache::{CachedEval, MapperCache, WorkloadKey};
 use crate::mapper::{self, MapperConfig};
 use crate::mapping::mapspace::MapSpace;
 use crate::mapping::LayerContext;
@@ -43,12 +43,17 @@ use std::time::Instant;
 
 /// One schedulable unit: characterize `layer` under `quant` (canonical
 /// form) on the current architecture. `layer_index` ties the job back
-/// to the network tables; jobs with identical workload hashes are
+/// to the network tables; jobs with identical workload keys are
 /// deduplicated before dispatch.
+///
+/// `key` is the workload's precomputed cache identity: the scheduler,
+/// the cache probes, and the shard-seed derivation all reuse it, so a
+/// job is hashed once when it is built, not once per consumer.
 #[derive(Debug, Clone, Copy)]
 pub struct EvalJob {
     pub layer_index: usize,
     pub quant: LayerQuant,
+    pub key: WorkloadKey,
 }
 
 /// Run one workload search through the cache, executing cache misses on
@@ -79,11 +84,30 @@ fn eval_layer_hinted(
     cfg: &MapperConfig,
     force_split: bool,
 ) -> Option<CachedEval> {
-    if let Some(res) = cache.probe(arch, layer, q, cfg) {
+    let q = q.canonical(arch.word_bits, arch.bit_packing);
+    let wk = WorkloadKey::of(arch, layer, &q);
+    eval_layer_keyed(engine, arch, layer, &q, wk, cache, cfg, force_split)
+}
+
+/// The keyed core of [`eval_layer`]: `q` must be canonical and `wk` its
+/// [`WorkloadKey`]. Probe, search-on-miss, and insert all reuse the
+/// precomputed key — the workload is never re-hashed.
+#[allow(clippy::too_many_arguments)]
+fn eval_layer_keyed(
+    engine: &Engine,
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    wk: WorkloadKey,
+    cache: &MapperCache,
+    cfg: &MapperConfig,
+    force_split: bool,
+) -> Option<CachedEval> {
+    if let Some(res) = cache.probe_key(wk, cfg) {
         return res;
     }
-    let r = search_on_engine_hinted(engine, arch, layer, q, cfg, force_split);
-    cache.insert_search(arch, layer, q, cfg, &r)
+    let r = search_on_engine_keyed(engine, arch, layer, q, wk.whash, cfg, force_split);
+    cache.insert_search_key(wk, cfg, &r)
 }
 
 /// The engine-side twin of [`mapper::search`]: identical decomposition
@@ -116,9 +140,25 @@ fn search_on_engine_hinted(
     force_split: bool,
 ) -> mapper::MapperResult {
     let q = q.canonical(arch.word_bits, arch.bit_packing);
+    let whash = mapper::workload_hash(layer, &q);
+    search_on_engine_keyed(engine, arch, layer, &q, whash, cfg, force_split)
+}
+
+/// The keyed core of [`search_on_engine`]: `q` must be canonical and
+/// `whash` its workload hash (the shard-seed basis), so callers holding
+/// a [`WorkloadKey`] skip the re-canonicalization and re-hash.
+fn search_on_engine_keyed(
+    engine: &Engine,
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    whash: u64,
+    cfg: &MapperConfig,
+    force_split: bool,
+) -> mapper::MapperResult {
     let space = MapSpace::of(arch);
-    let lctx = LayerContext::new(arch, layer, &q);
-    let specs = mapper::shard_plan(cfg, cfg.seed ^ mapper::workload_hash(layer, &q));
+    let lctx = LayerContext::new(arch, layer, q);
+    let specs = mapper::shard_plan(cfg, cfg.seed ^ whash);
     let split = specs.len() > 1
         && (engine.pool().idle_workers() > 0 || (force_split && engine.workers() > 1));
     let outcomes = if split {
@@ -141,7 +181,6 @@ fn search_on_engine_hinted(
 /// placement: every policy produces bit-identical results.
 pub(crate) fn order_jobs(
     engine: &Engine,
-    arch: &Arch,
     layers: &[ConvLayer],
     jobs: &[EvalJob],
     cache: &MapperCache,
@@ -155,7 +194,7 @@ pub(crate) fn order_jobs(
                 .iter()
                 .map(|j| {
                     let layer = &layers[j.layer_index];
-                    (cache.effective_draws(arch, layer, &j.quant, cfg), layer.macs())
+                    (cache.effective_draws_key(j.key, cfg), layer.macs())
                 })
                 .collect();
             idx.sort_by(|&a, &b| key[b].cmp(&key[a]).then(a.cmp(&b)));
@@ -188,35 +227,44 @@ pub fn evaluate_genomes(
     if genomes.is_empty() {
         return Vec::new();
     }
+    // One WorkloadKey per (genome, layer), computed up front: the
+    // alive-check, the dedup map, the scheduler, the cache probes, and
+    // the final assembly all reuse these handles, so a generation's
+    // scheduling pass hashes each workload once, not three-plus times.
+    let keys: Vec<Vec<WorkloadKey>> = genomes
+        .iter()
+        .map(|qc| {
+            assert_eq!(qc.len(), layers.len(), "genome/layer-count mismatch");
+            (0..layers.len())
+                .map(|i| WorkloadKey::of(arch, &layers[i], &qc.layer(i)))
+                .collect()
+        })
+        .collect();
     // A genome with a negative-cached layer is already dead: don't
     // schedule its workloads (a live genome sharing one still will).
     // This restores the serial evaluator's short-circuit economics for
     // repeat offenders; the assembly below still evaluates any
     // uncached layers of a dead genome serially up to the dead layer,
     // exactly as the serial path would.
-    let alive: Vec<bool> = genomes
+    let alive: Vec<bool> = keys
         .iter()
-        .map(|qc| {
-            assert_eq!(qc.len(), layers.len(), "genome/layer-count mismatch");
-            (0..layers.len())
-                .all(|i| cache.probe(arch, &layers[i], &qc.layer(i), cfg) != Some(None))
-        })
+        .map(|ks| ks.iter().all(|&wk| cache.probe_key(wk, cfg) != Some(None)))
         .collect();
     // unique jobs across the live population, in first-encounter order
-    let mut index: FxHashMap<u64, usize> = FxHashMap::default();
+    let mut index: FxHashMap<WorkloadKey, usize> = FxHashMap::default();
     let mut jobs: Vec<EvalJob> = Vec::new();
     for (gi, qc) in genomes.iter().enumerate() {
         if !alive[gi] {
             continue;
         }
         for i in 0..layers.len() {
-            let quant = qc.layer(i).canonical(arch.word_bits, arch.bit_packing);
-            let h = mapper::workload_hash(&layers[i], &quant);
-            if !index.contains_key(&h) {
-                index.insert(h, jobs.len());
+            let wk = keys[gi][i];
+            if !index.contains_key(&wk) {
+                index.insert(wk, jobs.len());
                 jobs.push(EvalJob {
                     layer_index: i,
-                    quant,
+                    quant: qc.layer(i).canonical(arch.word_bits, arch.bit_packing),
+                    key: wk,
                 });
             }
         }
@@ -230,17 +278,18 @@ pub fn evaluate_genomes(
         // with the force-split hint so its shards feed the workers the
         // dry queue is about to idle.
         Backend::Local => {
-            let ordered = order_jobs(engine, arch, layers, &jobs, cache, cfg);
+            let ordered = order_jobs(engine, layers, &jobs, cache, cfg);
             let remaining = AtomicUsize::new(ordered.len());
             let t0 = Instant::now();
             let spans: Vec<(f64, f64)> = engine.map(&ordered, |job| {
                 let claimed = t0.elapsed().as_secs_f64();
                 let tail_mode = remaining.load(Ordering::Relaxed) <= engine.workers();
-                let _ = eval_layer_hinted(
+                let _ = eval_layer_keyed(
                     engine,
                     arch,
                     &layers[job.layer_index],
                     &job.quant,
+                    job.key,
                     cache,
                     cfg,
                     tail_mode,
@@ -270,10 +319,11 @@ pub fn evaluate_genomes(
     // short-circuiting dead genomes exactly like the serial evaluator
     genomes
         .iter()
-        .map(|qc| {
+        .zip(&keys)
+        .map(|(qc, ks)| {
             let mut per: Vec<Option<CachedEval>> = Vec::with_capacity(layers.len());
             for (i, l) in layers.iter().enumerate() {
-                match cache.evaluate(arch, l, &qc.layer(i), cfg) {
+                match cache.evaluate_key(ks[i], arch, l, &qc.layer(i), cfg) {
                     Some(e) => per.push(Some(e)),
                     None => return None, // unmappable layer: genome is dead
                 }
@@ -560,12 +610,16 @@ mod tests {
         let jobs: Vec<EvalJob> = quants
             .iter()
             .enumerate()
-            .map(|(i, &quant)| EvalJob { layer_index: i, quant })
+            .map(|(i, &quant)| EvalJob {
+                layer_index: i,
+                quant,
+                key: WorkloadKey::of(&a, &layers[i], &quant),
+            })
             .collect();
         // cold cache: every job costs max_draws; ties resolve by MACs
         // (descending), then first-encounter order — deterministic
-        let cold1 = order_jobs(&engine, &a, &layers, &jobs, &cache, &c);
-        let cold2 = order_jobs(&engine, &a, &layers, &jobs, &cache, &c);
+        let cold1 = order_jobs(&engine, &layers, &jobs, &cache, &c);
+        let cold2 = order_jobs(&engine, &layers, &jobs, &cache, &c);
         let key = |v: &[EvalJob]| v.iter().map(|j| j.layer_index).collect::<Vec<_>>();
         assert_eq!(key(&cold1), key(&cold2));
         let macs: Vec<u64> = cold1.iter().map(|j| layers[j.layer_index].macs()).collect();
@@ -578,7 +632,7 @@ mod tests {
         // warm one workload: it must sink to the end of the order
         let warm_idx = cold1[0].layer_index;
         cache.evaluate(&a, &layers[warm_idx], &cold1[0].quant, &c);
-        let warm = order_jobs(&engine, &a, &layers, &jobs, &cache, &c);
+        let warm = order_jobs(&engine, &layers, &jobs, &cache, &c);
         assert_eq!(
             warm.last().unwrap().layer_index,
             warm_idx,

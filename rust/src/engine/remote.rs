@@ -44,7 +44,7 @@ use super::proto;
 use super::Engine;
 use crate::arch::parser::{parse_arch, render_arch};
 use crate::arch::Arch;
-use crate::mapper::cache::MapperCache;
+use crate::mapper::cache::{MapperCache, WorkloadKey};
 use crate::mapper::{self, MapperConfig, MapperResult, ShardOutcome, ShardSpec};
 use crate::mapping::mapspace::MapSpace;
 use crate::mapping::LayerContext;
@@ -761,6 +761,9 @@ pub enum WorkerEvent {
 struct Work<'a> {
     layer: &'a ConvLayer,
     quant: LayerQuant,
+    /// The job's precomputed cache identity, carried from the
+    /// [`EvalJob`] so the sweep's insert never re-hashes the workload.
+    key: WorkloadKey,
     ledger: Mutex<BatchLedger>,
 }
 
@@ -793,7 +796,7 @@ pub fn eval_jobs(
     workers: &[String],
 ) {
     // same injection order as the local backend: priority by default
-    let ordered = super::driver::order_jobs(engine, arch, layers, jobs, cache, cfg);
+    let ordered = super::driver::order_jobs(engine, layers, jobs, cache, cfg);
     let work: Vec<Work> = ordered
         .iter()
         .filter_map(|job| {
@@ -803,16 +806,18 @@ pub fn eval_jobs(
             // canonicalizes) must all see the same quant, or a job's
             // bits would depend on which host ran it. evaluate_genomes
             // already sends canonical quants; this keeps direct
-            // callers honest too (and matches search_on_engine).
+            // callers honest too (and matches search_on_engine). The
+            // job's WorkloadKey canonicalized identically when it was
+            // built, so key-based probes and seeds agree with this.
             let quant = job.quant.canonical(arch.word_bits, arch.bit_packing);
-            if cache.probe(arch, layer, &quant, cfg).is_some() {
+            if cache.probe_key(job.key, cfg).is_some() {
                 return None; // already known (positive or negative)
             }
-            let specs =
-                mapper::shard_plan(cfg, cfg.seed ^ mapper::workload_hash(layer, &quant));
+            let specs = mapper::shard_plan(cfg, cfg.seed ^ job.key.whash);
             Some(Work {
                 layer,
                 quant,
+                key: job.key,
                 ledger: Mutex::new(BatchLedger::new(specs)),
             })
         })
@@ -1043,7 +1048,7 @@ pub fn eval_jobs(
             }
             ledger.finalize(|_, spec| mapper::run_shard(&space, &lctx, spec))
         };
-        cache.insert_search(arch, w.layer, &w.quant, cfg, &result);
+        cache.insert_search_key(w.key, cfg, &result);
     }
 }
 
@@ -1170,14 +1175,17 @@ mod tests {
         let (arch, layer, q, cfg) = workload();
         let addr = spawn_local_worker(WorkerOptions::default()).expect("worker");
         let layers = vec![layer.clone(), ConvLayer::fc("fc", 16, 10)];
+        let q8 = LayerQuant::uniform(8).canonical(arch.word_bits, arch.bit_packing);
         let jobs: Vec<EvalJob> = vec![
             EvalJob {
                 layer_index: 0,
                 quant: q,
+                key: WorkloadKey::of(&arch, &layers[0], &q),
             },
             EvalJob {
                 layer_index: 1,
-                quant: LayerQuant::uniform(8).canonical(arch.word_bits, arch.bit_packing),
+                quant: q8,
+                key: WorkloadKey::of(&arch, &layers[1], &q8),
             },
         ];
         let engine = Engine::new(2);
@@ -1208,6 +1216,7 @@ mod tests {
             .map(|i| EvalJob {
                 layer_index: i,
                 quant: q,
+                key: WorkloadKey::of(&arch, &layers[i], &q),
             })
             .collect();
         let serial = MapperCache::new();
@@ -1367,6 +1376,7 @@ mod tests {
         let jobs = vec![EvalJob {
             layer_index: 0,
             quant: q,
+            key: WorkloadKey::of(&arch, &layers[0], &q),
         }];
         let engine = Engine::new(2);
         let cache = MapperCache::new();

@@ -32,6 +32,40 @@ use std::sync::{Mutex, RwLock};
 pub const NUM_SHARDS: usize = 16;
 const SHARD_SHIFT: u32 = 64 - 4; // log2(NUM_SHARDS) top bits
 
+/// Precomputed cache identity of one `(arch, layer, quant)` workload.
+///
+/// `probe`, `effective_draws`, `evaluate`, and `insert_search` each used
+/// to re-canonicalize `q` and re-run the FNV hash from scratch, so one
+/// scheduling pass over a generation hashed every job three-plus times.
+/// Compute this handle once per job with [`WorkloadKey::of`] and pass it
+/// through the `*_key` methods instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkloadKey {
+    /// `workload_hash(layer, canonical q)` — also the mapper's
+    /// shard-seed basis (`cfg.seed ^ whash`).
+    pub whash: u64,
+    /// The cache map key: `whash` continued with the arch name, xored
+    /// with the packing mode.
+    key: u64,
+}
+
+impl WorkloadKey {
+    /// Compute the key for one workload. `q` is canonicalized to its
+    /// packing-equivalence representative internally — the same
+    /// canonicalization `mapper::search` and the cache itself apply, so
+    /// equivalent settings share one entry.
+    pub fn of(arch: &Arch, layer: &ConvLayer, q: &LayerQuant) -> Self {
+        let q = q.canonical(arch.word_bits, arch.bit_packing);
+        let whash = workload_hash(layer, &q);
+        // continue the workload hash's FNV stream with the arch name
+        // (bit-identical to the previous inlined loop)
+        let mut h = crate::util::Fnv1a::with_state(whash);
+        h.write(arch.name.as_bytes());
+        let key = h.finish() ^ ((arch.bit_packing as u64) << 7);
+        WorkloadKey { whash, key }
+    }
+}
+
 /// The cached summary of one workload evaluation (everything the search
 /// engine needs; the winning mapping itself is not persisted).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -98,16 +132,6 @@ impl MapperCache {
         &self.shards[(key >> SHARD_SHIFT) as usize]
     }
 
-    fn key(arch: &Arch, layer: &ConvLayer, q: &LayerQuant) -> u64 {
-        // packing-equivalent settings share one entry (see mapper::search)
-        let q = &q.canonical(arch.word_bits, arch.bit_packing);
-        // continue the workload hash's FNV stream with the arch name
-        // (bit-identical to the previous inlined loop)
-        let mut h = crate::util::Fnv1a::with_state(workload_hash(layer, q));
-        h.write(arch.name.as_bytes());
-        h.finish() ^ ((arch.bit_packing as u64) << 7)
-    }
-
     /// Evaluate a workload through the cache, running the mapper on miss.
     /// Returns `None` for unmappable workloads — a result that is itself
     /// cached (tagged with the failing draw budget), so repeated probes
@@ -120,11 +144,25 @@ impl MapperCache {
         q: &LayerQuant,
         cfg: &MapperConfig,
     ) -> Option<CachedEval> {
-        if let Some(hit) = self.probe(arch, layer, q, cfg) {
+        self.evaluate_key(WorkloadKey::of(arch, layer, q), arch, layer, q, cfg)
+    }
+
+    /// [`MapperCache::evaluate`] with a precomputed [`WorkloadKey`]
+    /// (`arch`/`layer`/`q` are still needed to run the mapper on a
+    /// miss, but are never re-hashed).
+    pub fn evaluate_key(
+        &self,
+        wk: WorkloadKey,
+        arch: &Arch,
+        layer: &ConvLayer,
+        q: &LayerQuant,
+        cfg: &MapperConfig,
+    ) -> Option<CachedEval> {
+        if let Some(hit) = self.probe_key(wk, cfg) {
             return hit;
         }
         let r = search(arch, layer, q, cfg);
-        self.insert_search(arch, layer, q, cfg, &r)
+        self.insert_search_key(wk, cfg, &r)
     }
 
     /// The lookup half of [`MapperCache::evaluate`]: `Some(Some(e))` is
@@ -139,7 +177,12 @@ impl MapperCache {
         q: &LayerQuant,
         cfg: &MapperConfig,
     ) -> Option<Option<CachedEval>> {
-        let key = Self::key(arch, layer, q);
+        self.probe_key(WorkloadKey::of(arch, layer, q), cfg)
+    }
+
+    /// [`MapperCache::probe`] with a precomputed [`WorkloadKey`].
+    pub fn probe_key(&self, wk: WorkloadKey, cfg: &MapperConfig) -> Option<Option<CachedEval>> {
+        let key = wk.key;
         if let Some(hit) = self.shard(key).read().unwrap().get(&key) {
             match hit {
                 CacheEntry::Mapped(e) => {
@@ -174,7 +217,14 @@ impl MapperCache {
         q: &LayerQuant,
         cfg: &MapperConfig,
     ) -> u64 {
-        let key = Self::key(arch, layer, q);
+        self.effective_draws_key(WorkloadKey::of(arch, layer, q), cfg)
+    }
+
+    /// [`MapperCache::effective_draws`] with a precomputed
+    /// [`WorkloadKey`] — what the engine's priority scheduler calls, so
+    /// a generation's scheduling pass hashes each job once.
+    pub fn effective_draws_key(&self, wk: WorkloadKey, cfg: &MapperConfig) -> u64 {
+        let key = wk.key;
         match self.shard(key).read().unwrap().get(&key) {
             Some(CacheEntry::Mapped(_)) => 0,
             Some(CacheEntry::Unmappable { max_draws }) => {
@@ -200,7 +250,17 @@ impl MapperCache {
         cfg: &MapperConfig,
         r: &MapperResult,
     ) -> Option<CachedEval> {
-        let key = Self::key(arch, layer, q);
+        self.insert_search_key(WorkloadKey::of(arch, layer, q), cfg, r)
+    }
+
+    /// [`MapperCache::insert_search`] with a precomputed [`WorkloadKey`].
+    pub fn insert_search_key(
+        &self,
+        wk: WorkloadKey,
+        cfg: &MapperConfig,
+        r: &MapperResult,
+    ) -> Option<CachedEval> {
+        let key = wk.key;
         self.misses.fetch_add(1, Ordering::Relaxed);
         let (entry, out) = match &r.best {
             Some(est) => {
@@ -627,6 +687,26 @@ mod tests {
         let fresh = MapperCache::new();
         fresh.load_entry_json(&q2[0]).unwrap();
         assert_eq!(fresh.len(), 1);
+    }
+
+    #[test]
+    fn workload_key_paths_match_recomputing_paths() {
+        let cache = MapperCache::new();
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(5); // non-canonical representative
+        let c = cfg();
+        let wk = WorkloadKey::of(&a, &l, &q);
+        // the key canonicalizes internally: equivalent settings agree
+        assert_eq!(wk, WorkloadKey::of(&a, &l, &q.canonical(a.word_bits, a.bit_packing)));
+        // key-based and recomputing paths see the same cache state
+        assert_eq!(cache.effective_draws_key(wk, &c), cache.effective_draws(&a, &l, &q, &c));
+        assert!(cache.probe_key(wk, &c).is_none());
+        let r = cache.evaluate_key(wk, &a, &l, &q, &c).unwrap();
+        assert_eq!(cache.probe(&a, &l, &q, &c), Some(Some(r)));
+        assert_eq!(cache.probe_key(wk, &c), Some(Some(r)));
+        assert_eq!(cache.effective_draws_key(wk, &c), 0);
+        assert_eq!(cache.misses(), 1);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::energy::{estimate_into, Estimate};
 use crate::mapping::factorize::random_factorization_into;
 use crate::mapping::mapspace::MapSpace;
 use crate::mapping::{LayerContext, Mapping};
-use crate::nest::analyze_into;
+use crate::nest::analyze_prefilled;
 use crate::quant::LayerQuant;
 use crate::util::rng::Rng;
 use crate::workload::{ConvLayer, DIMS};
@@ -98,16 +98,22 @@ fn randomize_dim(
     }
 }
 
-/// Check + price one candidate through the table-driven context path.
+/// Check + price one candidate through the staged cascade the random
+/// mapper uses: spatial pre-check, then extent/capacity check recording
+/// tile footprints, then prefilled analysis — verdict- and
+/// price-identical to `check` + `analyze_into`, without recomputing any
+/// tile size for a valid candidate.
 fn score(lctx: &LayerContext, ectx: &mut EvalContext, m: &Mapping) -> Scored {
-    if lctx.check(m, &mut ectx.ext).is_err() {
+    if lctx.check_spatial(m).is_err()
+        || lctx.check_tiles_into(m, &mut ectx.ext, &mut ectx.elems).is_err()
+    {
         return Scored {
             mapping: m.clone(),
             est: None,
             edp: f64::INFINITY,
         };
     }
-    analyze_into(lctx, m, &mut ectx.ext, &mut ectx.nest);
+    analyze_prefilled(lctx, m, &ectx.elems, &mut ectx.nest);
     estimate_into(lctx, &ectx.nest, &mut ectx.est);
     Scored {
         mapping: m.clone(),

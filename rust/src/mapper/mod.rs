@@ -10,11 +10,13 @@
 pub mod cache;
 pub mod gamma;
 
+pub use cache::WorkloadKey;
+
 use crate::arch::Arch;
 use crate::energy::{estimate_into, Estimate};
 use crate::mapping::mapspace::MapSpace;
 use crate::mapping::{LayerContext, LevelMapping, Mapping};
-use crate::nest::{analyze_into, NestAnalysis};
+use crate::nest::{analyze_prefilled, NestAnalysis};
 use crate::quant::LayerQuant;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -49,17 +51,33 @@ impl Default for MapperConfig {
     }
 }
 
-/// Reusable per-thread scratch for the allocation-free hot path: one
-/// candidate `Mapping`, the factorization slot buffer, the cumulative
-/// tile-extent buffer, and the nest/estimate output slots. Build once
-/// per (thread, workload) and reuse across candidate draws — the
-/// steady-state loop performs zero heap allocations per draw.
+/// Candidates drawn per block by the staged batch evaluator in
+/// [`run_shard`]. Large enough to amortize the RNG/permutation setup
+/// and keep the rejection cascade's branch behavior predictable, small
+/// enough that a block of scratch mappings stays cache-resident.
+const EVAL_BLOCK: usize = 64;
+
+/// Reusable per-thread scratch for the allocation-free hot path: a block
+/// of candidate `Mapping`s, the factorization slot buffer, the
+/// cumulative tile-extent buffer, the tile-footprint slab shared between
+/// the checker and the analyzer, and the nest/estimate output slots.
+/// Build once per (thread, workload) and reuse across candidate draws —
+/// the steady-state loop performs zero heap allocations per draw.
 pub struct EvalContext {
     pub mapping: Mapping,
     pub fbuf: Vec<u64>,
     pub ext: Vec<[u64; 7]>,
     pub nest: NestAnalysis,
     pub est: Estimate,
+    /// Batched-draw scratch: `EVAL_BLOCK` candidate mappings filled per
+    /// block by [`run_shard`]'s draw stage.
+    pub batch: Vec<Mapping>,
+    /// Per-candidate verdict of the spatial pre-check stage.
+    pub live: Vec<bool>,
+    /// `num_levels * 3` tile-footprint slab: filled by
+    /// [`LayerContext::check_tiles_into`], consumed by
+    /// [`crate::nest::analyze_prefilled`].
+    pub elems: Vec<u64>,
 }
 
 impl EvalContext {
@@ -75,6 +93,9 @@ impl EvalContext {
             ext: Vec::with_capacity(num_levels),
             nest: NestAnalysis::empty(),
             est: Estimate::empty(),
+            batch: (0..EVAL_BLOCK).map(|_| Mapping::unit(num_levels)).collect(),
+            live: vec![false; EVAL_BLOCK],
+            elems: vec![0; num_levels * 3],
         }
     }
 }
@@ -310,10 +331,28 @@ pub fn shard_plan(cfg: &MapperConfig, base_seed: u64) -> Vec<ShardSpec> {
         .collect()
 }
 
-/// One shard of the random search: draws candidates through the
-/// allocation-free context path until its share of the valid-mapping
-/// target (or draw budget) is exhausted. Within a shard the first
-/// strictly-lower EDP wins, so the result is deterministic in the seed.
+/// One shard of the random search, run as a staged batch evaluator:
+///
+/// 1. **Draw** a block of up to [`EVAL_BLOCK`] candidates back-to-back
+///    (amortizing the RNG/permutation setup of `random_mapping_into`);
+/// 2. **Spatial pre-check** the whole block with
+///    [`LayerContext::check_spatial`] — pure integer tests that kill the
+///    majority of draws without touching a tile footprint;
+/// 3. **Full check + price** the survivors in draw order:
+///    [`LayerContext::check_tiles_into`] fills the extents once and
+///    records every kept tile footprint, which
+///    [`crate::nest::analyze_prefilled`] + `estimate_into` then reuse —
+///    no footprint is computed twice for a valid candidate.
+///
+/// Bit-identical to the one-at-a-time loop it replaced
+/// (`tests/hotpath_equivalence.rs` asserts batched == scalar == naive):
+/// candidates are consumed in draw order from the same shard-local RNG
+/// stream, the cascade accepts iff `check` accepts, the pricing
+/// arithmetic is unchanged, and candidates drawn past the
+/// valid-target/draw-budget termination point are discarded along with
+/// the RNG — never counted, never allowed to update the winner. Within
+/// a shard the first strictly-lower EDP wins, so the result is
+/// deterministic in the seed.
 pub fn run_shard(space: &MapSpace, lctx: &LayerContext, spec: &ShardSpec) -> ShardOutcome {
     let (seed, valid_target, max_draws) = (spec.seed, spec.valid_target, spec.max_draws);
     let mut ctx = EvalContext::with_dims(lctx.num_levels, space.slots());
@@ -322,25 +361,43 @@ pub fn run_shard(space: &MapSpace, lctx: &LayerContext, spec: &ShardSpec) -> Sha
     let mut valid = 0u64;
     let mut draws = 0u64;
 
-    while valid < valid_target && draws < max_draws {
-        draws += 1;
-        space.random_mapping_into(lctx, &mut rng, &mut ctx.fbuf, &mut ctx.mapping);
-        if lctx.check(&ctx.mapping, &mut ctx.ext).is_err() {
-            continue;
+    'blocks: while valid < valid_target && draws < max_draws {
+        let block = (EVAL_BLOCK as u64).min(max_draws - draws) as usize;
+
+        for m in &mut ctx.batch[..block] {
+            space.random_mapping_into(lctx, &mut rng, &mut ctx.fbuf, m);
         }
-        valid += 1;
-        analyze_into(lctx, &ctx.mapping, &mut ctx.ext, &mut ctx.nest);
-        estimate_into(lctx, &ctx.nest, &mut ctx.est);
-        let edp = ctx.est.edp();
-        match &mut best {
-            Some((b, be, bm)) => {
-                if edp < *b {
-                    *b = edp;
-                    be.copy_from(&ctx.est);
-                    bm.copy_from(&ctx.mapping);
-                }
+
+        for i in 0..block {
+            ctx.live[i] = lctx.check_spatial(&ctx.batch[i]).is_ok();
+        }
+
+        for i in 0..block {
+            draws += 1;
+            if !ctx.live[i] {
+                continue;
             }
-            None => best = Some((edp, ctx.est.clone(), ctx.mapping.clone())),
+            let m = &ctx.batch[i];
+            if lctx.check_tiles_into(m, &mut ctx.ext, &mut ctx.elems).is_err() {
+                continue;
+            }
+            valid += 1;
+            analyze_prefilled(lctx, m, &ctx.elems, &mut ctx.nest);
+            estimate_into(lctx, &ctx.nest, &mut ctx.est);
+            let edp = ctx.est.edp();
+            match &mut best {
+                Some((b, be, bm)) => {
+                    if edp < *b {
+                        *b = edp;
+                        be.copy_from(&ctx.est);
+                        bm.copy_from(m);
+                    }
+                }
+                None => best = Some((edp, ctx.est.clone(), m.clone())),
+            }
+            if valid >= valid_target {
+                break 'blocks;
+            }
         }
     }
 

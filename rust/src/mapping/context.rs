@@ -47,6 +47,13 @@ pub struct LayerContext {
     pub keeps: Vec<[bool; 3]>,
     /// Capacity model per level (DRAM entry is `Unbounded`).
     pub caps: Vec<Capacity>,
+    /// SoA capacity tables: per-(level, tensor) word limits for
+    /// `Capacity::PerTensor` levels, `u64::MAX` (never trips) elsewhere.
+    /// Lets the capacity stage run without matching on the enum.
+    pub cap_words: Vec<[u64; 3]>,
+    /// Aggregate word limit for `Capacity::Shared` levels, `u64::MAX`
+    /// elsewhere (the sum test then never fires).
+    pub shared_cap: Vec<u64>,
     /// Spatial fanout per level.
     pub fanout: Vec<u64>,
     /// Allowed-spatial-dim bitmask per level.
@@ -55,6 +62,9 @@ pub struct LayerContext {
     pub multicast: Vec<bool>,
     /// Per-access energies per level `[W, I, O]`, pJ.
     pub access_energy: Vec<[f64; 3]>,
+    /// `access_energy` flattened to one contiguous `num_levels * 3` slab
+    /// (`lv * 3 + tensor`), for the energy accumulation loop.
+    pub access_energy_flat: Vec<f64>,
     /// Bandwidth in words/cycle per level instance.
     pub bandwidth: Vec<f64>,
     /// Max parallel instances of each level (product of fanouts strictly
@@ -104,6 +114,25 @@ impl LayerContext {
             unpack_mul[ti] = ceil_div(q.of(t) as u64, arch.word_bits as u64);
         }
 
+        let mut cap_words = Vec::with_capacity(nl);
+        let mut shared_cap = Vec::with_capacity(nl);
+        for l in &arch.levels {
+            match &l.capacity {
+                Capacity::Unbounded => {
+                    cap_words.push([u64::MAX; 3]);
+                    shared_cap.push(u64::MAX);
+                }
+                Capacity::Shared(a) => {
+                    cap_words.push([u64::MAX; 3]);
+                    shared_cap.push(*a);
+                }
+                Capacity::PerTensor(ws) => {
+                    cap_words.push(*ws);
+                    shared_cap.push(u64::MAX);
+                }
+            }
+        }
+
         let mut spatial_allowed = Vec::with_capacity(nl);
         let mut inst_cap = Vec::with_capacity(nl);
         for lv in 0..nl {
@@ -128,9 +157,16 @@ impl LayerContext {
             keepers,
             keeps: arch.levels.iter().map(|l| l.keeps).collect(),
             caps: arch.levels.iter().map(|l| l.capacity.clone()).collect(),
+            cap_words,
+            shared_cap,
             fanout: arch.levels.iter().map(|l| l.fanout).collect(),
             spatial_allowed,
             multicast: arch.levels.iter().map(|l| l.multicast).collect(),
+            access_energy_flat: arch
+                .levels
+                .iter()
+                .flat_map(|l| l.access_energy_pj)
+                .collect(),
             access_energy: arch.levels.iter().map(|l| l.access_energy_pj).collect(),
             bandwidth: arch.levels.iter().map(|l| l.bandwidth_words).collect(),
             inst_cap,
@@ -221,6 +257,47 @@ impl LayerContext {
         }
 
         // (2) spatial constraints
+        self.check_spatial(m)?;
+
+        // (3) capacity with bit-packing; DRAM (last level) is unbounded
+        for lv in 0..self.num_levels - 1 {
+            let caps = &self.cap_words[lv];
+            let mut shared_needed = 0u64;
+            for t in TENSORS {
+                let ti = t.index();
+                if !self.keeps[lv][ti] {
+                    continue;
+                }
+                let words = self.tile_words_from_elems(t, self.tile_elems_at(t, &ext[lv]));
+                if words > caps[ti] {
+                    return Err(Violation::CapacityExceeded {
+                        level: lv,
+                        tensor: t,
+                        needed_words: words,
+                        available_words: caps[ti],
+                    });
+                }
+                shared_needed = shared_needed.saturating_add(words);
+            }
+            if shared_needed > self.shared_cap[lv] {
+                return Err(Violation::SharedCapacityExceeded {
+                    level: lv,
+                    needed_words: shared_needed,
+                    available_words: self.shared_cap[lv],
+                });
+            }
+        }
+
+        Ok(())
+    }
+
+    /// Stage one of the rejection cascade: the spatial constraints alone
+    /// (fanout product, leaf-level, allowed-dim mask). Pure integer tests
+    /// on the mapping — no extent fill, no division — so invalid spatial
+    /// draws (the majority on fanout-constrained arches) die before any
+    /// per-level footprint work.
+    #[inline]
+    pub fn check_spatial(&self, m: &Mapping) -> Result<(), Violation> {
         for (lv, lm) in m.levels.iter().enumerate() {
             let sp = lm.spatial_product();
             if self.fanout[lv] == 1 {
@@ -238,40 +315,67 @@ impl LayerContext {
                 }
             }
         }
+        Ok(())
+    }
 
-        // (3) capacity with bit-packing; DRAM (last level) is unbounded
+    /// Stage two of the rejection cascade: extent fill + factor products
+    /// + capacity, for candidates that survived [`check_spatial`].
+    /// Records the tile footprint in elements of every kept
+    /// `(level, tensor)` pair below DRAM into `elems[lv * 3 + t]`
+    /// (a `num_levels * 3` slab) — exactly the footprints
+    /// [`crate::nest::analyze_prefilled`] needs, so a surviving
+    /// candidate is priced without recomputing a single tile size.
+    ///
+    /// `check_spatial(m)` then `check_tiles_into(m, ..)` accepts iff
+    /// [`LayerContext::check`] accepts; when a mapping violates both a
+    /// factor-product and a spatial constraint the *reported* violation
+    /// may differ (the cascade tests spatial first), which is why the
+    /// batched mapper only consumes the verdict.
+    ///
+    /// [`check_spatial`]: LayerContext::check_spatial
+    pub fn check_tiles_into(
+        &self,
+        m: &Mapping,
+        ext: &mut Vec<[u64; 7]>,
+        elems: &mut [u64],
+    ) -> Result<(), Violation> {
+        debug_assert_eq!(elems.len(), self.num_levels * 3);
+        self.fill_extents(m, ext);
+
+        let totals = &ext[self.num_levels - 1];
+        for d in DIMS {
+            if totals[d.index()] != self.layer.size(d) {
+                return Err(Violation::FactorProduct(d));
+            }
+        }
+
         for lv in 0..self.num_levels - 1 {
+            let caps = &self.cap_words[lv];
             let mut shared_needed = 0u64;
             for t in TENSORS {
-                if !self.keeps[lv][t.index()] {
+                let ti = t.index();
+                if !self.keeps[lv][ti] {
                     continue;
                 }
-                let words = self.tile_words_from_elems(t, self.tile_elems_at(t, &ext[lv]));
-                match &self.caps[lv] {
-                    Capacity::Unbounded => {}
-                    Capacity::Shared(_) => shared_needed += words,
-                    Capacity::PerTensor(ws) => {
-                        let avail = ws[t.index()];
-                        if words > avail {
-                            return Err(Violation::CapacityExceeded {
-                                level: lv,
-                                tensor: t,
-                                needed_words: words,
-                                available_words: avail,
-                            });
-                        }
-                    }
-                }
-            }
-            if let Capacity::Shared(avail) = self.caps[lv] {
-                if shared_needed > avail {
+                let el = self.tile_elems_at(t, &ext[lv]);
+                elems[lv * 3 + ti] = el;
+                let words = self.tile_words_from_elems(t, el);
+                if words > caps[ti] {
                     return Err(Violation::CapacityExceeded {
                         level: lv,
-                        tensor: Tensor::Inputs, // aggregate (shared pool)
-                        needed_words: shared_needed,
-                        available_words: avail,
+                        tensor: t,
+                        needed_words: words,
+                        available_words: caps[ti],
                     });
                 }
+                shared_needed = shared_needed.saturating_add(words);
+            }
+            if shared_needed > self.shared_cap[lv] {
+                return Err(Violation::SharedCapacityExceeded {
+                    level: lv,
+                    needed_words: shared_needed,
+                    available_words: self.shared_cap[lv],
+                });
             }
         }
 

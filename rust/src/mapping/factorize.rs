@@ -116,8 +116,12 @@ pub fn random_factorization_into(
     out: &mut [u64],
 ) {
     debug_assert!(!out.is_empty());
-    for x in out.iter_mut() {
-        *x = 1;
+    out.fill(1);
+    // Size-1 dims (N on batch-1 nets, R/S on pointwise/FC layers) have
+    // no primes to place: skip the scatter loop entirely. No RNG draw is
+    // skipped — the allocating path draws nothing for them either.
+    if primes.is_empty() {
+        return;
     }
     let slots = out.len() as u64;
     for &(p, e) in primes {

@@ -157,8 +157,42 @@ pub enum Violation {
         needed_words: u64,
         available_words: u64,
     },
+    /// A `Capacity::Shared` pool overflows in aggregate: no single
+    /// tensor is to blame, the *sum* of kept tiles exceeds the pool.
+    SharedCapacityExceeded {
+        level: usize,
+        needed_words: u64,
+        available_words: u64,
+    },
     /// Spatial factors at a level with no fanout.
     SpatialAtLeafLevel { level: usize },
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::FactorProduct(d) => {
+                write!(f, "factor product along {} != workload size", d.name())
+            }
+            Violation::FanoutExceeded { level } => {
+                write!(f, "spatial product exceeds fanout at level {level}")
+            }
+            Violation::SpatialDimNotAllowed { level, dim } => {
+                write!(f, "spatial {} not allowed at level {level}", dim.name())
+            }
+            Violation::CapacityExceeded { level, tensor, needed_words, available_words } => write!(
+                f,
+                "{tensor:?} tile needs {needed_words} words at level {level}, only {available_words} available"
+            ),
+            Violation::SharedCapacityExceeded { level, needed_words, available_words } => write!(
+                f,
+                "shared pool at level {level} needs {needed_words} words in aggregate, only {available_words} available"
+            ),
+            Violation::SpatialAtLeafLevel { level } => {
+                write!(f, "spatial factors at fanout-1 level {level}")
+            }
+        }
+    }
 }
 
 /// Words occupied at `level` by tensor `t`'s tile, given quantization.
@@ -254,9 +288,8 @@ pub fn check(
         }
         if let crate::arch::Capacity::Shared(avail) = al.capacity {
             if shared_needed > avail {
-                return Err(Violation::CapacityExceeded {
+                return Err(Violation::SharedCapacityExceeded {
                     level: lv,
-                    tensor: Tensor::Inputs, // aggregate (shared pool)
                     needed_words: shared_needed,
                     available_words: avail,
                 });
@@ -396,10 +429,13 @@ mod tests {
             m.levels[1].temporal[d.index()] = l.size(d);
             m.levels[2].temporal[d.index()] = 1;
         }
-        assert!(matches!(
-            check(&a, &l, &LayerQuant::uniform(8), &m),
-            Err(Violation::CapacityExceeded { level: 1, .. })
-        ));
+        let v = check(&a, &l, &LayerQuant::uniform(8), &m).unwrap_err();
+        assert!(
+            matches!(v, Violation::SharedCapacityExceeded { level: 1, .. }),
+            "aggregate overflow must not blame a single tensor: {v:?}"
+        );
+        // the diagnostic names the pool, not a scapegoat tensor
+        assert!(v.to_string().contains("shared pool"), "{v}");
         // at 2 bits it fits: 200k/8 = 25k words each, 50k total < 55k
         check(&a, &l, &LayerQuant::uniform(2), &m).unwrap();
     }

@@ -194,12 +194,44 @@ pub fn analyze_into(
     ext: &mut Vec<[u64; 7]>,
     out: &mut NestAnalysis,
 ) {
+    lctx.fill_extents(mapping, ext);
+    analyze_core(lctx, mapping, |k, t| lctx.tile_elems_at(t, &ext[k]) as f64, out);
+}
+
+/// [`analyze_into`] for a candidate that already passed
+/// [`LayerContext::check_tiles_into`]: the exact per-(level, tensor)
+/// tile footprints the checker recorded into its `elems` slab
+/// (`lv * 3 + tensor`, kept pairs below DRAM) are reused, skipping the
+/// redundant extent re-fill and tile-size recomputation the
+/// `check` → `analyze_into` sequence used to pay per survivor.
+/// Bit-identical to [`analyze_into`]: the footprints are the same
+/// `u64`s `tile_elems_at` produces (every child keeper is a kept level
+/// below DRAM, so the checker's capacity pass covers all of them), and
+/// every f64 operation runs in the same order.
+pub fn analyze_prefilled(
+    lctx: &LayerContext,
+    mapping: &Mapping,
+    elems: &[u64],
+    out: &mut NestAnalysis,
+) {
+    debug_assert_eq!(elems.len(), lctx.num_levels * 3);
+    analyze_core(lctx, mapping, |k, t| elems[k * 3 + t.index()] as f64, out);
+}
+
+/// Shared body of [`analyze_into`] / [`analyze_prefilled`]; `tile`
+/// yields the tile footprint (elements, as f64) of tensor `t` at keeper
+/// level `k`.
+fn analyze_core<F: Fn(usize, Tensor) -> f64>(
+    lctx: &LayerContext,
+    mapping: &Mapping,
+    tile_at: F,
+    out: &mut NestAnalysis,
+) {
     let nl = lctx.num_levels;
     out.accesses.clear();
     out.accesses.resize(nl, [Accesses::default(); 3]);
     out.macs = lctx.macs;
     out.pes_used = mapping.pes_used();
-    lctx.fill_extents(mapping, ext);
     let macs = lctx.macs;
 
     for t in TENSORS {
@@ -220,7 +252,7 @@ pub fn analyze_into(
         // inter-level traffic along the keeper chain
         for w in keepers.windows(2) {
             let (k, pk) = (w[0], w[1]);
-            let tile = lctx.tile_elems_at(t, &ext[k]) as f64;
+            let tile = tile_at(k, t);
             let inst = mapping.instances(k) as f64;
             let rl = reloads_ctx(lctx, mapping, k, t);
             let fills = tile * inst * rl;

@@ -12,10 +12,13 @@
 use qmap::arch::presets::{eyeriss, simba, toy};
 use qmap::arch::Arch;
 use qmap::energy::{estimate, estimate_into, Estimate};
-use qmap::mapper::{search, workload_hash, EvalContext, MapperConfig};
+use qmap::mapper::{
+    merge_shards, run_shard, search, shard_plan, workload_hash, EvalContext, MapperConfig,
+    ShardSpec,
+};
 use qmap::mapping::mapspace::MapSpace;
-use qmap::mapping::{check, LayerContext};
-use qmap::nest::{analyze, analyze_into, NestAnalysis};
+use qmap::mapping::{check, LayerContext, Mapping};
+use qmap::nest::{analyze, analyze_into, analyze_prefilled, NestAnalysis};
 use qmap::quant::LayerQuant;
 use qmap::util::rng::Rng;
 use qmap::workload::ConvLayer;
@@ -176,6 +179,178 @@ fn sharded_best_is_a_valid_mapping_with_plausible_edp() {
     let nest = analyze(&arch, &layer, &m);
     let naive = estimate(&arch, &layer, &qc, &nest);
     assert_eq!(naive.edp().to_bits(), est.edp().to_bits());
+}
+
+/// One-candidate-at-a-time replica of the pre-batching `run_shard` loop
+/// (the allocation-free scalar pipeline: `random_mapping_into` +
+/// `LayerContext::check` + `analyze_into` + `estimate_into`), with the
+/// exact termination and first-winner semantics of the shard loop.
+fn scalar_shard(
+    space: &MapSpace,
+    lctx: &LayerContext,
+    spec: &ShardSpec,
+) -> (Option<u64>, Option<Mapping>, u64, u64) {
+    let mut ectx = EvalContext::with_dims(lctx.num_levels, space.slots());
+    let mut rng = Rng::new(spec.seed);
+    let mut best: Option<(f64, Mapping)> = None;
+    let mut valid = 0u64;
+    let mut draws = 0u64;
+    while valid < spec.valid_target && draws < spec.max_draws {
+        draws += 1;
+        space.random_mapping_into(lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
+        if lctx.check(&ectx.mapping, &mut ectx.ext).is_err() {
+            continue;
+        }
+        valid += 1;
+        analyze_into(lctx, &ectx.mapping, &mut ectx.ext, &mut ectx.nest);
+        estimate_into(lctx, &ectx.nest, &mut ectx.est);
+        let edp = ectx.est.edp();
+        if best.as_ref().map_or(true, |(b, _)| edp < *b) {
+            best = Some((edp, ectx.mapping.clone()));
+        }
+    }
+    let (b, m) = match best {
+        Some((b, m)) => (Some(b.to_bits()), Some(m)),
+        None => (None, None),
+    };
+    (b, m, valid, draws)
+}
+
+/// Naive (allocating, table-free) replica of the same shard loop.
+fn naive_shard(
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    spec: &ShardSpec,
+) -> (Option<u64>, Option<Mapping>, u64, u64) {
+    let space = MapSpace::of(arch);
+    let mut rng = Rng::new(spec.seed);
+    let mut best: Option<(f64, Mapping)> = None;
+    let mut valid = 0u64;
+    let mut draws = 0u64;
+    while valid < spec.valid_target && draws < spec.max_draws {
+        draws += 1;
+        let m = space.random_mapping(layer, &mut rng);
+        if check(arch, layer, q, &m).is_err() {
+            continue;
+        }
+        valid += 1;
+        let edp = estimate(arch, layer, q, &analyze(arch, layer, &m)).edp();
+        if best.as_ref().map_or(true, |(b, _)| edp < *b) {
+            best = Some((edp, m));
+        }
+    }
+    let (b, m) = match best {
+        Some((b, m)) => (Some(b.to_bits()), Some(m)),
+        None => (None, None),
+    };
+    (b, m, valid, draws)
+}
+
+#[test]
+fn batched_shard_is_bit_identical_to_scalar_and_naive() {
+    // the tentpole property: the staged batch evaluator must reproduce
+    // the scalar pipeline AND the naive path candidate-for-candidate —
+    // same winner (bits and mapping), same valid/draw counters — across
+    // degenerate shapes (1x1, depthwise, stride 2, fc) and degenerate
+    // budgets (zero draws, zero valid target, budgets that are not a
+    // multiple of the batch size, targets that stop a block mid-way)
+    for arch in [toy(), eyeriss()] {
+        let space = MapSpace::of(&arch);
+        for layer in layers_under_test() {
+            let q = LayerQuant::uniform(4).canonical(arch.word_bits, arch.bit_packing);
+            let lctx = LayerContext::new(&arch, &layer, &q);
+            let specs = [
+                ShardSpec { seed: 0xA1, valid_target: u64::MAX, max_draws: 0 },
+                ShardSpec { seed: 0xA2, valid_target: 0, max_draws: 1_000 },
+                ShardSpec { seed: 0xA3, valid_target: u64::MAX, max_draws: 64 },
+                ShardSpec { seed: 0xA4, valid_target: u64::MAX, max_draws: 100 },
+                ShardSpec { seed: 0xA5, valid_target: 7, max_draws: 20_000 },
+                ShardSpec { seed: 0xA6, valid_target: 40, max_draws: 10_000 },
+            ];
+            for spec in specs {
+                let got = merge_shards(vec![run_shard(&space, &lctx, &spec)]);
+                let what = format!("{} {} spec={spec:?}", arch.name, layer.name);
+                for (wb, wm, wv, wd) in [
+                    scalar_shard(&space, &lctx, &spec),
+                    naive_shard(&arch, &layer, &q, &spec),
+                ] {
+                    assert_eq!(got.best.as_ref().map(|e| e.edp().to_bits()), wb, "{what}");
+                    assert_eq!(got.best_mapping, wm, "{what}");
+                    assert_eq!(got.valid, wv, "{what}");
+                    assert_eq!(got.draws, wd, "{what}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_shard_matches_scalar_replica_over_shard_plans() {
+    // the same property through the deterministic shard decomposition:
+    // every shard of a multi-shard plan, run batched, must equal its
+    // scalar replica — so sharded searches cannot drift either
+    let arch = eyeriss();
+    let space = MapSpace::of(&arch);
+    for layer in [ConvLayer::pw("p", 16, 32, 14), ConvLayer::dw("d", 32, 3, 14, 1)] {
+        let q = LayerQuant::uniform(8).canonical(arch.word_bits, arch.bit_packing);
+        let lctx = LayerContext::new(&arch, &layer, &q);
+        for shards in [2usize, 3] {
+            let cfg = MapperConfig {
+                valid_target: 90,
+                max_draws: 9_001, // not divisible by shards or blocks
+                seed: 0x5EED,
+                shards,
+            };
+            for spec in shard_plan(&cfg, cfg.seed ^ workload_hash(&layer, &q)) {
+                let got = run_shard(&space, &lctx, &spec);
+                let (wb, _, wv, wd) = scalar_shard(&space, &lctx, &spec);
+                assert_eq!(got.best_edp().map(f64::to_bits), wb, "{spec:?}");
+                assert_eq!(got.valid(), wv, "{spec:?}");
+                assert_eq!(got.draws(), wd, "{spec:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn cascade_rejects_iff_full_check_rejects() {
+    // the rejection cascade's verdict must agree with the monolithic
+    // check on every candidate, and for accepted candidates the tile
+    // footprints it records must price bit-identically to the
+    // recomputing analyzer
+    let mut accepted = 0usize;
+    for arch in [toy(), eyeriss(), simba()] {
+        let space = MapSpace::of(&arch);
+        let mut ectx = EvalContext::for_arch(&arch);
+        let mut nest2 = NestAnalysis::empty();
+        for layer in layers_under_test() {
+            let q = LayerQuant::uniform(4).canonical(arch.word_bits, arch.bit_packing);
+            let lctx = LayerContext::new(&arch, &layer, &q);
+            let mut rng = Rng::new(0xCA5CADE);
+            for _ in 0..200 {
+                let m = space.random_mapping(&layer, &mut rng);
+                let full = lctx.check(&m, &mut ectx.ext).is_ok();
+                let staged = lctx.check_spatial(&m).is_ok()
+                    && lctx.check_tiles_into(&m, &mut ectx.ext, &mut ectx.elems).is_ok();
+                assert_eq!(full, staged, "{} {}", arch.name, layer.name);
+                if !staged {
+                    continue;
+                }
+                accepted += 1;
+                analyze_prefilled(&lctx, &m, &ectx.elems, &mut ectx.nest);
+                analyze_into(&lctx, &m, &mut ectx.ext, &mut nest2);
+                assert_eq!(ectx.nest.macs, nest2.macs);
+                assert_eq!(ectx.nest.pes_used, nest2.pes_used);
+                assert_eq!(
+                    ectx.nest.accesses, nest2.accesses,
+                    "{} {}: prefilled analysis diverged",
+                    arch.name, layer.name
+                );
+            }
+        }
+    }
+    assert!(accepted > 100, "too few accepted samples: {accepted}");
 }
 
 #[test]
