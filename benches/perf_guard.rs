@@ -13,6 +13,12 @@
 //! lost fast path, an accidental serialization), not to fail on
 //! scheduler noise.
 //!
+//! Next to the floors, the baseline can declare `ceilings` — rows that
+//! fail when they *rise* past `want * (1 + tolerance)`. The first is
+//! `trace_overhead_pct`: the cost of an attached JSONL trace on a full
+//! generation, capped so event emission can never creep into the hot
+//! path unnoticed.
+//!
 //! Run: `cargo bench --bench perf_hotpath && cargo bench --bench
 //! perf_guard` (the CI smoke does exactly this, fast profile).
 
@@ -83,6 +89,36 @@ fn main() {
         );
         if !ok {
             failed += 1;
+        }
+    }
+    // ceilings: rows that regress by GROWING (overhead percentages);
+    // optional so older baselines keep working
+    if let Some(ceilings) = base.get("ceilings").as_obj() {
+        println!(
+            "bench guard: {} ceiling(s), fail above baseline + {:.0}%",
+            ceilings.len(),
+            tolerance * 100.0
+        );
+        for (key, want) in ceilings {
+            let Some(want) = want.as_f64() else {
+                eprintln!("  {key:<28} ceiling is not a number — guard misconfigured");
+                failed += 1;
+                continue;
+            };
+            let Some(got) = perf.get(key).as_f64() else {
+                eprintln!("  {key:<28} MISSING from BENCH_perf.json");
+                failed += 1;
+                continue;
+            };
+            let ceiling = want * (1.0 + tolerance);
+            let ok = got <= ceiling;
+            println!(
+                "  {key:<28} {got:>8.2}  (baseline {want:.2}, ceiling {ceiling:.2})  {}",
+                if ok { "ok" } else { "REGRESSED" }
+            );
+            if !ok {
+                failed += 1;
+            }
         }
     }
     if failed > 0 {

@@ -178,62 +178,26 @@ fn main() {
     println!("  -> {} valid priced, {batch_rate:.0} candidates/s/core (batched)", batch_out.valid());
     println!("  -> batch speedup {batch_speedup:.2}x over the scalar ctx path");
 
-    // 1d. per-stage cost split of the staged pipeline, measured as
-    //     cumulative prefixes over the identical stream (deltas are the
-    //     per-stage cost; clamped at 0 against timer noise), plus the
-    //     cascade's reject rates.
+    // 1d. per-stage cost split of the staged pipeline, measured inside
+    //     the evaluator itself: `run_shard_timed` runs the identical
+    //     stream through the stage-timing observer (draw / check /
+    //     price), so the split prices exactly the code row 1c executed
+    //     — bit-identity asserted — instead of re-simulating the
+    //     stages as cumulative prefixes.
     let (stage_draw_ms, stage_check_ms, stage_price_ms, reject_rate, spatial_reject_rate) = {
-        let mut ectx = EvalContext::for_arch(&arch);
-        let cum1 = {
-            let mut rng = Rng::new(42);
-            let t0 = Instant::now();
-            for _ in 0..PIPELINE_DRAWS {
-                space.random_mapping_into(&lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
-            }
-            t0.elapsed().as_secs_f64() * 1e3
-        };
-        let (cum2, spatial_killed, valid) = {
-            let mut rng = Rng::new(42);
-            let (mut sk, mut v) = (0u64, 0u64);
-            let t0 = Instant::now();
-            for _ in 0..PIPELINE_DRAWS {
-                space.random_mapping_into(&lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
-                if lctx.check_spatial(&ectx.mapping).is_err() {
-                    sk += 1;
-                } else if lctx
-                    .check_tiles_into(&ectx.mapping, &mut ectx.ext, &mut ectx.elems)
-                    .is_ok()
-                {
-                    v += 1;
-                }
-            }
-            (t0.elapsed().as_secs_f64() * 1e3, sk, v)
-        };
-        let cum3 = {
-            let mut rng = Rng::new(42);
-            let t0 = Instant::now();
-            for _ in 0..PIPELINE_DRAWS {
-                space.random_mapping_into(&lctx, &mut rng, &mut ectx.fbuf, &mut ectx.mapping);
-                if lctx.check_spatial(&ectx.mapping).is_err()
-                    || lctx
-                        .check_tiles_into(&ectx.mapping, &mut ectx.ext, &mut ectx.elems)
-                        .is_err()
-                {
-                    continue;
-                }
-                qmap::nest::analyze_prefilled(&lctx, &ectx.mapping, &ectx.elems, &mut ectx.nest);
-                estimate_into(&lctx, &ectx.nest, &mut ectx.est);
-                std::hint::black_box(ectx.est.edp());
-            }
-            t0.elapsed().as_secs_f64() * 1e3
-        };
-        assert_eq!(valid, ctx_priced, "cascade must accept the same stream");
+        let (timed_out, tstats) = mapper::run_shard_timed(&space, &lctx, &spec);
+        assert_eq!(
+            timed_out, batch_out,
+            "the stage-timing observer must not perturb the evaluator"
+        );
+        assert_eq!(tstats.stats.draws(), PIPELINE_DRAWS);
+        assert_eq!(tstats.stats.valid, ctx_priced, "cascade must accept the same stream");
         (
-            cum1,
-            (cum2 - cum1).max(0.0),
-            (cum3 - cum2).max(0.0),
-            1.0 - valid as f64 / PIPELINE_DRAWS as f64,
-            spatial_killed as f64 / PIPELINE_DRAWS as f64,
+            tstats.draw_ns as f64 / 1e6,
+            tstats.check_ns as f64 / 1e6,
+            tstats.price_ns as f64 / 1e6,
+            1.0 - tstats.stats.valid as f64 / PIPELINE_DRAWS as f64,
+            tstats.stats.spatial_rejects as f64 / PIPELINE_DRAWS as f64,
         )
     };
     println!(
@@ -546,6 +510,51 @@ fn main() {
         1.0 / nsga_k3_vs_k2_x.max(1e-9)
     );
 
+    // 10. trace overhead: the same population through the engine with a
+    //     JSONL trace attached vs detached (best of two runs each, after
+    //     a shared warmup). The recorder is observation-only —
+    //     bit-identity asserted — and must stay cheap: this row is
+    //     CEILING-guarded (`trace_overhead_pct` in BENCH_baseline.json),
+    //     so event emission can never creep into the hot path unnoticed.
+    let trace_overhead_pct = {
+        let run_once = || {
+            let engine = Engine::new(4);
+            let fresh = MapperCache::new();
+            let t0 = Instant::now();
+            let evals = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &fresh, &cfg);
+            (evals, t0.elapsed().as_secs_f64())
+        };
+        let _ = run_once(); // warmup: neither row pays first-touch costs
+        let (off_evals, t_off_a) = run_once();
+        let (_, t_off_b) = run_once();
+        let t_off = t_off_a.min(t_off_b);
+        let mut tpath = std::env::temp_dir();
+        tpath.push(format!("qmap_bench_trace_{}.jsonl", std::process::id()));
+        let tpath = tpath.to_string_lossy().into_owned();
+        qmap::obs::trace_to(&tpath).expect("attach trace");
+        let (on_evals, t_on_a) = run_once();
+        let (_, t_on_b) = run_once();
+        let t_on = t_on_a.min(t_on_b);
+        qmap::obs::trace_close();
+        let off_edps: Vec<Option<f64>> =
+            off_evals.iter().map(|e| e.as_ref().map(|e| e.edp)).collect();
+        let on_edps: Vec<Option<f64>> =
+            on_evals.iter().map(|e| e.as_ref().map(|e| e.edp)).collect();
+        assert_eq!(off_edps, on_edps, "tracing must be observation-only");
+        if let Some(r) = &reference {
+            assert_eq!(r, &on_edps, "traced run must match the engine rows");
+        }
+        let _ = std::fs::remove_file(&tpath);
+        let pct = (t_on / t_off.max(1e-9) - 1.0) * 100.0;
+        println!(
+            "engine: {pop_n} genomes, trace attached vs detached        on {:.1} ms, off {:.1} ms",
+            t_on * 1e3,
+            t_off * 1e3
+        );
+        println!("  -> trace overhead {pct:+.1}% (ceiling-guarded)");
+        pct
+    };
+
     let t_1w = engine_rows[0].1;
     for &(w, dt) in &engine_rows {
         println!("  -> engine speedup at {w} workers: {:.2}x", t_1w / dt.max(1e-12));
@@ -595,6 +604,7 @@ fn main() {
     println!("  checkpoint_snapshot_ms       = {ck_full_ms:.1}");
     println!("  checkpoint_journal_ms        = {ck_append_ms:.1}");
     println!("  checkpoint_speedup_x         = {checkpoint_speedup:.1}");
+    println!("  trace_overhead_pct           = {trace_overhead_pct:.1}");
 
     let record = Json::obj(vec![
         ("bench", Json::Str("perf_hotpath".into())),
@@ -674,6 +684,9 @@ fn main() {
         ("nsga_select_3obj_ms", Json::Num(nsga3_ms)),
         ("nsga_k3_vs_k2_x", Json::Num(nsga_k3_vs_k2_x)),
         ("objectives3_generation_ms", Json::Num(obj3_gen_ms)),
+        // cost of an attached JSONL trace on a full generation
+        // (bit-identity asserted above; ceiling-guarded)
+        ("trace_overhead_pct", Json::Num(trace_overhead_pct)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
     match std::fs::write(path, record.to_string()) {

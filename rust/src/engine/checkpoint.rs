@@ -49,11 +49,13 @@ use crate::mapper::cache::MapperCache;
 use crate::mapper::MapperConfig;
 use crate::nsga::{Individual, NsgaConfig, SearchState};
 use crate::objective::{ObjectiveSpec, ObjectiveVec};
+use crate::obs::{self, metrics};
 use crate::quant::QuantConfig;
 use crate::util::json::{parse, Json};
 use crate::util::rng::Rng;
 use std::io::Write as _;
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Journal format version (the `journal` field of the header frame).
 const JOURNAL_VERSION: f64 = 1.0;
@@ -420,13 +422,32 @@ impl Checkpointer {
                     }
                     buf.push_str(&Self::mark_frame(st).to_string());
                     buf.push('\n');
+                    let t_write = Instant::now();
                     app.file
                         .write_all(buf.as_bytes())
                         .map_err(|e| format!("{}: {e}", self.path))?;
+                    let write_us = t_write.elapsed().as_secs_f64() * 1e6;
                     // the mark is the durability point: a resumed
                     // search restarts from the last mark on disk
+                    let t_sync = Instant::now();
                     app.file.sync_data().map_err(|e| format!("{}: {e}", self.path))?;
+                    let fsync_us = t_sync.elapsed().as_secs_f64() * 1e6;
                     app.appended += n_pending;
+                    {
+                        use std::sync::atomic::Ordering::Relaxed;
+                        let c = metrics::counters();
+                        c.ckpt_appends.fetch_add(1, Relaxed);
+                        c.ckpt_append_entries.fetch_add(n_pending as u64, Relaxed);
+                        c.ckpt_fsync_us.fetch_add(fsync_us as u64, Relaxed);
+                    }
+                    obs::event(
+                        "ckpt_append",
+                        vec![
+                            ("entries", Json::Num(n_pending as f64)),
+                            ("write_us", Json::Num(write_us)),
+                            ("fsync_us", Json::Num(fsync_us)),
+                        ],
+                    );
                     Ok(app.appended)
                 })());
             }
@@ -441,7 +462,19 @@ impl Checkpointer {
             Some(Ok(n)) => {
                 if n > self.compact_slack + 2 * cache.len() {
                     match self.rewrite(st, cache, ident) {
-                        Ok(app) => *guard = Some(app),
+                        Ok(app) => {
+                            metrics::counters()
+                                .ckpt_compactions
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            obs::event(
+                                "ckpt_compact",
+                                vec![
+                                    ("frames", Json::Num(n as f64)),
+                                    ("entries", Json::Num(cache.len() as f64)),
+                                ],
+                            );
+                            *guard = Some(app)
+                        }
                         Err(e) => {
                             // the rename may already have happened: the
                             // old handle could point at an unlinked

@@ -34,7 +34,9 @@ use crate::mapping::mapspace::MapSpace;
 use crate::mapping::LayerContext;
 use crate::nsga::{self, Individual, NsgaConfig};
 use crate::objective::{ObjectiveSpec, ObjectiveVec};
+use crate::obs::{self, metrics};
 use crate::quant::{LayerQuant, QuantConfig};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::ConvLayer;
 use rustc_hash::FxHashMap;
@@ -161,13 +163,45 @@ fn search_on_engine_keyed(
     let specs = mapper::shard_plan(cfg, cfg.seed ^ whash);
     let split = specs.len() > 1
         && (engine.pool().idle_workers() > 0 || (force_split && engine.workers() > 1));
+    // the cascade stage counts ride on the side of each outcome —
+    // `ShardOutcome` is wire format and stays untouched, and the
+    // counters can't feed back into the search (see `obs`)
+    let run = |s: &mapper::ShardSpec| {
+        let (outcome, stats) = mapper::run_shard_with_stats(&space, &lctx, s);
+        note_shard(&layer.name, whash, &stats);
+        outcome
+    };
     let outcomes = if split {
         engine.note_split();
-        engine.map(&specs, |s| mapper::run_shard(&space, &lctx, s))
+        engine.map(&specs, run)
     } else {
-        specs.iter().map(|s| mapper::run_shard(&space, &lctx, s)).collect()
+        specs.iter().map(run).collect()
     };
     mapper::merge_shards(outcomes)
+}
+
+/// Fold one finished shard's cascade stage counts into the process
+/// counters and the event stream. Pure observation, after the fact: the
+/// outcome the caller merges is already computed and untouched.
+pub(crate) fn note_shard(layer: &str, whash: u64, stats: &mapper::ShardStats) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let c = metrics::counters();
+    c.shards.fetch_add(1, Relaxed);
+    c.shard_draws.fetch_add(stats.draws(), Relaxed);
+    c.shard_spatial_rejects.fetch_add(stats.spatial_rejects, Relaxed);
+    c.shard_tile_rejects.fetch_add(stats.tile_rejects, Relaxed);
+    c.shard_valid.fetch_add(stats.valid, Relaxed);
+    obs::event(
+        "shard",
+        vec![
+            ("layer", Json::Str(layer.to_string())),
+            ("whash", Json::hex_u64(whash)),
+            ("draws", Json::Num(stats.draws() as f64)),
+            ("valid", Json::Num(stats.valid as f64)),
+            ("spatial_rejects", Json::Num(stats.spatial_rejects as f64)),
+            ("tile_rejects", Json::Num(stats.tile_rejects as f64)),
+        ],
+    );
 }
 
 /// Inject a generation's jobs in scheduler order (see [`SchedPolicy`]).
@@ -227,6 +261,12 @@ pub fn evaluate_genomes(
     if genomes.is_empty() {
         return Vec::new();
     }
+    // the single place per-generation stats reset (EngineStats reset
+    // contract); the deltas below feed the gen_eval trace event
+    engine.begin_generation();
+    let counters = metrics::counters();
+    let (hits0, misses0) = (cache.hits(), cache.misses());
+    let stats0 = engine.stats();
     // One WorkloadKey per (genome, layer), computed up front: the
     // alive-check, the dedup map, the scheduler, the cache probes, and
     // the final assembly all reuse these handles, so a generation's
@@ -248,28 +288,48 @@ pub fn evaluate_genomes(
     // exactly as the serial path would.
     let alive: Vec<bool> = keys
         .iter()
-        .map(|ks| ks.iter().all(|&wk| cache.probe_key(wk, cfg) != Some(None)))
+        .map(|ks| {
+            ks.iter().all(|&wk| {
+                let probe = cache.probe_key(wk, cfg);
+                match &probe {
+                    Some(Some(_)) => &counters.cache_probe_hits,
+                    Some(None) => &counters.cache_probe_negative,
+                    None => &counters.cache_probe_misses,
+                }
+                .fetch_add(1, Ordering::Relaxed);
+                probe != Some(None)
+            })
+        })
         .collect();
-    // unique jobs across the live population, in first-encounter order
+    // unique jobs across the live population, in first-encounter order;
+    // `refs` counts how many (genome, layer) pairs each unique job
+    // serves — the dedup leverage the job trace events report
     let mut index: FxHashMap<WorkloadKey, usize> = FxHashMap::default();
     let mut jobs: Vec<EvalJob> = Vec::new();
+    let mut refs: Vec<u64> = Vec::new();
     for (gi, qc) in genomes.iter().enumerate() {
         if !alive[gi] {
             continue;
         }
         for i in 0..layers.len() {
             let wk = keys[gi][i];
-            if !index.contains_key(&wk) {
-                index.insert(wk, jobs.len());
-                jobs.push(EvalJob {
-                    layer_index: i,
-                    quant: qc.layer(i).canonical(arch.word_bits, arch.bit_packing),
-                    key: wk,
-                });
+            match index.get(&wk) {
+                Some(&j) => refs[j] += 1,
+                None => {
+                    index.insert(wk, jobs.len());
+                    jobs.push(EvalJob {
+                        layer_index: i,
+                        quant: qc.layer(i).canonical(arch.word_bits, arch.bit_packing),
+                        key: wk,
+                    });
+                    refs.push(1);
+                }
             }
         }
     }
+    let pairs: u64 = refs.iter().sum();
     engine.note_jobs(jobs.len() as u64);
+    counters.jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed);
     match engine.backend() {
         // local: the unique jobs fan out over the work-stealing pool in
         // scheduler order (priority by default — largest effective draw
@@ -295,7 +355,17 @@ pub fn evaluate_genomes(
                     tail_mode,
                 );
                 remaining.fetch_sub(1, Ordering::Relaxed);
-                (claimed, t0.elapsed().as_secs_f64())
+                let done = t0.elapsed().as_secs_f64();
+                obs::event(
+                    "job",
+                    vec![
+                        ("layer", Json::Str(layers[job.layer_index].name.clone())),
+                        ("whash", Json::hex_u64(job.key.whash)),
+                        ("refs", Json::Num(refs[index[&job.key]] as f64)),
+                        ("us", Json::Num((done - claimed) * 1e6)),
+                    ],
+                );
+                (claimed, done)
             });
             // generation tail = last finish minus last claim: once the
             // final job has been claimed the queue is dry, and whatever
@@ -313,6 +383,25 @@ pub fn evaluate_genomes(
             remote::eval_jobs(engine, arch, layers, &jobs, cache, cfg, &addrs);
         }
     }
+    // one generation-summary event: cache/steal/split deltas over the
+    // job phase (assembly below probes warm entries only and would
+    // drown the signal, so it is excluded on purpose)
+    let stats1 = engine.stats();
+    let (d_steals, d_splits) = (stats1.steals - stats0.steals, stats1.splits - stats0.splits);
+    counters.steals.fetch_add(d_steals, Ordering::Relaxed);
+    counters.splits.fetch_add(d_splits, Ordering::Relaxed);
+    obs::event(
+        "gen_eval",
+        vec![
+            ("pairs", Json::Num(pairs as f64)),
+            ("unique_jobs", Json::Num(jobs.len() as f64)),
+            ("cache_hits", Json::Num((cache.hits() - hits0) as f64)),
+            ("cache_misses", Json::Num((cache.misses() - misses0) as f64)),
+            ("steals", Json::Num(d_steals as f64)),
+            ("splits", Json::Num(d_splits as f64)),
+            ("tail_ms", Json::Num(stats1.last_tail_ms)),
+        ],
+    );
     // assemble per genome through the cache (every probe is a hit: the
     // job phase above inserted a positive or negative entry for each
     // unique workload), walking layers in index order and

@@ -100,8 +100,16 @@ impl WorkerSource {
                     .map(str::to_string)
                     .collect(),
                 Err(e) => {
-                    eprintln!(
-                        "qmap: workers file {path}: {e} (running local-only this generation)"
+                    crate::obs::event_human(
+                        crate::obs::Level::Status,
+                        "workers_file_error",
+                        vec![
+                            ("path", crate::util::json::Json::Str(path.clone())),
+                            ("detail", crate::util::json::Json::Str(e.to_string())),
+                        ],
+                        &format!(
+                            "qmap: workers file {path}: {e} (running local-only this generation)"
+                        ),
                     );
                     Vec::new()
                 }
@@ -194,6 +202,15 @@ pub struct Engine {
 }
 
 /// A point-in-time snapshot of the engine's counters.
+///
+/// Two kinds of field live here, with different reset semantics:
+/// **cumulative** fields (`jobs`, `splits`, `tasks`, `steals`,
+/// `remote_jobs`, `requeued_specs`, `lost_workers`) only ever grow over
+/// the engine's lifetime, while **per-generation** fields
+/// (`last_tail_ms`, `last_pipeline_depth`) describe the most recent
+/// generation only and are zeroed in exactly one place —
+/// [`Engine::begin_generation`], called at the top of every generation
+/// evaluation ([`driver::evaluate_genomes`], [`remote::eval_jobs`]).
 #[derive(Debug, Clone, Copy)]
 pub struct EngineStats {
     /// Total concurrency budget (workers + the submitting thread).
@@ -366,8 +383,14 @@ impl Engine {
         self.eff_pipeline.fetch_max(depth as u64, Ordering::Relaxed);
     }
 
-    /// Start a fresh per-generation pipeline-depth reading.
-    pub(crate) fn reset_pipeline_depth(&self) {
+    /// Start a new generation's statistics window: the single place
+    /// the per-generation [`EngineStats`] fields (`last_tail_ms`,
+    /// `last_pipeline_depth`) are reset. Cumulative fields are never
+    /// touched. Called at the top of every generation evaluation;
+    /// calling it twice on the same boundary (driver, then the remote
+    /// path it delegates to) is harmless — both run before any note.
+    pub fn begin_generation(&self) {
+        self.tail_us.store(0, Ordering::Relaxed);
         self.eff_pipeline.store(0, Ordering::Relaxed);
     }
 
@@ -509,6 +532,45 @@ mod tests {
         // a static empty list still degrades to local
         let engine = Engine::distributed_source(1, WorkerSource::Static(Vec::new()));
         assert!(matches!(engine.backend(), Backend::Local));
+    }
+
+    #[test]
+    fn begin_generation_resets_per_generation_stats_only() {
+        let engine = Engine::new(2);
+        let xs: Vec<u64> = (0..20).collect();
+        let _ = engine.map(&xs, |&x| x);
+        engine.note_jobs(5);
+        engine.note_split();
+        engine.note_tail(0.25);
+        engine.note_pipeline_depth(3);
+        let before = engine.stats();
+        assert!(before.last_tail_ms > 0.0);
+        assert_eq!(before.last_pipeline_depth, 3);
+        engine.begin_generation();
+        let after = engine.stats();
+        // per-generation fields are zeroed...
+        assert_eq!(after.last_tail_ms, 0.0);
+        assert_eq!(after.last_pipeline_depth, 0);
+        // ...cumulative fields survive the boundary
+        assert_eq!(after.jobs, before.jobs);
+        assert_eq!(after.splits, before.splits);
+        assert_eq!(after.tasks, before.tasks);
+        assert_eq!(after.steals, before.steals);
+        assert_eq!(after.remote_jobs, before.remote_jobs);
+        assert_eq!(after.requeued_specs, before.requeued_specs);
+        assert_eq!(after.lost_workers, before.lost_workers);
+    }
+
+    #[test]
+    fn pipeline_depth_reading_is_max_within_a_generation() {
+        let engine = Engine::new(1);
+        engine.begin_generation();
+        engine.note_pipeline_depth(2);
+        engine.note_pipeline_depth(5);
+        engine.note_pipeline_depth(3);
+        assert_eq!(engine.stats().last_pipeline_depth, 5);
+        engine.begin_generation();
+        assert_eq!(engine.stats().last_pipeline_depth, 0);
     }
 
     #[test]

@@ -48,6 +48,7 @@ use crate::mapper::cache::{MapperCache, WorkloadKey};
 use crate::mapper::{self, MapperConfig, MapperResult, ShardOutcome, ShardSpec};
 use crate::mapping::mapspace::MapSpace;
 use crate::mapping::LayerContext;
+use crate::obs::{self, metrics, ring};
 use crate::quant::LayerQuant;
 use crate::util::json::Json;
 use crate::workload::ConvLayer;
@@ -449,19 +450,26 @@ fn handle_batch(
     let space = MapSpace::of(&arch);
     let lctx = LayerContext::new(&arch, &layer, &q);
     let cache = worker_cache();
+    let whash = mapper::workload_hash(&layer, &q);
+    let run_fresh = |spec: &ShardSpec| -> ShardOutcome {
+        let (out, stats) = mapper::run_shard_with_stats(&space, &lctx, spec);
+        super::driver::note_shard(&layer.name, whash, &stats);
+        out
+    };
     // the per-search outcome cache: a spec this worker has already run
     // for the same search (an earlier batch, an earlier generation, a
     // re-send after a lost connection) is served without re-searching —
     // the cached outcome is bit-identical to a fresh run by purity
     let run_cached = |spec: &ShardSpec| -> ShardOutcome {
         if opts.disable_outcome_cache {
-            return mapper::run_shard(&space, &lctx, spec);
+            return run_fresh(spec);
         }
         let key = shard_cache_key(&arch_src, &layer, &q, spec);
         if let Some(hit) = cache.get(search, key) {
+            metrics::counters().worker_cache_hits.fetch_add(1, Ordering::Relaxed);
             return hit;
         }
-        let out = mapper::run_shard(&space, &lctx, spec);
+        let out = run_fresh(spec);
         cache.put(search, key, &out);
         out
     };
@@ -501,6 +509,7 @@ fn handle_batch(
         }
     }
     proto::write_msg(writer, &proto::done(id))?;
+    metrics::counters().batches_served.fetch_add(1, Ordering::Relaxed);
     Ok(BatchEnd::Done)
 }
 
@@ -671,8 +680,29 @@ impl RemoteClient {
     /// The next `outcome`/`done` event on the connection. `error`
     /// frames, protocol violations, and transport failures are `Err` —
     /// the connection is then unusable and the caller re-runs whatever
-    /// its ledgers still miss.
+    /// its ledgers still miss. Every failure is recorded as a
+    /// `proto_error` event and triggers a flight-recorder dump, so the
+    /// frames leading up to a hostile or corrupted stream are on disk
+    /// before the caller falls back.
     pub fn recv_event(&mut self) -> Result<WorkerEvent, String> {
+        match self.recv_event_inner() {
+            Ok(ev) => Ok(ev),
+            Err(e) => {
+                metrics::counters().proto_errors.fetch_add(1, Ordering::Relaxed);
+                obs::event(
+                    "proto_error",
+                    vec![
+                        ("addr", Json::Str(self.addr.clone())),
+                        ("detail", Json::Str(e.clone())),
+                    ],
+                );
+                let _ = ring::dump("proto_error");
+                Err(e)
+            }
+        }
+    }
+
+    fn recv_event_inner(&mut self) -> Result<WorkerEvent, String> {
         let m = proto::read_msg(&mut self.reader)?;
         match proto::msg_type(&m)? {
             "outcome" => {
@@ -847,7 +877,9 @@ pub fn eval_jobs(
     let next = AtomicUsize::new(0);
     let timeout = worker_timeout();
     let depth = engine.pipeline_depth().max(1);
-    engine.reset_pipeline_depth();
+    // direct callers get the same per-generation stats window the
+    // driver opens (harmless double reset when called through it)
+    engine.begin_generation();
     std::thread::scope(|sc| {
         for addr in workers {
             let work = &work;
@@ -858,7 +890,15 @@ pub fn eval_jobs(
                 let mut client = match RemoteClient::connect(addr, timeout) {
                     Ok(c) => c,
                     Err(e) => {
-                        eprintln!("qmap: worker {addr} unavailable, staying local: {e}");
+                        obs::event_human(
+                            obs::Level::Status,
+                            "worker_unavailable",
+                            vec![
+                                ("addr", Json::Str(addr.clone())),
+                                ("detail", Json::Str(e.clone())),
+                            ],
+                            &format!("qmap: worker {addr} unavailable, staying local: {e}"),
+                        );
                         engine.note_lost_worker();
                         return;
                     }
@@ -946,6 +986,15 @@ pub fn eval_jobs(
                             };
                             sent_at.push((id, std::time::Instant::now()));
                             inflight.push((id, i));
+                            metrics::counters().batches_sent.fetch_add(1, Ordering::Relaxed);
+                            obs::event(
+                                "batch_sent",
+                                vec![
+                                    ("addr", Json::Str(addr.clone())),
+                                    ("batch", Json::Num(id as f64)),
+                                    ("whash", Json::hex_u64(w.key.whash)),
+                                ],
+                            );
                         }
                         if inflight.is_empty() {
                             return Ok(());
@@ -983,14 +1032,28 @@ pub fn eval_jobs(
                                         .iter()
                                         .position(|&(bid, _)| bid == id)
                                         .map(|p| first_out.swap_remove(p).1);
+                                    let (mut rtt, mut serve) = (0.0f64, 0.0f64);
                                     if let (Some(sent), Some(first)) = (sent, first) {
-                                        let rtt = first.duration_since(sent).as_secs_f64();
-                                        let serve = now.duration_since(first).as_secs_f64();
+                                        rtt = first.duration_since(sent).as_secs_f64();
+                                        serve = now.duration_since(first).as_secs_f64();
                                         rtt_ewma =
                                             Some(rtt_ewma.map_or(rtt, |e| (e + rtt) / 2.0));
                                         serve_ewma =
                                             Some(serve_ewma.map_or(serve, |e| (e + serve) / 2.0));
                                     }
+                                    metrics::counters()
+                                        .batches_done
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    obs::event(
+                                        "batch_done",
+                                        vec![
+                                            ("addr", Json::Str(addr.clone())),
+                                            ("batch", Json::Num(id as f64)),
+                                            ("rtt_us", Json::Num(rtt * 1e6)),
+                                            ("serve_us", Json::Num(serve * 1e6)),
+                                            ("depth_eff", Json::Num(eff_cell.get() as f64)),
+                                        ],
+                                    );
                                 }
                             }
                         }
@@ -1005,11 +1068,28 @@ pub fn eval_jobs(
                         .iter()
                         .map(|&(_, wi)| work[wi].ledger.lock().unwrap().missing().len())
                         .sum();
-                    eprintln!(
-                        "qmap: worker {addr} lost with {} batch(es) in flight, \
-                         re-injecting {owed} shard(s) into the local pool: {e}",
-                        inflight.len()
+                    let c = metrics::counters();
+                    c.batches_lost.fetch_add(inflight.len() as u64, Ordering::Relaxed);
+                    c.lost_workers.fetch_add(1, Ordering::Relaxed);
+                    obs::event_human(
+                        obs::Level::Status,
+                        "worker_lost",
+                        vec![
+                            ("addr", Json::Str(addr.clone())),
+                            ("batches_inflight", Json::Num(inflight.len() as f64)),
+                            ("owed_shards", Json::Num(owed as f64)),
+                            ("detail", Json::Str(e.clone())),
+                        ],
+                        &format!(
+                            "qmap: worker {addr} lost with {} batch(es) in flight, \
+                             re-injecting {owed} shard(s) into the local pool: {e}",
+                            inflight.len()
+                        ),
                     );
+                    // the forensics trigger: the ring now holds the
+                    // batch_sent/batch_done history leading up to the
+                    // loss, including the failing batch's span
+                    let _ = ring::dump("worker_lost");
                     engine.note_requeued(owed as u64);
                     engine.note_lost_worker();
                 }
@@ -1040,13 +1120,17 @@ pub fn eval_jobs(
             let missing = ledger.missing();
             let space = MapSpace::of(arch);
             let lctx = LayerContext::new(arch, w.layer, &w.quant);
-            let refills =
-                engine.map(&missing, |&i| mapper::run_shard(&space, &lctx, &specs[i]));
+            let run = |spec: &ShardSpec| {
+                let (out, stats) = mapper::run_shard_with_stats(&space, &lctx, spec);
+                super::driver::note_shard(&w.layer.name, w.key.whash, &stats);
+                out
+            };
+            let refills = engine.map(&missing, |&i| run(&specs[i]));
             let mut ledger = ledger;
             for (&i, out) in missing.iter().zip(refills) {
                 let _ = ledger.deliver(i, out);
             }
-            ledger.finalize(|_, spec| mapper::run_shard(&space, &lctx, spec))
+            ledger.finalize(|_, spec| run(spec))
         };
         cache.insert_search_key(w.key, cfg, &result);
     }
@@ -1058,7 +1142,11 @@ fn run_job_local(engine: &Engine, arch: &Arch, w: &Work) {
     let specs: Vec<ShardSpec> = w.ledger.lock().unwrap().specs().to_vec();
     let space = MapSpace::of(arch);
     let lctx = LayerContext::new(arch, w.layer, &w.quant);
-    let outs = engine.map(&specs, |s| mapper::run_shard(&space, &lctx, s));
+    let outs = engine.map(&specs, |s| {
+        let (out, stats) = mapper::run_shard_with_stats(&space, &lctx, s);
+        super::driver::note_shard(&w.layer.name, w.key.whash, &stats);
+        out
+    });
     let mut ledger = w.ledger.lock().unwrap();
     for (i, out) in outs.into_iter().enumerate() {
         let _ = ledger.deliver(i, out);

@@ -28,6 +28,7 @@ pub mod mapping;
 pub mod nest;
 pub mod nsga;
 pub mod objective;
+pub mod obs;
 pub mod quant;
 pub mod report;
 #[cfg(feature = "pjrt")]

@@ -15,9 +15,11 @@ use qmap::mapper::cache::MapperCache;
 use qmap::mapper::{self, MapperConfig};
 use qmap::mapping::mapspace::MapSpace;
 use qmap::objective::ObjectiveSpec;
+use qmap::obs::{self, Level};
 use qmap::quant::{LayerQuant, QuantConfig};
 use qmap::report;
 use qmap::util::cli::Args;
+use qmap::util::json::Json;
 use qmap::workload::{models, ConvLayer};
 
 const USAGE: &str = "\
@@ -58,11 +60,19 @@ characterize:
 
 distributed:
   worker    --listen HOST:PORT [--stdin-close]               serve mapper shard batches to a
-                                                             remote `qmap search --workers`
+            [--metrics HOST:PORT]                            remote `qmap search --workers`
                                                              driver (stateless; SIGTERM — and
                                                              stdin EOF with --stdin-close —
                                                              finishes the in-flight batch,
-                                                             flushes, exits 0)
+                                                             flushes, exits 0). --metrics
+                                                             serves Prometheus-style counters
+                                                             over HTTP
+
+observability:
+  trace-report FILE                                          summarize a `--trace` JSONL file
+                                                             (per-layer shard tables, cache and
+                                                             dedup rates, remote batches,
+                                                             checkpoint timing, faults)
 
 engine:
   engine-stats [--budget N] [--workers host:port,...|@file]  work-stealing pool self-test:
@@ -76,7 +86,9 @@ paper artifacts (same engines as `cargo bench`):
 runtime (needs `make artifacts`):
   train     [--steps 200] [--bits 8] [--lr 0.05]             PJRT QAT pre-training + loss curve
 
-global: --threads N, --seed S, --profile fast|default|full (or QMAP_PROFILE)
+global: --threads N, --seed S, --profile fast|default|full (or QMAP_PROFILE),
+        --trace FILE (JSONL event trace; bit-identical results, see trace-report),
+        --quiet / --progress (suppress / force progress lines on stderr)
 ";
 
 fn main() {
@@ -87,7 +99,7 @@ fn main() {
     };
     let args = match Args::parse(
         &argv[1..],
-        &["help", "csv", "no-packing", "emit", "resume", "stdin-close"],
+        &["help", "csv", "no-packing", "emit", "resume", "stdin-close", "progress", "quiet"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -98,6 +110,17 @@ fn main() {
     if args.flag("help") {
         print!("{USAGE}");
         return;
+    }
+    // flight recorder: the panic hook dumps the event ring for
+    // post-mortem forensics; --quiet routes every Progress-level stderr
+    // line through one policy (--progress wins when both are given)
+    obs::install_panic_hook();
+    obs::set_quiet(args.flag("quiet") && !args.flag("progress"));
+    if let Some(path) = args.get("trace") {
+        if let Err(e) = obs::trace_to(path) {
+            eprintln!("error: --trace {path}: {e}");
+            std::process::exit(2);
+        }
     }
     if let Some(p) = args.get("profile") {
         std::env::set_var("QMAP_PROFILE", p);
@@ -121,6 +144,7 @@ fn main() {
         "search" => cmd_search(&args, &rc),
         "worker" => cmd_worker(&args),
         "engine-stats" => cmd_engine_stats(&args, &rc),
+        "trace-report" => cmd_trace_report(&args),
         "fig1" => {
             let r = experiments::fig1_correlation(args.usize_or("n", 250), &rc);
             println!("pearson r size<->words {:+.4}, size<->EDP {:+.4}", r.r_size_words, r.r_size_edp);
@@ -189,6 +213,7 @@ fn main() {
             2
         }
     };
+    obs::trace_close();
     std::process::exit(code);
 }
 
@@ -266,7 +291,12 @@ fn pipeline_override(args: &Args) -> Option<usize> {
     match d.parse::<usize>() {
         Ok(d) if d >= 1 => Some(d),
         _ => {
-            eprintln!("warning: ignoring bad --pipeline '{d}' (want an integer >= 1)");
+            obs::event_human(
+                Level::Status,
+                "warn",
+                vec![("detail", Json::Str(format!("bad --pipeline '{d}'")))],
+                &format!("warning: ignoring bad --pipeline '{d}' (want an integer >= 1)"),
+            );
             None
         }
     }
@@ -279,10 +309,18 @@ fn pipeline_override(args: &Args) -> Option<usize> {
 fn build_engine(threads: usize, source: WorkerSource, args: &Args) -> Engine {
     let addrs = source.resolve();
     if !addrs.is_empty() {
-        eprintln!(
-            "distributing mapper shards to {} worker(s): {}",
-            addrs.len(),
-            addrs.join(", ")
+        obs::event_human(
+            Level::Progress,
+            "distribute",
+            vec![(
+                "workers",
+                Json::Arr(addrs.iter().map(|a| Json::Str(a.clone())).collect()),
+            )],
+            &format!(
+                "distributing mapper shards to {} worker(s): {}",
+                addrs.len(),
+                addrs.join(", ")
+            ),
         );
     }
     let mut engine = Engine::distributed_source(threads, source);
@@ -492,7 +530,12 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
     let axis0 = objectives.axes()[0].name();
     let progress = |g: usize, pop: &[qmap::nsga::Individual]| {
         let best = pop.iter().map(|i| i.objectives[0]).fold(f64::INFINITY, f64::min);
-        eprintln!("gen {g:>3}: best {axis0} {best:.3e}");
+        obs::event_human(
+            Level::Progress,
+            "gen_progress",
+            vec![("gen", Json::Num(g as f64)), ("best", Json::Num(best))],
+            &format!("gen {g:>3}: best {axis0} {best:.3e}"),
+        );
     };
     if args.flag("resume") && args.get("checkpoint").is_none() {
         return fail("--resume needs --checkpoint FILE");
@@ -527,7 +570,12 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
             let ckpt = Checkpointer::new(path);
             let resume = args.flag("resume");
             if resume && ckpt.exists() {
-                eprintln!("resuming from checkpoint {path}");
+                obs::event_human(
+                    Level::Progress,
+                    "resume",
+                    vec![("path", Json::Str(path.to_string()))],
+                    &format!("resuming from checkpoint {path}"),
+                );
             }
             match driver::search_resumable(
                 &engine, &arch, &layers, &mut acc, &cache, &rc.mapper, &nsga, &objectives,
@@ -551,9 +599,18 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
         // "remote job(s) > 0" proves the remote path actually executed
         // rather than silently degrading to local
         let st = engine.stats();
-        eprintln!(
-            "distributed: {} remote job(s), {} requeued spec(s), {} lost worker(s)",
-            st.remote_jobs, st.requeued_specs, st.lost_workers
+        obs::event_human(
+            Level::Status,
+            "distributed_summary",
+            vec![
+                ("remote_jobs", Json::Num(st.remote_jobs as f64)),
+                ("requeued_specs", Json::Num(st.requeued_specs as f64)),
+                ("lost_workers", Json::Num(st.lost_workers as f64)),
+            ],
+            &format!(
+                "distributed: {} remote job(s), {} requeued spec(s), {} lost worker(s)",
+                st.remote_jobs, st.requeued_specs, st.lost_workers
+            ),
         );
     }
     let reference = evaluate_network(
@@ -581,7 +638,12 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
         {
             let path = format!("{prefix}_{stem}.svg");
             match std::fs::write(&path, svg) {
-                Ok(()) => eprintln!("wrote {path}"),
+                Ok(()) => obs::event_human(
+                    Level::Progress,
+                    "wrote",
+                    vec![("path", Json::Str(path.clone()))],
+                    &format!("wrote {path}"),
+                ),
                 Err(e) => return fail(format!("{path}: {e}")),
             }
         }
@@ -671,10 +733,26 @@ fn cmd_worker(args: &Args) -> i32 {
             eprintln!("qmap worker: stdin watcher: {e}");
         }
     }
+    if let Some(maddr) = args.get("metrics") {
+        match obs::metrics::serve(maddr) {
+            Ok(bound) => obs::event_human(
+                Level::Status,
+                "metrics_serve",
+                vec![("addr", Json::Str(bound.clone()))],
+                &format!("qmap worker metrics on http://{bound}/metrics"),
+            ),
+            Err(e) => return fail(format!("metrics {maddr}: {e}")),
+        }
+    }
     // the "listening" line is what scripts (and the CI smoke) wait for
-    eprintln!(
-        "qmap worker listening on {local} (protocol v{})",
-        qmap::engine::proto::VERSION
+    obs::event_human(
+        Level::Status,
+        "worker_listen",
+        vec![("addr", Json::Str(local.clone()))],
+        &format!(
+            "qmap worker listening on {local} (protocol v{})",
+            qmap::engine::proto::VERSION
+        ),
     );
     let opts = qmap::engine::WorkerOptions {
         shutdown: Some(shutdown),
@@ -686,6 +764,27 @@ fn cmd_worker(args: &Args) -> i32 {
         return 0;
     }
     fail("worker accept loop ended")
+}
+
+/// Summarize a `--trace` JSONL file: per-layer shard tables, dedup and
+/// cache rates, remote batch latencies, checkpoint timing, and any
+/// recorded faults. Pure text over the recorded events — running it
+/// never touches a search.
+fn cmd_trace_report(args: &Args) -> i32 {
+    let Some(path) = args.positional.first() else {
+        return fail("trace-report needs a trace file: qmap trace-report FILE");
+    };
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => return fail(format!("{path}: {e}")),
+    };
+    match obs::report::report(&src) {
+        Ok(text) => {
+            print!("{text}");
+            0
+        }
+        Err(e) => fail(format!("{path}: {e}")),
+    }
 }
 
 /// Exercise the work-stealing engine on a small synthetic population and

@@ -354,6 +354,159 @@ pub fn shard_plan(cfg: &MapperConfig, base_seed: u64) -> Vec<ShardSpec> {
 /// a shard the first strictly-lower EDP wins, so the result is
 /// deterministic in the seed.
 pub fn run_shard(space: &MapSpace, lctx: &LayerContext, spec: &ShardSpec) -> ShardOutcome {
+    run_shard_observed(space, lctx, spec, &mut NoObserver)
+}
+
+/// The cascade stage an observer is being handed ([`StageObserver::timed`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// `random_mapping_into` over a block.
+    Draw,
+    /// `check_spatial` over a block, plus per-survivor `check_tiles_into`.
+    Check,
+    /// `analyze_prefilled` + `estimate_into` for an accepted candidate.
+    Price,
+}
+
+/// Per-stage observation hooks for [`run_shard`]'s staged cascade.
+/// The hooks only *see* stage outcomes after the fact — they cannot
+/// alter draws, checks, or pricing, so an observed shard is
+/// bit-identical to an unobserved one by construction. All default
+/// methods are no-ops: the plain [`run_shard`] monomorphizes over
+/// [`NoObserver`] and compiles to the exact uninstrumented loop.
+pub trait StageObserver {
+    /// Run one cascade stage (optionally timing it — the default runs
+    /// the stage untimed).
+    #[inline(always)]
+    fn timed<R>(&mut self, _stage: Stage, f: impl FnOnce() -> R) -> R {
+        f()
+    }
+    #[inline(always)]
+    fn spatial_reject(&mut self) {}
+    #[inline(always)]
+    fn tile_reject(&mut self) {}
+    #[inline(always)]
+    fn accept(&mut self) {}
+}
+
+/// The no-op observer behind the plain [`run_shard`].
+pub struct NoObserver;
+impl StageObserver for NoObserver {}
+
+/// Cascade stage counts for one shard: every draw lands in exactly one
+/// of the three buckets, so `spatial_rejects + tile_rejects + valid`
+/// equals the shard's draw count. Counting costs three predictable
+/// integer increments per candidate and no timer reads — cheap enough
+/// for the engine to leave on for every shard it executes.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Killed by the pure-integer spatial pre-check.
+    pub spatial_rejects: u64,
+    /// Survived the spatial stage, rejected by the tile/capacity check.
+    pub tile_rejects: u64,
+    /// Fully accepted and priced.
+    pub valid: u64,
+}
+
+impl ShardStats {
+    /// Total candidates observed (the partition property).
+    pub fn draws(&self) -> u64 {
+        self.spatial_rejects + self.tile_rejects + self.valid
+    }
+
+    pub fn merge(&mut self, other: &ShardStats) {
+        self.spatial_rejects += other.spatial_rejects;
+        self.tile_rejects += other.tile_rejects;
+        self.valid += other.valid;
+    }
+}
+
+impl StageObserver for ShardStats {
+    #[inline(always)]
+    fn spatial_reject(&mut self) {
+        self.spatial_rejects += 1;
+    }
+    #[inline(always)]
+    fn tile_reject(&mut self) {
+        self.tile_rejects += 1;
+    }
+    #[inline(always)]
+    fn accept(&mut self) {
+        self.valid += 1;
+    }
+}
+
+/// [`ShardStats`] plus per-stage wall-clock — the bench-grade
+/// instrumentation behind `perf_hotpath`'s stage-split rows (it
+/// replaced the cumulative-prefix triple-run timing hack). Timer reads
+/// happen per block for draw/spatial and per surviving candidate for
+/// tile-check/pricing, so don't leave this variant on in the engine —
+/// use [`run_shard_with_stats`] there.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ShardStageStats {
+    pub stats: ShardStats,
+    pub draw_ns: u64,
+    pub check_ns: u64,
+    pub price_ns: u64,
+}
+
+impl StageObserver for ShardStageStats {
+    #[inline(always)]
+    fn timed<R>(&mut self, stage: Stage, f: impl FnOnce() -> R) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        let ns = t0.elapsed().as_nanos() as u64;
+        match stage {
+            Stage::Draw => self.draw_ns += ns,
+            Stage::Check => self.check_ns += ns,
+            Stage::Price => self.price_ns += ns,
+        }
+        r
+    }
+    #[inline(always)]
+    fn spatial_reject(&mut self) {
+        self.stats.spatial_reject();
+    }
+    #[inline(always)]
+    fn tile_reject(&mut self) {
+        self.stats.tile_reject();
+    }
+    #[inline(always)]
+    fn accept(&mut self) {
+        self.stats.accept();
+    }
+}
+
+/// [`run_shard`] with cascade stage counts on the side. The outcome is
+/// bit-identical to [`run_shard`]'s — `ShardOutcome` itself is wire
+/// format and must not grow fields, so the stats travel separately.
+pub fn run_shard_with_stats(
+    space: &MapSpace,
+    lctx: &LayerContext,
+    spec: &ShardSpec,
+) -> (ShardOutcome, ShardStats) {
+    let mut stats = ShardStats::default();
+    let out = run_shard_observed(space, lctx, spec, &mut stats);
+    (out, stats)
+}
+
+/// [`run_shard`] with stage counts *and* per-stage wall-clock.
+pub fn run_shard_timed(
+    space: &MapSpace,
+    lctx: &LayerContext,
+    spec: &ShardSpec,
+) -> (ShardOutcome, ShardStageStats) {
+    let mut stats = ShardStageStats::default();
+    let out = run_shard_observed(space, lctx, spec, &mut stats);
+    (out, stats)
+}
+
+fn run_shard_observed<O: StageObserver>(
+    space: &MapSpace,
+    lctx: &LayerContext,
+    spec: &ShardSpec,
+    o: &mut O,
+) -> ShardOutcome {
     let (seed, valid_target, max_draws) = (spec.seed, spec.valid_target, spec.max_draws);
     let mut ctx = EvalContext::with_dims(lctx.num_levels, space.slots());
     let mut rng = Rng::new(seed);
@@ -364,26 +517,38 @@ pub fn run_shard(space: &MapSpace, lctx: &LayerContext, spec: &ShardSpec) -> Sha
     'blocks: while valid < valid_target && draws < max_draws {
         let block = (EVAL_BLOCK as u64).min(max_draws - draws) as usize;
 
-        for m in &mut ctx.batch[..block] {
-            space.random_mapping_into(lctx, &mut rng, &mut ctx.fbuf, m);
-        }
+        o.timed(Stage::Draw, || {
+            for m in &mut ctx.batch[..block] {
+                space.random_mapping_into(lctx, &mut rng, &mut ctx.fbuf, m);
+            }
+        });
 
-        for i in 0..block {
-            ctx.live[i] = lctx.check_spatial(&ctx.batch[i]).is_ok();
-        }
+        o.timed(Stage::Check, || {
+            for i in 0..block {
+                ctx.live[i] = lctx.check_spatial(&ctx.batch[i]).is_ok();
+            }
+        });
 
         for i in 0..block {
             draws += 1;
             if !ctx.live[i] {
+                o.spatial_reject();
                 continue;
             }
             let m = &ctx.batch[i];
-            if lctx.check_tiles_into(m, &mut ctx.ext, &mut ctx.elems).is_err() {
+            let tiles = o.timed(Stage::Check, || {
+                lctx.check_tiles_into(m, &mut ctx.ext, &mut ctx.elems)
+            });
+            if tiles.is_err() {
+                o.tile_reject();
                 continue;
             }
             valid += 1;
-            analyze_prefilled(lctx, m, &ctx.elems, &mut ctx.nest);
-            estimate_into(lctx, &ctx.nest, &mut ctx.est);
+            o.accept();
+            o.timed(Stage::Price, || {
+                analyze_prefilled(lctx, m, &ctx.elems, &mut ctx.nest);
+                estimate_into(lctx, &ctx.nest, &mut ctx.est);
+            });
             let edp = ctx.est.edp();
             match &mut best {
                 Some((b, be, bm)) => {
@@ -574,6 +739,33 @@ mod tests {
         let r2 = search(&a, &l, &q, &cfg);
         assert_eq!(r1.best.map(|e| e.edp()), r2.best.map(|e| e.edp()));
         assert_eq!(r1.valid, r2.valid);
+    }
+
+    #[test]
+    fn observed_shard_is_bit_identical_and_stats_partition_draws() {
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(4).canonical(a.word_bits, a.bit_packing);
+        let space = MapSpace::of(&a);
+        let lctx = LayerContext::new(&a, &l, &q);
+        for spec in [
+            ShardSpec { seed: 9, valid_target: 80, max_draws: 40_000 },
+            // draw-bounded: the budget runs out mid-block
+            ShardSpec { seed: 9, valid_target: u64::MAX, max_draws: 1000 },
+            // degenerate: zero budget
+            ShardSpec { seed: 9, valid_target: 10, max_draws: 0 },
+        ] {
+            let plain = run_shard(&space, &lctx, &spec);
+            let (counted, stats) = run_shard_with_stats(&space, &lctx, &spec);
+            let (timed, tstats) = run_shard_timed(&space, &lctx, &spec);
+            // observation cannot move a single bit of the outcome
+            assert_eq!(plain, counted, "{spec:?}");
+            assert_eq!(plain, timed, "{spec:?}");
+            // every draw lands in exactly one stage-outcome bucket
+            assert_eq!(stats.draws(), plain.draws(), "{spec:?}");
+            assert_eq!(stats.valid, plain.valid(), "{spec:?}");
+            assert_eq!(tstats.stats, stats, "{spec:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Aggregated hot-path counters and the Prometheus-style text
+//! endpoint (`qmap worker --metrics ADDR`).
+//!
+//! Counters are process-global relaxed atomics, incremented *outside*
+//! the RNG/evaluation path (stage counts are folded per finished
+//! shard, cache probe outcomes per scheduling probe, journal timings
+//! per checkpoint save) — observability never changes what the search
+//! computes, only what it reports.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Every process-global counter. Names mirror the Prometheus rows in
+/// [`render_prometheus`] (`qmap_<name>_total`).
+#[derive(Default)]
+pub struct Counters {
+    // mapper cascade (folded per finished shard)
+    pub shard_draws: AtomicU64,
+    pub shard_spatial_rejects: AtomicU64,
+    pub shard_tile_rejects: AtomicU64,
+    pub shard_valid: AtomicU64,
+    pub shards: AtomicU64,
+    // cache probe outcomes on the scheduling path
+    pub cache_probe_hits: AtomicU64,
+    pub cache_probe_negative: AtomicU64,
+    pub cache_probe_misses: AtomicU64,
+    // engine (per-generation deltas folded at the boundary)
+    pub steals: AtomicU64,
+    pub splits: AtomicU64,
+    pub jobs: AtomicU64,
+    // remote batch lifecycle (both driver and worker side)
+    pub batches_sent: AtomicU64,
+    pub batches_done: AtomicU64,
+    pub batches_lost: AtomicU64,
+    pub batches_served: AtomicU64,
+    pub proto_errors: AtomicU64,
+    pub lost_workers: AtomicU64,
+    pub worker_cache_hits: AtomicU64,
+    // checkpoint journal
+    pub ckpt_appends: AtomicU64,
+    pub ckpt_append_entries: AtomicU64,
+    pub ckpt_fsync_us: AtomicU64,
+    pub ckpt_compactions: AtomicU64,
+    // forensics
+    pub dumps: AtomicU64,
+}
+
+static COUNTERS: OnceLock<Counters> = OnceLock::new();
+
+pub fn counters() -> &'static Counters {
+    COUNTERS.get_or_init(Counters::default)
+}
+
+impl Counters {
+    /// Snapshot as `(name, value)` rows, fixed order.
+    pub fn rows(&self) -> Vec<(&'static str, u64)> {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        vec![
+            ("shard_draws", g(&self.shard_draws)),
+            ("shard_spatial_rejects", g(&self.shard_spatial_rejects)),
+            ("shard_tile_rejects", g(&self.shard_tile_rejects)),
+            ("shard_valid", g(&self.shard_valid)),
+            ("shards", g(&self.shards)),
+            ("cache_probe_hits", g(&self.cache_probe_hits)),
+            ("cache_probe_negative", g(&self.cache_probe_negative)),
+            ("cache_probe_misses", g(&self.cache_probe_misses)),
+            ("steals", g(&self.steals)),
+            ("splits", g(&self.splits)),
+            ("jobs", g(&self.jobs)),
+            ("batches_sent", g(&self.batches_sent)),
+            ("batches_done", g(&self.batches_done)),
+            ("batches_lost", g(&self.batches_lost)),
+            ("batches_served", g(&self.batches_served)),
+            ("proto_errors", g(&self.proto_errors)),
+            ("lost_workers", g(&self.lost_workers)),
+            ("worker_cache_hits", g(&self.worker_cache_hits)),
+            ("ckpt_appends", g(&self.ckpt_appends)),
+            ("ckpt_append_entries", g(&self.ckpt_append_entries)),
+            ("ckpt_fsync_us", g(&self.ckpt_fsync_us)),
+            ("ckpt_compactions", g(&self.ckpt_compactions)),
+            ("dumps", g(&self.dumps)),
+        ]
+    }
+}
+
+/// Render every counter in the Prometheus text exposition format.
+pub fn render_prometheus() -> String {
+    let mut out = String::with_capacity(2048);
+    out.push_str("# qmap search-engine counters (schema ");
+    out.push_str(&super::SCHEMA_VERSION.to_string());
+    out.push_str(")\n");
+    for (name, v) in counters().rows() {
+        out.push_str("# TYPE qmap_");
+        out.push_str(name);
+        out.push_str("_total counter\nqmap_");
+        out.push_str(name);
+        out.push_str("_total ");
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Serve [`render_prometheus`] over plain HTTP/1.0 on `addr` from a
+/// background thread (the same std-only TCP machinery as the worker
+/// protocol — one response per connection, then close). Returns the
+/// bound local address, e.g. for `--metrics 127.0.0.1:0`.
+pub fn serve(addr: &str) -> std::io::Result<String> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?.to_string();
+    std::thread::Builder::new()
+        .name("qmap-metrics".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { continue };
+                // drain whatever request line arrived; the response is
+                // the same for every path
+                let mut buf = [0u8; 1024];
+                let _ = stream.read(&mut buf);
+                let body = render_prometheus();
+                let _ = write!(
+                    stream,
+                    "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+            }
+        })?;
+    Ok(local)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    #[test]
+    fn prometheus_rendering_names_every_counter() {
+        counters().shard_draws.fetch_add(3, Ordering::Relaxed);
+        let text = render_prometheus();
+        for (name, _) in counters().rows() {
+            assert!(text.contains(&format!("qmap_{name}_total ")), "missing row {name}:\n{text}");
+        }
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_counters_over_tcp() {
+        let addr = serve("127.0.0.1:0").expect("bind metrics");
+        counters().batches_served.fetch_add(1, Ordering::Relaxed);
+        let mut stream = TcpStream::connect(&addr).expect("connect metrics");
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(stream, "GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut lines = BufReader::new(stream).lines();
+        let status = lines.next().expect("status line").expect("readable");
+        assert!(status.starts_with("HTTP/1.0 200"), "{status}");
+        let body: Vec<String> = lines.map_while(Result::ok).collect();
+        assert!(body.iter().any(|l| l.starts_with("qmap_batches_served_total ")), "{body:?}");
+        // a second scrape still answers (the listener loops)
+        let mut s2 = TcpStream::connect(&addr).expect("reconnect");
+        write!(s2, "GET / HTTP/1.0\r\n\r\n").unwrap();
+        let mut first = String::new();
+        BufReader::new(s2).read_line(&mut first).unwrap();
+        assert!(first.starts_with("HTTP/1.0 200"), "{first}");
+    }
+}

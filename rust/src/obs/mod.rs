@@ -1,0 +1,242 @@
+//! §Observability: structured tracing, metrics, and fault forensics.
+//!
+//! A std-only, zero-dependency flight recorder for the search engine.
+//! Three sinks hang off one event stream:
+//!
+//! * an **always-on bounded ring buffer** ([`ring`]) holding the last
+//!   [`ring::RING_CAPACITY`] rendered events, dumped to a JSONL file on
+//!   panic, lost worker, or protocol error ([`ring::dump`]) for
+//!   post-mortem forensics;
+//! * an **optional JSONL trace file** (`qmap search --trace FILE`):
+//!   schema-versioned ([`SCHEMA_VERSION`]), one event per line, with a
+//!   deterministic field order for free — events render through
+//!   [`Json::obj`], whose `BTreeMap` sorts keys;
+//! * the **console**: events carrying a human rendering print to
+//!   stderr under the single `--progress`/`--quiet` policy
+//!   ([`set_quiet`]), so human output and trace output come from one
+//!   stream instead of scattered `eprintln!`s.
+//!
+//! Aggregated hot-path statistics (cascade stage rejects, cache probe
+//! outcomes, steals/splits, journal fsync time) live in [`metrics`] as
+//! plain relaxed atomics and are served Prometheus-style by
+//! `qmap worker --metrics ADDR`; `qmap trace-report FILE` ([`report`])
+//! summarizes a trace into per-layer tables.
+//!
+//! **Non-perturbation is the load-bearing constraint**: the recorder
+//! only observes. No event or counter feeds back into the RNG, the
+//! candidate evaluation, scheduling, or the wire — tracing on vs off
+//! yields bit-identical Pareto fronts (pinned by `tests/obs_trace.rs`
+//! and the CI loopback smoke), and the cost of an enabled trace is
+//! ceiling-guarded in BENCH_baseline.json (`trace_overhead_pct`).
+
+pub mod metrics;
+pub mod report;
+pub mod ring;
+
+use crate::util::json::Json;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+/// Version stamped into every trace header and flight-recorder dump.
+/// Bump when an event kind's fields change incompatibly.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Console policy for an event's human rendering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Informational progress — suppressed by `--quiet`.
+    Progress,
+    /// Load-bearing status (worker loss, fallback warnings, lines that
+    /// scripts wait for) — always printed.
+    Status,
+}
+
+struct Tracer {
+    start: Instant,
+    seq: AtomicU64,
+    enabled: AtomicBool,
+    file: Mutex<Option<BufWriter<File>>>,
+}
+
+static TRACER: OnceLock<Tracer> = OnceLock::new();
+static QUIET: AtomicBool = AtomicBool::new(false);
+
+fn tracer() -> &'static Tracer {
+    TRACER.get_or_init(|| Tracer {
+        start: Instant::now(),
+        seq: AtomicU64::new(0),
+        enabled: AtomicBool::new(false),
+        file: Mutex::new(None),
+    })
+}
+
+/// `--quiet`: suppress [`Level::Progress`] console lines.
+/// [`Level::Status`] lines always print.
+pub fn set_quiet(quiet: bool) {
+    QUIET.store(quiet, Ordering::SeqCst);
+}
+
+pub fn quiet() -> bool {
+    QUIET.load(Ordering::SeqCst)
+}
+
+/// Is a JSONL trace file currently attached?
+pub fn trace_enabled() -> bool {
+    tracer().enabled.load(Ordering::Relaxed)
+}
+
+/// Attach a JSONL trace file and write the schema header event. Every
+/// subsequent [`event`] is appended as one line until [`trace_close`].
+pub fn trace_to(path: &str) -> std::io::Result<()> {
+    let t = tracer();
+    let file = BufWriter::new(File::create(path)?);
+    *t.file.lock().unwrap() = Some(file);
+    t.enabled.store(true, Ordering::SeqCst);
+    event(
+        "trace_start",
+        vec![
+            ("schema", Json::Num(SCHEMA_VERSION as f64)),
+            ("pid", Json::Num(std::process::id() as f64)),
+        ],
+    );
+    Ok(())
+}
+
+/// Flush and detach the trace file (idempotent; the ring stays live).
+pub fn trace_close() {
+    let t = tracer();
+    t.enabled.store(false, Ordering::SeqCst);
+    if let Some(mut f) = t.file.lock().unwrap().take() {
+        let _ = f.flush();
+    }
+}
+
+/// Render one event line: caller fields plus the envelope (`event`,
+/// `seq`, `t_us`). Field order is deterministic because `Json::obj`
+/// stores keys in a `BTreeMap` — serialization is sorted-key.
+fn render(kind: &'static str, mut fields: Vec<(&'static str, Json)>) -> String {
+    let t = tracer();
+    fields.push(("event", Json::Str(kind.into())));
+    fields.push(("seq", Json::Num(t.seq.fetch_add(1, Ordering::Relaxed) as f64)));
+    fields.push(("t_us", Json::Num(t.start.elapsed().as_micros() as f64)));
+    Json::obj(fields).to_string()
+}
+
+/// Record one structured event: always into the flight-recorder ring,
+/// and into the trace file when one is attached. Never prints.
+pub fn event(kind: &'static str, fields: Vec<(&'static str, Json)>) {
+    let line = render(kind, fields);
+    if trace_enabled() {
+        if let Some(f) = tracer().file.lock().unwrap().as_mut() {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+    ring::push(line);
+}
+
+/// Record one structured event *and* print its human rendering to
+/// stderr under the console policy ([`Level`], `--quiet`).
+pub fn event_human(
+    level: Level,
+    kind: &'static str,
+    fields: Vec<(&'static str, Json)>,
+    human: &str,
+) {
+    if level == Level::Status || !quiet() {
+        eprintln!("{human}");
+    }
+    event(kind, fields);
+}
+
+/// Install a chaining panic hook that records a `panic` event and
+/// dumps the flight-recorder ring before the previous hook runs.
+/// Idempotent; `main` installs it once at startup.
+pub fn install_panic_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            event("panic", vec![("detail", Json::Str(info.to_string()))]);
+            if let Some(path) = ring::dump("panic") {
+                eprintln!("qmap: flight recorder dumped to {}", path.display());
+            }
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn events_render_one_sorted_json_line() {
+        let line = render(
+            "unit_test",
+            vec![("zeta", Json::Num(1.0)), ("alpha", Json::Str("x".into()))],
+        );
+        assert!(!line.contains('\n'));
+        let v = parse(&line).expect("event line parses");
+        assert_eq!(v.get("event").as_str(), Some("unit_test"));
+        assert!(v.get("seq").as_f64().is_some());
+        assert!(v.get("t_us").as_f64().is_some());
+        // deterministic field order: sorted keys
+        let a = line.find("\"alpha\"").unwrap();
+        let e = line.find("\"event\"").unwrap();
+        let s = line.find("\"seq\"").unwrap();
+        let z = line.find("\"zeta\"").unwrap();
+        assert!(a < e && e < s && s < z, "{line}");
+    }
+
+    #[test]
+    fn seq_is_monotonic() {
+        let a = parse(&render("a", vec![])).unwrap().get("seq").as_f64().unwrap();
+        let b = parse(&render("b", vec![])).unwrap().get("seq").as_f64().unwrap();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_events_in_order() {
+        for i in 0..(ring::RING_CAPACITY + 10) {
+            ring::push(format!("{{\"i\":{i}}}"));
+        }
+        let snap = ring::snapshot();
+        assert_eq!(snap.len(), ring::RING_CAPACITY);
+        // oldest..newest, and the newest is the last push
+        let last = parse(snap.last().unwrap()).unwrap().get("i").as_f64().unwrap();
+        let first = parse(&snap[0]).unwrap().get("i").as_f64().unwrap();
+        assert!(last >= (ring::RING_CAPACITY + 9) as f64);
+        assert!(first <= last);
+        let idx: Vec<f64> = snap
+            .iter()
+            .map(|l| parse(l).unwrap().get("i").as_f64().unwrap())
+            .collect();
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "ring must stay ordered");
+    }
+
+    #[test]
+    fn dump_writes_valid_jsonl_with_header() {
+        event("dump_unit_probe", vec![("tag", Json::Num(7.0))]);
+        let path = ring::dump("unit_test").expect("dump path");
+        let src = std::fs::read_to_string(&path).expect("dump readable");
+        let mut lines = src.lines();
+        let head = parse(lines.next().expect("header")).expect("header parses");
+        assert_eq!(head.get("event").as_str(), Some("flightrec_dump"));
+        assert_eq!(head.get("reason").as_str(), Some("unit_test"));
+        assert_eq!(head.get("schema").as_f64(), Some(SCHEMA_VERSION as f64));
+        let mut seen = false;
+        for l in lines {
+            let v = parse(l).expect("every dump line is JSON");
+            if v.get("event").as_str() == Some("dump_unit_probe") {
+                seen = true;
+            }
+        }
+        assert!(seen, "dump must contain the probe event");
+        assert!(ring::recent_dumps().iter().any(|p| p == &path));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,246 @@
+//! `qmap trace-report FILE`: summarize a JSONL trace into per-layer
+//! reject-rate/latency/cache tables — the human entry point into a
+//! trace, and the raw material the ROADMAP's learned-guidance item
+//! needs (per-workload validity rates, stage costs, cache reuse).
+
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+
+#[derive(Default)]
+struct LayerAgg {
+    jobs: u64,
+    refs: u64,
+    shards: u64,
+    draws: u64,
+    valid: u64,
+    spatial_rejects: u64,
+    tile_rejects: u64,
+    job_us: f64,
+}
+
+#[derive(Default)]
+struct AddrAgg {
+    sent: u64,
+    done: u64,
+    lost: u64,
+    rtt_us: f64,
+    serve_us: f64,
+    depth_eff: f64,
+}
+
+fn num(v: &Json, key: &str) -> f64 {
+    v.get(key).as_f64().unwrap_or(0.0)
+}
+
+fn name(v: &Json, key: &str) -> String {
+    v.get(key).as_str().unwrap_or("?").to_string()
+}
+
+/// Parse a trace produced by `--trace` (or a flight-recorder dump) and
+/// render the summary tables. Unknown event kinds are skipped, so
+/// reports stay total across schema additions; a line that is not
+/// JSON at all is an error naming the line number.
+pub fn report(src: &str) -> Result<String, String> {
+    let mut schema: Option<f64> = None;
+    let mut events = 0u64;
+    let mut layers: BTreeMap<String, LayerAgg> = BTreeMap::new();
+    let mut addrs: BTreeMap<String, AddrAgg> = BTreeMap::new();
+    let mut gens = 0u64;
+    let (mut pairs, mut unique, mut hits, mut misses, mut steals, mut splits) =
+        (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+    let mut tail_ms = 0.0f64;
+    let (mut appends, mut append_entries, mut write_us, mut fsync_us, mut compactions) =
+        (0u64, 0u64, 0.0f64, 0.0f64, 0u64);
+    let mut dumps = 0u64;
+    let mut panics = 0u64;
+    let mut proto_errors = 0u64;
+    let mut lost_workers = 0u64;
+
+    for (ln, line) in src.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = parse(line).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        events += 1;
+        let kind = v.get("event").as_str().unwrap_or("");
+        match kind {
+            "trace_start" | "flightrec_dump" => {
+                schema = v.get("schema").as_f64().or(schema);
+            }
+            "job" => {
+                let l = layers.entry(name(&v, "layer")).or_default();
+                l.jobs += 1;
+                l.refs += num(&v, "refs") as u64;
+                l.job_us += num(&v, "us");
+            }
+            "shard" => {
+                let l = layers.entry(name(&v, "layer")).or_default();
+                l.shards += 1;
+                l.draws += num(&v, "draws") as u64;
+                l.valid += num(&v, "valid") as u64;
+                l.spatial_rejects += num(&v, "spatial_rejects") as u64;
+                l.tile_rejects += num(&v, "tile_rejects") as u64;
+            }
+            "gen_eval" => {
+                gens += 1;
+                pairs += num(&v, "pairs") as u64;
+                unique += num(&v, "unique_jobs") as u64;
+                hits += num(&v, "cache_hits") as u64;
+                misses += num(&v, "cache_misses") as u64;
+                steals += num(&v, "steals") as u64;
+                splits += num(&v, "splits") as u64;
+                tail_ms += num(&v, "tail_ms");
+            }
+            "batch_sent" => {
+                addrs.entry(name(&v, "addr")).or_default().sent += 1;
+            }
+            "batch_done" => {
+                let a = addrs.entry(name(&v, "addr")).or_default();
+                a.done += 1;
+                a.rtt_us += num(&v, "rtt_us");
+                a.serve_us += num(&v, "serve_us");
+                a.depth_eff = num(&v, "depth_eff");
+            }
+            "worker_lost" => {
+                lost_workers += 1;
+                addrs.entry(name(&v, "addr")).or_default().lost += 1;
+            }
+            "proto_error" => proto_errors += 1,
+            "ckpt_append" => {
+                appends += 1;
+                append_entries += num(&v, "entries") as u64;
+                write_us += num(&v, "write_us");
+                fsync_us += num(&v, "fsync_us");
+            }
+            "ckpt_compact" => compactions += 1,
+            "panic" => panics += 1,
+            _ => {}
+        }
+        if kind == "flightrec_dump" {
+            dumps += 1;
+        }
+    }
+    if events == 0 {
+        return Err("empty trace (no events)".into());
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace: {events} event(s), schema {}\n",
+        schema.map(|s| s.to_string()).unwrap_or_else(|| "?".into())
+    ));
+    if gens > 0 {
+        let probes = hits + misses;
+        out.push_str(&format!(
+            "\ngenerations: {gens}  (jobs: {pairs} pair(s) -> {unique} unique, dedup {:.1}%; \
+             cache hit rate {:.1}%; steals {steals}, splits {splits}; mean tail {:.1} ms)\n",
+            if pairs > 0 { 100.0 * (1.0 - unique as f64 / pairs as f64) } else { 0.0 },
+            if probes > 0 { 100.0 * hits as f64 / probes as f64 } else { 0.0 },
+            tail_ms / gens as f64,
+        ));
+    }
+    if !layers.is_empty() {
+        out.push_str(&format!(
+            "\n{:<14} {:>5} {:>5} {:>7} {:>11} {:>8} {:>9} {:>9} {:>9} {:>10}\n",
+            "layer",
+            "jobs",
+            "refs",
+            "shards",
+            "draws",
+            "valid",
+            "reject%",
+            "spatial%",
+            "tile%",
+            "job ms"
+        ));
+        for (name, l) in &layers {
+            let d = l.draws.max(1) as f64;
+            out.push_str(&format!(
+                "{:<14} {:>5} {:>5} {:>7} {:>11} {:>8} {:>8.1}% {:>8.1}% {:>8.1}% {:>10.2}\n",
+                name,
+                l.jobs,
+                l.refs,
+                l.shards,
+                l.draws,
+                l.valid,
+                100.0 * (1.0 - l.valid as f64 / d),
+                100.0 * l.spatial_rejects as f64 / d,
+                100.0 * l.tile_rejects as f64 / d,
+                l.job_us / 1e3 / l.jobs.max(1) as f64,
+            ));
+        }
+    }
+    if !addrs.is_empty() {
+        out.push_str(&format!(
+            "\n{:<22} {:>6} {:>6} {:>5} {:>11} {:>11} {:>6}\n",
+            "worker", "sent", "done", "lost", "rtt ms", "serve ms", "depth"
+        ));
+        for (addr, a) in &addrs {
+            out.push_str(&format!(
+                "{:<22} {:>6} {:>6} {:>5} {:>11.2} {:>11.2} {:>6.0}\n",
+                addr,
+                a.sent,
+                a.done,
+                a.lost,
+                a.rtt_us / 1e3 / a.done.max(1) as f64,
+                a.serve_us / 1e3 / a.done.max(1) as f64,
+                a.depth_eff,
+            ));
+        }
+    }
+    if appends > 0 || compactions > 0 {
+        out.push_str(&format!(
+            "\ncheckpoint: {appends} append(s) ({append_entries} entr(ies); mean write {:.2} ms, \
+             fsync {:.2} ms), {compactions} compaction(s)\n",
+            write_us / 1e3 / appends.max(1) as f64,
+            fsync_us / 1e3 / appends.max(1) as f64,
+        ));
+    }
+    if panics + proto_errors + lost_workers + dumps > 0 {
+        out.push_str(&format!(
+            "\nfaults: {panics} panic(s), {proto_errors} protocol error(s), \
+             {lost_workers} lost worker(s), {dumps} flight-recorder dump(s)\n"
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_aggregates_per_layer_and_per_worker() {
+        let src = r#"{"event":"trace_start","schema":1,"seq":0,"t_us":0}
+{"event":"job","layer":"c1","refs":3,"us":1500,"seq":1,"t_us":10}
+{"event":"shard","layer":"c1","draws":100,"valid":10,"spatial_rejects":60,"tile_rejects":30,"seq":2,"t_us":20}
+{"event":"shard","layer":"c1","draws":100,"valid":20,"spatial_rejects":50,"tile_rejects":30,"seq":3,"t_us":30}
+{"event":"gen_eval","pairs":8,"unique_jobs":4,"cache_hits":3,"cache_misses":1,"steals":2,"splits":1,"tail_ms":5.0,"seq":4,"t_us":40}
+{"event":"batch_sent","addr":"127.0.0.1:7911","batch":1,"seq":5,"t_us":50}
+{"event":"batch_done","addr":"127.0.0.1:7911","batch":1,"rtt_us":2000,"serve_us":1000,"depth_eff":3,"seq":6,"t_us":60}
+{"event":"ckpt_append","entries":16,"write_us":100,"fsync_us":900,"seq":7,"t_us":70}
+"#;
+        let rep = report(src).expect("report");
+        assert!(rep.contains("schema 1"), "{rep}");
+        assert!(rep.contains("c1"), "{rep}");
+        // 200 draws, 30 valid -> 85% reject
+        assert!(rep.contains("85.0%"), "{rep}");
+        assert!(rep.contains("127.0.0.1:7911"), "{rep}");
+        assert!(rep.contains("dedup 50.0%"), "{rep}");
+        assert!(rep.contains("hit rate 75.0%"), "{rep}");
+        assert!(rep.contains("1 append(s)"), "{rep}");
+    }
+
+    #[test]
+    fn report_rejects_non_json_and_empty_traces() {
+        assert!(report("").is_err());
+        let err = report("{\"event\":\"x\"}\nnot json\n").unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
+    }
+
+    #[test]
+    fn unknown_event_kinds_are_skipped() {
+        let rep = report("{\"event\":\"from_the_future\",\"seq\":0}\n").expect("total");
+        assert!(rep.contains("1 event(s)"), "{rep}");
+    }
+}

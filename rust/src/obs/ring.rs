@@ -1,0 +1,109 @@
+//! The always-on flight-recorder ring: a bounded buffer of the last
+//! [`RING_CAPACITY`] rendered event lines, dumped to a JSONL file when
+//! something goes wrong (panic, lost worker, protocol error). The ring
+//! is process-global and cheap enough to leave on unconditionally —
+//! one mutex push per event, no I/O until a dump is triggered.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Events retained for post-mortem dumps. Old events are overwritten;
+/// the dump header records how many were dropped.
+pub const RING_CAPACITY: usize = 1024;
+
+/// How many dump paths [`recent_dumps`] remembers (oldest evicted).
+const DUMP_LOG: usize = 32;
+
+struct Ring {
+    buf: Vec<String>,
+    /// Next overwrite position once `buf` is full.
+    next: usize,
+    /// Total events ever pushed (so a dump can report drops).
+    total: u64,
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring {
+    buf: Vec::new(),
+    next: 0,
+    total: 0,
+});
+static DUMPS: Mutex<Vec<PathBuf>> = Mutex::new(Vec::new());
+static DUMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn push(line: String) {
+    let mut r = RING.lock().unwrap();
+    if r.buf.len() < RING_CAPACITY {
+        r.buf.push(line);
+    } else {
+        let i = r.next;
+        r.buf[i] = line;
+        r.next = (r.next + 1) % RING_CAPACITY;
+    }
+    r.total += 1;
+}
+
+/// The ring's contents, oldest to newest.
+pub fn snapshot() -> Vec<String> {
+    let r = RING.lock().unwrap();
+    let mut out = Vec::with_capacity(r.buf.len());
+    if r.buf.len() < RING_CAPACITY {
+        out.extend(r.buf.iter().cloned());
+    } else {
+        out.extend(r.buf[r.next..].iter().cloned());
+        out.extend(r.buf[..r.next].iter().cloned());
+    }
+    out
+}
+
+/// Dump the ring to a fresh JSONL file in the temp directory (header
+/// line naming the trigger `reason` and the schema version, then the
+/// retained events oldest-first). Returns the path, also remembered in
+/// [`recent_dumps`] so tests and post-mortems can find it without an
+/// env-var side channel. Returns `None` only if the file can't be
+/// written — forensics must never take the process down.
+pub fn dump(reason: &str) -> Option<PathBuf> {
+    let seq = DUMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let lines = snapshot();
+    let total = RING.lock().unwrap().total;
+    let mut path = std::env::temp_dir();
+    // keep the reason out of the filename untrusted-input-safe
+    let tag: String =
+        reason.chars().filter(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+    path.push(format!("qmap-flightrec-{}-{seq}-{tag}.jsonl", std::process::id()));
+    let mut out = String::with_capacity(lines.iter().map(|l| l.len() + 1).sum::<usize>() + 128);
+    out.push_str(
+        &crate::util::json::Json::obj(vec![
+            ("event", crate::util::json::Json::Str("flightrec_dump".into())),
+            ("reason", crate::util::json::Json::Str(reason.into())),
+            ("schema", crate::util::json::Json::Num(super::SCHEMA_VERSION as f64)),
+            ("events", crate::util::json::Json::Num(lines.len() as f64)),
+            (
+                "dropped",
+                crate::util::json::Json::Num(total.saturating_sub(lines.len() as u64) as f64),
+            ),
+        ])
+        .to_string(),
+    );
+    out.push('\n');
+    for l in &lines {
+        out.push_str(l);
+        out.push('\n');
+    }
+    if std::fs::write(&path, out).is_err() {
+        return None;
+    }
+    super::metrics::counters().dumps.fetch_add(1, Ordering::Relaxed);
+    let mut log = DUMPS.lock().unwrap();
+    if log.len() >= DUMP_LOG {
+        log.remove(0);
+    }
+    log.push(path.clone());
+    Some(path)
+}
+
+/// The last few dump paths, oldest first. Process-global: fault tests
+/// scan these for the dump their injected failure produced.
+pub fn recent_dumps() -> Vec<PathBuf> {
+    DUMPS.lock().unwrap().clone()
+}

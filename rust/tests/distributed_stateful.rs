@@ -640,3 +640,132 @@ fn resuming_under_a_different_objective_spec_is_a_hard_error() {
     assert!(err.contains("edp,error"), "{err}");
     let _ = std::fs::remove_file(&path);
 }
+
+// ---------------------------------------------- flight-recorder suite
+
+/// Flight-recorder dump files created since `before`, each parsed:
+/// every line must be valid JSON (the dump is JSONL by contract) and
+/// the first line the `flightrec_dump` header. Dumps from concurrent
+/// tests ride along — callers filter by the addresses they own.
+fn new_dumps(
+    before: &[std::path::PathBuf],
+) -> Vec<(std::path::PathBuf, Vec<qmap::util::json::Json>)> {
+    qmap::obs::ring::recent_dumps()
+        .into_iter()
+        .filter(|p| !before.contains(p))
+        .filter_map(|p| {
+            // a concurrent test may have already deleted its dump
+            let src = std::fs::read_to_string(&p).ok()?;
+            let events: Vec<qmap::util::json::Json> = src
+                .lines()
+                .enumerate()
+                .map(|(i, l)| {
+                    qmap::util::json::parse(l)
+                        .unwrap_or_else(|e| panic!("{}: dump line {}: {e}", p.display(), i + 1))
+                })
+                .collect();
+            assert_eq!(
+                events.first().and_then(|h| h.get("event").as_str()),
+                Some("flightrec_dump"),
+                "{}: dump must lead with the flightrec_dump header",
+                p.display()
+            );
+            Some((p, events))
+        })
+        .collect()
+}
+
+/// Forensics: a worker lost mid-generation must leave a flight-recorder
+/// dump on disk — valid JSONL carrying the `worker_lost` event and the
+/// failing batch's `batch_sent` span for that address — while the
+/// generation's results stay bit-identical to the serial model.
+#[test]
+fn lost_worker_leaves_a_forensic_dump_with_the_failing_batch() {
+    let arch = toy();
+    let layers = small_net();
+    let cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 47,
+        shards: 2,
+    };
+    let mut rng = Rng::new(0xF11E);
+    let genomes: Vec<QuantConfig> = (0..4)
+        .map(|_| random_genome(&mut rng, layers.len()))
+        .collect();
+    let reference = {
+        let engine = Engine::new(1);
+        let cache = MapperCache::new();
+        driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg)
+    };
+    let before = qmap::obs::ring::recent_dumps();
+    let flaky = WorkerOptions {
+        drop_after: Some(0),
+        ..WorkerOptions::default()
+    };
+    let addrs: Vec<String> = (0..2)
+        .map(|_| spawn_local_worker(flaky).expect("loopback worker"))
+        .collect();
+    let engine = Engine::distributed(2, addrs.clone());
+    let cache = MapperCache::new();
+    let got = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg);
+    assert_eq!(reference, got, "a lost worker must never change results");
+    assert!(
+        engine.stats().lost_workers > 0,
+        "the injected fault must actually fire"
+    );
+
+    let dumps = new_dumps(&before);
+    assert!(
+        !dumps.is_empty(),
+        "a lost worker must dump the flight recorder"
+    );
+    let mine = |ev: &qmap::util::json::Json, kind: &str| {
+        ev.get("event").as_str() == Some(kind)
+            && ev
+                .get("addr")
+                .as_str()
+                .map_or(false, |a| addrs.iter().any(|x| x.as_str() == a))
+    };
+    let ours = dumps.iter().any(|(_, events)| {
+        events.iter().any(|e| mine(e, "worker_lost"))
+            && events.iter().any(|e| mine(e, "batch_sent"))
+    });
+    assert!(
+        ours,
+        "some dump must contain this run's worker_lost event and the \
+         failing batch's batch_sent span"
+    );
+}
+
+/// Forensics: a server that completes the handshake and then streams
+/// bytes that are not protocol frames must produce a `proto_error`
+/// flight-recorder dump naming the offending address.
+#[test]
+fn protocol_garbage_leaves_a_proto_error_dump() {
+    use std::io::Write as _;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let server = std::thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            // a valid hello so the handshake succeeds...
+            let _ = qmap::engine::proto::write_msg(&mut s, &qmap::engine::proto::hello());
+            // ...then raw garbage where a frame should be
+            let _ = s.write_all(&[0xFF; 64]);
+            let _ = s.flush();
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    });
+    let before = qmap::obs::ring::recent_dumps();
+    let mut client = RemoteClient::connect(&addr, Duration::from_secs(10)).expect("handshake");
+    let got = client.recv_event();
+    assert!(got.is_err(), "garbage must be rejected, got an event");
+    let ours = new_dumps(&before).iter().any(|(_, events)| {
+        events.iter().any(|e| {
+            e.get("event").as_str() == Some("proto_error")
+                && e.get("addr").as_str() == Some(addr.as_str())
+        })
+    });
+    assert!(ours, "a proto_error dump naming {addr} must exist");
+    let _ = server.join();
+}

@@ -1,0 +1,131 @@
+//! §Observability acceptance: attaching a JSONL trace must never move
+//! a search result — the recorder observes, it does not participate.
+//! The same engine/run with tracing on and off must produce
+//! bit-identical Pareto fronts, and the trace itself must be valid
+//! schema-versioned JSONL that `qmap trace-report` can summarize.
+
+use qmap::accuracy::{ProxyAccuracy, ProxyParams};
+use qmap::arch::presets::toy;
+use qmap::baselines::search_with_objectives;
+use qmap::engine::Engine;
+use qmap::mapper::cache::MapperCache;
+use qmap::mapper::MapperConfig;
+use qmap::nsga::NsgaConfig;
+use qmap::objective::ObjectiveSpec;
+use qmap::util::json::parse;
+use qmap::workload::ConvLayer;
+use std::sync::Mutex;
+
+/// The trace sink is process-global: tests that attach one serialize
+/// through this lock so a concurrent test's events cannot interleave.
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn small_net() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::conv("c1", 3, 8, 3, 16, 1),
+        ConvLayer::dw("d1", 8, 3, 16, 1),
+        ConvLayer::pw("p1", 8, 16, 16),
+        ConvLayer::fc("fc", 16, 10),
+    ]
+}
+
+/// One full (small) NSGA-II search on the given engine, reduced to a
+/// sorted front key: (encoded genome, EDP bits) — the same comparison
+/// the distributed bit-identity suite uses.
+fn run_front(engine: &Engine) -> Vec<(Vec<u8>, u64)> {
+    let arch = toy();
+    let layers = small_net();
+    let map_cfg = MapperConfig {
+        valid_target: 24,
+        max_draws: 24_000,
+        seed: 53,
+        shards: 2,
+    };
+    let nsga_cfg = NsgaConfig {
+        population: 8,
+        offspring: 4,
+        generations: 3,
+        seed: 59,
+        ..NsgaConfig::default()
+    };
+    let spec = ObjectiveSpec::default();
+    let cache = MapperCache::new();
+    let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+    let cands = search_with_objectives(
+        engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec, |_, _| {},
+    );
+    let mut k: Vec<(Vec<u8>, u64)> = cands
+        .iter()
+        .map(|c| (c.genome.encode(), c.hw.edp.to_bits()))
+        .collect();
+    k.sort();
+    k
+}
+
+#[test]
+fn tracing_on_vs_off_yields_bit_identical_fronts_and_a_valid_trace() {
+    let _guard = TRACE_LOCK.lock().unwrap();
+    let mut p = std::env::temp_dir();
+    p.push(format!("qmap_obs_trace_{}.jsonl", std::process::id()));
+    let path = p.to_string_lossy().into_owned();
+
+    let untraced = run_front(&Engine::new(2));
+    qmap::obs::trace_to(&path).expect("attach trace file");
+    let traced = run_front(&Engine::new(2));
+    qmap::obs::trace_close();
+    assert_eq!(
+        untraced, traced,
+        "an attached trace must never change the front"
+    );
+    // and both match the single-threaded serial model
+    let serial = run_front(&Engine::new(1));
+    assert_eq!(serial, traced, "traced run diverged from the serial model");
+
+    // the trace is schema-versioned JSONL: header first, every line
+    // parses, and the engine's instrumented layers all show up
+    let src = std::fs::read_to_string(&path).expect("trace file readable");
+    let mut kinds = std::collections::BTreeSet::new();
+    for (i, line) in src.lines().enumerate() {
+        let v = parse(line).unwrap_or_else(|e| panic!("trace line {}: {e}", i + 1));
+        let kind = v.get("event").as_str().expect("event kind").to_string();
+        if i == 0 {
+            assert_eq!(kind, "trace_start", "header must lead the trace");
+            assert_eq!(
+                v.get("schema").as_f64(),
+                Some(qmap::obs::SCHEMA_VERSION as f64)
+            );
+        }
+        assert!(v.get("seq").as_f64().is_some(), "line {}: no seq", i + 1);
+        assert!(v.get("t_us").as_f64().is_some(), "line {}: no t_us", i + 1);
+        kinds.insert(kind);
+    }
+    for want in ["trace_start", "job", "shard", "gen_eval"] {
+        assert!(
+            kinds.contains(want),
+            "trace must record {want} events (saw {kinds:?})"
+        );
+    }
+    // the report command digests it without error
+    let summary = qmap::obs::report::report(&src).expect("trace-report");
+    assert!(summary.contains("schema 1"), "{summary}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `trace_close` is idempotent and detaches cleanly: events recorded
+/// after close must not land in the file.
+#[test]
+fn closing_the_trace_detaches_the_file() {
+    let _guard = TRACE_LOCK.lock().unwrap();
+    let mut p = std::env::temp_dir();
+    p.push(format!("qmap_obs_close_{}.jsonl", std::process::id()));
+    let path = p.to_string_lossy().into_owned();
+    qmap::obs::trace_to(&path).expect("attach");
+    qmap::obs::event("obs_close_probe_in", vec![]);
+    qmap::obs::trace_close();
+    qmap::obs::trace_close(); // idempotent
+    qmap::obs::event("obs_close_probe_out", vec![]);
+    let src = std::fs::read_to_string(&path).expect("readable");
+    assert!(src.contains("obs_close_probe_in"));
+    assert!(!src.contains("obs_close_probe_out"));
+    let _ = std::fs::remove_file(&path);
+}
