@@ -343,6 +343,23 @@ impl Checkpointer {
         std::path::Path::new(&self.path).exists()
     }
 
+    /// Whether the appender is armed — the next save appends in place.
+    /// Unarmed after construction, a legacy or torn load, or a failed
+    /// append; all of those make the next save rewrite the file whole.
+    /// Observability seam for the driver's checkpoint trace and the
+    /// model-conformance suite's state projection.
+    pub fn journal_armed(&self) -> bool {
+        self.writer.lock().unwrap().is_some()
+    }
+
+    /// Insert frames appended since the last full rewrite (`None` when
+    /// unarmed) — the left-hand side of the compaction trigger, exposed
+    /// so tests and the conformance projection can observe exactly when
+    /// a save compacted.
+    pub fn journal_appended(&self) -> Option<usize> {
+        self.writer.lock().unwrap().as_ref().map(|a| a.appended)
+    }
+
     fn header_frame(ident: &SearchIdent) -> Json {
         Json::obj(vec![
             ("journal", Json::Num(JOURNAL_VERSION)),
@@ -1044,6 +1061,72 @@ mod tests {
         let back = Checkpointer::new(path.as_str()).load(&ident(), &restored).unwrap();
         assert_eq!(back.generation, 8);
         assert_eq!(restored.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The crash window the explorer flagged: a torn tail *immediately
+    /// after a compaction*. The compaction collapsed every older mark
+    /// into one, so the torn append's fallback mark IS the compaction's
+    /// — if the rewrite had dropped it, or the loader skipped it, the
+    /// journal would be unresumable at exactly the moment it had the
+    /// fewest marks. Resume must land on the compacted mark, keep the
+    /// complete insert frames past it, and leave the appender unarmed.
+    #[test]
+    fn torn_tail_right_after_compaction_resumes_from_the_compacted_mark() {
+        let path = tmp_path("torncompact");
+        let ckpt = Checkpointer::new(path.as_str()).with_compact_slack(0);
+        let a = toy();
+        let cfg = MapperConfig {
+            valid_target: 10,
+            max_draws: 10_000,
+            seed: 5,
+            shards: 1,
+        };
+        let cache = MapperCache::new();
+        let l = ConvLayer::fc("fc", 16, 10);
+        let q = LayerQuant::uniform(8);
+        let r = crate::mapper::search(&a, &l, &q, &cfg);
+        cache.insert_search(&a, &l, &q, &cfg, &r);
+        ckpt.save(&state_with_objectives(vec![vec![1.0, 2.0]]), &cache, &ident())
+            .unwrap();
+        assert!(ckpt.journal_armed());
+        // churn the one key until the next save compacts: 3 queued
+        // frames beat slack 0 + 2·1 entries
+        for _ in 0..3 {
+            cache.insert_search(&a, &l, &q, &cfg, &r);
+        }
+        let mut st = state_with_objectives(vec![vec![1.0, 2.0]]);
+        st.generation = 4;
+        ckpt.save(&st, &cache, &ident()).unwrap();
+        assert_eq!(ckpt.journal_appended(), Some(0), "the gen-4 save must compact");
+        // one more generation appends onto the freshly compacted file...
+        cache.insert_search(&a, &l, &q, &cfg, &r);
+        st.generation = 5;
+        ckpt.save(&st, &cache, &ident()).unwrap();
+        assert_eq!(ckpt.journal_appended(), Some(1));
+        // ...and the process dies mid-append: gen 5's mark line is cut
+        let text = std::fs::read_to_string(&path).unwrap();
+        let last_mark = text.rfind("{\"mark\":").expect("final mark frame");
+        std::fs::write(&path, &text[..last_mark + 9]).unwrap();
+        // resume: the compaction's mark is the last complete one
+        let restored = MapperCache::new();
+        let resumed = Checkpointer::new(path.as_str());
+        let back = resumed.load(&ident(), &restored).unwrap();
+        assert_eq!(back.generation, 4, "must resume from the compacted mark");
+        assert_eq!(restored.len(), 1, "complete frames past the mark are kept");
+        assert!(
+            !resumed.journal_armed(),
+            "a torn resume must leave the appender unarmed"
+        );
+        assert_eq!(resumed.journal_appended(), None);
+        // the next save heals the file whole, re-arms, and loads again
+        st.generation = 5;
+        resumed.save(&st, &restored, &ident()).unwrap();
+        assert!(resumed.journal_armed());
+        let back2 = Checkpointer::new(path.as_str())
+            .load(&ident(), &MapperCache::new())
+            .unwrap();
+        assert_eq!(back2.generation, 5);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -491,6 +491,20 @@ pub fn search_resumable(
         nsga::step(&mut st, nsga_cfg, &mut evaluate);
         on_generation(st.generation, &st.pop);
         ckpt.save(&st, cache, &ident)?;
+        // one trace line per durable generation: whether the journal
+        // appender survived the save (unarmed means the next save
+        // rewrites whole — a torn resume or a failed append upstream)
+        obs::event(
+            "gen_checkpointed",
+            vec![
+                ("generation", Json::Num(st.generation as f64)),
+                ("journal_armed", Json::Bool(ckpt.journal_armed())),
+                (
+                    "journal_appended",
+                    Json::Num(ckpt.journal_appended().unwrap_or(0) as f64),
+                ),
+            ],
+        );
     }
 
     let front = nsga::final_front(&st.pop);

@@ -305,11 +305,82 @@ pub fn error(msg: &str) -> Json {
     ])
 }
 
+/// One event of a worker's interleaved reply stream (see
+/// `RemoteClient::recv_event` in `engine::remote`).
+#[derive(Debug)]
+pub enum WorkerEvent {
+    /// One shard's outcome for batch `id`; may arrive duplicated or
+    /// out of order.
+    Outcome {
+        id: u64,
+        shard: usize,
+        outcome: ShardOutcome,
+    },
+    /// Batch `id` fully streamed.
+    Done { id: u64 },
+}
+
+/// Decode one worker→driver reply frame into a [`WorkerEvent`]. Total:
+/// `error` frames, unknown types, and malformed fields are `Err` —
+/// the caller condemns the connection. `peer` names the worker in
+/// error strings. Lives next to the wire format so the driver's pump
+/// and the model-conformance suites consume one decoder.
+pub fn decode_event(m: &Json, peer: &str) -> Result<WorkerEvent, String> {
+    match msg_type(m)? {
+        "outcome" => {
+            let id = m.get("id").as_hex_u64("outcome id")?;
+            // strict index decode: a saturating `as usize` on a
+            // negative/fractional value would silently land in
+            // the wrong ledger slot — reject instead
+            let sf = m.get("shard").as_f64().ok_or("outcome: missing shard")?;
+            if !(sf.is_finite() && sf.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&sf)) {
+                return Err(format!("worker {peer}: bad shard index {sf}"));
+            }
+            let outcome = ShardOutcome::from_json(m.get("outcome"))?;
+            Ok(WorkerEvent::Outcome {
+                id,
+                shard: sf as usize,
+                outcome,
+            })
+        }
+        "done" => Ok(WorkerEvent::Done {
+            id: m.get("id").as_hex_u64("done id")?,
+        }),
+        "error" => Err(format!(
+            "worker {peer}: {}",
+            m.get("msg").as_str().unwrap_or("unspecified error")
+        )),
+        other => Err(format!("worker {peer}: unexpected '{other}'")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets::toy;
     use crate::arch::parser::{parse_arch, render_arch};
+
+    #[test]
+    fn decode_event_is_total_and_names_the_peer() {
+        let ev = decode_event(&done(7), "w1").expect("done decodes");
+        assert!(matches!(ev, WorkerEvent::Done { id: 7 }));
+        let e = decode_event(&error("boom"), "w1").unwrap_err();
+        assert!(e.contains("worker w1") && e.contains("boom"), "{e}");
+        let e = decode_event(&hello(), "w2").unwrap_err();
+        assert!(e.contains("unexpected"), "{e}");
+        // fractional, negative, and non-finite shard indices must be
+        // rejected before any slot arithmetic
+        for bad in [0.5, -1.0, f64::NAN, 1e18] {
+            let m = Json::obj(vec![
+                ("type", Json::Str("outcome".into())),
+                ("id", Json::hex_u64(1)),
+                ("shard", Json::Num(bad)),
+                ("outcome", Json::Null),
+            ]);
+            let e = decode_event(&m, "w3").unwrap_err();
+            assert!(e.contains("bad shard index"), "{e}");
+        }
+    }
 
     #[test]
     fn frame_roundtrip() {

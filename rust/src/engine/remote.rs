@@ -290,9 +290,12 @@ enum BatchEnd {
 // ------------------------------------------------------ worker cache
 
 /// How many distinct searches the worker keeps shard outcomes for
-/// (oldest-first eviction), and how many outcomes one search may hold
-/// before its map is reset. Both bounds exist purely to cap memory on
-/// a long-lived fleet worker serving many drivers.
+/// (least-recently-*active* eviction: every `put` refreshes its
+/// search's position, so a long-lived search streaming batches is
+/// never evicted by newer one-shot searches), and how many outcomes
+/// one search may hold before its map is reset. Both bounds exist
+/// purely to cap memory on a long-lived fleet worker serving many
+/// drivers.
 const WORKER_CACHE_SEARCHES: usize = 4;
 const WORKER_CACHE_ENTRIES: usize = 1 << 16;
 
@@ -318,7 +321,16 @@ impl WorkerCache {
     fn put(&self, search: u64, key: u64, out: &ShardOutcome) {
         let mut g = self.searches.lock().unwrap();
         let (order, maps) = &mut *g;
-        if !maps.contains_key(&search) {
+        if maps.contains_key(&search) {
+            // re-registration: refresh recency instead of pushing a
+            // duplicate `order` entry — a duplicate would both leak
+            // the queue and let this search's own earlier entry evict
+            // another search's map on overflow
+            if let Some(pos) = order.iter().position(|&s| s == search) {
+                order.remove(pos);
+            }
+            order.push_back(search);
+        } else {
             order.push_back(search);
             while order.len() > WORKER_CACHE_SEARCHES {
                 if let Some(old) = order.pop_front() {
@@ -520,7 +532,7 @@ fn handle_batch(
 /// ignored (shards are deterministic, so a duplicate carries the same
 /// bits); and [`BatchLedger::missing`] names exactly the specs a lost
 /// worker still owed — the re-injection set.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct BatchLedger {
     specs: Vec<ShardSpec>,
     slots: Vec<Option<ShardOutcome>>,
@@ -704,34 +716,7 @@ impl RemoteClient {
 
     fn recv_event_inner(&mut self) -> Result<WorkerEvent, String> {
         let m = proto::read_msg(&mut self.reader)?;
-        match proto::msg_type(&m)? {
-            "outcome" => {
-                let id = m.get("id").as_hex_u64("outcome id")?;
-                // strict index decode: a saturating `as usize` on a
-                // negative/fractional value would silently land in
-                // the wrong ledger slot — reject instead
-                let sf = m.get("shard").as_f64().ok_or("outcome: missing shard")?;
-                if !(sf.is_finite() && sf.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&sf))
-                {
-                    return Err(format!("worker {}: bad shard index {sf}", self.addr));
-                }
-                let outcome = ShardOutcome::from_json(m.get("outcome"))?;
-                Ok(WorkerEvent::Outcome {
-                    id,
-                    shard: sf as usize,
-                    outcome,
-                })
-            }
-            "done" => Ok(WorkerEvent::Done {
-                id: m.get("id").as_hex_u64("done id")?,
-            }),
-            "error" => Err(format!(
-                "worker {}: {}",
-                self.addr,
-                m.get("msg").as_str().unwrap_or("unspecified error")
-            )),
-            other => Err(format!("worker {}: unexpected '{other}'", self.addr)),
-        }
+        proto::decode_event(&m, &self.addr)
     }
 
     /// Execute one batch remotely, delivering outcomes into `ledger`
@@ -771,19 +756,165 @@ impl RemoteClient {
     }
 }
 
-/// One event of a worker's interleaved reply stream (see
-/// [`RemoteClient::recv_event`]).
-#[derive(Debug)]
-pub enum WorkerEvent {
-    /// One shard's outcome for batch `id`; may arrive duplicated or
-    /// out of order.
-    Outcome {
-        id: u64,
-        shard: usize,
-        outcome: ShardOutcome,
-    },
-    /// Batch `id` fully streamed.
-    Done { id: u64 },
+// the event type and its total decoder live with the wire format in
+// `proto` (the model-conformance seam: one decoder, every consumer);
+// re-exported here because the driver side is where callers meet it
+pub use super::proto::WorkerEvent;
+
+// ------------------------------------------------------------ window
+
+/// One connection's pipelined-batch window: which batches are in
+/// flight, plus the adaptive-depth timing bookkeeping (send and
+/// first-outcome stamps, rtt/serve EWMAs at α = 1/2).
+///
+/// Extracted from the pump closure so the bookkeeping has an explicit
+/// lifecycle: [`PipelineWindow::on_loss`] drains the timing stamps
+/// **together with** the window, so stamps for batches whose `done`
+/// never arrives (worker lost mid-flight) structurally cannot outlive
+/// their batches and accumulate — the leak is impossible even for a
+/// window that outlives a connection. The explicit structure is also
+/// what the model-conformance suite (`model::window`,
+/// `tests/model_conformance.rs`) drives through every small-scope
+/// interleaving, projecting [`PipelineWindow::inflight_entries`] /
+/// [`PipelineWindow::tracked_sends`] /
+/// [`PipelineWindow::tracked_first_outcomes`] back onto the model.
+///
+/// Placement only: results are bit-identical at every depth and under
+/// every timing, because outcomes land in slot-keyed
+/// [`BatchLedger`]s.
+#[derive(Debug, Clone)]
+pub struct PipelineWindow {
+    /// Configured depth ceiling (≥ 1).
+    depth: usize,
+    /// `(batch id, work index)` per in-flight batch, send order.
+    inflight: Vec<(u64, usize)>,
+    /// Send stamp per in-flight batch that was actually written.
+    sent_at: Vec<(u64, std::time::Instant)>,
+    /// First-outcome stamp per in-flight batch that streamed one.
+    first_out: Vec<(u64, std::time::Instant)>,
+    rtt_ewma: Option<f64>,
+    serve_ewma: Option<f64>,
+}
+
+impl PipelineWindow {
+    pub fn new(depth: usize) -> PipelineWindow {
+        PipelineWindow {
+            depth: depth.max(1),
+            inflight: Vec::with_capacity(depth.max(1)),
+            sent_at: Vec::new(),
+            first_out: Vec::new(),
+            rtt_ewma: None,
+            serve_ewma: None,
+        }
+    }
+
+    /// Adaptive depth: the window exists to hide the send→first-
+    /// outcome round trip behind the worker's compute, so the depth it
+    /// needs is `ceil(rtt / serve_time) + 1` — one batch being served
+    /// plus enough queued to cover the next request's flight time.
+    /// Both are EWMAs over completed batches; the configured depth is
+    /// clamped down to the measurement. A near-zero serve time
+    /// (cache-served batches) makes the ratio meaningless: keep the
+    /// configured window.
+    pub fn effective_depth(&self) -> usize {
+        match (self.rtt_ewma, self.serve_ewma) {
+            (Some(r), Some(s)) if s > 1e-9 => {
+                self.depth.min((r / s).ceil() as usize + 1).max(1)
+            }
+            _ => self.depth,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inflight.is_empty()
+    }
+
+    /// Batch `id` was written for `work`: joins the window, send
+    /// stamp recorded.
+    pub fn on_sent(&mut self, id: u64, work: usize) {
+        self.sent_at.push((id, std::time::Instant::now()));
+        self.inflight.push((id, work));
+    }
+
+    /// The write for `work` failed after its claim: record the
+    /// never-sent batch in the window under pseudo id 0 (real ids
+    /// start at 1) so the owed count on loss includes its specs. No
+    /// timing stamp — nothing was sent.
+    pub fn on_send_failed(&mut self, work: usize) {
+        self.inflight.push((0, work));
+    }
+
+    /// An `outcome` frame for batch `id`: `Some(work index)` if the
+    /// batch is in flight (first-outcome stamp recorded once),
+    /// `None` for a stale duplicate from a completed batch — the
+    /// caller ignores it, exactly like the ledger would.
+    pub fn on_outcome(&mut self, id: u64) -> Option<usize> {
+        let &(_, wi) = self.inflight.iter().find(|&&(bid, _)| bid == id)?;
+        if !self.first_out.iter().any(|&(bid, _)| bid == id) {
+            self.first_out.push((id, std::time::Instant::now()));
+        }
+        Some(wi)
+    }
+
+    /// A `done` frame for batch `id`: the batch leaves the window,
+    /// both its timing stamps drain, and the EWMAs fold them in
+    /// (α = 1/2) when both were measured. Returns
+    /// `Some((work index, rtt_secs, serve_secs))` — `(0.0, 0.0)` when
+    /// unmeasured — or `None` for a stale `done`.
+    pub fn on_done(&mut self, id: u64) -> Option<(usize, f64, f64)> {
+        let pos = self.inflight.iter().position(|&(bid, _)| bid == id)?;
+        let (_, wi) = self.inflight.remove(pos);
+        let now = std::time::Instant::now();
+        let sent = self
+            .sent_at
+            .iter()
+            .position(|&(bid, _)| bid == id)
+            .map(|p| self.sent_at.swap_remove(p).1);
+        let first = self
+            .first_out
+            .iter()
+            .position(|&(bid, _)| bid == id)
+            .map(|p| self.first_out.swap_remove(p).1);
+        let (mut rtt, mut serve) = (0.0f64, 0.0f64);
+        if let (Some(sent), Some(first)) = (sent, first) {
+            rtt = first.duration_since(sent).as_secs_f64();
+            serve = now.duration_since(first).as_secs_f64();
+            self.rtt_ewma = Some(self.rtt_ewma.map_or(rtt, |e| (e + rtt) / 2.0));
+            self.serve_ewma = Some(self.serve_ewma.map_or(serve, |e| (e + serve) / 2.0));
+        }
+        Some((wi, rtt, serve))
+    }
+
+    /// Connection lost: every in-flight batch drains out (the caller
+    /// re-injects each ledger's missing specs), and **every timing
+    /// stamp drains with them** — a batch whose `done` never arrives
+    /// must not leave a stale stamp behind to mis-pair with a later
+    /// batch id.
+    pub fn on_loss(&mut self) -> Vec<(u64, usize)> {
+        self.sent_at.clear();
+        self.first_out.clear();
+        std::mem::take(&mut self.inflight)
+    }
+
+    /// The window contents, send order — the conformance projection.
+    pub fn inflight_entries(&self) -> &[(u64, usize)] {
+        &self.inflight
+    }
+
+    /// Batch ids with a live send stamp — the conformance projection
+    /// of the EWMA bookkeeping (must always be ⊆ the in-flight ids).
+    pub fn tracked_sends(&self) -> Vec<u64> {
+        self.sent_at.iter().map(|&(id, _)| id).collect()
+    }
+
+    /// Batch ids with a live first-outcome stamp.
+    pub fn tracked_first_outcomes(&self) -> Vec<u64> {
+        self.first_out.iter().map(|&(id, _)| id).collect()
+    }
 }
 
 // --------------------------------------------------------- scheduler
@@ -903,45 +1034,29 @@ pub fn eval_jobs(
                         return;
                     }
                 };
-                // the window: (batch id, work index) of every batch in
-                // flight on this connection
-                let mut inflight: Vec<(u64, usize)> = Vec::with_capacity(depth);
+                // the window: every batch in flight on this
+                // connection, plus the adaptive-depth bookkeeping —
+                // the explicit state machine the model suite drives
+                let mut win = PipelineWindow::new(depth);
                 // the *effective* window this connection settled on
                 // (reported to EngineStats at pump exit)
                 let eff_cell = std::cell::Cell::new(depth);
                 let pump = |client: &mut RemoteClient,
-                            inflight: &mut Vec<(u64, usize)>|
+                            win: &mut PipelineWindow|
                  -> Result<(), String> {
-                    // Adaptive depth: the window exists to hide the
-                    // send→first-outcome round trip behind the worker's
-                    // compute, so the depth it needs is
-                    // `ceil(rtt / serve_time) + 1` — one batch being
-                    // served plus enough queued to cover the next
-                    // request's flight time. Measure both per
-                    // connection (EWMA over completed batches: rtt =
-                    // send→first outcome, serve = first outcome→done)
-                    // and clamp the configured depth down to it. A fast
-                    // LAN needs no 64-deep queue, and every batch
-                    // queued behind a slow connection is a batch no
-                    // healthy executor can claim. Placement only:
-                    // results are bit-identical at every depth.
-                    let mut sent_at: Vec<(u64, std::time::Instant)> = Vec::new();
-                    let mut first_out: Vec<(u64, std::time::Instant)> = Vec::new();
-                    let mut rtt_ewma: Option<f64> = None;
-                    let mut serve_ewma: Option<f64> = None;
+                    // Adaptive depth (see `PipelineWindow::
+                    // effective_depth`): the configured depth is
+                    // clamped down to what the connection's rtt/serve
+                    // EWMAs say it needs — a fast LAN needs no
+                    // 64-deep queue, and every batch queued behind a
+                    // slow connection is a batch no healthy executor
+                    // can claim. Placement only: results are
+                    // bit-identical at every depth.
                     loop {
-                        let eff = match (rtt_ewma, serve_ewma) {
-                            // a near-zero serve time (cache-served
-                            // batches) makes the ratio meaningless:
-                            // keep the configured window
-                            (Some(r), Some(s)) if s > 1e-9 => {
-                                depth.min((r / s).ceil() as usize + 1).max(1)
-                            }
-                            _ => depth,
-                        };
+                        let eff = win.effective_depth();
                         eff_cell.set(eff);
                         // top the window up from the shared claim queue
-                        while inflight.len() < eff {
+                        while win.len() < eff {
                             // near the tail, keep the window shallow: a
                             // claimed batch is never reclaimed from a
                             // healthy-but-slow worker, so stacking the
@@ -952,7 +1067,7 @@ pub fn eval_jobs(
                             // Beyond the first in-flight batch, only
                             // claim while more unclaimed jobs remain
                             // than there are other executors to feed.
-                            if !inflight.is_empty() {
+                            if !win.is_empty() {
                                 let claimed = next.load(Ordering::SeqCst);
                                 if work.len().saturating_sub(claimed) <= workers.len() {
                                     break;
@@ -975,17 +1090,15 @@ pub fn eval_jobs(
                             ) {
                                 Ok(id) => id,
                                 Err(e) => {
-                                    // the claim already happened: record
-                                    // the never-sent batch in the window
-                                    // (pseudo id 0 — real ids start at 1)
-                                    // so the owed count below includes
+                                    // the claim already happened:
+                                    // record the never-sent batch so
+                                    // the owed count on loss includes
                                     // its specs
-                                    inflight.push((0, i));
+                                    win.on_send_failed(i);
                                     return Err(e);
                                 }
                             };
-                            sent_at.push((id, std::time::Instant::now()));
-                            inflight.push((id, i));
+                            win.on_sent(id, i);
                             metrics::counters().batches_sent.fetch_add(1, Ordering::Relaxed);
                             obs::event(
                                 "batch_sent",
@@ -996,51 +1109,24 @@ pub fn eval_jobs(
                                 ],
                             );
                         }
-                        if inflight.is_empty() {
+                        if win.is_empty() {
                             return Ok(());
                         }
                         match client.recv_event()? {
                             WorkerEvent::Outcome { id, shard, outcome } => {
                                 // an id no longer in flight is a stale
                                 // duplicate from a completed batch —
-                                // ignore, exactly like the ledger would
-                                if let Some(&(_, wi)) =
-                                    inflight.iter().find(|&&(bid, _)| bid == id)
-                                {
-                                    if !first_out.iter().any(|&(bid, _)| bid == id) {
-                                        first_out.push((id, std::time::Instant::now()));
-                                    }
+                                // `None`: ignore, exactly like the
+                                // ledger would
+                                if let Some(wi) = win.on_outcome(id) {
                                     work[wi].ledger.lock().unwrap().deliver(shard, outcome)?;
                                 }
                             }
                             WorkerEvent::Done { id } => {
-                                if let Some(pos) =
-                                    inflight.iter().position(|&(bid, _)| bid == id)
-                                {
-                                    inflight.remove(pos);
+                                // the batch leaves the window; its
+                                // timing stamps drain into the EWMAs
+                                if let Some((_, rtt, serve)) = win.on_done(id) {
                                     engine.note_remote_job();
-                                    // fold this batch's timings into the
-                                    // EWMAs (α = 1/2): rtt from the send
-                                    // to its first outcome, serve from
-                                    // the first outcome to done
-                                    let now = std::time::Instant::now();
-                                    let sent = sent_at
-                                        .iter()
-                                        .position(|&(bid, _)| bid == id)
-                                        .map(|p| sent_at.swap_remove(p).1);
-                                    let first = first_out
-                                        .iter()
-                                        .position(|&(bid, _)| bid == id)
-                                        .map(|p| first_out.swap_remove(p).1);
-                                    let (mut rtt, mut serve) = (0.0f64, 0.0f64);
-                                    if let (Some(sent), Some(first)) = (sent, first) {
-                                        rtt = first.duration_since(sent).as_secs_f64();
-                                        serve = now.duration_since(first).as_secs_f64();
-                                        rtt_ewma =
-                                            Some(rtt_ewma.map_or(rtt, |e| (e + rtt) / 2.0));
-                                        serve_ewma =
-                                            Some(serve_ewma.map_or(serve, |e| (e + serve) / 2.0));
-                                    }
                                     metrics::counters()
                                         .batches_done
                                         .fetch_add(1, Ordering::Relaxed);
@@ -1059,31 +1145,33 @@ pub fn eval_jobs(
                         }
                     }
                 };
-                let pumped = pump(&mut client, &mut inflight);
+                let pumped = pump(&mut client, &mut win);
                 engine.note_pipeline_depth(eff_cell.get());
                 if let Err(e) = pumped {
                     // every batch still in the window keeps what it
-                    // already received; the rest re-runs locally
-                    let owed: usize = inflight
+                    // already received; the rest re-runs locally —
+                    // and the timing stamps drain with the batches
+                    let lost = win.on_loss();
+                    let owed: usize = lost
                         .iter()
                         .map(|&(_, wi)| work[wi].ledger.lock().unwrap().missing().len())
                         .sum();
                     let c = metrics::counters();
-                    c.batches_lost.fetch_add(inflight.len() as u64, Ordering::Relaxed);
+                    c.batches_lost.fetch_add(lost.len() as u64, Ordering::Relaxed);
                     c.lost_workers.fetch_add(1, Ordering::Relaxed);
                     obs::event_human(
                         obs::Level::Status,
                         "worker_lost",
                         vec![
                             ("addr", Json::Str(addr.clone())),
-                            ("batches_inflight", Json::Num(inflight.len() as f64)),
+                            ("batches_inflight", Json::Num(lost.len() as f64)),
                             ("owed_shards", Json::Num(owed as f64)),
                             ("detail", Json::Str(e.clone())),
                         ],
                         &format!(
                             "qmap: worker {addr} lost with {} batch(es) in flight, \
                              re-injecting {owed} shard(s) into the local pool: {e}",
-                            inflight.len()
+                            lost.len()
                         ),
                     );
                     // the forensics trigger: the ring now holds the
@@ -1485,5 +1573,102 @@ mod tests {
             cache.evaluate(&arch, &layers[0], &jobs[0].quant, &cfg),
             serial.evaluate(&arch, &layers[0], &jobs[0].quant, &cfg)
         );
+    }
+
+    fn one_outcome() -> ShardOutcome {
+        let (arch, layer, q, cfg) = workload();
+        let space = MapSpace::of(&arch);
+        let lctx = LayerContext::new(&arch, &layer, &q);
+        let specs = mapper::shard_plan(&cfg, cfg.seed ^ mapper::workload_hash(&layer, &q));
+        mapper::run_shard(&space, &lctx, &specs[0])
+    }
+
+    /// Regression: `put` on an already-registered search must refresh
+    /// its recency, not push a duplicate `order` entry. Before the fix
+    /// eviction was FIFO by *first* registration, so a long-lived
+    /// search streaming outcomes was the first one evicted when
+    /// one-shot searches churned past the capacity — the exact
+    /// opposite of the documented least-recently-active contract.
+    #[test]
+    fn worker_cache_reregistration_refreshes_instead_of_duplicating() {
+        let cache = WorkerCache {
+            searches: Mutex::new((VecDeque::new(), FxHashMap::default())),
+        };
+        let out = one_outcome();
+        // hammer one search well past the search capacity: the order
+        // queue must stay deduplicated
+        for k in 0..(WORKER_CACHE_SEARCHES as u64 + 3) {
+            cache.put(1, k, &out);
+        }
+        {
+            let g = cache.searches.lock().unwrap();
+            assert_eq!(g.0.len(), 1, "re-registration duplicated the order queue");
+            assert_eq!(
+                g.1.get(&1).map(|m| m.len()),
+                Some(WORKER_CACHE_SEARCHES + 3)
+            );
+        }
+        // the active search survives a churn of one-shot searches
+        for s in 2..=(WORKER_CACHE_SEARCHES as u64 + 5) {
+            cache.put(s, 0, &out); // a new one-shot search...
+            cache.put(1, s, &out); // ...while search 1 stays active
+            assert!(
+                cache.get(1, 0).is_some(),
+                "active search evicted by one-shot search {s}"
+            );
+        }
+        let g = cache.searches.lock().unwrap();
+        assert!(g.0.len() <= WORKER_CACHE_SEARCHES, "order queue leaked");
+        assert_eq!(g.0.len(), g.1.len(), "order and maps out of sync");
+        assert_eq!(g.0.back(), Some(&1), "most recently active sits at the back");
+    }
+
+    /// Regression: the EWMA timing stamps ride inside the window now,
+    /// so a connection loss drains them with the in-flight entries — a
+    /// batch whose `done` never arrived cannot leave a stale stamp
+    /// behind to corrupt a later job's RTT/serve estimate after the
+    /// work is re-injected.
+    #[test]
+    fn pipeline_window_drains_timing_stamps_with_the_window() {
+        let mut win = PipelineWindow::new(4);
+        win.on_sent(1, 0);
+        win.on_sent(2, 1);
+        assert_eq!(win.len(), 2);
+        assert_eq!(win.on_outcome(1), Some(0));
+        assert_eq!(win.on_outcome(1), Some(0), "still in flight after an outcome");
+        assert_eq!(win.on_outcome(99), None, "stale outcome id is ignored");
+        assert_eq!(win.tracked_sends(), vec![1, 2]);
+        assert_eq!(win.tracked_first_outcomes(), vec![1]);
+        // done drains its own stamps...
+        let (wi, _rtt, _serve) = win.on_done(1).expect("in flight");
+        assert_eq!(wi, 0);
+        assert!(win.on_done(1).is_none(), "stale done id is ignored");
+        assert_eq!(win.tracked_sends(), vec![2]);
+        assert!(win.tracked_first_outcomes().is_empty());
+        // ...and loss drains everything that never completed
+        assert_eq!(win.on_outcome(2), Some(1));
+        let lost = win.on_loss();
+        assert_eq!(lost, vec![(2, 1)]);
+        assert!(win.is_empty());
+        assert!(win.tracked_sends().is_empty(), "send stamp leaked past the loss");
+        assert!(
+            win.tracked_first_outcomes().is_empty(),
+            "first-outcome stamp leaked past the loss"
+        );
+    }
+
+    /// A failed send enters the window under pseudo id 0 (no timing
+    /// stamp — nothing was written), so the loss path still owes its
+    /// shards back to the engine.
+    #[test]
+    fn pipeline_window_send_failure_is_owed_without_a_stamp() {
+        assert_eq!(PipelineWindow::new(0).effective_depth(), 1, "depth floor");
+        let mut win = PipelineWindow::new(2);
+        win.on_sent(1, 0);
+        win.on_send_failed(1);
+        assert_eq!(win.tracked_sends(), vec![1], "a failed write has no stamp");
+        let lost = win.on_loss();
+        assert_eq!(lost, vec![(1, 0), (0, 1)], "pseudo id 0 keeps the claim owed");
+        assert!(win.tracked_sends().is_empty());
     }
 }

@@ -25,6 +25,7 @@ pub mod engine;
 pub mod eval;
 pub mod mapper;
 pub mod mapping;
+pub mod model;
 pub mod nest;
 pub mod nsga;
 pub mod objective;

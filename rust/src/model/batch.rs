@@ -1,0 +1,194 @@
+//! FSM model of one driver↔worker batch (`batch_sent` → interleaved
+//! `outcome` frames → `done`), with the fault events the stateful
+//! suites inject: duplicated outcomes, out-of-range shard indices,
+//! early `done`, connection loss, and the driver's refill sweep.
+//!
+//! Reordering needs no dedicated event: the explorer's BFS covers
+//! *every* delivery order of [`BatchEvent::Deliver`], which is exactly
+//! what `Fault::Reorder` sampled.
+//!
+//! The conformance SUT (`tests/model_conformance.rs`) is a real
+//! [`BatchLedger`](crate::engine::remote::BatchLedger) fed real
+//! [`ShardOutcome`](crate::mapper::ShardOutcome)s; `Finalize` pins the
+//! merged result bit-identical to the serial reference in every
+//! interleaving.
+
+use super::Fsm;
+
+/// One batch with `shards` shard slots.
+pub struct BatchModel {
+    pub shards: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchState {
+    /// Per-shard slot filled (delivery order is deliberately absent:
+    /// the ledger is order-free, so the model must be too).
+    pub delivered: Vec<bool>,
+    /// `done` frame consumed while the connection was live.
+    pub done: bool,
+    /// Connection condemned: loss, or a protocol violation.
+    pub lost: bool,
+    /// Driver sweep ran: missing slots refilled, result merged.
+    pub finalized: bool,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BatchEvent {
+    /// `outcome` frame for shard `i`; a second delivery of the same
+    /// shard is the duplicate fault.
+    Deliver(usize),
+    /// `outcome` frame with an out-of-range shard index — the peer is
+    /// condemned.
+    DeliverBogus,
+    /// `done` frame; may arrive before every shard (a buggy or
+    /// fault-injected worker) — the sweep owns the rest.
+    Done,
+    /// Connection loss mid-stream.
+    Lose,
+    /// The driver's sweep: refill whatever is missing, merge.
+    Finalize,
+}
+
+impl BatchModel {
+    fn live(&self, s: &BatchState) -> bool {
+        !s.done && !s.lost && !s.finalized
+    }
+}
+
+impl Fsm for BatchModel {
+    type State = BatchState;
+    type Event = BatchEvent;
+
+    fn name(&self) -> String {
+        "batch".to_string()
+    }
+
+    fn initial(&self) -> BatchState {
+        BatchState {
+            delivered: vec![false; self.shards],
+            done: false,
+            lost: false,
+            finalized: false,
+        }
+    }
+
+    fn events(&self, s: &BatchState) -> Vec<BatchEvent> {
+        let mut evs = Vec::new();
+        if self.live(s) {
+            for i in 0..self.shards {
+                evs.push(BatchEvent::Deliver(i));
+            }
+            evs.push(BatchEvent::DeliverBogus);
+            evs.push(BatchEvent::Done);
+            evs.push(BatchEvent::Lose);
+        }
+        if (s.done || s.lost) && !s.finalized {
+            evs.push(BatchEvent::Finalize);
+        }
+        evs
+    }
+
+    fn step(&self, s: &BatchState, e: &BatchEvent) -> BatchState {
+        let mut n = s.clone();
+        match e {
+            BatchEvent::Deliver(i) => {
+                if self.live(s) && *i < self.shards {
+                    n.delivered[*i] = true;
+                }
+            }
+            BatchEvent::DeliverBogus => {
+                if self.live(s) {
+                    n.lost = true;
+                }
+            }
+            BatchEvent::Done => {
+                if self.live(s) {
+                    n.done = true;
+                }
+            }
+            BatchEvent::Lose => {
+                if self.live(s) {
+                    n.lost = true;
+                }
+            }
+            BatchEvent::Finalize => {
+                if (s.done || s.lost) && !s.finalized {
+                    n.finalized = true;
+                }
+            }
+        }
+        n
+    }
+
+    fn invariant(&self, s: &BatchState) -> Result<(), String> {
+        if s.delivered.len() != self.shards {
+            return Err(format!(
+                "slot count changed: {} != {}",
+                s.delivered.len(),
+                self.shards
+            ));
+        }
+        if s.finalized && !(s.done || s.lost) {
+            return Err("finalized a batch still streaming".to_string());
+        }
+        Ok(())
+    }
+
+    fn show_event(&self, e: &BatchEvent) -> String {
+        match e {
+            BatchEvent::Deliver(i) => format!("deliver:{i}"),
+            BatchEvent::DeliverBogus => "bogus".to_string(),
+            BatchEvent::Done => "done".to_string(),
+            BatchEvent::Lose => "lose".to_string(),
+            BatchEvent::Finalize => "finalize".to_string(),
+        }
+    }
+
+    fn parse_event(&self, line: &str) -> Option<BatchEvent> {
+        if let Some(i) = line.strip_prefix("deliver:") {
+            return i.parse().ok().map(BatchEvent::Deliver);
+        }
+        match line {
+            "bogus" => Some(BatchEvent::DeliverBogus),
+            "done" => Some(BatchEvent::Done),
+            "lose" => Some(BatchEvent::Lose),
+            "finalize" => Some(BatchEvent::Finalize),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{explore, Budget};
+
+    #[test]
+    fn batch_model_explores_exhaustively() {
+        let m = BatchModel { shards: 3 };
+        let cov = explore(&m, &Budget::new(12, 100_000)).expect("no violation");
+        assert!(cov.complete, "small scope must be exhausted");
+        // delivered ∈ 2^3, × {streaming, done, lost} × finalized-or-not
+        // for the ended ones; terminal states are absorbing
+        assert!(cov.states >= 8 * 3, "got {} states", cov.states);
+        // deepest full run: 3 deliveries + a duplicate + done + finalize
+        assert!(cov.deepest >= 5, "got depth {}", cov.deepest);
+    }
+
+    #[test]
+    fn batch_grammar_round_trips() {
+        let m = BatchModel { shards: 2 };
+        for ev in [
+            BatchEvent::Deliver(1),
+            BatchEvent::DeliverBogus,
+            BatchEvent::Done,
+            BatchEvent::Lose,
+            BatchEvent::Finalize,
+        ] {
+            let s = m.show_event(&ev);
+            assert_eq!(m.parse_event(&s), Some(ev), "grammar: {s}");
+        }
+        assert_eq!(m.parse_event("deliver:x"), None);
+    }
+}

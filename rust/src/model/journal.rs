@@ -1,0 +1,356 @@
+//! FSM model of the append-only checkpoint journal
+//! (`engine::checkpoint::Checkpointer` + the `MapperCache` insert
+//! queue): insert frames, fsync'd generation marks, compaction,
+//! torn-tail crashes, and resume.
+//!
+//! Two kinds of cache key keep the scope finite while still separating
+//! "frames" from "entries" (the distinction compaction exists for):
+//! the **churn** key (re-inserted repeatedly — every insert queues a
+//! frame, the cache stays at one entry, which is what trips the
+//! `appended > slack + 2 * entries` trigger) and a bounded pool of
+//! **fresh** keys, each used once. Crash events (`tear` with a torn
+//! tail, `crash` without) drop the process side — cache, pending
+//! queue, appender — and `resume` rebuilds it from the file exactly
+//! the way [`Checkpointer::load`](crate::engine::Checkpointer::load)
+//! does: replayed insert frames re-arm the compaction accounting, a
+//! torn tail leaves the appender unarmed so the next save rewrites
+//! the file whole.
+
+use super::Fsm;
+
+/// The generation the initial checkpoint is saved at (shared with the
+/// conformance SUT in `tests/model_conformance.rs`).
+pub const INIT_GEN: u8 = 3;
+
+pub struct JournalModel {
+    /// Compaction slack, mirrored by the SUT's `with_compact_slack`.
+    pub slack: u8,
+    /// Distinct single-use fresh keys available to `insert_fresh`.
+    pub fresh_pool: u8,
+    /// Highest generation `save` may write (bounds the scope).
+    pub max_gen: u8,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct JournalState {
+    // --- the file ---
+    /// Generations of the complete marks on file, in order.
+    pub marks: Vec<u8>,
+    /// Complete insert frames on file (duplicates count: every insert
+    /// queues a frame).
+    pub file_inserts: u8,
+    /// Distinct fresh keys with at least one frame on file.
+    pub file_fresh: u8,
+    /// The churn key has at least one frame on file.
+    pub file_has_dup: bool,
+    /// The final line is incomplete (crash mid-append).
+    pub torn: bool,
+    // --- the process ---
+    /// Crashed/stopped; only `resume` applies.
+    pub down: bool,
+    /// Appender armed (next save appends; unarmed saves rewrite).
+    pub armed: bool,
+    /// Insert frames appended since the last full write — replayed
+    /// frames count too on resume, exactly like `load`.
+    pub appended: u8,
+    /// Distinct fresh keys in the live cache.
+    pub live_fresh: u8,
+    /// The churn key is in the live cache.
+    pub live_has_dup: bool,
+    /// Queued-but-unsaved frames for the churn key.
+    pub pending_dup: u8,
+    /// Queued-but-unsaved frames for fresh keys (each a distinct key).
+    pub pending_fresh: u8,
+    /// Fresh keys handed out so far (never reused, even across a
+    /// crash that loses their frames).
+    pub used_fresh: u8,
+    /// Generation the next save writes.
+    pub next_gen: u8,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JournalEvent {
+    /// Re-insert the churn key: one more queued frame, same entry.
+    InsertDup,
+    /// Insert a never-used key: one queued frame, one new entry.
+    InsertFresh,
+    /// Checkpoint at the next generation: append queued frames + one
+    /// mark (then maybe compact), or rewrite whole if unarmed.
+    Save,
+    /// Process stops with the file intact (graceful or kill between
+    /// appends).
+    Crash,
+    /// Process dies mid-append: the final mark line is cut short.
+    Tear,
+    /// Start a new process and load the journal.
+    Resume,
+}
+
+impl JournalModel {
+    fn entries(s: &JournalState) -> u8 {
+        s.live_fresh + u8::from(s.live_has_dup)
+    }
+
+    fn drop_process(n: &mut JournalState) {
+        n.down = true;
+        n.armed = false;
+        n.appended = 0;
+        n.live_fresh = 0;
+        n.live_has_dup = false;
+        n.pending_dup = 0;
+        n.pending_fresh = 0;
+    }
+}
+
+impl Fsm for JournalModel {
+    type State = JournalState;
+    type Event = JournalEvent;
+
+    fn name(&self) -> String {
+        "journal".to_string()
+    }
+
+    fn initial(&self) -> JournalState {
+        // the scope starts just after the first save of a run: journal
+        // enabled, appender armed, one mark, empty cache
+        JournalState {
+            marks: vec![INIT_GEN],
+            file_inserts: 0,
+            file_fresh: 0,
+            file_has_dup: false,
+            torn: false,
+            down: false,
+            armed: true,
+            appended: 0,
+            live_fresh: 0,
+            live_has_dup: false,
+            pending_dup: 0,
+            pending_fresh: 0,
+            used_fresh: 0,
+            next_gen: INIT_GEN + 1,
+        }
+    }
+
+    fn events(&self, s: &JournalState) -> Vec<JournalEvent> {
+        let mut evs = Vec::new();
+        if s.down {
+            if !s.marks.is_empty() {
+                evs.push(JournalEvent::Resume);
+            }
+            return evs;
+        }
+        evs.push(JournalEvent::InsertDup);
+        if s.used_fresh < self.fresh_pool {
+            evs.push(JournalEvent::InsertFresh);
+        }
+        if s.next_gen <= self.max_gen {
+            evs.push(JournalEvent::Save);
+        }
+        evs.push(JournalEvent::Crash);
+        // tearing cuts the file's final line — always the latest mark,
+        // since every save ends with one. Keep a complete mark to
+        // resume from (a journal with none refuses to load).
+        if !s.torn && s.marks.len() >= 2 {
+            evs.push(JournalEvent::Tear);
+        }
+        evs
+    }
+
+    fn step(&self, s: &JournalState, e: &JournalEvent) -> JournalState {
+        let mut n = s.clone();
+        match e {
+            JournalEvent::InsertDup => {
+                if !s.down {
+                    n.live_has_dup = true;
+                    n.pending_dup += 1;
+                }
+            }
+            JournalEvent::InsertFresh => {
+                if !s.down && s.used_fresh < self.fresh_pool {
+                    n.live_fresh += 1;
+                    n.pending_fresh += 1;
+                    n.used_fresh += 1;
+                }
+            }
+            JournalEvent::Save => {
+                if s.down || s.next_gen > self.max_gen {
+                    return n;
+                }
+                let gen = s.next_gen;
+                let entries = Self::entries(s);
+                if s.armed {
+                    let frames = s.pending_dup + s.pending_fresh;
+                    n.file_inserts += frames;
+                    n.file_fresh += s.pending_fresh;
+                    n.file_has_dup |= s.pending_dup > 0;
+                    n.marks.push(gen);
+                    n.appended += frames;
+                    n.pending_dup = 0;
+                    n.pending_fresh = 0;
+                    if n.appended > self.slack + 2 * entries {
+                        // compaction: full rewrite — header, one frame
+                        // per live entry, one mark
+                        n.marks = vec![gen];
+                        n.file_inserts = entries;
+                        n.file_fresh = s.live_fresh;
+                        n.file_has_dup = s.live_has_dup;
+                        n.appended = 0;
+                    }
+                } else {
+                    // unarmed (first save after a torn resume): the
+                    // whole file is rewritten and the appender re-arms
+                    n.marks = vec![gen];
+                    n.file_inserts = entries;
+                    n.file_fresh = s.live_fresh;
+                    n.file_has_dup = s.live_has_dup;
+                    n.appended = 0;
+                    n.pending_dup = 0;
+                    n.pending_fresh = 0;
+                    n.armed = true;
+                    n.torn = false;
+                }
+                n.next_gen = gen + 1;
+            }
+            JournalEvent::Crash => {
+                if !s.down {
+                    Self::drop_process(&mut n);
+                }
+            }
+            JournalEvent::Tear => {
+                if !s.down && !s.torn && s.marks.len() >= 2 {
+                    n.marks.pop();
+                    n.torn = true;
+                    Self::drop_process(&mut n);
+                }
+            }
+            JournalEvent::Resume => {
+                if s.down && !s.marks.is_empty() {
+                    n.down = false;
+                    // load replays every complete insert frame into a
+                    // fresh cache...
+                    n.live_fresh = s.file_fresh;
+                    n.live_has_dup = s.file_has_dup;
+                    // ...and re-arms the appender unless the tail is
+                    // torn, counting the replayed frames toward the
+                    // next compaction check
+                    n.armed = !s.torn;
+                    n.appended = if s.torn { 0 } else { s.file_inserts };
+                    n.pending_dup = 0;
+                    n.pending_fresh = 0;
+                    n.next_gen = *s.marks.last().expect("non-empty") + 1;
+                }
+            }
+        }
+        n
+    }
+
+    fn invariant(&self, s: &JournalState) -> Result<(), String> {
+        if s.armed && s.torn {
+            return Err("appender armed over a torn tail".to_string());
+        }
+        if s.armed && s.down {
+            return Err("appender armed with no process".to_string());
+        }
+        if s.marks.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(format!("marks not strictly increasing: {:?}", s.marks));
+        }
+        let file_distinct = s.file_fresh + u8::from(s.file_has_dup);
+        if s.file_inserts < file_distinct {
+            return Err(format!(
+                "{} insert frames cannot cover {file_distinct} distinct keys",
+                s.file_inserts
+            ));
+        }
+        if s.live_fresh > self.fresh_pool || s.file_fresh > self.fresh_pool {
+            return Err("fresh keys exceed the pool".to_string());
+        }
+        if s.pending_fresh > s.live_fresh {
+            return Err("a queued fresh frame must have a live entry".to_string());
+        }
+        Ok(())
+    }
+
+    fn show_event(&self, e: &JournalEvent) -> String {
+        match e {
+            JournalEvent::InsertDup => "insert_dup",
+            JournalEvent::InsertFresh => "insert_fresh",
+            JournalEvent::Save => "save",
+            JournalEvent::Crash => "crash",
+            JournalEvent::Tear => "tear",
+            JournalEvent::Resume => "resume",
+        }
+        .to_string()
+    }
+
+    fn parse_event(&self, line: &str) -> Option<JournalEvent> {
+        match line {
+            "insert_dup" => Some(JournalEvent::InsertDup),
+            "insert_fresh" => Some(JournalEvent::InsertFresh),
+            "save" => Some(JournalEvent::Save),
+            "crash" => Some(JournalEvent::Crash),
+            "tear" => Some(JournalEvent::Tear),
+            "resume" => Some(JournalEvent::Resume),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{explore, replay, Budget};
+    use JournalEvent::*;
+
+    fn model() -> JournalModel {
+        JournalModel {
+            slack: 0,
+            fresh_pool: 2,
+            max_gen: 8,
+        }
+    }
+
+    #[test]
+    fn journal_model_explores_exhaustively() {
+        let cov = explore(&model(), &Budget::new(12, 500_000)).expect("no violation");
+        assert!(cov.complete, "small scope must be exhausted");
+        assert!(cov.deepest >= 10, "got depth {}", cov.deepest);
+    }
+
+    /// The satellite scenario, as a pinned model trace: churn until a
+    /// save compacts, append one more generation, tear mid-append,
+    /// resume — the resumed state must sit on the last complete mark
+    /// with the appender unarmed.
+    #[test]
+    fn tear_right_after_compaction_resumes_from_the_compacted_mark() {
+        let m = model();
+        let trace = [
+            InsertDup, Save, // gen 4: appended 1, entries 1 → no compact
+            InsertDup, Save, // gen 5: appended 2 → no compact
+            InsertDup, Save, // gen 6: appended 3 > 0 + 2·1 → compact
+            InsertDup, Save, // gen 7: appends onto the compacted file
+            Tear,    // cut gen 7's mark line
+            Resume,  // back up from the compacted mark
+        ];
+        let s = replay(&m, &trace).expect("invariant holds along the trace");
+        assert!(s.torn, "the tail stays torn until the next save");
+        assert!(!s.armed, "a torn resume leaves the appender unarmed");
+        assert_eq!(s.marks, vec![6], "resumes from the compaction's mark");
+        assert_eq!(s.next_gen, 7, "the torn generation is re-run");
+        assert!(s.live_has_dup, "replayed insert frames rebuild the cache");
+        // and the next save heals the file whole
+        let healed = m.step(&s, &Save);
+        assert!(healed.armed && !healed.torn);
+        assert_eq!(healed.marks, vec![7]);
+        assert_eq!(healed.file_inserts, 1, "one frame per live entry");
+    }
+
+    #[test]
+    fn journal_grammar_round_trips() {
+        let m = model();
+        for ev in [InsertDup, InsertFresh, Save, Crash, Tear, Resume] {
+            let s = m.show_event(&ev);
+            assert_eq!(m.parse_event(&s), Some(ev), "grammar: {s}");
+        }
+        assert_eq!(m.parse_event("compact"), None);
+    }
+}

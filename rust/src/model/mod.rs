@@ -1,0 +1,645 @@
+//! Explicit FSM models of the engine's distributed state machines,
+//! with bounded **exhaustive** exploration (polestar-style).
+//!
+//! The repo's load-bearing invariant — distributed, faulty, resumable
+//! search stays bit-identical to serial — was guarded by *randomized*
+//! stateful scripts (`tests/distributed_stateful.rs`), which sample
+//! event interleavings. This module replaces sampling with **coverage
+//! for small scopes**: each protocol is written down as a small,
+//! enumerable [`Fsm`]; a BFS explorer ([`explore`]) walks *every*
+//! interleaving up to a depth/state [`Budget`] with state-hash dedup;
+//! and a [`Projection`] binds the model to the real implementation
+//! (the SUT), checking the retraction invariant
+//!
+//! ```text
+//! map_state(apply(x, e)) == step(map_state(x), e)
+//! ```
+//!
+//! at every edge ([`conform`]). On divergence the failing event trace
+//! is greedily minimized (the same budgeted shrink discipline as
+//! `util::prop`), written out as a replayable counterexample script,
+//! and the `obs` flight recorder is dumped — see
+//! [`Violation::fail_with_script`].
+//!
+//! The models (std-only, no I/O):
+//! * [`batch::BatchModel`] — one driver↔worker batch: outcomes with
+//!   duplication/reorder (BFS order-coverage), early `done`, loss,
+//!   bogus shard indices, refill.
+//! * [`window::WindowModel`] — the pipelined connection window
+//!   (`engine::remote::PipelineWindow` + one `BatchLedger` per job):
+//!   send/send-failure, interleaved outcomes, stale frames, done,
+//!   loss-with-drain, final sweep.
+//! * [`journal::JournalModel`] — the append-only checkpoint journal:
+//!   insert/save/compaction/torn-tail crash/resume.
+//!
+//! `tests/model_conformance.rs` drives each model against its SUT;
+//! [`Product`] composes two models for cross-product coverage runs.
+
+pub mod batch;
+pub mod journal;
+pub mod window;
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+
+/// An explicit, enumerable finite state machine.
+///
+/// `step` must be **total**: applying an event that `events` does not
+/// currently offer must be a self-loop (return the state unchanged),
+/// so that a minimized trace — which may drop the event that enabled a
+/// later one — still replays meaningfully.
+///
+/// `show_event`/`parse_event` define the model's line-oriented event
+/// grammar: one event per line in a counterexample script, round-
+/// trippable so a committed script replays exactly.
+pub trait Fsm {
+    type State: Clone + Eq + Hash + std::fmt::Debug;
+    type Event: Clone + std::fmt::Debug;
+
+    /// Model name — names the counterexample script file and its
+    /// `model:` header line.
+    fn name(&self) -> String;
+    fn initial(&self) -> Self::State;
+    /// Events enabled in `s` (the BFS branching). Deterministic order.
+    fn events(&self, s: &Self::State) -> Vec<Self::Event>;
+    /// Total transition function (self-loop on disabled events).
+    fn step(&self, s: &Self::State, e: &Self::Event) -> Self::State;
+    /// Safety invariant, checked at every reached state.
+    fn invariant(&self, _s: &Self::State) -> Result<(), String> {
+        Ok(())
+    }
+    fn show_event(&self, e: &Self::Event) -> String;
+    fn parse_event(&self, line: &str) -> Option<Self::Event>;
+}
+
+/// Exploration bounds: BFS stops expanding below `max_depth` and
+/// aborts node admission at `max_states` deduped states. Environment
+/// overrides (`QMAP_MODEL_DEPTH`, `QMAP_MODEL_STATES`) let CI raise
+/// the scope without touching code, mirroring `util::prop`'s
+/// `QMAP_PROP_SEED`/`QMAP_PROP_CASES` discipline.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub max_depth: usize,
+    pub max_states: usize,
+}
+
+impl Budget {
+    pub fn new(max_depth: usize, max_states: usize) -> Budget {
+        Budget {
+            max_depth,
+            max_states,
+        }
+    }
+
+    /// Defaults overridden by `QMAP_MODEL_DEPTH` / `QMAP_MODEL_STATES`.
+    pub fn from_env(max_depth: usize, max_states: usize) -> Budget {
+        let get = |k: &str| -> Option<usize> {
+            std::env::var(k).ok().and_then(|v| v.trim().parse().ok())
+        };
+        Budget {
+            max_depth: get("QMAP_MODEL_DEPTH").unwrap_or(max_depth),
+            max_states: get("QMAP_MODEL_STATES").unwrap_or(max_states),
+        }
+    }
+}
+
+/// What an exploration covered.
+#[derive(Debug, Clone, Copy)]
+pub struct Coverage {
+    /// Deduped states reached (including the initial state).
+    pub states: usize,
+    /// Transitions taken (model `step` evaluations that were admitted).
+    pub transitions: usize,
+    /// Deepest BFS layer reached.
+    pub deepest: usize,
+    /// `true` iff the frontier was exhausted within `max_depth`
+    /// without hitting the `max_states` cap — i.e. the coverage is
+    /// *exhaustive* for the scope, not budget-truncated.
+    pub complete: bool,
+}
+
+/// A trace that violates a model invariant or diverges from the SUT.
+#[derive(Debug)]
+pub struct Violation<E> {
+    /// Events from the initial state to the failure, minimized when
+    /// produced by [`explore`]/[`conform`].
+    pub trace: Vec<E>,
+    pub msg: String,
+}
+
+impl<E: Clone + std::fmt::Debug> Violation<E> {
+    /// Report a violation the way `util::prop` reports a shrunk
+    /// property failure: write the minimized trace as a replayable
+    /// script (`model_cex_<name>.script` in the working directory —
+    /// CI uploads it as an artifact), dump the `obs` flight recorder,
+    /// and panic with replay instructions.
+    pub fn fail_with_script<M: Fsm<Event = E>>(&self, m: &M) -> ! {
+        let mut text = format!("model:{}\n", m.name());
+        for e in &self.trace {
+            text.push_str(&m.show_event(e));
+            text.push('\n');
+        }
+        let script = format!("model_cex_{}.script", m.name());
+        let wrote = std::fs::write(&script, &text)
+            .map(|_| script.clone())
+            .unwrap_or_else(|e| format!("<unwritable: {e}>"));
+        let dump = crate::obs::ring::dump("model_divergence");
+        panic!(
+            "model '{}' violated after {} event(s): {}\n  trace:\n{}  \
+             script: {wrote}\n  flight recorder: {dump:?}\n  \
+             replay: QMAP_MODEL_REPLAY={script} cargo test --test model_conformance",
+            m.name(),
+            self.trace.len(),
+            self.msg,
+            self.trace
+                .iter()
+                .map(|e| format!("    {}\n", m.show_event(e)))
+                .collect::<String>(),
+        )
+    }
+}
+
+/// Replay a trace on the model alone, checking the invariant at every
+/// step. `Err((i, msg))`: the invariant failed after applying `i`
+/// events.
+pub fn replay<M: Fsm>(m: &M, trace: &[M::Event]) -> Result<M::State, (usize, String)> {
+    let mut s = m.initial();
+    m.invariant(&s).map_err(|e| (0, e))?;
+    for (i, ev) in trace.iter().enumerate() {
+        s = m.step(&s, ev);
+        m.invariant(&s).map_err(|e| (i + 1, e))?;
+    }
+    Ok(s)
+}
+
+/// Budgeted greedy event-deletion to a 1-minimal failing trace — the
+/// same shrink discipline as `util::prop::check_shrink` (suffix
+/// truncation first, then single deletions, to a fixpoint or budget).
+pub fn shrink_events<E: Clone>(
+    mut trace: Vec<E>,
+    mut fails: impl FnMut(&[E]) -> bool,
+) -> Vec<E> {
+    let mut budget = 2000usize;
+    // suffix truncation: binary-chop the tail off while still failing
+    loop {
+        if budget == 0 || trace.len() <= 1 {
+            break;
+        }
+        let half = trace.len() / 2;
+        budget -= 1;
+        if fails(&trace[..half]) {
+            trace.truncate(half);
+        } else {
+            break;
+        }
+    }
+    // single deletions to a fixpoint
+    let mut progress = true;
+    while progress && budget > 0 {
+        progress = false;
+        let mut i = 0;
+        while i < trace.len() && budget > 0 {
+            let mut cand = trace.clone();
+            cand.remove(i);
+            budget -= 1;
+            if fails(&cand) {
+                trace = cand;
+                progress = true;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    trace
+}
+
+/// Bounded exhaustive BFS over every event interleaving of `m`,
+/// deduplicating on the state itself, checking the invariant at every
+/// reached state. On violation the trace is reconstructed via parent
+/// pointers and minimized.
+pub fn explore<M: Fsm>(m: &M, budget: &Budget) -> Result<Coverage, Violation<M::Event>> {
+    let init = m.initial();
+    if let Err(msg) = m.invariant(&init) {
+        return Err(Violation {
+            trace: Vec::new(),
+            msg,
+        });
+    }
+    // state -> id; parents[id] = (parent id, event that reached it)
+    let mut ids: HashMap<M::State, usize> = HashMap::new();
+    let mut parents: Vec<Option<(usize, M::Event)>> = Vec::new();
+    let mut states: Vec<M::State> = Vec::new();
+    ids.insert(init.clone(), 0);
+    parents.push(None);
+    states.push(init);
+    let mut queue: VecDeque<(usize, usize)> = VecDeque::new();
+    queue.push_back((0, 0));
+    let mut cov = Coverage {
+        states: 1,
+        transitions: 0,
+        deepest: 0,
+        complete: true,
+    };
+    while let Some((id, depth)) = queue.pop_front() {
+        if depth >= budget.max_depth {
+            continue;
+        }
+        let here = states[id].clone();
+        for ev in m.events(&here) {
+            let next = m.step(&here, &ev);
+            cov.transitions += 1;
+            if let Err(msg) = m.invariant(&next) {
+                let mut trace = trace_to(&parents, id);
+                trace.push(ev);
+                let trace = shrink_events(trace, |t| replay(m, t).is_err());
+                return Err(Violation { trace, msg });
+            }
+            if ids.contains_key(&next) {
+                continue;
+            }
+            if states.len() >= budget.max_states {
+                cov.complete = false;
+                continue;
+            }
+            let nid = states.len();
+            ids.insert(next.clone(), nid);
+            parents.push(Some((id, ev)));
+            states.push(next);
+            cov.states += 1;
+            cov.deepest = cov.deepest.max(depth + 1);
+            queue.push_back((nid, depth + 1));
+        }
+    }
+    Ok(cov)
+}
+
+fn trace_to<E: Clone>(parents: &[Option<(usize, E)>], mut id: usize) -> Vec<E> {
+    let mut rev = Vec::new();
+    while let Some((pid, ev)) = &parents[id] {
+        rev.push(ev.clone());
+        id = *pid;
+    }
+    rev.reverse();
+    rev
+}
+
+/// Binds a model to its system-under-test. `apply` drives the real
+/// implementation with one model event and is the place to check
+/// SUT-internal consistency (API return values, bit-identity against
+/// a serial reference); `map_state` projects the SUT back into the
+/// model's state space from *observables*.
+pub trait Projection {
+    type Model: Fsm;
+    type Sut: Clone;
+
+    fn model(&self) -> &Self::Model;
+    fn init_sut(&self) -> Self::Sut;
+    fn apply(
+        &self,
+        sut: &mut Self::Sut,
+        e: &<Self::Model as Fsm>::Event,
+    ) -> Result<(), String>;
+    fn map_state(&self, sut: &Self::Sut) -> <Self::Model as Fsm>::State;
+}
+
+/// Replay a trace through model *and* SUT, checking the retraction
+/// invariant after every event. `Err((i, msg))`: divergence after
+/// applying `i + 1` events (or `i == usize::MAX` for a bad initial
+/// projection).
+pub fn replay_conformance<P: Projection>(
+    p: &P,
+    trace: &[<P::Model as Fsm>::Event],
+) -> Result<(), (usize, String)> {
+    let m = p.model();
+    let mut s = m.initial();
+    let mut sut = p.init_sut();
+    if p.map_state(&sut) != s {
+        return Err((usize::MAX, "initial projection mismatch".to_string()));
+    }
+    for (i, ev) in trace.iter().enumerate() {
+        s = m.step(&s, ev);
+        if let Err(e) = m.invariant(&s) {
+            return Err((i, format!("model invariant: {e}")));
+        }
+        if let Err(e) = p.apply(&mut sut, ev) {
+            return Err((i, format!("SUT rejected event: {e}")));
+        }
+        let projected = p.map_state(&sut);
+        if projected != s {
+            return Err((
+                i,
+                format!("retraction mismatch:\n  model {s:?}\n  SUT   {projected:?}"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Bounded exhaustive conformance run: BFS over every interleaving,
+/// carrying `(model state, SUT)` pairs, checking
+/// `map_state(apply(x, e)) == step(map_state(x), e)` at every edge.
+///
+/// Nodes are deduplicated on the **model** state alone. That is sound
+/// for finding a *first* divergence: as long as every explored edge
+/// satisfied the retraction invariant, any two SUTs mapping to the
+/// same model state are interchangeable one edge further — and the
+/// first edge where they are not is itself reported.
+pub fn conform<P: Projection>(
+    p: &P,
+    budget: &Budget,
+) -> Result<Coverage, Violation<<P::Model as Fsm>::Event>> {
+    let m = p.model();
+    let init = m.initial();
+    let sut0 = p.init_sut();
+    let minimize = |trace: Vec<<P::Model as Fsm>::Event>| {
+        shrink_events(trace, |t| replay_conformance(p, t).is_err())
+    };
+    if let Err(msg) = m.invariant(&init) {
+        return Err(Violation {
+            trace: Vec::new(),
+            msg,
+        });
+    }
+    let projected = p.map_state(&sut0);
+    if projected != init {
+        return Err(Violation {
+            trace: Vec::new(),
+            msg: format!(
+                "initial projection mismatch:\n  model {init:?}\n  SUT   {projected:?}"
+            ),
+        });
+    }
+    let mut ids: HashMap<<P::Model as Fsm>::State, usize> = HashMap::new();
+    let mut parents: Vec<Option<(usize, <P::Model as Fsm>::Event)>> = Vec::new();
+    let mut states: Vec<<P::Model as Fsm>::State> = Vec::new();
+    let mut suts: Vec<P::Sut> = Vec::new();
+    ids.insert(init.clone(), 0);
+    parents.push(None);
+    states.push(init);
+    suts.push(sut0);
+    let mut queue: VecDeque<(usize, usize)> = VecDeque::new();
+    queue.push_back((0, 0));
+    let mut cov = Coverage {
+        states: 1,
+        transitions: 0,
+        deepest: 0,
+        complete: true,
+    };
+    while let Some((id, depth)) = queue.pop_front() {
+        if depth >= budget.max_depth {
+            continue;
+        }
+        let here = states[id].clone();
+        for ev in m.events(&here) {
+            let next = m.step(&here, &ev);
+            cov.transitions += 1;
+            let fail = |msg: String| -> Violation<<P::Model as Fsm>::Event> {
+                let mut trace = trace_to(&parents, id);
+                trace.push(ev.clone());
+                Violation {
+                    trace: minimize(trace),
+                    msg,
+                }
+            };
+            if let Err(e) = m.invariant(&next) {
+                return Err(fail(format!("model invariant: {e}")));
+            }
+            let mut sut = suts[id].clone();
+            if let Err(e) = p.apply(&mut sut, &ev) {
+                return Err(fail(format!("SUT rejected event: {e}")));
+            }
+            let projected = p.map_state(&sut);
+            if projected != next {
+                return Err(fail(format!(
+                    "retraction mismatch:\n  model {next:?}\n  SUT   {projected:?}"
+                )));
+            }
+            if ids.contains_key(&next) {
+                continue;
+            }
+            if states.len() >= budget.max_states {
+                cov.complete = false;
+                continue;
+            }
+            let nid = states.len();
+            ids.insert(next.clone(), nid);
+            parents.push(Some((id, ev)));
+            states.push(next);
+            suts.push(sut);
+            cov.states += 1;
+            cov.deepest = cov.deepest.max(depth + 1);
+            queue.push_back((nid, depth + 1));
+        }
+    }
+    Ok(cov)
+}
+
+/// Parse a counterexample script produced by
+/// [`Violation::fail_with_script`] back into a trace for `m`. Line 1
+/// must be `model:<name>`; each later non-empty, non-`#` line is one
+/// event in `m`'s grammar.
+pub fn parse_script<M: Fsm>(m: &M, text: &str) -> Result<Vec<M::Event>, String> {
+    let mut lines = text.lines();
+    let head = lines.next().ok_or("empty script")?;
+    let name = head
+        .strip_prefix("model:")
+        .ok_or("script missing 'model:' header line")?;
+    if name != m.name() {
+        return Err(format!("script is for model '{name}', not '{}'", m.name()));
+    }
+    let mut trace = Vec::new();
+    for l in lines {
+        let l = l.trim();
+        if l.is_empty() || l.starts_with('#') {
+            continue;
+        }
+        trace.push(
+            m.parse_event(l)
+                .ok_or_else(|| format!("unparseable event '{l}'"))?,
+        );
+    }
+    Ok(trace)
+}
+
+/// Asynchronous product of two models: interleaves their events (no
+/// synchronization), prefixing the event grammar with `a:` / `b:`.
+/// Used for composed coverage runs (e.g. pipelining × journal).
+pub struct Product<'a, A: Fsm, B: Fsm> {
+    pub a: &'a A,
+    pub b: &'a B,
+}
+
+/// A product event: one side moves, the other stands still.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Either<A, B> {
+    L(A),
+    R(B),
+}
+
+impl<'x, A: Fsm, B: Fsm> Fsm for Product<'x, A, B> {
+    type State = (A::State, B::State);
+    type Event = Either<A::Event, B::Event>;
+
+    fn name(&self) -> String {
+        format!("{}_x_{}", self.a.name(), self.b.name())
+    }
+
+    fn initial(&self) -> Self::State {
+        (self.a.initial(), self.b.initial())
+    }
+
+    fn events(&self, s: &Self::State) -> Vec<Self::Event> {
+        let mut evs: Vec<Self::Event> =
+            self.a.events(&s.0).into_iter().map(Either::L).collect();
+        evs.extend(self.b.events(&s.1).into_iter().map(Either::R));
+        evs
+    }
+
+    fn step(&self, s: &Self::State, e: &Self::Event) -> Self::State {
+        match e {
+            Either::L(ea) => (self.a.step(&s.0, ea), s.1.clone()),
+            Either::R(eb) => (s.0.clone(), self.b.step(&s.1, eb)),
+        }
+    }
+
+    fn invariant(&self, s: &Self::State) -> Result<(), String> {
+        self.a.invariant(&s.0).map_err(|e| format!("left: {e}"))?;
+        self.b.invariant(&s.1).map_err(|e| format!("right: {e}"))
+    }
+
+    fn show_event(&self, e: &Self::Event) -> String {
+        match e {
+            Either::L(ea) => format!("a:{}", self.a.show_event(ea)),
+            Either::R(eb) => format!("b:{}", self.b.show_event(eb)),
+        }
+    }
+
+    fn parse_event(&self, line: &str) -> Option<Self::Event> {
+        if let Some(rest) = line.strip_prefix("a:") {
+            return self.a.parse_event(rest).map(Either::L);
+        }
+        line.strip_prefix("b:")
+            .and_then(|rest| self.b.parse_event(rest))
+            .map(Either::R)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A counter that may tick up to `cap`; the invariant bounds it at
+    /// `bug_at` to exercise the violation/minimization path.
+    struct Counter {
+        cap: u32,
+        bug_at: u32,
+    }
+
+    impl Fsm for Counter {
+        type State = u32;
+        type Event = char;
+
+        fn name(&self) -> String {
+            "counter".to_string()
+        }
+        fn initial(&self) -> u32 {
+            0
+        }
+        fn events(&self, s: &u32) -> Vec<char> {
+            if *s < self.cap {
+                vec!['i', 'n']
+            } else {
+                Vec::new()
+            }
+        }
+        fn step(&self, s: &u32, e: &char) -> u32 {
+            match e {
+                'i' if *s < self.cap => s + 1,
+                _ => *s,
+            }
+        }
+        fn invariant(&self, s: &u32) -> Result<(), String> {
+            if *s >= self.bug_at {
+                Err(format!("counter reached {s}"))
+            } else {
+                Ok(())
+            }
+        }
+        fn show_event(&self, e: &char) -> String {
+            e.to_string()
+        }
+        fn parse_event(&self, line: &str) -> Option<char> {
+            let mut cs = line.chars();
+            match (cs.next(), cs.next()) {
+                (Some(c), None) => Some(c),
+                _ => None,
+            }
+        }
+    }
+
+    #[test]
+    fn explore_is_exhaustive_and_deduped() {
+        let m = Counter {
+            cap: 5,
+            bug_at: u32::MAX,
+        };
+        let cov = explore(&m, &Budget::new(10, 1000)).expect("no violation");
+        // states 0..=5, deduped across the 2^10 interleavings
+        assert_eq!(cov.states, 6);
+        assert!(cov.complete, "frontier must be exhausted");
+        assert_eq!(cov.deepest, 5, "no-op self-loops dedup to depth 5");
+    }
+
+    #[test]
+    fn explore_finds_and_minimizes_the_shortest_violation() {
+        let m = Counter { cap: 10, bug_at: 3 };
+        let v = explore(&m, &Budget::new(20, 10_000)).expect_err("must violate");
+        // minimal trace: three increments, the no-op 'n' events shrunk away
+        assert_eq!(v.trace, vec!['i', 'i', 'i']);
+    }
+
+    #[test]
+    fn budget_truncation_is_reported_not_silent() {
+        let m = Counter {
+            cap: 50,
+            bug_at: u32::MAX,
+        };
+        let cov = explore(&m, &Budget::new(100, 10)).expect("no violation");
+        assert!(!cov.complete, "state cap must mark coverage incomplete");
+        assert_eq!(cov.states, 10);
+    }
+
+    #[test]
+    fn scripts_round_trip_through_the_grammar() {
+        let m = Counter { cap: 4, bug_at: 3 };
+        let v = explore(&m, &Budget::new(10, 100)).expect_err("must violate");
+        let text = format!(
+            "model:counter\n{}",
+            v.trace
+                .iter()
+                .map(|e| format!("{}\n", m.show_event(e)))
+                .collect::<String>()
+        );
+        let back = parse_script(&m, &text).expect("parse");
+        assert_eq!(back, v.trace);
+        assert!(parse_script(&m, "model:other\ni\n").is_err());
+    }
+
+    #[test]
+    fn product_interleaves_both_sides() {
+        let a = Counter {
+            cap: 2,
+            bug_at: u32::MAX,
+        };
+        let b = Counter {
+            cap: 3,
+            bug_at: u32::MAX,
+        };
+        let p = Product { a: &a, b: &b };
+        let cov = explore(&p, &Budget::new(10, 10_000)).expect("no violation");
+        assert_eq!(cov.states, 3 * 4, "product state space is the cross product");
+        assert!(cov.complete);
+        let ev = p.parse_event("b:i").expect("prefixed grammar");
+        assert_eq!(p.show_event(&ev), "b:i");
+    }
+}

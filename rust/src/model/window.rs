@@ -1,0 +1,327 @@
+//! FSM model of one connection's pipelined batch window — the model
+//! twin of `engine::remote::PipelineWindow` plus one
+//! [`BatchLedger`](crate::engine::remote::BatchLedger) per job.
+//!
+//! The state tracks what the adaptive-depth bookkeeping *must* track:
+//! `timings` counts the send/first-outcome timestamps the EWMA
+//! machinery holds, and the model keeps it equal to
+//! `|inflight| + |{batches with an outcome seen}|` at every step. The
+//! conformance projection reads the count from the **real**
+//! `sent_at`/`first_out` vectors, so a drain leak on loss (stale
+//! stamps surviving the window) is a retraction mismatch, not a
+//! sampled flake.
+
+use super::Fsm;
+
+/// One connection over `jobs` claimable jobs of `shards` shards each,
+/// windowed at configured pipeline depth `depth`.
+pub struct WindowModel {
+    pub jobs: usize,
+    pub shards: usize,
+    pub depth: usize,
+}
+
+/// The driver's view of one job.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct JobView {
+    /// Claimed by this connection (sent, or send-failed).
+    pub claimed: bool,
+    /// Ledger slots filled.
+    pub delivered: Vec<bool>,
+    /// `done` consumed — the batch left the window.
+    pub completed: bool,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct WindowState {
+    /// `(job, first_outcome_seen)` per in-flight batch, send order.
+    pub inflight: Vec<(usize, bool)>,
+    pub jobs: Vec<JobView>,
+    /// Connection condemned (loss, protocol violation, send failure).
+    pub lost: bool,
+    /// The driver's refill-and-merge sweep ran (terminal).
+    pub swept: bool,
+    /// Timing entries the adaptive-depth EWMA holds: one send stamp
+    /// per in-flight batch plus one first-outcome stamp per in-flight
+    /// batch that has streamed at least one outcome. Projected from
+    /// the real `sent_at`/`first_out` lengths.
+    pub timings: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WindowEvent {
+    /// Claim the lowest unclaimed job and ship it.
+    Send,
+    /// Claim the lowest unclaimed job, fail the write: the claim
+    /// stands (pseudo batch id 0 joins the window so the owed count
+    /// sees its specs), the connection is condemned and drained.
+    SendFail,
+    /// One `outcome` frame for an in-flight batch; re-delivery of a
+    /// filled shard is the duplicate fault.
+    Outcome { job: usize, shard: usize },
+    /// `outcome` for a batch already done — stale, ignored.
+    StaleOutcome { job: usize },
+    /// `done` for an in-flight batch (possibly before every outcome).
+    Done { job: usize },
+    /// `done` for a batch already done — stale, ignored.
+    StaleDone { job: usize },
+    /// Connection loss: every in-flight batch drains (keeping what it
+    /// already received), all timing stamps drain with them.
+    Lose,
+    /// The driver's sweep: refill every claimed job's missing shards,
+    /// merge each in shard-index order (terminal).
+    Sweep,
+}
+
+impl WindowModel {
+    fn live(&self, s: &WindowState) -> bool {
+        !s.lost && !s.swept
+    }
+
+    fn next_unclaimed(&self, s: &WindowState) -> Option<usize> {
+        s.jobs.iter().position(|j| !j.claimed)
+    }
+
+    fn retime(s: &mut WindowState) {
+        s.timings = s.inflight.len() + s.inflight.iter().filter(|&&(_, f)| f).count();
+    }
+}
+
+impl Fsm for WindowModel {
+    type State = WindowState;
+    type Event = WindowEvent;
+
+    fn name(&self) -> String {
+        "window".to_string()
+    }
+
+    fn initial(&self) -> WindowState {
+        WindowState {
+            inflight: Vec::new(),
+            jobs: (0..self.jobs)
+                .map(|_| JobView {
+                    claimed: false,
+                    delivered: vec![false; self.shards],
+                    completed: false,
+                })
+                .collect(),
+            lost: false,
+            swept: false,
+            timings: 0,
+        }
+    }
+
+    fn events(&self, s: &WindowState) -> Vec<WindowEvent> {
+        let mut evs = Vec::new();
+        if self.live(s) {
+            if s.inflight.len() < self.depth && self.next_unclaimed(s).is_some() {
+                evs.push(WindowEvent::Send);
+                evs.push(WindowEvent::SendFail);
+            }
+            for &(job, _) in &s.inflight {
+                for shard in 0..self.shards {
+                    evs.push(WindowEvent::Outcome { job, shard });
+                }
+                evs.push(WindowEvent::Done { job });
+            }
+            for (job, j) in s.jobs.iter().enumerate() {
+                if j.completed {
+                    evs.push(WindowEvent::StaleOutcome { job });
+                    evs.push(WindowEvent::StaleDone { job });
+                }
+            }
+            evs.push(WindowEvent::Lose);
+        }
+        if !s.swept && (s.lost || s.inflight.is_empty()) {
+            evs.push(WindowEvent::Sweep);
+        }
+        evs
+    }
+
+    fn step(&self, s: &WindowState, e: &WindowEvent) -> WindowState {
+        let mut n = s.clone();
+        match e {
+            WindowEvent::Send => {
+                if self.live(s) && s.inflight.len() < self.depth {
+                    if let Some(j) = self.next_unclaimed(s) {
+                        n.jobs[j].claimed = true;
+                        n.inflight.push((j, false));
+                    }
+                }
+            }
+            WindowEvent::SendFail => {
+                if self.live(s) && s.inflight.len() < self.depth {
+                    if let Some(j) = self.next_unclaimed(s) {
+                        n.jobs[j].claimed = true;
+                        n.lost = true;
+                        n.inflight.clear();
+                    }
+                }
+            }
+            WindowEvent::Outcome { job, shard } => {
+                if self.live(s) && *shard < self.shards {
+                    if let Some(p) = n.inflight.iter().position(|&(j, _)| j == *job) {
+                        n.inflight[p].1 = true;
+                        n.jobs[*job].delivered[*shard] = true;
+                    }
+                }
+            }
+            WindowEvent::StaleOutcome { .. } | WindowEvent::StaleDone { .. } => {}
+            WindowEvent::Done { job } => {
+                if self.live(s) {
+                    if let Some(p) = n.inflight.iter().position(|&(j, _)| j == *job) {
+                        n.inflight.remove(p);
+                        n.jobs[*job].completed = true;
+                    }
+                }
+            }
+            WindowEvent::Lose => {
+                if self.live(s) {
+                    n.lost = true;
+                    n.inflight.clear();
+                }
+            }
+            WindowEvent::Sweep => {
+                if !s.swept && (s.lost || s.inflight.is_empty()) {
+                    n.swept = true;
+                }
+            }
+        }
+        Self::retime(&mut n);
+        n
+    }
+
+    fn invariant(&self, s: &WindowState) -> Result<(), String> {
+        if s.inflight.len() > self.depth {
+            return Err(format!(
+                "window overflow: {} in flight > depth {}",
+                s.inflight.len(),
+                self.depth
+            ));
+        }
+        let expect = s.inflight.len() + s.inflight.iter().filter(|&&(_, f)| f).count();
+        if s.timings != expect {
+            return Err(format!(
+                "timing-stamp leak: {} stamps tracked, window accounts for {expect}",
+                s.timings
+            ));
+        }
+        for (i, &(job, _)) in s.inflight.iter().enumerate() {
+            if s.inflight.iter().skip(i + 1).any(|&(j, _)| j == job) {
+                return Err(format!("job {job} in flight twice"));
+            }
+            let j = &s.jobs[job];
+            if !j.claimed || j.completed {
+                return Err(format!("in-flight job {job} not claimed-and-open"));
+            }
+        }
+        if s.lost && !s.inflight.is_empty() {
+            return Err("lost connection with an undrained window".to_string());
+        }
+        Ok(())
+    }
+
+    fn show_event(&self, e: &WindowEvent) -> String {
+        match e {
+            WindowEvent::Send => "send".to_string(),
+            WindowEvent::SendFail => "sendfail".to_string(),
+            WindowEvent::Outcome { job, shard } => format!("out:{job}.{shard}"),
+            WindowEvent::StaleOutcome { job } => format!("stale_out:{job}"),
+            WindowEvent::Done { job } => format!("done:{job}"),
+            WindowEvent::StaleDone { job } => format!("stale_done:{job}"),
+            WindowEvent::Lose => "lose".to_string(),
+            WindowEvent::Sweep => "sweep".to_string(),
+        }
+    }
+
+    fn parse_event(&self, line: &str) -> Option<WindowEvent> {
+        if let Some(rest) = line.strip_prefix("out:") {
+            let (j, s) = rest.split_once('.')?;
+            return Some(WindowEvent::Outcome {
+                job: j.parse().ok()?,
+                shard: s.parse().ok()?,
+            });
+        }
+        if let Some(j) = line.strip_prefix("stale_out:") {
+            return j.parse().ok().map(|job| WindowEvent::StaleOutcome { job });
+        }
+        if let Some(j) = line.strip_prefix("stale_done:") {
+            return j.parse().ok().map(|job| WindowEvent::StaleDone { job });
+        }
+        if let Some(j) = line.strip_prefix("done:") {
+            return j.parse().ok().map(|job| WindowEvent::Done { job });
+        }
+        match line {
+            "send" => Some(WindowEvent::Send),
+            "sendfail" => Some(WindowEvent::SendFail),
+            "lose" => Some(WindowEvent::Lose),
+            "sweep" => Some(WindowEvent::Sweep),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{explore, Budget};
+
+    /// The documented small scope: worker loss × pipelining at depth
+    /// ≤ 2 is *exhausted* (every interleaving deduped, frontier empty)
+    /// well past the acceptance floor of depth 6.
+    #[test]
+    fn window_model_exhausts_the_small_scope() {
+        let m = WindowModel {
+            jobs: 3,
+            shards: 2,
+            depth: 2,
+        };
+        // a full fault-free run is 13 events (3 sends + 6 outcomes +
+        // 3 dones + sweep); depth 14 covers it plus one fault/dup
+        let cov = explore(&m, &Budget::new(14, 400_000)).expect("no violation");
+        assert!(cov.complete, "small scope must be exhausted");
+        assert!(cov.deepest >= 13, "got depth {}", cov.deepest);
+        assert!(cov.states >= 400, "got {} states", cov.states);
+    }
+
+    #[test]
+    fn window_grammar_round_trips() {
+        let m = WindowModel {
+            jobs: 2,
+            shards: 2,
+            depth: 2,
+        };
+        for ev in [
+            WindowEvent::Send,
+            WindowEvent::SendFail,
+            WindowEvent::Outcome { job: 1, shard: 0 },
+            WindowEvent::StaleOutcome { job: 0 },
+            WindowEvent::Done { job: 1 },
+            WindowEvent::StaleDone { job: 1 },
+            WindowEvent::Lose,
+            WindowEvent::Sweep,
+        ] {
+            let s = m.show_event(&ev);
+            assert_eq!(m.parse_event(&s), Some(ev), "grammar: {s}");
+        }
+        assert_eq!(m.parse_event("out:1"), None);
+    }
+
+    /// The leak the model exists to catch: hand-build a state whose
+    /// stamp count disagrees with the window and watch the invariant
+    /// reject it.
+    #[test]
+    fn stale_timing_stamps_violate_the_invariant() {
+        let m = WindowModel {
+            jobs: 2,
+            shards: 2,
+            depth: 2,
+        };
+        let mut s = m.initial();
+        s = m.step(&s, &WindowEvent::Send);
+        s = m.step(&s, &WindowEvent::Lose);
+        assert!(m.invariant(&s).is_ok(), "drained loss is clean");
+        s.timings = 1; // a sent_at stamp that survived the drain
+        assert!(m.invariant(&s).is_err(), "leaked stamp must be caught");
+    }
+}

@@ -769,3 +769,160 @@ fn protocol_garbage_leaves_a_proto_error_dump() {
     assert!(ours, "a proto_error dump naming {addr} must exist");
     let _ = server.join();
 }
+
+// ----------------------------------------------- model-grammar walks
+
+/// Random walks over the window FSM's event *grammar*, driving the
+/// model and the real [`PipelineWindow`] from the same event strings.
+///
+/// `tests/model_conformance.rs` exhausts this state machine up to its
+/// documented small scope; this property extends coverage *past* the
+/// exhaustive frontier (walks of up to 40 events over a wider job
+/// pool) the way the rest of this suite samples: seeded by
+/// `QMAP_PROP_SEED`, shrunk by event deletion, the failing input being
+/// a list of grammar lines that pastes directly into a
+/// `model_cex_window.script` replay.
+#[test]
+fn random_window_walks_conform_beyond_the_exhaustive_frontier() {
+    use qmap::engine::remote::PipelineWindow;
+    use qmap::model::window::{WindowEvent, WindowModel};
+    use qmap::model::Fsm;
+
+    let m = WindowModel {
+        jobs: 4,
+        shards: 2,
+        depth: 3,
+    };
+    let cfg = Config::from_env(0xC0FFEE, 64);
+    check_shrink(
+        &cfg,
+        |r| {
+            // walk enabled events so deep schedules are reachable; the
+            // trace is kept as grammar strings so a failure replays
+            let mut s = m.initial();
+            let mut lines: Vec<String> = Vec::new();
+            for _ in 0..40 {
+                let enabled = m.events(&s);
+                if enabled.is_empty() {
+                    break;
+                }
+                let e = enabled[r.below(enabled.len() as u64) as usize].clone();
+                lines.push(m.show_event(&e));
+                s = m.step(&s, &e);
+            }
+            lines
+        },
+        |lines| {
+            // drop one event; disabled leftovers self-loop on both
+            // sides, so every sublist is still a meaningful schedule
+            (0..lines.len())
+                .map(|i| {
+                    let mut c = lines.clone();
+                    c.remove(i);
+                    c
+                })
+                .collect()
+        },
+        |lines| {
+            let mut s = m.initial();
+            let mut win = PipelineWindow::new(m.depth);
+            let mut ids: Vec<Option<u64>> = vec![None; m.jobs];
+            let mut next_id = 0u64;
+            let mut lost = false;
+            let mut swept = false;
+            for (i, line) in lines.iter().enumerate() {
+                let e = m
+                    .parse_event(line)
+                    .ok_or_else(|| format!("unparseable event '{line}'"))?;
+                s = m.step(&s, &e);
+                m.invariant(&s)
+                    .map_err(|err| format!("step {i} ({line}): model invariant: {err}"))?;
+                // mirror the pump's control flow on the real window
+                let live = !lost && !swept;
+                match &e {
+                    WindowEvent::Send => {
+                        if live && win.len() < m.depth {
+                            if let Some(j) = ids.iter().position(|id| id.is_none()) {
+                                next_id += 1;
+                                win.on_sent(next_id, j);
+                                ids[j] = Some(next_id);
+                            }
+                        }
+                    }
+                    WindowEvent::SendFail => {
+                        if live && win.len() < m.depth {
+                            if let Some(j) = ids.iter().position(|id| id.is_none()) {
+                                win.on_send_failed(j);
+                                ids[j] = Some(0);
+                                lost = true;
+                                win.on_loss();
+                            }
+                        }
+                    }
+                    WindowEvent::Outcome { job, .. } => {
+                        if live && *job < ids.len() {
+                            if let Some(id) = ids[*job] {
+                                if let Some(wi) = win.on_outcome(id) {
+                                    if wi != *job {
+                                        return Err(format!(
+                                            "step {i}: outcome for batch {id} routed to \
+                                             job {wi}, not {job}"
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    WindowEvent::Done { job } => {
+                        if live && *job < ids.len() {
+                            if let Some(id) = ids[*job] {
+                                if let Some((wi, _, _)) = win.on_done(id) {
+                                    if wi != *job {
+                                        return Err(format!(
+                                            "step {i}: done for batch {id} routed to \
+                                             job {wi}, not {job}"
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    WindowEvent::StaleOutcome { .. } | WindowEvent::StaleDone { .. } => {}
+                    WindowEvent::Lose => {
+                        if live {
+                            lost = true;
+                            win.on_loss();
+                        }
+                    }
+                    WindowEvent::Sweep => {
+                        if !swept && (lost || win.is_empty()) {
+                            swept = true;
+                        }
+                    }
+                }
+                // retraction on the window-owned projections
+                let firsts = win.tracked_first_outcomes();
+                let got: Vec<(usize, bool)> = win
+                    .inflight_entries()
+                    .iter()
+                    .map(|&(id, w)| (w, firsts.contains(&id)))
+                    .collect();
+                if got != s.inflight {
+                    return Err(format!(
+                        "step {i} ({line}): window {got:?} != model {:?}",
+                        s.inflight
+                    ));
+                }
+                let stamps = win.tracked_sends().len() + firsts.len();
+                if stamps != s.timings {
+                    return Err(format!(
+                        "step {i} ({line}): {stamps} timing stamps live, \
+                         the window accounts for {}",
+                        s.timings
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,932 @@
+//! Model-conformance suite: drives the explicit FSM models in
+//! `qmap::model` and the *real* engine components from the same event
+//! stream, checking the Projection-style retraction invariant
+//!
+//! ```text
+//! map_state(apply(x, e)) == step(map_state(x), e)
+//! ```
+//!
+//! at every edge of a bounded **exhaustive** BFS over event
+//! interleavings (`qmap::model::conform`). Where the randomized suites
+//! (`tests/distributed_stateful.rs`) *sample* interleavings, these
+//! tests *cover* them for small scopes — every delivery order, every
+//! loss point, every crash/tear/resume position up to the documented
+//! depth — and on divergence emit a minimized, replayable script
+//! (`model_cex_<name>.script`) plus an `obs` flight-recorder dump.
+//!
+//! Replay a committed or CI-uploaded counterexample with
+//! `QMAP_MODEL_REPLAY=<script> cargo test --test model_conformance`.
+//!
+//! Three projections bind model to SUT:
+//! * `batch` model  ↔ one real [`BatchLedger`] fed real
+//!   [`ShardOutcome`]s, with `finalize` pinned bit-identical to the
+//!   serial `mapper::search` reference in every interleaving.
+//! * `window` model ↔ [`PipelineWindow`] + one ledger per job — the
+//!   adaptive-depth timing stamps are projected from the real
+//!   `sent_at`/`first_out` bookkeeping, so a drain leak on loss is a
+//!   retraction mismatch, not a sampled flake.
+//! * `journal` model ↔ a real [`Checkpointer`] + [`MapperCache`] on a
+//!   real temp file, including compaction, torn-tail crashes
+//!   (truncating the file mid-mark exactly like the crash would), and
+//!   resume.
+
+use qmap::arch::presets::toy;
+use qmap::arch::Arch;
+use qmap::engine::checkpoint::SearchIdent;
+use qmap::engine::remote::{BatchLedger, PipelineWindow};
+use qmap::engine::Checkpointer;
+use qmap::mapper::cache::{MapperCache, WorkloadKey};
+use qmap::mapper::{self, MapperConfig, MapperResult, ShardOutcome, ShardSpec};
+use qmap::mapping::mapspace::MapSpace;
+use qmap::mapping::LayerContext;
+use qmap::model::batch::{BatchEvent, BatchModel, BatchState};
+use qmap::model::journal::{JournalEvent, JournalModel, JournalState, INIT_GEN};
+use qmap::model::window::{JobView, WindowEvent, WindowModel, WindowState};
+use qmap::model::{
+    conform, explore, parse_script, replay_conformance, Budget, Fsm, Product, Projection,
+};
+use qmap::nsga::{Individual, NsgaConfig, SearchState};
+use qmap::objective::{ObjectiveSpec, ObjectiveVec};
+use qmap::quant::{LayerQuant, QuantConfig};
+use qmap::util::json::{parse, Json};
+use qmap::util::rng::Rng;
+use qmap::workload::ConvLayer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+// ------------------------------------------------- shared shard pool
+
+fn shard_workload(shards: usize) -> (Arch, ConvLayer, LayerQuant, MapperConfig) {
+    let arch = toy();
+    let layer = ConvLayer::conv("c1", 3, 8, 3, 16, 1);
+    let q = LayerQuant::uniform(4).canonical(arch.word_bits, arch.bit_packing);
+    let cfg = MapperConfig {
+        valid_target: 30,
+        max_draws: 30_000,
+        seed: 11,
+        shards,
+    };
+    (arch, layer, q, cfg)
+}
+
+/// Precomputed real shard work: `run_shard` is pure, so every
+/// conformance edge can deliver the same outcomes a live worker would
+/// stream, without re-searching per edge.
+struct ShardPool {
+    specs: Vec<ShardSpec>,
+    outcomes: Vec<ShardOutcome>,
+    /// The serial `mapper::search` result every merge must hit, bit
+    /// for bit, in every interleaving.
+    reference: MapperResult,
+}
+
+impl ShardPool {
+    fn new(shards: usize) -> ShardPool {
+        let (arch, layer, q, cfg) = shard_workload(shards);
+        let space = MapSpace::of(&arch);
+        let lctx = LayerContext::new(&arch, &layer, &q);
+        let specs = mapper::shard_plan(&cfg, cfg.seed ^ mapper::workload_hash(&layer, &q));
+        let outcomes = specs
+            .iter()
+            .map(|s| mapper::run_shard(&space, &lctx, s))
+            .collect();
+        let reference = mapper::search(&arch, &layer, &q, &cfg);
+        ShardPool {
+            specs,
+            outcomes,
+            reference,
+        }
+    }
+}
+
+fn same_result(got: &MapperResult, want: &MapperResult) -> Result<(), String> {
+    let gb = got.best.as_ref().map(|e| e.edp().to_bits());
+    let wb = want.best.as_ref().map(|e| e.edp().to_bits());
+    if got.valid != want.valid
+        || got.draws != want.draws
+        || gb != wb
+        || got.best_mapping != want.best_mapping
+    {
+        return Err(format!(
+            "merged result diverged from the serial reference: \
+             valid {}/{}, draws {}/{}, edp bits {gb:?}/{wb:?}",
+            got.valid, want.valid, got.draws, want.draws
+        ));
+    }
+    Ok(())
+}
+
+// ------------------------------------------- batch ledger projection
+
+struct LedgerProjection {
+    model: BatchModel,
+    pool: Arc<ShardPool>,
+}
+
+#[derive(Clone)]
+struct LedgerSut {
+    ledger: BatchLedger,
+    done: bool,
+    lost: bool,
+    finalized: bool,
+}
+
+impl LedgerSut {
+    fn live(&self) -> bool {
+        !self.done && !self.lost && !self.finalized
+    }
+}
+
+impl Projection for LedgerProjection {
+    type Model = BatchModel;
+    type Sut = LedgerSut;
+
+    fn model(&self) -> &BatchModel {
+        &self.model
+    }
+
+    fn init_sut(&self) -> LedgerSut {
+        LedgerSut {
+            ledger: BatchLedger::new(self.pool.specs.clone()),
+            done: false,
+            lost: false,
+            finalized: false,
+        }
+    }
+
+    fn apply(&self, sut: &mut LedgerSut, e: &BatchEvent) -> Result<(), String> {
+        match e {
+            BatchEvent::Deliver(i) => {
+                if sut.live() && *i < self.pool.specs.len() {
+                    let fresh = sut.ledger.missing().contains(i);
+                    match sut.ledger.deliver(*i, self.pool.outcomes[*i].clone()) {
+                        Ok(filled) if filled == fresh => {}
+                        Ok(filled) => {
+                            return Err(format!(
+                                "deliver({i}) returned Ok({filled}) but the slot was {}",
+                                if fresh { "empty" } else { "filled" }
+                            ))
+                        }
+                        Err(err) => return Err(format!("deliver({i}) refused: {err}")),
+                    }
+                }
+            }
+            BatchEvent::DeliverBogus => {
+                if sut.live() {
+                    let bogus = self.pool.specs.len();
+                    if sut
+                        .ledger
+                        .deliver(bogus, self.pool.outcomes[0].clone())
+                        .is_ok()
+                    {
+                        return Err(format!("out-of-range shard {bogus} was accepted"));
+                    }
+                    sut.lost = true;
+                }
+            }
+            BatchEvent::Done => {
+                if sut.live() {
+                    sut.done = true;
+                }
+            }
+            BatchEvent::Lose => {
+                if sut.live() {
+                    sut.lost = true;
+                }
+            }
+            BatchEvent::Finalize => {
+                if (sut.done || sut.lost) && !sut.finalized {
+                    sut.finalized = true;
+                    let merged = sut
+                        .ledger
+                        .clone()
+                        .finalize(|i, _| self.pool.outcomes[i].clone());
+                    same_result(&merged, &self.pool.reference)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn map_state(&self, sut: &LedgerSut) -> BatchState {
+        let missing = sut.ledger.missing();
+        BatchState {
+            delivered: (0..self.pool.specs.len())
+                .map(|i| !missing.contains(&i))
+                .collect(),
+            done: sut.done,
+            lost: sut.lost,
+            finalized: sut.finalized,
+        }
+    }
+}
+
+/// Every interleaving of shard deliveries, duplicates, bogus indices,
+/// early `done`, loss, and the refill sweep — exhaustively, each
+/// `Finalize` pinned bit-identical to the serial reference.
+#[test]
+fn batch_ledger_conforms_exhaustively() {
+    let pool = Arc::new(ShardPool::new(3));
+    let p = LedgerProjection {
+        model: BatchModel {
+            shards: pool.specs.len(),
+        },
+        pool,
+    };
+    match conform(&p, &Budget::new(12, 100_000)) {
+        Ok(cov) => {
+            assert!(cov.complete, "batch scope must be exhausted: {cov:?}");
+            assert!(cov.deepest >= 5, "got depth {}", cov.deepest);
+        }
+        Err(v) => v.fail_with_script(p.model()),
+    }
+}
+
+// ---------------------------------------- pipeline window projection
+
+struct WindowProjection {
+    model: WindowModel,
+    pool: Arc<ShardPool>,
+}
+
+#[derive(Clone)]
+struct WindowSut {
+    win: PipelineWindow,
+    ledgers: Vec<BatchLedger>,
+    /// Driver-side batch id per claimed job (`Some(0)` = the pseudo id
+    /// of a failed send).
+    ids: Vec<Option<u64>>,
+    completed: Vec<bool>,
+    next_id: u64,
+    lost: bool,
+    swept: bool,
+}
+
+impl WindowSut {
+    fn live(&self) -> bool {
+        !self.lost && !self.swept
+    }
+}
+
+impl Projection for WindowProjection {
+    type Model = WindowModel;
+    type Sut = WindowSut;
+
+    fn model(&self) -> &WindowModel {
+        &self.model
+    }
+
+    fn init_sut(&self) -> WindowSut {
+        WindowSut {
+            win: PipelineWindow::new(self.model.depth),
+            ledgers: (0..self.model.jobs)
+                .map(|_| BatchLedger::new(self.pool.specs.clone()))
+                .collect(),
+            ids: vec![None; self.model.jobs],
+            completed: vec![false; self.model.jobs],
+            next_id: 0,
+            lost: false,
+            swept: false,
+        }
+    }
+
+    fn apply(&self, sut: &mut WindowSut, e: &WindowEvent) -> Result<(), String> {
+        match e {
+            WindowEvent::Send => {
+                if sut.live() && sut.win.len() < self.model.depth {
+                    if let Some(j) = sut.ids.iter().position(|id| id.is_none()) {
+                        sut.next_id += 1;
+                        let id = sut.next_id;
+                        sut.win.on_sent(id, j);
+                        sut.ids[j] = Some(id);
+                    }
+                }
+            }
+            WindowEvent::SendFail => {
+                if sut.live() && sut.win.len() < self.model.depth {
+                    if let Some(j) = sut.ids.iter().position(|id| id.is_none()) {
+                        // the pump's send-failure path: the claim
+                        // stands under pseudo id 0, the connection is
+                        // condemned and the window drained
+                        sut.win.on_send_failed(j);
+                        sut.ids[j] = Some(0);
+                        sut.lost = true;
+                        let drained = sut.win.on_loss();
+                        if !drained.contains(&(0, j)) {
+                            return Err(format!(
+                                "failed send for job {j} not owed on loss: {drained:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            WindowEvent::Outcome { job, shard } => {
+                if sut.live() && *job < sut.ids.len() && *shard < self.model.shards {
+                    if let Some(id) = sut.ids[*job] {
+                        if let Some(wi) = sut.win.on_outcome(id) {
+                            if wi != *job {
+                                return Err(format!(
+                                    "outcome for batch {id} routed to job {wi}, not {job}"
+                                ));
+                            }
+                            let fresh = sut.ledgers[*job].missing().contains(shard);
+                            match sut.ledgers[*job]
+                                .deliver(*shard, self.pool.outcomes[*shard].clone())
+                            {
+                                Ok(filled) if filled == fresh => {}
+                                Ok(filled) => {
+                                    return Err(format!(
+                                        "job {job} deliver({shard}) returned Ok({filled}) \
+                                         for a {} slot",
+                                        if fresh { "empty" } else { "filled" }
+                                    ))
+                                }
+                                Err(err) => {
+                                    return Err(format!("job {job} deliver refused: {err}"))
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            WindowEvent::StaleOutcome { job } => {
+                if sut.live() && *job < sut.ids.len() && sut.completed[*job] {
+                    if let Some(id) = sut.ids[*job] {
+                        if sut.win.on_outcome(id).is_some() {
+                            return Err(format!(
+                                "stale outcome for completed job {job} treated as live"
+                            ));
+                        }
+                    }
+                }
+            }
+            WindowEvent::Done { job } => {
+                if sut.live() && *job < sut.ids.len() {
+                    if let Some(id) = sut.ids[*job] {
+                        if let Some((wi, _rtt, _serve)) = sut.win.on_done(id) {
+                            if wi != *job {
+                                return Err(format!(
+                                    "done for batch {id} routed to job {wi}, not {job}"
+                                ));
+                            }
+                            sut.completed[*job] = true;
+                        }
+                    }
+                }
+            }
+            WindowEvent::StaleDone { job } => {
+                if sut.live() && *job < sut.ids.len() && sut.completed[*job] {
+                    if let Some(id) = sut.ids[*job] {
+                        if sut.win.on_done(id).is_some() {
+                            return Err(format!(
+                                "stale done for completed job {job} treated as live"
+                            ));
+                        }
+                    }
+                }
+            }
+            WindowEvent::Lose => {
+                if sut.live() {
+                    sut.lost = true;
+                    sut.win.on_loss();
+                }
+            }
+            WindowEvent::Sweep => {
+                if !sut.swept && (sut.lost || sut.win.is_empty()) {
+                    sut.swept = true;
+                    // the driver's sweep: every claimed job refills its
+                    // missing shards and merges bit-identically
+                    for j in 0..sut.ledgers.len() {
+                        if sut.ids[j].is_some() {
+                            let merged = sut.ledgers[j]
+                                .clone()
+                                .finalize(|i, _| self.pool.outcomes[i].clone());
+                            same_result(&merged, &self.pool.reference)
+                                .map_err(|e| format!("job {j}: {e}"))?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn map_state(&self, sut: &WindowSut) -> WindowState {
+        let firsts = sut.win.tracked_first_outcomes();
+        WindowState {
+            inflight: sut
+                .win
+                .inflight_entries()
+                .iter()
+                .map(|&(id, work)| (work, firsts.contains(&id)))
+                .collect(),
+            jobs: (0..self.model.jobs)
+                .map(|j| {
+                    let missing = sut.ledgers[j].missing();
+                    JobView {
+                        claimed: sut.ids[j].is_some(),
+                        delivered: (0..self.model.shards)
+                            .map(|s| !missing.contains(&s))
+                            .collect(),
+                        completed: sut.completed[j],
+                    }
+                })
+                .collect(),
+            lost: sut.lost,
+            swept: sut.swept,
+            timings: sut.win.tracked_sends().len() + firsts.len(),
+        }
+    }
+}
+
+fn window_projection() -> WindowProjection {
+    let pool = Arc::new(ShardPool::new(2));
+    WindowProjection {
+        model: WindowModel {
+            jobs: 3,
+            shards: pool.specs.len(),
+            depth: 2,
+        },
+        pool,
+    }
+}
+
+/// The acceptance scope: worker loss × pipelining at depth ≤ 2,
+/// exhaustively — every send/outcome/done/stale/loss interleaving of 3
+/// jobs through a depth-2 window, with the real adaptive-depth timing
+/// bookkeeping projected back onto the model at every edge. A stamp
+/// leaked past a loss (the old EWMA bookkeeping bug) is a retraction
+/// mismatch here, at the exact first edge that leaks it.
+#[test]
+fn pipeline_window_conforms_exhaustively() {
+    let p = window_projection();
+    match conform(&p, &Budget::new(14, 400_000)) {
+        Ok(cov) => {
+            assert!(cov.complete, "window scope must be exhausted: {cov:?}");
+            // a fault-free full run is 13 events: 3 sends, 6 outcomes,
+            // 3 dones, the sweep
+            assert!(cov.deepest >= 13, "got depth {}", cov.deepest);
+        }
+        Err(v) => v.fail_with_script(p.model()),
+    }
+}
+
+// ----------------------------------------- checkpoint journal SUT
+
+/// Shared immutable half of the journal SUT: the search identity, the
+/// churn + fresh workloads with their precomputed results, and each
+/// key's exact journal frame line (`{"insert":{...}}` is byte-stable
+/// for a given key+result, which is what lets `map_state` read the
+/// file back into model terms).
+struct JournalPool {
+    arch: Arch,
+    cfg: MapperConfig,
+    ident: SearchIdent,
+    /// The churn key: re-inserted repeatedly, one cache entry.
+    dup: (ConvLayer, LayerQuant, MapperResult, String),
+    /// Single-use fresh keys.
+    fresh: Vec<(ConvLayer, LayerQuant, MapperResult, String)>,
+    slack: u8,
+    max_gen: u8,
+    counter: AtomicUsize,
+}
+
+fn sig_line(
+    arch: &Arch,
+    layer: &ConvLayer,
+    q: &LayerQuant,
+    cfg: &MapperConfig,
+    r: &MapperResult,
+) -> String {
+    let c = MapperCache::new();
+    c.insert_search(arch, layer, q, cfg, r);
+    let mut es = c.entries_json();
+    assert_eq!(es.len(), 1, "one key, one entry");
+    Json::obj(vec![("insert", es.remove(0))]).to_string()
+}
+
+impl JournalPool {
+    fn new(fresh_keys: usize, slack: u8, max_gen: u8) -> JournalPool {
+        let arch = toy();
+        let cfg = MapperConfig {
+            valid_target: 20,
+            max_draws: 20_000,
+            seed: 5,
+            shards: 1,
+        };
+        let q = LayerQuant::uniform(8);
+        let mk = |out: u64| {
+            let l = ConvLayer::fc("fc", 16, out);
+            let r = mapper::search(&arch, &l, &q, &cfg);
+            let sig = sig_line(&arch, &l, &q, &cfg, &r);
+            (l, q, r, sig)
+        };
+        JournalPool {
+            ident: SearchIdent::new(
+                &arch,
+                4,
+                &ObjectiveSpec::default(),
+                &MapperConfig::default(),
+                &NsgaConfig::default(),
+            ),
+            dup: mk(10),
+            fresh: (0..fresh_keys as u64).map(|i| mk(12 + 2 * i)).collect(),
+            arch,
+            cfg,
+            slack,
+            max_gen,
+            counter: AtomicUsize::new(0),
+        }
+    }
+}
+
+fn search_state(generation: usize) -> SearchState {
+    SearchState {
+        generation,
+        pop: vec![Individual {
+            genome: QuantConfig::uniform(4, 4),
+            objectives: ObjectiveVec::raw(vec![1.0, 2.0]),
+        }],
+        rng: Rng::new(0xFEED_F00D),
+    }
+}
+
+/// Read the journal file back into model terms: complete mark
+/// generations, complete insert-frame lines, and whether the tail is
+/// torn — mirroring exactly what `Checkpointer::load` would accept.
+fn parse_journal(path: &str) -> (Vec<u8>, Vec<String>, bool) {
+    let text = std::fs::read_to_string(path).expect("journal file exists");
+    let mut torn = !text.ends_with('\n');
+    let lines: Vec<&str> = text.lines().collect();
+    let mut marks = Vec::new();
+    let mut inserts = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        match parse(line) {
+            Ok(f) => {
+                if let Some(g) = f.get("mark").get("generation").as_f64() {
+                    marks.push(g as u8);
+                } else if !matches!(f.get("insert"), Json::Null) {
+                    inserts.push((*line).to_string());
+                }
+            }
+            Err(_) if i + 1 == lines.len() => torn = true,
+            Err(e) => panic!("corrupt middle frame in model journal: {e}: {line}"),
+        }
+    }
+    (marks, inserts, torn)
+}
+
+/// The live half: a real `Checkpointer` + `MapperCache` on a private
+/// temp file. `Clone` (required by the BFS, which forks one SUT per
+/// explored edge) rebuilds the state by replaying the event history
+/// through the real API on a fresh file — there is no snapshot
+/// shortcut that wouldn't bypass the very code under test.
+struct JournalSut {
+    pool: Arc<JournalPool>,
+    path: String,
+    ckpt: Checkpointer,
+    cache: MapperCache,
+    down: bool,
+    // driver-side mirrors for the model fields with no filesystem
+    // observable; everything they feed (frame counts, entries, marks)
+    // is cross-checked against the real file at every Save/Resume
+    pending_dup: u8,
+    pending_fresh: u8,
+    used_fresh: u8,
+    next_gen: u8,
+    history: Vec<JournalEvent>,
+}
+
+fn fresh_journal_sut(pool: &Arc<JournalPool>) -> JournalSut {
+    let n = pool.counter.fetch_add(1, Ordering::Relaxed);
+    let mut p = std::env::temp_dir();
+    p.push(format!(
+        "qmap_model_journal_{}_{n}.json",
+        std::process::id()
+    ));
+    let path = p.to_string_lossy().into_owned();
+    let ckpt = Checkpointer::new(path.as_str()).with_compact_slack(pool.slack as usize);
+    let cache = MapperCache::new();
+    ckpt.save(&search_state(INIT_GEN as usize), &cache, &pool.ident)
+        .expect("initial save");
+    JournalSut {
+        pool: pool.clone(),
+        path,
+        ckpt,
+        cache,
+        down: false,
+        pending_dup: 0,
+        pending_fresh: 0,
+        used_fresh: 0,
+        next_gen: INIT_GEN + 1,
+        history: Vec::new(),
+    }
+}
+
+impl JournalSut {
+    /// The process dies: appender and cache are gone, the file stays.
+    fn kill(&mut self) {
+        self.ckpt =
+            Checkpointer::new(self.path.as_str()).with_compact_slack(self.pool.slack as usize);
+        self.cache = MapperCache::new();
+        self.down = true;
+        self.pending_dup = 0;
+        self.pending_fresh = 0;
+    }
+
+    fn raw_apply(&mut self, e: &JournalEvent) -> Result<(), String> {
+        let pool = self.pool.clone();
+        match e {
+            JournalEvent::InsertDup => {
+                if !self.down {
+                    let (l, q, r, _) = &pool.dup;
+                    self.cache.insert_search(&pool.arch, l, q, &pool.cfg, r);
+                    self.pending_dup += 1;
+                }
+            }
+            JournalEvent::InsertFresh => {
+                if !self.down && (self.used_fresh as usize) < pool.fresh.len() {
+                    let (l, q, r, _) = &pool.fresh[self.used_fresh as usize];
+                    self.cache.insert_search(&pool.arch, l, q, &pool.cfg, r);
+                    self.pending_fresh += 1;
+                    self.used_fresh += 1;
+                }
+            }
+            JournalEvent::Save => {
+                if !self.down && self.next_gen <= pool.max_gen {
+                    let st = search_state(self.next_gen as usize);
+                    self.ckpt
+                        .save(&st, &self.cache, &pool.ident)
+                        .map_err(|err| format!("save: {err}"))?;
+                    if !self.ckpt.journal_armed() {
+                        return Err("save left the appender unarmed".to_string());
+                    }
+                    self.pending_dup = 0;
+                    self.pending_fresh = 0;
+                    self.next_gen += 1;
+                }
+            }
+            JournalEvent::Crash => {
+                if !self.down {
+                    self.kill();
+                }
+            }
+            JournalEvent::Tear => {
+                if !self.down {
+                    let (marks, _, torn) = parse_journal(&self.path);
+                    if !torn && marks.len() >= 2 {
+                        // cut the file inside the final mark line —
+                        // the crash-mid-append the loader must survive
+                        let text = std::fs::read_to_string(&self.path)
+                            .map_err(|err| err.to_string())?;
+                        let cut = text.rfind("{\"mark\":").ok_or("no mark line to tear")?;
+                        std::fs::write(&self.path, &text[..cut + 9])
+                            .map_err(|err| err.to_string())?;
+                        self.kill();
+                    }
+                }
+            }
+            JournalEvent::Resume => {
+                if self.down {
+                    let (marks, _, torn) = parse_journal(&self.path);
+                    if !marks.is_empty() {
+                        let ckpt = Checkpointer::new(self.path.as_str())
+                            .with_compact_slack(pool.slack as usize);
+                        let cache = MapperCache::new();
+                        let st = ckpt
+                            .load(&pool.ident, &cache)
+                            .map_err(|err| format!("resume: {err}"))?;
+                        if st.generation as u8 != *marks.last().expect("non-empty") {
+                            return Err(format!(
+                                "resumed at generation {} but the last complete mark is {}",
+                                st.generation,
+                                marks.last().expect("non-empty")
+                            ));
+                        }
+                        if ckpt.journal_armed() == torn {
+                            return Err(format!(
+                                "armed={} after a resume with torn={torn}",
+                                ckpt.journal_armed()
+                            ));
+                        }
+                        self.ckpt = ckpt;
+                        self.cache = cache;
+                        self.down = false;
+                        self.pending_dup = 0;
+                        self.pending_fresh = 0;
+                        self.next_gen = st.generation as u8 + 1;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Clone for JournalSut {
+    fn clone(&self) -> JournalSut {
+        let mut s = fresh_journal_sut(&self.pool);
+        for e in &self.history {
+            s.raw_apply(e)
+                .expect("replaying a previously-accepted event history");
+        }
+        s.history = self.history.clone();
+        s
+    }
+}
+
+impl Drop for JournalSut {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+struct JournalProjection {
+    model: JournalModel,
+    pool: Arc<JournalPool>,
+}
+
+impl Projection for JournalProjection {
+    type Model = JournalModel;
+    type Sut = JournalSut;
+
+    fn model(&self) -> &JournalModel {
+        &self.model
+    }
+
+    fn init_sut(&self) -> JournalSut {
+        fresh_journal_sut(&self.pool)
+    }
+
+    fn apply(&self, sut: &mut JournalSut, e: &JournalEvent) -> Result<(), String> {
+        sut.history.push(e.clone());
+        sut.raw_apply(e)
+    }
+
+    fn map_state(&self, sut: &JournalSut) -> JournalState {
+        let (marks, insert_lines, torn) = parse_journal(&sut.path);
+        let pool = &sut.pool;
+        let probe = |l: &ConvLayer, q: &LayerQuant| {
+            sut.cache
+                .probe_key(WorkloadKey::of(&pool.arch, l, q), &pool.cfg)
+                .is_some()
+        };
+        JournalState {
+            file_inserts: insert_lines.len() as u8,
+            file_fresh: pool
+                .fresh
+                .iter()
+                .filter(|f| insert_lines.iter().any(|l| l == &f.3))
+                .count() as u8,
+            file_has_dup: insert_lines.iter().any(|l| l == &pool.dup.3),
+            marks,
+            torn,
+            down: sut.down,
+            armed: sut.ckpt.journal_armed(),
+            appended: sut.ckpt.journal_appended().unwrap_or(0) as u8,
+            live_fresh: pool.fresh.iter().filter(|f| probe(&f.0, &f.1)).count() as u8,
+            live_has_dup: probe(&pool.dup.0, &pool.dup.1),
+            pending_dup: sut.pending_dup,
+            pending_fresh: sut.pending_fresh,
+            used_fresh: sut.used_fresh,
+            next_gen: sut.next_gen,
+        }
+    }
+}
+
+fn journal_projection() -> JournalProjection {
+    // the scope is deliberately small and NOT env-scalable: every
+    // explored edge forks the SUT by replaying its history through
+    // real fsync'd saves, so cost grows with states × depth. Slack 0
+    // forces compaction inside the scope; one fresh key separates
+    // frames from entries; max_gen 6 bounds save chains.
+    let pool = Arc::new(JournalPool::new(1, 0, 6));
+    JournalProjection {
+        model: JournalModel {
+            slack: pool.slack,
+            fresh_pool: pool.fresh.len() as u8,
+            max_gen: pool.max_gen,
+        },
+        pool,
+    }
+}
+
+/// Every interleaving of insert/save/compaction/crash/tear/resume to
+/// depth 6 against a **real** checkpoint journal on disk: the file is
+/// parsed back into model terms at every edge, so a dropped mark, a
+/// miscounted frame, an appender left armed over a torn tail, or a
+/// resume landing on the wrong generation is a retraction mismatch at
+/// the first edge that causes it — this is the scope that contains
+/// torn-tail-immediately-after-compaction.
+#[test]
+fn checkpoint_journal_conforms_exhaustively() {
+    let p = journal_projection();
+    match conform(&p, &Budget::new(6, 20_000)) {
+        Ok(cov) => {
+            assert!(cov.complete, "journal scope must be exhausted: {cov:?}");
+            assert!(cov.deepest >= 6, "got depth {}", cov.deepest);
+            // the scope must actually contain a compaction and a tear:
+            // churn 3 saves deep compacts (3 frames > 0 + 2·1 entries)
+            assert!(cov.states > 100, "suspiciously small: {cov:?}");
+        }
+        Err(v) => v.fail_with_script(p.model()),
+    }
+}
+
+// ------------------------------------------------ composed coverage
+
+/// Cross-product coverage: the pipelined window interleaved with the
+/// checkpoint journal (pure models — the conformance of each side is
+/// pinned by the tests above). Depth 8 here means *every* schedule of
+/// 8 combined events — worker loss between any two journal saves, a
+/// crash mid-window, a resume while a batch streams — which is the
+/// composed scope the acceptance floor (depth ≥ 6) asks for.
+/// `QMAP_MODEL_DEPTH`/`QMAP_MODEL_STATES` raise it in CI.
+#[test]
+fn window_x_journal_composed_coverage() {
+    let wm = WindowModel {
+        jobs: 2,
+        shards: 2,
+        depth: 2,
+    };
+    let jm = JournalModel {
+        slack: 0,
+        fresh_pool: 1,
+        max_gen: 6,
+    };
+    let p = Product { a: &wm, b: &jm };
+    let cov = match explore(&p, &Budget::from_env(8, 400_000)) {
+        Ok(cov) => cov,
+        Err(v) => v.fail_with_script(&p),
+    };
+    assert!(cov.complete, "composed scope must be exhausted: {cov:?}");
+    assert!(cov.deepest >= 6, "acceptance floor: got depth {}", cov.deepest);
+}
+
+// --------------------------------------------------------- replay
+
+/// Replays a counterexample script (from a CI artifact or a committed
+/// regression) through the same projections the exhaustive runs use:
+/// `QMAP_MODEL_REPLAY=model_cex_window.script cargo test --test
+/// model_conformance`. Without the env var this test is a no-op, so
+/// the suite stays deterministic in CI.
+#[test]
+fn replay_counterexample_script_from_env() {
+    let Ok(path) = std::env::var("QMAP_MODEL_REPLAY") else {
+        return;
+    };
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("QMAP_MODEL_REPLAY={path}: {e}"));
+    let head = text.lines().next().unwrap_or("");
+    let fail = |i: usize, msg: String| {
+        panic!("replay of {path} diverged after event {i}: {msg}")
+    };
+    match head {
+        "model:batch" => {
+            let pool = Arc::new(ShardPool::new(3));
+            let p = LedgerProjection {
+                model: BatchModel {
+                    shards: pool.specs.len(),
+                },
+                pool,
+            };
+            let trace = parse_script(p.model(), &text).expect("parse script");
+            if let Err((i, msg)) = replay_conformance(&p, &trace) {
+                fail(i, msg);
+            }
+        }
+        "model:window" => {
+            let p = window_projection();
+            let trace = parse_script(p.model(), &text).expect("parse script");
+            if let Err((i, msg)) = replay_conformance(&p, &trace) {
+                fail(i, msg);
+            }
+        }
+        "model:journal" => {
+            let p = journal_projection();
+            let trace = parse_script(p.model(), &text).expect("parse script");
+            if let Err((i, msg)) = replay_conformance(&p, &trace) {
+                fail(i, msg);
+            }
+        }
+        "model:window_x_journal" => {
+            let wm = WindowModel {
+                jobs: 2,
+                shards: 2,
+                depth: 2,
+            };
+            let jm = JournalModel {
+                slack: 0,
+                fresh_pool: 1,
+                max_gen: 6,
+            };
+            let p = Product { a: &wm, b: &jm };
+            let trace = parse_script(&p, &text).expect("parse script");
+            if let Err((i, msg)) = qmap::model::replay(&p, &trace) {
+                fail(i, msg);
+            }
+        }
+        other => panic!("{path}: unknown script header '{other}'"),
+    }
+    println!("replayed {path} cleanly — the divergence is fixed");
+}
