@@ -238,6 +238,48 @@ fn main() {
         dt_warm * 1e6
     );
 
+    // 3b. persistent store warm-start: seed a store file from one
+    //     characterization (write-behind appends on every fresh
+    //     search), then measure what a brand-new process pays — reopen
+    //     + index the store, and a store-backed characterization with
+    //     a completely cold in-memory cache — against the true cold
+    //     run above. Bit-identity of the store-served result is
+    //     asserted, and `warm_start_speedup_x` is floor-guarded.
+    let store_dir =
+        std::env::temp_dir().join(format!("qmap_bench_store_{}", std::process::id()));
+    std::fs::create_dir_all(&store_dir).unwrap();
+    let dir_str = store_dir.to_str().unwrap().to_string();
+    {
+        let seeded = MapperCache::new();
+        seeded.set_backing(
+            qmap::mapper::store::open_search_store(&dir_str, &arch, &cfg).expect("seed store"),
+        );
+        assert!(evaluate_network(&arch, &layers, &qc, &seeded, &cfg).is_some());
+    }
+    let (pstore, dt_open) = time("store: reopen + index persistent mapper store", || {
+        qmap::mapper::store::open_search_store(&dir_str, &arch, &cfg).expect("reopen store")
+    });
+    let store_open_ms = dt_open * 1e3;
+    assert!(!pstore.is_empty(), "seeding characterization must have appended records");
+    let cache3 = MapperCache::new();
+    cache3.set_backing(pstore);
+    let (r_store, dt_store) = time("network: MobileNetV1 store-backed, cold process", || {
+        evaluate_network(&arch, &layers, &qc, &cache3, &cfg)
+    });
+    let warm_start_speedup_x = dt_cold / dt_store.max(1e-12);
+    let (c, s) = (r_cold.as_ref().unwrap(), r_store.as_ref().unwrap());
+    assert_eq!(c.edp.to_bits(), s.edp.to_bits(), "store-served edp must be bit-identical");
+    assert_eq!(
+        c.energy_pj.to_bits(),
+        s.energy_pj.to_bits(),
+        "store-served energy must be bit-identical"
+    );
+    println!(
+        "  -> store open {store_open_ms:.1} ms; warm-start speedup {warm_start_speedup_x:.1}x \
+         (store-backed cold process vs cold search)"
+    );
+    let _ = std::fs::remove_dir_all(&store_dir);
+
     // 4. cache hit latency (single layer, striped cache)
     let (_, dth) = time("cache: single-workload hit x 100k", || {
         for _ in 0..100_000 {
@@ -592,6 +634,8 @@ fn main() {
     println!("  shard_scaling_x              = {shard_scaling:.2}");
     println!("  network_cold_ms              = {:.1}", dt_cold * 1e3);
     println!("  network_warm_us              = {:.1}", dt_warm * 1e6);
+    println!("  store_open_ms                = {store_open_ms:.2}");
+    println!("  warm_start_speedup_x         = {warm_start_speedup_x:.1}");
     println!("  cache_hit_ns                 = {cache_hit_ns:.0}");
     println!("  engine_speedup_4w_x          = {engine_4w:.2}");
     println!("  pop64_speedup_x              = {pop64:.1}");
@@ -633,6 +677,11 @@ fn main() {
         ("threads", Json::Num(threads as f64)),
         ("network_cold_ms", Json::Num(dt_cold * 1e3)),
         ("network_warm_us", Json::Num(dt_warm * 1e6)),
+        // persistent store tier: open+index cost of the seeded store
+        // and the store-backed cold-process characterization vs the
+        // true cold run (bit-identity asserted above; floor-guarded)
+        ("store_open_ms", Json::Num(store_open_ms)),
+        ("warm_start_speedup_x", Json::Num(warm_start_speedup_x)),
         ("cache_hit_ns", Json::Num(cache_hit_ns)),
         // engine scaling rows: population evaluation through
         // engine::driver at each worker count (1 = serial baseline)

@@ -43,6 +43,15 @@
 //! Checkpoints from before the journal (the single-document v2
 //! snapshot) still load; the first save then migrates the file to the
 //! journal format.
+//!
+//! **Relation to the persistent cache store** (`mapper::store`,
+//! `--cache-dir`): the journal stays the bit-identity source of truth
+//! for resuming a *particular* search — RNG state, population, and
+//! every insert in order. The store is a strictly-additive
+//! read-through/write-behind tier shared *across* searches and
+//! processes: losing it costs only warm-start time, and entries a
+//! probe promotes from it are journaled exactly like fresh inserts,
+//! so a resumed run never depends on the store being present.
 
 use crate::arch::Arch;
 use crate::mapper::cache::MapperCache;

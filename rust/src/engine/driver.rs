@@ -94,6 +94,14 @@ fn eval_layer_hinted(
 /// The keyed core of [`eval_layer`]: `q` must be canonical and `wk` its
 /// [`WorkloadKey`]. Probe, search-on-miss, and insert all reuse the
 /// precomputed key — the workload is never re-hashed.
+///
+/// When the cache has a persistent backing store attached
+/// (`--cache-dir`), `probe_key` consults it on an in-memory miss and
+/// `insert_search_key` writes the fresh result behind — so a cold
+/// process warm-starts here without any change to this flow. The
+/// store is strictly additive: a hit serves the same bits a
+/// re-search would produce, and the checkpoint journal (not the
+/// store) remains the bit-identity source of truth for resume.
 #[allow(clippy::too_many_arguments)]
 fn eval_layer_keyed(
     engine: &Engine,

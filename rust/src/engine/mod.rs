@@ -28,6 +28,14 @@
 //!   the driver merges through the same deterministic reduction.
 //!   Worker loss, duplicate delivery, and reordering are absorbed
 //!   without perturbing a single bit of the result (see [`Backend`]).
+//!
+//! Under all of it sits the optional persistent cache tier
+//! ([`mapper::store`](crate::mapper::store), `--cache-dir`): the
+//! driver's cache probes read through to an append-only cross-process
+//! store and fresh results are appended behind, and `qmap worker`
+//! persists shard outcomes the same way — so searches, workers, and
+//! whole fleets warm-start across process lifetimes while every path
+//! above stays bit-identical to a cold run.
 
 pub mod checkpoint;
 pub mod driver;

@@ -369,6 +369,82 @@ fn shard_cache_key(arch_src: &str, layer: &ConvLayer, q: &LayerQuant, spec: &Sha
     h.finish()
 }
 
+// ----------------------------------------- persistent worker store
+
+/// Directory for the worker's persistent outcome store (`qmap worker
+/// --cache-dir DIR` / `QMAP_CACHE_DIR`). Set once at startup; unset =
+/// in-memory caching only.
+static WORKER_STORE_DIR: OnceLock<String> = OnceLock::new();
+
+/// Point the worker at a persistent outcome-store directory. Outcomes
+/// are persisted in the same binary format as the search-side store
+/// (`mapper::store`), one file per arch, so worker restarts and whole
+/// fleets warm-start instead of re-searching. Call before [`serve`];
+/// later calls are ignored.
+pub fn set_worker_store_dir(dir: String) {
+    let _ = WORKER_STORE_DIR.set(dir);
+}
+
+/// Lazily opened per-arch stores, keyed by FNV of the canonical arch
+/// text the driver sends (which pins the record layout too — payload
+/// width is a function of the arch's level count). A failed open is
+/// remembered as `None` so a bad path is reported once, not per batch:
+/// the worker proceeds cold — the store is a cache tier, never a
+/// correctness dependency, so unlike the search side an unusable file
+/// must not kill a fleet worker.
+fn worker_store(arch_src: &str, levels: usize) -> Option<Arc<mapper::store::CacheStore>> {
+    let dir = WORKER_STORE_DIR.get()?;
+    static STORES: OnceLock<Mutex<FxHashMap<u64, Option<Arc<mapper::store::CacheStore>>>>> =
+        OnceLock::new();
+    let stores = STORES.get_or_init(|| Mutex::new(FxHashMap::default()));
+    let identity = crate::util::fnv1a(arch_src.as_bytes());
+    let mut g = stores.lock().unwrap();
+    g.entry(identity)
+        .or_insert_with(|| {
+            let open = || -> Result<Arc<mapper::store::CacheStore>, mapper::store::StoreError> {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| mapper::store::StoreError::Io(format!("{dir}: {e}")))?;
+                let path =
+                    std::path::Path::new(dir).join(format!("worker_{identity:016x}.qstore"));
+                Ok(Arc::new(mapper::store::CacheStore::open(
+                    &path,
+                    identity,
+                    mapper::store::outcome_slots(levels),
+                )?))
+            };
+            match open() {
+                Ok(s) => {
+                    obs::event_human(
+                        obs::Level::Status,
+                        "worker_store_open",
+                        vec![
+                            ("path", Json::Str(s.path().display().to_string())),
+                            ("entries", Json::Num(s.len() as f64)),
+                            ("open_us", Json::Num(s.open_us() as f64)),
+                        ],
+                        &format!(
+                            "qmap worker: outcome store {} ({} entries, opened in {} us)",
+                            s.path().display(),
+                            s.len(),
+                            s.open_us()
+                        ),
+                    );
+                    Some(s)
+                }
+                Err(e) => {
+                    obs::event_human(
+                        obs::Level::Status,
+                        "worker_store_failed",
+                        vec![("error", Json::Str(e.to_string()))],
+                        &format!("qmap worker: outcome store disabled: {e}"),
+                    );
+                    None
+                }
+            }
+        })
+        .clone()
+}
+
 /// One decoded `batch` message: everything needed to run it.
 struct BatchWork {
     id: u64,
@@ -471,7 +547,15 @@ fn handle_batch(
     // the per-search outcome cache: a spec this worker has already run
     // for the same search (an earlier batch, an earlier generation, a
     // re-send after a lost connection) is served without re-searching —
-    // the cached outcome is bit-identical to a fresh run by purity
+    // the cached outcome is bit-identical to a fresh run by purity.
+    // Behind it sits the optional persistent store: a spec any earlier
+    // *process* ran is decoded from disk instead of re-searched, and
+    // fresh outcomes are appended for the next process. The in-memory
+    // cache is keyed per search; the store key (`shard_cache_key`)
+    // folds the full shard identity, so it is shared across searches.
+    let levels = arch.levels.len();
+    let pstore =
+        if opts.disable_outcome_cache { None } else { worker_store(&arch_src, levels) };
     let run_cached = |spec: &ShardSpec| -> ShardOutcome {
         if opts.disable_outcome_cache {
             return run_fresh(spec);
@@ -481,7 +565,21 @@ fn handle_batch(
             metrics::counters().worker_cache_hits.fetch_add(1, Ordering::Relaxed);
             return hit;
         }
+        if let Some(s) = &pstore {
+            let stored = s
+                .lookup(key)
+                .and_then(|(_, payload)| mapper::store::decode_outcome(payload, levels));
+            if let Some(out) = stored {
+                metrics::counters().store_hits.fetch_add(1, Ordering::Relaxed);
+                cache.put(search, key, &out);
+                return out;
+            }
+            metrics::counters().store_misses.fetch_add(1, Ordering::Relaxed);
+        }
         let out = run_fresh(spec);
+        if let Some(s) = &pstore {
+            s.append(key, 1, &mapper::store::encode_outcome(&out, levels));
+        }
         cache.put(search, key, &out);
         out
     };

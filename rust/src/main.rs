@@ -45,7 +45,7 @@ characterize:
             [--checkpoint file.json [--resume]]              named k-objective space (default
             [--workers host:port,...|@fleet.txt]             edp,error; or QMAP_OBJECTIVES; axes:
             [--pipeline N] [--svg PREFIX]                    error energy memory_energy edp
-                                                             cycles weight_words model_size).
+            [--cache-dir DIR]                                cycles weight_words model_size).
                                                              Append-only journal checkpoint per
                                                              generation records the spec — resume
                                                              under another spec is refused;
@@ -56,17 +56,24 @@ characterize:
                                                              auto-clamps to measured RTT) —
                                                              results bit-identical to local.
                                                              --svg writes every 2-D projection
-                                                             of the k-D front as PREFIX_*.svg
+                                                             of the k-D front as PREFIX_*.svg.
+                                                             --cache-dir (or QMAP_CACHE_DIR)
+                                                             opens a persistent cross-process
+                                                             mapper-cache store keyed by
+                                                             arch+config identity — mismatch is
+                                                             refused; warm runs bit-identical
 
 distributed:
   worker    --listen HOST:PORT [--stdin-close]               serve mapper shard batches to a
-            [--metrics HOST:PORT]                            remote `qmap search --workers`
+            [--metrics HOST:PORT] [--cache-dir DIR]          remote `qmap search --workers`
                                                              driver (stateless; SIGTERM — and
                                                              stdin EOF with --stdin-close —
                                                              finishes the in-flight batch,
                                                              flushes, exits 0). --metrics
                                                              serves Prometheus-style counters
-                                                             over HTTP
+                                                             over HTTP; --cache-dir persists
+                                                             shard outcomes so restarts and
+                                                             fleets warm-start
 
 observability:
   trace-report FILE                                          summarize a `--trace` JSONL file
@@ -76,9 +83,11 @@ observability:
 
 engine:
   engine-stats [--budget N] [--workers host:port,...|@file]  work-stealing pool self-test:
-               [--pipeline N]                                scaling rows + tail latency +
+               [--pipeline N] [--cache-dir DIR]              scaling rows + tail latency +
                                                              steal/split/remote counters,
-                                                             bit-identity check
+                                                             bit-identity check; --cache-dir
+                                                             reopens the store per row and
+                                                             prints store hit/append stats
 
 paper artifacts (same engines as `cargo bench`):
   fig1 [--n 250] | table1 | fig3 | fig4 | fig5 | fig6 | table2
@@ -266,6 +275,70 @@ fn parse_genome(s: &str, n: usize) -> Result<QuantConfig, String> {
 fn fail(e: impl std::fmt::Display) -> i32 {
     eprintln!("error: {e}");
     1
+}
+
+/// The persistent cache-store directory: `--cache-dir DIR` beats
+/// `QMAP_CACHE_DIR`; absent = no persistent tier.
+fn cache_dir(args: &Args) -> Option<String> {
+    args.get("cache-dir")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("QMAP_CACHE_DIR").ok())
+}
+
+/// Open the search-side cache store under `dir` and attach it to
+/// `cache`, or exit loudly: a mismatched identity (different arch or
+/// mapper config), corrupt header, or unreadable path is a refusal —
+/// silently searching cold (or worse, reusing foreign results) would
+/// hide exactly the condition the operator needs to see.
+fn attach_search_store(
+    cache: &MapperCache,
+    dir: &str,
+    arch: &Arch,
+    cfg: &MapperConfig,
+) -> Result<(), String> {
+    let store = qmap::mapper::store::open_search_store(dir, arch, cfg)
+        .map_err(|e| e.to_string())?;
+    obs::event_human(
+        Level::Status,
+        "store_open",
+        vec![
+            ("path", Json::Str(store.path().display().to_string())),
+            ("entries", Json::Num(store.len() as f64)),
+            ("skipped", Json::Num(store.skipped() as f64)),
+            ("open_us", Json::Num(store.open_us() as f64)),
+        ],
+        &format!(
+            "cache store {} ({} entries, opened in {} us)",
+            store.path().display(),
+            store.len(),
+            store.open_us()
+        ),
+    );
+    cache.set_backing(store);
+    Ok(())
+}
+
+/// The end-of-run store summary (Status level: the CI smoke asserts on
+/// the hit count). Counters are process-global, so this reports the
+/// whole run's read-through/write-behind traffic.
+fn store_summary() {
+    use std::sync::atomic::Ordering::Relaxed;
+    let m = obs::metrics::counters();
+    let (h, mi, ap) = (
+        m.store_hits.load(Relaxed),
+        m.store_misses.load(Relaxed),
+        m.store_appends.load(Relaxed),
+    );
+    obs::event_human(
+        Level::Status,
+        "store_summary",
+        vec![
+            ("hits", Json::Num(h as f64)),
+            ("misses", Json::Num(mi as f64)),
+            ("appends", Json::Num(ap as f64)),
+        ],
+        &format!("cache store: {h} hit(s), {mi} miss(es), {ap} append(s)"),
+    );
 }
 
 /// Remote worker source: the `--workers` flag (comma-separated
@@ -525,6 +598,15 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
         build_engine(rc.threads, worker_source(args), args).with_objectives(objectives);
     let distributed = matches!(engine.backend(), Backend::Distributed { .. });
     let cache = MapperCache::new();
+    // --cache-dir/QMAP_CACHE_DIR: the persistent cross-process mapper
+    // cache, keyed by arch + mapper-config identity. Strictly additive:
+    // a warm run's front is bit-identical to a cold run's.
+    let persistent = cache_dir(args);
+    if let Some(dir) = &persistent {
+        if let Err(e) = attach_search_store(&cache, dir, &arch, &rc.mapper) {
+            return fail(e);
+        }
+    }
     let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
     let strategy = args.str_or("strategy", "proposed");
     let axis0 = objectives.axes()[0].name();
@@ -661,6 +743,9 @@ fn cmd_search(args: &Args, rc: &RunConfig) -> i32 {
             .collect();
         print!("{}", report::csv(&["accuracy", "edp", "genome"], &rows));
     }
+    if persistent.is_some() {
+        store_summary();
+    }
     0
 }
 
@@ -743,6 +828,13 @@ fn cmd_worker(args: &Args) -> i32 {
             ),
             Err(e) => return fail(format!("metrics {maddr}: {e}")),
         }
+    }
+    // --cache-dir/QMAP_CACHE_DIR: persist shard outcomes so worker
+    // restarts (and whole fleets sharing the directory) warm-start. A
+    // bad directory is reported at first use and the worker proceeds
+    // cold — a fleet worker must not die over a cache tier.
+    if let Some(dir) = cache_dir(args) {
+        qmap::engine::remote::set_worker_store_dir(dir);
     }
     // the "listening" line is what scripts (and the CI smoke) wait for
     obs::event_human(
@@ -855,6 +947,10 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
             remote_workers.join(", ")
         );
     }
+    let store_dir = cache_dir(args);
+    if let Some(dir) = &store_dir {
+        println!("  persistent cache store under {dir} (reopened per row: rows after the first warm-start)");
+    }
     let mut reference: Option<Vec<Option<qmap::eval::NetworkEval>>> = None;
     let mut t1 = 0.0f64;
     for &w in &workers {
@@ -863,6 +959,13 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
             engine = engine.with_pipeline_depth(d);
         }
         let cache = MapperCache::new();
+        // a fresh open per row sees the previous row's appends, so the
+        // bit-identity column doubles as the warm == cold assertion
+        if let Some(dir) = &store_dir {
+            if let Err(e) = attach_search_store(&cache, dir, &arch, &cfg) {
+                return fail(e);
+            }
+        }
         let t0 = Instant::now();
         let evals = driver::evaluate_genomes(&engine, &arch, &layers, &genomes, &cache, &cfg);
         let dt = t0.elapsed().as_secs_f64();
@@ -907,6 +1010,9 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
         }
     }
     println!("results bit-identical across all worker counts");
+    if store_dir.is_some() {
+        store_summary();
+    }
     0
 }
 

@@ -19,14 +19,16 @@
 //!   re-paying the full `max_draws` search. The JSON dump records them
 //!   with a `mappable: false` marker.
 
+use super::store::{self, CacheStore};
 use super::{search, workload_hash, MapperConfig, MapperResult};
 use crate::arch::Arch;
+use crate::obs::metrics;
 use crate::quant::LayerQuant;
 use crate::util::json::{parse, Json};
 use crate::workload::ConvLayer;
 use rustc_hash::FxHashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 /// Lock stripes; a power of two so the top key bits index directly.
 pub const NUM_SHARDS: usize = 16;
@@ -106,6 +108,13 @@ pub struct MapperCache {
     /// that never checkpoint pay nothing but one relaxed load.
     journal: AtomicBool,
     pending: Mutex<Vec<Json>>,
+    /// Optional persistent tier (see [`crate::mapper::store`]): probes
+    /// that miss in memory consult it before declaring a true miss
+    /// (read-through, with promotion into the shard maps), and every
+    /// live insert is appended (write-behind). Strictly additive: with
+    /// an identity-matched store attached, a warm run is bit-identical
+    /// to a cold one.
+    backing: OnceLock<Arc<CacheStore>>,
 }
 
 impl Default for MapperCache {
@@ -124,7 +133,22 @@ impl MapperCache {
             misses: AtomicU64::new(0),
             journal: AtomicBool::new(false),
             pending: Mutex::new(Vec::new()),
+            backing: OnceLock::new(),
         }
+    }
+
+    /// Attach a persistent store as the read-through/write-behind tier.
+    /// At most one per cache; later calls are ignored. The caller is
+    /// responsible for identity discipline — open the store through
+    /// [`store::open_search_store`] so a mismatched arch or mapper
+    /// config is refused instead of silently served.
+    pub fn set_backing(&self, store: Arc<CacheStore>) {
+        let _ = self.backing.set(store);
+    }
+
+    /// The attached persistent store, if any.
+    pub fn backing(&self) -> Option<&Arc<CacheStore>> {
+        self.backing.get()
     }
 
     #[inline]
@@ -198,7 +222,42 @@ impl MapperCache {
                 CacheEntry::Unmappable { .. } => {}
             }
         }
-        None
+        self.probe_backing(key, cfg)
+    }
+
+    /// The read-through tier of [`MapperCache::probe_key`]: consult the
+    /// persistent store (when attached) after an in-memory miss. A
+    /// decisive store answer is promoted into the in-memory shard (and
+    /// the journal queue, so checkpoints stay self-contained) and
+    /// counted as a hit. Promotion inserts directly — never through
+    /// `insert_search_key` — so a store-served entry is not appended
+    /// back to the store it came from.
+    fn probe_backing(&self, key: u64, cfg: &MapperConfig) -> Option<Option<CachedEval>> {
+        let store = self.backing.get()?;
+        let m = metrics::counters();
+        let decoded = store.lookup(key).and_then(|(tag, p)| Self::entry_from_record(tag, p));
+        let Some(entry) = decoded else {
+            m.store_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        let out = match entry {
+            CacheEntry::Mapped(e) => Some(e),
+            CacheEntry::Unmappable { max_draws } => {
+                if max_draws < cfg.max_draws {
+                    // stale negative: not decisive at this budget
+                    m.store_misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                None
+            }
+        };
+        self.shard(key).write().unwrap().insert(key, entry);
+        if self.journal.load(Ordering::Relaxed) {
+            self.pending.lock().unwrap().push(Self::entry_json(key, &entry));
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        m.store_hits.fetch_add(1, Ordering::Relaxed);
+        Some(out)
     }
 
     /// Scheduling cost estimate for a workload under `cfg` — the
@@ -298,7 +357,59 @@ impl MapperCache {
         if self.journal.load(Ordering::Relaxed) {
             self.pending.lock().unwrap().push(Self::entry_json(key, &entry));
         }
+        if let Some(store) = self.backing.get() {
+            let (tag, payload) = Self::entry_record(&entry);
+            store.append(key, tag, &payload);
+        }
         out
+    }
+
+    /// Store-record form of one entry (see [`crate::mapper::store`] for
+    /// the container format): tag 1 = mapped, tag 0 = negative; every
+    /// f64 travels as its IEEE-754 bits, so the round trip is hex-exact.
+    fn entry_record(v: &CacheEntry) -> (u64, [u64; store::SEARCH_SLOTS]) {
+        match v {
+            CacheEntry::Mapped(e) => (
+                1,
+                [
+                    e.energy_pj.to_bits(),
+                    e.memory_energy_pj.to_bits(),
+                    e.cycles.to_bits(),
+                    e.edp.to_bits(),
+                    e.valid_mappings,
+                    e.energy_breakdown_pj[0].to_bits(),
+                    e.energy_breakdown_pj[1].to_bits(),
+                    e.energy_breakdown_pj[2].to_bits(),
+                    e.mac_energy_pj.to_bits(),
+                ],
+            ),
+            CacheEntry::Unmappable { max_draws } => (0, [*max_draws, 0, 0, 0, 0, 0, 0, 0, 0]),
+        }
+    }
+
+    /// Decode a store record. Total: an unknown tag or wrong payload
+    /// width is `None` (treated as a store miss), never a panic.
+    fn entry_from_record(tag: u64, p: &[u64]) -> Option<CacheEntry> {
+        if p.len() != store::SEARCH_SLOTS {
+            return None;
+        }
+        Some(match tag {
+            1 => CacheEntry::Mapped(CachedEval {
+                energy_pj: f64::from_bits(p[0]),
+                memory_energy_pj: f64::from_bits(p[1]),
+                cycles: f64::from_bits(p[2]),
+                edp: f64::from_bits(p[3]),
+                valid_mappings: p[4],
+                energy_breakdown_pj: [
+                    f64::from_bits(p[5]),
+                    f64::from_bits(p[6]),
+                    f64::from_bits(p[7]),
+                ],
+                mac_energy_pj: f64::from_bits(p[8]),
+            }),
+            0 => CacheEntry::Unmappable { max_draws: p[0] },
+            _ => return None,
+        })
     }
 
     /// Start queueing every future `insert_search` for the checkpoint
@@ -440,11 +551,30 @@ impl MapperCache {
         std::fs::write(path, self.to_json())
     }
 
-    /// Load from a file if it exists; returns entries loaded.
+    /// Load from a file if it exists; returns entries loaded. A missing
+    /// file is a silent cold start, but an unreadable or corrupt one is
+    /// surfaced as a Status-level `cache_load_failed` event — operators
+    /// must be able to tell "cold start" from "cache file rejected".
     pub fn load_file(&self, path: &str) -> usize {
+        let fail = |err: &str| {
+            crate::obs::event_human(
+                crate::obs::Level::Status,
+                "cache_load_failed",
+                vec![
+                    ("path", Json::Str(path.into())),
+                    ("error", Json::Str(err.into())),
+                ],
+                &format!("qmap: cache file {path} rejected ({err}); starting cold"),
+            );
+            0
+        };
         match std::fs::read_to_string(path) {
-            Ok(src) => self.load_json(&src).unwrap_or(0),
-            Err(_) => 0,
+            Ok(src) => match self.load_json(&src) {
+                Ok(n) => n,
+                Err(e) => fail(&e),
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => 0,
+            Err(e) => fail(&e.to_string()),
         }
     }
 }
@@ -707,6 +837,105 @@ mod tests {
         assert_eq!(cache.probe_key(wk, &c), Some(Some(r)));
         assert_eq!(cache.effective_draws_key(wk, &c), 0);
         assert_eq!(cache.misses(), 1);
+    }
+
+    fn tmp_store_dir(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("qmap_cache_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn backing_store_promotes_and_appends_bit_identically() {
+        let dir = tmp_store_dir("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dirs = dir.to_str().unwrap();
+        let a = toy();
+        let c = cfg();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(8);
+
+        // cold run with a store attached: the live insert is appended
+        let cache = MapperCache::new();
+        cache.set_backing(crate::mapper::store::open_search_store(dirs, &a, &c).unwrap());
+        let r1 = cache.evaluate(&a, &l, &q, &c).unwrap();
+        assert_eq!(cache.backing().unwrap().appends(), 1);
+        assert_eq!(cache.misses(), 1);
+
+        // a fresh "process" (fresh cache, reopened store) is served the
+        // bit-identical entry without re-searching
+        let cache2 = MapperCache::new();
+        cache2.set_backing(crate::mapper::store::open_search_store(dirs, &a, &c).unwrap());
+        assert_eq!(cache2.backing().unwrap().len(), 1);
+        let hit = cache2.probe(&a, &l, &q, &c).expect("store must serve the probe");
+        assert_eq!(hit, Some(r1), "warm entry must be hex-exact");
+        assert_eq!((cache2.hits(), cache2.misses()), (1, 0));
+        // promoted into memory, and promotion did not re-append
+        assert_eq!(cache2.len(), 1);
+        assert_eq!(cache2.probe(&a, &l, &q, &c), Some(Some(r1)));
+        assert_eq!(cache2.backing().unwrap().appends(), 0);
+        // an unknown workload is still a miss
+        assert!(cache2.probe(&a, &ConvLayer::conv("t", 4, 16, 3, 8, 1), &q, &c).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn backing_store_negative_entries_respect_budgets() {
+        let dir = tmp_store_dir("negative");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dirs = dir.to_str().unwrap();
+        let a = unmappable_arch();
+        let tiny = MapperConfig {
+            valid_target: u64::MAX,
+            max_draws: 500,
+            seed: 5,
+            shards: 1,
+        };
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(8);
+        let cache = MapperCache::new();
+        cache.set_backing(crate::mapper::store::open_search_store(dirs, &a, &tiny).unwrap());
+        assert!(cache.evaluate(&a, &l, &q, &tiny).is_none());
+        assert_eq!(cache.backing().unwrap().appends(), 1);
+
+        let cache2 = MapperCache::new();
+        cache2.set_backing(crate::mapper::store::open_search_store(dirs, &a, &tiny).unwrap());
+        // at the recorded budget the stored negative is decisive
+        assert_eq!(cache2.probe(&a, &l, &q, &tiny), Some(None));
+        assert_eq!(cache2.hits(), 1);
+        // at a larger budget it is stale: a true miss, re-search required
+        let bigger = MapperConfig { max_draws: 5_000, ..tiny };
+        let cache3 = MapperCache::new();
+        cache3.set_backing(crate::mapper::store::open_search_store(dirs, &a, &tiny).unwrap());
+        assert!(cache3.probe(&a, &l, &q, &bigger).is_none());
+        assert_eq!(cache3.hits(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_captures_store_promotions() {
+        // checkpoints must stay self-contained: an entry served from
+        // the store lands in the journal queue exactly like a live
+        // insert would
+        let dir = tmp_store_dir("journal");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dirs = dir.to_str().unwrap();
+        let a = toy();
+        let c = cfg();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(8);
+        let cold = MapperCache::new();
+        cold.set_backing(crate::mapper::store::open_search_store(dirs, &a, &c).unwrap());
+        cold.evaluate(&a, &l, &q, &c).unwrap();
+
+        let warm = MapperCache::new();
+        warm.enable_journal();
+        warm.set_backing(crate::mapper::store::open_search_store(dirs, &a, &c).unwrap());
+        warm.probe(&a, &l, &q, &c).expect("warm probe");
+        let queued = warm.drain_journal();
+        assert_eq!(queued.len(), 1);
+        let replay = MapperCache::new();
+        replay.load_entry_json(&queued[0]).unwrap();
+        assert_eq!(replay.probe(&a, &l, &q, &c), warm.probe(&a, &l, &q, &c));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

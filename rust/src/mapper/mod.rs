@@ -9,6 +9,7 @@
 
 pub mod cache;
 pub mod gamma;
+pub mod store;
 
 pub use cache::WorkloadKey;
 

@@ -1,0 +1,684 @@
+//! Persistent, cross-process mapper-cache store — the binary substrate
+//! behind `qmap search --cache-dir` / `QMAP_CACHE_DIR`.
+//!
+//! The checkpoint journal (PR 4) already persists cache entries, but
+//! replaying it is O(parse JSON journal) per process and the journal is
+//! owned by one search. The store is the shared tier: an append-only
+//! binary file any number of processes read and append concurrently, so
+//! a cold process reaches a warm cache in O(read + index scan) and one
+//! tenant's search warms every tenant's (ROADMAP's `qmap serve` vision).
+//!
+//! ## File format (all integers little-endian `u64`)
+//!
+//! ```text
+//! header  : magic "QMAPSTR1" | identity | slots | fnv1a(prev 24 bytes)
+//! record  : key | tag | payload[slots] | fnv1a(prev (2+slots)*8 bytes)
+//! ```
+//!
+//! * **identity** pins what the records mean: for the search store it is
+//!   [`search_identity`] (rendered arch + full mapper config), for the
+//!   worker store the FNV of the driver's canonical arch text. Opening
+//!   with a different identity is a *loud refusal* ([`StoreError`]),
+//!   never a silent reuse — mixing identities would serve one config's
+//!   results to another and break warm == cold bit-identity.
+//! * **slots** is the fixed payload width of every record in this file.
+//!   Payloads are raw `u64`s; `f64` fields travel as `to_bits()`, so a
+//!   round trip is hex-exact and a warm start is bit-identical to cold.
+//! * Every record carries its own FNV-1a checksum. The reader walks the
+//!   file with per-record resynchronization: a record that fails its
+//!   checksum is skipped and the walk slides forward one word at a time
+//!   until checksums line up again — so torn tails (crash mid-append),
+//!   bit flips, and truncation cost only the damaged records, never a
+//!   panic and never the rest of the file.
+//! * Appends go through one `O_APPEND` handle, one `write_all` per
+//!   record — atomic on POSIX local filesystems, so concurrent
+//!   processes interleave whole records and lose nothing. The file is
+//!   never truncated or rewritten in place.
+//!
+//! The in-memory index (open addressing, built once at open) is
+//! immutable afterwards: readers are lock-free, and entries appended by
+//! *this* process are served by the in-memory `MapperCache` shards, so
+//! the index only needs to see other processes' history — which a
+//! reopen picks up.
+
+use super::{effective_shards, MapperConfig, ShardOutcome};
+use crate::arch::parser::render_arch;
+use crate::arch::Arch;
+use crate::energy::Estimate;
+use crate::mapping::{LevelMapping, Mapping};
+use crate::obs::metrics;
+use crate::util::Fnv1a;
+use crate::workload::Dim;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// File magic; the trailing `1` is the format version.
+pub const MAGIC: [u8; 8] = *b"QMAPSTR1";
+/// Header bytes: magic, identity, slots, checksum.
+pub const HEADER_LEN: usize = 32;
+
+/// Why a store could not be opened. Every variant renders an actionable
+/// message — the CLI surfaces these as refusals, never silently starts
+/// over a mismatched or unreadable file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreError {
+    Io(String),
+    NotAStore { path: String },
+    IdentityMismatch { path: String, want: u64, found: u64 },
+    SlotsMismatch { path: String, want: u64, found: u64 },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "cache store I/O error: {e}"),
+            StoreError::NotAStore { path } => {
+                write!(f, "{path}: not a qmap cache store (bad magic or corrupt header)")
+            }
+            StoreError::IdentityMismatch { path, want, found } => write!(
+                f,
+                "{path}: cache store identity {found:016x} does not match this \
+                 run's identity {want:016x} (different arch or mapper config); \
+                 refusing to reuse — point --cache-dir elsewhere or remove the file"
+            ),
+            StoreError::SlotsMismatch { path, want, found } => write!(
+                f,
+                "{path}: cache store record width {found} != expected {want}; \
+                 refusing to reuse a mismatched layout"
+            ),
+        }
+    }
+}
+
+/// One record slot-decoded from the file: `(tag, payload)`.
+type Record<'a> = (u64, &'a [u64]);
+
+/// Immutable open-addressing index over the records read at open.
+/// Capacity is a power of two ≥ 2·n; linear probing; last record wins
+/// (a re-append of a key supersedes earlier records, so upgrade paths —
+/// e.g. a negative entry later found mappable — replay correctly).
+struct IndexTable {
+    mask: usize,
+    /// Entry index + 1 per bucket; 0 = empty.
+    buckets: Vec<u32>,
+    keys: Vec<u64>,
+    tags: Vec<u64>,
+    /// Entry `i`'s payload at `i*slots..(i+1)*slots` — one slab, no
+    /// per-record allocation.
+    slab: Vec<u64>,
+}
+
+impl IndexTable {
+    fn build(records: &[(u64, u64, Vec<u64>)], slots: usize) -> IndexTable {
+        let cap = (records.len() * 2).next_power_of_two().max(16);
+        let mut t = IndexTable {
+            mask: cap - 1,
+            buckets: vec![0u32; cap],
+            keys: Vec::with_capacity(records.len()),
+            tags: Vec::with_capacity(records.len()),
+            slab: Vec::with_capacity(records.len() * slots),
+        };
+        for (key, tag, payload) in records {
+            t.insert(*key, *tag, payload, slots);
+        }
+        t
+    }
+
+    fn insert(&mut self, key: u64, tag: u64, payload: &[u64], slots: usize) {
+        let mut b = (key.wrapping_mul(0x9E3779B97F4A7C15) as usize) & self.mask;
+        loop {
+            match self.buckets[b] {
+                0 => {
+                    let i = self.keys.len();
+                    self.keys.push(key);
+                    self.tags.push(tag);
+                    self.slab.extend_from_slice(payload);
+                    self.buckets[b] = (i + 1) as u32;
+                    return;
+                }
+                e => {
+                    let i = (e - 1) as usize;
+                    if self.keys[i] == key {
+                        // last record wins: overwrite in place
+                        self.tags[i] = tag;
+                        self.slab[i * slots..(i + 1) * slots].copy_from_slice(payload);
+                        return;
+                    }
+                }
+            }
+            b = (b + 1) & self.mask;
+        }
+    }
+
+    fn lookup(&self, key: u64, slots: usize) -> Option<Record<'_>> {
+        let mut b = (key.wrapping_mul(0x9E3779B97F4A7C15) as usize) & self.mask;
+        loop {
+            match self.buckets[b] {
+                0 => return None,
+                e => {
+                    let i = (e - 1) as usize;
+                    if self.keys[i] == key {
+                        return Some((self.tags[i], &self.slab[i * slots..(i + 1) * slots]));
+                    }
+                }
+            }
+            b = (b + 1) & self.mask;
+        }
+    }
+}
+
+/// An open store: the immutable index over the file's history plus one
+/// serialized appender. Cheap to share (`Arc`); reads never lock.
+pub struct CacheStore {
+    path: PathBuf,
+    identity: u64,
+    slots: usize,
+    index: IndexTable,
+    skipped: usize,
+    open_us: u64,
+    appender: Mutex<File>,
+    appends: AtomicU64,
+}
+
+fn header_bytes(identity: u64, slots: u64) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(&MAGIC);
+    h[8..16].copy_from_slice(&identity.to_le_bytes());
+    h[16..24].copy_from_slice(&slots.to_le_bytes());
+    let mut f = Fnv1a::new();
+    f.write(&h[..24]);
+    h[24..].copy_from_slice(&f.finish().to_le_bytes());
+    h
+}
+
+fn read_u64(b: &[u8], i: usize) -> u64 {
+    u64::from_le_bytes(b[i * 8..i * 8 + 8].try_into().unwrap())
+}
+
+impl CacheStore {
+    /// Open (creating if missing) the store at `path` for the given
+    /// identity and payload width. Validates the header and builds the
+    /// index; damaged records are skipped (see module docs), a wrong
+    /// identity or layout is a refusal, never a silent restart.
+    pub fn open(path: &Path, identity: u64, slots: usize) -> Result<CacheStore, StoreError> {
+        let t0 = std::time::Instant::now();
+        Self::create_if_missing(path, identity, slots)?;
+        let bytes = std::fs::read(path).map_err(|e| StoreError::Io(format!("{}: {e}", path.display())))?;
+        let ps = path.display().to_string();
+        if bytes.len() < HEADER_LEN || bytes[..8] != MAGIC {
+            return Err(StoreError::NotAStore { path: ps });
+        }
+        let mut f = Fnv1a::new();
+        f.write(&bytes[..24]);
+        if f.finish() != read_u64(&bytes, 3) {
+            return Err(StoreError::NotAStore { path: ps });
+        }
+        let found_id = read_u64(&bytes, 1);
+        if found_id != identity {
+            return Err(StoreError::IdentityMismatch { path: ps, want: identity, found: found_id });
+        }
+        let found_slots = read_u64(&bytes, 2);
+        if found_slots != slots as u64 {
+            return Err(StoreError::SlotsMismatch { path: ps, want: slots as u64, found: found_slots });
+        }
+
+        let stride = (3 + slots) * 8;
+        let mut records: Vec<(u64, u64, Vec<u64>)> = Vec::new();
+        let mut skipped = 0usize;
+        let mut in_bad = false;
+        let mut off = HEADER_LEN;
+        // Per-record resync: slide one word forward through damaged
+        // regions; an intact record anywhere past the damage is found
+        // again (FNV collisions at a wrong offset are ~2^-64).
+        while off + stride <= bytes.len() {
+            let rec = &bytes[off..off + stride];
+            let mut f = Fnv1a::new();
+            f.write(&rec[..stride - 8]);
+            if f.finish() == read_u64(rec, 2 + slots) {
+                let key = read_u64(rec, 0);
+                let tag = read_u64(rec, 1);
+                let payload: Vec<u64> = (0..slots).map(|i| read_u64(rec, 2 + i)).collect();
+                records.push((key, tag, payload));
+                in_bad = false;
+                off += stride;
+            } else {
+                if !in_bad {
+                    skipped += 1;
+                    in_bad = true;
+                }
+                off += 8;
+            }
+        }
+        let index = IndexTable::build(&records, slots);
+
+        let appender = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| StoreError::Io(format!("{}: {e}", path.display())))?;
+        let open_us = t0.elapsed().as_micros() as u64;
+        metrics::counters().store_open_us.fetch_add(open_us, Ordering::Relaxed);
+        Ok(CacheStore {
+            path: path.to_path_buf(),
+            identity,
+            slots,
+            index,
+            skipped,
+            open_us,
+            appender: Mutex::new(appender),
+            appends: AtomicU64::new(0),
+        })
+    }
+
+    /// Create the file with its header if it does not exist, atomically
+    /// against concurrent creators: the header is written to a private
+    /// temp file which is then `hard_link`ed into place — the link
+    /// either publishes a complete header or fails because another
+    /// process already did, so no reader ever sees a half-written one.
+    fn create_if_missing(path: &Path, identity: u64, slots: usize) -> Result<(), StoreError> {
+        if path.exists() {
+            return Ok(());
+        }
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let write = || -> std::io::Result<()> {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&header_bytes(identity, slots as u64))?;
+            f.sync_all()
+        };
+        write().map_err(|e| StoreError::Io(format!("{}: {e}", tmp.display())))?;
+        match std::fs::hard_link(&tmp, path) {
+            Ok(()) => {}
+            // lost the race: another process published the header first
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {}
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(StoreError::Io(format!("{}: {e}", path.display())));
+            }
+        }
+        let _ = std::fs::remove_file(&tmp);
+        Ok(())
+    }
+
+    /// Look up a key in the history read at open. Lock-free. Returns
+    /// `(tag, payload)`; decoding is the caller's (the store is a dumb
+    /// word array — `mapper::cache` and the worker own their codecs).
+    pub fn lookup(&self, key: u64) -> Option<Record<'_>> {
+        self.index.lookup(key, self.slots)
+    }
+
+    /// Append one record: a single `O_APPEND` `write_all`, so records
+    /// from concurrent processes interleave whole, never torn (short of
+    /// a crash — which the reader's checksums absorb). Best-effort
+    /// write-behind: an I/O error drops the record, never the search.
+    pub fn append(&self, key: u64, tag: u64, payload: &[u64]) {
+        debug_assert_eq!(payload.len(), self.slots);
+        let mut buf = Vec::with_capacity((3 + self.slots) * 8);
+        buf.extend_from_slice(&key.to_le_bytes());
+        buf.extend_from_slice(&tag.to_le_bytes());
+        for w in payload {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        let mut f = Fnv1a::new();
+        f.write(&buf);
+        buf.extend_from_slice(&f.finish().to_le_bytes());
+        let mut file = self.appender.lock().unwrap();
+        if file.write_all(&buf).is_ok() {
+            self.appends.fetch_add(1, Ordering::Relaxed);
+            metrics::counters().store_appends.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Entries visible in the index (the file's history at open).
+    pub fn len(&self) -> usize {
+        self.index.keys.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Damaged regions skipped while reading (0 on a healthy file).
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+    /// Wall-clock µs spent opening + indexing.
+    pub fn open_us(&self) -> u64 {
+        self.open_us
+    }
+    /// Records appended by this process since open.
+    pub fn appends(&self) -> u64 {
+        self.appends.load(Ordering::Relaxed)
+    }
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+    pub fn identity(&self) -> u64 {
+        self.identity
+    }
+    /// Every key in the index (tests/forensics).
+    pub fn keys(&self) -> &[u64] {
+        &self.index.keys
+    }
+}
+
+/// Identity of a search-side store: rendered arch text plus the full
+/// mapper config (seed, budgets, *effective* shard count). Cache values
+/// are deterministic functions of exactly these, so pinning them is
+/// what makes a warm start bit-identical to a cold one; objectives are
+/// deliberately excluded — mapper results are objective-independent, so
+/// 2- and 3-objective searches share a store.
+pub fn search_identity(arch: &Arch, cfg: &MapperConfig) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(render_arch(arch).as_bytes());
+    h.write_u64(cfg.seed);
+    h.write_u64(cfg.valid_target);
+    h.write_u64(cfg.max_draws);
+    h.write_u64(effective_shards(cfg) as u64);
+    h.finish()
+}
+
+/// Payload width of a search-store record (mirrors `CachedEval`).
+pub const SEARCH_SLOTS: usize = 9;
+
+/// Open (creating dir + file as needed) the search store for this
+/// arch + mapper config under `dir`. Files are namespaced by identity
+/// (`mapper_<identity>.qstore`), so one directory serves any number of
+/// configs; the header check still refuses a tampered or foreign file.
+pub fn open_search_store(
+    dir: &str,
+    arch: &Arch,
+    cfg: &MapperConfig,
+) -> Result<Arc<CacheStore>, StoreError> {
+    let identity = search_identity(arch, cfg);
+    std::fs::create_dir_all(dir).map_err(|e| StoreError::Io(format!("{dir}: {e}")))?;
+    let path = Path::new(dir).join(format!("mapper_{identity:016x}.qstore"));
+    Ok(Arc::new(CacheStore::open(&path, identity, SEARCH_SLOTS)?))
+}
+
+/// Payload width of a worker-store record for an arch with `levels`
+/// memory levels: the fixed `ShardOutcome` scalars plus the
+/// per-level estimate vectors and mapping rows.
+pub fn outcome_slots(levels: usize) -> usize {
+    // valid, draws, has_best, edp, energy_pj, mac_energy_pj, cycles,
+    // pes_used + per level: level_energy, level_words, temporal[7],
+    // spatial[7], perm[7]
+    8 + levels * (2 + 21)
+}
+
+/// Encode a `ShardOutcome` into a fixed-width word payload, hex-exact
+/// (`f64::to_bits`). `levels` must match the arch the outcome came
+/// from; outcomes with no winner zero-fill the estimate/mapping region.
+pub fn encode_outcome(out: &ShardOutcome, levels: usize) -> Vec<u64> {
+    let mut w = Vec::with_capacity(outcome_slots(levels));
+    w.push(out.valid);
+    w.push(out.draws);
+    match &out.best {
+        None => {
+            w.push(0);
+            w.resize(outcome_slots(levels), 0);
+        }
+        Some((edp, est, m)) => {
+            w.push(1);
+            w.push(edp.to_bits());
+            w.push(est.energy_pj.to_bits());
+            w.push(est.mac_energy_pj.to_bits());
+            w.push(est.cycles.to_bits());
+            w.push(est.pes_used);
+            for i in 0..levels {
+                w.push(est.level_energy_pj.get(i).copied().unwrap_or(0.0).to_bits());
+                w.push(est.level_words.get(i).copied().unwrap_or(0.0).to_bits());
+                let lm = m.levels.get(i);
+                for j in 0..7 {
+                    w.push(lm.map_or(0, |l| l.temporal[j]));
+                }
+                for j in 0..7 {
+                    w.push(lm.map_or(0, |l| l.spatial[j]));
+                }
+                for j in 0..7 {
+                    w.push(lm.map_or(0, |l| l.perm[j].index() as u64));
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Decode a worker-store payload back into a `ShardOutcome`. Total:
+/// anything malformed (wrong width, out-of-range perm index) is `None`
+/// — the store then counts as a miss and the shard is re-searched.
+pub fn decode_outcome(payload: &[u64], levels: usize) -> Option<ShardOutcome> {
+    if payload.len() != outcome_slots(levels) {
+        return None;
+    }
+    let valid = payload[0];
+    let draws = payload[1];
+    if payload[2] == 0 {
+        return Some(ShardOutcome { best: None, valid, draws });
+    }
+    let edp = f64::from_bits(payload[3]);
+    let mut est = Estimate {
+        energy_pj: f64::from_bits(payload[4]),
+        level_energy_pj: Vec::with_capacity(levels),
+        mac_energy_pj: f64::from_bits(payload[5]),
+        cycles: f64::from_bits(payload[6]),
+        level_words: Vec::with_capacity(levels),
+        pes_used: payload[7],
+    };
+    let mut mapping = Mapping { levels: Vec::with_capacity(levels) };
+    let mut i = 8;
+    for _ in 0..levels {
+        est.level_energy_pj.push(f64::from_bits(payload[i]));
+        est.level_words.push(f64::from_bits(payload[i + 1]));
+        i += 2;
+        let mut lm = LevelMapping {
+            temporal: [0; 7],
+            spatial: [0; 7],
+            perm: [Dim::N; 7],
+        };
+        lm.temporal.copy_from_slice(&payload[i..i + 7]);
+        lm.spatial.copy_from_slice(&payload[i + 7..i + 14]);
+        for j in 0..7 {
+            let d = payload[i + 14 + j];
+            if d >= 7 {
+                return None;
+            }
+            lm.perm[j] = Dim::from_index(d as usize);
+        }
+        i += 21;
+        mapping.levels.push(lm);
+    }
+    Some(ShardOutcome { best: Some((edp, est, mapping)), valid, draws })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::toy;
+    use crate::mapping::mapspace::MapSpace;
+    use crate::mapping::LayerContext;
+    use crate::quant::LayerQuant;
+    use crate::workload::ConvLayer;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("qmap_store_{}_{name}.qstore", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_and_reopen() {
+        let p = tmp("roundtrip");
+        let _ = std::fs::remove_file(&p);
+        let s = CacheStore::open(&p, 0xABCD, 3).unwrap();
+        assert_eq!(s.len(), 0);
+        s.append(1, 1, &[10, 11, 12]);
+        s.append(2, 0, &[20, 0, 0]);
+        // in-process appends are not visible until reopen (by design:
+        // the in-memory cache fronts them)
+        assert!(s.lookup(1).is_none());
+        assert_eq!(s.appends(), 2);
+        drop(s);
+        let s = CacheStore::open(&p, 0xABCD, 3).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.skipped(), 0);
+        assert_eq!(s.lookup(1), Some((1, &[10u64, 11, 12][..])));
+        assert_eq!(s.lookup(2), Some((0, &[20u64, 0, 0][..])));
+        assert!(s.lookup(3).is_none());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn last_record_wins_on_reappend() {
+        let p = tmp("dedup");
+        let _ = std::fs::remove_file(&p);
+        let s = CacheStore::open(&p, 7, 2).unwrap();
+        s.append(42, 0, &[1, 1]);
+        s.append(42, 1, &[2, 2]);
+        drop(s);
+        let s = CacheStore::open(&p, 7, 2).unwrap();
+        assert_eq!(s.len(), 1, "re-appended key must dedup");
+        assert_eq!(s.lookup(42), Some((1, &[2u64, 2][..])));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn identity_and_layout_mismatches_refuse() {
+        let p = tmp("identity");
+        let _ = std::fs::remove_file(&p);
+        CacheStore::open(&p, 0x1111, 3).unwrap();
+        let e = CacheStore::open(&p, 0x2222, 3).unwrap_err();
+        assert!(matches!(e, StoreError::IdentityMismatch { want: 0x2222, found: 0x1111, .. }));
+        assert!(e.to_string().contains("refusing"), "{e}");
+        let e = CacheStore::open(&p, 0x1111, 4).unwrap_err();
+        assert!(matches!(e, StoreError::SlotsMismatch { want: 4, found: 3, .. }));
+        let _ = std::fs::remove_file(&p);
+        // not a store at all
+        std::fs::write(&p, b"definitely not a store file, but long enough to read").unwrap();
+        let e = CacheStore::open(&p, 0x1111, 3).unwrap_err();
+        assert!(matches!(e, StoreError::NotAStore { .. }));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn torn_tail_and_bit_flips_lose_only_damaged_records() {
+        let p = tmp("torn");
+        let _ = std::fs::remove_file(&p);
+        let s = CacheStore::open(&p, 5, 2).unwrap();
+        for k in 0..10u64 {
+            s.append(k, 1, &[k * 10, k * 100]);
+        }
+        drop(s);
+        let healthy = std::fs::read(&p).unwrap();
+        let stride = (3 + 2) * 8;
+
+        // torn tail: a partial final record is ignored, the rest kept
+        std::fs::write(&p, &healthy[..healthy.len() - stride / 2]).unwrap();
+        let s = CacheStore::open(&p, 5, 2).unwrap();
+        assert_eq!(s.len(), 9);
+        drop(s);
+
+        // bit flip in the middle: only that record is lost, and the
+        // resync walk recovers every record after it
+        let mut flipped = healthy.clone();
+        let mid = HEADER_LEN + 4 * stride + 9;
+        flipped[mid] ^= 0x40;
+        std::fs::write(&p, &flipped).unwrap();
+        let s = CacheStore::open(&p, 5, 2).unwrap();
+        assert_eq!(s.len(), 9);
+        assert_eq!(s.skipped(), 1);
+        assert!(s.lookup(4).is_none(), "damaged record must not be served");
+        assert!(s.lookup(9).is_some(), "records after damage must survive");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn concurrent_creation_publishes_one_header() {
+        let p = tmp("create_race");
+        let _ = std::fs::remove_file(&p);
+        let handles: Vec<_> = (0..4u64)
+            .map(|i| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    let s = CacheStore::open(&p, 99, 1).unwrap();
+                    s.append(i, 0, &[i]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = CacheStore::open(&p, 99, 1).unwrap();
+        assert_eq!(s.len(), 4, "all four appends visible, zero skipped: {}", s.skipped());
+        assert_eq!(s.skipped(), 0);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn search_identity_pins_arch_and_config() {
+        let a = toy();
+        let cfg = MapperConfig { valid_target: 100, max_draws: 50_000, seed: 1, shards: 1 };
+        let id = search_identity(&a, &cfg);
+        assert_eq!(id, search_identity(&a, &cfg), "deterministic");
+        assert_ne!(id, search_identity(&a, &MapperConfig { seed: 2, ..cfg }));
+        assert_ne!(id, search_identity(&a, &MapperConfig { max_draws: 99, ..cfg }));
+        assert_ne!(id, search_identity(&a, &MapperConfig { shards: 2, ..cfg }));
+        let mut b = toy();
+        b.levels[0].capacity = crate::arch::Capacity::PerTensor([0, 64, 64]);
+        assert_ne!(id, search_identity(&b, &cfg));
+    }
+
+    #[test]
+    fn outcome_codec_is_bit_exact() {
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(4).canonical(a.word_bits, a.bit_packing);
+        let space = MapSpace::of(&a);
+        let lctx = LayerContext::new(&a, &l, &q);
+        let levels = a.levels.len();
+        let spec = super::super::ShardSpec { seed: 7, valid_target: 50, max_draws: 50_000 };
+        let out = super::super::run_shard(&space, &lctx, &spec);
+        assert!(out.best_edp().is_some());
+        let w = encode_outcome(&out, levels);
+        assert_eq!(w.len(), outcome_slots(levels));
+        let back = decode_outcome(&w, levels).unwrap();
+        assert_eq!(back, out, "decode(encode(x)) must be bit-identical");
+        // no-winner outcome
+        let empty = super::super::run_shard(
+            &space,
+            &lctx,
+            &super::super::ShardSpec { seed: 7, valid_target: u64::MAX, max_draws: 0 },
+        );
+        let w = encode_outcome(&empty, levels);
+        assert_eq!(decode_outcome(&w, levels).unwrap(), empty);
+        // malformed payloads decode to None, never panic
+        assert!(decode_outcome(&w[..w.len() - 1], levels).is_none());
+        let mut bad_perm = encode_outcome(&out, levels);
+        bad_perm[8 + 2 + 14] = 7; // first level's first perm slot: out of range
+        assert!(decode_outcome(&bad_perm, levels).is_none());
+    }
+
+    #[test]
+    fn store_roundtrips_outcome_payloads() {
+        let a = toy();
+        let l = ConvLayer::conv("t", 4, 8, 3, 8, 1);
+        let q = LayerQuant::uniform(8).canonical(a.word_bits, a.bit_packing);
+        let space = MapSpace::of(&a);
+        let lctx = LayerContext::new(&a, &l, &q);
+        let levels = a.levels.len();
+        let spec = super::super::ShardSpec { seed: 3, valid_target: 30, max_draws: 30_000 };
+        let out = super::super::run_shard(&space, &lctx, &spec);
+        let p = tmp("outcome");
+        let _ = std::fs::remove_file(&p);
+        let s = CacheStore::open(&p, 1, outcome_slots(levels)).unwrap();
+        s.append(0xFEED, 1, &encode_outcome(&out, levels));
+        drop(s);
+        let s = CacheStore::open(&p, 1, outcome_slots(levels)).unwrap();
+        let (tag, payload) = s.lookup(0xFEED).unwrap();
+        assert_eq!(tag, 1);
+        assert_eq!(decode_outcome(payload, levels).unwrap(), out);
+        let _ = std::fs::remove_file(&p);
+    }
+}

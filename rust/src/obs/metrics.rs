@@ -38,6 +38,11 @@ pub struct Counters {
     pub proto_errors: AtomicU64,
     pub lost_workers: AtomicU64,
     pub worker_cache_hits: AtomicU64,
+    // persistent cache store (search- and worker-side)
+    pub store_hits: AtomicU64,
+    pub store_misses: AtomicU64,
+    pub store_appends: AtomicU64,
+    pub store_open_us: AtomicU64,
     // checkpoint journal
     pub ckpt_appends: AtomicU64,
     pub ckpt_append_entries: AtomicU64,
@@ -76,6 +81,10 @@ impl Counters {
             ("proto_errors", g(&self.proto_errors)),
             ("lost_workers", g(&self.lost_workers)),
             ("worker_cache_hits", g(&self.worker_cache_hits)),
+            ("store_hits", g(&self.store_hits)),
+            ("store_misses", g(&self.store_misses)),
+            ("store_appends", g(&self.store_appends)),
+            ("store_open_us", g(&self.store_open_us)),
             ("ckpt_appends", g(&self.ckpt_appends)),
             ("ckpt_append_entries", g(&self.ckpt_append_entries)),
             ("ckpt_fsync_us", g(&self.ckpt_fsync_us)),

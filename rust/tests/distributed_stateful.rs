@@ -926,3 +926,110 @@ fn random_window_walks_conform_beyond_the_exhaustive_frontier() {
         },
     );
 }
+
+// ------------------------------------ worker restart, persisted cache
+
+/// Spawn a real `qmap worker` OS process with `--cache-dir` and a
+/// metrics endpoint, both on ephemeral ports, and parse the announced
+/// addresses from its stderr. A drain thread keeps reading afterwards
+/// so the worker never blocks on a full pipe.
+fn spawn_worker_process(cache_dir: &std::path::Path) -> (std::process::Child, String, String) {
+    use std::io::BufRead as _;
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_qmap"))
+        .args(["worker", "--listen", "127.0.0.1:0", "--metrics", "127.0.0.1:0"])
+        .arg("--cache-dir")
+        .arg(cache_dir)
+        .env_remove("QMAP_CACHE_DIR")
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn qmap worker");
+    let mut reader = std::io::BufReader::new(child.stderr.take().expect("piped stderr"));
+    let (mut listen, mut metrics) = (None, None);
+    let mut line = String::new();
+    while listen.is_none() || metrics.is_none() {
+        line.clear();
+        if reader.read_line(&mut line).expect("worker stderr") == 0 {
+            panic!("worker exited before announcing its addresses");
+        }
+        if let Some(rest) = line.trim().strip_prefix("qmap worker metrics on http://") {
+            metrics = Some(rest.trim_end_matches("/metrics").to_string());
+        } else if let Some(rest) = line.trim().strip_prefix("qmap worker listening on ") {
+            listen = Some(rest.split_whitespace().next().expect("addr").to_string());
+        }
+    }
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    (child, listen.expect("listen addr"), metrics.expect("metrics addr"))
+}
+
+/// One Prometheus counter from a worker's metrics endpoint.
+fn scrape_counter(addr: &str, name: &str) -> u64 {
+    use std::io::{Read as _, Write as _};
+    let mut s = std::net::TcpStream::connect(addr).expect("connect metrics");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut body = String::new();
+    s.read_to_string(&mut body).expect("read metrics");
+    let row = format!("qmap_{name}_total ");
+    body.lines()
+        .find_map(|l| l.strip_prefix(&row))
+        .unwrap_or_else(|| panic!("no {name} row in metrics:\n{body}"))
+        .trim()
+        .parse()
+        .expect("counter value")
+}
+
+/// A worker killed and replaced by a fresh process on the same
+/// `--cache-dir` serves bit-identical fronts from the persisted store:
+/// run a distributed search, SIGKILL the worker, restart it cold on the
+/// same directory, rerun — the fronts must match bit for bit and the
+/// replacement's `store_hits` counter must prove the warm start came
+/// from disk, not recomputation luck.
+#[test]
+fn worker_restart_with_persisted_cache_is_warm_and_bit_identical() {
+    let arch = toy();
+    let layers = small_net();
+    let map_cfg = MapperConfig { valid_target: 24, max_draws: 24_000, seed: 37, shards: 2 };
+    let nsga_cfg =
+        NsgaConfig { population: 8, offspring: 4, generations: 2, seed: 41, ..NsgaConfig::default() };
+    let spec = ObjectiveSpec::from_env().expect("QMAP_OBJECTIVES").unwrap_or_default();
+    let mut store_dir = std::env::temp_dir();
+    store_dir.push(format!("qmap_worker_restart_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    std::fs::create_dir_all(&store_dir).unwrap();
+
+    let run = |addr: String| {
+        let engine = Engine::distributed(2, vec![addr]).with_objectives(spec);
+        let cache = MapperCache::new();
+        let mut acc = ProxyAccuracy::new(&layers, ProxyParams::default());
+        qmap::baselines::search_with_objectives(
+            &engine, &arch, &layers, &mut acc, &cache, &map_cfg, &nsga_cfg, &spec, |_, _| {},
+        )
+    };
+
+    let (mut w1, addr1, metrics1) = spawn_worker_process(&store_dir);
+    let first = run(addr1);
+    let appends = scrape_counter(&metrics1, "store_appends");
+    assert!(appends > 0, "first worker persisted nothing");
+    w1.kill().expect("kill worker");
+    let _ = w1.wait();
+
+    let (mut w2, addr2, metrics2) = spawn_worker_process(&store_dir);
+    let second = run(addr2);
+    let hits = scrape_counter(&metrics2, "store_hits");
+    assert!(hits > 0, "restarted worker never hit the persisted store");
+    w2.kill().expect("kill worker");
+    let _ = w2.wait();
+
+    assert_eq!(
+        front_key(&first),
+        front_key(&second),
+        "store-served outcomes must be bit-identical to computed ones"
+    );
+    let _ = std::fs::remove_dir_all(&store_dir);
+}

@@ -1,0 +1,267 @@
+//! Robustness and end-to-end properties of the persistent mapper-cache
+//! store (`mapper::store`, `qmap search --cache-dir`):
+//!
+//! * fuzzed store files — truncated, bit-flipped, garbage-spliced,
+//!   garbage-tailed — must never panic: open either refuses cleanly or
+//!   serves the undamaged records (cold fallback, never corruption);
+//! * two OS processes appending to one store concurrently lose nothing
+//!   and tear nothing (the `O_APPEND` whole-record invariant);
+//! * through the real binary: a warm `--cache-dir` run's Pareto front
+//!   is byte-identical to the cold run's and to a storeless serial run,
+//!   for both the 2-objective default and a 3-objective spec (which
+//!   shares the store — identity excludes objectives);
+//! * a store whose header claims a different identity is a loud
+//!   refusal, never a silent cold start or reuse.
+//!
+//! Honors `QMAP_PROP_SEED` / `QMAP_PROP_CASES` for replay.
+
+use qmap::mapper::store::{CacheStore, HEADER_LEN};
+use qmap::util::prop::check_with_rng;
+use qmap::util::Fnv1a;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("qmap_storerob_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ------------------------------------------------------------- fuzzing
+
+#[test]
+fn mutilated_store_files_never_panic_and_degrade_to_cold() {
+    let dir = tmp_dir("fuzz");
+    let path = dir.join("fuzz.qstore");
+    check_with_rng(
+        0x57A6,
+        40,
+        |r| (r.range(1, 12), r.range(0, 16)),
+        |&(slots, n), r| {
+            // build a healthy store of n records, then mutilate it
+            let _ = std::fs::remove_file(&path);
+            {
+                let s = CacheStore::open(&path, 0xF00D, slots).map_err(|e| e.to_string())?;
+                for k in 0..n as u64 {
+                    let payload: Vec<u64> = (0..slots as u64).map(|j| k * 100 + j).collect();
+                    s.append(k, k % 3, &payload);
+                }
+            }
+            let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+            match r.range(0, 3) {
+                // truncation anywhere, header included
+                0 => bytes.truncate(r.range(0, bytes.len() - 1)),
+                // single bit flip anywhere
+                1 => {
+                    let b = r.range(0, bytes.len() - 1);
+                    bytes[b] ^= 1 << r.range(0, 7);
+                }
+                // splice a run of garbage over a random region
+                2 => {
+                    let start = r.range(0, bytes.len() - 1);
+                    let len = r.range(1, 64).min(bytes.len() - start);
+                    for b in &mut bytes[start..start + len] {
+                        *b = r.below(256) as u8;
+                    }
+                }
+                // garbage tail (a crashed appender's worst case)
+                _ => bytes.extend((0..r.range(1, 200)).map(|_| r.below(256) as u8)),
+            }
+            std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+            let opened = catch_unwind(AssertUnwindSafe(|| {
+                match CacheStore::open(&path, 0xF00D, slots) {
+                    // clean refusal = the caller starts cold
+                    Err(_) => 0usize,
+                    Ok(s) => {
+                        // surviving records must still be well-formed
+                        for k in 0..n as u64 + 2 {
+                            if let Some((_, p)) = s.lookup(k) {
+                                assert_eq!(p.len(), slots);
+                            }
+                        }
+                        s.len()
+                    }
+                }
+            }));
+            match opened {
+                Err(_) => Err("panicked on a mutilated store file".into()),
+                Ok(len) if len <= n => Ok(()),
+                Ok(len) => Err(format!("{len} records resurrected from a store of {n}")),
+            }
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ----------------------------------------------- multi-process appends
+
+/// Hidden helper, not a real test: when `QMAP_STORE_CHILD` is set this
+/// appends `count` records starting at `base` to the store at `path`
+/// (the concurrent test below re-invokes the test binary with
+/// `--exact` to get genuinely separate OS processes). A normal test
+/// run sees the variable unset and returns immediately.
+#[test]
+fn helper_child_appender() {
+    let Ok(spec) = std::env::var("QMAP_STORE_CHILD") else { return };
+    let mut it = spec.split('|');
+    let path = PathBuf::from(it.next().unwrap());
+    let base: u64 = it.next().unwrap().parse().unwrap();
+    let count: u64 = it.next().unwrap().parse().unwrap();
+    let s = CacheStore::open(&path, 0xC0FFEE, 2).unwrap();
+    for k in 0..count {
+        s.append(base + k, 1, &[base + k, (base + k) * 3]);
+    }
+}
+
+#[test]
+fn concurrent_processes_append_without_loss_or_tearing() {
+    let dir = tmp_dir("mproc");
+    let path = dir.join("shared.qstore");
+    let exe = std::env::current_exe().unwrap();
+    let n = 200u64;
+    let bases = [0u64, 1 << 20];
+    let children: Vec<_> = bases
+        .iter()
+        .map(|&base| {
+            Command::new(&exe)
+                .args(["helper_child_appender", "--exact", "--nocapture"])
+                .env("QMAP_STORE_CHILD", format!("{}|{base}|{n}", path.display()))
+                .spawn()
+                .expect("spawn child appender")
+        })
+        .collect();
+    for mut c in children {
+        assert!(c.wait().unwrap().success(), "child appender failed");
+    }
+    let s = CacheStore::open(&path, 0xC0FFEE, 2).unwrap();
+    assert_eq!(s.skipped(), 0, "interleaved appends must never tear a record");
+    assert_eq!(s.len(), 2 * n as usize, "every append from both processes is visible");
+    for &base in &bases {
+        for k in 0..n {
+            let key = base + k;
+            assert_eq!(s.lookup(key), Some((1, &[key, key * 3][..])), "key {key}");
+        }
+    }
+    // exactly 2n whole records on disk: nothing duplicated, nothing torn
+    let stride = (3 + 2) * 8;
+    let file_len = std::fs::metadata(&path).unwrap().len() as usize;
+    assert_eq!(file_len, HEADER_LEN + 2 * n as usize * stride);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------- end-to-end through the binary
+
+/// Run `qmap search` on the toy arch over a small 3-layer net, serial
+/// threads, fast profile. Returns (stdout, stderr).
+fn run_search(net: &Path, objectives: Option<&str>, cache_dir: Option<&Path>) -> (String, String) {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_qmap"));
+    c.args(["search", "--arch", "toy", "--profile", "fast"])
+        .arg("--net")
+        .arg(net)
+        .args(["--gens", "2", "--pop", "6", "--offspring", "4", "--threads", "1"])
+        .env_remove("QMAP_CACHE_DIR")
+        .env_remove("QMAP_OBJECTIVES")
+        .env_remove("QMAP_PROFILE")
+        .env_remove("QMAP_WORKERS");
+    if let Some(o) = objectives {
+        c.args(["--objectives", o]);
+    }
+    if let Some(d) = cache_dir {
+        c.arg("--cache-dir").arg(d);
+    }
+    let out = c.output().expect("run qmap search");
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(out.status.success(), "qmap search failed:\n{stderr}");
+    (String::from_utf8(out.stdout).expect("utf8 stdout"), stderr)
+}
+
+fn write_tiny_net(dir: &Path) -> PathBuf {
+    let net = dir.join("tiny.qnet");
+    std::fs::write(
+        &net,
+        "c1 conv(c=3, k=8, r=3, p=8)\nd1 dw(ch=8, r=3, p=8)\nc2 conv(c=8, k=16, r=1, p=4)\n",
+    )
+    .unwrap();
+    net
+}
+
+/// Hits reported by the end-of-run `store_summary` stderr line.
+fn summary_hits(stderr: &str) -> u64 {
+    let line = stderr
+        .lines()
+        .find(|l| l.contains("cache store:") && l.contains("hit"))
+        .unwrap_or_else(|| panic!("no store summary in stderr:\n{stderr}"));
+    let hits = line.split("cache store:").nth(1).unwrap();
+    hits.trim().split_whitespace().next().unwrap().parse().unwrap()
+}
+
+#[test]
+fn warm_front_is_bit_identical_to_cold_and_serial() {
+    let dir = tmp_dir("warmcold");
+    let net = write_tiny_net(&dir);
+    let store = dir.join("store");
+
+    let (serial, _) = run_search(&net, None, None);
+    let (cold, cold_err) = run_search(&net, None, Some(&store));
+    let (warm, warm_err) = run_search(&net, None, Some(&store));
+    assert!(cold_err.contains("cache store"), "cold run must report the store:\n{cold_err}");
+    assert_eq!(serial, cold, "a cold --cache-dir run must not move the front");
+    assert_eq!(cold, warm, "a warm --cache-dir run must be byte-identical to cold");
+    assert!(summary_hits(&warm_err) > 0, "warm run served nothing from the store:\n{warm_err}");
+
+    // the 3-objective front shares the same store (identity excludes
+    // objectives — mapper results are objective-independent) and must
+    // also be byte-identical to its storeless serial twin
+    let axes = Some("error,energy,weight_words");
+    let (serial3, _) = run_search(&net, axes, None);
+    let (warm3, warm3_err) = run_search(&net, axes, Some(&store));
+    assert_eq!(serial3, warm3, "3-objective warm front must equal the serial front");
+    assert!(
+        summary_hits(&warm3_err) > 0,
+        "3-objective run must warm-start from the 2-objective store:\n{warm3_err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn foreign_identity_store_is_refused_loudly() {
+    let dir = tmp_dir("refusal");
+    let net = write_tiny_net(&dir);
+    let store = dir.join("store");
+    let (_, _) = run_search(&net, None, Some(&store));
+    let qstore = std::fs::read_dir(&store)
+        .unwrap()
+        .filter_map(Result::ok)
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|e| e == "qstore"))
+        .expect("search created a .qstore file");
+
+    // rewrite the header to claim a different identity, with a valid
+    // checksum — the file is structurally sound, just foreign
+    let mut bytes = std::fs::read(&qstore).unwrap();
+    bytes[8] ^= 0xFF;
+    let mut f = Fnv1a::new();
+    f.write(&bytes[..24]);
+    bytes[24..32].copy_from_slice(&f.finish().to_le_bytes());
+    std::fs::write(&qstore, &bytes).unwrap();
+
+    let mut c = Command::new(env!("CARGO_BIN_EXE_qmap"));
+    c.args(["search", "--arch", "toy", "--profile", "fast"])
+        .arg("--net")
+        .arg(&net)
+        .args(["--gens", "1", "--pop", "4", "--offspring", "2", "--threads", "1"])
+        .arg("--cache-dir")
+        .arg(&store)
+        .env_remove("QMAP_CACHE_DIR")
+        .env_remove("QMAP_PROFILE");
+    let out = c.output().expect("run qmap search");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "a foreign-identity store must be a refusal");
+    assert!(
+        stderr.contains("does not match this run's identity") && stderr.contains("refusing"),
+        "refusal must name the mismatch:\n{stderr}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
