@@ -178,13 +178,38 @@ fn main() {
     println!("  -> {} valid priced, {batch_rate:.0} candidates/s/core (batched)", batch_out.valid());
     println!("  -> batch speedup {batch_speedup:.2}x over the scalar ctx path");
 
+    // 1c'. the admissible-bound pruning win (PR 10): the same stream
+    //      through the reference cascade with the bound stage compiled
+    //      out (`run_shard_unpruned`). Pruning is provably
+    //      result-invariant — bit-identity asserted here in-run — so
+    //      the ratio is pure work saved (pricings skipped because the
+    //      lower bound already matched or beat the reigning winner).
+    let (unpruned_out, dt_unpruned) = time(
+        &format!("mapper: unpruned reference cascade x {PIPELINE_DRAWS}"),
+        || mapper::run_shard_unpruned(&space, &lctx, &spec),
+    );
+    assert_eq!(
+        unpruned_out, batch_out,
+        "bound pruning must be invisible in the shard outcome"
+    );
+    let guided_speedup = dt_unpruned / dt_batch.max(1e-12);
+    println!("  -> pruned vs unpruned speedup {guided_speedup:.2}x (bit-identical outcomes)");
+
     // 1d. per-stage cost split of the staged pipeline, measured inside
     //     the evaluator itself: `run_shard_timed` runs the identical
     //     stream through the stage-timing observer (draw / check /
     //     price), so the split prices exactly the code row 1c executed
     //     — bit-identity asserted — instead of re-simulating the
     //     stages as cumulative prefixes.
-    let (stage_draw_ms, stage_check_ms, stage_price_ms, reject_rate, spatial_reject_rate) = {
+    let (
+        stage_draw_ms,
+        stage_check_ms,
+        stage_bound_ms,
+        stage_price_ms,
+        reject_rate,
+        spatial_reject_rate,
+        bound_prune_rate,
+    ) = {
         let (timed_out, tstats) = mapper::run_shard_timed(&space, &lctx, &spec);
         assert_eq!(
             timed_out, batch_out,
@@ -195,16 +220,20 @@ fn main() {
         (
             tstats.draw_ns as f64 / 1e6,
             tstats.check_ns as f64 / 1e6,
+            tstats.bound_ns as f64 / 1e6,
             tstats.price_ns as f64 / 1e6,
             1.0 - tstats.stats.valid as f64 / PIPELINE_DRAWS as f64,
             tstats.stats.spatial_rejects as f64 / PIPELINE_DRAWS as f64,
+            tstats.bound_prune_rate(),
         )
     };
     println!(
         "  -> stage split: draw {stage_draw_ms:.1} ms, check {stage_check_ms:.1} ms, \
-         price {stage_price_ms:.1} ms; reject rate {:.1}% ({:.1}% spatial)",
+         bound {stage_bound_ms:.1} ms, price {stage_price_ms:.1} ms; reject rate {:.1}% \
+         ({:.1}% spatial); bound pruned {:.1}% of accepted",
         reject_rate * 1e2,
-        spatial_reject_rate * 1e2
+        spatial_reject_rate * 1e2,
+        bound_prune_rate * 1e2
     );
 
     // 2. random-search characterization of one layer (2000 valid),
@@ -626,8 +655,11 @@ fn main() {
     println!("  hotpath_speedup_x            = {speedup:.2}");
     println!("  batch_candidates_per_sec_core= {batch_rate:.0}");
     println!("  batch_speedup_x              = {batch_speedup:.2}");
+    println!("  guided_speedup_x             = {guided_speedup:.2}");
+    println!("  bound_prune_rate             = {bound_prune_rate:.3}");
     println!("  stage_draw_ms                = {stage_draw_ms:.1}");
     println!("  stage_check_ms               = {stage_check_ms:.1}");
+    println!("  stage_bound_ms               = {stage_bound_ms:.1}");
     println!("  stage_price_ms               = {stage_price_ms:.1}");
     println!("  reject_rate                  = {reject_rate:.3}");
     println!("  spatial_reject_rate          = {spatial_reject_rate:.3}");
@@ -668,8 +700,15 @@ fn main() {
         // with the per-stage cost split and the cascade's reject rates
         ("batch_candidates_per_sec_core", Json::Num(batch_rate)),
         ("batch_speedup_x", Json::Num(batch_speedup)),
+        // the admissible-bound pruning stage (PR 10): pruned cascade vs
+        // the pruning-compiled-out reference on the identical stream
+        // (bit-identity asserted above; floor-guarded), plus the
+        // fraction of accepted candidates whose pricing it skipped
+        ("guided_speedup_x", Json::Num(guided_speedup)),
+        ("bound_prune_rate", Json::Num(bound_prune_rate)),
         ("stage_draw_ms", Json::Num(stage_draw_ms)),
         ("stage_check_ms", Json::Num(stage_check_ms)),
+        ("stage_bound_ms", Json::Num(stage_bound_ms)),
         ("stage_price_ms", Json::Num(stage_price_ms)),
         ("reject_rate", Json::Num(reject_rate)),
         ("spatial_reject_rate", Json::Num(spatial_reject_rate)),

@@ -12,7 +12,7 @@
 //! untouched".
 
 use crate::arch::Arch;
-use crate::mapping::LayerContext;
+use crate::mapping::{LayerContext, Mapping};
 use crate::nest::NestAnalysis;
 use crate::quant::{pack_factor, LayerQuant};
 use crate::workload::{ConvLayer, Tensor, TENSORS};
@@ -164,6 +164,112 @@ pub fn estimate_into(lctx: &LayerContext, nest: &NestAnalysis, out: &mut Estimat
     }
     out.cycles = cycles;
     out.pes_used = nest.pes_used;
+}
+
+/// Reusable scratch for [`edp_lower_bound`] (no allocation in steady
+/// state, like the rest of the hot path's buffers).
+#[derive(Debug, Clone, Default)]
+pub struct BoundScratch {
+    reads: Vec<f64>,
+    writes: Vec<f64>,
+    level_words: Vec<f64>,
+    level_energy: Vec<f64>,
+}
+
+impl BoundScratch {
+    pub fn new() -> Self {
+        BoundScratch::default()
+    }
+}
+
+/// Admissible lower bound on the EDP of a candidate that survived
+/// [`LayerContext::check_tiles_into`], computed straight from the
+/// recorded tile-footprint slab (`elems[lv * 3 + tensor]`) — no reload
+/// or multicast analysis, no instance products.
+///
+/// The bound under-counts the exact traffic termwise: the innermost
+/// keeper of every tensor still moves all `macs` accesses (exact), and
+/// each upper keeper below DRAM moves at least its own tile once
+/// (`fills = tile x instances x reloads >= tile`, since both factors
+/// are `>= 1`); every other term of the exact accumulation (fill
+/// cascades into parent levels, output write-back and read-modify-write
+/// traffic) is dropped, i.e. replaced by adding zero at its position in
+/// the accumulation chain. Because IEEE round-to-nearest addition and
+/// multiplication are monotone, each partial sum of this reduced chain
+/// is `<=` the exact chain's partial sum, and multiplying by the
+/// non-negative energy constants, dividing by the positive bandwidths
+/// (both guaranteed by [`LayerContext::bound_safe`]; callers must not
+/// prune when that flag is false), and taking `energy x cycles` on
+/// non-negative values preserve the ordering — so
+/// `edp_lower_bound(..) <= estimate_into(..).edp()` holds *bitwise*,
+/// not merely approximately. `tests/hotpath_equivalence.rs` asserts the
+/// property over every accepted candidate on the preset arches.
+///
+/// The latency term reuses the exact divisors: `mapping.pes_used()` is
+/// precisely what the nest analysis reports, so the compute-bound term
+/// matches the exact estimate and the bandwidth terms divide
+/// under-counted words by the same `bandwidth x instances` products.
+pub fn edp_lower_bound(
+    lctx: &LayerContext,
+    mapping: &Mapping,
+    elems: &[u64],
+    s: &mut BoundScratch,
+) -> f64 {
+    let nl = lctx.num_levels;
+    debug_assert!(elems.len() >= nl * 3);
+    s.reads.clear();
+    s.reads.resize(nl * 3, 0.0);
+    s.writes.clear();
+    s.writes.resize(nl * 3, 0.0);
+    let macs = lctx.macs as f64;
+    for t in TENSORS {
+        let ti = t.index();
+        let keepers = &lctx.keepers[ti];
+        let k0 = keepers[0];
+        // innermost keeper: every MAC touches it — exact, not a bound
+        s.reads[k0 * 3 + ti] += macs;
+        if matches!(t, Tensor::Outputs) {
+            s.writes[k0 * 3 + ti] += macs;
+        }
+        // each upper keeper below DRAM holds its tile at least once;
+        // reads for Outputs (drained upward), writes for the others
+        // (filled downward) — mirroring which side of the slot the
+        // exact `fills` term lands on
+        for w in keepers.windows(2) {
+            let k = w[0];
+            let tile = elems[k * 3 + ti] as f64;
+            if matches!(t, Tensor::Outputs) {
+                s.reads[k * 3 + ti] += tile;
+            } else {
+                s.writes[k * 3 + ti] += tile;
+            }
+        }
+    }
+    s.level_words.clear();
+    s.level_words.resize(nl, 0.0);
+    s.level_energy.clear();
+    s.level_energy.resize(nl, 0.0);
+    // identical accumulation shape to `estimate_into`, term-for-term
+    for lv in 0..nl {
+        let ae = &lctx.access_energy_flat[lv * 3..lv * 3 + 3];
+        for t in TENSORS {
+            let ti = t.index();
+            let total = s.reads[lv * 3 + ti] + s.writes[lv * 3 + ti];
+            let w = lctx.words_f(t, total);
+            s.level_words[lv] += w;
+            s.level_energy[lv] += w * ae[ti];
+        }
+    }
+    let mac_energy = lctx.macs as f64 * lctx.mac_energy_pj;
+    let energy = s.level_energy.iter().sum::<f64>() + mac_energy;
+    let pes = mapping.pes_used().max(1);
+    let mut cycles = lctx.macs as f64 / pes as f64;
+    for lv in 0..nl {
+        let inst = lctx.inst_cap[lv].min(pes);
+        let level_cycles = s.level_words[lv] / (lctx.bandwidth[lv] * inst as f64);
+        cycles = cycles.max(level_cycles);
+    }
+    energy * cycles
 }
 
 /// Number of parallel instances of level `lv`: total PEs divided by the

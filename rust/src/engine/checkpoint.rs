@@ -55,6 +55,7 @@
 
 use crate::arch::Arch;
 use crate::mapper::cache::MapperCache;
+use crate::mapper::guide::GuideState;
 use crate::mapper::MapperConfig;
 use crate::nsga::{Individual, NsgaConfig, SearchState};
 use crate::objective::{ObjectiveSpec, ObjectiveVec};
@@ -376,15 +377,19 @@ impl Checkpointer {
         ])
     }
 
-    fn mark_frame(st: &SearchState) -> Json {
-        Json::obj(vec![(
-            "mark",
-            Json::obj(vec![
-                ("generation", Json::Num(st.generation as f64)),
-                ("rng", Json::hex_u64(st.rng.state())),
-                ("population", population_to_json(&st.pop)),
-            ]),
-        )])
+    fn mark_frame(st: &SearchState, guide: &GuideState) -> Json {
+        let mut fields = vec![
+            ("generation", Json::Num(st.generation as f64)),
+            ("rng", Json::hex_u64(st.rng.state())),
+            ("population", population_to_json(&st.pop)),
+        ];
+        // written only when non-empty, so an unguided run's journal
+        // stays byte-identical to the pre-guide format; the loader
+        // treats a missing key as an empty guide
+        if !guide.is_empty() {
+            fields.push(("guide", guide.to_json()));
+        }
+        Json::obj(vec![("mark", Json::obj(fields))])
     }
 
     /// Full rewrite: header + one insert frame per current cache entry
@@ -395,6 +400,7 @@ impl Checkpointer {
         st: &SearchState,
         cache: &MapperCache,
         ident: &SearchIdent,
+        guide: &GuideState,
     ) -> Result<Appender, String> {
         let tmp = format!("{}.tmp", self.path);
         let mut buf = String::new();
@@ -404,7 +410,7 @@ impl Checkpointer {
             buf.push_str(&Json::obj(vec![("insert", e)]).to_string());
             buf.push('\n');
         }
-        buf.push_str(&Self::mark_frame(st).to_string());
+        buf.push_str(&Self::mark_frame(st, guide).to_string());
         buf.push('\n');
         {
             let mut f = std::fs::File::create(&tmp).map_err(|e| format!("{tmp}: {e}"))?;
@@ -433,6 +439,22 @@ impl Checkpointer {
         cache: &MapperCache,
         ident: &SearchIdent,
     ) -> Result<(), String> {
+        self.save_with_guide(st, cache, ident, &GuideState::new())
+    }
+
+    /// [`Checkpointer::save`] carrying the engine's guide state (see
+    /// [`crate::mapper::guide`]): the mark frame gains an optional
+    /// `guide` key, written only when the state is non-empty, so the
+    /// unguided journal bytes are unchanged. The guide is *not* part of
+    /// [`SearchIdent`] — it is a placement-only hint, and a resume may
+    /// legitimately carry more or less history than the saved run.
+    pub fn save_with_guide(
+        &self,
+        st: &SearchState,
+        cache: &MapperCache,
+        ident: &SearchIdent,
+        guide: &GuideState,
+    ) -> Result<(), String> {
         let mut guard = self.writer.lock().unwrap();
         // append path: an armed writer and a journaling cache
         let mut appended: Option<Result<usize, String>> = None;
@@ -446,7 +468,7 @@ impl Checkpointer {
                         buf.push_str(&Json::obj(vec![("insert", e)]).to_string());
                         buf.push('\n');
                     }
-                    buf.push_str(&Self::mark_frame(st).to_string());
+                    buf.push_str(&Self::mark_frame(st, guide).to_string());
                     buf.push('\n');
                     let t_write = Instant::now();
                     app.file
@@ -487,7 +509,7 @@ impl Checkpointer {
             }
             Some(Ok(n)) => {
                 if n > self.compact_slack + 2 * cache.len() {
-                    match self.rewrite(st, cache, ident) {
+                    match self.rewrite(st, cache, ident, guide) {
                         Ok(app) => {
                             metrics::counters()
                                 .ckpt_compactions
@@ -521,7 +543,7 @@ impl Checkpointer {
             None => {
                 cache.enable_journal();
                 let _ = cache.drain_journal();
-                *guard = Some(self.rewrite(st, cache, ident)?);
+                *guard = Some(self.rewrite(st, cache, ident, guide)?);
                 Ok(())
             }
         }
@@ -534,6 +556,18 @@ impl Checkpointer {
     /// resuming from the last complete mark. On success the journal is
     /// reopened for appending, so later saves extend it in place.
     pub fn load(&self, ident: &SearchIdent, cache: &MapperCache) -> Result<SearchState, String> {
+        self.load_with_guide(ident, cache).map(|(st, _)| st)
+    }
+
+    /// [`Checkpointer::load`] that also restores the guide state from
+    /// the resumed mark (empty for journals written before the guide
+    /// existed, for unguided runs, and for legacy snapshots — a missing
+    /// key is an empty guide, never an error).
+    pub fn load_with_guide(
+        &self,
+        ident: &SearchIdent,
+        cache: &MapperCache,
+    ) -> Result<(SearchState, GuideState), String> {
         let src =
             std::fs::read_to_string(&self.path).map_err(|e| format!("{}: {e}", self.path))?;
         // format sniff on the first line: journal header vs the legacy
@@ -545,7 +579,7 @@ impl Checkpointer {
             let st = self.load_legacy(&src, ident, cache)?;
             // leave the writer unarmed: the first save migrates the
             // file to the journal format with a full rewrite
-            return Ok(st);
+            return Ok((st, GuideState::new()));
         }
         let header = head.map_err(|e| format!("{}: {e}", self.path))?;
         if header.get("journal").as_f64() != Some(JOURNAL_VERSION) {
@@ -606,6 +640,10 @@ impl Checkpointer {
         let rng = Rng::new(mark.get("rng").as_hex_u64("checkpoint rng")?);
         let spec = ident.objective_spec()?;
         let pop = population_from_json(mark.get("population"), ident.num_layers, &spec)?;
+        let guide = match mark.get("guide") {
+            Json::Null => GuideState::new(),
+            g => GuideState::from_json(g).map_err(|e| format!("{}: {e}", self.path))?,
+        };
         // arm the cache's insert queue; keep appending to the replayed
         // journal UNLESS the tail was torn — appending after partial
         // bytes would merge the torn line with the next frame into one
@@ -626,11 +664,14 @@ impl Checkpointer {
                 appended: inserts,
             });
         }
-        Ok(SearchState {
-            generation,
-            pop,
-            rng,
-        })
+        Ok((
+            SearchState {
+                generation,
+                pop,
+                rng,
+            },
+            guide,
+        ))
     }
 
     /// Load the pre-journal single-document snapshot format.
@@ -1136,6 +1177,42 @@ mod tests {
             .load(&ident(), &MapperCache::new())
             .unwrap();
         assert_eq!(back2.generation, 5);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The guide rides the mark frame: a non-empty state round-trips
+    /// through `save_with_guide`/`load_with_guide`, while an empty
+    /// guide leaves the journal byte-identical to the guideless format.
+    #[test]
+    fn guide_rides_the_mark_and_empty_guides_change_nothing() {
+        let path = tmp_path("guide");
+        let st = state_with_objectives(vec![vec![1.0, 2.0]]);
+        let cache = MapperCache::new();
+        // empty guide: byte-identical to the plain save
+        Checkpointer::new(path.as_str())
+            .save_with_guide(&st, &cache, &ident(), &GuideState::new())
+            .unwrap();
+        let plain = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        Checkpointer::new(path.as_str()).save(&st, &cache, &ident()).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), plain, "empty guide must not change bytes");
+        // non-empty guide: round-trips exactly
+        let mut g = GuideState::new();
+        g.note(0xAB, 10, 1_000);
+        g.note(0xCD, 7, 70);
+        Checkpointer::new(path.as_str())
+            .save_with_guide(&st, &cache, &ident(), &g)
+            .unwrap();
+        let (back, gback) = Checkpointer::new(path.as_str())
+            .load_with_guide(&ident(), &MapperCache::new())
+            .unwrap();
+        assert_eq!(back.generation, 3);
+        assert_eq!(gback, g);
+        // the plain loader still accepts the guided journal
+        let st2 = Checkpointer::new(path.as_str())
+            .load(&ident(), &MapperCache::new())
+            .unwrap();
+        assert_eq!(st2.generation, 3);
         let _ = std::fs::remove_file(&path);
     }
 

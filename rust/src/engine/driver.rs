@@ -185,7 +185,13 @@ fn search_on_engine_keyed(
     } else {
         specs.iter().map(run).collect()
     };
-    mapper::merge_shards(outcomes)
+    let result = mapper::merge_shards(outcomes);
+    // fold the search's validity rate into the guide (local twin of the
+    // fold in `remote::eval_jobs`; the two paths are disjoint per job,
+    // so no outcome is counted twice). Commutative saturating sums —
+    // schedule order cannot change the folded state.
+    engine.guide_note(whash, result.valid, result.draws);
+    result
 }
 
 /// Fold one finished shard's cascade stage counts into the process
@@ -199,6 +205,7 @@ pub(crate) fn note_shard(layer: &str, whash: u64, stats: &mapper::ShardStats) {
     c.shard_spatial_rejects.fetch_add(stats.spatial_rejects, Relaxed);
     c.shard_tile_rejects.fetch_add(stats.tile_rejects, Relaxed);
     c.shard_valid.fetch_add(stats.valid, Relaxed);
+    c.bound_pruned.fetch_add(stats.bound_pruned, Relaxed);
     obs::event(
         "shard",
         vec![
@@ -208,6 +215,7 @@ pub(crate) fn note_shard(layer: &str, whash: u64, stats: &mapper::ShardStats) {
             ("valid", Json::Num(stats.valid as f64)),
             ("spatial_rejects", Json::Num(stats.spatial_rejects as f64)),
             ("tile_rejects", Json::Num(stats.tile_rejects as f64)),
+            ("bound_pruned", Json::Num(stats.bound_pruned as f64)),
         ],
     );
 }
@@ -217,10 +225,15 @@ pub(crate) fn note_shard(layer: &str, whash: u64, stats: &mapper::ShardStats) {
 /// `Priority` sorts by descending *effective draw budget* — the
 /// cache-probe-aware cost estimate from
 /// [`MapperCache::effective_draws`]: stale negatives (guaranteed to
-/// burn the whole budget) first, fresh misses next with larger layers
-/// (more MACs per draw) ahead, cached jobs (cost 0) last. Ties break
-/// on first-encounter order, so the order is deterministic. Pure
-/// placement: every policy produces bit-identical results.
+/// burn the whole budget) first, fresh misses next, cached jobs (cost
+/// 0) last. Within a cost class the guide's estimated
+/// draws-to-target ([`Engine::guide_expected`]) ranks the historically
+/// hardest workloads first — longest-job-first placement that shrinks
+/// the generation tail; a cold guide estimates every job at the full
+/// draw budget, so the ranking degrades to larger layers (more MACs
+/// per draw) ahead. Ties break on first-encounter order, so the order
+/// is deterministic. Pure placement: every policy produces
+/// bit-identical results.
 pub(crate) fn order_jobs(
     engine: &Engine,
     layers: &[ConvLayer],
@@ -232,14 +245,32 @@ pub(crate) fn order_jobs(
     match engine.sched_policy() {
         SchedPolicy::Fifo => {}
         SchedPolicy::Priority => {
-            let key: Vec<(u64, u64)> = jobs
+            let guided = !engine.guide_is_empty();
+            let key: Vec<(u64, u64, u64)> = jobs
                 .iter()
                 .map(|j| {
                     let layer = &layers[j.layer_index];
-                    (cache.effective_draws_key(j.key, cfg), layer.macs())
+                    (
+                        cache.effective_draws_key(j.key, cfg),
+                        engine.guide_expected(j.key.whash, cfg),
+                        layer.macs(),
+                    )
                 })
                 .collect();
             idx.sort_by(|&a, &b| key[b].cmp(&key[a]).then(a.cmp(&b)));
+            if guided {
+                // did guidance actually move anything? Rank the same
+                // keys without the guide element (no second cache
+                // probe) and compare — one counter bump per reordered
+                // generation.
+                let mut base: Vec<usize> = (0..jobs.len()).collect();
+                base.sort_by(|&a, &b| {
+                    (key[b].0, key[b].2).cmp(&(key[a].0, key[a].2)).then(a.cmp(&b))
+                });
+                if base != idx {
+                    metrics::counters().guided_reorderings.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
         SchedPolicy::Shuffled(seed) => {
             let mut r = Rng::new(seed ^ jobs.len() as u64);
@@ -488,17 +519,24 @@ pub fn search_resumable(
 
     let ident = SearchIdent::new(arch, layers.len(), objectives, map_cfg, nsga_cfg);
     let mut st = if resume && ckpt.exists() {
-        ckpt.load(&ident, cache)?
+        // the guide resumes with the search: the journaled validity
+        // rates land on the engine before the first generation, so a
+        // resumed driver schedules from the same history an
+        // uninterrupted one would have (placement only — the fronts
+        // are bit-identical either way)
+        let (st, guide) = ckpt.load_with_guide(&ident, cache)?;
+        engine.set_guide(guide);
+        st
     } else {
         let st = nsga::init_state(layers.len(), nsga_cfg, &mut evaluate);
         on_generation(0, &st.pop);
-        ckpt.save(&st, cache, &ident)?;
+        ckpt.save_with_guide(&st, cache, &ident, &engine.guide_snapshot())?;
         st
     };
     while st.generation < nsga_cfg.generations {
         nsga::step(&mut st, nsga_cfg, &mut evaluate);
         on_generation(st.generation, &st.pop);
-        ckpt.save(&st, cache, &ident)?;
+        ckpt.save_with_guide(&st, cache, &ident, &engine.guide_snapshot())?;
         // one trace line per durable generation: whether the journal
         // appender survived the save (unarmed means the next save
         // rewrites whole — a torn resume or a failed append upstream)

@@ -47,6 +47,8 @@ pub use checkpoint::Checkpointer;
 pub use pool::{Pool, ScopedTask};
 pub use remote::WorkerOptions;
 
+use crate::mapper::guide::GuideState;
+use crate::mapper::MapperConfig;
 use crate::objective::ObjectiveSpec;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -196,6 +198,14 @@ pub struct Engine {
     /// engine they were handed — the one value on the wire is always
     /// the one the running search uses, by construction.
     objectives: Mutex<ObjectiveSpec>,
+    /// Validity-rate guidance folded from finished searches (see
+    /// [`crate::mapper::guide`]). Placement-only by contract: the state
+    /// ranks jobs in [`driver::order_jobs`] and rides checkpoints and
+    /// batch frames, but never touches a result-bearing shard plan —
+    /// fronts stay bit-identical to the unguided engine. Same
+    /// interior-mutability story as `objectives`: searches fold into
+    /// whatever engine they were handed.
+    guide: Mutex<GuideState>,
     jobs: AtomicU64,
     splits: AtomicU64,
     remote_jobs: AtomicU64,
@@ -301,6 +311,7 @@ impl Engine {
             sched: SchedPolicy::Priority,
             pipeline: default_pipeline_depth(),
             objectives: Mutex::new(ObjectiveSpec::default()),
+            guide: Mutex::new(GuideState::new()),
             jobs: AtomicU64::new(0),
             splits: AtomicU64::new(0),
             remote_jobs: AtomicU64::new(0),
@@ -331,6 +342,42 @@ impl Engine {
     /// and `Copy` by design).
     pub fn objectives(&self) -> ObjectiveSpec {
         *self.objectives.lock().unwrap()
+    }
+
+    /// Fold one finished search's outcome into the guide: the workload
+    /// produced `valid` valid mappings over `drawn` draws. Saturating
+    /// and commutative (see [`GuideState::note`]); bumps the
+    /// `guide_updates` metrics counter.
+    pub fn guide_note(&self, whash: u64, valid: u64, drawn: u64) {
+        self.guide.lock().unwrap().note(whash, valid, drawn);
+        crate::obs::metrics::counters().guide_updates.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Estimated draws-to-target for a workload under `cfg` (see
+    /// [`GuideState::expected_draws`]).
+    pub fn guide_expected(&self, whash: u64, cfg: &MapperConfig) -> u64 {
+        self.guide.lock().unwrap().expected_draws(whash, cfg)
+    }
+
+    /// The raw `(valid, drawn)` counts for a workload, if the guide has
+    /// seen it — what `proto::batch` ships to workers as a rate hint.
+    pub fn guide_rate(&self, whash: u64) -> Option<(u64, u64)> {
+        self.guide.lock().unwrap().rate(whash)
+    }
+
+    /// A copy of the whole guide (what checkpoint saves persist).
+    pub fn guide_snapshot(&self) -> GuideState {
+        self.guide.lock().unwrap().clone()
+    }
+
+    /// Replace the guide wholesale (checkpoint resume installs the
+    /// journaled state here before the first generation).
+    pub fn set_guide(&self, g: GuideState) {
+        *self.guide.lock().unwrap() = g;
+    }
+
+    pub fn guide_is_empty(&self) -> bool {
+        self.guide.lock().unwrap().is_empty()
     }
 
     /// Override the job-injection order (results are bit-identical

@@ -258,6 +258,14 @@ pub fn quant_from_json(v: &Json) -> Result<LayerQuant, String> {
 /// objective space it does not share — the loud-failure seam for
 /// mixed-version fleets. Workers predating the field ignore it, which
 /// is sound for exactly the axes that existed then.
+///
+/// `guide` is the driver's accumulated `(valid, drawn)` counts for
+/// this workload (see `mapper::guide`) — a purely observational hint
+/// for the worker's own metrics/logs, written only when the driver has
+/// history. Additive and optional: workers predating the field ignore
+/// it (`decode_batch` reads fields by name), and a worker never lets
+/// it near the shard execution path — outcomes are a pure function of
+/// `(arch, layer, quant, spec)` with or without it.
 #[allow(clippy::too_many_arguments)]
 pub fn batch(
     id: u64,
@@ -267,8 +275,9 @@ pub fn batch(
     layer: &ConvLayer,
     q: &LayerQuant,
     specs: &[ShardSpec],
+    guide: Option<(u64, u64)>,
 ) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("type", Json::Str("batch".into())),
         ("v", Json::hex_u64(VERSION)),
         ("id", Json::hex_u64(id)),
@@ -278,7 +287,17 @@ pub fn batch(
         ("layer", layer_to_json(layer)),
         ("quant", quant_to_json(q)),
         ("specs", Json::Arr(specs.iter().map(|s| s.to_json()).collect())),
-    ])
+    ];
+    if let Some((valid, drawn)) = guide {
+        fields.push((
+            "guide",
+            Json::obj(vec![
+                ("valid", Json::hex_u64(valid)),
+                ("drawn", Json::hex_u64(drawn)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
 /// Worker → driver: one shard's outcome.
@@ -488,7 +507,11 @@ mod tests {
             },
             42,
         );
-        let msg = batch(7, 0xFEED_5EED, "edp,error", &render_arch(&arch), &l, &q, &specs);
+        let msg =
+            batch(7, 0xFEED_5EED, "edp,error", &render_arch(&arch), &l, &q, &specs, Some((3, 77)));
+        // no guide → no field on the wire (old workers see old bytes)
+        let bare = batch(7, 0, "edp,error", &render_arch(&arch), &l, &q, &specs, None);
+        assert!(matches!(bare.get("guide"), Json::Null));
         let mut buf = Vec::new();
         write_msg(&mut buf, &msg).unwrap();
         let mut cur = std::io::Cursor::new(buf);
@@ -497,6 +520,9 @@ mod tests {
         assert_eq!(back.get("id").as_hex_u64("id").unwrap(), 7);
         assert_eq!(back.get("search").as_hex_u64("search").unwrap(), 0xFEED_5EED);
         assert_eq!(back.get("objectives").as_str().unwrap(), "edp,error");
+        let g = back.get("guide");
+        assert_eq!(g.get("valid").as_hex_u64("valid").unwrap(), 3);
+        assert_eq!(g.get("drawn").as_hex_u64("drawn").unwrap(), 77);
         let arch_back = parse_arch(back.get("arch").as_str().unwrap()).unwrap();
         assert_eq!(arch_back, arch);
         assert_eq!(layer_from_json(back.get("layer")).unwrap(), l);

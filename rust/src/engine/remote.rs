@@ -495,6 +495,16 @@ fn decode_batch(msg: &Json) -> Result<BatchWork, String> {
     for s in msg.get("specs").as_arr().ok_or("batch: missing specs")? {
         specs.push(ShardSpec::from_json(s)?);
     }
+    // the driver's optional validity-rate hint (see `mapper::guide`):
+    // observational only — validate, count, and keep it away from the
+    // execution path (outcomes stay a pure function of the specs).
+    // Absent field = a driver predating the guide; nothing to count.
+    let g = msg.get("guide");
+    if !matches!(g, Json::Null) {
+        let _ = g.get("valid").as_hex_u64("batch guide valid")?;
+        let _ = g.get("drawn").as_hex_u64("batch guide drawn")?;
+        metrics::counters().guide_updates.fetch_add(1, Ordering::Relaxed);
+    }
     Ok(BatchWork {
         id,
         search,
@@ -777,12 +787,13 @@ impl RemoteClient {
         layer: &ConvLayer,
         q: &LayerQuant,
         specs: &[ShardSpec],
+        guide: Option<(u64, u64)>,
     ) -> Result<u64, String> {
         let id = self.next_id;
         self.next_id += 1;
         proto::write_msg(
             &mut self.writer,
-            &proto::batch(id, search, objectives, arch_spec, layer, q, specs),
+            &proto::batch(id, search, objectives, arch_spec, layer, q, specs, guide),
         )?;
         Ok(id)
     }
@@ -831,7 +842,7 @@ impl RemoteClient {
         ledger: &mut BatchLedger,
     ) -> Result<(), String> {
         let specs: Vec<ShardSpec> = ledger.specs().to_vec();
-        let id = self.send_batch(arch_spec, 0, "", layer, q, &specs)?;
+        let id = self.send_batch(arch_spec, 0, "", layer, q, &specs, None)?;
         loop {
             match self.recv_event()? {
                 WorkerEvent::Outcome {
@@ -1185,6 +1196,7 @@ pub fn eval_jobs(
                                 w.layer,
                                 &w.quant,
                                 &specs,
+                                engine.guide_rate(w.key.whash),
                             ) {
                                 Ok(id) => id,
                                 Err(e) => {
@@ -1319,6 +1331,10 @@ pub fn eval_jobs(
             ledger.finalize(|_, spec| run(spec))
         };
         cache.insert_search_key(w.key, cfg, &result);
+        // the distributed twin of the fold in
+        // `driver::search_on_engine_keyed` — a job runs through exactly
+        // one of the two paths, so no outcome is counted twice
+        engine.guide_note(w.key.whash, result.valid, result.draws);
     }
 }
 
@@ -1549,7 +1565,7 @@ mod tests {
         for _ in 0..3 {
             let mut ledger = BatchLedger::new(specs.clone());
             let id = client
-                .send_batch(&rendered, 0xA5A5, "edp,error", &layer, &q, &specs)
+                .send_batch(&rendered, 0xA5A5, "edp,error", &layer, &q, &specs, Some((5, 500)))
                 .expect("send");
             loop {
                 match client.recv_event().expect("event") {
@@ -1631,6 +1647,7 @@ mod tests {
             &layer,
             &q,
             &specs,
+            None,
         );
         proto::write_msg(&mut client.writer, &msg).expect("send");
         let err = client.recv_event().expect_err("hostile spec must be refused");

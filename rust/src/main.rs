@@ -953,6 +953,7 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
     }
     let mut reference: Option<Vec<Option<qmap::eval::NetworkEval>>> = None;
     let mut t1 = 0.0f64;
+    let mut last_guide = qmap::mapper::guide::GuideState::new();
     for &w in &workers {
         let mut engine = Engine::distributed_source(w, source.clone());
         if let Some(d) = pipeline {
@@ -1008,8 +1009,34 @@ fn cmd_engine_stats(args: &Args, rc: &RunConfig) -> i32 {
             eprintln!("error: engine results diverged from the 1-worker baseline");
             return 1;
         }
+        last_guide = engine.guide_snapshot();
     }
     println!("results bit-identical across all worker counts");
+    // validity-rate guidance + admissible-bound pruning summary (see
+    // mapper::guide and energy::edp_lower_bound): what the search
+    // learned about each workload, and how much pricing the bound
+    // skipped. Observational — the rows above already asserted the
+    // results cannot move.
+    {
+        let m = obs::metrics::counters();
+        let g = |c: &std::sync::atomic::AtomicU64| c.load(std::sync::atomic::Ordering::Relaxed);
+        let valid = g(&m.shard_valid);
+        let pruned = g(&m.bound_pruned);
+        let rate = if valid > 0 { pruned as f64 / valid as f64 * 100.0 } else { 0.0 };
+        println!(
+            "guide: {} workload(s) profiled, {} update(s), {} guided reordering(s); \
+             bound pruning skipped pricing on {pruned} of {valid} valid candidates ({rate:.1}%)",
+            last_guide.len(),
+            g(&m.guide_updates),
+            g(&m.guided_reorderings),
+        );
+        for (whash, (v, d)) in last_guide.iter() {
+            let expected = last_guide.expected_draws(whash, &cfg);
+            println!(
+                "  whash {whash:016x}: valid {v} / drawn {d}  expected draws to target {expected}"
+            );
+        }
+    }
     if store_dir.is_some() {
         store_summary();
     }

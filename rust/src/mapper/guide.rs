@@ -1,0 +1,295 @@
+//! Validity-rate guidance: deterministic per-workload (valid, drawn)
+//! counts and the exact-sum budget apportionment they drive.
+//!
+//! The mapper's draws are blind — every workload gets the same
+//! `valid_target`/`max_draws` budget and the scheduler's only signal is
+//! layer size. But the search itself keeps measuring how *hard* each
+//! workload is: every merged [`super::MapperResult`] reports how many
+//! draws its valid mappings cost. [`GuideState`] folds those counts per
+//! workload hash, and [`GuideState::expected_draws`] turns them into an
+//! estimated draws-to-target that `engine::driver::order_jobs` uses to
+//! start the hungriest jobs first (longest-job-first placement shrinks
+//! the generation tail).
+//!
+//! Determinism contract: guidance is **placement-only**. The counts are
+//! commutative saturating sums, so any execution order folds to the same
+//! state; the state only ever reorders jobs and never touches
+//! [`super::shard_plan`]'s budgets for result-bearing searches — the
+//! candidate streams, and therefore every Pareto front, are bit-identical
+//! to the unguided engine. `SchedPolicy` already pins that invariant
+//! (`sched_policy_never_changes_results`), and the guided
+//! `engine_stateful` scripts re-pin it end to end.
+//!
+//! The state rides the checkpoint journal (an optional `guide` key in
+//! the mark frame — see `engine::checkpoint`) and `proto::batch`
+//! (an optional per-workload rate hint), so resumed drivers and elastic
+//! fleets schedule from the same history.
+
+use super::MapperConfig;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Per-workload `(valid, drawn)` counts, keyed by the workload hash
+/// (`super::workload_hash`). `BTreeMap` keeps iteration — and thus the
+/// serialized form — deterministic.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GuideState {
+    counts: BTreeMap<u64, (u64, u64)>,
+}
+
+impl GuideState {
+    pub fn new() -> GuideState {
+        GuideState::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Fold one search outcome (or negative-cache draw budget) into the
+    /// workload's counts. Saturating: the counts are a heuristic signal,
+    /// and a fleet that somehow overflows u64 draws must degrade to
+    /// "very hard", not wrap to "easy".
+    pub fn note(&mut self, whash: u64, valid: u64, drawn: u64) {
+        let e = self.counts.entry(whash).or_insert((0, 0));
+        e.0 = e.0.saturating_add(valid);
+        e.1 = e.1.saturating_add(drawn);
+    }
+
+    /// Fold another guide state in (commutative, associative — the fold
+    /// order across shards/hosts cannot change the result).
+    pub fn merge(&mut self, other: &GuideState) {
+        for (&whash, &(valid, drawn)) in &other.counts {
+            self.note(whash, valid, drawn);
+        }
+    }
+
+    /// The raw `(valid, drawn)` counts for one workload, if any.
+    pub fn rate(&self, whash: u64) -> Option<(u64, u64)> {
+        self.counts.get(&whash).copied()
+    }
+
+    /// Estimated draws needed to reach `cfg.valid_target` valid
+    /// mappings on this workload: `ceil(valid_target x drawn / valid)`,
+    /// clamped to `[1, cfg.max_draws]`. Unseen workloads — and ones
+    /// that never produced a valid mapping — estimate the full draw
+    /// budget, so cold guides rank every job equally and the scheduler
+    /// falls back to its historical key.
+    pub fn expected_draws(&self, whash: u64, cfg: &MapperConfig) -> u64 {
+        match self.counts.get(&whash) {
+            Some(&(valid, drawn)) if valid > 0 => {
+                let est = (cfg.valid_target as u128 * drawn as u128).div_ceil(valid as u128);
+                est.min(cfg.max_draws.max(1) as u128).max(1) as u64
+            }
+            _ => cfg.max_draws,
+        }
+    }
+
+    /// Iterate entries in deterministic (ascending-hash) order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, (u64, u64))> + '_ {
+        self.counts.iter().map(|(&k, &v)| (k, v))
+    }
+
+    /// Wire/journal form: an array of `{whash, valid, drawn}` objects
+    /// in ascending hash order, every `u64` as a hex string (counts can
+    /// legitimately exceed 2^53).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.counts
+                .iter()
+                .map(|(&whash, &(valid, drawn))| {
+                    Json::obj(vec![
+                        ("whash", Json::hex_u64(whash)),
+                        ("valid", Json::hex_u64(valid)),
+                        ("drawn", Json::hex_u64(drawn)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Total decoder for [`GuideState::to_json`]: malformed input is an
+    /// `Err`, never a panic (this parses journal bytes and network
+    /// frames). Duplicate hashes fold together rather than erroring —
+    /// a merged journal must still load.
+    pub fn from_json(v: &Json) -> Result<GuideState, String> {
+        let mut g = GuideState::new();
+        for e in v.as_arr().ok_or("guide: not an array")? {
+            g.note(
+                e.get("whash").as_hex_u64("guide whash")?,
+                e.get("valid").as_hex_u64("guide valid")?,
+                e.get("drawn").as_hex_u64("guide drawn")?,
+            );
+        }
+        Ok(g)
+    }
+}
+
+/// Apportion `total` across `weights` by largest remainder: entry `i`
+/// gets `floor(total x w_i / sum(w))`, and the residue (always fewer
+/// units than entries) goes to the largest fractional remainders, ties
+/// to the lowest index. The result always sums to exactly `total` —
+/// the rounding bug class [`super::shard_plan`] must never exhibit
+/// (a shard plan whose draw budgets don't reassemble `max_draws` would
+/// silently change `MapperResult::draws`).
+///
+/// All-zero (or empty) weights fall back to the uniform split
+/// `total / n + (i < total % n)`; uniform *non-zero* weights reduce to
+/// the same expression (equal remainders, ties to the lowest index), so
+/// the historical plan is reproduced bit-for-bit.
+pub fn apportion(total: u64, weights: &[u64]) -> Vec<u64> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let n64 = n as u64;
+    let wsum: u128 = weights.iter().map(|&w| w as u128).sum();
+    if wsum == 0 {
+        return (0..n64).map(|i| total / n64 + u64::from(i < total % n64)).collect();
+    }
+    let total = total as u128;
+    let mut out = Vec::with_capacity(n);
+    let mut rems: Vec<(u128, usize)> = Vec::with_capacity(n);
+    let mut assigned = 0u128;
+    for (i, &w) in weights.iter().enumerate() {
+        let num = total * w as u128;
+        out.push((num / wsum) as u64);
+        assigned += num / wsum;
+        rems.push((num % wsum, i));
+    }
+    let mut leftover = (total - assigned) as usize;
+    // sum of remainders = leftover x wsum with every remainder < wsum,
+    // so there are always at least `leftover` positive remainders —
+    // zero-weight entries never receive residue units
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, i) in &rems {
+        if leftover == 0 {
+            break;
+        }
+        out[i] += 1;
+        leftover -= 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn apportion_sums_exactly_over_random_counts_and_budgets() {
+        // the satellite property: random shard counts x budgets x
+        // weight profiles, the apportioned columns always reassemble
+        // the exact total
+        let mut rng = Rng::new(0xA990_0471);
+        for _ in 0..500 {
+            let n = 1 + (rng.next_u64() % 64) as usize;
+            let total = rng.next_u64() % 10_000_000;
+            let weights: Vec<u64> = (0..n).map(|_| rng.next_u64() % 1_000).collect();
+            let parts = apportion(total, &weights);
+            assert_eq!(parts.len(), n);
+            assert_eq!(parts.iter().sum::<u64>(), total, "n={n} total={total}");
+            // zero-weight entries never receive residue units
+            for (i, &w) in weights.iter().enumerate() {
+                if w == 0 && weights.iter().any(|&x| x > 0) {
+                    assert_eq!(parts[i], 0, "zero weight got budget");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apportion_uniform_reproduces_the_legacy_split() {
+        for n in 1..=17usize {
+            for total in [0u64, 1, 2, 7, 100, 2_001, 1 << 40] {
+                let uniform = apportion(total, &vec![1u64; n]);
+                let legacy: Vec<u64> = (0..n as u64)
+                    .map(|i| total / n as u64 + u64::from(i < total % n as u64))
+                    .collect();
+                assert_eq!(uniform, legacy, "n={n} total={total}");
+                // all-zero weights take the same fallback
+                assert_eq!(apportion(total, &vec![0u64; n]), legacy);
+            }
+        }
+    }
+
+    #[test]
+    fn apportion_is_proportional_and_total_on_extremes() {
+        assert!(apportion(100, &[]).is_empty());
+        assert_eq!(apportion(0, &[3, 5]), vec![0, 0]);
+        // 2:1 weights: the heavy shard gets twice the budget
+        assert_eq!(apportion(90, &[2, 1]), vec![60, 30]);
+        // huge totals and weights must not overflow (u128 internally)
+        let parts = apportion(u64::MAX, &[u64::MAX, u64::MAX, 1]);
+        assert_eq!(parts.iter().sum::<u64>(), u64::MAX);
+    }
+
+    fn cfg() -> MapperConfig {
+        MapperConfig {
+            valid_target: 100,
+            max_draws: 10_000,
+            seed: 1,
+            shards: 2,
+        }
+    }
+
+    #[test]
+    fn expected_draws_ranks_hard_workloads_above_easy_ones() {
+        let mut g = GuideState::new();
+        assert_eq!(g.expected_draws(1, &cfg()), 10_000, "unseen = full budget");
+        g.note(1, 500, 1_000); // easy: 50% valid
+        g.note(2, 10, 8_000); // hard: 0.125% valid
+        g.note(3, 0, 9_999); // never valid: worst case
+        let e1 = g.expected_draws(1, &cfg());
+        let e2 = g.expected_draws(2, &cfg());
+        let e3 = g.expected_draws(3, &cfg());
+        assert_eq!(e1, 200, "ceil(100 x 1000 / 500)");
+        assert_eq!(e2, 10_000, "ceil(100 x 8000 / 10) clamps to max_draws");
+        assert_eq!(e3, 10_000, "zero-valid = full budget");
+        assert!(e1 < e2);
+        // degenerate config: the estimate stays in [1, max(1, max_draws)]
+        let tiny = MapperConfig {
+            valid_target: 0,
+            max_draws: 0,
+            ..cfg()
+        };
+        assert_eq!(g.expected_draws(1, &tiny), 1);
+    }
+
+    #[test]
+    fn guide_folds_commutatively_and_roundtrips_json() {
+        let mut a = GuideState::new();
+        a.note(7, 10, 100);
+        a.note(9, 5, 50);
+        let mut b = GuideState::new();
+        b.note(9, 5, 50);
+        b.note(7, 4, 40);
+        b.note(7, 6, 60);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge must be commutative");
+        assert_eq!(ab.rate(7), Some((20, 200)));
+        assert_eq!(ab.len(), 2);
+        // through the value model AND through actual bytes
+        let text = ab.to_json().to_string();
+        let back = GuideState::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, ab);
+        // saturating, never wrapping
+        let mut s = GuideState::new();
+        s.note(1, u64::MAX, u64::MAX);
+        s.note(1, 1, 1);
+        assert_eq!(s.rate(1), Some((u64::MAX, u64::MAX)));
+        // malformed wire data is an error, never a panic
+        assert!(GuideState::from_json(&Json::Num(1.0)).is_err());
+        assert!(GuideState::from_json(&Json::Arr(vec![Json::Null])).is_err());
+        // empty state round-trips to an empty array
+        assert_eq!(GuideState::new().to_json().to_string(), "[]");
+    }
+}

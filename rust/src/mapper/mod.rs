@@ -9,12 +9,13 @@
 
 pub mod cache;
 pub mod gamma;
+pub mod guide;
 pub mod store;
 
 pub use cache::WorkloadKey;
 
 use crate::arch::Arch;
-use crate::energy::{estimate_into, Estimate};
+use crate::energy::{edp_lower_bound, estimate_into, BoundScratch, Estimate};
 use crate::mapping::mapspace::MapSpace;
 use crate::mapping::{LayerContext, LevelMapping, Mapping};
 use crate::nest::{analyze_prefilled, NestAnalysis};
@@ -79,6 +80,9 @@ pub struct EvalContext {
     /// [`LayerContext::check_tiles_into`], consumed by
     /// [`crate::nest::analyze_prefilled`].
     pub elems: Vec<u64>,
+    /// Scratch for the admissible-bound stage
+    /// ([`crate::energy::edp_lower_bound`]).
+    pub bound: BoundScratch,
 }
 
 impl EvalContext {
@@ -97,6 +101,7 @@ impl EvalContext {
             batch: (0..EVAL_BLOCK).map(|_| Mapping::unit(num_levels)).collect(),
             live: vec![false; EVAL_BLOCK],
             elems: vec![0; num_levels * 3],
+            bound: BoundScratch::new(),
         }
     }
 }
@@ -321,13 +326,39 @@ impl ShardOutcome {
 /// `(base_seed, shard index)` and an even split of the valid-mapping
 /// target and draw budget (remainders to the lowest indices). One shard
 /// reproduces the single-threaded candidate stream exactly.
+///
+/// Implemented as [`shard_plan_weighted`] under uniform weights, which
+/// [`guide::apportion`] reduces to exactly the historical
+/// `total / n + (i < total % n)` split — the plan (and therefore every
+/// downstream result) is bit-identical to what it always was.
 pub fn shard_plan(cfg: &MapperConfig, base_seed: u64) -> Vec<ShardSpec> {
-    let n = effective_shards(cfg) as u64;
-    (0..n)
+    let n = effective_shards(cfg);
+    shard_plan_weighted(cfg, base_seed, &vec![1u64; n])
+}
+
+/// [`shard_plan`] with per-shard budget weights: shard `i` receives a
+/// share of the valid-mapping target and draw budget proportional to
+/// `weights[i]`, rounded by largest remainder so both columns still sum
+/// *exactly* to `cfg.valid_target` / `cfg.max_draws`. Seeds are
+/// unchanged — weighting reapportions budgets, never the candidate
+/// streams' identities. `weights.len()` must equal
+/// [`effective_shards`]`(cfg)`; all-zero weights fall back to the
+/// uniform split.
+///
+/// Note the determinism contract: result-bearing searches always use
+/// the uniform [`shard_plan`] (guided budgeting would change which
+/// candidates exist). This entry point exists for opt-in
+/// experimentation and for the apportionment property tests.
+pub fn shard_plan_weighted(cfg: &MapperConfig, base_seed: u64, weights: &[u64]) -> Vec<ShardSpec> {
+    let n = effective_shards(cfg);
+    assert_eq!(weights.len(), n, "one weight per effective shard");
+    let targets = guide::apportion(cfg.valid_target, weights);
+    let draws = guide::apportion(cfg.max_draws, weights);
+    (0..n as u64)
         .map(|i| ShardSpec {
             seed: base_seed ^ i.wrapping_mul(0x9E3779B97F4A7C15),
-            valid_target: cfg.valid_target / n + u64::from(i < cfg.valid_target % n),
-            max_draws: cfg.max_draws / n + u64::from(i < cfg.max_draws % n),
+            valid_target: targets[i as usize],
+            max_draws: draws[i as usize],
         })
         .collect()
 }
@@ -365,6 +396,9 @@ pub enum Stage {
     Draw,
     /// `check_spatial` over a block, plus per-survivor `check_tiles_into`.
     Check,
+    /// `edp_lower_bound` for an accepted candidate with a reigning
+    /// winner (the admissible-bound pruning stage).
+    Bound,
     /// `analyze_prefilled` + `estimate_into` for an accepted candidate.
     Price,
 }
@@ -388,6 +422,10 @@ pub trait StageObserver {
     fn tile_reject(&mut self) {}
     #[inline(always)]
     fn accept(&mut self) {}
+    /// An accepted candidate whose EDP lower bound proved it cannot
+    /// beat the reigning winner — counted toward `valid`, never priced.
+    #[inline(always)]
+    fn bound_prune(&mut self) {}
 }
 
 /// The no-op observer behind the plain [`run_shard`].
@@ -405,8 +443,13 @@ pub struct ShardStats {
     pub spatial_rejects: u64,
     /// Survived the spatial stage, rejected by the tile/capacity check.
     pub tile_rejects: u64,
-    /// Fully accepted and priced.
+    /// Fully accepted (and counted toward the valid target).
     pub valid: u64,
+    /// Subset of `valid` whose pricing was skipped because the
+    /// admissible EDP lower bound already matched or exceeded the
+    /// reigning winner. Sits *outside* the draw partition — a pruned
+    /// candidate is still a valid one.
+    pub bound_pruned: u64,
 }
 
 impl ShardStats {
@@ -419,6 +462,7 @@ impl ShardStats {
         self.spatial_rejects += other.spatial_rejects;
         self.tile_rejects += other.tile_rejects;
         self.valid += other.valid;
+        self.bound_pruned += other.bound_pruned;
     }
 }
 
@@ -435,6 +479,10 @@ impl StageObserver for ShardStats {
     fn accept(&mut self) {
         self.valid += 1;
     }
+    #[inline(always)]
+    fn bound_prune(&mut self) {
+        self.bound_pruned += 1;
+    }
 }
 
 /// [`ShardStats`] plus per-stage wall-clock — the bench-grade
@@ -448,7 +496,20 @@ pub struct ShardStageStats {
     pub stats: ShardStats,
     pub draw_ns: u64,
     pub check_ns: u64,
+    pub bound_ns: u64,
     pub price_ns: u64,
+}
+
+impl ShardStageStats {
+    /// Fraction of accepted candidates whose pricing the bound stage
+    /// skipped (0 when nothing was accepted).
+    pub fn bound_prune_rate(&self) -> f64 {
+        if self.stats.valid == 0 {
+            0.0
+        } else {
+            self.stats.bound_pruned as f64 / self.stats.valid as f64
+        }
+    }
 }
 
 impl StageObserver for ShardStageStats {
@@ -460,6 +521,7 @@ impl StageObserver for ShardStageStats {
         match stage {
             Stage::Draw => self.draw_ns += ns,
             Stage::Check => self.check_ns += ns,
+            Stage::Bound => self.bound_ns += ns,
             Stage::Price => self.price_ns += ns,
         }
         r
@@ -475,6 +537,10 @@ impl StageObserver for ShardStageStats {
     #[inline(always)]
     fn accept(&mut self) {
         self.stats.accept();
+    }
+    #[inline(always)]
+    fn bound_prune(&mut self) {
+        self.stats.bound_prune();
     }
 }
 
@@ -503,6 +569,24 @@ pub fn run_shard_timed(
 }
 
 fn run_shard_observed<O: StageObserver>(
+    space: &MapSpace,
+    lctx: &LayerContext,
+    spec: &ShardSpec,
+    o: &mut O,
+) -> ShardOutcome {
+    run_shard_cascade::<O, true>(space, lctx, spec, o)
+}
+
+/// [`run_shard`] with the admissible-bound stage compiled out — the
+/// reference arm of the pruned==unpruned bit-identity oracle
+/// (`tests/hotpath_equivalence.rs`, `benches/perf_hotpath.rs`). Not
+/// used by the engine: pruning never changes the outcome, only the
+/// work, so production always runs the pruned cascade.
+pub fn run_shard_unpruned(space: &MapSpace, lctx: &LayerContext, spec: &ShardSpec) -> ShardOutcome {
+    run_shard_cascade::<NoObserver, false>(space, lctx, spec, &mut NoObserver)
+}
+
+fn run_shard_cascade<O: StageObserver, const PRUNE: bool>(
     space: &MapSpace,
     lctx: &LayerContext,
     spec: &ShardSpec,
@@ -546,6 +630,28 @@ fn run_shard_observed<O: StageObserver>(
             }
             valid += 1;
             o.accept();
+            // the admissible-bound stage: a candidate whose EDP lower
+            // bound already meets or exceeds the reigning winner cannot
+            // win the strict-< walk (bound <= exact ⇒ exact >= best ⇒
+            // no update), so its full pricing is pure waste. A NaN
+            // bound compares false and falls through to exact pricing —
+            // never an incorrect prune. Only fires once a winner
+            // exists and the workload's constants keep the bound
+            // admissible (`bound_safe`).
+            if PRUNE && lctx.bound_safe {
+                if let Some((b, _, _)) = &best {
+                    let bound = o.timed(Stage::Bound, || {
+                        edp_lower_bound(lctx, m, &ctx.elems, &mut ctx.bound)
+                    });
+                    if bound >= *b {
+                        o.bound_prune();
+                        if valid >= valid_target {
+                            break 'blocks;
+                        }
+                        continue;
+                    }
+                }
+            }
             o.timed(Stage::Price, || {
                 analyze_prefilled(lctx, m, &ctx.elems, &mut ctx.nest);
                 estimate_into(lctx, &ctx.nest, &mut ctx.est);
@@ -942,6 +1048,39 @@ mod tests {
         let r = search(&a, &l, &LayerQuant::uniform(8), &zero);
         assert!(r.best.is_none());
         assert_eq!(r.draws, 0);
+    }
+
+    #[test]
+    fn shard_plan_weighted_sums_exactly_and_keeps_seeds() {
+        // random shard counts x budgets x weight profiles: both budget
+        // columns reassemble the config exactly, and the seeds are the
+        // uniform plan's seeds — weighting reapportions budgets, never
+        // candidate-stream identities
+        let mut rng = Rng::new(0x5EED_0A11);
+        for _ in 0..200 {
+            let shards = 1 + (rng.next_u64() % 12) as usize;
+            let cfg = MapperConfig {
+                valid_target: rng.next_u64() % 5_000,
+                max_draws: 1 + rng.next_u64() % 1_000_000,
+                seed: rng.next_u64(),
+                shards,
+            };
+            let n = effective_shards(&cfg);
+            let weights: Vec<u64> = (0..n).map(|_| rng.next_u64() % 100).collect();
+            let plan = shard_plan_weighted(&cfg, cfg.seed, &weights);
+            let uniform = shard_plan(&cfg, cfg.seed);
+            assert_eq!(plan.len(), n);
+            assert_eq!(
+                plan.iter().map(|s| s.valid_target).sum::<u64>(),
+                cfg.valid_target
+            );
+            assert_eq!(plan.iter().map(|s| s.max_draws).sum::<u64>(), cfg.max_draws);
+            for (w, u) in plan.iter().zip(&uniform) {
+                assert_eq!(w.seed, u.seed, "weighting must not touch seeds");
+            }
+            // uniform non-zero weights reproduce the legacy plan exactly
+            assert_eq!(shard_plan_weighted(&cfg, cfg.seed, &vec![3u64; n]), uniform);
+        }
     }
 
     #[test]

@@ -83,6 +83,15 @@ pub struct LayerContext {
     /// Full tensor footprints in elements.
     pub tensor_elems: [u64; 3],
     pub macs: u64,
+    /// Whether [`crate::energy::edp_lower_bound`] is admissible for this
+    /// workload: every access energy finite and non-negative, every
+    /// bandwidth finite and positive, MAC energy finite and
+    /// non-negative. The bound's monotonicity argument multiplies
+    /// under-estimated traffic by these constants, which is only
+    /// order-preserving when they are non-negative (and a NaN anywhere
+    /// would poison every comparison). Exotic arch files that violate
+    /// this simply run unpruned — never incorrectly pruned.
+    pub bound_safe: bool,
 }
 
 impl LayerContext {
@@ -148,6 +157,17 @@ impl LayerContext {
             inst_cap.push(max_inst);
         }
 
+        let bound_safe = arch
+            .levels
+            .iter()
+            .all(|l| {
+                l.access_energy_pj.iter().all(|&e| e.is_finite() && e >= 0.0)
+                    && l.bandwidth_words.is_finite()
+                    && l.bandwidth_words > 0.0
+            })
+            && arch.mac_energy_pj.is_finite()
+            && arch.mac_energy_pj >= 0.0;
+
         LayerContext {
             layer: layer.clone(),
             q,
@@ -183,6 +203,7 @@ impl LayerContext {
             unpack_mul,
             tensor_elems,
             macs: layer.macs(),
+            bound_safe,
         }
     }
 

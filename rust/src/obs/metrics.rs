@@ -21,7 +21,12 @@ pub struct Counters {
     pub shard_spatial_rejects: AtomicU64,
     pub shard_tile_rejects: AtomicU64,
     pub shard_valid: AtomicU64,
+    /// Accepted candidates whose pricing the admissible bound skipped.
+    pub bound_pruned: AtomicU64,
     pub shards: AtomicU64,
+    // search guidance (validity-rate folds and the reorderings they cause)
+    pub guide_updates: AtomicU64,
+    pub guided_reorderings: AtomicU64,
     // cache probe outcomes on the scheduling path
     pub cache_probe_hits: AtomicU64,
     pub cache_probe_negative: AtomicU64,
@@ -67,7 +72,10 @@ impl Counters {
             ("shard_spatial_rejects", g(&self.shard_spatial_rejects)),
             ("shard_tile_rejects", g(&self.shard_tile_rejects)),
             ("shard_valid", g(&self.shard_valid)),
+            ("bound_pruned", g(&self.bound_pruned)),
             ("shards", g(&self.shards)),
+            ("guide_updates", g(&self.guide_updates)),
+            ("guided_reorderings", g(&self.guided_reorderings)),
             ("cache_probe_hits", g(&self.cache_probe_hits)),
             ("cache_probe_negative", g(&self.cache_probe_negative)),
             ("cache_probe_misses", g(&self.cache_probe_misses)),

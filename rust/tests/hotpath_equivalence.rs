@@ -11,10 +11,10 @@
 
 use qmap::arch::presets::{eyeriss, simba, toy};
 use qmap::arch::Arch;
-use qmap::energy::{estimate, estimate_into, Estimate};
+use qmap::energy::{edp_lower_bound, estimate, estimate_into, BoundScratch, Estimate};
 use qmap::mapper::{
-    merge_shards, run_shard, search, shard_plan, workload_hash, EvalContext, MapperConfig,
-    ShardSpec,
+    merge_shards, run_shard, run_shard_unpruned, search, shard_plan, workload_hash, EvalContext,
+    MapperConfig, ShardSpec,
 };
 use qmap::mapping::mapspace::MapSpace;
 use qmap::mapping::{check, LayerContext, Mapping};
@@ -351,6 +351,105 @@ fn cascade_rejects_iff_full_check_rejects() {
         }
     }
     assert!(accepted > 100, "too few accepted samples: {accepted}");
+}
+
+#[test]
+fn edp_lower_bound_is_admissible_on_every_accepted_candidate() {
+    // the pruning stage's soundness property: for every candidate that
+    // survives the rejection cascade, the slab-derived lower bound must
+    // never exceed the exact EDP — on all preset arches, layer shapes,
+    // and bit-widths. A single violation here could make the pruned
+    // cascade drop a true winner, so the comparison is plain `<=` on
+    // the very floats the cascade compares.
+    let mut accepted = 0usize;
+    for arch in [toy(), eyeriss(), simba()] {
+        let space = MapSpace::of(&arch);
+        let mut ectx = EvalContext::for_arch(&arch);
+        let mut scratch = BoundScratch::new();
+        for layer in layers_under_test() {
+            for bits in [2u8, 4, 8] {
+                let q = LayerQuant::uniform(bits).canonical(arch.word_bits, arch.bit_packing);
+                let lctx = LayerContext::new(&arch, &layer, &q);
+                assert!(lctx.bound_safe, "{}: preset arch must be bound-safe", arch.name);
+                let mut rng = Rng::new(0xB0D ^ bits as u64);
+                for _ in 0..200 {
+                    let m = space.random_mapping(&layer, &mut rng);
+                    if lctx.check_spatial(&m).is_err()
+                        || lctx.check_tiles_into(&m, &mut ectx.ext, &mut ectx.elems).is_err()
+                    {
+                        continue;
+                    }
+                    accepted += 1;
+                    let bound = edp_lower_bound(&lctx, &m, &ectx.elems, &mut scratch);
+                    analyze_prefilled(&lctx, &m, &ectx.elems, &mut ectx.nest);
+                    estimate_into(&lctx, &ectx.nest, &mut ectx.est);
+                    let exact = ectx.est.edp();
+                    assert!(
+                        bound <= exact,
+                        "{} {} {}b: bound {bound} > exact {exact}",
+                        arch.name,
+                        layer.name,
+                        bits
+                    );
+                    assert!(bound.is_finite() && bound >= 0.0, "{} {}", arch.name, layer.name);
+                }
+            }
+        }
+    }
+    assert!(accepted > 300, "too few accepted samples: {accepted}");
+}
+
+#[test]
+fn pruned_cascade_is_bit_identical_to_unpruned_over_shard_plans() {
+    // the tentpole bit-identity oracle: the production (pruned) cascade,
+    // the pruning-compiled-out reference cascade, and the scalar replica
+    // must agree shard-for-shard — winner bits, winning mapping, valid
+    // and draw counters — across multi-shard plans, and their merges
+    // must agree too. Pruning may only change how much work pricing
+    // does, never any observable result.
+    for arch in [toy(), eyeriss(), simba()] {
+        let space = MapSpace::of(&arch);
+        for layer in [ConvLayer::conv("c", 16, 32, 3, 14, 2), ConvLayer::pw("p", 16, 32, 14)] {
+            let q = LayerQuant::uniform(4).canonical(arch.word_bits, arch.bit_packing);
+            let lctx = LayerContext::new(&arch, &layer, &q);
+            for shards in [1usize, 3] {
+                let cfg = MapperConfig {
+                    valid_target: 60,
+                    max_draws: 30_011, // not a multiple of shards or blocks
+                    seed: 0xB0B,
+                    shards,
+                };
+                let plan = shard_plan(&cfg, cfg.seed ^ workload_hash(&layer, &q));
+                let pruned: Vec<_> = plan.iter().map(|s| run_shard(&space, &lctx, s)).collect();
+                let unpruned: Vec<_> =
+                    plan.iter().map(|s| run_shard_unpruned(&space, &lctx, s)).collect();
+                for (spec, (p, u)) in plan.iter().zip(pruned.iter().zip(unpruned.iter())) {
+                    let what = format!("{} {} {spec:?}", arch.name, layer.name);
+                    assert_eq!(
+                        p.best_edp().map(f64::to_bits),
+                        u.best_edp().map(f64::to_bits),
+                        "{what}"
+                    );
+                    assert_eq!(p.valid(), u.valid(), "{what}");
+                    assert_eq!(p.draws(), u.draws(), "{what}");
+                    let (sb, sm, sv, sd) = scalar_shard(&space, &lctx, spec);
+                    assert_eq!(p.best_edp().map(f64::to_bits), sb, "{what}");
+                    assert_eq!(p.valid(), sv, "{what}");
+                    assert_eq!(p.draws(), sd, "{what}");
+                    let _ = sm;
+                }
+                let mp = merge_shards(pruned);
+                let mu = merge_shards(unpruned);
+                assert_eq!(
+                    mp.best.as_ref().map(|e| e.edp().to_bits()),
+                    mu.best.as_ref().map(|e| e.edp().to_bits())
+                );
+                assert_eq!(mp.best_mapping, mu.best_mapping);
+                assert_eq!(mp.valid, mu.valid);
+                assert_eq!(mp.draws, mu.draws);
+            }
+        }
+    }
 }
 
 #[test]
